@@ -1,0 +1,58 @@
+//! Transform ablation (paper Table 2, interactive version): run the search
+//! with each invariance family alone — permutation / scaling / rotation —
+//! and combined, on the same base quantized model, and compare.
+//!
+//! Demonstrates the paper's §4.2 findings at this scale: every family helps
+//! alone, permutation (non-differentiable, unreachable by gradient methods)
+//! is a strong contributor, and the combination is the best.
+//!
+//! ```text
+//! cargo run --release --example ablation_transforms
+//! ```
+
+use invarexplore::baselines::Method;
+use invarexplore::coordinator::{PipelineOpts, SearchRun, Session};
+use invarexplore::quant::QuantScheme;
+use invarexplore::transform::TransformKinds;
+use invarexplore::util::bench::step_budget;
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::load_default()?;
+    let model = "opt-small";
+    let steps = step_budget(250);
+    println!("== transform ablation: AWQ + {model} @ 1-bit g64, {steps} steps each ==\n");
+
+    let mut rows: Vec<(String, f64, f64, f64)> = Vec::new();
+    for (label, kinds) in [
+        ("baseline (no search)", ""),
+        ("permutation only", "p"),
+        ("scaling only", "s"),
+        ("rotation only", "r"),
+        ("P + S + R", "psr"),
+    ] {
+        let mut opts = PipelineOpts::new(model, Method::Awq, QuantScheme::new(1, 64));
+        opts.calib_seqs = 16;
+        opts.eval_seqs = 48;
+        let mut run = SearchRun::build(&session, &opts)?;
+        run.init()?;
+        let loss0 = run.state.best.total(run.state.alpha);
+        if !kinds.is_empty() {
+            run.cfg.kinds = TransformKinds::parse(kinds)?;
+            run.steps(steps)?;
+        }
+        let loss1 = run.state.best.total(run.state.alpha);
+        let ppl = run.test_ppl(&session, "wiki", 48)?;
+        println!(
+            "{label:22}  calib loss {loss0:.3} -> {loss1:.3}   wiki ppl {ppl:8.2}   accept {:4.0}%",
+            100.0 * run.state.accept_rate()
+        );
+        rows.push((label.to_string(), loss0, loss1, ppl));
+    }
+
+    // sanity summary: combined should be the best searched variant
+    let base_ppl = rows[0].3;
+    let combined = rows.last().unwrap().3;
+    println!("\nbaseline wiki ppl {base_ppl:.2} -> combined P+S+R {combined:.2} ({:+.1}%)",
+        100.0 * (combined - base_ppl) / base_ppl);
+    Ok(())
+}

@@ -1,0 +1,107 @@
+//! End-to-end driver (the EXPERIMENTS.md headline run): the full system on
+//! a real small workload, proving all layers compose.
+//!
+//! Pipeline on the largest trained model (`opt-base`, ~5.6M params, trained
+//! at build time on the synthetic corpus):
+//!
+//! 1. FP32 baseline eval — perplexity on two held-out corpora + six-task
+//!    few-shot reasoning (through the AOT XLA programs);
+//! 2. AWQ 1-bit quantization (activation-aware scaling + clipping, built
+//!    from scratch) + packed-memory accounting;
+//! 3. InvarExplore activation-guided discrete search (paper Algorithm 1) —
+//!    the L3 Rust coordinator driving per-proposal Pallas/XLA evaluation;
+//! 4. post-search eval + a search telemetry summary (Figure-1 style).
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quantize_and_search
+//! INVAREXPLORE_STEPS=2000 cargo run --release --example quantize_and_search   # longer
+//! ```
+
+use invarexplore::baselines::{self, Method};
+use invarexplore::calib::CalibSet;
+use invarexplore::coordinator::{pipeline, PipelineOpts, Session};
+use invarexplore::quant::QuantScheme;
+use invarexplore::util::bench::step_budget;
+use invarexplore::util::plot;
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::load_default()?;
+    let model = "opt-base";
+    let scheme = QuantScheme::new(1, 64);
+    let steps = step_budget(400);
+
+    let mut opts = PipelineOpts::new(model, Method::Awq, scheme);
+    opts.steps = steps;
+    opts.reasoning_n = 60;
+    opts.eval_seqs = 64;
+
+    println!("== InvarExplore end-to-end: {model} + AWQ @ {scheme}, {steps} search steps ==\n");
+
+    // 1. FP32 reference
+    let fp = pipeline::eval_fp(&session, model, &opts)?;
+    let fp_acc = fp.reasoning.as_ref().map(|(_, a)| *a).unwrap_or(0.0);
+    println!("[1] FP32       wiki {:7.2}  c4 {:7.2}  reasoning {:5.2}", fp.ppl_wiki, fp.ppl_c4, fp_acc);
+
+    // 2. memory accounting of the packed deployment form
+    let w = session.weights(model)?;
+    let pile = session.corpus("pile")?;
+    let calib = CalibSet::from_corpus(&pile, opts.calib_seqs, session.manifest.seq);
+    let prepared = baselines::prepare(Method::Awq, scheme, &w, &calib, None)?;
+    let (packed, bytes) = prepared.pack_model(&prepared.fp);
+    let total: usize = packed.iter().map(|(_, t)| t.rows * t.cols).sum();
+    println!(
+        "[2] packed     {:.2} MiB vs {:.2} MiB FP16 ({:.1}% saving, {:.3} bits/param)",
+        bytes as f64 / (1 << 20) as f64,
+        (total * 2) as f64 / (1 << 20) as f64,
+        100.0 * (1.0 - bytes as f64 / (total * 2) as f64),
+        bytes as f64 * 8.0 / total as f64
+    );
+
+    // 3 + 4. quantize, search, re-evaluate
+    let report = pipeline::run_pipeline(&session, &opts)?;
+    let base_acc = report.base.reasoning.as_ref().map(|(_, a)| *a).unwrap_or(0.0);
+    println!(
+        "[3] AWQ        wiki {:7.2}  c4 {:7.2}  reasoning {:5.2}",
+        report.base.ppl_wiki, report.base.ppl_c4, base_acc
+    );
+    let s = report.searched.expect("searched");
+    let st = report.state.expect("state");
+    let s_acc = s.reasoning.as_ref().map(|(_, a)| *a).unwrap_or(0.0);
+    println!(
+        "[4] +InvarExpl wiki {:7.2}  c4 {:7.2}  reasoning {:5.2}   (accept {:.0}%)",
+        s.ppl_wiki,
+        s.ppl_c4,
+        s_acc,
+        100.0 * st.accept_rate()
+    );
+
+    // telemetry summary (Figure-1 style loss curve)
+    let series: Vec<(f64, f64)> = st
+        .telemetry
+        .iter()
+        .step_by((st.telemetry.len() / 64).max(1))
+        .map(|r| (r.step as f64, r.loss_total))
+        .collect();
+    println!("\n{}", plot::render("search objective (CE + α·MSE)", &[("loss", &series)], 64, 12));
+
+    // headline summary
+    println!("== headline ==");
+    println!(
+        "wiki ppl: FP {:.2} → AWQ {:.2} → +InvarExplore {:.2}  ({:+.1}% vs AWQ)",
+        fp.ppl_wiki,
+        report.base.ppl_wiki,
+        s.ppl_wiki,
+        100.0 * (s.ppl_wiki - report.base.ppl_wiki) / report.base.ppl_wiki
+    );
+    println!(
+        "reasoning: FP {:.2} → AWQ {:.2} → +InvarExplore {:.2}",
+        fp_acc, base_acc, s_acc
+    );
+
+    // persist run for EXPERIMENTS.md
+    let dir = invarexplore::coordinator::tables::results_dir();
+    st.telemetry_csv(&dir.join("e2e_telemetry.csv"))?;
+    st.save(&dir.join("e2e_state.json"))?;
+    println!("\ntelemetry/state written under {}", dir.display());
+    Ok(())
+}

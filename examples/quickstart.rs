@@ -1,0 +1,48 @@
+//! Quickstart: the smallest complete InvarExplore run.
+//!
+//! Loads the smallest trained model, quantizes it to the ultra-low-bit
+//! setting with plain RTN, runs a short activation-guided discrete search
+//! (paper Algorithm 1), and prints perplexity before/after.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use invarexplore::baselines::Method;
+use invarexplore::coordinator::{pipeline, PipelineOpts, Session};
+use invarexplore::quant::QuantScheme;
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::load_default()?;
+
+    // ultra-low-bit setting: 1-bit, group 64 (see DESIGN.md §1 — our small
+    // models' difficulty curve sits one bit below the paper's)
+    let mut opts = PipelineOpts::new("opt-tiny", Method::Rtn, QuantScheme::new(1, 64));
+    opts.steps = 150;
+    opts.calib_seqs = 16;
+    opts.eval_seqs = 32;
+
+    println!("== InvarExplore quickstart: {} + {} ==", opts.model, opts.scheme);
+    let fp = pipeline::eval_fp(&session, &opts.model, &opts)?;
+    println!("FP32 model      : wiki ppl {:8.2}   c4 ppl {:8.2}", fp.ppl_wiki, fp.ppl_c4);
+
+    let report = pipeline::run_pipeline(&session, &opts)?;
+    println!(
+        "RTN quantized   : wiki ppl {:8.2}   c4 ppl {:8.2}",
+        report.base.ppl_wiki, report.base.ppl_c4
+    );
+    let s = report.searched.expect("search ran");
+    let st = report.state.expect("state");
+    println!(
+        "+InvarExplore   : wiki ppl {:8.2}   c4 ppl {:8.2}   ({} steps, {:.0}% accepted)",
+        s.ppl_wiki,
+        s.ppl_c4,
+        st.step,
+        100.0 * st.accept_rate()
+    );
+    println!(
+        "recovered {:.1}% of the RTN wiki-ppl damage",
+        100.0 * (report.base.ppl_wiki - s.ppl_wiki) / (report.base.ppl_wiki - fp.ppl_wiki).max(1e-9)
+    );
+    Ok(())
+}

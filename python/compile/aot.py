@@ -1,0 +1,262 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) → HLO text artifacts for the Rust runtime.
+
+Emits, per model size:
+
+  embed.hlo.txt          (tokens, emb, pos) -> (x,)
+  layer.hlo.txt          (x, <16 block tensors>) -> (y,)            # one decoder block
+  head.hlo.txt           (x, targets, mask, emb, lnf.w, lnf.b) -> (ce, seq_logprob)
+  head_logits.hlo.txt    (x, emb, lnf.w, lnf.b) -> (logits,)
+  forward_fp.hlo.txt     (tokens, targets, mask, <all params>) -> (ce, seq_logprob, acts)
+  forward_q{B}x{G}.hlo.txt (tokens, targets, mask, h0, <all params>) -> (ce, seq_logprob, act_mse)
+  quant_{R}x{C}_{b}b{g}.hlo.txt  (w) -> (fake_quant(w),)            # L1 Pallas kernel alone
+
+plus a single ``artifacts/manifest.json`` describing every program's
+parameter names/shapes, the batch geometry, model configs, weight files and
+datasets.  The Rust runtime (rust/src/runtime + rust/src/io/manifest.rs)
+consumes only this manifest — paths are never hard-coded on the Rust side.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.quant_kernel import fake_quant
+
+#: Fixed batch geometry for all programs (the Rust side pads/masks to this).
+BATCH, SEQ = 8, 128
+
+#: Quant configs for which standalone kernel programs are emitted
+#: (Table 3 sweep: bits 1-4 × groups 32/64).
+QUANT_BITS = (1, 2, 3, 4)
+QUANT_GROUPS = (32, 64)
+#: In-graph (monolithic Pallas) quantized-forward variants.
+FORWARD_QUANT_CONFIGS = ((2, 64),)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text.
+
+    ``return_tuple=False`` so *single-output* programs keep an array root —
+    the Rust runtime then chains their output buffers directly into the next
+    program on device (the layer-pipelined hot path).  Multi-output programs
+    get a tuple root either way; the runtime decomposes those on the host.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _write(path: str, text: str) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+class ProgramEmitter:
+    """Lowers one model's program set and records manifest entries.
+
+    Manifest paths are stored relative to the artifacts directory so the
+    manifest is relocatable; the Rust loader joins them onto the manifest's
+    own parent directory.
+    """
+
+    def __init__(self, cfg: M.OptConfig, outdir: str, artifacts_dir: str):
+        self.cfg = cfg
+        self.outdir = outdir
+        self.artifacts_dir = artifacts_dir
+        self.programs: dict[str, dict] = {}
+
+    def emit(self, name: str, fn, params: list[tuple[str, tuple, str]]) -> None:
+        """params: list of (param_name, shape, dtype-str)."""
+        specs = [
+            spec(shape, jnp.int32 if dt == "i32" else jnp.float32)
+            for (_, shape, dt) in params
+        ]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.outdir, f"{name}.hlo.txt")
+        _write(path, text)
+        self.programs[name] = {
+            "path": os.path.relpath(path, self.artifacts_dir),
+            "params": [
+                {"name": n, "shape": list(s), "dtype": dt} for (n, s, dt) in params
+            ],
+        }
+        print(f"  [aot {self.cfg.name}] {name}: {len(text)/1024:.0f} KiB, {len(params)} params")
+
+    # -- program definitions -------------------------------------------------
+
+    def weight_param_list(self) -> list[tuple[str, tuple, str]]:
+        cfg = self.cfg
+        d, f_, v, t = cfg.d_model, cfg.d_ffn, cfg.vocab, cfg.max_seq
+        shapes = {
+            "emb": (v, d), "pos": (t, d),
+            "ln1.w": (d,), "ln1.b": (d,),
+            "q.w": (d, d), "q.b": (d,), "k.w": (d, d), "k.b": (d,),
+            "v.w": (d, d), "v.b": (d,), "o.w": (d, d), "o.b": (d,),
+            "ln2.w": (d,), "ln2.b": (d,),
+            "up.w": (f_, d), "up.b": (f_,), "down.w": (d, f_), "down.b": (d,),
+            "lnf.w": (d,), "lnf.b": (d,),
+        }
+        out = []
+        for nm in M.param_names(cfg):
+            # layer params look like "l{i}.<base>"; "lnf.w"/"emb"/"pos" do not
+            head = nm.split(".", 1)[0]
+            is_layer = head[0] == "l" and head[1:].isdigit()
+            base = nm.split(".", 1)[1] if is_layer else nm
+            out.append((nm, shapes[base], "f32"))
+        return out
+
+    def emit_all(self) -> None:
+        cfg = self.cfg
+        d, f_, v = cfg.d_model, cfg.d_ffn, cfg.vocab
+        B, T = BATCH, SEQ
+        wparams = self.weight_param_list()
+        names = [n for (n, _, _) in wparams]
+
+        def params_dict(args):
+            return dict(zip(names, args))
+
+        # embed
+        self.emit(
+            "embed",
+            lambda tok, emb, pos: (M.stage_embed(tok, emb, pos),),
+            [("tokens", (B, T), "i32"), ("emb", (v, d), "f32"), ("pos", (cfg.max_seq, d), "f32")],
+        )
+
+        # one decoder block
+        layer_names = list(M.LAYER_PARAM_NAMES)
+        layer_shapes = [s for (n, s, _) in wparams if n.startswith("l0.")]
+
+        def layer_fn(x, *lp):
+            return (M.stage_layer(x, dict(zip(layer_names, lp)), cfg),)
+
+        self.emit(
+            "layer",
+            layer_fn,
+            [("x", (B, T, d), "f32")]
+            + [(n, s, "f32") for n, s in zip(layer_names, layer_shapes)],
+        )
+
+        # heads
+        self.emit(
+            "head",
+            lambda x, tg, mk, emb, lw, lb: M.stage_head(x, tg, mk, emb, lw, lb),
+            [
+                ("x", (B, T, d), "f32"), ("targets", (B, T), "i32"), ("mask", (B, T), "f32"),
+                ("emb", (v, d), "f32"), ("lnf.w", (d,), "f32"), ("lnf.b", (d,), "f32"),
+            ],
+        )
+        self.emit(
+            "head_logits",
+            lambda x, emb, lw, lb: (M.stage_head_logits(x, emb, lw, lb),),
+            [
+                ("x", (B, T, d), "f32"), ("emb", (v, d), "f32"),
+                ("lnf.w", (d,), "f32"), ("lnf.b", (d,), "f32"),
+            ],
+        )
+
+        # monolithic FP forward (also the H0-capture program)
+        def fp_fn(tok, tg, mk, *w):
+            return M.forward_fp(tok, tg, mk, params_dict(w), cfg)
+
+        self.emit(
+            "forward_fp",
+            fp_fn,
+            [("tokens", (B, T), "i32"), ("targets", (B, T), "i32"), ("mask", (B, T), "f32")]
+            + wparams,
+        )
+
+        # monolithic quantized forward(s): the L1 Pallas kernel in-graph
+        for bits, group in FORWARD_QUANT_CONFIGS:
+            def q_fn(tok, tg, mk, h0, *w, _b=bits, _g=group):
+                return M.forward_quant(tok, tg, mk, h0, params_dict(w), cfg, _b, _g)
+
+            self.emit(
+                f"forward_q{bits}x{group}",
+                q_fn,
+                [
+                    ("tokens", (B, T), "i32"), ("targets", (B, T), "i32"),
+                    ("mask", (B, T), "f32"), ("h0", (cfg.n_layers, B, T, d), "f32"),
+                ]
+                + wparams,
+            )
+
+        # standalone fake-quant kernel programs, one per distinct weight shape
+        shapes = sorted({(d, d), (f_, d), (d, f_)})
+        for bits in QUANT_BITS:
+            for group in QUANT_GROUPS:
+                for (r, c) in shapes:
+                    self.emit(
+                        f"quant_{r}x{c}_{bits}b{group}",
+                        functools.partial(
+                            lambda w, _b, _g: (fake_quant(w, _b, _g),), _b=bits, _g=group
+                        ),
+                        [("w", (r, c), "f32")],
+                    )
+
+
+def build_manifest(artifacts_dir: str, sizes: list[str]) -> dict:
+    manifest: dict = {
+        "version": 1,
+        "batch": {"B": BATCH, "T": SEQ},
+        "quant_bits": list(QUANT_BITS),
+        "quant_groups": list(QUANT_GROUPS),
+        "models": {},
+    }
+    data_manifest_path = os.path.join(artifacts_dir, "data", "data_manifest.json")
+    if os.path.exists(data_manifest_path):
+        with open(data_manifest_path) as f:
+            data = json.load(f)
+        # re-root data paths relative to the artifacts dir
+        for entry in list(data.get("corpora", {}).values()) + list(data.get("tasks", {}).values()):
+            entry["path"] = os.path.join("data", entry["path"])
+        manifest["data"] = data
+    for name in sizes:
+        cfg = M.MODEL_SIZES[name]
+        progdir = os.path.join(artifacts_dir, "programs", name)
+        em = ProgramEmitter(cfg, progdir, artifacts_dir)
+        em.emit_all()
+        manifest["models"][name] = {
+            "config": cfg.to_dict(),
+            "weights": os.path.join("models", f"{name}.iwt"),
+            "param_names": M.param_names(cfg),
+            "programs": em.programs,
+        }
+    return manifest
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="../artifacts")
+    ap.add_argument("--sizes", default="opt-tiny,opt-small,opt-base")
+    a = ap.parse_args()
+    manifest = build_manifest(a.artifacts, a.sizes.split(","))
+    out = os.path.join(a.artifacts, "manifest.json")
+    with open(out, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,439 @@
+"""Synthetic data generation for the InvarExplore reproduction.
+
+The paper evaluates on WikiText-2 / C4 (perplexity), calibrates on the Pile,
+and tests six reasoning benchmarks through lm-eval-harness.  None of those
+corpora are reachable in this offline sandbox, so this module builds the
+closest synthetic equivalent (see DESIGN.md §1):
+
+* one seeded stochastic grammar over a small word-id vocabulary, with several
+  topic "domains"; the three corpora (``pile``/``wiki``/``c4``) are different
+  domain *mixtures*, preserving the calibrate-on-A / evaluate-on-B
+  distribution shift of the paper;
+* six few-shot multiple-choice task generators whose answers are
+  statistically learnable from the corpus patterns, exercising the same
+  masked option-log-likelihood eval path as lm-eval-harness.
+
+Everything is deterministic given a seed.  Token ids are word ids directly
+(no BPE): vocab layout is
+
+  0          <pad>
+  1          <bos>
+  2          <eos>
+  3..V-1     words, organised into topic clusters + function words + digits
+
+Output formats (read by rust/src/io/):
+  *.tok   little-endian u32 token stream with a 16-byte header
+          (magic "IVTK", u32 version, u32 vocab, u32 count)
+  *.json  task files: list of {"ctx": [...], "options": [[...], ...],
+          "answer": int}
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from dataclasses import dataclass, field
+
+import numpy as np
+
+MAGIC = b"IVTK"
+VERSION = 1
+
+PAD, BOS, EOS = 0, 1, 2
+
+
+# ---------------------------------------------------------------------------
+# Vocabulary layout
+# ---------------------------------------------------------------------------
+
+@dataclass
+class VocabSpec:
+    """Structured layout of the synthetic vocabulary.
+
+    The grammar needs distinguishable word classes; everything is an id
+    range.  ``n_topics`` topic clusters each own ``topic_size`` nouns; a
+    shared pool of verbs/adjectives/function words/digits completes the
+    vocabulary.
+    """
+
+    vocab: int
+    n_topics: int = 8
+    # Fractions of the non-special id space allotted to each class.
+    frac_nouns: float = 0.5
+    frac_verbs: float = 0.2
+    frac_adjs: float = 0.15
+    frac_func: float = 0.1
+
+    def __post_init__(self) -> None:
+        usable = self.vocab - 3 - 10  # specials + ten digit words
+        self.n_nouns = max(self.n_topics * 4, int(usable * self.frac_nouns))
+        self.n_nouns -= self.n_nouns % self.n_topics
+        self.n_verbs = max(8, int(usable * self.frac_verbs))
+        self.n_adjs = max(8, int(usable * self.frac_adjs))
+        self.n_func = max(6, int(usable * self.frac_func))
+        base = 3
+        self.noun0 = base
+        self.verb0 = self.noun0 + self.n_nouns
+        self.adj0 = self.verb0 + self.n_verbs
+        self.func0 = self.adj0 + self.n_adjs
+        self.digit0 = self.func0 + self.n_func
+        assert self.digit0 + 10 <= self.vocab, "vocab too small for layout"
+        self.topic_size = self.n_nouns // self.n_topics
+
+    def topic_nouns(self, t: int) -> np.ndarray:
+        lo = self.noun0 + t * self.topic_size
+        return np.arange(lo, lo + self.topic_size, dtype=np.uint32)
+
+    def digits(self) -> np.ndarray:
+        return np.arange(self.digit0, self.digit0 + 10, dtype=np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Sentence grammar
+# ---------------------------------------------------------------------------
+
+class Grammar:
+    """Seeded stochastic grammar emitting English-like token sequences.
+
+    Key *learnable regularities* (the reasoning tasks below probe exactly
+    these, so a trained model scores above chance and quantization damage is
+    measurable):
+
+    1. topic coherence: a sentence's nouns come from one topic cluster;
+    2. agreement: each topic has a preferred verb subset ("agreement" rule:
+       verb id ≡ topic (mod n_topics) with prob 0.9);
+    3. copy/recall: a sentence sometimes repeats its subject noun at the end;
+    4. ordering: digit words appear in ascending runs with prob 0.9;
+    5. comparatives: the pattern ``func[0] d_i func[1] d_j`` holds i<j with
+       prob 0.9 ("X less-than Y");
+    6. boolean: ``func[2] noun verb func[3]`` ("does noun verb? yes") iff the
+       agreement rule holds, else ``func[4]`` ("no").
+    """
+
+    def __init__(self, spec: VocabSpec, seed: int):
+        self.spec = spec
+        self.rng = np.random.default_rng(seed)
+
+    # -- helpers ------------------------------------------------------------
+
+    def _topic_verb(self, topic: int, agree: bool) -> int:
+        sp = self.spec
+        n_groups = sp.n_verbs // sp.n_topics
+        if n_groups == 0:
+            return int(sp.verb0 + topic % sp.n_verbs)
+        if agree:
+            g = self.rng.integers(n_groups)
+            return int(sp.verb0 + topic + g * sp.n_topics)
+        # disagreeing verb: wrong residue class
+        while True:
+            v = int(self.rng.integers(sp.n_verbs))
+            if v % sp.n_topics != topic:
+                return sp.verb0 + v
+
+    def _noun(self, topic: int) -> int:
+        return int(self.rng.choice(self.spec.topic_nouns(topic)))
+
+    def _adj(self) -> int:
+        return int(self.spec.adj0 + self.rng.integers(self.spec.n_adjs))
+
+    # -- sentence forms -----------------------------------------------------
+
+    def sent_svo(self, topic: int) -> list[int]:
+        """noun [adj] verb noun — with topical agreement."""
+        s = [self._noun(topic)]
+        if self.rng.random() < 0.4:
+            s.append(self._adj())
+        agree = self.rng.random() < 0.9
+        s.append(self._topic_verb(topic, agree))
+        s.append(self._noun(topic))
+        if self.rng.random() < 0.35:  # copy/recall regularity
+            s.append(s[0])
+        return s
+
+    def sent_digits(self) -> list[int]:
+        """Ascending digit run (prob 0.9) of length 3-6."""
+        d = self.spec.digits()
+        n = int(self.rng.integers(3, 7))
+        if self.rng.random() < 0.9:
+            start = int(self.rng.integers(0, 10 - n + 1))
+            return list(map(int, d[start : start + n]))
+        return list(map(int, self.rng.choice(d, size=n)))
+
+    def sent_compare(self) -> list[int]:
+        """func[0] d_i func[1] d_j with i<j (prob 0.9)."""
+        sp = self.spec
+        d = sp.digits()
+        i, j = sorted(self.rng.choice(10, size=2, replace=False))
+        if self.rng.random() >= 0.9:
+            i, j = j, i
+        return [sp.func0, int(d[i]), sp.func0 + 1, int(d[j])]
+
+    def sent_bool(self, topic: int) -> list[int]:
+        """func[2] noun verb {func[3]=yes | func[4]=no} — truth = agreement."""
+        sp = self.spec
+        agree = self.rng.random() < 0.5
+        n = self._noun(topic)
+        v = self._topic_verb(topic, agree)
+        ans = sp.func0 + 3 if agree else sp.func0 + 4
+        out = [sp.func0 + 2, n, v, ans]
+        # 10% label noise keeps the task non-degenerate
+        if self.rng.random() < 0.1:
+            out[-1] = sp.func0 + 3 if not agree else sp.func0 + 4
+        return out
+
+    # -- documents ----------------------------------------------------------
+
+    #: per-domain sentence-form mixture: (svo, digits, compare, bool)
+    DOMAIN_MIX = {
+        "narrative": (0.85, 0.05, 0.05, 0.05),
+        "technical": (0.45, 0.30, 0.15, 0.10),
+        "dialogue": (0.55, 0.05, 0.10, 0.30),
+    }
+
+    def document(self, domain: str, n_sents: int) -> list[int]:
+        mix = np.asarray(self.DOMAIN_MIX[domain])
+        topic = int(self.rng.integers(self.spec.n_topics))
+        toks: list[int] = [BOS]
+        for _ in range(n_sents):
+            if self.rng.random() < 0.15:  # topic drift
+                topic = int(self.rng.integers(self.spec.n_topics))
+            k = int(self.rng.choice(4, p=mix))
+            if k == 0:
+                toks += self.sent_svo(topic)
+            elif k == 1:
+                toks += self.sent_digits()
+            elif k == 2:
+                toks += self.sent_compare()
+            else:
+                toks += self.sent_bool(topic)
+        toks.append(EOS)
+        return toks
+
+    def corpus(self, mixture: dict[str, float], n_tokens: int) -> np.ndarray:
+        """Concatenate documents until ``n_tokens`` tokens are emitted."""
+        domains = list(mixture)
+        probs = np.asarray([mixture[d] for d in domains])
+        probs = probs / probs.sum()
+        out: list[int] = []
+        while len(out) < n_tokens:
+            d = domains[int(self.rng.choice(len(domains), p=probs))]
+            out += self.document(d, n_sents=int(self.rng.integers(6, 14)))
+        return np.asarray(out[:n_tokens], dtype=np.uint32)
+
+
+#: corpus name -> domain mixture.  ``pile`` (calibration) is the broadest;
+#: ``wiki``/``c4`` shift the mixture like the paper's eval-set shift.
+CORPUS_MIXTURES = {
+    "pile": {"narrative": 0.4, "technical": 0.35, "dialogue": 0.25},
+    "wiki": {"narrative": 0.6, "technical": 0.3, "dialogue": 0.1},
+    "c4": {"narrative": 0.45, "technical": 0.2, "dialogue": 0.35},
+}
+
+
+# ---------------------------------------------------------------------------
+# Reasoning tasks
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TaskExample:
+    ctx: list[int]
+    options: list[list[int]]
+    answer: int
+
+    def to_dict(self) -> dict:
+        return {"ctx": self.ctx, "options": self.options, "answer": self.answer}
+
+
+class TaskGen:
+    """Six synthetic multiple-choice tasks (paper: ARC-E/C, BoolQ, HellaSwag,
+    PIQA, WinoGrande).  Each probes one grammar regularity; options are
+    token suffixes scored by masked log-likelihood (see rust eval harness).
+    """
+
+    TASKS = ("assoc", "agree", "copy", "order", "compare", "bool")
+
+    def __init__(self, spec: VocabSpec, seed: int):
+        self.spec = spec
+        self.g = Grammar(spec, seed)
+        self.rng = self.g.rng
+
+    def gen(self, task: str, n: int) -> list[TaskExample]:
+        fn = getattr(self, f"task_{task}")
+        return [fn() for _ in range(n)]
+
+    def _distract_topics(self, topic: int, k: int) -> list[int]:
+        others = [t for t in range(self.spec.n_topics) if t != topic]
+        picks = self.rng.choice(len(others), size=k, replace=False)
+        return [others[int(i)] for i in picks]
+
+    def task_assoc(self) -> TaskExample:
+        """Topic association (~HellaSwag): context sentence from topic t;
+        which continuation noun belongs to t?"""
+        t = int(self.rng.integers(self.spec.n_topics))
+        ctx = [BOS] + self.g.sent_svo(t) + self.g.sent_svo(t)
+        correct = [self.g._noun(t)]
+        opts = [[self.g._noun(d)] for d in self._distract_topics(t, 3)]
+        ans = int(self.rng.integers(4))
+        opts.insert(ans, correct)
+        return TaskExample(ctx, opts, ans)
+
+    def task_agree(self) -> TaskExample:
+        """Agreement (~WinoGrande): which verb agrees with the subject?"""
+        t = int(self.rng.integers(self.spec.n_topics))
+        ctx = [BOS] + self.g.sent_svo(t)[:-1] + [self.g._noun(t)]
+        good = [self.g._topic_verb(t, True)]
+        bad = [self.g._topic_verb(t, False)]
+        ans = int(self.rng.integers(2))
+        opts = [bad, good] if ans == 1 else [good, bad]
+        return TaskExample(ctx + [self.g._noun(t)], opts, ans)
+
+    def task_copy(self) -> TaskExample:
+        """Recall (~ARC-E): which noun was the subject of the sentence?"""
+        t = int(self.rng.integers(self.spec.n_topics))
+        sent = self.g.sent_svo(t)
+        subj = sent[0]
+        ctx = [BOS] + sent[:-1] if sent[-1] == sent[0] else [BOS] + sent
+        correct = [subj]
+        # distractors: other nouns from the *same* topic (hard, ~ARC-C-ish)
+        opts = []
+        while len(opts) < 3:
+            n = self.g._noun(t)
+            if n != subj and [n] not in opts:
+                opts.append([n])
+        ans = int(self.rng.integers(4))
+        opts.insert(ans, correct)
+        return TaskExample(ctx, opts, ans)
+
+    def task_order(self) -> TaskExample:
+        """Sequence completion (~PIQA): ascending digit run; next digit?"""
+        d = self.spec.digits()
+        start = int(self.rng.integers(0, 6))
+        ln = int(self.rng.integers(3, min(5, 10 - start - 1) + 1))
+        ctx = [BOS] + list(map(int, d[start : start + ln]))
+        nxt = int(d[start + ln])
+        wrong = int(self.rng.choice([x for x in d if x != nxt]))
+        ans = int(self.rng.integers(2))
+        opts = [[wrong], [nxt]] if ans == 1 else [[nxt], [wrong]]
+        return TaskExample(ctx, opts, ans)
+
+    def task_compare(self) -> TaskExample:
+        """Comparatives (~ARC-C): func0 d_i func1 ? — which digit > d_i?"""
+        sp = self.spec
+        d = sp.digits()
+        i = int(self.rng.integers(0, 9))
+        j_hi = int(self.rng.integers(i + 1, 10))
+        j_lo = int(self.rng.integers(0, i + 1))
+        ctx = [BOS, sp.func0, int(d[i]), sp.func0 + 1]
+        ans = int(self.rng.integers(2))
+        opts = (
+            [[int(d[j_lo])], [int(d[j_hi])]]
+            if ans == 1
+            else [[int(d[j_hi])], [int(d[j_lo])]]
+        )
+        return TaskExample(ctx, opts, ans)
+
+    def task_bool(self) -> TaskExample:
+        """Yes/no (~BoolQ): func2 noun verb -> yes iff agreement holds."""
+        sp = self.spec
+        t = int(self.rng.integers(sp.n_topics))
+        agree = self.rng.random() < 0.5
+        ctx = [BOS, sp.func0 + 2, self.g._noun(t), self.g._topic_verb(t, agree)]
+        yes, no = [sp.func0 + 3], [sp.func0 + 4]
+        answer_tok = yes if agree else no
+        other = no if agree else yes
+        ans = int(self.rng.integers(2))
+        opts = [other, answer_tok] if ans == 1 else [answer_tok, other]
+        return TaskExample(ctx, opts, ans)
+
+
+# ---------------------------------------------------------------------------
+# Serialization
+# ---------------------------------------------------------------------------
+
+def write_tokens(path: str, tokens: np.ndarray, vocab: int) -> None:
+    tokens = np.asarray(tokens, dtype="<u4")
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<III", VERSION, vocab, len(tokens)))
+        f.write(tokens.tobytes())
+
+
+def read_tokens(path: str) -> tuple[np.ndarray, int]:
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        assert magic == MAGIC, f"bad magic {magic!r}"
+        version, vocab, count = struct.unpack("<III", f.read(12))
+        assert version == VERSION
+        data = np.frombuffer(f.read(4 * count), dtype="<u4")
+    return data, vocab
+
+
+def write_tasks(path: str, examples: list[TaskExample]) -> None:
+    with open(path, "w") as f:
+        json.dump([e.to_dict() for e in examples], f)
+
+
+# ---------------------------------------------------------------------------
+# Top-level driver
+# ---------------------------------------------------------------------------
+
+@dataclass
+class DataPlan:
+    vocab: int
+    seed: int
+    train_tokens: int
+    eval_tokens: int
+    calib_tokens: int
+    task_examples: int = 200
+
+
+def generate_all(outdir: str, plan: DataPlan) -> dict:
+    """Generate corpora + tasks for one vocab size; returns a manifest dict."""
+    import os
+
+    os.makedirs(outdir, exist_ok=True)
+    spec = VocabSpec(plan.vocab)
+    manifest: dict = {"vocab": plan.vocab, "seed": plan.seed, "corpora": {}, "tasks": {}}
+
+    # training corpus = pile mixture (models are trained on the broad mix)
+    # Manifest paths are *filenames* relative to the data directory; aot.py
+    # re-roots them relative to the artifacts dir for the Rust loader.
+    g = Grammar(spec, plan.seed)
+    train = g.corpus(CORPUS_MIXTURES["pile"], plan.train_tokens)
+    write_tokens(os.path.join(outdir, "train.tok"), train, plan.vocab)
+    manifest["corpora"]["train"] = {"path": "train.tok", "tokens": int(len(train))}
+
+    for name, offs in (("pile", 1), ("wiki", 2), ("c4", 3)):
+        gg = Grammar(spec, plan.seed + 1000 * offs)
+        n = plan.calib_tokens if name == "pile" else plan.eval_tokens
+        toks = gg.corpus(CORPUS_MIXTURES[name], n)
+        write_tokens(os.path.join(outdir, f"{name}.tok"), toks, plan.vocab)
+        manifest["corpora"][name] = {"path": f"{name}.tok", "tokens": int(len(toks))}
+
+    tg = TaskGen(spec, plan.seed + 7777)
+    for task in TaskGen.TASKS:
+        ex = tg.gen(task, plan.task_examples)
+        write_tasks(os.path.join(outdir, f"task_{task}.json"), ex)
+        manifest["tasks"][task] = {"path": f"task_{task}.json", "n": len(ex)}
+
+    with open(os.path.join(outdir, "data_manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/data")
+    ap.add_argument("--vocab", type=int, default=2048)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--train-tokens", type=int, default=2_000_000)
+    ap.add_argument("--eval-tokens", type=int, default=65_536)
+    ap.add_argument("--calib-tokens", type=int, default=32_768)
+    a = ap.parse_args()
+    m = generate_all(
+        a.out,
+        DataPlan(a.vocab, a.seed, a.train_tokens, a.eval_tokens, a.calib_tokens),
+    )
+    print(json.dumps(m, indent=2))

@@ -1,0 +1,71 @@
+"""`.iwt` — the InvarExplore weight-tensor container.
+
+A safetensors-like single-file format shared between the Python build path
+(writer) and the Rust runtime (reader — rust/src/io/iwt.rs):
+
+    bytes 0..4    magic  b"IVWT"
+    bytes 4..8    u32 LE version (1)
+    bytes 8..16   u64 LE header length H
+    bytes 16..16+H  UTF-8 JSON header:
+        {"tensors": {name: {"dtype": "f32", "shape": [..],
+                            "offset": int, "nbytes": int}, ...},
+         "meta": {...arbitrary string map...}}
+    then raw little-endian tensor data; offsets are relative to the start of
+    the data section and 64-byte aligned.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+
+import numpy as np
+
+MAGIC = b"IVWT"
+VERSION = 1
+ALIGN = 64
+
+
+def write_iwt(path: str, tensors: dict[str, np.ndarray], meta: dict[str, str] | None = None) -> None:
+    entries = {}
+    offset = 0
+    blobs = []
+    for name, arr in tensors.items():
+        arr = np.ascontiguousarray(arr, dtype="<f4")
+        nbytes = arr.nbytes
+        entries[name] = {
+            "dtype": "f32",
+            "shape": list(arr.shape),
+            "offset": offset,
+            "nbytes": nbytes,
+        }
+        blobs.append(arr.tobytes())
+        offset += nbytes
+        pad = (-offset) % ALIGN
+        if pad:
+            blobs.append(b"\x00" * pad)
+            offset += pad
+    header = json.dumps({"tensors": entries, "meta": meta or {}}).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", VERSION))
+        f.write(struct.pack("<Q", len(header)))
+        f.write(header)
+        for b in blobs:
+            f.write(b)
+
+
+def read_iwt(path: str) -> tuple[dict[str, np.ndarray], dict[str, str]]:
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad .iwt magic"
+        (version,) = struct.unpack("<I", f.read(4))
+        assert version == VERSION
+        (hlen,) = struct.unpack("<Q", f.read(8))
+        header = json.loads(f.read(hlen).decode())
+        data = f.read()
+    out = {}
+    for name, e in header["tensors"].items():
+        assert e["dtype"] == "f32"
+        raw = data[e["offset"] : e["offset"] + e["nbytes"]]
+        out[name] = np.frombuffer(raw, dtype="<f4").reshape(e["shape"]).copy()
+    return out, header.get("meta", {})

@@ -1,0 +1,76 @@
+"""Layer-1 Pallas kernel: groupwise asymmetric integer fake-quantization.
+
+This is the compute hot-spot of InvarExplore: every hill-climbing proposal
+re-quantizes the mutated FFN block, and the in-graph quantized forward
+(`forward_q*` programs) fake-quantizes every linear weight on every call.
+
+TPU mapping (DESIGN.md §2): the grid is ``(rows / BLOCK_ROWS, cols /
+group)`` so each program instance owns ``BLOCK_ROWS`` complete quantization
+groups.  The max/min reduction never crosses a block boundary, the block
+(``BLOCK_ROWS × group × 4`` bytes ≤ 4 KiB) lives comfortably in VMEM, and
+Pallas's automatic double-buffering streams HBM at full bandwidth — the
+kernel is memory-bound by construction (arithmetic intensity ≈ 0.75 flop/B).
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers the kernel to plain HLO ops
+that the Rust runtime's CPU client runs directly.  Real-TPU performance is
+estimated from the VMEM/bandwidth model in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Row-tile size.  All model dims in this repo are multiples of 8; 8 rows ×
+#: group ≤ 64 cols × 4 B = 2 KiB per input block.
+BLOCK_ROWS = 8
+
+
+def _fake_quant_block(w_ref, o_ref, *, qmax: float):
+    """One (BLOCK_ROWS, group) tile: whole groups, so the reduction is local.
+
+    Mirrors ref.quant_params_ref / ref.fake_quant_ref exactly, including the
+    round-half-up mode and the degenerate-group fallback (scale = 1).
+    """
+    w = w_ref[...]
+    mx = jnp.max(w, axis=1, keepdims=True)
+    mn = jnp.min(w, axis=1, keepdims=True)
+    rng = mx - mn
+    scale = jnp.where(rng > 0, rng / qmax, 1.0)
+    zero = jnp.floor(-mn / scale + 0.5)
+    q = jnp.floor(w / scale + 0.5) + zero
+    q = jnp.clip(q, 0.0, qmax)
+    o_ref[...] = scale * (q - zero)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group", "block_rows"))
+def fake_quant_pallas(w, bits: int, group: int, block_rows: int = BLOCK_ROWS):
+    """Groupwise asymmetric fake-quant of ``w [rows, cols]`` via Pallas.
+
+    Requires ``rows % block_rows == 0`` and ``cols % group == 0`` (true for
+    every weight shape emitted by this repo's model family).
+    """
+    rows, cols = w.shape
+    if rows % block_rows != 0:
+        # Fall back to a row-tile that divides: gcd keeps whole rows.
+        import math
+
+        block_rows = math.gcd(rows, block_rows)
+    assert cols % group == 0, f"cols={cols} % group={group} != 0"
+    qmax = float(2**bits - 1)
+    grid = (rows // block_rows, cols // group)
+    return pl.pallas_call(
+        functools.partial(_fake_quant_block, qmax=qmax),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), w.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, group), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_rows, group), lambda i, j: (i, j)),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(w)
+
+
+def fake_quant(w, bits: int, group: int):
+    """Public entry used by the L2 model graph."""
+    return fake_quant_pallas(w, bits, group)

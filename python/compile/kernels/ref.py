@@ -1,0 +1,68 @@
+"""Pure-jnp oracle for groupwise asymmetric integer fake-quantization.
+
+This is the CORE correctness reference (Eqns. 1-4 of the paper): the Pallas
+kernel (`quant_kernel.py`), the in-graph quantized forward (`model.py`) and
+the Rust codec (`rust/src/quant/group.rs`) must all agree with this module
+bit-for-bit on f32.
+
+Conventions (shared with the Rust side — keep in sync!):
+
+* weights are row-major ``[out, in]``; groups are ``group`` contiguous
+  elements along the *input* dimension (``in % group == 0``);
+* unsigned integer range ``q in [0, 2^bits - 1]`` (q_min = 0);
+* ``s_g = (max - min) / q_max``; degenerate groups (max == min) use
+  ``s_g = 1.0`` so a constant group dequantizes to ``round(c)``;
+* rounding is ``floor(x + 0.5)`` (round-half-up) — NOT banker's rounding —
+  because ``f32::floor(x + 0.5)`` is what the Rust codec computes.
+"""
+
+import jax.numpy as jnp
+
+
+def round_half_up(x):
+    """floor(x + 0.5): the rounding mode shared across all three layers."""
+    return jnp.floor(x + 0.5)
+
+
+def quant_params_ref(w, bits: int, group: int):
+    """Closed-form scale/zero-point per group (Eqns. 2-3, q_min = 0).
+
+    Args:
+      w: ``[rows, cols]`` f32 weights, ``cols % group == 0``.
+    Returns:
+      (scale ``[rows, cols//group]``, zero ``[rows, cols//group]`` — f32
+      holding integer values).
+    """
+    rows, cols = w.shape
+    assert cols % group == 0, f"cols={cols} not divisible by group={group}"
+    qmax = float(2**bits - 1)
+    wg = w.reshape(rows, cols // group, group)
+    mx = wg.max(axis=-1)
+    mn = wg.min(axis=-1)
+    rng = mx - mn
+    scale = jnp.where(rng > 0, rng / qmax, 1.0)
+    zero = round_half_up(-mn / scale)
+    return scale, zero
+
+
+def fake_quant_ref(w, bits: int, group: int):
+    """quant -> dequant roundtrip (Eqns. 1 and 4)."""
+    rows, cols = w.shape
+    qmax = float(2**bits - 1)
+    scale, zero = quant_params_ref(w, bits, group)
+    wg = w.reshape(rows, cols // group, group)
+    q = round_half_up(wg / scale[..., None]) + zero[..., None]
+    q = jnp.clip(q, 0.0, qmax)
+    deq = scale[..., None] * (q - zero[..., None])
+    return deq.reshape(rows, cols)
+
+
+def quant_codes_ref(w, bits: int, group: int):
+    """Integer codes (as f32 array of integral values) — for the packing
+    tests against the Rust ``quant::packed`` codec."""
+    rows, cols = w.shape
+    qmax = float(2**bits - 1)
+    scale, zero = quant_params_ref(w, bits, group)
+    wg = w.reshape(rows, cols // group, group)
+    q = round_half_up(wg / scale[..., None]) + zero[..., None]
+    return jnp.clip(q, 0.0, qmax).reshape(rows, cols), scale, zero

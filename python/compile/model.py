@@ -1,0 +1,235 @@
+"""Layer-2 JAX model: OPT-style decoder-only transformer.
+
+Mirrors the OPT architecture properties that the paper's invariance algebra
+relies on (DESIGN.md §1): pre-LN decoder blocks, learned positional
+embeddings, a **ReLU** feed-forward network ``W_down · relu(W_up·x + b_up) +
+b_down`` (so the scaling invariance of Eqns. 12-15 is *exact*), and a tied
+LM head.
+
+All linear weights follow the row-major ``[out, in]`` convention shared with
+the Rust side (``y = x @ W.T + b``); quantization groups run along the input
+dimension.
+
+The quantized variant (`forward_quant`) applies the Layer-1 Pallas
+fake-quant kernel to every attention/FFN linear weight inside the graph, so
+the whole thing lowers into a single HLO program that the Rust runtime
+executes on the search hot path for end-to-end validation.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.quant_kernel import fake_quant
+
+LN_EPS = 1e-5
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    """Model hyper-parameters (kept in sync with rust model::OptConfig)."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ffn: int
+    max_seq: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+#: The three build-time model sizes (paper: OPT 1.3B / 2.7B-6.7B / 13B trend
+#: is reproduced as a 3-point sweep — see DESIGN.md substitution log).
+MODEL_SIZES = {
+    "opt-tiny": OptConfig("opt-tiny", vocab=2048, d_model=128, n_layers=2, n_heads=4, d_ffn=512, max_seq=128),
+    "opt-small": OptConfig("opt-small", vocab=2048, d_model=192, n_layers=3, n_heads=6, d_ffn=768, max_seq=128),
+    "opt-base": OptConfig("opt-base", vocab=2048, d_model=320, n_layers=4, n_heads=8, d_ffn=1280, max_seq=128),
+}
+
+#: Per-layer parameter names, in the canonical flattening order used by the
+#: HLO programs and the .iwt weight file (keep in sync with rust io/model).
+LAYER_PARAM_NAMES = (
+    "ln1.w", "ln1.b",
+    "q.w", "q.b", "k.w", "k.b", "v.w", "v.b", "o.w", "o.b",
+    "ln2.w", "ln2.b",
+    "up.w", "up.b", "down.w", "down.b",
+)
+#: Names of the quantizable (linear) tensors within a layer.
+LAYER_QUANT_NAMES = ("q.w", "k.w", "v.w", "o.w", "up.w", "down.w")
+
+
+def param_names(cfg: OptConfig) -> list[str]:
+    """Canonical flat parameter-name order for a model."""
+    names = ["emb", "pos"]
+    for i in range(cfg.n_layers):
+        names += [f"l{i}.{n}" for n in LAYER_PARAM_NAMES]
+    names += ["lnf.w", "lnf.b"]
+    return names
+
+
+def init_params(cfg: OptConfig, key) -> dict[str, jnp.ndarray]:
+    """Scaled-normal init (GPT-2 style residual scaling)."""
+    ks = iter(jax.random.split(key, 4 + 16 * cfg.n_layers))
+    d, f = cfg.d_model, cfg.d_ffn
+    p: dict[str, jnp.ndarray] = {}
+    p["emb"] = jax.random.normal(next(ks), (cfg.vocab, d)) * 0.02
+    p["pos"] = jax.random.normal(next(ks), (cfg.max_seq, d)) * 0.01
+    resid_scale = 1.0 / jnp.sqrt(2.0 * cfg.n_layers)
+    for i in range(cfg.n_layers):
+        pre = f"l{i}."
+        p[pre + "ln1.w"] = jnp.ones(d)
+        p[pre + "ln1.b"] = jnp.zeros(d)
+        for nm in ("q", "k", "v"):
+            p[pre + nm + ".w"] = jax.random.normal(next(ks), (d, d)) * (0.02)
+            p[pre + nm + ".b"] = jnp.zeros(d)
+        p[pre + "o.w"] = jax.random.normal(next(ks), (d, d)) * (0.02 * resid_scale)
+        p[pre + "o.b"] = jnp.zeros(d)
+        p[pre + "ln2.w"] = jnp.ones(d)
+        p[pre + "ln2.b"] = jnp.zeros(d)
+        p[pre + "up.w"] = jax.random.normal(next(ks), (f, d)) * 0.02
+        p[pre + "up.b"] = jnp.zeros(f)
+        p[pre + "down.w"] = jax.random.normal(next(ks), (d, f)) * (0.02 * resid_scale)
+        p[pre + "down.b"] = jnp.zeros(d)
+    p["lnf.w"] = jnp.ones(d)
+    p["lnf.b"] = jnp.zeros(d)
+    return {k: v.astype(jnp.float32) for k, v in p.items()}
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def layer_norm(x, w, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + LN_EPS) * w + b
+
+
+def linear(x, w, b):
+    """x [..., in] @ w[out, in].T + b[out]."""
+    return x @ w.T + b
+
+
+def attention(x, p, pre: str, cfg: OptConfig):
+    """Causal multi-head self-attention (pre-LN block half)."""
+    B, T, D = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    h = layer_norm(x, p[pre + "ln1.w"], p[pre + "ln1.b"])
+    q = linear(h, p[pre + "q.w"], p[pre + "q.b"]).reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+    k = linear(h, p[pre + "k.w"], p[pre + "k.b"]).reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+    v = linear(h, p[pre + "v.w"], p[pre + "v.b"]).reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+    att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((T, T), dtype=bool))
+    att = jnp.where(causal[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(B, T, D)
+    return x + linear(out, p[pre + "o.w"], p[pre + "o.b"])
+
+
+def ffn(x, p, pre: str):
+    """The ReLU FFN block — the invariance site (Eqn. 7)."""
+    h = layer_norm(x, p[pre + "ln2.w"], p[pre + "ln2.b"])
+    u = jax.nn.relu(linear(h, p[pre + "up.w"], p[pre + "up.b"]))
+    return x + linear(u, p[pre + "down.w"], p[pre + "down.b"])
+
+
+def block(x, p, i: int, cfg: OptConfig):
+    pre = f"l{i}."
+    return ffn(attention(x, p, pre, cfg), p, pre)
+
+
+def embed(tokens, p, cfg: OptConfig):
+    B, T = tokens.shape
+    return p["emb"][tokens] + p["pos"][:T][None]
+
+
+def lm_logits(x, p):
+    """Final LN + tied LM head."""
+    h = layer_norm(x, p["lnf.w"], p["lnf.b"])
+    return h @ p["emb"].T
+
+
+def heads(x, targets, mask, p):
+    """CE (mean over mask) + per-sequence masked log-prob."""
+    logits = lm_logits(x, p)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt_logp = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = -(tgt_logp * mask).sum() / denom
+    seq_logprob = (tgt_logp * mask).sum(axis=-1)
+    return ce, seq_logprob
+
+
+def forward_fp(tokens, targets, mask, p, cfg: OptConfig):
+    """FP forward: (ce, seq_logprob [B], hidden stack [L, B, T, D]).
+
+    The hidden stack is the post-block residual stream of every layer — the
+    H (resp. H0) of the activation-matching loss, Eqn. 23.
+    """
+    x = embed(tokens, p, cfg)
+    acts = []
+    for i in range(cfg.n_layers):
+        x = block(x, p, i, cfg)
+        acts.append(x)
+    ce, seq_logprob = heads(x, targets, mask, p)
+    return ce, seq_logprob, jnp.stack(acts)
+
+
+def quantize_params(p, cfg: OptConfig, bits: int, group: int):
+    """Apply the L1 Pallas fake-quant kernel to every linear weight."""
+    q = dict(p)
+    for i in range(cfg.n_layers):
+        for nm in LAYER_QUANT_NAMES:
+            k = f"l{i}.{nm}"
+            q[k] = fake_quant(p[k], bits, group)
+    return q
+
+
+def forward_quant(tokens, targets, mask, h0, p, cfg: OptConfig, bits: int, group: int):
+    """Quantized forward with in-graph Pallas fake-quant.
+
+    Takes the FP activation stack ``h0`` as an input and emits the search
+    objective pieces: (ce, seq_logprob, act_mse) — Eqn. 23's two terms.
+    """
+    qp = quantize_params(p, cfg, bits, group)
+    x = embed(tokens, qp, cfg)
+    mse = 0.0
+    for i in range(cfg.n_layers):
+        x = block(x, qp, i, cfg)
+        mse = mse + jnp.mean((x - h0[i]) ** 2)
+    ce, seq_logprob = heads(x, targets, mask, qp)
+    return ce, seq_logprob, mse / cfg.n_layers
+
+
+# --- Per-stage functions for the layer-pipelined runtime -------------------
+
+def stage_embed(tokens, emb, pos):
+    T = tokens.shape[1]
+    return emb[tokens] + pos[:T][None]
+
+
+def stage_layer(x, layer_params: dict, cfg: OptConfig):
+    """One decoder block given its 16 tensors (names without the l{i} prefix)."""
+    p = {f"l0.{k}": v for k, v in layer_params.items()}
+    return block(x, p, 0, cfg)
+
+
+def stage_head(x, targets, mask, emb, lnf_w, lnf_b):
+    p = {"emb": emb, "lnf.w": lnf_w, "lnf.b": lnf_b}
+    return heads(x, targets, mask, p)
+
+
+def stage_head_logits(x, emb, lnf_w, lnf_b):
+    p = {"emb": emb, "lnf.w": lnf_w, "lnf.b": lnf_b}
+    return lm_logits(x, p)

@@ -1,0 +1,161 @@
+"""Build-time training of the OPT-style model family on the synthetic corpus.
+
+The paper quantizes *pretrained* OPT checkpoints; this repo trains its own
+small checkpoints (DESIGN.md §1 substitution log).  Training is plain Adam +
+cosine decay with a hand-rolled optimizer (optax is not available in the
+offline sandbox) and runs once under ``make artifacts``.
+
+The loss curve of each run is saved next to the weights
+(``<name>.losscurve.csv``) and the final eval perplexities go into the
+artifacts manifest — this is the evidence trail for EXPERIMENTS.md's
+end-to-end validation section.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .datagen import read_tokens
+from .iwt import write_iwt
+
+
+def adam_init(params):
+    zeros = lambda p: jax.tree_util.tree_map(jnp.zeros_like, p)
+    return {"m": zeros(params), "v": zeros(params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t.astype(jnp.float32))
+    vhat_scale = 1.0 / (1 - b2 ** t.astype(jnp.float32))
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params, m, v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def make_batches(tokens: np.ndarray, batch: int, seqlen: int, rng: np.random.Generator):
+    """Sample random contiguous windows; yields (tokens, targets)."""
+    n = len(tokens) - seqlen - 1
+    while True:
+        starts = rng.integers(0, n, size=batch)
+        x = np.stack([tokens[s : s + seqlen] for s in starts]).astype(np.int32)
+        y = np.stack([tokens[s + 1 : s + seqlen + 1] for s in starts]).astype(np.int32)
+        yield x, y
+
+
+def train_model(
+    cfg: M.OptConfig,
+    train_tokens: np.ndarray,
+    steps: int,
+    batch: int = 16,
+    seqlen: int = 128,
+    lr_max: float = 3e-3,
+    warmup: int = 40,
+    seed: int = 0,
+    log_every: int = 25,
+):
+    """Train one model; returns (params, losscurve list[(step, loss)])."""
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(cfg, key)
+    opt = adam_init(params)
+
+    def loss_fn(p, x, y):
+        mask = jnp.ones(x.shape, jnp.float32)
+        ce, _, _ = M.forward_fp(x, y, mask, p, cfg)
+        return ce
+
+    @jax.jit
+    def step_fn(p, opt, x, y, lr):
+        ce, grads = jax.value_and_grad(loss_fn)(p, x, y)
+        p, opt = adam_update(p, grads, opt, lr)
+        return p, opt, ce
+
+    rng = np.random.default_rng(seed + 1)
+    batches = make_batches(train_tokens, batch, seqlen, rng)
+    curve = []
+    t0 = time.time()
+    for step in range(1, steps + 1):
+        frac = step / steps
+        lr = lr_max * min(step / warmup, 1.0) * (0.5 * (1 + np.cos(np.pi * frac)))
+        x, y = next(batches)
+        params, opt, ce = step_fn(params, opt, x, y, jnp.float32(lr))
+        if step % log_every == 0 or step == 1 or step == steps:
+            ce = float(ce)
+            curve.append((step, ce))
+            print(f"[train {cfg.name}] step {step:5d}/{steps} lr {lr:.2e} ce {ce:.4f} ({time.time()-t0:.0f}s)")
+    return params, curve
+
+
+def eval_ppl(cfg: M.OptConfig, params, tokens: np.ndarray, batch: int = 16, seqlen: int = 128, max_batches: int = 8):
+    """Held-out perplexity over contiguous chunks (matches rust eval::ppl)."""
+    @jax.jit
+    def ce_fn(p, x, y):
+        mask = jnp.ones(x.shape, jnp.float32)
+        ce, _, _ = M.forward_fp(x, y, mask, p, cfg)
+        return ce
+
+    n_chunk = (len(tokens) - 1) // seqlen
+    total, count = 0.0, 0
+    for b in range(min(max_batches, n_chunk // batch)):
+        idx = np.arange(b * batch, (b + 1) * batch) * seqlen
+        x = np.stack([tokens[i : i + seqlen] for i in idx]).astype(np.int32)
+        y = np.stack([tokens[i + 1 : i + seqlen + 1] for i in idx]).astype(np.int32)
+        total += float(ce_fn(params, x, y))
+        count += 1
+    return float(np.exp(total / max(count, 1)))
+
+
+def save_params(path: str, cfg: M.OptConfig, params) -> None:
+    tensors = {k: np.asarray(v) for k, v in params.items()}
+    meta = {k: str(v) for k, v in cfg.to_dict().items()}
+    write_iwt(path, tensors, meta)
+
+
+#: Default training budget per size (scaled for the CPU sandbox).
+TRAIN_STEPS = {"opt-tiny": 300, "opt-small": 400, "opt-base": 500}
+
+
+def main():
+    import argparse
+    import os
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--data", default="../artifacts/data")
+    ap.add_argument("--out", default="../artifacts/models")
+    ap.add_argument("--sizes", default="opt-tiny,opt-small,opt-base")
+    ap.add_argument("--steps", type=int, default=0, help="override per-size default")
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args()
+    os.makedirs(a.out, exist_ok=True)
+
+    train_toks, _ = read_tokens(os.path.join(a.data, "train.tok"))
+    wiki_toks, _ = read_tokens(os.path.join(a.data, "wiki.tok"))
+
+    for name in a.sizes.split(","):
+        cfg = M.MODEL_SIZES[name]
+        steps = a.steps or TRAIN_STEPS[name]
+        params, curve = train_model(cfg, train_toks, steps, seed=a.seed)
+        ppl = eval_ppl(cfg, params, wiki_toks)
+        print(f"[train {name}] wiki ppl {ppl:.3f}")
+        save_params(os.path.join(a.out, f"{name}.iwt"), cfg, params)
+        with open(os.path.join(a.out, f"{name}.losscurve.csv"), "w") as f:
+            f.write("step,ce\n")
+            for s, ce in curve:
+                f.write(f"{s},{ce:.6f}\n")
+        with open(os.path.join(a.out, f"{name}.eval.json"), "w") as f:
+            import json
+
+            json.dump({"wiki_ppl_fp": ppl, "steps": steps}, f)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,168 @@
+"""Synthetic data generator tests: determinism, learnable regularities,
+serialization round-trips."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import datagen as D
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return D.VocabSpec(1024)
+
+
+class TestVocabSpec:
+    def test_layout_partitions(self, spec):
+        assert spec.noun0 == 3
+        assert spec.verb0 == spec.noun0 + spec.n_nouns
+        assert spec.digit0 + 10 <= spec.vocab
+
+    def test_topic_nouns_disjoint(self, spec):
+        seen = set()
+        for t in range(spec.n_topics):
+            ns = set(map(int, spec.topic_nouns(t)))
+            assert not (ns & seen)
+            seen |= ns
+
+    def test_too_small_vocab_rejected(self):
+        with pytest.raises(AssertionError):
+            D.VocabSpec(16)
+
+
+class TestGrammar:
+    def test_determinism(self, spec):
+        a = D.Grammar(spec, 42).corpus(D.CORPUS_MIXTURES["pile"], 5000)
+        b = D.Grammar(spec, 42).corpus(D.CORPUS_MIXTURES["pile"], 5000)
+        np.testing.assert_array_equal(a, b)
+
+    def test_seed_changes_output(self, spec):
+        a = D.Grammar(spec, 1).corpus(D.CORPUS_MIXTURES["pile"], 1000)
+        b = D.Grammar(spec, 2).corpus(D.CORPUS_MIXTURES["pile"], 1000)
+        assert not np.array_equal(a, b)
+
+    def test_tokens_in_range(self, spec):
+        toks = D.Grammar(spec, 0).corpus(D.CORPUS_MIXTURES["wiki"], 2000)
+        assert toks.max() < spec.vocab
+
+    def test_digit_runs_mostly_ascending(self, spec):
+        g = D.Grammar(spec, 0)
+        asc = 0
+        for _ in range(200):
+            s = g.sent_digits()
+            if all(a < b for a, b in zip(s, s[1:])):
+                asc += 1
+        assert asc > 150  # prob 0.9 of ascending
+
+    def test_agreement_regularity(self, spec):
+        """Verbs in SVO sentences agree with topic ~90% of the time."""
+        g = D.Grammar(spec, 0)
+        agree = total = 0
+        for _ in range(300):
+            t = int(g.rng.integers(spec.n_topics))
+            s = g.sent_svo(t)
+            verbs = [x for x in s if spec.verb0 <= x < spec.adj0]
+            for v in verbs:
+                total += 1
+                agree += ((v - spec.verb0) % spec.n_topics) == t
+        assert agree / total > 0.8
+
+    def test_mixtures_differ(self, spec):
+        """wiki vs c4 token histograms must measurably differ (the paper's
+        cross-corpus shift)."""
+        w = D.Grammar(spec, 0).corpus(D.CORPUS_MIXTURES["wiki"], 20000)
+        c = D.Grammar(spec, 0).corpus(D.CORPUS_MIXTURES["c4"], 20000)
+        hw = np.bincount(w, minlength=spec.vocab) / len(w)
+        hc = np.bincount(c, minlength=spec.vocab) / len(c)
+        assert np.abs(hw - hc).sum() > 0.01
+
+
+class TestTasks:
+    @pytest.mark.parametrize("task", D.TaskGen.TASKS)
+    def test_task_well_formed(self, spec, task):
+        tg = D.TaskGen(spec, 0)
+        for ex in tg.gen(task, 50):
+            assert 0 <= ex.answer < len(ex.options)
+            assert len(ex.ctx) >= 2 and ex.ctx[0] == D.BOS
+            assert all(len(o) >= 1 for o in ex.options)
+            # options must be distinct (else accuracy is ill-defined)
+            as_tuples = [tuple(o) for o in ex.options]
+            assert len(set(as_tuples)) == len(as_tuples)
+
+    def test_answer_positions_balanced(self, spec):
+        tg = D.TaskGen(spec, 0)
+        answers = [ex.answer for ex in tg.gen("assoc", 200)]
+        counts = np.bincount(answers, minlength=4)
+        assert counts.min() > 20  # roughly uniform across 4 slots
+
+    def test_compare_task_correctness(self, spec):
+        """The correct option must be a digit strictly greater than ctx digit."""
+        tg = D.TaskGen(spec, 0)
+        for ex in tg.gen("compare", 100):
+            d_ctx = ex.ctx[2] - spec.digit0
+            d_ans = ex.options[ex.answer][0] - spec.digit0
+            assert d_ans > d_ctx
+
+
+class TestSerialization:
+    def test_token_roundtrip(self, tmp_path, spec):
+        toks = D.Grammar(spec, 0).corpus(D.CORPUS_MIXTURES["pile"], 3000)
+        p = str(tmp_path / "x.tok")
+        D.write_tokens(p, toks, spec.vocab)
+        back, vocab = D.read_tokens(p)
+        assert vocab == spec.vocab
+        np.testing.assert_array_equal(toks, back)
+
+    def test_bad_magic_rejected(self, tmp_path):
+        p = str(tmp_path / "bad.tok")
+        with open(p, "wb") as f:
+            f.write(b"XXXX" + b"\x00" * 16)
+        with pytest.raises(AssertionError):
+            D.read_tokens(p)
+
+    def test_generate_all_manifest(self, tmp_path):
+        plan = D.DataPlan(vocab=512, seed=0, train_tokens=5000, eval_tokens=2000,
+                          calib_tokens=2000, task_examples=10)
+        m = D.generate_all(str(tmp_path), plan)
+        assert set(m["corpora"]) == {"train", "pile", "wiki", "c4"}
+        assert set(m["tasks"]) == set(D.TaskGen.TASKS)
+        for t in D.TaskGen.TASKS:
+            with open(tmp_path / f"task_{t}.json") as f:
+                data = json.load(f)
+            assert len(data) == 10
+        assert os.path.exists(tmp_path / "data_manifest.json")
+
+
+class TestIwt:
+    def test_roundtrip(self, tmp_path):
+        from compile.iwt import write_iwt, read_iwt
+
+        rng = np.random.default_rng(0)
+        tensors = {
+            "a": rng.normal(size=(3, 5)).astype(np.float32),
+            "b.c": rng.normal(size=(7,)).astype(np.float32),
+            "empty_meta": np.zeros((2, 2), np.float32),
+        }
+        p = str(tmp_path / "w.iwt")
+        write_iwt(p, tensors, {"k": "v"})
+        back, meta = read_iwt(p)
+        assert meta == {"k": "v"}
+        for k in tensors:
+            np.testing.assert_array_equal(tensors[k], back[k])
+
+    def test_alignment(self, tmp_path):
+        """Offsets must be 64-byte aligned (required by the Rust reader)."""
+        from compile.iwt import write_iwt
+        import struct, json as js
+
+        p = str(tmp_path / "w.iwt")
+        write_iwt(p, {"a": np.zeros((1, 3), np.float32), "b": np.ones((2, 2), np.float32)})
+        with open(p, "rb") as f:
+            f.read(8)
+            (hlen,) = struct.unpack("<Q", f.read(8))
+            hdr = js.loads(f.read(hlen))
+        for e in hdr["tensors"].values():
+            assert e["offset"] % 64 == 0

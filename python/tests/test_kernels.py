@@ -1,0 +1,127 @@
+"""L1 correctness: the Pallas fake-quant kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/bits/groups per the repro contract: the kernel must
+agree with ref.py everywhere the Rust codec will be used.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import fake_quant_ref, quant_params_ref, quant_codes_ref
+from compile.kernels.quant_kernel import fake_quant_pallas
+
+ATOL = 1e-5
+
+
+def rand_w(rows, cols, seed=0, scale=1.0):
+    return (np.random.default_rng(seed).normal(size=(rows, cols)) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Oracle self-properties
+# ---------------------------------------------------------------------------
+
+class TestRefProperties:
+    def test_scale_closed_form(self):
+        w = rand_w(4, 64)
+        s, z = quant_params_ref(jnp.asarray(w), 2, 64)
+        wg = w.reshape(4, 1, 64)
+        expect = (wg.max(-1) - wg.min(-1)) / 3.0
+        np.testing.assert_allclose(np.asarray(s), expect, rtol=1e-6)
+
+    def test_zero_point_is_integral(self):
+        w = rand_w(8, 128, seed=3)
+        _, z = quant_params_ref(jnp.asarray(w), 3, 32)
+        z = np.asarray(z)
+        np.testing.assert_allclose(z, np.round(z), atol=0)
+
+    def test_codes_in_range(self):
+        for bits in (1, 2, 3, 4):
+            w = rand_w(8, 64, seed=bits)
+            q, _, _ = quant_codes_ref(jnp.asarray(w), bits, 32)
+            q = np.asarray(q)
+            assert q.min() >= 0 and q.max() <= 2**bits - 1
+
+    def test_reconstruction_error_bounded_by_scale(self):
+        """|w - deq(w)| <= s/2 + eps elementwise (except clipping, which
+        cannot occur when z is exact)."""
+        w = rand_w(16, 128, seed=7)
+        bits, group = 2, 64
+        deq = np.asarray(fake_quant_ref(jnp.asarray(w), bits, group))
+        s, _ = quant_params_ref(jnp.asarray(w), bits, group)
+        s = np.repeat(np.asarray(s), group, axis=-1).reshape(w.shape)
+        assert (np.abs(w - deq) <= s * 0.5 + 1e-5).all()
+
+    def test_constant_group_degenerate(self):
+        w = np.full((2, 64), 3.2, dtype=np.float32)
+        deq = np.asarray(fake_quant_ref(jnp.asarray(w), 2, 64))
+        np.testing.assert_allclose(deq, 3.0, atol=1e-6)  # round(3.2) w/ s=1
+
+    def test_idempotent(self):
+        """fake_quant(fake_quant(w)) == fake_quant(w)."""
+        w = rand_w(8, 64, seed=11)
+        d1 = fake_quant_ref(jnp.asarray(w), 2, 32)
+        d2 = fake_quant_ref(d1, 2, 32)
+        np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), atol=ATOL)
+
+    def test_more_bits_less_error(self):
+        w = rand_w(32, 128, seed=13)
+        errs = []
+        for bits in (1, 2, 3, 4, 8):
+            deq = np.asarray(fake_quant_ref(jnp.asarray(w), bits, 64))
+            errs.append(float(((w - deq) ** 2).mean()))
+        assert all(a >= b for a, b in zip(errs, errs[1:])), errs
+
+    def test_smaller_group_less_error(self):
+        w = rand_w(32, 128, seed=17)
+        e32 = float(((w - np.asarray(fake_quant_ref(jnp.asarray(w), 2, 32))) ** 2).mean())
+        e64 = float(((w - np.asarray(fake_quant_ref(jnp.asarray(w), 2, 64))) ** 2).mean())
+        e128 = float(((w - np.asarray(fake_quant_ref(jnp.asarray(w), 2, 128))) ** 2).mean())
+        assert e32 <= e64 <= e128
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs oracle — hypothesis sweep
+# ---------------------------------------------------------------------------
+
+class TestPallasVsRef:
+    @pytest.mark.parametrize("bits", [1, 2, 3, 4])
+    @pytest.mark.parametrize("group", [32, 64])
+    def test_grid(self, bits, group):
+        w = rand_w(16, 128, seed=bits * 10 + group)
+        r = np.asarray(fake_quant_ref(jnp.asarray(w), bits, group))
+        p = np.asarray(fake_quant_pallas(jnp.asarray(w), bits, group))
+        np.testing.assert_allclose(p, r, atol=ATOL)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        rows=st.sampled_from([8, 16, 24, 40, 64]),
+        groups_per_row=st.integers(1, 6),
+        bits=st.integers(1, 4),
+        group=st.sampled_from([32, 64]),
+        seed=st.integers(0, 2**16),
+        scale=st.sampled_from([1e-3, 1.0, 100.0]),
+    )
+    def test_hypothesis_sweep(self, rows, groups_per_row, bits, group, seed, scale):
+        cols = groups_per_row * group
+        w = rand_w(rows, cols, seed=seed, scale=scale)
+        r = np.asarray(fake_quant_ref(jnp.asarray(w), bits, group))
+        p = np.asarray(fake_quant_pallas(jnp.asarray(w), bits, group))
+        np.testing.assert_allclose(p, r, atol=ATOL * max(scale, 1.0))
+
+    def test_non_multiple_block_rows_fallback(self):
+        # rows=12 not divisible by BLOCK_ROWS=8 -> gcd fallback (4)
+        w = rand_w(12, 64, seed=5)
+        r = np.asarray(fake_quant_ref(jnp.asarray(w), 2, 32))
+        p = np.asarray(fake_quant_pallas(jnp.asarray(w), 2, 32))
+        np.testing.assert_allclose(p, r, atol=ATOL)
+
+    def test_outlier_dominated_group(self):
+        """One giant outlier forces everything else to the same bucket."""
+        w = rand_w(8, 64, seed=9)
+        w[0, 0] = 1e4
+        r = np.asarray(fake_quant_ref(jnp.asarray(w), 2, 64))
+        p = np.asarray(fake_quant_pallas(jnp.asarray(w), 2, 64))
+        np.testing.assert_allclose(p, r, atol=1e-2)  # scale ~ 3e3 -> big ulps

@@ -1,0 +1,191 @@
+"""L2 model tests: shapes, invariance algebra, quantized forward."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+CFG = M.OptConfig("test", vocab=256, d_model=64, n_layers=2, n_heads=4, d_ffn=128, max_seq=64)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def batch():
+    rng = np.random.default_rng(0)
+    tok = rng.integers(0, CFG.vocab, (2, 32)).astype(np.int32)
+    tgt = np.roll(tok, -1, axis=1).astype(np.int32)
+    mask = np.ones((2, 32), np.float32)
+    return tok, tgt, mask
+
+
+class TestShapes:
+    def test_forward_fp_shapes(self, params, batch):
+        tok, tgt, mask = batch
+        ce, lp, acts = M.forward_fp(tok, tgt, mask, params, CFG)
+        assert ce.shape == ()
+        assert lp.shape == (2,)
+        assert acts.shape == (CFG.n_layers, 2, 32, CFG.d_model)
+
+    def test_param_names_cover_params(self, params):
+        assert set(M.param_names(CFG)) == set(params.keys())
+
+    def test_param_name_order_stable(self):
+        names = M.param_names(CFG)
+        assert names[0] == "emb" and names[1] == "pos"
+        assert names[-2:] == ["lnf.w", "lnf.b"]
+        assert names[2] == "l0.ln1.w"
+
+    def test_logits_tied_head(self, params, batch):
+        tok, _, _ = batch
+        x = M.embed(tok, params, CFG)
+        logits = M.lm_logits(x, params)
+        assert logits.shape == (2, 32, CFG.vocab)
+
+    def test_causality(self, params, batch):
+        """Changing a future token must not change past logits."""
+        tok, tgt, mask = batch
+        x1 = M.embed(tok, params, CFG)
+        tok2 = tok.copy()
+        tok2[:, -1] = (tok2[:, -1] + 1) % CFG.vocab
+        for i in range(CFG.n_layers):
+            x1 = M.block(x1, params, i, CFG)
+        x2 = M.embed(tok2, params, CFG)
+        for i in range(CFG.n_layers):
+            x2 = M.block(x2, params, i, CFG)
+        np.testing.assert_allclose(
+            np.asarray(x1)[:, :-1], np.asarray(x2)[:, :-1], atol=1e-5
+        )
+
+
+def apply_ffn_transform(params, layer, perm=None, scale=None, phis=None):
+    """Python mirror of rust transform::apply (Eqns. 21-22) for testing."""
+    pre = f"l{layer}."
+    wu = np.asarray(params[pre + "up.w"]).copy()
+    bu = np.asarray(params[pre + "up.b"]).copy()
+    wd = np.asarray(params[pre + "down.w"]).copy()
+    if phis is not None:  # R first (innermost)
+        for p_idx, phi in enumerate(phis):
+            i, j = 2 * p_idx, 2 * p_idx + 1
+            c, s = np.cos(phi), np.sin(phi)
+            ri, rj = wu[i].copy(), wu[j].copy()
+            wu[i], wu[j] = c * ri - s * rj, s * ri + c * rj
+            bi, bj = bu[i], bu[j]
+            bu[i], bu[j] = c * bi - s * bj, s * bi + c * bj
+            ci, cj = wd[:, i].copy(), wd[:, j].copy()
+            wd[:, i], wd[:, j] = c * ci - s * cj, s * ci + c * cj
+    if scale is not None:  # then S
+        wu *= scale[:, None]
+        bu *= scale
+        wd /= scale[None, :]
+    if perm is not None:  # then P (outermost)
+        wu = wu[perm]
+        bu = bu[perm]
+        wd = wd[:, perm]
+    out = dict(params)
+    out[pre + "up.w"] = jnp.asarray(wu)
+    out[pre + "up.b"] = jnp.asarray(bu)
+    out[pre + "down.w"] = jnp.asarray(wd)
+    return out
+
+
+class TestInvariance:
+    """The paper's core algebra: P and S are exact invariances of the ReLU
+    FFN; small-angle R is approximate (§3.2 pilot: 0.001% CE drift)."""
+
+    def _ce(self, params, batch):
+        tok, tgt, mask = batch
+        ce, _, _ = M.forward_fp(tok, tgt, mask, params, CFG)
+        return float(ce)
+
+    def test_permutation_exact(self, params, batch):
+        rng = np.random.default_rng(1)
+        perm = rng.permutation(CFG.d_ffn)
+        p2 = apply_ffn_transform(params, 0, perm=perm)
+        assert abs(self._ce(p2, batch) - self._ce(params, batch)) < 1e-5
+
+    def test_scaling_exact_relu(self, params, batch):
+        rng = np.random.default_rng(2)
+        scale = np.exp(rng.normal(0, 0.2, CFG.d_ffn)).astype(np.float32)
+        p2 = apply_ffn_transform(params, 1, scale=scale)
+        assert abs(self._ce(p2, batch) - self._ce(params, batch)) < 1e-4
+
+    def test_negative_scale_not_invariant(self, params, batch):
+        """ReLU scaling invariance requires s > 0 — a sign flip changes CE."""
+        scale = np.ones(CFG.d_ffn, np.float32)
+        scale[:16] = -1.0
+        p2 = apply_ffn_transform(params, 0, scale=scale)
+        assert abs(self._ce(p2, batch) - self._ce(params, batch)) > 1e-3
+
+    def test_rotation_approx(self, params, batch):
+        rng = np.random.default_rng(3)
+        phis = rng.normal(0, 1e-3, CFG.d_ffn // 2).astype(np.float32)
+        base = self._ce(params, batch)
+        p2 = apply_ffn_transform(params, 0, phis=phis)
+        drift = abs(self._ce(p2, batch) - base) / base
+        assert drift < 1e-3, f"rotation drift {drift}"
+
+    def test_combined_psr(self, params, batch):
+        rng = np.random.default_rng(4)
+        perm = rng.permutation(CFG.d_ffn)
+        scale = np.exp(rng.normal(0, 0.1, CFG.d_ffn)).astype(np.float32)
+        phis = rng.normal(0, 1e-4, CFG.d_ffn // 2).astype(np.float32)
+        base = self._ce(params, batch)
+        p2 = apply_ffn_transform(params, 0, perm=perm, scale=scale, phis=phis)
+        assert abs(self._ce(p2, batch) - base) / base < 1e-3
+
+    def test_transforms_change_quant_error(self, params, batch):
+        """The whole point: invariant for FP, NOT invariant after quant."""
+        tok, tgt, mask = batch
+        _, _, acts = M.forward_fp(tok, tgt, mask, params, CFG)
+        ce0, _, _ = M.forward_quant(tok, tgt, mask, acts, params, CFG, 2, 32)
+        rng = np.random.default_rng(5)
+        scale = np.exp(rng.normal(0, 0.3, CFG.d_ffn)).astype(np.float32)
+        p2 = apply_ffn_transform(params, 0, scale=scale)
+        ce1, _, _ = M.forward_quant(tok, tgt, mask, acts, p2, CFG, 2, 32)
+        assert abs(float(ce0) - float(ce1)) > 1e-6
+
+
+class TestQuantForward:
+    def test_quant_hurts_ce(self, params, batch):
+        tok, tgt, mask = batch
+        ce_fp, _, acts = M.forward_fp(tok, tgt, mask, params, CFG)
+        ce_q, _, mse = M.forward_quant(tok, tgt, mask, acts, params, CFG, 2, 32)
+        assert float(ce_q) > float(ce_fp)
+        assert float(mse) > 0
+
+    def test_more_bits_closer_to_fp(self, params, batch):
+        tok, tgt, mask = batch
+        ce_fp, _, acts = M.forward_fp(tok, tgt, mask, params, CFG)
+        gaps = []
+        for bits in (2, 4, 8):
+            ce_q, _, _ = M.forward_quant(tok, tgt, mask, acts, params, CFG, bits, 32)
+            gaps.append(abs(float(ce_q) - float(ce_fp)))
+        assert gaps[0] >= gaps[1] >= gaps[2]
+
+    def test_quantize_params_only_linears(self, params):
+        qp = M.quantize_params(params, CFG, 2, 32)
+        np.testing.assert_array_equal(np.asarray(qp["emb"]), np.asarray(params["emb"]))
+        np.testing.assert_array_equal(np.asarray(qp["l0.ln1.w"]), np.asarray(params["l0.ln1.w"]))
+        assert not np.array_equal(np.asarray(qp["l0.up.w"]), np.asarray(params["l0.up.w"]))
+
+
+class TestStagePipeline:
+    """The layer-pipelined decomposition must equal the monolith."""
+
+    def test_stages_equal_monolith(self, params, batch):
+        tok, tgt, mask = batch
+        ce, lp, acts = M.forward_fp(tok, tgt, mask, params, CFG)
+        x = M.stage_embed(tok, params["emb"], params["pos"])
+        for i in range(CFG.n_layers):
+            lp_dict = {k: params[f"l{i}.{k}"] for k in M.LAYER_PARAM_NAMES}
+            x = M.stage_layer(x, lp_dict, CFG)
+            np.testing.assert_allclose(np.asarray(x), np.asarray(acts[i]), atol=1e-5)
+        ce2, lp2 = M.stage_head(x, tgt, mask, params["emb"], params["lnf.w"], params["lnf.b"])
+        np.testing.assert_allclose(float(ce), float(ce2), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(lp2), atol=1e-3)

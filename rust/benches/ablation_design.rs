@@ -1,0 +1,118 @@
+//! Ablations of this implementation's own design choices (DESIGN.md §5):
+//!
+//! 1. **Blocked vs exact GPTQ** — our per-proposal GPTQ restricts Hessian
+//!    compensation to quant-group blocks; measure the quality gap and the
+//!    speed gap on real trained layers.
+//! 2. **σ_r pilot grid** — the rotation random-walk std was re-tuned for
+//!    sandbox-scale step budgets (paper: 1e-5 at 10K steps); regenerate the
+//!    pilot grid that justified 5e-3.
+//! 3. **Prefix-activation cache** — the incremental evaluator's layer-l
+//!    restart vs a full re-run, per layer index.
+//!
+//! Results land in `results/ablation_design.csv`.
+
+use invarexplore::baselines::{gptq, Method};
+use invarexplore::calib::{self, CalibSet};
+use invarexplore::coordinator::{tables, PipelineOpts, SearchRun, Session};
+use invarexplore::quant::{self, QuantScheme};
+use invarexplore::search::Objective;
+use invarexplore::tensor::ops::matmul_nt;
+use invarexplore::tensor::Tensor;
+use invarexplore::transform::TransformKinds;
+use invarexplore::util::bench::step_budget;
+use invarexplore::util::csv::CsvWriter;
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::load_default()?;
+    let mut csv = CsvWriter::create(
+        &tables::results_dir().join("ablation_design.csv"),
+        &["ablation", "setting", "metric", "value"],
+    )?;
+
+    // ---- 1. blocked vs exact GPTQ -----------------------------------------
+    println!("== GPTQ: blocked (group-diagonal) vs exact Hessian ==");
+    let w = session.weights("opt-small")?;
+    let pile = session.corpus("pile")?;
+    let cs = CalibSet::from_corpus(&pile, 16, session.manifest.seq);
+    let stats = calib::capture(&w, &cs);
+    let scheme = QuantScheme::new(1, 64);
+    for (layer, tname) in [(0usize, "down.w"), (1, "up.w")] {
+        let x = if tname == "down.w" { &stats.inputs[layer].down_in } else { &stats.inputs[layer].up_in };
+        let wt = w.layer(layer, tname);
+        let h = calib::hessian(x, gptq::DAMP);
+        let out_err = |wq: &Tensor| {
+            let (m, k, n) = (x.rows, x.cols, wt.rows);
+            let mut y0 = vec![0.0f32; m * n];
+            let mut y1 = vec![0.0f32; m * n];
+            matmul_nt(&x.data, &wt.data, m, k, n, &mut y0);
+            matmul_nt(&x.data, &wq.data, m, k, n, &mut y1);
+            y0.iter().zip(&y1).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>()
+        };
+        let t0 = std::time::Instant::now();
+        let blocked = gptq::gptq_quantize(wt, &h, scheme, false, None);
+        let t_blocked = t0.elapsed();
+        let t0 = std::time::Instant::now();
+        let exact = gptq::gptq_quantize(wt, &h, scheme, true, None);
+        let t_exact = t0.elapsed();
+        let rtn = quant::fake_quant(wt, scheme);
+        let (e_b, e_e, e_r) = (out_err(&blocked), out_err(&exact), out_err(&rtn));
+        println!(
+            "  l{layer}.{tname:7}  output-err  RTN {e_r:9.1}  blocked {e_b:9.1} ({t_blocked:?})  exact {e_e:9.1} ({t_exact:?})"
+        );
+        let tag = format!("l{layer}.{tname}");
+        csv.row(&["gptq_blocked_vs_exact".into(), tag.clone(), "err_rtn".into(), format!("{e_r:.3}")])?;
+        csv.row(&["gptq_blocked_vs_exact".into(), tag.clone(), "err_blocked".into(), format!("{e_b:.3}")])?;
+        csv.row(&["gptq_blocked_vs_exact".into(), tag.clone(), "err_exact".into(), format!("{e_e:.3}")])?;
+        csv.row(&["gptq_blocked_vs_exact".into(), tag.clone(), "t_blocked_ms".into(), format!("{:.2}", t_blocked.as_secs_f64() * 1e3)])?;
+        csv.row(&["gptq_blocked_vs_exact".into(), tag, "t_exact_ms".into(), format!("{:.2}", t_exact.as_secs_f64() * 1e3)])?;
+    }
+
+    // ---- 2. σ_r pilot grid --------------------------------------------------
+    println!("== σ_r pilot grid (rotation-only search, opt-small) ==");
+    let steps = step_budget(120);
+    for sigma_r in [1e-5f64, 1e-3, 5e-3, 2e-2] {
+        let mut opts = PipelineOpts::new("opt-small", Method::Awq, scheme);
+        opts.calib_seqs = 16;
+        opts.kinds = TransformKinds::parse("r")?;
+        let mut run = SearchRun::build(&session, &opts)?;
+        run.cfg.sigma_r = sigma_r;
+        run.cfg.kinds = opts.kinds;
+        run.init()?;
+        let l0 = run.state.best.total(run.state.alpha);
+        run.steps(steps)?;
+        let l1 = run.state.best.total(run.state.alpha);
+        let ppl = run.test_ppl(&session, "wiki", 32)?;
+        println!("  σ_r {sigma_r:7.0e}: loss {l0:.4} -> {l1:.4}, wiki ppl {ppl:8.2}");
+        csv.row(&["sigma_r_pilot".into(), format!("{sigma_r:.0e}"), "wiki_ppl".into(), format!("{ppl:.3}")])?;
+        csv.row(&["sigma_r_pilot".into(), format!("{sigma_r:.0e}"), "loss_delta".into(), format!("{:.5}", l0 - l1)])?;
+    }
+
+    // ---- 3. prefix-cache benefit ---------------------------------------------
+    println!("== prefix-activation cache: proposal cost by mutated layer ==");
+    let mut opts = PipelineOpts::new("opt-base", Method::Awq, scheme);
+    opts.calib_seqs = 32;
+    let mut run = SearchRun::build(&session, &opts)?;
+    run.init()?;
+    let n_layers = run.obj.n_layers();
+    for l in 0..n_layers {
+        let proposal = run.state.transforms[l].propose(
+            &mut run.state.rng,
+            TransformKinds::all(),
+            0.1,
+            1e-2,
+            5e-3,
+        );
+        let t0 = std::time::Instant::now();
+        let reps = 3;
+        for _ in 0..reps {
+            let _ = run.obj.try_layer(l, &proposal)?;
+            run.obj.reject()?;
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        println!("  mutate layer {l}: {ms:7.1} ms/proposal (re-runs layers {l}..{n_layers})");
+        csv.row(&["prefix_cache".into(), format!("layer{l}"), "ms_per_proposal".into(), format!("{ms:.2}")])?;
+    }
+    csv.flush()?;
+    println!("(CSV in results/ablation_design.csv)");
+    Ok(())
+}

@@ -1,0 +1,132 @@
+//! Performance benchmark of the whole stack's hot paths (EXPERIMENTS.md
+//! §Perf): quant codecs, transforms, GPTQ re-quantization, XLA pipeline
+//! stages, incremental vs full evaluation, and end-to-end search-step
+//! throughput per model size and per base method.
+//!
+//! `INVAREXPLORE_BENCH_MS` bounds the per-case measurement budget.
+
+use invarexplore::baselines::Method;
+use invarexplore::calib::CalibSet;
+use invarexplore::coordinator::{PipelineOpts, SearchRun, Session};
+use invarexplore::quant::{self, QuantScheme};
+use invarexplore::runtime::Engine;
+use invarexplore::search::Objective;
+use invarexplore::tensor::Tensor;
+use invarexplore::transform::{LayerTransform, TransformKinds};
+use invarexplore::util::bench::BenchSuite;
+use invarexplore::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::load_default()?;
+    let mut suite = BenchSuite::new("perf_hotpath");
+    let mut rng = Pcg64::new(0);
+
+    // ---- L3 host kernels ---------------------------------------------------
+    println!("== L3 host kernels ==");
+    let scheme = QuantScheme::new(1, 64);
+    let w_down = Tensor::from_vec(320, 1280, (0..320 * 1280).map(|_| rng.normal() as f32).collect());
+    let mut out = Tensor::zeros(320, 1280);
+    suite.bench("fake_quant_into 320x1280 (RTN codec)", || {
+        quant::fake_quant_into(&w_down, scheme, &mut out);
+    });
+    suite.bench("clip-search quant 320x1280 (AWQ codec)", || {
+        std::hint::black_box(quant::clip::fake_quant_clip_search(
+            &w_down,
+            scheme,
+            &quant::clip::AWQ_CLIP_GRID,
+        ));
+    });
+    let t = {
+        let mut t = LayerTransform::identity(1280);
+        t = t.propose(&mut rng, TransformKinds::all(), 0.1, 1e-2, 1e-5);
+        t
+    };
+    let w_up = Tensor::from_vec(1280, 320, (0..320 * 1280).map(|_| rng.normal() as f32).collect());
+    let b_up = Tensor::from_vec(1, 1280, vec![0.0; 1280]);
+    suite.bench("apply PSR transform to FFN tensors (opt-base)", || {
+        std::hint::black_box(invarexplore::transform::apply_to_tensors(&t, &w_up, &b_up, &w_down));
+    });
+
+    // GPTQ blocked requant with transformed hessian (the per-proposal cost)
+    let x = Tensor::from_vec(512, 1280, (0..512 * 1280).map(|_| rng.normal() as f32).collect());
+    let h = invarexplore::calib::hessian(&x, 0.01);
+    suite.bench("GPTQ blocked requant 320x1280 + H-transform", || {
+        std::hint::black_box(invarexplore::baselines::gptq::gptq_quantize(
+            &w_down,
+            &h,
+            scheme,
+            false,
+            Some(&t),
+        ));
+    });
+
+    // ---- runtime stages ------------------------------------------------------
+    println!("== XLA runtime stages (opt-base) ==");
+    let model = "opt-base";
+    let w = session.weights(model)?;
+    let mut engine = Engine::load(&session.manifest, model)?;
+    engine.upload_weights(&w)?;
+    let pile = session.corpus("pile")?;
+    let cs = CalibSet::from_corpus(&pile, 8, session.manifest.seq);
+    let batch = engine.upload_batch(&cs.tokens, &cs.targets, &cs.masks)?;
+
+    suite.bench("upload FFN tensor 320x1280 to device", || {
+        engine.update_tensor("l0.down.w", &w_down).unwrap();
+    });
+    suite.bench("device Pallas fake-quant 320x1280", || {
+        std::hint::black_box(engine.device_fake_quant(&w_down, scheme).unwrap());
+    });
+    let x0 = engine.embed(&batch)?;
+    suite.bench("embed (B=8, T=128)", || {
+        std::hint::black_box(engine.embed(&batch).unwrap());
+    });
+    suite.bench("one decoder layer (B=8, T=128, d=320)", || {
+        std::hint::black_box(engine.run_layer(0, &x0).unwrap());
+    });
+    suite.bench("head: CE + seq logprob", || {
+        std::hint::black_box(engine.run_head(&x0, &batch).unwrap());
+    });
+    engine.update_tensor("l0.down.w", w.get("l0.down.w"))?; // restore
+
+    // ---- incremental vs full evaluation --------------------------------------
+    println!("== evaluator ==");
+    for method in [Method::Rtn, Method::Awq] {
+        let mut opts = PipelineOpts::new(model, method, scheme);
+        opts.calib_seqs = 32;
+        let mut run = SearchRun::build(&session, &opts)?;
+        run.init()?;
+        let n_layers = run.obj.n_layers();
+
+        // full evals at the two extremes of the prefix cache
+        let label_full = format!("{}: proposal at layer 0 (full re-run)", method.name());
+        let label_last = format!("{}: proposal at last layer (prefix cache)", method.name());
+        let mut try_at = |l: usize, label: &str, suite: &mut BenchSuite| {
+            let proposal = run.state.transforms[l].propose(
+                &mut run.state.rng,
+                TransformKinds::all(),
+                0.1,
+                1e-2,
+                1e-5,
+            );
+            suite.bench(label, || {
+                let _ = run.obj.try_layer(l, &proposal).unwrap();
+                run.obj.reject().unwrap();
+            });
+        };
+        try_at(0, &label_full, &mut suite);
+        try_at(n_layers - 1, &label_last, &mut suite);
+
+        // end-to-end search-step throughput
+        let stats = suite.bench(&format!("{}: full search step (random layer)", method.name()), || {
+            run.steps(1).unwrap();
+        });
+        println!(
+            "    -> {:.1} search steps/sec ({})",
+            stats.per_sec(),
+            method.name()
+        );
+    }
+
+    println!("\n{}", suite.report());
+    Ok(())
+}

@@ -1,0 +1,24 @@
+//! Reproduces **Table 2** (transform ablation): AWQ + the largest model,
+//! with permutation / scaling / rotation alone and combined.
+//!
+//! Shape claims: every family alone beats the AWQ baseline; combining all
+//! three is best; scaling adds least on top of AWQ (which already scales).
+
+use invarexplore::coordinator::{tables, Session};
+use invarexplore::quant::QuantScheme;
+use invarexplore::util::bench::step_budget;
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::load_default()?;
+    let out = tables::table2(
+        &session,
+        "opt-base",
+        QuantScheme::new(1, 64),
+        step_budget(250),
+        50,
+        0,
+    )?;
+    println!("{out}");
+    println!("(CSV in results/table2_ablation.csv)");
+    Ok(())
+}

@@ -1,0 +1,17 @@
+//! Reproduces **Table 3** (bits × group sizes): AWQ ± InvarExplore across
+//! quantization settings, with *measured* bits/param from the packed codec.
+//!
+//! Shape claims: more bits ⇒ monotonically better; smaller groups ⇒ better
+//! at slightly more memory; InvarExplore's gain is largest in the hardest
+//! setting and vanishes once the base method saturates near FP.
+
+use invarexplore::coordinator::{tables, Session};
+use invarexplore::util::bench::step_budget;
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::load_default()?;
+    let out = tables::table3(&session, "opt-base", step_budget(200), 50, 0)?;
+    println!("{out}");
+    println!("(CSV in results/table3_bits_groups.csv)");
+    Ok(())
+}

@@ -1,0 +1,24 @@
+//! Reproduces **Table 4** (activation-matching layer count): 0 / 1 / L/2 /
+//! L matched layers, with the measured H₀ memory column.
+//!
+//! Shape claims: more matched layers generally help; 0 layers (CE-only)
+//! still beats the AWQ baseline with zero memory overhead.
+
+use invarexplore::coordinator::{tables, Session};
+use invarexplore::quant::QuantScheme;
+use invarexplore::util::bench::step_budget;
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::load_default()?;
+    let out = tables::table4(
+        &session,
+        "opt-base",
+        QuantScheme::new(1, 64),
+        step_budget(200),
+        50,
+        0,
+    )?;
+    println!("{out}");
+    println!("(CSV in results/table4_act_matching.csv)");
+    Ok(())
+}

@@ -1,0 +1,18 @@
+//! Reproduces **Table 5** (appendix): per-task reasoning accuracy for each
+//! of the six tasks, FP32 vs AWQ vs +InvarExplore across model sizes.
+//!
+//! Shape claim: InvarExplore wins on most (task, model) cells (paper: 58
+//! wins / 11 losses / 3 ties).
+
+use invarexplore::coordinator::{tables, Session};
+use invarexplore::quant::QuantScheme;
+use invarexplore::util::bench::step_budget;
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::load_default()?;
+    let models: Vec<String> = session.manifest.model_names().iter().map(|s| s.to_string()).collect();
+    let out = tables::table5(&session, &models, QuantScheme::new(1, 64), step_budget(200), 60, 0)?;
+    println!("{out}");
+    println!("(CSV in results/table5_reasoning.csv)");
+    Ok(())
+}

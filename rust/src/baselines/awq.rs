@@ -1,0 +1,259 @@
+//! AWQ (activation-aware weight quantization, Lin et al. 2024b).
+//!
+//! Mechanism reproduced from scratch:
+//!
+//! 1. **Per-input-channel scaling** `s_j = a_j^α / w_j^(1-α)` (activation
+//!    magnitude vs weight magnitude), normalized to geometric mean 1, with
+//!    the exponent α grid-searched per linear by reconstruction MSE of the
+//!    layer *output* on a calibration subsample.
+//! 2. The chosen scales are **folded invariantly** into the model — the
+//!    producer of each input channel absorbs `1/s`:
+//!    * q/k/v inputs (post-LN1)  → LN1 affine params;
+//!    * o input (attention mix)  → v-projection output rows (channel-exact
+//!      because attention mixes over time, not channels);
+//!    * up input (post-LN2)      → LN2 affine params;
+//!    * down input (ReLU(up·x))  → up-projection rows (ReLU commutes with
+//!      positive scales — the same identity as the paper's Eqn. 13).
+//! 3. **Per-group weight clipping** at quantization time
+//!    ([`crate::quant::clip`], AWQ grid).
+//!
+//! The folded model is FP-invariant, so it is a valid θ₀ for InvarExplore.
+
+use super::{Method, Prepared, Quantizer};
+use crate::calib::{channel_mean_abs, CalibStats};
+use crate::model::Weights;
+use crate::quant::{clip, QuantScheme};
+use crate::tensor::ops::matmul_nt;
+use crate::tensor::Tensor;
+
+/// α grid (AWQ searches 20 points in [0,1]; 9 is enough at our scale).
+const ALPHA_GRID: [f32; 9] = [0.0, 0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0];
+
+/// Rows of calibration activations used for the α reconstruction search.
+const SEARCH_ROWS: usize = 128;
+
+pub fn prepare(scheme: QuantScheme, weights: &Weights, stats: &CalibStats) -> Prepared {
+    let mut fp = weights.clone();
+    let cfg = fp.config.clone();
+
+    for l in 0..cfg.n_layers {
+        let li = &stats.inputs[l];
+
+        // q/k/v share the post-LN1 input; search α on their concatenated
+        // reconstruction and fold one scale vector into LN1.
+        let qkv_acts = channel_mean_abs(&li.qkv_in);
+        let s_qkv = {
+            let wq = fp.layer(l, "q.w").clone();
+            best_scales(&qkv_acts, &[&wq], &li.qkv_in, scheme)
+        };
+        for nm in ["q.w", "k.w", "v.w"] {
+            scale_in_cols(fp.layer_mut(l, nm), &s_qkv);
+        }
+        fold_inverse_into_ln(&mut fp, l, "ln1", &s_qkv);
+
+        // o projection: fold 1/s into v output rows.
+        let o_acts = channel_mean_abs(&li.o_in);
+        let s_o = {
+            let wo = fp.layer(l, "o.w").clone();
+            best_scales(&o_acts, &[&wo], &li.o_in, scheme)
+        };
+        scale_in_cols(fp.layer_mut(l, "o.w"), &s_o);
+        scale_out_rows(fp.layer_mut(l, "v.w"), &s_o, true);
+        scale_bias(fp.layer_mut(l, "v.b"), &s_o, true);
+
+        // up projection: fold into LN2.
+        let up_acts = channel_mean_abs(&li.up_in);
+        let s_up = {
+            let wu = fp.layer(l, "up.w").clone();
+            best_scales(&up_acts, &[&wu], &li.up_in, scheme)
+        };
+        scale_in_cols(fp.layer_mut(l, "up.w"), &s_up);
+        fold_inverse_into_ln(&mut fp, l, "ln2", &s_up);
+
+        // down projection: fold into up rows (ReLU-invariant).
+        let down_acts = channel_mean_abs(&li.down_in);
+        let s_down = {
+            let wd = fp.layer(l, "down.w").clone();
+            best_scales(&down_acts, &[&wd], &li.down_in, scheme)
+        };
+        scale_in_cols(fp.layer_mut(l, "down.w"), &s_down);
+        scale_out_rows(fp.layer_mut(l, "up.w"), &s_down, true);
+        scale_bias(fp.layer_mut(l, "up.b"), &s_down, true);
+    }
+
+    Prepared {
+        method: Method::Awq,
+        scheme,
+        fp,
+        quantizer: Quantizer::Clipped(&clip::AWQ_CLIP_GRID),
+    }
+}
+
+/// Grid-search α; returns the winning per-channel scale vector.
+fn best_scales(acts: &[f32], ws: &[&Tensor], x: &Tensor, scheme: QuantScheme) -> Vec<f32> {
+    let xsub = subsample(x, SEARCH_ROWS);
+    let mut best = vec![1.0f32; acts.len()];
+    let mut best_err = f64::INFINITY;
+    for &alpha in &ALPHA_GRID {
+        let s = scales_for_alpha(acts, ws, alpha);
+        let mut err = 0.0;
+        for w in ws {
+            err += reconstruction_error(w, &s, &xsub, scheme);
+        }
+        if err < best_err {
+            best_err = err;
+            best = s;
+        }
+    }
+    best
+}
+
+/// `s_j = a_j^α / w_j^(1-α)`, geometric-mean-normalized, clamped.
+fn scales_for_alpha(acts: &[f32], ws: &[&Tensor], alpha: f32) -> Vec<f32> {
+    let n = acts.len();
+    // per-channel weight magnitude: max |W[:, j]| over all consumers
+    let mut wmag = vec![1e-8f32; n];
+    for w in ws {
+        for r in 0..w.rows {
+            for (j, &v) in w.row(r).iter().enumerate() {
+                wmag[j] = wmag[j].max(v.abs());
+            }
+        }
+    }
+    let mut s: Vec<f32> = acts
+        .iter()
+        .zip(&wmag)
+        .map(|(&a, &m)| (a.max(1e-6)).powf(alpha) / m.powf(1.0 - alpha))
+        .collect();
+    // normalize to geometric mean 1 (keeps the fold well-conditioned)
+    let log_mean: f32 = s.iter().map(|v| v.ln()).sum::<f32>() / n as f32;
+    let norm = (-log_mean).exp();
+    for v in &mut s {
+        *v = (*v * norm).clamp(0.1, 10.0);
+    }
+    s
+}
+
+/// `‖X·Wᵀ − (X/s)·Q(W·diag(s))ᵀ‖²` on the subsample.
+fn reconstruction_error(w: &Tensor, s: &[f32], x: &Tensor, scheme: QuantScheme) -> f64 {
+    let mut ws = w.clone();
+    scale_in_cols(&mut ws, s);
+    let qws = clip::fake_quant_clip_search(&ws, scheme, &clip::AWQ_CLIP_GRID);
+    // fold the x-side back: effective weight = Q(W·S)·S⁻¹
+    let mut eff = qws;
+    let inv: Vec<f32> = s.iter().map(|v| 1.0 / v).collect();
+    scale_in_cols(&mut eff, &inv);
+
+    let (m, k, n) = (x.rows, x.cols, w.rows);
+    let mut y0 = vec![0.0f32; m * n];
+    let mut y1 = vec![0.0f32; m * n];
+    matmul_nt(&x.data, &w.data, m, k, n, &mut y0);
+    matmul_nt(&x.data, &eff.data, m, k, n, &mut y1);
+    y0.iter()
+        .zip(&y1)
+        .map(|(a, b)| {
+            let d = (a - b) as f64;
+            d * d
+        })
+        .sum()
+}
+
+fn subsample(x: &Tensor, rows: usize) -> Tensor {
+    if x.rows <= rows {
+        return x.clone();
+    }
+    let stride = x.rows / rows;
+    let idx: Vec<usize> = (0..rows).map(|i| i * stride).collect();
+    x.gather_rows(&idx)
+}
+
+/// Multiply input-channel columns of a weight: `W[:, j] *= s_j`.
+pub(crate) fn scale_in_cols(w: &mut Tensor, s: &[f32]) {
+    assert_eq!(w.cols, s.len());
+    for r in 0..w.rows {
+        for (v, &sc) in w.row_mut(r).iter_mut().zip(s) {
+            *v *= sc;
+        }
+    }
+}
+
+/// Multiply output rows of a weight by `s` (or `1/s` when `inverse`).
+pub(crate) fn scale_out_rows(w: &mut Tensor, s: &[f32], inverse: bool) {
+    assert_eq!(w.rows, s.len());
+    for (r, &sc) in s.iter().enumerate() {
+        let f = if inverse { 1.0 / sc } else { sc };
+        w.scale_row(r, f);
+    }
+}
+
+pub(crate) fn scale_bias(b: &mut Tensor, s: &[f32], inverse: bool) {
+    assert_eq!(b.numel(), s.len());
+    for (v, &sc) in b.data.iter_mut().zip(s) {
+        *v *= if inverse { 1.0 / sc } else { sc };
+    }
+}
+
+/// Fold `1/s` into a LayerNorm's affine output: `ln.w /= s`, `ln.b /= s`.
+fn fold_inverse_into_ln(fp: &mut Weights, l: usize, ln: &str, s: &[f32]) {
+    for suffix in ["w", "b"] {
+        let t = fp.layer_mut(l, &format!("{ln}.{suffix}"));
+        for (v, &sc) in t.data.iter_mut().zip(s) {
+            *v /= sc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::tests::test_setup;
+    use crate::model::native::{forward, Capture};
+
+    #[test]
+    fn awq_fold_is_fp_invariant() {
+        let (w, calib) = test_setup();
+        let stats = crate::calib::capture(&w, &calib);
+        let p = prepare(QuantScheme::new(2, 32), &w, &stats);
+        let out0 = forward(&w, &calib.tokens, &calib.targets, &calib.masks, Capture::default());
+        let out1 = forward(&p.fp, &calib.tokens, &calib.targets, &calib.masks, Capture::default());
+        let drift = (out0.ce - out1.ce).abs() / out0.ce;
+        assert!(drift < 1e-4, "AWQ fold changed FP model: {} vs {}", out0.ce, out1.ce);
+    }
+
+    #[test]
+    fn awq_beats_rtn_on_calibration_ce() {
+        let (w, calib) = test_setup();
+        let stats = crate::calib::capture(&w, &calib);
+        let scheme = QuantScheme::new(2, 32);
+        let rtn = crate::baselines::rtn::prepare(scheme, &w);
+        let awq = prepare(scheme, &w, &stats);
+        let q_rtn = rtn.quantize_model(&rtn.fp, None);
+        let q_awq = awq.quantize_model(&awq.fp, None);
+        let ce_rtn = forward(&q_rtn, &calib.tokens, &calib.targets, &calib.masks, Capture::default()).ce;
+        let ce_awq = forward(&q_awq, &calib.tokens, &calib.targets, &calib.masks, Capture::default()).ce;
+        // random tiny models are noisy; require "not meaningfully worse"
+        assert!(
+            ce_awq <= ce_rtn * 1.05,
+            "AWQ {ce_awq} should be <= RTN {ce_rtn} (within 5%)"
+        );
+    }
+
+    #[test]
+    fn scales_normalized_and_clamped() {
+        let acts = vec![10.0, 0.001, 1.0, 5.0];
+        let w = Tensor::from_vec(2, 4, vec![0.1, 2.0, 0.5, 0.05, 0.2, 1.0, 0.3, 0.1]);
+        let s = scales_for_alpha(&acts, &[&w], 0.5);
+        assert!(s.iter().all(|&v| (0.1..=10.0).contains(&v)));
+        assert_eq!(s.len(), 4);
+    }
+
+    #[test]
+    fn alpha_zero_ignores_activations() {
+        let w = Tensor::from_vec(1, 4, vec![1.0, 1.0, 1.0, 1.0]);
+        let s_a = scales_for_alpha(&[100.0, 1.0, 1.0, 1.0], &[&w], 0.0);
+        let s_b = scales_for_alpha(&[1.0, 1.0, 1.0, 1.0], &[&w], 0.0);
+        for (a, b) in s_a.iter().zip(&s_b) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! Quantization baselines the paper composes with (Table 1):
+//!
+//! * **RTN** — plain round-to-nearest group quantization;
+//! * **GPTQ** — sequential quantization with Hessian-based error
+//!   compensation (Frantar et al., 2023), implemented from scratch in
+//!   [`gptq`];
+//! * **AWQ** — activation-aware weight scaling + clipping (Lin et al.,
+//!   2024b) in [`awq`];
+//! * **OmniQuant-lite** — learned equivalent scaling + learned clipping
+//!   (Shao et al., 2024), with the gradient updates replaced by coordinate
+//!   descent / grid search (documented substitution, DESIGN.md §1) in
+//!   [`omniquant`].
+//!
+//! Each method "prepares" a model: it may rewrite the FP weights through an
+//! *invariance-preserving* preprocessing (AWQ/OmniQuant fold per-channel
+//! scales into adjacent ops) and it defines the *quantizer semantics* used
+//! both for the full-model quantization and for the per-proposal
+//! re-quantization inside the InvarExplore search loop.
+
+pub mod awq;
+pub mod gptq;
+pub mod omniquant;
+pub mod rtn;
+
+use std::collections::HashMap;
+
+use crate::calib::{CalibSet, CalibStats};
+use crate::model::Weights;
+use crate::quant::{self, clip, QuantScheme};
+use crate::tensor::Tensor;
+use crate::transform::LayerTransform;
+
+/// Baseline method selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    Rtn,
+    Gptq,
+    Awq,
+    OmniQuant,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> crate::Result<Method> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "rtn" => Method::Rtn,
+            "gptq" => Method::Gptq,
+            "awq" => Method::Awq,
+            "omniquant" | "omni" => Method::OmniQuant,
+            _ => anyhow::bail!("unknown method {s:?} (rtn|gptq|awq|omniquant)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Rtn => "RTN",
+            Method::Gptq => "GPTQ",
+            Method::Awq => "AWQ",
+            Method::OmniQuant => "OmniQuant",
+        }
+    }
+
+    pub fn all() -> [Method; 4] {
+        [Method::Rtn, Method::Gptq, Method::Awq, Method::OmniQuant]
+    }
+}
+
+/// Quantizer semantics attached to a prepared model.
+pub enum Quantizer {
+    /// Plain RTN fake-quant.
+    Plain,
+    /// RTN with per-group clip-ratio search over a grid.
+    Clipped(&'static [f32]),
+    /// GPTQ: per-linear damped Hessians; blocked (group-diagonal)
+    /// compensation (see [`gptq`] for the exact/blocked trade-off).
+    Gptq {
+        hessians: HashMap<String, Vec<f64>>,
+        exact: bool,
+    },
+}
+
+/// A model prepared for quantization by one method.
+pub struct Prepared {
+    pub method: Method,
+    pub scheme: QuantScheme,
+    /// Preprocessed FP weights — the θ₀ the InvarExplore search transforms.
+    pub fp: Weights,
+    pub quantizer: Quantizer,
+}
+
+impl Prepared {
+    /// Quantize (fake-quant) one linear weight under this method's
+    /// semantics.  `name` is the canonical parameter name (`l0.down.w`);
+    /// `transform` is the currently-applied FFN transform of that layer,
+    /// needed only by GPTQ to transform the stored Hessian of `down.w`.
+    pub fn quantize_tensor(
+        &self,
+        name: &str,
+        w: &Tensor,
+        transform: Option<&LayerTransform>,
+    ) -> Tensor {
+        match &self.quantizer {
+            Quantizer::Plain => quant::fake_quant(w, self.scheme),
+            Quantizer::Clipped(grid) => clip::fake_quant_clip_search(w, self.scheme, grid),
+            Quantizer::Gptq { hessians, exact } => {
+                let h = hessians
+                    .get(name)
+                    .unwrap_or_else(|| panic!("GPTQ: no hessian for {name:?}"));
+                let is_down = name.ends_with("down.w");
+                let t = if is_down { transform } else { None };
+                gptq::gptq_quantize(w, h, self.scheme, *exact, t)
+            }
+        }
+    }
+
+    /// Fully quantize a weight set (which may already carry transforms),
+    /// producing the dequantized model fed to the evaluators.
+    pub fn quantize_model(
+        &self,
+        weights: &Weights,
+        transforms: Option<&[LayerTransform]>,
+    ) -> Weights {
+        let mut out = weights.clone();
+        for name in weights.quant_names() {
+            let layer: usize = name[1..name.find('.').unwrap()].parse().unwrap();
+            let t = transforms.map(|ts| &ts[layer]);
+            let q = self.quantize_tensor(&name, weights.get(&name), t);
+            out.set(&name, q);
+        }
+        out
+    }
+
+    /// Packed (deployment) form of every quantizable tensor + total bytes.
+    ///
+    /// Packing always uses the plain codec on the *method-quantized* values
+    /// (codes are what they are; scales/zeros re-derived), which is a
+    /// faithful memory model because all methods share the group layout.
+    pub fn pack_model(&self, weights: &Weights) -> (Vec<(String, quant::PackedTensor)>, usize) {
+        let mut out = Vec::new();
+        let mut bytes = 0;
+        for name in weights.quant_names() {
+            let q = quant::quantize(weights.get(&name), self.scheme);
+            let p = quant::PackedTensor::pack(&q);
+            bytes += p.nbytes();
+            out.push((name, p));
+        }
+        (out, bytes)
+    }
+}
+
+/// Prepare a model for quantization under `method`.
+///
+/// `calib` is required by GPTQ/AWQ/OmniQuant (activation statistics); RTN
+/// ignores it.  `stats` may be passed in to share one native-forward capture
+/// across several methods.
+pub fn prepare(
+    method: Method,
+    scheme: QuantScheme,
+    weights: &Weights,
+    calib: &CalibSet,
+    stats: Option<&CalibStats>,
+) -> crate::Result<Prepared> {
+    let owned_stats;
+    let stats = match (method, stats) {
+        (Method::Rtn, _) => None,
+        (_, Some(s)) => Some(s),
+        (_, None) => {
+            owned_stats = crate::calib::capture(weights, calib);
+            Some(&owned_stats)
+        }
+    };
+    match method {
+        Method::Rtn => Ok(rtn::prepare(scheme, weights)),
+        Method::Awq => Ok(awq::prepare(scheme, weights, stats.unwrap())),
+        Method::OmniQuant => Ok(omniquant::prepare(scheme, weights, stats.unwrap())),
+        Method::Gptq => Ok(gptq::prepare(scheme, weights, stats.unwrap())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::tokens::TokenCorpus;
+    use crate::model::OptConfig;
+    use crate::util::rng::Pcg64;
+
+    pub(crate) fn test_setup() -> (Weights, CalibSet) {
+        let cfg = OptConfig::test_config();
+        let w = Weights::random(cfg.clone(), 42);
+        let mut rng = Pcg64::new(7);
+        let corpus = TokenCorpus {
+            vocab: cfg.vocab,
+            tokens: (0..700).map(|_| rng.below(cfg.vocab) as u32).collect(),
+        };
+        (w, CalibSet::from_corpus(&corpus, 4, 16))
+    }
+
+    #[test]
+    fn method_parse() {
+        assert_eq!(Method::parse("awq").unwrap(), Method::Awq);
+        assert_eq!(Method::parse("OMNI").unwrap(), Method::OmniQuant);
+        assert!(Method::parse("xyz").is_err());
+    }
+
+    #[test]
+    fn rtn_prepare_keeps_weights() {
+        let (w, calib) = test_setup();
+        let p = prepare(Method::Rtn, QuantScheme::new(2, 32), &w, &calib, None).unwrap();
+        assert_eq!(p.fp.get("l0.up.w"), w.get("l0.up.w"));
+        let q = p.quantize_model(&p.fp, None);
+        // quantized linears differ; non-linears untouched
+        assert_ne!(q.get("l0.up.w"), p.fp.get("l0.up.w"));
+        assert_eq!(q.get("emb"), p.fp.get("emb"));
+        assert_eq!(q.get("l0.ln1.w"), p.fp.get("l0.ln1.w"));
+    }
+
+    #[test]
+    fn all_methods_quantize_all_linears() {
+        let (w, calib) = test_setup();
+        let stats = crate::calib::capture(&w, &calib);
+        for m in Method::all() {
+            let p = prepare(m, QuantScheme::new(2, 32), &w, &calib, Some(&stats)).unwrap();
+            let q = p.quantize_model(&p.fp, None);
+            for name in w.quant_names() {
+                assert_ne!(
+                    q.get(&name),
+                    p.fp.get(&name),
+                    "{} left {name} unquantized",
+                    m.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pack_model_reports_compression() {
+        let (w, calib) = test_setup();
+        let p = prepare(Method::Rtn, QuantScheme::new(2, 32), &w, &calib, None).unwrap();
+        let (packed, bytes) = p.pack_model(&p.fp);
+        assert_eq!(packed.len(), w.quant_names().len());
+        let fp_bytes: usize = w.quant_names().iter().map(|n| w.get(n).numel() * 2).sum();
+        assert!(bytes < fp_bytes / 4, "packed {bytes} vs fp16 {fp_bytes}");
+    }
+}

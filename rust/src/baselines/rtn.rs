@@ -1,0 +1,33 @@
+//! RTN (round-to-nearest): the no-frills baseline — plain groupwise
+//! asymmetric quantization of every linear weight, no calibration.
+
+use super::{Prepared, Quantizer};
+use crate::model::Weights;
+use crate::quant::QuantScheme;
+
+pub fn prepare(scheme: QuantScheme, weights: &Weights) -> Prepared {
+    Prepared {
+        method: super::Method::Rtn,
+        scheme,
+        fp: weights.clone(),
+        quantizer: Quantizer::Plain,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::OptConfig;
+    use crate::quant;
+
+    #[test]
+    fn rtn_matches_codec_exactly() {
+        let w = Weights::random(OptConfig::test_config(), 5);
+        let scheme = QuantScheme::new(2, 32);
+        let p = prepare(scheme, &w);
+        let name = "l1.down.w";
+        let q = p.quantize_tensor(name, w.get(name), None);
+        let direct = quant::fake_quant(w.get(name), scheme);
+        assert_eq!(q, direct);
+    }
+}

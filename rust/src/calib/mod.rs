@@ -1,0 +1,201 @@
+//! Calibration infrastructure: batch assembly from the Pile-like corpus,
+//! per-linear activation capture (via the native forward) and Hessian
+//! construction for GPTQ.
+
+use crate::io::tokens::TokenCorpus;
+use crate::model::native::{self, Capture, LayerInputs};
+use crate::model::Weights;
+use crate::tensor::linalg;
+use crate::tensor::Tensor;
+
+/// A calibration set: `n_seqs` sequences of `seqlen` tokens + shifted
+/// targets (paper: 32 × 512-token Pile sequences; scaled here).
+#[derive(Debug, Clone)]
+pub struct CalibSet {
+    pub tokens: Vec<Vec<i32>>,
+    pub targets: Vec<Vec<i32>>,
+    pub masks: Vec<Vec<f32>>,
+}
+
+impl CalibSet {
+    pub fn from_corpus(corpus: &TokenCorpus, n_seqs: usize, seqlen: usize) -> CalibSet {
+        let seqs = corpus.sequences(n_seqs, seqlen);
+        assert!(!seqs.is_empty(), "calibration corpus too small");
+        let masks = vec![vec![1.0f32; seqlen]; seqs.len()];
+        let (tokens, targets) = seqs.into_iter().unzip();
+        CalibSet { tokens, targets, masks }
+    }
+
+    pub fn n_seqs(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn seqlen(&self) -> usize {
+        self.tokens.first().map_or(0, |s| s.len())
+    }
+
+    pub fn n_tokens(&self) -> usize {
+        self.n_seqs() * self.seqlen()
+    }
+
+    /// Split into runtime-batch-sized chunks (padding the last chunk by
+    /// repeating its final sequence so every chunk has exactly `batch` rows;
+    /// padded rows get zero masks).
+    pub fn chunks(&self, batch: usize) -> Vec<CalibSet> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.n_seqs() {
+            let end = (i + batch).min(self.n_seqs());
+            let mut tokens: Vec<Vec<i32>> = self.tokens[i..end].to_vec();
+            let mut targets: Vec<Vec<i32>> = self.targets[i..end].to_vec();
+            let mut masks: Vec<Vec<f32>> = self.masks[i..end].to_vec();
+            while tokens.len() < batch {
+                tokens.push(tokens.last().unwrap().clone());
+                targets.push(targets.last().unwrap().clone());
+                masks.push(vec![0.0; self.seqlen()]);
+            }
+            out.push(CalibSet { tokens, targets, masks });
+            i = end;
+        }
+        out
+    }
+}
+
+/// Captured calibration statistics for every linear layer of the model.
+#[derive(Debug)]
+pub struct CalibStats {
+    /// Per layer: inputs to q/k/v, o, up, down projections `[N, in]`.
+    pub inputs: Vec<LayerInputs>,
+    /// FP hidden stack per layer `[N, d]` (H₀ of Eqn. 23).
+    pub hidden: Vec<Tensor>,
+    /// FP cross-entropy on the calibration set.
+    pub ce_fp: f64,
+}
+
+/// Run the FP model natively over the calibration set, capturing inputs.
+pub fn capture(w: &Weights, calib: &CalibSet) -> CalibStats {
+    let out = native::forward(
+        w,
+        &calib.tokens,
+        &calib.targets,
+        &calib.masks,
+        Capture { hidden: true, linear_inputs: true, last_logits: false },
+    );
+    CalibStats {
+        inputs: out.linear_inputs,
+        hidden: out.hidden,
+        ce_fp: out.ce,
+    }
+}
+
+/// Per-channel mean |activation| — AWQ's importance signal (`s_x` in the
+/// paper's Eqn.: scale ∝ act^α).
+pub fn channel_mean_abs(x: &Tensor) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.cols];
+    for r in 0..x.rows {
+        for (c, v) in x.row(r).iter().enumerate() {
+            out[c] += v.abs();
+        }
+    }
+    let n = x.rows.max(1) as f32;
+    for v in &mut out {
+        *v /= n;
+    }
+    out
+}
+
+/// Damped GPTQ Hessian: `H = 2·XᵀX + λ·mean(diag)·I`.
+pub fn hessian(x: &Tensor, damp: f64) -> Vec<f64> {
+    let n = x.cols;
+    let mut h = vec![0.0f64; n * n];
+    linalg::sym_accumulate_xtx(&mut h, &x.data, x.rows, n, 2.0);
+    linalg::symmetrize_upper(&mut h, n);
+    let mean_diag: f64 = (0..n).map(|i| h[i * n + i]).sum::<f64>() / n as f64;
+    let lambda = damp * mean_diag.max(1e-12);
+    for i in 0..n {
+        h[i * n + i] += lambda;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::OptConfig;
+    use crate::util::rng::Pcg64;
+
+    fn corpus(n: usize, vocab: usize) -> TokenCorpus {
+        let mut rng = Pcg64::new(0);
+        TokenCorpus {
+            vocab,
+            tokens: (0..n).map(|_| rng.below(vocab) as u32).collect(),
+        }
+    }
+
+    #[test]
+    fn calibset_assembly() {
+        let c = corpus(1000, 64);
+        let cs = CalibSet::from_corpus(&c, 4, 32);
+        assert_eq!(cs.n_seqs(), 4);
+        assert_eq!(cs.seqlen(), 32);
+        assert_eq!(cs.n_tokens(), 128);
+        // shifted targets
+        assert_eq!(cs.targets[0][0], cs.tokens[0][1]);
+    }
+
+    #[test]
+    fn chunks_pad_with_zero_mask() {
+        let c = corpus(2000, 64);
+        let cs = CalibSet::from_corpus(&c, 5, 16);
+        let chunks = cs.chunks(4);
+        assert_eq!(chunks.len(), 2);
+        assert_eq!(chunks[1].tokens.len(), 4);
+        // padded rows have zero masks
+        assert!(chunks[1].masks[1].iter().all(|&m| m == 0.0));
+        assert!(chunks[1].masks[0].iter().all(|&m| m == 1.0));
+    }
+
+    #[test]
+    fn capture_shapes() {
+        let cfg = OptConfig::test_config();
+        let w = Weights::random(cfg.clone(), 1);
+        let c = corpus(600, cfg.vocab);
+        let cs = CalibSet::from_corpus(&c, 3, 16);
+        let stats = capture(&w, &cs);
+        assert_eq!(stats.inputs.len(), cfg.n_layers);
+        assert_eq!(stats.hidden.len(), cfg.n_layers);
+        assert_eq!(stats.inputs[0].qkv_in.shape(), (48, cfg.d_model));
+        assert_eq!(stats.inputs[0].down_in.shape(), (48, cfg.d_ffn));
+        assert!(stats.ce_fp > 0.0);
+    }
+
+    #[test]
+    fn channel_mean_abs_basic() {
+        let x = Tensor::from_vec(2, 3, vec![1.0, -2.0, 0.0, 3.0, -4.0, 0.0]);
+        assert_eq!(channel_mean_abs(&x), vec![2.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn hessian_is_spd() {
+        let mut rng = Pcg64::new(2);
+        let x = Tensor::from_vec(32, 8, (0..256).map(|_| rng.normal() as f32).collect());
+        let h = hessian(&x, 0.01);
+        // SPD => cholesky succeeds
+        assert!(crate::tensor::linalg::cholesky(&h, 8).is_ok());
+        // symmetric
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((h[i * 8 + j] - h[j * 8 + i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn hessian_damping_handles_rank_deficiency() {
+        // fewer samples than dims -> XᵀX singular; damping must fix it
+        let mut rng = Pcg64::new(3);
+        let x = Tensor::from_vec(2, 8, (0..16).map(|_| rng.normal() as f32).collect());
+        let h = hessian(&x, 0.01);
+        assert!(crate::tensor::linalg::cholesky(&h, 8).is_ok());
+    }
+}

@@ -1,0 +1,363 @@
+//! CLI subcommands of the `invarexplore` binary.
+
+use crate::baselines::Method;
+use crate::coordinator::{pipeline, tables, PipelineOpts, Session};
+use crate::quant::QuantScheme;
+use crate::transform::TransformKinds;
+use crate::util::cli::{parse_args, usage, ArgSpec, Args};
+
+pub const USAGE: &str = "\
+invarexplore — InvarExplore: discrete search over model invariance for
+ultra-low-bit quantization (paper reproduction).
+
+usage: invarexplore <command> [options]
+
+commands:
+  info             show artifacts manifest summary
+  eval-ppl         perplexity of a (quantized) model on a corpus
+  eval-reasoning   few-shot reasoning accuracy
+  quantize         quantize with a baseline method, report quality + memory
+  search           run the InvarExplore search on top of a baseline
+  apply            materialize searched transforms into an .iwt weight file
+  table1..table5   regenerate the paper's tables (also: cargo bench)
+  figure1          regenerate the paper's optimization-curve figure
+
+common options: --model, --method, --scheme (e.g. 2x64), --steps, --seed
+run `invarexplore <command> --help` for details.
+";
+
+fn common_spec() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec { name: "model", help: "model size (opt-tiny|opt-small|opt-base)", default: Some("opt-small"), is_flag: false },
+        ArgSpec { name: "method", help: "baseline method (rtn|gptq|awq|omniquant)", default: Some("awq"), is_flag: false },
+        ArgSpec { name: "scheme", help: "quantization scheme bits x group, e.g. 1x64", default: Some("1x64"), is_flag: false },
+        ArgSpec { name: "steps", help: "search steps", default: Some("200"), is_flag: false },
+        ArgSpec { name: "kinds", help: "transform kinds subset of psr", default: Some("psr"), is_flag: false },
+        ArgSpec { name: "match-layers", help: "activation-matching layer count", default: Some("2"), is_flag: false },
+        ArgSpec { name: "calib-seqs", help: "calibration sequences", default: Some("32"), is_flag: false },
+        ArgSpec { name: "eval-seqs", help: "ppl eval sequences", default: Some("64"), is_flag: false },
+        ArgSpec { name: "reasoning-n", help: "reasoning examples per task (0=skip)", default: Some("0"), is_flag: false },
+        ArgSpec { name: "shots", help: "few-shot demonstrations", default: Some("5"), is_flag: false },
+        ArgSpec { name: "seed", help: "RNG seed", default: Some("0"), is_flag: false },
+        ArgSpec { name: "corpus", help: "eval corpus (wiki|c4|pile)", default: Some("wiki"), is_flag: false },
+        ArgSpec { name: "out", help: "output path (state json / weights iwt)", default: None, is_flag: false },
+        ArgSpec { name: "csv", help: "telemetry CSV output path", default: None, is_flag: false },
+        ArgSpec { name: "resume", help: "resume search from a state.json checkpoint", default: None, is_flag: false },
+        ArgSpec { name: "help", help: "show options", default: None, is_flag: true },
+    ]
+}
+
+fn opts_from_args(a: &Args) -> crate::Result<PipelineOpts> {
+    let method = Method::parse(a.get_or("method", "awq"))?;
+    let scheme = QuantScheme::parse(a.get_or("scheme", "1x64"))?;
+    let mut opts = PipelineOpts::new(a.get_or("model", "opt-small"), method, scheme);
+    opts.steps = a.parse_or("steps", 200usize)?;
+    opts.kinds = TransformKinds::parse(a.get_or("kinds", "psr"))?;
+    opts.match_layers = a.parse_or("match-layers", 2usize)?;
+    opts.calib_seqs = a.parse_or("calib-seqs", 32usize)?;
+    opts.eval_seqs = a.parse_or("eval-seqs", 64usize)?;
+    opts.reasoning_n = a.parse_or("reasoning-n", 0usize)?;
+    opts.shots = a.parse_or("shots", 5usize)?;
+    opts.seed = a.parse_or("seed", 0u64)?;
+    Ok(opts)
+}
+
+pub fn main_with_args(argv: Vec<String>) -> crate::Result<i32> {
+    crate::util::logging::init();
+    let Some(cmd) = argv.first().cloned() else {
+        print!("{USAGE}");
+        return Ok(2);
+    };
+    let spec = common_spec();
+    let a = parse_args(&spec, &argv[1..])?;
+    if a.flag("help") {
+        print!("{USAGE}\n{}", usage(&spec));
+        return Ok(0);
+    }
+    match cmd.as_str() {
+        "info" => cmd_info(),
+        "eval-ppl" => cmd_eval_ppl(&a),
+        "eval-reasoning" => cmd_eval_reasoning(&a),
+        "quantize" => cmd_quantize(&a),
+        "search" => cmd_search(&a),
+        "apply" => cmd_apply(&a),
+        "table1" => cmd_table(&a, 1),
+        "table2" => cmd_table(&a, 2),
+        "table3" => cmd_table(&a, 3),
+        "table4" => cmd_table(&a, 4),
+        "table5" => cmd_table(&a, 5),
+        "figure1" => cmd_figure1(&a),
+        _ => {
+            eprintln!("unknown command {cmd:?}\n");
+            print!("{USAGE}");
+            Ok(2)
+        }
+    }
+}
+
+fn cmd_info() -> crate::Result<i32> {
+    let session = Session::load_default()?;
+    let m = &session.manifest;
+    println!("artifacts root : {}", m.root.display());
+    println!("batch geometry : B={} T={}", m.batch, m.seq);
+    println!("quant schemes  : bits {:?} × groups {:?}", m.quant_bits, m.quant_groups);
+    println!("vocab          : {}", m.data.vocab);
+    for (name, info) in &m.models {
+        let c = &info.config;
+        println!(
+            "model {name:10} d={} L={} heads={} ffn={} params={:.2}M programs={}",
+            c.d_model,
+            c.n_layers,
+            c.n_heads,
+            c.d_ffn,
+            c.num_params() as f64 / 1e6,
+            info.programs.len()
+        );
+    }
+    println!("corpora        : {:?}", m.data.corpora.iter().map(|(n, _)| n).collect::<Vec<_>>());
+    println!("tasks          : {:?}", m.data.task_names());
+    Ok(0)
+}
+
+fn cmd_eval_ppl(a: &Args) -> crate::Result<i32> {
+    let session = Session::load_default()?;
+    let opts = opts_from_args(a)?;
+    let corpus = a.get_or("corpus", "wiki");
+    let fp = pipeline::eval_fp(&session, &opts.model, &opts)?;
+    println!("FP32 {}: wiki {:.3}  c4 {:.3}", opts.model, fp.ppl_wiki, fp.ppl_c4);
+    let mut o = opts.clone();
+    o.steps = 0;
+    let r = pipeline::run_pipeline(&session, &o)?;
+    println!(
+        "{} {} ({}): wiki {:.3}  c4 {:.3}",
+        o.method.name(),
+        o.model,
+        o.scheme,
+        r.base.ppl_wiki,
+        r.base.ppl_c4
+    );
+    let _ = corpus;
+    Ok(0)
+}
+
+fn cmd_eval_reasoning(a: &Args) -> crate::Result<i32> {
+    let session = Session::load_default()?;
+    let mut opts = opts_from_args(a)?;
+    if opts.reasoning_n == 0 {
+        opts.reasoning_n = 50;
+    }
+    opts.steps = 0;
+    let r = pipeline::run_pipeline(&session, &opts)?;
+    if let Some((results, avg)) = &r.base.reasoning {
+        for t in results {
+            println!("{:10} acc {:6.2} (n={})", t.task, t.accuracy, t.n);
+        }
+        println!("{:10} avg {avg:6.2}", "ALL");
+    }
+    Ok(0)
+}
+
+fn cmd_quantize(a: &Args) -> crate::Result<i32> {
+    let session = Session::load_default()?;
+    let opts = {
+        let mut o = opts_from_args(a)?;
+        o.steps = 0;
+        o
+    };
+    let w = session.weights(&opts.model)?;
+    let pile = session.corpus("pile")?;
+    let calib = crate::calib::CalibSet::from_corpus(&pile, opts.calib_seqs, session.manifest.seq);
+    let prepared = crate::baselines::prepare(opts.method, opts.scheme, &w, &calib, None)?;
+    let (packed, bytes) = prepared.pack_model(&prepared.fp);
+    let total_params: usize = packed.iter().map(|(_, t)| t.rows * t.cols).sum();
+    let fp16_bytes = total_params * 2;
+    println!(
+        "{} {} {}: {} quantized tensors, packed {:.2} MiB vs FP16 {:.2} MiB ({:.1}% saving), {:.3} bits/param",
+        opts.method.name(),
+        opts.model,
+        opts.scheme,
+        packed.len(),
+        bytes as f64 / (1 << 20) as f64,
+        fp16_bytes as f64 / (1 << 20) as f64,
+        100.0 * (1.0 - bytes as f64 / fp16_bytes as f64),
+        bytes as f64 * 8.0 / total_params as f64,
+    );
+    let r = pipeline::run_pipeline(&session, &opts)?;
+    println!("wiki ppl {:.3}  c4 ppl {:.3}", r.base.ppl_wiki, r.base.ppl_c4);
+    if let Some(out) = a.get("out") {
+        save_weights(&prepared.quantize_model(&prepared.fp, None), std::path::Path::new(out))?;
+        println!("dequantized weights written to {out}");
+    }
+    Ok(0)
+}
+
+fn cmd_search(a: &Args) -> crate::Result<i32> {
+    let session = Session::load_default()?;
+    let opts = opts_from_args(a)?;
+    if let Some(resume) = a.get("resume") {
+        return cmd_search_resume(&session, &opts, a, resume);
+    }
+    let r = pipeline::run_pipeline(&session, &opts)?;
+    println!(
+        "baseline {}: wiki {:.3}  c4 {:.3}",
+        opts.method.name(),
+        r.base.ppl_wiki,
+        r.base.ppl_c4
+    );
+    if let Some(s) = &r.searched {
+        println!(
+            "+InvarExplore({}, {} steps): wiki {:.3}  c4 {:.3}",
+            opts.kinds.label(),
+            opts.steps,
+            s.ppl_wiki,
+            s.ppl_c4
+        );
+    }
+    if let Some(state) = &r.state {
+        println!(
+            "accepted {}/{} proposals ({:.1}%), final loss {:.4}",
+            state.accepts,
+            state.step,
+            100.0 * state.accept_rate(),
+            state.best.total(state.alpha)
+        );
+        if let Some(out) = a.get("out") {
+            state.save(std::path::Path::new(out))?;
+            println!("search state saved to {out}");
+        }
+        if let Some(csv) = a.get("csv") {
+            state.telemetry_csv(std::path::Path::new(csv))?;
+            println!("telemetry written to {csv}");
+        }
+    }
+    Ok(0)
+}
+
+/// `search --resume state.json`: restore a checkpoint, continue for
+/// `--steps` more proposals, re-evaluate and save back.
+fn cmd_search_resume(
+    session: &Session,
+    opts: &PipelineOpts,
+    a: &Args,
+    resume: &str,
+) -> crate::Result<i32> {
+    let saved = crate::search::SearchState::load(std::path::Path::new(resume), opts.seed)?;
+    let mut run = pipeline::SearchRun::build(session, opts)?;
+    run.restore(saved)?;
+    let before = run.state.best.total(run.state.alpha);
+    run.steps(opts.steps)?;
+    let snap = run.snapshot(session, opts)?;
+    println!(
+        "resumed +{} steps: loss {:.4} -> {:.4}, wiki ppl {:.3}, c4 ppl {:.3}",
+        opts.steps,
+        before,
+        run.state.best.total(run.state.alpha),
+        snap.ppl_wiki,
+        snap.ppl_c4
+    );
+    let out = a.get("out").unwrap_or(resume);
+    run.state.save(std::path::Path::new(out))?;
+    println!("state saved to {out}");
+    if let Some(csv) = a.get("csv") {
+        run.state.telemetry_csv(std::path::Path::new(csv))?;
+    }
+    Ok(0)
+}
+
+fn cmd_apply(a: &Args) -> crate::Result<i32> {
+    let session = Session::load_default()?;
+    let opts = opts_from_args(a)?;
+    let state_path = a.req("csv").ok(); // not used; keep CLI simple
+    let _ = state_path;
+    let state_file = a
+        .positionals
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: invarexplore apply <state.json> --out w.iwt"))?;
+    let out = a.req("out")?;
+    let state = crate::search::SearchState::load(std::path::Path::new(state_file), opts.seed)?;
+
+    let w = session.weights(&opts.model)?;
+    let pile = session.corpus("pile")?;
+    let calib = crate::calib::CalibSet::from_corpus(&pile, opts.calib_seqs, session.manifest.seq);
+    let prepared = crate::baselines::prepare(opts.method, opts.scheme, &w, &calib, None)?;
+    // apply transforms to FP weights, then quantize under the method
+    let mut transformed = prepared.fp.clone();
+    for (l, t) in state.transforms.iter().enumerate() {
+        crate::transform::apply_to_layer(&prepared.fp, &mut transformed, l, t);
+    }
+    let q = prepared.quantize_model(&transformed, Some(&state.transforms));
+    save_weights(&q, std::path::Path::new(out))?;
+    println!("applied {} layer transforms; quantized weights written to {out}", state.transforms.len());
+    Ok(0)
+}
+
+fn save_weights(w: &crate::model::Weights, path: &std::path::Path) -> crate::Result<()> {
+    let entries: Vec<(String, &crate::tensor::Tensor, Vec<usize>)> = w
+        .in_order()
+        .into_iter()
+        .map(|(n, t)| {
+            let shape = if crate::runtime::engine::is_vector_param(n) {
+                vec![t.cols]
+            } else {
+                vec![t.rows, t.cols]
+            };
+            (n.to_string(), t, shape)
+        })
+        .collect();
+    let meta = w
+        .config
+        .param_names()
+        .is_empty()
+        .then(std::collections::BTreeMap::new)
+        .unwrap_or_default();
+    crate::io::iwt::write(path, &entries, &meta)
+}
+
+fn cmd_table(a: &Args, which: usize) -> crate::Result<i32> {
+    let session = Session::load_default()?;
+    let opts = opts_from_args(a)?;
+    let steps = opts.steps;
+    let out = match which {
+        1 => {
+            let t1 = tables::Table1Opts {
+                models: session.manifest.model_names().iter().map(|s| s.to_string()).collect(),
+                methods: vec![Method::Rtn, Method::Gptq, Method::Awq, Method::OmniQuant],
+                scheme: opts.scheme,
+                steps,
+                reasoning_n: opts.reasoning_n,
+                seed: opts.seed,
+            };
+            tables::table1(&session, &t1)?
+        }
+        2 => tables::table2(&session, &opts.model, opts.scheme, steps, opts.reasoning_n, opts.seed)?,
+        3 => tables::table3(&session, &opts.model, steps, opts.reasoning_n, opts.seed)?,
+        4 => tables::table4(&session, &opts.model, opts.scheme, steps, opts.reasoning_n, opts.seed)?,
+        5 => tables::table5(
+            &session,
+            &[opts.model.clone()],
+            opts.scheme,
+            steps,
+            opts.reasoning_n.max(30),
+            opts.seed,
+        )?,
+        _ => unreachable!(),
+    };
+    println!("{out}");
+    Ok(0)
+}
+
+fn cmd_figure1(a: &Args) -> crate::Result<i32> {
+    let session = Session::load_default()?;
+    let opts = opts_from_args(a)?;
+    let f1 = tables::Figure1Opts {
+        model: opts.model.clone(),
+        scheme: opts.scheme,
+        calib_seqs: vec![1, 8, 32],
+        total_steps: opts.steps,
+        segments: 8,
+        seed: opts.seed,
+    };
+    let out = tables::figure1(&session, &f1)?;
+    println!("{out}");
+    Ok(0)
+}

@@ -1,0 +1,13 @@
+//! The coordinator: wires artifacts + baselines + search + runtime + eval
+//! into the jobs the CLI, examples and benches run.
+//!
+//! * [`session`] — loaded artifacts context (manifest, corpora, weights);
+//! * [`pipeline`] — the quantize→search→evaluate pipeline (one Table-1 cell);
+//! * [`tables`] — drivers regenerating every table and figure of the paper.
+
+pub mod pipeline;
+pub mod session;
+pub mod tables;
+
+pub use pipeline::{PipelineOpts, PipelineReport, SearchRun};
+pub use session::Session;

@@ -1,0 +1,255 @@
+//! The quantize → search → evaluate pipeline — one cell of Table 1.
+
+use crate::baselines::{self, Method};
+use crate::calib::CalibSet;
+use crate::eval::{self, TaskResult};
+use crate::quant::QuantScheme;
+use crate::runtime::{Engine, Evaluator};
+use crate::search::{self, Objective, SearchConfig, SearchState, XlaObjective};
+use crate::transform::TransformKinds;
+
+use super::session::Session;
+
+/// Options for one pipeline run.
+#[derive(Debug, Clone)]
+pub struct PipelineOpts {
+    pub model: String,
+    pub method: Method,
+    pub scheme: QuantScheme,
+    /// Search steps; 0 = baseline only.
+    pub steps: usize,
+    pub kinds: TransformKinds,
+    /// Number of activation-matching layers (Table 4 knob).
+    pub match_layers: usize,
+    /// Calibration sequences (paper: 32 × 512 tokens; Figure 1 knob).
+    pub calib_seqs: usize,
+    pub seed: u64,
+    pub alpha: Option<f64>,
+    /// Max eval sequences per perplexity corpus.
+    pub eval_seqs: usize,
+    /// Reasoning examples per task (0 = skip reasoning).
+    pub reasoning_n: usize,
+    pub shots: usize,
+}
+
+impl PipelineOpts {
+    pub fn new(model: &str, method: Method, scheme: QuantScheme) -> PipelineOpts {
+        PipelineOpts {
+            model: model.to_string(),
+            method,
+            scheme,
+            steps: 0,
+            kinds: TransformKinds::all(),
+            match_layers: 2,
+            calib_seqs: 32,
+            seed: 0,
+            alpha: None,
+            eval_seqs: 64,
+            reasoning_n: 0,
+            shots: 5,
+        }
+    }
+}
+
+/// Evaluation snapshot (before or after search).
+#[derive(Debug, Clone, Default)]
+pub struct EvalSnapshot {
+    pub ppl_wiki: f64,
+    pub ppl_c4: f64,
+    pub reasoning: Option<(Vec<TaskResult>, f64)>,
+}
+
+/// Report of one pipeline run.
+pub struct PipelineReport {
+    pub opts: PipelineOpts,
+    pub ce_fp_calib: f64,
+    pub base: EvalSnapshot,
+    pub searched: Option<EvalSnapshot>,
+    pub state: Option<SearchState>,
+    /// H₀ memory (Table 4 column), bytes.
+    pub h0_bytes: usize,
+}
+
+/// A live search run: objective + state, resumable in segments (Figure 1
+/// evaluates test PPL between segments).
+pub struct SearchRun {
+    pub obj: XlaObjective,
+    pub state: SearchState,
+    pub cfg: SearchConfig,
+    pub h0_bytes: usize,
+    pub ce_fp_calib: f64,
+}
+
+impl SearchRun {
+    /// Build the full stack for `opts`: weights → calib → baseline prepare →
+    /// engine+evaluator (FP weights uploaded, H₀ captured) → objective.
+    pub fn build(session: &Session, opts: &PipelineOpts) -> crate::Result<SearchRun> {
+        let manifest = &session.manifest;
+        let w = session.weights(&opts.model)?;
+        let pile = session.corpus("pile")?;
+        let calib = CalibSet::from_corpus(&pile, opts.calib_seqs, manifest.seq);
+        crate::info!(
+            "pipeline: model={} method={} scheme={} calib={}x{}",
+            opts.model,
+            opts.method.name(),
+            opts.scheme,
+            calib.n_seqs(),
+            calib.seqlen()
+        );
+
+        let t0 = std::time::Instant::now();
+        let prepared = baselines::prepare(opts.method, opts.scheme, &w, &calib, None)?;
+        crate::info!("prepared {} in {:?}", opts.method.name(), t0.elapsed());
+
+        let mut engine = Engine::load(manifest, &opts.model)?;
+        engine.upload_weights(&prepared.fp)?;
+        let cfg = &prepared.fp.config;
+        let match_layers = Session::match_layer_subset(cfg.n_layers, opts.match_layers);
+        let mut evaluator = Evaluator::new(engine, &calib, match_layers)?;
+        let ce_fp_calib = evaluator.capture_h0()?;
+        crate::info!("FP calib CE {ce_fp_calib:.4}");
+        let h0_bytes = evaluator.h0_bytes();
+
+        let (n_layers, d_ffn) = (cfg.n_layers, cfg.d_ffn);
+        let obj = XlaObjective::new(prepared, evaluator);
+        let state = SearchState::new(n_layers, d_ffn, opts.seed);
+        let cfg = SearchConfig {
+            kinds: opts.kinds,
+            alpha: opts.alpha,
+            ..SearchConfig::default()
+        };
+        Ok(SearchRun { obj, state, cfg, h0_bytes, ce_fp_calib })
+    }
+
+    /// Quantize + initial full eval (no-op if already initialized).
+    pub fn init(&mut self) -> crate::Result<()> {
+        search::hillclimb::ensure_init(&mut self.obj, &mut self.state, &self.cfg)
+    }
+
+    /// Resume from a saved checkpoint: re-initialize the quantized model,
+    /// re-materialize every saved layer transform through the objective
+    /// (so device weights, prefix cache and loss all reflect it), and carry
+    /// over the step/accept counters and α.
+    pub fn restore(&mut self, saved: crate::search::SearchState) -> crate::Result<()> {
+        anyhow::ensure!(
+            saved.transforms.len() == self.obj.n_layers(),
+            "checkpoint layer count mismatch"
+        );
+        search::hillclimb::ensure_init(&mut self.obj, &mut self.state, &self.cfg)?;
+        if saved.alpha > 0.0 {
+            self.state.alpha = saved.alpha;
+        }
+        for (l, t) in saved.transforms.iter().enumerate() {
+            if !t.is_identity() {
+                let loss = self.obj.try_layer(l, t)?;
+                self.obj.accept()?;
+                self.state.best = loss;
+            }
+        }
+        self.state.transforms = saved.transforms;
+        self.state.step = saved.step;
+        self.state.accepts = saved.accepts;
+        crate::info!(
+            "resumed at step {} (loss {:.4}, {} accepts)",
+            self.state.step,
+            self.state.best.total(self.state.alpha),
+            self.state.accepts
+        );
+        Ok(())
+    }
+
+    /// Run `n` more search steps.
+    pub fn steps(&mut self, n: usize) -> crate::Result<()> {
+        search::run_steps(&mut self.obj, &mut self.state, &self.cfg, n)
+    }
+
+    /// Evaluate perplexity + reasoning with the current quantized weights.
+    pub fn snapshot(&self, session: &Session, opts: &PipelineOpts) -> crate::Result<EvalSnapshot> {
+        let engine = &self.obj.eval.engine;
+        let wiki = session.corpus("wiki")?;
+        let c4 = session.corpus("c4")?;
+        let ppl_wiki = eval::perplexity(engine, &wiki, opts.eval_seqs)?;
+        let ppl_c4 = eval::perplexity(engine, &c4, opts.eval_seqs)?;
+        let reasoning = if opts.reasoning_n > 0 {
+            Some(eval::eval_all_tasks(
+                engine,
+                &session.manifest.data,
+                opts.shots,
+                opts.reasoning_n,
+                opts.seed,
+            )?)
+        } else {
+            None
+        };
+        Ok(EvalSnapshot { ppl_wiki, ppl_c4, reasoning })
+    }
+
+    /// Test perplexity on one corpus (Figure 1b segments).
+    pub fn test_ppl(&self, session: &Session, corpus: &str, max_seqs: usize) -> crate::Result<f64> {
+        let c = session.corpus(corpus)?;
+        eval::perplexity(&self.obj.eval.engine, &c, max_seqs)
+    }
+}
+
+/// Run the full pipeline for one (model, method, scheme) cell.
+pub fn run_pipeline(session: &Session, opts: &PipelineOpts) -> crate::Result<PipelineReport> {
+    let mut run = SearchRun::build(session, opts)?;
+    run.init()?;
+    let base = run.snapshot(session, opts)?;
+    crate::info!(
+        "{} baseline: wiki ppl {:.2}, c4 ppl {:.2}",
+        opts.method.name(),
+        base.ppl_wiki,
+        base.ppl_c4
+    );
+
+    let (searched, state) = if opts.steps > 0 {
+        run.steps(opts.steps)?;
+        let snap = run.snapshot(session, opts)?;
+        crate::info!(
+            "+InvarExplore({}) after {} steps: wiki ppl {:.2}, c4 ppl {:.2} (accept {:.2})",
+            run.cfg.kinds.label(),
+            run.state.step,
+            snap.ppl_wiki,
+            snap.ppl_c4,
+            run.state.accept_rate()
+        );
+        (Some(snap), Some(run.state))
+    } else {
+        (None, None)
+    };
+
+    Ok(PipelineReport {
+        opts: opts.clone(),
+        ce_fp_calib: run.ce_fp_calib,
+        base,
+        searched,
+        state,
+        h0_bytes: run.h0_bytes,
+    })
+}
+
+/// Evaluate the *unquantized* FP model (the Table-1 "FP16" row).
+pub fn eval_fp(session: &Session, model: &str, opts: &PipelineOpts) -> crate::Result<EvalSnapshot> {
+    let w = session.weights(model)?;
+    let mut engine = Engine::load(&session.manifest, model)?;
+    engine.upload_weights(&w)?;
+    let wiki = session.corpus("wiki")?;
+    let c4 = session.corpus("c4")?;
+    let reasoning = if opts.reasoning_n > 0 {
+        Some(eval::eval_all_tasks(
+            &engine,
+            &session.manifest.data,
+            opts.shots,
+            opts.reasoning_n,
+            opts.seed,
+        )?)
+    } else {
+        None
+    };
+    Ok(EvalSnapshot {
+        ppl_wiki: eval::perplexity(&engine, &wiki, opts.eval_seqs)?,
+        ppl_c4: eval::perplexity(&engine, &c4, opts.eval_seqs)?,
+        reasoning,
+    })
+}

@@ -1,0 +1,59 @@
+//! Loaded-artifacts context shared by CLI commands, examples and benches.
+
+use std::path::Path;
+
+use crate::io::manifest::Manifest;
+use crate::io::tokens::{self, TokenCorpus};
+use crate::model::Weights;
+
+pub struct Session {
+    pub manifest: Manifest,
+}
+
+impl Session {
+    /// Load from `artifacts/` (or `INVAREXPLORE_ARTIFACTS`).
+    pub fn load_default() -> crate::Result<Session> {
+        crate::util::logging::init();
+        Ok(Session { manifest: Manifest::load_default()? })
+    }
+
+    pub fn load(dir: &Path) -> crate::Result<Session> {
+        crate::util::logging::init();
+        Ok(Session { manifest: Manifest::load(dir)? })
+    }
+
+    /// Trained FP weights of a model.
+    pub fn weights(&self, model: &str) -> crate::Result<Weights> {
+        let info = self.manifest.model(model)?;
+        Weights::load(&info.weights_path, info.config.clone())
+    }
+
+    /// A corpus by name (`train` / `pile` / `wiki` / `c4`).
+    pub fn corpus(&self, name: &str) -> crate::Result<TokenCorpus> {
+        tokens::read(self.manifest.data.corpus(name)?)
+    }
+
+    /// Evenly-spaced activation-matching layer subset of size `k` (the
+    /// paper matches 10 of 40 layers; Table 4 sweeps the count).
+    pub fn match_layer_subset(n_layers: usize, k: usize) -> Vec<usize> {
+        let k = k.min(n_layers);
+        (1..=k)
+            .map(|i| (i * n_layers).div_ceil(k) - 1)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn match_layer_subsets() {
+        assert_eq!(Session::match_layer_subset(4, 0), Vec::<usize>::new());
+        assert_eq!(Session::match_layer_subset(4, 1), vec![3]);
+        assert_eq!(Session::match_layer_subset(4, 2), vec![1, 3]);
+        assert_eq!(Session::match_layer_subset(4, 4), vec![0, 1, 2, 3]);
+        // k > n clamps
+        assert_eq!(Session::match_layer_subset(2, 10), vec![0, 1]);
+    }
+}

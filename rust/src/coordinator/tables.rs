@@ -1,0 +1,558 @@
+//! Drivers regenerating every table and figure of the paper's evaluation
+//! (DESIGN.md §4 experiment index).  Each driver prints a Markdown table
+//! and writes CSV + Markdown into `results/`.
+//!
+//! Scale knobs: `INVAREXPLORE_STEPS` (search steps per cell),
+//! `INVAREXPLORE_FULL=1` (paper scale).  Defaults are sized for a CPU
+//! sandbox; the *shape* of each table (who wins, by roughly what factor)
+//! is the reproduction target, not absolute values.
+
+use std::path::{Path, PathBuf};
+
+use crate::baselines::Method;
+use crate::quant::{self, QuantScheme};
+use crate::transform::TransformKinds;
+use crate::util::csv::CsvWriter;
+
+use super::pipeline::{self, PipelineOpts, PipelineReport};
+use super::session::Session;
+
+pub fn results_dir() -> PathBuf {
+    let d = std::env::var("INVAREXPLORE_RESULTS").unwrap_or_else(|_| "results".into());
+    let p = PathBuf::from(d);
+    let _ = std::fs::create_dir_all(&p);
+    p
+}
+
+fn write_md(path: &Path, content: &str) -> crate::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, content)?;
+    Ok(())
+}
+
+/// Markdown table builder.
+pub struct MdTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl MdTable {
+    pub fn new(header: &[&str]) -> MdTable {
+        MdTable { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        out.push_str(&format!("|{}|\n", self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|")));
+        for r in &self.rows {
+            out.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        out
+    }
+}
+
+fn fmt_ppl(p: f64) -> String {
+    if p > 1e4 {
+        format!("{:.2e}", p)
+    } else {
+        format!("{:.2}", p)
+    }
+}
+
+fn acc_cell(r: &PipelineReport, searched: bool) -> String {
+    let snap = if searched { r.searched.as_ref().unwrap() } else { &r.base };
+    snap.reasoning
+        .as_ref()
+        .map(|(_, avg)| format!("{avg:.2}"))
+        .unwrap_or_else(|| "-".into())
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 — main results
+// ---------------------------------------------------------------------------
+
+pub struct Table1Opts {
+    pub models: Vec<String>,
+    pub methods: Vec<Method>,
+    pub scheme: QuantScheme,
+    pub steps: usize,
+    pub reasoning_n: usize,
+    pub seed: u64,
+}
+
+pub fn table1(session: &Session, t1: &Table1Opts) -> crate::Result<String> {
+    let mut md = MdTable::new(&{
+        let mut h = vec!["Method"];
+        for m in &t1.models {
+            h.push(m);
+        }
+        h.push("metric");
+        h
+    });
+    let mut csv = CsvWriter::create(
+        &results_dir().join("table1_main.csv"),
+        &["method", "model", "wiki_ppl", "c4_ppl", "reasoning_avg"],
+    )?;
+
+    // FP16 row
+    let mut fp_cells_w = Vec::new();
+    let mut fp_cells_acc = Vec::new();
+    for model in &t1.models {
+        let mut opts = PipelineOpts::new(model, Method::Rtn, t1.scheme);
+        opts.reasoning_n = t1.reasoning_n;
+        let snap = pipeline::eval_fp(session, model, &opts)?;
+        csv.row(&[
+            "FP32".into(),
+            model.clone(),
+            format!("{:.4}", snap.ppl_wiki),
+            format!("{:.4}", snap.ppl_c4),
+            snap.reasoning.as_ref().map(|(_, a)| format!("{a:.2}")).unwrap_or_default(),
+        ])?;
+        fp_cells_w.push(format!("{} / {}", fmt_ppl(snap.ppl_wiki), fmt_ppl(snap.ppl_c4)));
+        fp_cells_acc.push(snap.reasoning.as_ref().map(|(_, a)| format!("{a:.2}")).unwrap_or("-".into()));
+    }
+    let mut row = vec!["FP32".to_string()];
+    row.extend(fp_cells_w);
+    row.push("wiki/c4 ppl".into());
+    md.row(row);
+    let mut row = vec!["FP32".to_string()];
+    row.extend(fp_cells_acc);
+    row.push("reasoning".into());
+    md.row(row);
+
+    for &method in &t1.methods {
+        // (method, +InvarExplore) row pair
+        let mut base_w = Vec::new();
+        let mut base_acc = Vec::new();
+        let mut ie_w = Vec::new();
+        let mut ie_acc = Vec::new();
+        for model in &t1.models {
+            let mut opts = PipelineOpts::new(model, method, t1.scheme);
+            opts.steps = if method == Method::Rtn { 0 } else { t1.steps };
+            opts.reasoning_n = t1.reasoning_n;
+            opts.seed = t1.seed;
+            let r = pipeline::run_pipeline(session, &opts)?;
+            csv.row(&[
+                method.name().into(),
+                model.clone(),
+                format!("{:.4}", r.base.ppl_wiki),
+                format!("{:.4}", r.base.ppl_c4),
+                acc_cell(&r, false),
+            ])?;
+            base_w.push(format!("{} / {}", fmt_ppl(r.base.ppl_wiki), fmt_ppl(r.base.ppl_c4)));
+            base_acc.push(acc_cell(&r, false));
+            if let Some(s) = &r.searched {
+                csv.row(&[
+                    format!("{}+InvarExplore", method.name()),
+                    model.clone(),
+                    format!("{:.4}", s.ppl_wiki),
+                    format!("{:.4}", s.ppl_c4),
+                    acc_cell(&r, true),
+                ])?;
+                ie_w.push(format!("{} / {}", fmt_ppl(s.ppl_wiki), fmt_ppl(s.ppl_c4)));
+                ie_acc.push(acc_cell(&r, true));
+            }
+        }
+        let mut row = vec![method.name().to_string()];
+        row.extend(base_w);
+        row.push("wiki/c4 ppl".into());
+        md.row(row);
+        let mut row = vec![method.name().to_string()];
+        row.extend(base_acc);
+        row.push("reasoning".into());
+        md.row(row);
+        if !ie_w.is_empty() {
+            let mut row = vec![format!("{}+InvarExplore", method.name())];
+            row.extend(ie_w);
+            row.push("wiki/c4 ppl".into());
+            md.row(row);
+            let mut row = vec![format!("{}+InvarExplore", method.name())];
+            row.extend(ie_acc);
+            row.push("reasoning".into());
+            md.row(row);
+        }
+    }
+    csv.flush()?;
+    let out = format!(
+        "## Table 1 (analog): main results — {} quantization, {} search steps/cell\n\n{}",
+        t1.scheme,
+        t1.steps,
+        md.render()
+    );
+    write_md(&results_dir().join("table1_main.md"), &out)?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 — transform ablation
+// ---------------------------------------------------------------------------
+
+pub fn table2(
+    session: &Session,
+    model: &str,
+    scheme: QuantScheme,
+    steps: usize,
+    reasoning_n: usize,
+    seed: u64,
+) -> crate::Result<String> {
+    let mut md = MdTable::new(&["Variant", "wiki ppl", "c4 ppl", "reasoning avg"]);
+    let mut csv = CsvWriter::create(
+        &results_dir().join("table2_ablation.csv"),
+        &["variant", "wiki_ppl", "c4_ppl", "reasoning_avg"],
+    )?;
+
+    let variants: [(&str, &str); 4] = [("Permutation", "p"), ("Scaling", "s"), ("Rotation", "r"), ("All", "psr")];
+
+    // AWQ base row (steps = 0)
+    let mut base_opts = PipelineOpts::new(model, Method::Awq, scheme);
+    base_opts.reasoning_n = reasoning_n;
+    base_opts.seed = seed;
+    let base = pipeline::run_pipeline(session, &base_opts)?;
+    let base_acc = acc_cell(&base, false);
+    md.row(vec![
+        "AWQ".into(),
+        fmt_ppl(base.base.ppl_wiki),
+        fmt_ppl(base.base.ppl_c4),
+        base_acc.clone(),
+    ]);
+    csv.row(&[
+        "AWQ".into(),
+        format!("{:.4}", base.base.ppl_wiki),
+        format!("{:.4}", base.base.ppl_c4),
+        base_acc,
+    ])?;
+
+    for (label, kinds) in variants {
+        let mut opts = PipelineOpts::new(model, Method::Awq, scheme);
+        opts.steps = steps;
+        opts.kinds = TransformKinds::parse(kinds)?;
+        opts.reasoning_n = reasoning_n;
+        opts.seed = seed;
+        let r = pipeline::run_pipeline(session, &opts)?;
+        let s = r.searched.as_ref().unwrap();
+        let acc = acc_cell(&r, true);
+        md.row(vec![
+            format!("+InvarExplore-{label}"),
+            fmt_ppl(s.ppl_wiki),
+            fmt_ppl(s.ppl_c4),
+            acc.clone(),
+        ]);
+        csv.row(&[
+            format!("+InvarExplore-{label}"),
+            format!("{:.4}", s.ppl_wiki),
+            format!("{:.4}", s.ppl_c4),
+            acc,
+        ])?;
+    }
+    csv.flush()?;
+    let out = format!(
+        "## Table 2 (analog): transform ablation — AWQ + {model}, {scheme}, {steps} steps\n\n{}",
+        md.render()
+    );
+    write_md(&results_dir().join("table2_ablation.md"), &out)?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Table 3 — bits × group sizes (+ measured bits/param)
+// ---------------------------------------------------------------------------
+
+pub fn table3(
+    session: &Session,
+    model: &str,
+    steps: usize,
+    reasoning_n: usize,
+    seed: u64,
+) -> crate::Result<String> {
+    let mut md = MdTable::new(&[
+        "Bits", "Group", "Bits/Param", "Method", "wiki ppl", "c4 ppl", "reasoning avg",
+    ]);
+    let mut csv = CsvWriter::create(
+        &results_dir().join("table3_bits_groups.csv"),
+        &["bits", "group", "bits_per_param", "method", "wiki_ppl", "c4_ppl", "reasoning_avg"],
+    )?;
+
+    // paper: (1,64), (2,64), (2,128), (3,128).  Our models' difficulty
+    // curve sits one bit lower (DESIGN.md §1), so the sweep covers the
+    // catastrophic (1-bit), hard (1-bit coarse), and saturated (2/3-bit)
+    // regimes with groups scaled to our hidden dims.
+    let settings: [(usize, usize); 4] = [(1, 32), (1, 64), (2, 64), (3, 64)];
+    for (bits, group) in settings {
+        let scheme = QuantScheme::new(bits, group);
+        // measured bits/param from the packed codec on this model
+        let w = session.weights(model)?;
+        let p = crate::baselines::rtn::prepare(scheme, &w);
+        let (packed, bytes) = p.pack_model(&p.fp);
+        let total_params: usize = packed.iter().map(|(_, t)| t.rows * t.cols).sum();
+        let bpp = bytes as f64 * 8.0 / total_params as f64;
+        let _ = quant::PackedTensor::pack(&quant::quantize(w.get("l0.up.w"), scheme)); // exercised
+
+        let mut opts = PipelineOpts::new(model, Method::Awq, scheme);
+        opts.steps = steps;
+        opts.reasoning_n = reasoning_n;
+        opts.seed = seed;
+        let r = pipeline::run_pipeline(session, &opts)?;
+        let s = r.searched.as_ref().unwrap();
+        for (mname, snap, acc) in [
+            ("AWQ", &r.base, acc_cell(&r, false)),
+            ("+InvarExplore", s, acc_cell(&r, true)),
+        ] {
+            md.row(vec![
+                bits.to_string(),
+                group.to_string(),
+                format!("{bpp:.3}"),
+                mname.into(),
+                fmt_ppl(snap.ppl_wiki),
+                fmt_ppl(snap.ppl_c4),
+                acc.clone(),
+            ]);
+            csv.row(&[
+                bits.to_string(),
+                group.to_string(),
+                format!("{bpp:.4}"),
+                mname.into(),
+                format!("{:.4}", snap.ppl_wiki),
+                format!("{:.4}", snap.ppl_c4),
+                acc,
+            ])?;
+        }
+    }
+    csv.flush()?;
+    let out = format!(
+        "## Table 3 (analog): bits × group — AWQ ± InvarExplore on {model}, {steps} steps\n\n{}",
+        md.render()
+    );
+    write_md(&results_dir().join("table3_bits_groups.md"), &out)?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Table 4 — activation-matching layers
+// ---------------------------------------------------------------------------
+
+pub fn table4(
+    session: &Session,
+    model: &str,
+    scheme: QuantScheme,
+    steps: usize,
+    reasoning_n: usize,
+    seed: u64,
+) -> crate::Result<String> {
+    let n_layers = session.manifest.model(model)?.config.n_layers;
+    let mut md = MdTable::new(&["Matched layers", "H0 memory", "wiki ppl", "c4 ppl", "reasoning avg"]);
+    let mut csv = CsvWriter::create(
+        &results_dir().join("table4_act_matching.csv"),
+        &["match_layers", "h0_bytes", "wiki_ppl", "c4_ppl", "reasoning_avg"],
+    )?;
+
+    let mut counts = vec![0usize, 1];
+    if n_layers >= 2 {
+        counts.push(n_layers / 2);
+    }
+    counts.push(n_layers);
+    counts.dedup();
+
+    for k in counts {
+        let mut opts = PipelineOpts::new(model, Method::Awq, scheme);
+        opts.steps = steps;
+        opts.match_layers = k;
+        opts.reasoning_n = reasoning_n;
+        opts.seed = seed;
+        let r = pipeline::run_pipeline(session, &opts)?;
+        let s = r.searched.as_ref().unwrap();
+        let acc = acc_cell(&r, true);
+        md.row(vec![
+            format!("{k} / {n_layers}"),
+            format!("{:.2} MiB", r.h0_bytes as f64 / (1 << 20) as f64),
+            fmt_ppl(s.ppl_wiki),
+            fmt_ppl(s.ppl_c4),
+            acc.clone(),
+        ]);
+        csv.row(&[
+            k.to_string(),
+            r.h0_bytes.to_string(),
+            format!("{:.4}", s.ppl_wiki),
+            format!("{:.4}", s.ppl_c4),
+            acc,
+        ])?;
+    }
+    csv.flush()?;
+    let out = format!(
+        "## Table 4 (analog): activation-matching layers — AWQ+InvarExplore on {model}, {steps} steps\n\n{}",
+        md.render()
+    );
+    write_md(&results_dir().join("table4_act_matching.md"), &out)?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Table 5 — per-task reasoning detail
+// ---------------------------------------------------------------------------
+
+pub fn table5(
+    session: &Session,
+    models: &[String],
+    scheme: QuantScheme,
+    steps: usize,
+    reasoning_n: usize,
+    seed: u64,
+) -> crate::Result<String> {
+    let task_names: Vec<String> = session
+        .manifest
+        .data
+        .task_names()
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let mut header: Vec<&str> = vec!["Model", "Method"];
+    let names_ref: Vec<&str> = task_names.iter().map(|s| s.as_str()).collect();
+    header.extend(names_ref.iter());
+    header.push("Avg");
+    let mut md = MdTable::new(&header);
+    let mut csv_header = vec!["model".to_string(), "method".to_string()];
+    csv_header.extend(task_names.iter().cloned());
+    csv_header.push("avg".into());
+    let csv_header_refs: Vec<&str> = csv_header.iter().map(|s| s.as_str()).collect();
+    let mut csv = CsvWriter::create(&results_dir().join("table5_reasoning.csv"), &csv_header_refs)?;
+
+    let mut emit = |model: &str, method: &str, res: &[crate::eval::TaskResult], avg: f64| {
+        let mut cells = vec![model.to_string(), method.to_string()];
+        let mut csv_cells = cells.clone();
+        for name in &task_names {
+            let acc = res
+                .iter()
+                .find(|r| &r.task == name)
+                .map(|r| format!("{:.2}", r.accuracy))
+                .unwrap_or_default();
+            cells.push(acc.clone());
+            csv_cells.push(acc);
+        }
+        cells.push(format!("{avg:.2}"));
+        csv_cells.push(format!("{avg:.2}"));
+        md.row(cells);
+        csv.row(&csv_cells)
+    };
+
+    for model in models {
+        let mut opts = PipelineOpts::new(model, Method::Awq, scheme);
+        opts.reasoning_n = reasoning_n;
+        opts.steps = steps;
+        opts.seed = seed;
+        let fp = pipeline::eval_fp(session, model, &opts)?;
+        if let Some((res, avg)) = &fp.reasoning {
+            emit(model, "FP32", res, *avg)?;
+        }
+        let r = pipeline::run_pipeline(session, &opts)?;
+        if let Some((res, avg)) = &r.base.reasoning {
+            emit(model, "AWQ", res, *avg)?;
+        }
+        if let Some(s) = &r.searched {
+            if let Some((res, avg)) = &s.reasoning {
+                emit(model, "+InvarExplore", res, *avg)?;
+            }
+        }
+    }
+    csv.flush()?;
+    let out = format!(
+        "## Table 5 (analog): per-task reasoning detail — {scheme}, {steps} steps\n\n{}",
+        md.render()
+    );
+    write_md(&results_dir().join("table5_reasoning.md"), &out)?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Figure 1 — optimization curves vs calibration size
+// ---------------------------------------------------------------------------
+
+pub struct Figure1Opts {
+    pub model: String,
+    pub scheme: QuantScheme,
+    pub calib_seqs: Vec<usize>,
+    pub total_steps: usize,
+    pub segments: usize,
+    pub seed: u64,
+}
+
+pub fn figure1(session: &Session, f1: &Figure1Opts) -> crate::Result<String> {
+    let mut csv = CsvWriter::create(
+        &results_dir().join("figure1_curves.csv"),
+        &["calib_seqs", "step", "calib_loss", "test_ppl", "accept_rate"],
+    )?;
+    let mut loss_series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+    let mut ppl_series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+    let mut acc_series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+
+    for &n_seqs in &f1.calib_seqs {
+        let mut opts = PipelineOpts::new(&f1.model, Method::Awq, f1.scheme);
+        opts.calib_seqs = n_seqs;
+        opts.seed = f1.seed;
+        let mut run = super::pipeline::SearchRun::build(session, &opts)?;
+        run.init()?;
+        let seg = (f1.total_steps / f1.segments).max(1);
+        let mut losses = Vec::new();
+        let mut ppls = Vec::new();
+        let mut accs = Vec::new();
+        // step-0 point
+        let ppl0 = run.test_ppl(session, "wiki", 32)?;
+        losses.push((0.0, run.state.best.total(run.state.alpha)));
+        ppls.push((0.0, ppl0));
+        csv.row(&[
+            n_seqs.to_string(),
+            "0".into(),
+            format!("{:.6}", run.state.best.total(run.state.alpha)),
+            format!("{ppl0:.4}"),
+            "".into(),
+        ])?;
+        for _ in 0..f1.segments {
+            run.steps(seg)?;
+            let step = run.state.step as f64;
+            let loss = run.state.best.total(run.state.alpha);
+            let ppl = run.test_ppl(session, "wiki", 32)?;
+            let acc = run.state.accept_rate();
+            losses.push((step, loss));
+            ppls.push((step, ppl));
+            accs.push((step, acc));
+            csv.row(&[
+                n_seqs.to_string(),
+                run.state.step.to_string(),
+                format!("{loss:.6}"),
+                format!("{ppl:.4}"),
+                format!("{acc:.4}"),
+            ])?;
+        }
+        run.state
+            .telemetry_csv(&results_dir().join(format!("figure1_telemetry_{n_seqs}seqs.csv")))?;
+        loss_series.push((format!("{n_seqs} seqs"), losses));
+        ppl_series.push((format!("{n_seqs} seqs"), ppls));
+        acc_series.push((format!("{n_seqs} seqs"), accs));
+    }
+    csv.flush()?;
+
+    let mut out = format!(
+        "## Figure 1 (analog): optimization curves — AWQ+InvarExplore on {}, {} steps\n\n",
+        f1.model, f1.total_steps
+    );
+    let as_refs = |s: &[(String, Vec<(f64, f64)>)]| -> Vec<(String, Vec<(f64, f64)>)> { s.to_vec() };
+    for (title, series) in [
+        ("(a) calibration loss", as_refs(&loss_series)),
+        ("(b) WikiText test perplexity", as_refs(&ppl_series)),
+        ("(c) acceptance ratio", as_refs(&acc_series)),
+    ] {
+        let refs: Vec<(&str, &[(f64, f64)])> =
+            series.iter().map(|(n, v)| (n.as_str(), v.as_slice())).collect();
+        out.push_str("```\n");
+        out.push_str(&crate::util::plot::render(title, &refs, 64, 14));
+        out.push_str("```\n\n");
+    }
+    write_md(&results_dir().join("figure1_curves.md"), &out)?;
+    Ok(out)
+}

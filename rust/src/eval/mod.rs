@@ -1,0 +1,8 @@
+//! Evaluation harness: perplexity on token corpora and few-shot
+//! multiple-choice reasoning (the lm-eval-harness analogue).
+
+pub mod ppl;
+pub mod reasoning;
+
+pub use ppl::perplexity;
+pub use reasoning::{eval_all_tasks, eval_task, TaskResult};

@@ -1,0 +1,26 @@
+//! Perplexity over a token corpus with the XLA engine (current weights).
+
+use crate::io::tokens::TokenCorpus;
+use crate::runtime::Engine;
+
+/// Perplexity over up to `max_seqs` contiguous sequences of the engine's
+/// compiled sequence length (mask-weighted CE across batches, then exp).
+pub fn perplexity(engine: &Engine, corpus: &TokenCorpus, max_seqs: usize) -> crate::Result<f64> {
+    let seqs = corpus.sequences(max_seqs, engine.seq);
+    anyhow::ensure!(!seqs.is_empty(), "corpus too small for one sequence");
+    let mut ce_num = 0.0;
+    let mut ce_den = 0.0;
+    let b = engine.batch;
+    let mut i = 0;
+    while i < seqs.len() {
+        let end = (i + b).min(seqs.len());
+        let tokens: Vec<Vec<i32>> = seqs[i..end].iter().map(|(t, _)| t.clone()).collect();
+        let targets: Vec<Vec<i32>> = seqs[i..end].iter().map(|(_, t)| t.clone()).collect();
+        let mask = vec![vec![1.0f32; engine.seq]; tokens.len()];
+        let (ce, _lp, mask_sum) = engine.eval_batch(&tokens, &targets, &mask)?;
+        ce_num += ce * mask_sum;
+        ce_den += mask_sum;
+        i = end;
+    }
+    Ok((ce_num / ce_den.max(1.0)).exp())
+}

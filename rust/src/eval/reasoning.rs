@@ -1,0 +1,227 @@
+//! Few-shot multiple-choice reasoning harness (the lm-eval-harness
+//! analogue; paper §4.1 uses 5-shot prompting).
+//!
+//! Each (example, option) pair becomes one sequence: `shots` demonstration
+//! examples (context + correct answer) followed by the test context and the
+//! candidate option.  Only the option tokens are masked into the score, so
+//! the prediction is `argmax_o Σ log p(option_o tokens | prompt)` — exactly
+//! the harness' acc metric.
+
+use crate::io::tasks::TaskExample;
+use crate::runtime::Engine;
+use crate::util::rng::Pcg64;
+
+/// Accuracy of one task.
+#[derive(Debug, Clone)]
+pub struct TaskResult {
+    pub task: String,
+    pub accuracy: f64,
+    pub n: usize,
+}
+
+/// One scored row: sequence + option-masked targets.
+struct Row {
+    tokens: Vec<i32>,
+    targets: Vec<i32>,
+    mask: Vec<f32>,
+    example: usize,
+    option: usize,
+}
+
+/// Build the few-shot prompt rows for `examples[..n_eval]`.
+fn build_rows(
+    examples: &[TaskExample],
+    shots: usize,
+    n_eval: usize,
+    seqlen: usize,
+    seed: u64,
+) -> Vec<Row> {
+    let mut rng = Pcg64::new(seed);
+    let mut rows = Vec::new();
+    let n_eval = n_eval.min(examples.len());
+    for (ei, ex) in examples.iter().take(n_eval).enumerate() {
+        // demonstrations: drawn from the examples *after* the eval slice
+        // when possible (no leakage), else wrap around excluding ei
+        let mut demo_pool: Vec<usize> = (0..examples.len()).filter(|&j| j != ei).collect();
+        rng.shuffle(&mut demo_pool);
+        let mut prompt: Vec<i32> = Vec::new();
+        for &j in demo_pool.iter().take(shots) {
+            let d = &examples[j];
+            prompt.extend(&d.ctx);
+            prompt.extend(&d.options[d.answer]);
+        }
+        prompt.extend(&ex.ctx);
+
+        for (oi, opt) in ex.options.iter().enumerate() {
+            let mut seq = prompt.clone();
+            seq.extend(opt);
+            // keep the tail if too long (few-shot prefix is droppable)
+            if seq.len() > seqlen {
+                seq.drain(..seq.len() - seqlen);
+            }
+            let opt_start = seq.len() - opt.len();
+            let mut tokens = vec![0i32; seqlen];
+            let mut targets = vec![0i32; seqlen];
+            let mut mask = vec![0.0f32; seqlen];
+            // tokens[t] predicts targets[t] = seq[t+1]
+            for t in 0..seq.len() - 1 {
+                tokens[t] = seq[t];
+                targets[t] = seq[t + 1];
+            }
+            tokens[seq.len() - 1] = seq[seq.len() - 1];
+            for (t, m) in mask.iter_mut().enumerate().take(seq.len() - 1) {
+                // target position t predicts seq[t+1]; option tokens are
+                // seq[opt_start..], so mask t where t+1 >= opt_start
+                if t + 1 >= opt_start {
+                    *m = 1.0;
+                }
+            }
+            rows.push(Row { tokens, targets, mask, example: ei, option: oi });
+        }
+    }
+    rows
+}
+
+/// Evaluate one task with the engine's current weights.
+pub fn eval_task(
+    engine: &Engine,
+    task: &str,
+    examples: &[TaskExample],
+    shots: usize,
+    n_eval: usize,
+    seed: u64,
+) -> crate::Result<TaskResult> {
+    let rows = build_rows(examples, shots, n_eval, engine.seq, seed);
+    anyhow::ensure!(!rows.is_empty(), "no rows for task {task}");
+    let n_eval = rows.iter().map(|r| r.example).max().unwrap() + 1;
+
+    // score rows in engine-batch chunks
+    let mut scores: Vec<Vec<f64>> = (0..n_eval)
+        .map(|ei| vec![f64::NEG_INFINITY; examples[ei].options.len()])
+        .collect();
+    let b = engine.batch;
+    let mut i = 0;
+    while i < rows.len() {
+        let end = (i + b).min(rows.len());
+        let chunk = &rows[i..end];
+        let tokens: Vec<Vec<i32>> = chunk.iter().map(|r| r.tokens.clone()).collect();
+        let targets: Vec<Vec<i32>> = chunk.iter().map(|r| r.targets.clone()).collect();
+        let mask: Vec<Vec<f32>> = chunk.iter().map(|r| r.mask.clone()).collect();
+        let (_ce, lp, _) = engine.eval_batch(&tokens, &targets, &mask)?;
+        for (r, score) in chunk.iter().zip(lp) {
+            scores[r.example][r.option] = score as f64;
+        }
+        i = end;
+    }
+
+    let mut correct = 0usize;
+    for (ei, opts) in scores.iter().enumerate() {
+        let pred = opts
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        if pred == examples[ei].answer {
+            correct += 1;
+        }
+    }
+    Ok(TaskResult {
+        task: task.to_string(),
+        accuracy: 100.0 * correct as f64 / n_eval as f64,
+        n: n_eval,
+    })
+}
+
+/// Evaluate all tasks in the manifest; returns per-task results + average.
+pub fn eval_all_tasks(
+    engine: &Engine,
+    data: &crate::io::manifest::DataInfo,
+    shots: usize,
+    n_eval: usize,
+    seed: u64,
+) -> crate::Result<(Vec<TaskResult>, f64)> {
+    let mut results = Vec::new();
+    for (name, path) in &data.tasks {
+        let examples = crate::io::tasks::read(path)?;
+        let r = eval_task(engine, name, &examples, shots, n_eval, seed)?;
+        crate::debug!("task {name}: acc {:.2} (n={})", r.accuracy, r.n);
+        results.push(r);
+    }
+    let avg = results.iter().map(|r| r.accuracy).sum::<f64>() / results.len().max(1) as f64;
+    Ok((results, avg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ex(ctx: Vec<i32>, options: Vec<Vec<i32>>, answer: usize) -> TaskExample {
+        TaskExample { ctx, options, answer }
+    }
+
+    #[test]
+    fn rows_mask_only_option_targets() {
+        let examples = vec![
+            ex(vec![1, 2, 3], vec![vec![7], vec![8, 9]], 1),
+            ex(vec![1, 4], vec![vec![5], vec![6]], 0),
+        ];
+        let rows = build_rows(&examples, 1, 1, 32, 0);
+        assert_eq!(rows.len(), 2); // 2 options of example 0
+        for r in &rows {
+            let masked: usize = r.mask.iter().filter(|&&m| m > 0.0).count();
+            let opt_len = examples[0].options[r.option].len();
+            assert_eq!(masked, opt_len, "option {}", r.option);
+            // masked targets are exactly the option tokens
+            let opt = &examples[0].options[r.option];
+            let masked_targets: Vec<i32> = r
+                .mask
+                .iter()
+                .enumerate()
+                .filter(|(_, &m)| m > 0.0)
+                .map(|(t, _)| r.targets[t])
+                .collect();
+            assert_eq!(&masked_targets, opt);
+        }
+    }
+
+    #[test]
+    fn rows_truncate_long_prompts_keep_tail() {
+        let long_ctx: Vec<i32> = (0..60).collect();
+        let examples = vec![
+            ex(long_ctx.clone(), vec![vec![99]], 0),
+            ex(long_ctx.clone(), vec![vec![98]], 0),
+            ex(long_ctx, vec![vec![97]], 0),
+        ];
+        let rows = build_rows(&examples, 2, 1, 64, 0);
+        // option must still be the masked target even after truncation
+        let r = &rows[0];
+        let masked_targets: Vec<i32> = r
+            .mask
+            .iter()
+            .enumerate()
+            .filter(|(_, &m)| m > 0.0)
+            .map(|(t, _)| r.targets[t])
+            .collect();
+        assert_eq!(masked_targets, vec![99]);
+    }
+
+    #[test]
+    fn demos_exclude_eval_example() {
+        // with 2 examples and 1 shot, the demo for example 0 must be example 1
+        let examples = vec![
+            ex(vec![10, 11], vec![vec![1], vec![2]], 0),
+            ex(vec![20, 21], vec![vec![3], vec![4]], 1),
+        ];
+        let rows = build_rows(&examples, 1, 1, 32, 0);
+        // prompt must contain example 1's ctx (20, 21) and its answer 4
+        let r = &rows[0];
+        let toks: Vec<i32> = r.tokens.clone();
+        assert!(toks.windows(2).any(|w| w == [20, 21]));
+        assert!(toks.contains(&4));
+        // and must not contain example 0's own answer token inside the demo
+        // region (its ctx appears once, as the test context)
+        let count_ctx0 = toks.windows(2).filter(|w| *w == [10, 11]).count();
+        assert_eq!(count_ctx0, 1);
+    }
+}

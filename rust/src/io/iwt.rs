@@ -1,0 +1,198 @@
+//! `.iwt` tensor container reader/writer (format defined in
+//! `python/compile/iwt.py` — keep in sync).
+//!
+//! Layout: `b"IVWT"` magic, u32 version, u64 header length, JSON header
+//! (`{"tensors": {name: {dtype, shape, offset, nbytes}}, "meta": {...}}`),
+//! then 64-byte-aligned little-endian tensor data.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::tensor::Tensor;
+use crate::util::json::{self, Json};
+
+const MAGIC: &[u8; 4] = b"IVWT";
+const VERSION: u32 = 1;
+const ALIGN: usize = 64;
+
+/// A loaded weight file: named tensors + string metadata.
+#[derive(Debug, Clone)]
+pub struct IwtFile {
+    /// Insertion-ordered (file order) tensor map.
+    pub tensors: Vec<(String, Tensor)>,
+    pub meta: BTreeMap<String, String>,
+}
+
+impl IwtFile {
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.tensors.iter().map(|(n, _)| n.as_str()).collect()
+    }
+}
+
+/// Read an `.iwt` file.  Rank-1 tensors load as single-row matrices;
+/// higher ranks collapse leading dims (row-major semantics preserved).
+pub fn read(path: &Path) -> crate::Result<IwtFile> {
+    let mut f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("opening {}: {e}", path.display()))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "{}: bad .iwt magic", path.display());
+    let mut buf4 = [0u8; 4];
+    f.read_exact(&mut buf4)?;
+    let version = u32::from_le_bytes(buf4);
+    anyhow::ensure!(version == VERSION, "unsupported .iwt version {version}");
+    let mut buf8 = [0u8; 8];
+    f.read_exact(&mut buf8)?;
+    let hlen = u64::from_le_bytes(buf8) as usize;
+    let mut header_bytes = vec![0u8; hlen];
+    f.read_exact(&mut header_bytes)?;
+    let header = json::parse(std::str::from_utf8(&header_bytes)?)
+        .map_err(|e| anyhow::anyhow!("{}: header: {e}", path.display()))?;
+    let mut data = Vec::new();
+    f.read_to_end(&mut data)?;
+
+    let mut tensors = Vec::new();
+    for (name, entry) in header.req("tensors")?.entries().unwrap_or(&[]) {
+        let dtype = entry.req("dtype")?.as_str().unwrap_or("");
+        anyhow::ensure!(dtype == "f32", "tensor {name}: unsupported dtype {dtype}");
+        let shape = entry.req("shape")?.usize_array()?;
+        let offset = entry.req("offset")?.as_usize().unwrap();
+        let nbytes = entry.req("nbytes")?.as_usize().unwrap();
+        anyhow::ensure!(offset % ALIGN == 0, "tensor {name}: unaligned offset");
+        anyhow::ensure!(
+            offset + nbytes <= data.len(),
+            "tensor {name}: data out of bounds"
+        );
+        let numel: usize = shape.iter().product::<usize>().max(1);
+        anyhow::ensure!(numel * 4 == nbytes, "tensor {name}: shape/nbytes mismatch");
+        let mut vals = Vec::with_capacity(numel);
+        for c in data[offset..offset + nbytes].chunks_exact(4) {
+            vals.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        let (rows, cols) = match shape.len() {
+            0 => (1, 1),
+            1 => (1, shape[0]),
+            _ => (shape[..shape.len() - 1].iter().product(), shape[shape.len() - 1]),
+        };
+        tensors.push((name.clone(), Tensor::from_vec(rows, cols, vals)));
+    }
+
+    let mut meta = BTreeMap::new();
+    if let Some(entries) = header.get("meta").and_then(|m| m.entries()) {
+        for (k, v) in entries {
+            meta.insert(k.clone(), v.as_str().unwrap_or_default().to_string());
+        }
+    }
+    Ok(IwtFile { tensors, meta })
+}
+
+/// Write an `.iwt` file (used by `invarexplore apply` to materialize
+/// transformed/quantized weights).  Rank-2 shapes only — that is all the
+/// apply path ever writes; rank-1 tensors are stored as `[1, n]`.
+pub fn write(
+    path: &Path,
+    tensors: &[(String, &Tensor, Vec<usize>)],
+    meta: &BTreeMap<String, String>,
+) -> crate::Result<()> {
+    let mut entries = Vec::new();
+    let mut offset = 0usize;
+    let mut blobs: Vec<Vec<u8>> = Vec::new();
+    for (name, t, shape) in tensors {
+        let numel: usize = shape.iter().product();
+        anyhow::ensure!(numel == t.numel(), "tensor {name}: shape/numel mismatch");
+        let nbytes = t.numel() * 4;
+        entries.push((
+            name.clone(),
+            Json::obj()
+                .set("dtype", "f32")
+                .set("shape", shape.iter().map(|&d| Json::from(d)).collect::<Vec<_>>())
+                .set("offset", offset)
+                .set("nbytes", nbytes),
+        ));
+        let mut blob = Vec::with_capacity(nbytes);
+        for v in &t.data {
+            blob.extend_from_slice(&v.to_le_bytes());
+        }
+        offset += nbytes;
+        let pad = (ALIGN - offset % ALIGN) % ALIGN;
+        blob.extend(std::iter::repeat(0u8).take(pad));
+        offset += pad;
+        blobs.push(blob);
+    }
+    let meta_json = Json::Obj(
+        meta.iter()
+            .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+            .collect(),
+    );
+    let header = Json::obj()
+        .set("tensors", Json::Obj(entries))
+        .set("meta", meta_json)
+        .to_string();
+
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(header.len() as u64).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for b in &blobs {
+        f.write_all(b)?;
+    }
+    f.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("invarexplore_iwt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t1 = Tensor::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let t2 = Tensor::from_vec(1, 4, vec![0.5, -0.5, 1.5, -1.5]);
+        let mut meta = BTreeMap::new();
+        meta.insert("name".to_string(), "test".to_string());
+        let p = tmp("rt.iwt");
+        write(
+            &p,
+            &[
+                ("a".to_string(), &t1, vec![2, 3]),
+                ("b.c".to_string(), &t2, vec![4]),
+            ],
+            &meta,
+        )
+        .unwrap();
+        let back = read(&p).unwrap();
+        assert_eq!(back.get("a").unwrap(), &t1);
+        assert_eq!(back.get("b.c").unwrap(), &t2);
+        assert_eq!(back.meta["name"], "test");
+        assert_eq!(back.names(), vec!["a", "b.c"]);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmp("bad.iwt");
+        std::fs::write(&p, b"XXXX0123456789ab").unwrap();
+        assert!(read(&p).is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let t = Tensor::from_vec(1, 2, vec![1.0, 2.0]);
+        let p = tmp("mismatch.iwt");
+        assert!(write(&p, &[("x".to_string(), &t, vec![3])], &BTreeMap::new()).is_err());
+    }
+}

@@ -1,0 +1,252 @@
+//! Artifacts manifest (`artifacts/manifest.json`, written by `aot.py`).
+//!
+//! The manifest is the single source of truth for the Rust side: model
+//! configs, canonical parameter ordering, HLO program paths + signatures,
+//! and dataset locations.  All paths are relative to the manifest's parent
+//! directory, so the artifacts tree is relocatable.
+
+use std::path::{Path, PathBuf};
+
+use crate::model::config::OptConfig;
+use crate::util::json::{self, Json};
+
+/// One HLO program's signature.
+#[derive(Debug, Clone)]
+pub struct ProgramInfo {
+    pub name: String,
+    pub path: PathBuf,
+    /// (param name, shape, dtype) in HLO parameter order.
+    pub params: Vec<(String, Vec<usize>, String)>,
+}
+
+/// One model's entry.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub config: OptConfig,
+    pub weights_path: PathBuf,
+    pub param_names: Vec<String>,
+    pub programs: Vec<ProgramInfo>,
+}
+
+impl ModelInfo {
+    pub fn program(&self, name: &str) -> crate::Result<&ProgramInfo> {
+        self.programs
+            .iter()
+            .find(|p| p.name == name)
+            .ok_or_else(|| anyhow::anyhow!("model {}: no program {name:?}", self.config.name))
+    }
+
+    pub fn has_program(&self, name: &str) -> bool {
+        self.programs.iter().any(|p| p.name == name)
+    }
+}
+
+/// Dataset entries.
+#[derive(Debug, Clone)]
+pub struct DataInfo {
+    pub vocab: usize,
+    pub corpora: Vec<(String, PathBuf)>,
+    pub tasks: Vec<(String, PathBuf)>,
+}
+
+impl DataInfo {
+    pub fn corpus(&self, name: &str) -> crate::Result<&Path> {
+        self.corpora
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, p)| p.as_path())
+            .ok_or_else(|| anyhow::anyhow!("no corpus {name:?} in manifest"))
+    }
+
+    pub fn task(&self, name: &str) -> crate::Result<&Path> {
+        self.tasks
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, p)| p.as_path())
+            .ok_or_else(|| anyhow::anyhow!("no task {name:?} in manifest"))
+    }
+
+    pub fn task_names(&self) -> Vec<&str> {
+        self.tasks.iter().map(|(n, _)| n.as_str()).collect()
+    }
+}
+
+/// The full parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub batch: usize,
+    pub seq: usize,
+    pub quant_bits: Vec<usize>,
+    pub quant_groups: Vec<usize>,
+    pub models: Vec<(String, ModelInfo)>,
+    pub data: DataInfo,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json` (default dir: `artifacts/`, override with
+    /// `INVAREXPLORE_ARTIFACTS`).
+    pub fn load_default() -> crate::Result<Manifest> {
+        let dir = std::env::var("INVAREXPLORE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(Path::new(&dir))
+    }
+
+    pub fn load(dir: &Path) -> crate::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let root = json::parse_file(&path)?;
+        Self::from_json(&root, dir)
+    }
+
+    pub fn from_json(root: &Json, dir: &Path) -> crate::Result<Manifest> {
+        let batch_obj = root.req("batch")?;
+        let batch = batch_obj.req("B")?.as_usize().unwrap();
+        let seq = batch_obj.req("T")?.as_usize().unwrap();
+
+        let mut models = Vec::new();
+        for (name, m) in root.req("models")?.entries().unwrap_or(&[]) {
+            let config = OptConfig::from_json(m.req("config")?)?;
+            let weights_path = dir.join(m.req("weights")?.as_str().unwrap_or(""));
+            let param_names = m
+                .req("param_names")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|v| v.as_str().unwrap_or("").to_string())
+                .collect();
+            let mut programs = Vec::new();
+            for (pname, p) in m.req("programs")?.entries().unwrap_or(&[]) {
+                let params = p
+                    .req("params")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|e| {
+                        Ok((
+                            e.req("name")?.as_str().unwrap_or("").to_string(),
+                            e.req("shape")?.usize_array()?,
+                            e.req("dtype")?.as_str().unwrap_or("f32").to_string(),
+                        ))
+                    })
+                    .collect::<crate::Result<Vec<_>>>()?;
+                programs.push(ProgramInfo {
+                    name: pname.clone(),
+                    path: dir.join(p.req("path")?.as_str().unwrap_or("")),
+                    params,
+                });
+            }
+            models.push((
+                name.clone(),
+                ModelInfo {
+                    config,
+                    weights_path,
+                    param_names,
+                    programs,
+                },
+            ));
+        }
+
+        let data_json = root.req("data")?;
+        let mut corpora = Vec::new();
+        for (n, c) in data_json.req("corpora")?.entries().unwrap_or(&[]) {
+            corpora.push((n.clone(), dir.join(c.req("path")?.as_str().unwrap_or(""))));
+        }
+        let mut tasks = Vec::new();
+        for (n, t) in data_json.req("tasks")?.entries().unwrap_or(&[]) {
+            tasks.push((n.clone(), dir.join(t.req("path")?.as_str().unwrap_or(""))));
+        }
+
+        Ok(Manifest {
+            root: dir.to_path_buf(),
+            batch,
+            seq,
+            quant_bits: root
+                .get("quant_bits")
+                .map(|v| v.usize_array())
+                .transpose()?
+                .unwrap_or_default(),
+            quant_groups: root
+                .get("quant_groups")
+                .map(|v| v.usize_array())
+                .transpose()?
+                .unwrap_or_default(),
+            models,
+            data: DataInfo {
+                vocab: data_json.req("vocab")?.as_usize().unwrap_or(0),
+                corpora,
+                tasks,
+            },
+        })
+    }
+
+    pub fn model(&self, name: &str) -> crate::Result<&ModelInfo> {
+        self.models
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, m)| m)
+            .ok_or_else(|| {
+                let avail: Vec<&str> = self.models.iter().map(|(n, _)| n.as_str()).collect();
+                anyhow::anyhow!("no model {name:?} in manifest (available: {avail:?})")
+            })
+    }
+
+    pub fn model_names(&self) -> Vec<&str> {
+        self.models.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    /// Name of the standalone fake-quant program for a weight shape.
+    pub fn quant_program_name(rows: usize, cols: usize, bits: usize, group: usize) -> String {
+        format!("quant_{rows}x{cols}_{bits}b{group}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "batch": {"B": 8, "T": 128},
+      "quant_bits": [1, 2],
+      "quant_groups": [32],
+      "data": {
+        "vocab": 2048,
+        "corpora": {"wiki": {"path": "data/wiki.tok", "tokens": 100}},
+        "tasks": {"bool": {"path": "data/task_bool.json", "n": 10}}
+      },
+      "models": {
+        "m": {
+          "config": {"name": "m", "vocab": 2048, "d_model": 64, "n_layers": 2,
+                     "n_heads": 4, "d_ffn": 128, "max_seq": 128},
+          "weights": "models/m.iwt",
+          "param_names": ["emb", "pos"],
+          "programs": {
+            "embed": {"path": "programs/m/embed.hlo.txt",
+                      "params": [{"name": "tokens", "shape": [8, 128], "dtype": "i32"}]}
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let root = json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(&root, Path::new("/art")).unwrap();
+        assert_eq!(m.batch, 8);
+        assert_eq!(m.seq, 128);
+        assert_eq!(m.model_names(), vec!["m"]);
+        let model = m.model("m").unwrap();
+        assert_eq!(model.config.d_model, 64);
+        let prog = model.program("embed").unwrap();
+        assert_eq!(prog.path, PathBuf::from("/art/programs/m/embed.hlo.txt"));
+        assert_eq!(prog.params[0].1, vec![8, 128]);
+        assert_eq!(prog.params[0].2, "i32");
+        assert_eq!(m.data.corpus("wiki").unwrap(), Path::new("/art/data/wiki.tok"));
+        assert!(m.data.corpus("nope").is_err());
+        assert!(model.program("nope").is_err());
+    }
+
+    #[test]
+    fn quant_program_name_format() {
+        assert_eq!(Manifest::quant_program_name(512, 128, 2, 64), "quant_512x128_2b64");
+    }
+}

@@ -1,0 +1,8 @@
+//! Artifact I/O: the `.iwt` weight container, `.tok` token corpora,
+//! reasoning-task JSON files and the artifacts manifest emitted by
+//! `python/compile/aot.py`.
+
+pub mod iwt;
+pub mod manifest;
+pub mod tasks;
+pub mod tokens;

@@ -1,0 +1,89 @@
+//! Reasoning-task file reader: JSON lists of
+//! `{"ctx": [tok...], "options": [[tok...], ...], "answer": i}` produced by
+//! `python/compile/datagen.py`'s six task generators.
+
+use std::path::Path;
+
+use crate::util::json;
+
+/// One few-shot multiple-choice example.
+#[derive(Debug, Clone)]
+pub struct TaskExample {
+    pub ctx: Vec<i32>,
+    pub options: Vec<Vec<i32>>,
+    pub answer: usize,
+}
+
+pub fn read(path: &Path) -> crate::Result<Vec<TaskExample>> {
+    let root = json::parse_file(path)?;
+    let arr = root
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("{}: task file is not an array", path.display()))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, ex) in arr.iter().enumerate() {
+        let ctx: Vec<i32> = ex
+            .req("ctx")?
+            .usize_array()
+            .map_err(|e| anyhow::anyhow!("example {i} ctx: {e}"))?
+            .into_iter()
+            .map(|t| t as i32)
+            .collect();
+        let options = ex
+            .req("options")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("example {i}: options not array"))?
+            .iter()
+            .map(|o| {
+                o.usize_array()
+                    .map(|v| v.into_iter().map(|t| t as i32).collect::<Vec<i32>>())
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        let answer = ex.req("answer")?.as_usize().unwrap_or(usize::MAX);
+        anyhow::ensure!(
+            answer < options.len(),
+            "example {i}: answer {answer} out of range ({} options)",
+            options.len()
+        );
+        anyhow::ensure!(!ctx.is_empty(), "example {i}: empty ctx");
+        out.push(TaskExample { ctx, options, answer });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str, content: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("invarexplore_tasks_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        std::fs::write(&p, content).unwrap();
+        p
+    }
+
+    #[test]
+    fn parses_examples() {
+        let p = tmp(
+            "t.json",
+            r#"[{"ctx": [1, 5, 9], "options": [[3], [4, 2]], "answer": 1}]"#,
+        );
+        let ex = read(&p).unwrap();
+        assert_eq!(ex.len(), 1);
+        assert_eq!(ex[0].ctx, vec![1, 5, 9]);
+        assert_eq!(ex[0].options[1], vec![4, 2]);
+        assert_eq!(ex[0].answer, 1);
+    }
+
+    #[test]
+    fn rejects_bad_answer() {
+        let p = tmp("bad.json", r#"[{"ctx": [1], "options": [[2]], "answer": 3}]"#);
+        assert!(read(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_ctx() {
+        let p = tmp("empty.json", r#"[{"ctx": [], "options": [[2]], "answer": 0}]"#);
+        assert!(read(&p).is_err());
+    }
+}

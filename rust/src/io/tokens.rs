@@ -1,0 +1,113 @@
+//! `.tok` token-corpus reader (format defined in `python/compile/datagen.py`):
+//! `b"IVTK"`, u32 version, u32 vocab, u32 count, then `count` LE u32 tokens.
+
+use std::io::Read;
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"IVTK";
+const VERSION: u32 = 1;
+
+/// A loaded token stream.
+#[derive(Debug, Clone)]
+pub struct TokenCorpus {
+    pub vocab: usize,
+    pub tokens: Vec<u32>,
+}
+
+pub fn read(path: &Path) -> crate::Result<TokenCorpus> {
+    let mut f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("opening {}: {e}", path.display()))?;
+    let mut hdr = [0u8; 16];
+    f.read_exact(&mut hdr)?;
+    anyhow::ensure!(&hdr[..4] == MAGIC, "{}: bad .tok magic", path.display());
+    let version = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+    anyhow::ensure!(version == VERSION, "unsupported .tok version {version}");
+    let vocab = u32::from_le_bytes(hdr[8..12].try_into().unwrap()) as usize;
+    let count = u32::from_le_bytes(hdr[12..16].try_into().unwrap()) as usize;
+    let mut data = vec![0u8; count * 4];
+    f.read_exact(&mut data)?;
+    let tokens: Vec<u32> = data
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    for (i, &t) in tokens.iter().enumerate() {
+        anyhow::ensure!(
+            (t as usize) < vocab,
+            "{}: token {t} at {i} exceeds vocab {vocab}",
+            path.display()
+        );
+    }
+    Ok(TokenCorpus { vocab, tokens })
+}
+
+impl TokenCorpus {
+    /// Slice into `[n_seqs, seqlen]` contiguous calibration/eval sequences
+    /// (plus next-token targets).  Matches the python-side chunking.
+    pub fn sequences(&self, n_seqs: usize, seqlen: usize) -> Vec<(Vec<i32>, Vec<i32>)> {
+        let avail = (self.tokens.len() - 1) / seqlen;
+        let n = n_seqs.min(avail);
+        (0..n)
+            .map(|s| {
+                let start = s * seqlen;
+                let toks = self.tokens[start..start + seqlen].iter().map(|&t| t as i32).collect();
+                let tgts = self.tokens[start + 1..start + seqlen + 1].iter().map(|&t| t as i32).collect();
+                (toks, tgts)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_tok(path: &Path, vocab: u32, tokens: &[u32]) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(MAGIC).unwrap();
+        f.write_all(&VERSION.to_le_bytes()).unwrap();
+        f.write_all(&vocab.to_le_bytes()).unwrap();
+        f.write_all(&(tokens.len() as u32).to_le_bytes()).unwrap();
+        for t in tokens {
+            f.write_all(&t.to_le_bytes()).unwrap();
+        }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("invarexplore_tok_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_and_sequences() {
+        let toks: Vec<u32> = (0..100).map(|i| i % 50).collect();
+        let p = tmp("a.tok");
+        write_tok(&p, 50, &toks);
+        let c = read(&p).unwrap();
+        assert_eq!(c.vocab, 50);
+        assert_eq!(c.tokens, toks);
+        let seqs = c.sequences(3, 16);
+        assert_eq!(seqs.len(), 3);
+        assert_eq!(seqs[0].0.len(), 16);
+        // targets shifted by one
+        assert_eq!(seqs[0].1[0], seqs[0].0[1]);
+        assert_eq!(seqs[1].0[0] as u32, toks[16]);
+    }
+
+    #[test]
+    fn sequences_clamped_to_available() {
+        let toks: Vec<u32> = (0..33).collect();
+        let p = tmp("b.tok");
+        write_tok(&p, 64, &toks);
+        let c = read(&p).unwrap();
+        assert_eq!(c.sequences(100, 16).len(), 2);
+    }
+
+    #[test]
+    fn out_of_vocab_rejected() {
+        let p = tmp("c.tok");
+        write_tok(&p, 4, &[1, 2, 9]);
+        assert!(read(&p).is_err());
+    }
+}

@@ -1,0 +1,43 @@
+//! # InvarExplore
+//!
+//! A Rust + JAX + Pallas reproduction of *"Exploring Model Invariance with
+//! Discrete Search for Ultra-Low-Bit Quantization"* (Wen, Cao, Mou; 2025).
+//!
+//! InvarExplore improves ultra-low-bit (1–3 bit) post-training quantization
+//! by searching — with an activation-guided hill-climbing algorithm — over
+//! *invariant transformations* of transformer FFN blocks: permutation **P**,
+//! per-channel scaling **S** and pairwise rotation **R**.  These leave the
+//! FP model's function (nearly) unchanged but redistribute weight outliers,
+//! changing the groupwise quantization error and therefore the quantized
+//! model's perplexity and downstream accuracy (paper Eqns. 5–23,
+//! Algorithm 1).
+//!
+//! ## Architecture (see DESIGN.md)
+//!
+//! * **Layer 3 (this crate)** — the coordinator: search loop, quantization
+//!   baselines (RTN / GPTQ / AWQ / OmniQuant-lite), transforms, evaluation
+//!   harness and every substrate (tensor math, JSON, RNG, thread pool, …).
+//! * **Layer 2 (python/compile)** — the OPT-style JAX model, lowered once
+//!   to HLO text by `aot.py`.
+//! * **Layer 1 (python/compile/kernels)** — the Pallas groupwise fake-quant
+//!   kernel, lowered (interpret mode) into the same HLO programs.
+//! * **Runtime** — [`runtime`] loads `artifacts/*.hlo.txt` through the
+//!   `xla` crate's PJRT CPU client and executes them from the search hot
+//!   path.  Python never runs at request time.
+
+pub mod baselines;
+pub mod calib;
+pub mod cli;
+pub mod coordinator;
+pub mod eval;
+pub mod io;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod search;
+pub mod tensor;
+pub mod transform;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

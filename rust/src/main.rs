@@ -1,0 +1,12 @@
+//! `invarexplore` — CLI entry point.  See `cli::USAGE`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match invarexplore::cli::main_with_args(argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

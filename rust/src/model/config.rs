@@ -1,0 +1,152 @@
+//! Model hyper-parameters (mirrors `python/compile/model.py::OptConfig`).
+
+use crate::util::json::Json;
+
+/// OPT-style decoder configuration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OptConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ffn: usize,
+    pub max_seq: usize,
+}
+
+/// Per-layer parameter base names in canonical order (mirrors
+/// `model.LAYER_PARAM_NAMES`).
+pub const LAYER_PARAM_NAMES: [&str; 16] = [
+    "ln1.w", "ln1.b", "q.w", "q.b", "k.w", "k.b", "v.w", "v.b", "o.w", "o.b",
+    "ln2.w", "ln2.b", "up.w", "up.b", "down.w", "down.b",
+];
+
+/// Quantizable linear weights within a layer (mirrors `LAYER_QUANT_NAMES`).
+pub const LAYER_QUANT_NAMES: [&str; 6] = ["q.w", "k.w", "v.w", "o.w", "up.w", "down.w"];
+
+impl OptConfig {
+    pub fn head_dim(&self) -> usize {
+        debug_assert_eq!(self.d_model % self.n_heads, 0);
+        self.d_model / self.n_heads
+    }
+
+    /// Canonical flat parameter-name order (mirrors `model.param_names`).
+    pub fn param_names(&self) -> Vec<String> {
+        let mut names = vec!["emb".to_string(), "pos".to_string()];
+        for i in 0..self.n_layers {
+            for base in LAYER_PARAM_NAMES {
+                names.push(format!("l{i}.{base}"));
+            }
+        }
+        names.push("lnf.w".to_string());
+        names.push("lnf.b".to_string());
+        names
+    }
+
+    /// Total parameter count (tied LM head: emb counted once).
+    pub fn num_params(&self) -> usize {
+        let d = self.d_model;
+        let per_layer = 4 * (d * d + d) + 2 * self.d_ffn * d + self.d_ffn + d + 4 * d;
+        self.vocab * d + self.max_seq * d + self.n_layers * per_layer + 2 * d
+    }
+
+    /// Expected shape of a named parameter.
+    pub fn param_shape(&self, name: &str) -> crate::Result<(usize, usize)> {
+        let (d, f, v, t) = (self.d_model, self.d_ffn, self.vocab, self.max_seq);
+        let base = match name.split_once('.') {
+            Some((head, rest)) if head.len() > 1 && head.starts_with('l')
+                && head[1..].chars().all(|c| c.is_ascii_digit()) => rest,
+            _ => name,
+        };
+        Ok(match base {
+            "emb" => (v, d),
+            "pos" => (t, d),
+            "q.w" | "k.w" | "v.w" | "o.w" => (d, d),
+            "q.b" | "k.b" | "v.b" | "o.b" => (1, d),
+            "up.w" => (f, d),
+            "up.b" => (1, f),
+            "down.w" => (d, f),
+            "down.b" => (1, d),
+            "ln1.w" | "ln1.b" | "ln2.w" | "ln2.b" | "lnf.w" | "lnf.b" => (1, d),
+            _ => anyhow::bail!("unknown parameter {name:?}"),
+        })
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<OptConfig> {
+        Ok(OptConfig {
+            name: j.req("name")?.as_str().unwrap_or("").to_string(),
+            vocab: j.req("vocab")?.as_usize().unwrap(),
+            d_model: j.req("d_model")?.as_usize().unwrap(),
+            n_layers: j.req("n_layers")?.as_usize().unwrap(),
+            n_heads: j.req("n_heads")?.as_usize().unwrap(),
+            d_ffn: j.req("d_ffn")?.as_usize().unwrap(),
+            max_seq: j.req("max_seq")?.as_usize().unwrap(),
+        })
+    }
+
+    /// A small config for unit tests (no artifacts needed).
+    pub fn test_config() -> OptConfig {
+        OptConfig {
+            name: "test".into(),
+            vocab: 96,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 4,
+            d_ffn: 64,
+            max_seq: 32,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_names_order_and_count() {
+        let cfg = OptConfig::test_config();
+        let names = cfg.param_names();
+        assert_eq!(names.len(), 2 + 16 * 2 + 2);
+        assert_eq!(names[0], "emb");
+        assert_eq!(names[2], "l0.ln1.w");
+        assert_eq!(names[names.len() - 1], "lnf.b");
+    }
+
+    #[test]
+    fn shapes_cover_all_names() {
+        let cfg = OptConfig::test_config();
+        for n in cfg.param_names() {
+            let (r, c) = cfg.param_shape(&n).unwrap();
+            assert!(r > 0 && c > 0, "{n}");
+        }
+        assert!(cfg.param_shape("bogus").is_err());
+        // lnf.w is NOT a layer param: shape (1, d)
+        assert_eq!(cfg.param_shape("lnf.w").unwrap(), (1, 32));
+        assert_eq!(cfg.param_shape("l1.up.w").unwrap(), (64, 32));
+    }
+
+    #[test]
+    fn num_params_matches_shapes() {
+        let cfg = OptConfig::test_config();
+        let total: usize = cfg
+            .param_names()
+            .iter()
+            .map(|n| {
+                let (r, c) = cfg.param_shape(n).unwrap();
+                r * c
+            })
+            .sum();
+        assert_eq!(total, cfg.num_params());
+    }
+
+    #[test]
+    fn from_json_parses() {
+        let j = crate::util::json::parse(
+            r#"{"name": "x", "vocab": 10, "d_model": 8, "n_layers": 1,
+                "n_heads": 2, "d_ffn": 16, "max_seq": 4}"#,
+        )
+        .unwrap();
+        let cfg = OptConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.head_dim(), 4);
+    }
+}

@@ -1,0 +1,11 @@
+//! The OPT-style model on the Rust side: configuration, named weight set,
+//! and a full native (pure-Rust) forward pass used as (a) the numerics
+//! oracle for the HLO programs and (b) the activation tap for baseline
+//! calibration (GPTQ Hessians, AWQ activation scales).
+
+pub mod config;
+pub mod native;
+pub mod weights;
+
+pub use config::OptConfig;
+pub use weights::Weights;

@@ -1,0 +1,409 @@
+//! Native (pure-Rust) forward pass of the OPT-style decoder.
+//!
+//! Two roles (DESIGN.md §5.3):
+//!
+//! 1. **Oracle** — an implementation of exactly the same math as the L2 JAX
+//!    model, used by integration tests to pin the HLO programs' numerics.
+//! 2. **Calibration tap** — captures the *inputs of every linear layer* on
+//!    the calibration set, which the GPTQ/AWQ/OmniQuant baselines need
+//!    (Hessians `2XXᵀ`, per-channel activation magnitudes) and which the
+//!    XLA programs do not expose.
+//!
+//! The search hot path does NOT go through this module — it runs the AOT
+//! XLA artifacts (see [`crate::runtime`]).  Sequences in a batch are
+//! independent (causal attention within each sequence), so the batch loop
+//! parallelizes over the thread pool.
+
+use super::Weights;
+use crate::tensor::ops::{self, layer_norm, linear, log_prob_at, relu, softmax_rows};
+use crate::tensor::Tensor;
+use crate::util::pool;
+
+/// What to capture during a forward pass.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Capture {
+    /// Post-block residual stream per layer (the H of Eqn. 23).
+    pub hidden: bool,
+    /// Inputs to every linear layer (for baseline calibration).
+    pub linear_inputs: bool,
+    /// Final-position logits (for greedy generation in the serve example).
+    pub last_logits: bool,
+}
+
+/// Captured per-layer linear inputs for one sequence batch, flattened to
+/// `[B*T, in_features]`.
+#[derive(Debug, Clone)]
+pub struct LayerInputs {
+    /// Input to q/k/v projections (post-LN1 hidden).
+    pub qkv_in: Tensor,
+    /// Input to the output projection (concatenated attention output).
+    pub o_in: Tensor,
+    /// Input to W_up (post-LN2 hidden).
+    pub up_in: Tensor,
+    /// Input to W_down (ReLU activations) — the paper's FFN hidden.
+    pub down_in: Tensor,
+}
+
+/// Forward results over a batch of sequences.
+#[derive(Debug, Clone)]
+pub struct ForwardOutput {
+    /// Mean CE over masked positions (natural log).
+    pub ce: f64,
+    /// Per-sequence summed masked log-prob (the reasoning-eval score).
+    pub seq_logprob: Vec<f32>,
+    /// Per-layer hidden stacks `[B*T, D]` (empty unless captured).
+    pub hidden: Vec<Tensor>,
+    /// Per-layer linear inputs (empty unless captured).
+    pub linear_inputs: Vec<LayerInputs>,
+    /// `[B, vocab]` logits at each sequence's last position (if captured).
+    pub last_logits: Vec<Vec<f32>>,
+}
+
+/// One sequence's intermediate results.
+struct SeqResult {
+    ce_sum: f64,
+    n_masked: f64,
+    logprob: f32,
+    hidden: Vec<Tensor>,
+    inputs: Vec<LayerInputs>,
+    last_logits: Vec<f32>,
+}
+
+/// Run the model over `B` sequences of equal length with per-token masks.
+///
+/// `mask[b][t] == 1.0` marks positions contributing to CE / seq-logprob.
+pub fn forward(
+    w: &Weights,
+    tokens: &[Vec<i32>],
+    targets: &[Vec<i32>],
+    mask: &[Vec<f32>],
+    capture: Capture,
+) -> ForwardOutput {
+    assert_eq!(tokens.len(), targets.len());
+    assert_eq!(tokens.len(), mask.len());
+    let threads = pool::num_threads();
+    let results: Vec<SeqResult> = pool::parallel_map(tokens.len(), threads, |b| {
+        forward_seq(w, &tokens[b], &targets[b], &mask[b], capture)
+    });
+
+    let cfg = &w.config;
+    let total_ce: f64 = results.iter().map(|r| r.ce_sum).sum();
+    let total_masked: f64 = results.iter().map(|r| r.n_masked).sum::<f64>().max(1.0);
+
+    let mut hidden = Vec::new();
+    let mut linear_inputs = Vec::new();
+    if capture.hidden {
+        for l in 0..cfg.n_layers {
+            hidden.push(concat_rows(results.iter().map(|r| &r.hidden[l])));
+        }
+    }
+    if capture.linear_inputs {
+        for l in 0..cfg.n_layers {
+            linear_inputs.push(LayerInputs {
+                qkv_in: concat_rows(results.iter().map(|r| &r.inputs[l].qkv_in)),
+                o_in: concat_rows(results.iter().map(|r| &r.inputs[l].o_in)),
+                up_in: concat_rows(results.iter().map(|r| &r.inputs[l].up_in)),
+                down_in: concat_rows(results.iter().map(|r| &r.inputs[l].down_in)),
+            });
+        }
+    }
+    ForwardOutput {
+        ce: total_ce / total_masked,
+        seq_logprob: results.iter().map(|r| r.logprob).collect(),
+        hidden,
+        linear_inputs,
+        last_logits: if capture.last_logits {
+            results.into_iter().map(|r| r.last_logits).collect()
+        } else {
+            Vec::new()
+        },
+    }
+}
+
+fn concat_rows<'a>(parts: impl Iterator<Item = &'a Tensor>) -> Tensor {
+    let parts: Vec<&Tensor> = parts.collect();
+    let cols = parts[0].cols;
+    let rows: usize = parts.iter().map(|t| t.rows).sum();
+    let mut out = Tensor::zeros(rows, cols);
+    let mut r = 0;
+    for p in parts {
+        assert_eq!(p.cols, cols);
+        out.data[r * cols..(r + p.rows) * cols].copy_from_slice(&p.data);
+        r += p.rows;
+    }
+    out
+}
+
+fn forward_seq(
+    w: &Weights,
+    tokens: &[i32],
+    targets: &[i32],
+    mask: &[f32],
+    capture: Capture,
+) -> SeqResult {
+    let cfg = &w.config;
+    let t_len = tokens.len();
+    assert!(t_len <= cfg.max_seq, "sequence longer than max_seq");
+
+    // embed + positions
+    let emb = w.get("emb");
+    let pos = w.get("pos");
+    let mut x = Tensor::zeros(t_len, cfg.d_model);
+    for (t, &tok) in tokens.iter().enumerate() {
+        let row = emb.row(tok as usize);
+        let prow = pos.row(t);
+        let dst = x.row_mut(t);
+        for c in 0..cfg.d_model {
+            dst[c] = row[c] + prow[c];
+        }
+    }
+
+    let mut hidden = Vec::new();
+    let mut inputs = Vec::new();
+    for l in 0..cfg.n_layers {
+        let (x2, layer_inputs) = block(w, l, &x, capture.linear_inputs);
+        x = x2;
+        if capture.hidden {
+            hidden.push(x.clone());
+        }
+        if let Some(li) = layer_inputs {
+            inputs.push(li);
+        }
+    }
+
+    // final LN + tied head
+    let h = layer_norm(&x, w.bias("lnf.w"), w.bias("lnf.b"));
+    // logits [T, V] = h @ emb^T
+    let mut logits = Tensor::zeros(t_len, cfg.vocab);
+    ops::matmul_nt_par(&h.data, &emb.data, t_len, cfg.d_model, cfg.vocab, &mut logits.data);
+
+    let mut ce_sum = 0.0f64;
+    let mut n_masked = 0.0f64;
+    let mut logprob = 0.0f32;
+    for t in 0..t_len {
+        if mask[t] > 0.0 {
+            let lp = log_prob_at(logits.row(t), targets[t] as usize);
+            ce_sum += -(lp as f64) * mask[t] as f64;
+            n_masked += mask[t] as f64;
+            logprob += lp * mask[t];
+        }
+    }
+
+    SeqResult {
+        ce_sum,
+        n_masked,
+        logprob,
+        hidden,
+        inputs,
+        last_logits: if capture.last_logits {
+            logits.row(t_len - 1).to_vec()
+        } else {
+            Vec::new()
+        },
+    }
+}
+
+/// One decoder block; optionally returns the captured linear inputs.
+fn block(w: &Weights, l: usize, x: &Tensor, cap: bool) -> (Tensor, Option<LayerInputs>) {
+    let cfg = &w.config;
+    let (t_len, d) = x.shape();
+    let heads = cfg.n_heads;
+    let hd = cfg.head_dim();
+
+    // -- attention half ------------------------------------------------------
+    let h = layer_norm(
+        x,
+        &w.layer(l, "ln1.w").data,
+        &w.layer(l, "ln1.b").data,
+    );
+    let q = linear(&h, w.layer(l, "q.w"), &w.layer(l, "q.b").data);
+    let k = linear(&h, w.layer(l, "k.w"), &w.layer(l, "k.b").data);
+    let v = linear(&h, w.layer(l, "v.w"), &w.layer(l, "v.b").data);
+
+    let mut attn_out = Tensor::zeros(t_len, d);
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut qh = Tensor::zeros(t_len, hd);
+    let mut kh = Tensor::zeros(t_len, hd);
+    let mut vh = Tensor::zeros(t_len, hd);
+    for head in 0..heads {
+        let c0 = head * hd;
+        for t in 0..t_len {
+            qh.row_mut(t).copy_from_slice(&q.row(t)[c0..c0 + hd]);
+            kh.row_mut(t).copy_from_slice(&k.row(t)[c0..c0 + hd]);
+            vh.row_mut(t).copy_from_slice(&v.row(t)[c0..c0 + hd]);
+        }
+        // scores [T, T] with causal mask
+        let mut scores = Tensor::zeros(t_len, t_len);
+        ops::matmul_nt(&qh.data, &kh.data, t_len, hd, t_len, &mut scores.data);
+        for t in 0..t_len {
+            let row = scores.row_mut(t);
+            for (c, val) in row.iter_mut().enumerate() {
+                *val = if c <= t { *val * scale } else { -1e30 };
+            }
+        }
+        softmax_rows(&mut scores);
+        // out_h [T, hd] = scores @ vh  (vh is [T, hd]; need N-layout matmul)
+        for t in 0..t_len {
+            let srow = scores.row(t);
+            let orow = &mut attn_out.row_mut(t)[c0..c0 + hd];
+            for (s, vrow) in srow.iter().zip(0..t_len) {
+                if *s == 0.0 {
+                    continue;
+                }
+                let vr = vh.row(vrow);
+                for c in 0..hd {
+                    orow[c] += s * vr[c];
+                }
+            }
+        }
+    }
+    let o = linear(&attn_out, w.layer(l, "o.w"), &w.layer(l, "o.b").data);
+    let mut x1 = x.clone();
+    ops::add_assign(&mut x1, &o);
+
+    // -- FFN half (the invariance site) --------------------------------------
+    let h2 = layer_norm(
+        &x1,
+        &w.layer(l, "ln2.w").data,
+        &w.layer(l, "ln2.b").data,
+    );
+    let mut u = linear(&h2, w.layer(l, "up.w"), &w.layer(l, "up.b").data);
+    relu(&mut u);
+    let down = linear(&u, w.layer(l, "down.w"), &w.layer(l, "down.b").data);
+    let mut x2 = x1;
+    ops::add_assign(&mut x2, &down);
+
+    let captured = if cap {
+        Some(LayerInputs {
+            qkv_in: h,
+            o_in: attn_out,
+            up_in: h2,
+            down_in: u,
+        })
+    } else {
+        None
+    };
+    (x2, captured)
+}
+
+/// Convenience: perplexity of a token stream chunked into sequences.
+pub fn perplexity(w: &Weights, tokens: &[u32], seqlen: usize, max_seqs: usize) -> f64 {
+    let n = ((tokens.len() - 1) / seqlen).min(max_seqs);
+    let mut toks = Vec::new();
+    let mut tgts = Vec::new();
+    let mut masks = Vec::new();
+    for s in 0..n {
+        let a = s * seqlen;
+        toks.push(tokens[a..a + seqlen].iter().map(|&t| t as i32).collect());
+        tgts.push(tokens[a + 1..a + seqlen + 1].iter().map(|&t| t as i32).collect());
+        masks.push(vec![1.0f32; seqlen]);
+    }
+    let out = forward(w, &toks, &tgts, &masks, Capture::default());
+    out.ce.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::OptConfig;
+
+    fn setup() -> (Weights, Vec<Vec<i32>>, Vec<Vec<i32>>, Vec<Vec<f32>>) {
+        let cfg = OptConfig::test_config();
+        let w = Weights::random(cfg.clone(), 1);
+        let mut rng = crate::util::rng::Pcg64::new(2);
+        let b = 2;
+        let t = 16;
+        let toks: Vec<Vec<i32>> = (0..b)
+            .map(|_| (0..t).map(|_| rng.below(cfg.vocab) as i32).collect())
+            .collect();
+        let tgts = toks
+            .iter()
+            .map(|s| {
+                let mut x = s[1..].to_vec();
+                x.push(s[0]);
+                x
+            })
+            .collect();
+        let mask = vec![vec![1.0; t]; b];
+        (w, toks, tgts, mask)
+    }
+
+    #[test]
+    fn output_shapes() {
+        let (w, toks, tgts, mask) = setup();
+        let out = forward(
+            &w,
+            &toks,
+            &tgts,
+            &mask,
+            Capture { hidden: true, linear_inputs: true, last_logits: true },
+        );
+        assert!(out.ce.is_finite() && out.ce > 0.0);
+        assert_eq!(out.seq_logprob.len(), 2);
+        assert_eq!(out.hidden.len(), w.config.n_layers);
+        assert_eq!(out.hidden[0].shape(), (2 * 16, w.config.d_model));
+        assert_eq!(out.linear_inputs[0].down_in.shape(), (2 * 16, w.config.d_ffn));
+        assert_eq!(out.last_logits.len(), 2);
+        assert_eq!(out.last_logits[0].len(), w.config.vocab);
+    }
+
+    #[test]
+    fn random_model_ce_near_uniform() {
+        // A tiny random model should have CE close to ln(vocab).
+        let (w, toks, tgts, mask) = setup();
+        let out = forward(&w, &toks, &tgts, &mask, Capture::default());
+        let uniform = (w.config.vocab as f64).ln();
+        assert!((out.ce - uniform).abs() < 1.0, "ce {} vs uniform {uniform}", out.ce);
+    }
+
+    #[test]
+    fn mask_gates_loss() {
+        let (w, toks, tgts, _) = setup();
+        let full = vec![vec![1.0; 16]; 2];
+        let half: Vec<Vec<f32>> = (0..2)
+            .map(|_| (0..16).map(|t| if t < 8 { 0.0 } else { 1.0 }).collect())
+            .collect();
+        let a = forward(&w, &toks, &tgts, &full, Capture::default());
+        let b = forward(&w, &toks, &tgts, &half, Capture::default());
+        assert!((a.ce - b.ce).abs() > 1e-9 || a.seq_logprob != b.seq_logprob);
+        // seq_logprob magnitude halves-ish with half the mask
+        assert!(b.seq_logprob[0].abs() < a.seq_logprob[0].abs());
+    }
+
+    #[test]
+    fn causality() {
+        // Changing the last token must not change earlier hidden states.
+        let (w, mut toks, tgts, mask) = setup();
+        let out1 = forward(&w, &toks, &tgts, &mask, Capture { hidden: true, ..Default::default() });
+        toks[0][15] = (toks[0][15] + 1) % w.config.vocab as i32;
+        let out2 = forward(&w, &toks, &tgts, &mask, Capture { hidden: true, ..Default::default() });
+        let h1 = &out1.hidden[w.config.n_layers - 1];
+        let h2 = &out2.hidden[w.config.n_layers - 1];
+        for t in 0..15 {
+            for c in 0..w.config.d_model {
+                assert!((h1.at(t, c) - h2.at(t, c)).abs() < 1e-5, "leak at t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_order_independent() {
+        let (w, toks, tgts, mask) = setup();
+        let fwd = forward(&w, &toks, &tgts, &mask, Capture::default());
+        let rev_toks: Vec<_> = toks.iter().rev().cloned().collect();
+        let rev_tgts: Vec<_> = tgts.iter().rev().cloned().collect();
+        let bwd = forward(&w, &rev_toks, &rev_tgts, &mask, Capture::default());
+        assert!((fwd.ce - bwd.ce).abs() < 1e-9);
+        assert!((fwd.seq_logprob[0] - bwd.seq_logprob[1]).abs() < 1e-4);
+    }
+
+    #[test]
+    fn perplexity_positive() {
+        let cfg = OptConfig::test_config();
+        let w = Weights::random(cfg.clone(), 3);
+        let mut rng = crate::util::rng::Pcg64::new(4);
+        let toks: Vec<u32> = (0..200).map(|_| rng.below(cfg.vocab) as u32).collect();
+        let ppl = perplexity(&w, &toks, 16, 4);
+        assert!(ppl > 1.0 && ppl.is_finite());
+    }
+}

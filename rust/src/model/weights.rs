@@ -1,0 +1,217 @@
+//! Named weight set with layer views, loading from `.iwt`, and synthetic
+//! initialization for tests.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::config::{OptConfig, LAYER_PARAM_NAMES};
+use crate::io::iwt;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// The full parameter set of one model, keyed by canonical names
+/// (`emb`, `pos`, `l{i}.q.w`, …, `lnf.b`).  Bias/LN vectors are stored as
+/// `[1, n]` tensors.
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub config: OptConfig,
+    map: BTreeMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn new(config: OptConfig, map: BTreeMap<String, Tensor>) -> crate::Result<Weights> {
+        // validate completeness + shapes up front; everything downstream
+        // can then index without checking.
+        for name in config.param_names() {
+            let t = map
+                .get(&name)
+                .ok_or_else(|| anyhow::anyhow!("weights missing parameter {name:?}"))?;
+            let expect = config.param_shape(&name)?;
+            anyhow::ensure!(
+                t.shape() == expect,
+                "parameter {name:?}: shape {:?} != expected {:?}",
+                t.shape(),
+                expect
+            );
+        }
+        Ok(Weights { config, map })
+    }
+
+    /// Load from an `.iwt` file, validating against `config`.
+    pub fn load(path: &Path, config: OptConfig) -> crate::Result<Weights> {
+        let file = iwt::read(path)?;
+        let map: BTreeMap<String, Tensor> = file.tensors.into_iter().collect();
+        Weights::new(config, map)
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        self.map
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown parameter {name:?}"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> &mut Tensor {
+        self.map
+            .get_mut(name)
+            .unwrap_or_else(|| panic!("unknown parameter {name:?}"))
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) {
+        let expect = self.config.param_shape(name).expect("known parameter");
+        assert_eq!(t.shape(), expect, "set {name:?}: bad shape");
+        self.map.insert(name.to_string(), t);
+    }
+
+    /// Layer-scoped accessor: `layer(i, "up.w")`.
+    pub fn layer(&self, i: usize, base: &str) -> &Tensor {
+        self.get(&format!("l{i}.{base}"))
+    }
+
+    pub fn layer_mut(&mut self, i: usize, base: &str) -> &mut Tensor {
+        self.get_mut(&format!("l{i}.{base}"))
+    }
+
+    /// Bias slice view (biases are `[1, n]`).
+    pub fn bias(&self, name: &str) -> &[f32] {
+        &self.get(name).data
+    }
+
+    /// All tensors in canonical parameter order (the HLO argument order).
+    pub fn in_order(&self) -> Vec<(&str, &Tensor)> {
+        // param_names allocates Strings; map back to stored keys for &str.
+        self.config
+            .param_names()
+            .into_iter()
+            .map(|n| {
+                let (k, v) = self.map.get_key_value(&n).expect("validated complete");
+                (k.as_str(), v)
+            })
+            .collect()
+    }
+
+    /// Names of all quantizable linear weights, layer by layer.
+    pub fn quant_names(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for i in 0..self.config.n_layers {
+            for base in super::config::LAYER_QUANT_NAMES {
+                out.push(format!("l{i}.{base}"));
+            }
+        }
+        out
+    }
+
+    /// Random weights for tests (same scale scheme as the python init).
+    pub fn random(config: OptConfig, seed: u64) -> Weights {
+        let mut rng = Pcg64::new(seed);
+        let mut map = BTreeMap::new();
+        for name in config.param_names() {
+            let (r, c) = config.param_shape(&name).unwrap();
+            let t = if name.ends_with("ln1.w") || name.ends_with("ln2.w") || name.ends_with("lnf.w")
+            {
+                Tensor::from_vec(r, c, vec![1.0; r * c])
+            } else if name.ends_with(".b") {
+                Tensor::from_vec(r, c, vec![0.0; r * c])
+            } else {
+                let scale = 0.08;
+                Tensor::from_vec(
+                    r,
+                    c,
+                    (0..r * c).map(|_| (rng.normal() as f32) * scale).collect(),
+                )
+            };
+            map.insert(name, t);
+        }
+        Weights { config, map }
+    }
+
+    /// Deep-copy the 16 tensors of one layer (proposal scratch space).
+    pub fn snapshot_layer(&self, i: usize) -> Vec<(String, Tensor)> {
+        LAYER_PARAM_NAMES
+            .iter()
+            .map(|base| {
+                let name = format!("l{i}.{base}");
+                let t = self.get(&name).clone();
+                (name, t)
+            })
+            .collect()
+    }
+
+    /// Restore a snapshot taken by [`Weights::snapshot_layer`].
+    pub fn restore(&mut self, snapshot: Vec<(String, Tensor)>) {
+        for (name, t) in snapshot {
+            self.map.insert(name, t);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_weights_validate() {
+        let cfg = OptConfig::test_config();
+        let w = Weights::random(cfg.clone(), 0);
+        assert_eq!(w.get("emb").shape(), (cfg.vocab, cfg.d_model));
+        assert_eq!(w.layer(0, "up.w").shape(), (cfg.d_ffn, cfg.d_model));
+        assert_eq!(w.in_order().len(), cfg.param_names().len());
+        assert_eq!(w.quant_names().len(), 6 * cfg.n_layers);
+    }
+
+    #[test]
+    fn missing_param_rejected() {
+        let cfg = OptConfig::test_config();
+        let w = Weights::random(cfg.clone(), 0);
+        let mut map: BTreeMap<String, Tensor> =
+            w.in_order().into_iter().map(|(n, t)| (n.to_string(), t.clone())).collect();
+        map.remove("l0.up.w");
+        assert!(Weights::new(cfg, map).is_err());
+    }
+
+    #[test]
+    fn bad_shape_rejected() {
+        let cfg = OptConfig::test_config();
+        let w = Weights::random(cfg.clone(), 0);
+        let mut map: BTreeMap<String, Tensor> =
+            w.in_order().into_iter().map(|(n, t)| (n.to_string(), t.clone())).collect();
+        map.insert("l0.up.w".into(), Tensor::zeros(2, 2));
+        assert!(Weights::new(cfg, map).is_err());
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let cfg = OptConfig::test_config();
+        let mut w = Weights::random(cfg, 0);
+        let before = w.layer(1, "up.w").clone();
+        let snap = w.snapshot_layer(1);
+        w.layer_mut(1, "up.w").data[0] += 5.0;
+        assert_ne!(w.layer(1, "up.w").data[0], before.data[0]);
+        w.restore(snap);
+        assert_eq!(w.layer(1, "up.w"), &before);
+    }
+
+    #[test]
+    fn iwt_roundtrip_through_weights() {
+        let cfg = OptConfig::test_config();
+        let w = Weights::random(cfg.clone(), 7);
+        let dir = std::env::temp_dir().join("invarexplore_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.iwt");
+        let entries: Vec<(String, &Tensor, Vec<usize>)> = w
+            .in_order()
+            .into_iter()
+            .map(|(n, t)| {
+                let shape = if t.rows == 1 && !n.ends_with('w') || t.rows == 1 {
+                    vec![t.cols]
+                } else {
+                    vec![t.rows, t.cols]
+                };
+                (n.to_string(), t, shape)
+            })
+            .collect();
+        iwt::write(&p, &entries, &BTreeMap::new()).unwrap();
+        let back = Weights::load(&p, cfg).unwrap();
+        assert_eq!(back.get("l0.q.w"), w.get("l0.q.w"));
+        assert_eq!(back.get("lnf.b"), w.get("lnf.b"));
+    }
+}

@@ -1,0 +1,284 @@
+//! The groupwise asymmetric quantization codec (Eqns. 1–4).
+//!
+//! MUST stay bit-compatible with `python/compile/kernels/ref.py` and the
+//! Pallas kernel: q_min = 0, `s = (max-min)/qmax` with degenerate-group
+//! fallback `s = 1`, and round-half-up (`floor(x + 0.5)`).  A cross-layer
+//! test (`rust/tests/hlo_cross_check.rs`) pins all three implementations
+//! together.
+
+use super::QuantScheme;
+use crate::tensor::Tensor;
+
+/// Quantized representation of one `[rows, cols]` weight matrix:
+/// integer codes (u8, one per weight — packing into words is
+/// [`super::packed`]'s job) + per-group scale/zero.
+#[derive(Debug, Clone)]
+pub struct GroupQuant {
+    pub scheme: QuantScheme,
+    pub rows: usize,
+    pub cols: usize,
+    pub codes: Vec<u8>,
+    /// `[rows * cols/group]` FP scales.
+    pub scales: Vec<f32>,
+    /// `[rows * cols/group]` integer zero points (stored as f32 to mirror
+    /// the reference; values are integral).
+    pub zeros: Vec<f32>,
+}
+
+#[inline]
+fn round_half_up(x: f32) -> f32 {
+    (x + 0.5).floor()
+}
+
+/// Quantize a weight matrix; `cols % group == 0` required.
+pub fn quantize(w: &Tensor, scheme: QuantScheme) -> GroupQuant {
+    let (rows, cols) = w.shape();
+    assert_eq!(
+        cols % scheme.group,
+        0,
+        "cols={cols} not divisible by group={}",
+        scheme.group
+    );
+    let qmax = scheme.qmax();
+    let n_groups = cols / scheme.group;
+    let mut codes = vec![0u8; rows * cols];
+    let mut scales = vec![0f32; rows * n_groups];
+    let mut zeros = vec![0f32; rows * n_groups];
+
+    for r in 0..rows {
+        let row = w.row(r);
+        for g in 0..n_groups {
+            let seg = &row[g * scheme.group..(g + 1) * scheme.group];
+            let mut mn = f32::INFINITY;
+            let mut mx = f32::NEG_INFINITY;
+            for &v in seg {
+                mn = mn.min(v);
+                mx = mx.max(v);
+            }
+            let range = mx - mn;
+            let scale = if range > 0.0 { range / qmax } else { 1.0 };
+            let zero = round_half_up(-mn / scale);
+            scales[r * n_groups + g] = scale;
+            zeros[r * n_groups + g] = zero;
+            let dst = &mut codes[r * cols + g * scheme.group..r * cols + (g + 1) * scheme.group];
+            for (d, &v) in dst.iter_mut().zip(seg) {
+                let q = round_half_up(v / scale) + zero;
+                *d = q.clamp(0.0, qmax) as u8;
+            }
+        }
+    }
+    GroupQuant {
+        scheme,
+        rows,
+        cols,
+        codes,
+        scales,
+        zeros,
+    }
+}
+
+/// Dequantize back to a dense tensor (Eqn. 4).
+pub fn dequantize(q: &GroupQuant) -> Tensor {
+    let n_groups = q.cols / q.scheme.group;
+    let mut out = Tensor::zeros(q.rows, q.cols);
+    for r in 0..q.rows {
+        for g in 0..n_groups {
+            let scale = q.scales[r * n_groups + g];
+            let zero = q.zeros[r * n_groups + g];
+            let base = r * q.cols + g * q.scheme.group;
+            for i in 0..q.scheme.group {
+                out.data[base + i] = scale * (q.codes[base + i] as f32 - zero);
+            }
+        }
+    }
+    out
+}
+
+/// quant→dequant roundtrip ("fake quantization" — what the search loop
+/// evaluates).  Allocation-free variant: [`fake_quant_into`].
+pub fn fake_quant(w: &Tensor, scheme: QuantScheme) -> Tensor {
+    let mut out = Tensor::zeros(w.rows, w.cols);
+    fake_quant_into(w, scheme, &mut out);
+    out
+}
+
+/// Fake-quantize `w` into a preallocated `out` without materializing codes
+/// — the hot-path version used per search proposal.
+pub fn fake_quant_into(w: &Tensor, scheme: QuantScheme, out: &mut Tensor) {
+    let (rows, cols) = w.shape();
+    assert_eq!(out.shape(), (rows, cols));
+    assert_eq!(cols % scheme.group, 0);
+    let qmax = scheme.qmax();
+    for r in 0..rows {
+        let row = w.row(r);
+        let orow = out.row_mut(r);
+        for g in 0..cols / scheme.group {
+            let a = g * scheme.group;
+            let seg = &row[a..a + scheme.group];
+            let mut mn = f32::INFINITY;
+            let mut mx = f32::NEG_INFINITY;
+            for &v in seg {
+                mn = mn.min(v);
+                mx = mx.max(v);
+            }
+            let range = mx - mn;
+            let scale = if range > 0.0 { range / qmax } else { 1.0 };
+            let zero = round_half_up(-mn / scale);
+            for (o, &v) in orow[a..a + scheme.group].iter_mut().zip(seg) {
+                let q = (round_half_up(v / scale) + zero).clamp(0.0, qmax);
+                *o = scale * (q - zero);
+            }
+        }
+    }
+}
+
+/// Mean-squared quantization error of a matrix under a scheme — the metric
+/// AWQ's grid searches minimize.
+pub fn quant_mse(w: &Tensor, scheme: QuantScheme) -> f64 {
+    let deq = fake_quant(w, scheme);
+    w.mse(&deq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{propcheck, rng::Pcg64};
+
+    fn rand_tensor(rng: &mut Pcg64, rows: usize, cols: usize, scale: f32) -> Tensor {
+        Tensor::from_vec(
+            rows,
+            cols,
+            (0..rows * cols).map(|_| rng.normal() as f32 * scale).collect(),
+        )
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_scale() {
+        propcheck::check("‖w - deq‖∞ ≤ s/2", 48, |rng| {
+            let scheme = QuantScheme::new(rng.below(4) + 1, *rng.choice(&[16usize, 32, 64]));
+            let rows = rng.below(6) + 1;
+            let cols = scheme.group * (rng.below(3) + 1);
+            let w = rand_tensor(rng, rows, cols, 1.0);
+            let q = quantize(&w, scheme);
+            let deq = dequantize(&q);
+            let n_groups = cols / scheme.group;
+            for r in 0..rows {
+                for c in 0..cols {
+                    let s = q.scales[r * n_groups + c / scheme.group];
+                    let err = (w.at(r, c) - deq.at(r, c)).abs();
+                    if err > s * 0.5 + 1e-5 {
+                        return Err(format!("err {err} > s/2 {s} at ({r},{c})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fake_quant_equals_quant_dequant() {
+        propcheck::check("fake_quant == dequant(quantize)", 32, |rng| {
+            let scheme = QuantScheme::new(rng.below(3) + 1, 32);
+            let w = rand_tensor(rng, 4, 64, 2.0);
+            let a = fake_quant(&w, scheme);
+            let b = dequantize(&quantize(&w, scheme));
+            propcheck::ensure_all_close(&a.data, &b.data, 0.0, "fake_quant")
+        });
+    }
+
+    #[test]
+    fn codes_in_range() {
+        let mut rng = Pcg64::new(1);
+        for bits in 1..=4 {
+            let scheme = QuantScheme::new(bits, 32);
+            let w = rand_tensor(&mut rng, 8, 64, 3.0);
+            let q = quantize(&w, scheme);
+            assert!(q.codes.iter().all(|&c| c <= scheme.qmax() as u8));
+        }
+    }
+
+    #[test]
+    fn extremes_are_representable() {
+        // max and min of each group must quantize with ~zero error
+        let mut rng = Pcg64::new(2);
+        let scheme = QuantScheme::new(2, 32);
+        let w = rand_tensor(&mut rng, 4, 64, 1.0);
+        let deq = fake_quant(&w, scheme);
+        for r in 0..4 {
+            for g in 0..2 {
+                let seg: Vec<f32> = w.row(r)[g * 32..(g + 1) * 32].to_vec();
+                let dseg: Vec<f32> = deq.row(r)[g * 32..(g + 1) * 32].to_vec();
+                let (mut mni, mut mxi) = (0, 0);
+                for (i, &v) in seg.iter().enumerate() {
+                    if v < seg[mni] {
+                        mni = i;
+                    }
+                    if v > seg[mxi] {
+                        mxi = i;
+                    }
+                }
+                let s = (seg[mxi] - seg[mni]) / 3.0;
+                assert!((dseg[mxi] - seg[mxi]).abs() <= s * 0.51 + 1e-6);
+                assert!((dseg[mni] - seg[mni]).abs() <= s * 0.51 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_constant_group() {
+        let w = Tensor::from_vec(1, 32, vec![3.2; 32]);
+        let deq = fake_quant(&w, QuantScheme::new(2, 32));
+        // degenerate fallback: s=1 -> dequantizes to round(3.2) = 3
+        assert!(deq.data.iter().all(|&v| (v - 3.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut rng = Pcg64::new(3);
+        let scheme = QuantScheme::new(2, 32);
+        let w = rand_tensor(&mut rng, 4, 64, 1.0);
+        let d1 = fake_quant(&w, scheme);
+        let d2 = fake_quant(&d1, scheme);
+        for (a, b) in d1.data.iter().zip(&d2.data) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn outlier_inflates_group_error() {
+        // the paper's core motivation: an outlier blows up s for its group
+        let mut rng = Pcg64::new(4);
+        let scheme = QuantScheme::new(2, 32);
+        let mut w = rand_tensor(&mut rng, 1, 64, 0.1);
+        let base_err = quant_mse(&w, scheme);
+        w.data[5] = 50.0; // outlier in group 0
+        let q = quantize(&w, scheme);
+        assert!(q.scales[0] > 10.0 * q.scales[1]);
+        // the non-outlier weights of group 0 collapse to the zero-point, so
+        // their error ~ their own magnitude — a clear multiple of base MSE
+        assert!(quant_mse(&w, scheme) > base_err * 2.0);
+    }
+
+    #[test]
+    fn into_variant_matches() {
+        let mut rng = Pcg64::new(5);
+        let scheme = QuantScheme::new(3, 32);
+        let w = rand_tensor(&mut rng, 8, 96, 1.0);
+        let a = fake_quant(&w, scheme);
+        let mut b = Tensor::zeros(8, 96);
+        fake_quant_into(&w, scheme, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn mse_decreases_with_bits() {
+        let mut rng = Pcg64::new(6);
+        let w = rand_tensor(&mut rng, 16, 128, 1.0);
+        let errs: Vec<f64> = (1..=8)
+            .map(|b| quant_mse(&w, QuantScheme::new(b, 64)))
+            .collect();
+        for win in errs.windows(2) {
+            assert!(win[0] >= win[1]);
+        }
+    }
+}

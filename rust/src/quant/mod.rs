@@ -1,0 +1,13 @@
+//! Groupwise asymmetric integer quantization (Eqns. 1–4): the Rust codec
+//! mirrors the Pallas kernel / jnp oracle bit-for-bit (shared conventions
+//! documented in `python/compile/kernels/ref.py`), plus packed int storage
+//! with bits/param accounting for the Table-3 memory columns.
+
+pub mod clip;
+pub mod group;
+pub mod packed;
+pub mod scheme;
+
+pub use group::{dequantize, fake_quant, fake_quant_into, quant_mse, quantize, GroupQuant};
+pub use packed::PackedTensor;
+pub use scheme::QuantScheme;

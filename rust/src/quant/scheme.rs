@@ -1,0 +1,81 @@
+//! Quantization scheme descriptor.
+
+/// Bits + group size for asymmetric unsigned integer group quantization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct QuantScheme {
+    pub bits: usize,
+    pub group: usize,
+}
+
+impl QuantScheme {
+    pub fn new(bits: usize, group: usize) -> QuantScheme {
+        assert!((1..=8).contains(&bits), "bits must be 1..=8");
+        assert!(group > 0, "group must be positive");
+        QuantScheme { bits, group }
+    }
+
+    /// Largest representable code (q_min is always 0).
+    pub fn qmax(&self) -> f32 {
+        ((1usize << self.bits) - 1) as f32
+    }
+
+    /// Effective bits per parameter including FP16 scale + zero-point
+    /// overhead per group (the paper's Table-3 "Bits/Param" column:
+    /// bits + 16/group for scale; the integer zero-point costs `bits`).
+    pub fn bits_per_param(&self) -> f64 {
+        self.bits as f64 + (16.0 + self.bits as f64) / self.group as f64
+    }
+
+    /// Parse "2x64" / "3b128"-style strings from the CLI.
+    pub fn parse(s: &str) -> crate::Result<QuantScheme> {
+        let (b, g) = s
+            .split_once(['x', 'b'])
+            .ok_or_else(|| anyhow::anyhow!("bad quant scheme {s:?} (want e.g. 2x64)"))?;
+        Ok(QuantScheme::new(b.trim().parse()?, g.trim().parse()?))
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}x{}", self.bits, self.group)
+    }
+}
+
+impl std::fmt::Display for QuantScheme {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}-bit g{}", self.bits, self.group)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(QuantScheme::new(1, 64).qmax(), 1.0);
+        assert_eq!(QuantScheme::new(2, 64).qmax(), 3.0);
+        assert_eq!(QuantScheme::new(8, 64).qmax(), 255.0);
+    }
+
+    #[test]
+    fn bits_per_param_matches_paper_shape() {
+        // paper Table 3: 2-bit g128 -> 2.125; our formula adds the int zero
+        // point too (2 + 18/128 ≈ 2.14) — same ballpark, monotone in group.
+        let g64 = QuantScheme::new(2, 64).bits_per_param();
+        let g128 = QuantScheme::new(2, 128).bits_per_param();
+        assert!(g64 > g128);
+        assert!((g128 - 2.14).abs() < 0.01);
+    }
+
+    #[test]
+    fn parse_forms() {
+        assert_eq!(QuantScheme::parse("2x64").unwrap(), QuantScheme::new(2, 64));
+        assert_eq!(QuantScheme::parse("3b32").unwrap(), QuantScheme::new(3, 32));
+        assert!(QuantScheme::parse("junk").is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_bits_rejected() {
+        QuantScheme::new(0, 64);
+    }
+}

@@ -1,0 +1,142 @@
+//! PJRT client wrapper: HLO-text loading, compilation, host↔device
+//! transfers, output normalization.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): jax ≥ 0.5
+//! serialized protos use 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::path::Path;
+
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use crate::io::manifest::ProgramInfo;
+use crate::tensor::Tensor;
+
+/// Shared PJRT CPU runtime.
+pub struct Runtime {
+    pub client: PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> crate::Result<Runtime> {
+        let client = PjRtClient::cpu()?;
+        crate::info!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime { client })
+    }
+
+    /// Compile an HLO-text program.
+    pub fn load_program(&self, info: &ProgramInfo) -> crate::Result<Program> {
+        let path: &Path = &info.path;
+        anyhow::ensure!(path.exists(), "missing HLO artifact {}", path.display());
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let t0 = std::time::Instant::now();
+        let exe = self.client.compile(&comp)?;
+        crate::debug!("compiled {} in {:?}", info.name, t0.elapsed());
+        Ok(Program {
+            name: info.name.clone(),
+            n_params: info.params.len(),
+            exe,
+        })
+    }
+
+    /// Upload an f32 tensor with explicit dims.
+    pub fn buffer_f32(&self, data: &[f32], dims: &[usize]) -> crate::Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<f32>(data, dims, None)?)
+    }
+
+    /// Upload an f32 [`Tensor`] with its natural `[rows, cols]` (or `[cols]`
+    /// when `rows == 1` and `vector` is set) shape.
+    pub fn buffer_tensor(&self, t: &Tensor, vector: bool) -> crate::Result<PjRtBuffer> {
+        if vector {
+            assert_eq!(t.rows, 1, "vector upload of a matrix");
+            self.buffer_f32(&t.data, &[t.cols])
+        } else {
+            self.buffer_f32(&t.data, &[t.rows, t.cols])
+        }
+    }
+
+    /// Upload an i32 batch `[B, T]`.
+    pub fn buffer_i32(&self, data: &[i32], dims: &[usize]) -> crate::Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<i32>(data, dims, None)?)
+    }
+}
+
+/// A compiled HLO program.
+pub struct Program {
+    pub name: String,
+    pub n_params: usize,
+    exe: PjRtLoadedExecutable,
+}
+
+impl Program {
+    /// Execute on device buffers, returning raw output buffers.
+    ///
+    /// Single-output programs (lowered with `return_tuple=False`) yield one
+    /// array buffer, directly usable as the next program's input.
+    pub fn run_raw(&self, args: &[&PjRtBuffer]) -> crate::Result<Vec<PjRtBuffer>> {
+        anyhow::ensure!(
+            args.len() == self.n_params,
+            "program {}: {} args, expected {}",
+            self.name,
+            args.len(),
+            self.n_params
+        );
+        let mut out = self.exe.execute_b::<&PjRtBuffer>(args)?;
+        anyhow::ensure!(!out.is_empty() && !out[0].is_empty(), "no outputs");
+        Ok(out.swap_remove(0))
+    }
+
+    /// Execute and fetch all outputs as host literals, decomposing a tuple
+    /// root (multi-output programs) into its elements.
+    pub fn run_literals(&self, args: &[&PjRtBuffer]) -> crate::Result<Vec<Literal>> {
+        let bufs = self.run_raw(args)?;
+        let mut out = Vec::new();
+        for b in bufs {
+            let lit = b.to_literal_sync()?;
+            match lit.shape()? {
+                xla::Shape::Tuple(_) => out.extend(lit.to_tuple()?),
+                _ => out.push(lit),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Single-array-output helper: run and keep the result on device.
+    pub fn run_one(&self, args: &[&PjRtBuffer]) -> crate::Result<PjRtBuffer> {
+        let mut bufs = self.run_raw(args)?;
+        anyhow::ensure!(bufs.len() == 1, "program {}: expected 1 output", self.name);
+        Ok(bufs.swap_remove(0))
+    }
+}
+
+/// Fetch a device buffer to a host [`Tensor`], flattening leading dims.
+pub fn fetch_tensor(buf: &PjRtBuffer) -> crate::Result<Tensor> {
+    let lit = buf.to_literal_sync()?;
+    literal_to_tensor(&lit)
+}
+
+/// Literal -> Tensor (row-major, leading dims collapsed).
+pub fn literal_to_tensor(lit: &Literal) -> crate::Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims = shape.dims();
+    let data = lit.to_vec::<f32>()?;
+    let (rows, cols) = match dims.len() {
+        0 => (1, 1),
+        1 => (1, dims[0] as usize),
+        n => (
+            dims[..n - 1].iter().product::<i64>() as usize,
+            dims[n - 1] as usize,
+        ),
+    };
+    Ok(Tensor::from_vec(rows, cols, data))
+}
+
+/// Scalar f32 from a literal.
+pub fn literal_scalar(lit: &Literal) -> crate::Result<f32> {
+    Ok(lit.to_vec::<f32>()?[0])
+}

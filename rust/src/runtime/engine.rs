@@ -1,0 +1,344 @@
+//! One model's execution engine: compiled program set + device-resident
+//! weight buffers + the layer-pipelined forward.
+//!
+//! Weights live on device; per search proposal only the mutated layer's
+//! `up.w / up.b / down.w` buffers are refreshed — either pre-quantized on
+//! the host (AWQ/OmniQuant clip search, GPTQ compensation) or routed
+//! through the standalone Pallas fake-quant program on device (RTN
+//! semantics, keeping the L1 kernel on the hot path).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use xla::PjRtBuffer;
+
+use super::client::{fetch_tensor, literal_scalar, literal_to_tensor, Program, Runtime};
+use crate::io::manifest::{Manifest, ModelInfo};
+use crate::model::Weights;
+use crate::quant::QuantScheme;
+use crate::tensor::Tensor;
+
+/// Per-layer weight-tensor base names in `layer` program argument order
+/// (after the leading `x`).
+const LAYER_ARG_ORDER: [&str; 16] = [
+    "ln1.w", "ln1.b", "q.w", "q.b", "k.w", "k.b", "v.w", "v.b", "o.w", "o.b",
+    "ln2.w", "ln2.b", "up.w", "up.b", "down.w", "down.b",
+];
+
+/// Is this parameter uploaded as a rank-1 vector (biases, LN affines)?
+pub fn is_vector_param(name: &str) -> bool {
+    name.ends_with(".b") || name.ends_with("ln1.w") || name.ends_with("ln2.w") || name.ends_with("lnf.w")
+}
+
+/// An uploaded evaluation batch.
+pub struct BatchBufs {
+    pub tokens: PjRtBuffer,
+    pub targets: PjRtBuffer,
+    pub mask: PjRtBuffer,
+    /// Σ mask — weight of this batch when combining CE across batches.
+    pub mask_sum: f64,
+    /// Number of non-padding sequences.
+    pub n_valid: usize,
+}
+
+pub struct Engine {
+    pub rt: Runtime,
+    pub info: ModelInfo,
+    pub batch: usize,
+    pub seq: usize,
+    prog_embed: Program,
+    prog_layer: Program,
+    prog_head: Program,
+    prog_head_logits: Program,
+    /// Lazily compiled fake-quant programs keyed by (rows, cols, bits, group).
+    quant_progs: RefCell<HashMap<(usize, usize, usize, usize), Program>>,
+    /// Lazily compiled monolith programs (forward_fp / forward_q*).
+    monoliths: RefCell<HashMap<String, Program>>,
+    /// Device-resident weight buffers by canonical name.
+    wbufs: HashMap<String, PjRtBuffer>,
+}
+
+impl Engine {
+    /// Compile the core pipeline programs for `model` and wrap a runtime.
+    pub fn load(manifest: &Manifest, model: &str) -> crate::Result<Engine> {
+        let rt = Runtime::cpu()?;
+        Self::load_with_runtime(rt, manifest, model)
+    }
+
+    pub fn load_with_runtime(rt: Runtime, manifest: &Manifest, model: &str) -> crate::Result<Engine> {
+        let info = manifest.model(model)?.clone();
+        let prog_embed = rt.load_program(info.program("embed")?)?;
+        let prog_layer = rt.load_program(info.program("layer")?)?;
+        let prog_head = rt.load_program(info.program("head")?)?;
+        let prog_head_logits = rt.load_program(info.program("head_logits")?)?;
+        Ok(Engine {
+            rt,
+            info,
+            batch: manifest.batch,
+            seq: manifest.seq,
+            prog_embed,
+            prog_layer,
+            prog_head,
+            prog_head_logits,
+            quant_progs: RefCell::new(HashMap::new()),
+            monoliths: RefCell::new(HashMap::new()),
+            wbufs: HashMap::new(),
+        })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.info.config.n_layers
+    }
+
+    // -- weights --------------------------------------------------------------
+
+    /// Upload every parameter of `w` to device.
+    pub fn upload_weights(&mut self, w: &Weights) -> crate::Result<()> {
+        for (name, t) in w.in_order() {
+            let buf = self.rt.buffer_tensor(t, is_vector_param(name))?;
+            self.wbufs.insert(name.to_string(), buf);
+        }
+        Ok(())
+    }
+
+    /// Refresh one parameter's device buffer from host data.
+    pub fn update_tensor(&mut self, name: &str, t: &Tensor) -> crate::Result<()> {
+        let buf = self.rt.buffer_tensor(t, is_vector_param(name))?;
+        self.wbufs.insert(name.to_string(), buf);
+        Ok(())
+    }
+
+    /// Refresh one *weight matrix* by uploading FP values and fake-quantizing
+    /// on device via the standalone Pallas kernel program (RTN semantics).
+    pub fn update_tensor_device_quant(
+        &mut self,
+        name: &str,
+        t: &Tensor,
+        scheme: QuantScheme,
+    ) -> crate::Result<()> {
+        self.quant_program(t.rows, t.cols, scheme)?;
+        let fp = self.rt.buffer_tensor(t, false)?;
+        let qbuf = {
+            let progs = self.quant_progs.borrow();
+            progs[&(t.rows, t.cols, scheme.bits, scheme.group)].run_one(&[&fp])?
+        };
+        self.wbufs.insert(name.to_string(), qbuf);
+        Ok(())
+    }
+
+    /// Run the standalone Pallas fake-quant program on a host tensor and
+    /// fetch the result (used by cross-check tests and the quantize CLI).
+    pub fn device_fake_quant(&self, t: &Tensor, scheme: QuantScheme) -> crate::Result<Tensor> {
+        self.quant_program(t.rows, t.cols, scheme)?;
+        let fp = self.rt.buffer_tensor(t, false)?;
+        let progs = self.quant_progs.borrow();
+        let out = progs[&(t.rows, t.cols, scheme.bits, scheme.group)].run_one(&[&fp])?;
+        fetch_tensor(&out)
+    }
+
+    /// Ensure the fake-quant program for this shape/scheme is compiled.
+    fn quant_program(&self, rows: usize, cols: usize, scheme: QuantScheme) -> crate::Result<()> {
+        let key = (rows, cols, scheme.bits, scheme.group);
+        if !self.quant_progs.borrow().contains_key(&key) {
+            let name = Manifest::quant_program_name(rows, cols, scheme.bits, scheme.group);
+            let prog = self.rt.load_program(self.info.program(&name)?)?;
+            self.quant_progs.borrow_mut().insert(key, prog);
+        }
+        Ok(())
+    }
+
+    pub fn weight_buffer(&self, name: &str) -> &PjRtBuffer {
+        self.wbufs
+            .get(name)
+            .unwrap_or_else(|| panic!("weight {name:?} not uploaded"))
+    }
+
+    // -- batches --------------------------------------------------------------
+
+    /// Upload a batch, padding to the compiled batch size `B` by repeating
+    /// the last sequence with a zero mask.
+    pub fn upload_batch(
+        &self,
+        tokens: &[Vec<i32>],
+        targets: &[Vec<i32>],
+        mask: &[Vec<f32>],
+    ) -> crate::Result<BatchBufs> {
+        let (b, t) = (self.batch, self.seq);
+        anyhow::ensure!(!tokens.is_empty() && tokens.len() <= b, "bad batch size");
+        anyhow::ensure!(tokens.iter().all(|s| s.len() == t), "sequences must have length T");
+        let n_valid = tokens.len();
+
+        let mut tok_flat = Vec::with_capacity(b * t);
+        let mut tgt_flat = Vec::with_capacity(b * t);
+        let mut msk_flat = Vec::with_capacity(b * t);
+        for i in 0..b {
+            let j = i.min(n_valid - 1);
+            tok_flat.extend(&tokens[j]);
+            tgt_flat.extend(&targets[j]);
+            if i < n_valid {
+                msk_flat.extend(&mask[j]);
+            } else {
+                msk_flat.extend(std::iter::repeat(0.0f32).take(t));
+            }
+        }
+        let mask_sum = msk_flat.iter().map(|&m| m as f64).sum();
+        Ok(BatchBufs {
+            tokens: self.rt.buffer_i32(&tok_flat, &[b, t])?,
+            targets: self.rt.buffer_i32(&tgt_flat, &[b, t])?,
+            mask: self.rt.buffer_f32(&msk_flat, &[b, t])?,
+            mask_sum,
+            n_valid,
+        })
+    }
+
+    // -- layer-pipelined forward ----------------------------------------------
+
+    /// Embedding stage: tokens -> x `[B, T, D]` (device).
+    pub fn embed(&self, b: &BatchBufs) -> crate::Result<PjRtBuffer> {
+        self.prog_embed
+            .run_one(&[&b.tokens, self.weight_buffer("emb"), self.weight_buffer("pos")])
+    }
+
+    /// One decoder block on device.
+    pub fn run_layer(&self, l: usize, x: &PjRtBuffer) -> crate::Result<PjRtBuffer> {
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(17);
+        args.push(x);
+        let names: Vec<String> = LAYER_ARG_ORDER.iter().map(|b| format!("l{l}.{b}")).collect();
+        for n in &names {
+            args.push(self.weight_buffer(n));
+        }
+        self.prog_layer.run_one(&args)
+    }
+
+    /// Head: (ce over mask, per-sequence masked logprob `[B]`).
+    pub fn run_head(&self, x: &PjRtBuffer, b: &BatchBufs) -> crate::Result<(f64, Vec<f32>)> {
+        let outs = self.prog_head.run_literals(&[
+            x,
+            &b.targets,
+            &b.mask,
+            self.weight_buffer("emb"),
+            self.weight_buffer("lnf.w"),
+            self.weight_buffer("lnf.b"),
+        ])?;
+        anyhow::ensure!(outs.len() == 2, "head: expected 2 outputs");
+        let ce = literal_scalar(&outs[0])? as f64;
+        let lp = outs[1].to_vec::<f32>()?;
+        Ok((ce, lp))
+    }
+
+    /// Head logits `[B*T, V]` (host tensor) — used by the serve example.
+    pub fn run_logits(&self, x: &PjRtBuffer) -> crate::Result<Tensor> {
+        let out = self.prog_head_logits.run_one(&[
+            x,
+            self.weight_buffer("emb"),
+            self.weight_buffer("lnf.w"),
+            self.weight_buffer("lnf.b"),
+        ])?;
+        fetch_tensor(&out)
+    }
+
+    /// Full pipelined forward; returns (ce, logprob, per-layer x buffers —
+    /// the prefix-cache entries for the incremental evaluator).
+    pub fn forward_full(
+        &self,
+        b: &BatchBufs,
+    ) -> crate::Result<(f64, Vec<f32>, Vec<PjRtBuffer>)> {
+        let embed_x = self.embed(b)?;
+        let mut layer_outs: Vec<PjRtBuffer> = Vec::with_capacity(self.n_layers());
+        {
+            let mut cur: &PjRtBuffer = &embed_x;
+            for l in 0..self.n_layers() {
+                let next = self.run_layer(l, cur)?;
+                layer_outs.push(next);
+                cur = layer_outs.last().unwrap();
+            }
+        }
+        let (ce, lp) = self.run_head(layer_outs.last().unwrap(), b)?;
+        Ok((ce, lp, layer_outs))
+    }
+
+    /// Convenience: evaluate (ce, logprob) for host-side batch data with the
+    /// currently uploaded weights.
+    pub fn eval_batch(
+        &self,
+        tokens: &[Vec<i32>],
+        targets: &[Vec<i32>],
+        mask: &[Vec<f32>],
+    ) -> crate::Result<(f64, Vec<f32>, f64)> {
+        let b = self.upload_batch(tokens, targets, mask)?;
+        let mut x = self.embed(&b)?;
+        for l in 0..self.n_layers() {
+            x = self.run_layer(l, &x)?;
+        }
+        let (ce, lp) = self.run_head(&x, &b)?;
+        Ok((ce, lp[..b.n_valid].to_vec(), b.mask_sum))
+    }
+
+    // -- monolithic validation programs ----------------------------------------
+
+    fn monolith(&self, name: &str) -> crate::Result<()> {
+        if !self.monoliths.borrow().contains_key(name) {
+            let prog = self.rt.load_program(self.info.program(name)?)?;
+            self.monoliths.borrow_mut().insert(name.to_string(), prog);
+        }
+        Ok(())
+    }
+
+    fn weight_args(&self, w: &Weights) -> crate::Result<Vec<PjRtBuffer>> {
+        w.in_order()
+            .into_iter()
+            .map(|(n, t)| self.rt.buffer_tensor(t, is_vector_param(n)))
+            .collect()
+    }
+
+    /// Run the monolithic FP forward: (ce, logprob, acts `[L*B*T, D]`).
+    pub fn run_forward_fp(
+        &self,
+        w: &Weights,
+        b: &BatchBufs,
+    ) -> crate::Result<(f64, Vec<f32>, Tensor)> {
+        self.monolith("forward_fp")?;
+        let wargs = self.weight_args(w)?;
+        let monoliths = self.monoliths.borrow();
+        let prog = &monoliths["forward_fp"];
+        let mut args: Vec<&PjRtBuffer> = vec![&b.tokens, &b.targets, &b.mask];
+        args.extend(wargs.iter());
+        let outs = prog.run_literals(&args)?;
+        anyhow::ensure!(outs.len() == 3, "forward_fp: expected 3 outputs");
+        Ok((
+            literal_scalar(&outs[0])? as f64,
+            outs[1].to_vec::<f32>()?,
+            literal_to_tensor(&outs[2])?,
+        ))
+    }
+
+    /// Run the monolithic in-graph-Pallas quantized forward
+    /// (`forward_q{bits}x{group}`): (ce, logprob, act_mse).
+    pub fn run_forward_quant(
+        &self,
+        scheme: QuantScheme,
+        w: &Weights,
+        h0: &Tensor,
+        b: &BatchBufs,
+    ) -> crate::Result<(f64, Vec<f32>, f64)> {
+        let name = format!("forward_q{}x{}", scheme.bits, scheme.group);
+        self.monolith(&name)?;
+        let cfg = &self.info.config;
+        let h0_buf = self.rt.buffer_f32(
+            &h0.data,
+            &[cfg.n_layers, self.batch, self.seq, cfg.d_model],
+        )?;
+        let wargs = self.weight_args(w)?;
+        let monoliths = self.monoliths.borrow();
+        let prog = &monoliths[&name];
+        let mut args: Vec<&PjRtBuffer> = vec![&b.tokens, &b.targets, &b.mask, &h0_buf];
+        args.extend(wargs.iter());
+        let outs = prog.run_literals(&args)?;
+        anyhow::ensure!(outs.len() == 3, "{name}: expected 3 outputs");
+        Ok((
+            literal_scalar(&outs[0])? as f64,
+            outs[1].to_vec::<f32>()?,
+            literal_scalar(&outs[2])? as f64,
+        ))
+    }
+}

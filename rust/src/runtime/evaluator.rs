@@ -1,0 +1,224 @@
+//! The search-facing incremental evaluator.
+//!
+//! Holds the calibration batches on device, the FP activation stack H₀
+//! (Eqn. 23), and — for the currently *accepted* model state — a prefix
+//! activation cache: the per-batch, per-layer block outputs.  A proposal
+//! touching layer *l* then re-runs only layers `l..L` plus the head, and
+//! act-MSE contributions of layers `< l` are reused (their inputs and
+//! weights are unchanged).
+//!
+//! CE across batches is combined mask-weighted (each batch's head already
+//! averages over its own mask).
+
+use xla::PjRtBuffer;
+
+use super::client::fetch_tensor;
+use super::engine::{BatchBufs, Engine};
+use crate::calib::CalibSet;
+use crate::tensor::Tensor;
+
+/// The two-term search objective (Eqn. 23), pre-α.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Loss {
+    pub ce: f64,
+    pub act_mse: f64,
+}
+
+impl Loss {
+    pub fn total(&self, alpha: f64) -> f64 {
+        self.ce + alpha * self.act_mse
+    }
+}
+
+/// Result of evaluating a proposal, holdable until accept/reject.
+pub struct Pending {
+    pub loss: Loss,
+    from_layer: usize,
+    /// Recomputed x buffers for layers `from_layer..L`, per batch.
+    new_x: Vec<Vec<PjRtBuffer>>,
+    /// Recomputed per-layer act-MSE sums for layers `from_layer..L`, per batch.
+    new_mse: Vec<Vec<f64>>,
+}
+
+pub struct Evaluator {
+    pub engine: Engine,
+    batches: Vec<BatchBufs>,
+    /// H₀ per batch per layer `[B*T, D]` (host) — empty until captured.
+    h0: Vec<Vec<Tensor>>,
+    /// Layers whose activations contribute to the MSE term (Table 4).
+    match_layers: Vec<usize>,
+    /// Accepted-state prefix cache: per batch, per layer block output.
+    cache_x: Vec<Vec<PjRtBuffer>>,
+    /// Accepted-state per-batch per-layer act-MSE.
+    mse: Vec<Vec<f64>>,
+    /// Accepted-state loss.
+    pub accepted: Loss,
+}
+
+impl Evaluator {
+    /// Upload calibration batches.  `match_layers` selects the activation-
+    /// matching subset (empty = CE-only objective, Table 4 row "0 layers").
+    pub fn new(engine: Engine, calib: &CalibSet, match_layers: Vec<usize>) -> crate::Result<Evaluator> {
+        let batch = engine.batch;
+        let mut batches = Vec::new();
+        for chunk in calib.chunks(batch) {
+            batches.push(engine.upload_batch(&chunk.tokens, &chunk.targets, &chunk.masks)?);
+        }
+        for &l in &match_layers {
+            anyhow::ensure!(l < engine.n_layers(), "match layer {l} out of range");
+        }
+        Ok(Evaluator {
+            engine,
+            batches,
+            h0: Vec::new(),
+            match_layers,
+            cache_x: Vec::new(),
+            mse: Vec::new(),
+            accepted: Loss { ce: f64::INFINITY, act_mse: 0.0 },
+        })
+    }
+
+    pub fn n_batches(&self) -> usize {
+        self.batches.len()
+    }
+
+    pub fn match_layers(&self) -> &[usize] {
+        &self.match_layers
+    }
+
+    /// Bytes of host memory held by H₀ (the Table-4 "extra memory" column).
+    pub fn h0_bytes(&self) -> usize {
+        self.h0
+            .iter()
+            .flat_map(|per_batch| per_batch.iter())
+            .map(|t| t.numel() * 4)
+            .sum()
+    }
+
+    /// Capture H₀ with the *currently uploaded* (FP) weights.  Only the
+    /// matched layers are stored (the paper's memory-limit discussion).
+    pub fn capture_h0(&mut self) -> crate::Result<f64> {
+        self.h0.clear();
+        let mut ce_num = 0.0;
+        let mut ce_den = 0.0;
+        for b in &self.batches {
+            let (ce, _, xs) = self.engine.forward_full(b)?;
+            let mut per_layer = vec![Tensor::zeros(0, 0); self.engine.n_layers()];
+            for &l in &self.match_layers {
+                per_layer[l] = fetch_tensor(&xs[l])?;
+            }
+            self.h0.push(per_layer);
+            ce_num += ce * b.mask_sum;
+            ce_den += b.mask_sum;
+        }
+        Ok(ce_num / ce_den.max(1.0))
+    }
+
+    /// Full (non-incremental) evaluation with the currently uploaded
+    /// weights; rebuilds the prefix cache and sets the accepted state.
+    pub fn full_eval(&mut self) -> crate::Result<Loss> {
+        let pending = self.eval_from_layer(0)?;
+        let loss = pending.loss;
+        self.accept(pending);
+        Ok(loss)
+    }
+
+    /// Evaluate the current device weights assuming only layers
+    /// `>= from_layer` changed since the accepted state.
+    pub fn eval_from_layer(&mut self, from_layer: usize) -> crate::Result<Pending> {
+        let n_layers = self.engine.n_layers();
+        anyhow::ensure!(from_layer <= n_layers, "from_layer out of range");
+        let use_cache = from_layer > 0 && !self.cache_x.is_empty();
+
+        let mut ce_num = 0.0;
+        let mut ce_den = 0.0;
+        let mut new_x: Vec<Vec<PjRtBuffer>> = Vec::with_capacity(self.batches.len());
+        let mut new_mse: Vec<Vec<f64>> = Vec::with_capacity(self.batches.len());
+
+        for (bi, b) in self.batches.iter().enumerate() {
+            let mut xs: Vec<PjRtBuffer> = Vec::with_capacity(n_layers - from_layer);
+            {
+                // starting activation: embed (l=0) or cached prefix
+                let embed_x;
+                let mut cur: &PjRtBuffer = if use_cache {
+                    &self.cache_x[bi][from_layer - 1]
+                } else {
+                    embed_x = self.engine.embed(b)?;
+                    // when starting at 0 the embed output is the input of l0
+                    if from_layer != 0 {
+                        // cannot start mid-model without a cache
+                        anyhow::bail!("eval_from_layer({from_layer}) without prefix cache");
+                    }
+                    &embed_x
+                };
+                for l in from_layer..n_layers {
+                    let next = self.engine.run_layer(l, cur)?;
+                    xs.push(next);
+                    cur = xs.last().unwrap();
+                }
+            }
+            let (ce, _lp) = self.engine.run_head(xs.last().unwrap(), b)?;
+            ce_num += ce * b.mask_sum;
+            ce_den += b.mask_sum;
+
+            // act-MSE for recomputed matched layers
+            let mut mse_layer = vec![0.0f64; n_layers - from_layer];
+            if !self.h0.is_empty() {
+                for &l in &self.match_layers {
+                    if l >= from_layer {
+                        let xh = fetch_tensor(&xs[l - from_layer])?;
+                        mse_layer[l - from_layer] = xh.mse(&self.h0[bi][l]);
+                    }
+                }
+            }
+            new_x.push(xs);
+            new_mse.push(mse_layer);
+        }
+
+        // combine: reused prefix MSE + recomputed suffix MSE
+        let mut act_mse = 0.0;
+        if !self.match_layers.is_empty() && !self.h0.is_empty() {
+            let mut total = 0.0;
+            for bi in 0..self.batches.len() {
+                for &l in &self.match_layers {
+                    total += if l >= from_layer {
+                        new_mse[bi][l - from_layer]
+                    } else {
+                        self.mse[bi][l]
+                    };
+                }
+            }
+            act_mse = total / (self.batches.len() * self.match_layers.len()) as f64;
+        }
+
+        Ok(Pending {
+            loss: Loss { ce: ce_num / ce_den.max(1.0), act_mse },
+            from_layer,
+            new_x,
+            new_mse,
+        })
+    }
+
+    /// Commit a pending evaluation: splice its buffers into the prefix cache.
+    pub fn accept(&mut self, p: Pending) {
+        let n_layers = self.engine.n_layers();
+        if self.cache_x.is_empty() {
+            assert_eq!(p.from_layer, 0, "first accept must be a full eval");
+            self.cache_x = p.new_x;
+            self.mse = p.new_mse;
+        } else {
+            for (bi, xs) in p.new_x.into_iter().enumerate() {
+                for (off, x) in xs.into_iter().enumerate() {
+                    self.cache_x[bi][p.from_layer + off] = x;
+                }
+            }
+            for (bi, ms) in p.new_mse.into_iter().enumerate() {
+                for (off, m) in ms.into_iter().enumerate() {
+                    self.mse[bi][p.from_layer + off] = m;
+                }
+            }
+        }
+        debug_assert!(self.cache_x.iter().all(|xs| xs.len() == n_layers));
+        self.accepted = p.loss;
+    }
+}

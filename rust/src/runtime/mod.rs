@@ -1,0 +1,21 @@
+//! The PJRT runtime: loads the AOT HLO artifacts through the `xla` crate's
+//! CPU client and executes them from the search hot path.
+//!
+//! Layering (DESIGN.md §5.1):
+//!
+//! * [`client`] — thin wrapper over `PjRtClient`: compile HLO text, move
+//!   host data to device buffers, normalize outputs;
+//! * [`engine`] — one model's program set (embed / layer / head /
+//!   head_logits / quant_* / forward_fp / forward_q*) + device-resident
+//!   weight buffers, with the layer-pipelined forward;
+//! * [`evaluator`] — the search-facing incremental evaluator: prefix
+//!   activation cache + per-layer act-MSE bookkeeping, so a proposal
+//!   touching layer *l* re-runs only layers ≥ *l*.
+
+pub mod client;
+pub mod engine;
+pub mod evaluator;
+
+pub use client::{Program, Runtime};
+pub use engine::{BatchBufs, Engine};
+pub use evaluator::{Evaluator, Loss};

@@ -1,0 +1,345 @@
+//! The random-walk hill-climbing driver (paper Algorithm 1).
+//!
+//! Generic over [`Objective`] so the accept/reject control flow, telemetry
+//! and determinism are tested without a PJRT client; the real objective is
+//! [`super::objective::XlaObjective`].
+
+use super::state::{SearchState, StepRecord};
+use crate::runtime::Loss;
+use crate::transform::{LayerTransform, TransformKinds};
+
+/// Hyper-parameters of the discrete search (paper §4.1 defaults).
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    /// Transform families to explore (Table-2 ablations).
+    pub kinds: TransformKinds,
+    /// Fraction of channels moved per proposal ("10% of the neurons").
+    pub frac: f64,
+    /// Scaling random-walk std (paper: 1e-2).
+    pub sigma_s: f64,
+    /// Rotation random-walk std (paper: 1e-5).
+    pub sigma_r: f64,
+    /// Balancing α of Eqn. 23; `None` = auto-set so CE is 10× the MSE term
+    /// at the start (paper §4.1).
+    pub alpha: Option<f64>,
+    /// Log every n-th step.
+    pub log_every: usize,
+}
+
+impl Default for SearchConfig {
+    /// Paper defaults (§4.1) except σ_r: the paper grid-searched 1e-5 for
+    /// 10K-step runs on OPT-13B; our pilot grid search at sandbox scale
+    /// (hundreds of steps, 4-layer models) lands on 5e-3 — small enough
+    /// that rotation stays within the §3.2 approximate-invariance regime
+    /// (FP CE drift < 0.1%, pinned by tests), large enough that the
+    /// random walk moves in a few hundred steps.  Env overrides:
+    /// `INVAREXPLORE_SIGMA_R`, `INVAREXPLORE_SIGMA_S`, `INVAREXPLORE_FRAC`.
+    fn default() -> Self {
+        let envf = |name: &str, default: f64| {
+            std::env::var(name)
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(default)
+        };
+        SearchConfig {
+            kinds: TransformKinds::all(),
+            frac: envf("INVAREXPLORE_FRAC", 0.1),
+            sigma_s: envf("INVAREXPLORE_SIGMA_S", 1e-2),
+            sigma_r: envf("INVAREXPLORE_SIGMA_R", 5e-3),
+            alpha: None,
+            log_every: 50,
+        }
+    }
+}
+
+/// What the search loop needs from the system under optimization.
+pub trait Objective {
+    fn n_layers(&self) -> usize;
+    fn d_ffn(&self) -> usize;
+
+    /// Quantize the whole (identity-transformed) model and return the
+    /// initial loss — Algorithm 1 lines 1–3.
+    fn init(&mut self) -> crate::Result<Loss>;
+
+    /// Apply transform `t` to layer `l` (from the base FP weights),
+    /// re-quantize the affected tensors, evaluate.  The result is *pending*
+    /// until [`Objective::accept`] / [`Objective::reject`].
+    fn try_layer(&mut self, l: usize, t: &LayerTransform) -> crate::Result<Loss>;
+
+    /// Commit the pending proposal.
+    fn accept(&mut self) -> crate::Result<()>;
+
+    /// Revert the pending proposal (restore layer weights).
+    fn reject(&mut self) -> crate::Result<()>;
+}
+
+/// Initialize `state` from the objective (idempotent if already done).
+pub fn ensure_init(
+    obj: &mut dyn Objective,
+    state: &mut SearchState,
+    cfg: &SearchConfig,
+) -> crate::Result<()> {
+    if state.best.ce.is_finite() {
+        return Ok(());
+    }
+    let loss = obj.init()?;
+    state.alpha = match cfg.alpha {
+        Some(a) => a,
+        None => {
+            if loss.act_mse > 0.0 {
+                loss.ce / (10.0 * loss.act_mse)
+            } else {
+                0.0
+            }
+        }
+    };
+    state.best = loss;
+    crate::info!(
+        "search init: ce {:.4} act_mse {:.3e} alpha {:.3e}",
+        loss.ce,
+        loss.act_mse,
+        state.alpha
+    );
+    Ok(())
+}
+
+/// Run `n_steps` proposals (Algorithm 1 lines 10–19), extending `state`.
+pub fn run_steps(
+    obj: &mut dyn Objective,
+    state: &mut SearchState,
+    cfg: &SearchConfig,
+    n_steps: usize,
+) -> crate::Result<()> {
+    ensure_init(obj, state, cfg)?;
+    let n_layers = obj.n_layers();
+
+    for _ in 0..n_steps {
+        state.step += 1;
+        let l = state.rng.below(n_layers);
+        let proposal =
+            state.transforms[l].propose(&mut state.rng, cfg.kinds, cfg.frac, cfg.sigma_s, cfg.sigma_r);
+        let loss = obj.try_layer(l, &proposal)?;
+        let accepted = loss.total(state.alpha) < state.best.total(state.alpha);
+        if accepted {
+            obj.accept()?;
+            state.transforms[l] = proposal;
+            state.best = loss;
+            state.accepts += 1;
+        } else {
+            obj.reject()?;
+        }
+        let rec = StepRecord {
+            step: state.step,
+            layer: l,
+            loss_total: state.best.total(state.alpha),
+            ce: state.best.ce,
+            act_mse: state.best.act_mse,
+            accepted,
+            accept_rate: state.accept_rate(),
+            elapsed_s: state.started.elapsed().as_secs_f64(),
+        };
+        if cfg.log_every > 0 && state.step % cfg.log_every == 0 {
+            crate::info!(
+                "step {:5}  loss {:.4}  ce {:.4}  mse {:.3e}  acc {:.2}",
+                rec.step,
+                rec.loss_total,
+                rec.ce,
+                rec.act_mse,
+                rec.accept_rate
+            );
+        }
+        state.telemetry.push(rec);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Synthetic objective: loss = Σ per-layer potentials; a transform's
+    /// potential improves when its scale vector is closer to a hidden
+    /// optimum.  Deterministic, no XLA.
+    struct Synth {
+        n_layers: usize,
+        d: usize,
+        target: Vec<Vec<f32>>,
+        current: Vec<Vec<f32>>,
+        pending: Option<(usize, Vec<f32>)>,
+    }
+
+    impl Synth {
+        fn new(n_layers: usize, d: usize) -> Synth {
+            let mut rng = Pcg64::new(99);
+            let target = (0..n_layers)
+                .map(|_| (0..d).map(|_| (rng.uniform() as f32) * 2.0 + 0.5).collect())
+                .collect();
+            Synth {
+                n_layers,
+                d,
+                target,
+                current: vec![vec![1.0; d]; n_layers],
+                pending: None,
+            }
+        }
+
+        fn layer_loss(&self, l: usize, s: &[f32]) -> f64 {
+            s.iter()
+                .zip(&self.target[l])
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum()
+        }
+
+        fn total_with(&self, l: usize, s: &[f32]) -> Loss {
+            let mut ce = 0.0;
+            for i in 0..self.n_layers {
+                ce += if i == l {
+                    self.layer_loss(i, s)
+                } else {
+                    self.layer_loss(i, &self.current[i])
+                };
+            }
+            Loss { ce, act_mse: 0.0 }
+        }
+    }
+
+    impl Objective for Synth {
+        fn n_layers(&self) -> usize {
+            self.n_layers
+        }
+        fn d_ffn(&self) -> usize {
+            self.d
+        }
+        fn init(&mut self) -> crate::Result<Loss> {
+            Ok(self.total_with(0, &self.current[0].clone()))
+        }
+        fn try_layer(&mut self, l: usize, t: &LayerTransform) -> crate::Result<Loss> {
+            let loss = self.total_with(l, &t.scale);
+            self.pending = Some((l, t.scale.clone()));
+            Ok(loss)
+        }
+        fn accept(&mut self) -> crate::Result<()> {
+            let (l, s) = self.pending.take().expect("pending");
+            self.current[l] = s;
+            Ok(())
+        }
+        fn reject(&mut self) -> crate::Result<()> {
+            self.pending.take().expect("pending");
+            Ok(())
+        }
+    }
+
+    fn cfg() -> SearchConfig {
+        SearchConfig {
+            kinds: TransformKinds::parse("s").unwrap(),
+            frac: 0.3,
+            sigma_s: 0.3,
+            sigma_r: 0.0,
+            alpha: Some(0.0),
+            log_every: 0,
+        }
+    }
+
+    #[test]
+    fn hillclimbing_reduces_loss_monotonically() {
+        let mut obj = Synth::new(3, 8);
+        let mut state = SearchState::new(3, 8, 1);
+        run_steps(&mut obj, &mut state, &cfg(), 400).unwrap();
+        let losses: Vec<f64> = state.telemetry.iter().map(|r| r.loss_total).collect();
+        for w in losses.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "loss increased: {} -> {}", w[0], w[1]);
+        }
+        // must make real progress on this easy landscape
+        assert!(losses.last().unwrap() < &(losses[0] * 0.5), "insufficient progress");
+        assert!(state.accepts > 10);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = |seed| {
+            let mut obj = Synth::new(2, 8);
+            let mut state = SearchState::new(2, 8, seed);
+            run_steps(&mut obj, &mut state, &cfg(), 100).unwrap();
+            (state.best.ce, state.accepts)
+        };
+        assert_eq!(run(5), run(5));
+        assert_ne!(run(5), run(6));
+    }
+
+    #[test]
+    fn rejected_proposals_leave_state_unchanged() {
+        struct AlwaysWorse {
+            pending: bool,
+        }
+        impl Objective for AlwaysWorse {
+            fn n_layers(&self) -> usize {
+                1
+            }
+            fn d_ffn(&self) -> usize {
+                4
+            }
+            fn init(&mut self) -> crate::Result<Loss> {
+                Ok(Loss { ce: 1.0, act_mse: 0.0 })
+            }
+            fn try_layer(&mut self, _: usize, _: &LayerTransform) -> crate::Result<Loss> {
+                self.pending = true;
+                Ok(Loss { ce: 2.0, act_mse: 0.0 })
+            }
+            fn accept(&mut self) -> crate::Result<()> {
+                panic!("must never accept");
+            }
+            fn reject(&mut self) -> crate::Result<()> {
+                assert!(self.pending);
+                self.pending = false;
+                Ok(())
+            }
+        }
+        let mut obj = AlwaysWorse { pending: false };
+        let mut state = SearchState::new(1, 4, 0);
+        run_steps(&mut obj, &mut state, &cfg(), 50).unwrap();
+        assert_eq!(state.accepts, 0);
+        assert!(state.transforms[0].is_identity());
+        assert!((state.best.ce - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alpha_auto_set_from_init() {
+        struct WithMse;
+        impl Objective for WithMse {
+            fn n_layers(&self) -> usize {
+                1
+            }
+            fn d_ffn(&self) -> usize {
+                4
+            }
+            fn init(&mut self) -> crate::Result<Loss> {
+                Ok(Loss { ce: 5.0, act_mse: 0.1 })
+            }
+            fn try_layer(&mut self, _: usize, _: &LayerTransform) -> crate::Result<Loss> {
+                Ok(Loss { ce: 10.0, act_mse: 0.1 })
+            }
+            fn accept(&mut self) -> crate::Result<()> {
+                Ok(())
+            }
+            fn reject(&mut self) -> crate::Result<()> {
+                Ok(())
+            }
+        }
+        let mut state = SearchState::new(1, 4, 0);
+        let c = SearchConfig { alpha: None, ..cfg() };
+        run_steps(&mut WithMse, &mut state, &c, 1).unwrap();
+        // alpha = ce / (10 * mse) = 5 / 1 = 5
+        assert!((state.alpha - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn telemetry_accept_rate_consistent() {
+        let mut obj = Synth::new(2, 8);
+        let mut state = SearchState::new(2, 8, 3);
+        run_steps(&mut obj, &mut state, &cfg(), 200).unwrap();
+        let last = state.telemetry.last().unwrap();
+        assert!((last.accept_rate - state.accepts as f64 / 200.0).abs() < 1e-9);
+        assert_eq!(state.telemetry.len(), 200);
+    }
+}

@@ -1,0 +1,18 @@
+//! The paper's contribution: activation-guided discrete search over
+//! invariant transformations (Algorithm 1).
+//!
+//! * [`hillclimb`] — the generic random-walk hill-climbing driver, written
+//!   against the [`Objective`] trait so its control flow is unit-testable
+//!   without XLA;
+//! * [`objective`] — the real objective: transform → re-quantize → run the
+//!   AOT XLA programs through the incremental [`crate::runtime::Evaluator`];
+//! * [`state`] — resumable search state (π, s, φ per layer + RNG +
+//!   telemetry) with JSON checkpoints.
+
+pub mod hillclimb;
+pub mod objective;
+pub mod state;
+
+pub use hillclimb::{run_steps, Objective, SearchConfig};
+pub use objective::XlaObjective;
+pub use state::{SearchState, StepRecord};

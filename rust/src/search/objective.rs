@@ -1,0 +1,177 @@
+//! The real search objective: transform → re-quantize → evaluate on the
+//! AOT XLA programs.
+//!
+//! Per proposal for layer *l*, only three tensors change: `up.w`, `up.b`,
+//! `down.w` (Eqns. 21–22; `down.b` is untouched).  The two weight matrices
+//! are re-quantized under the base method's semantics — on device through
+//! the standalone Pallas fake-quant program for RTN (keeping the L1 kernel
+//! on the hot path), or on host for the clip-search / GPTQ quantizers —
+//! and the incremental evaluator re-runs only layers ≥ *l*.
+
+use super::hillclimb::Objective;
+use crate::baselines::{Prepared, Quantizer};
+use crate::runtime::{Evaluator, Loss};
+use crate::runtime::evaluator::Pending;
+use crate::tensor::Tensor;
+use crate::transform::{apply_to_tensors, LayerTransform};
+
+/// Accepted quantized tensors of one layer (for cheap proposal revert).
+struct LayerTensors {
+    up_w: Tensor,
+    up_b: Tensor,
+    down_w: Tensor,
+}
+
+pub struct XlaObjective {
+    prepared: Prepared,
+    pub eval: Evaluator,
+    /// Accepted quantized FFN tensors per layer (revert source).
+    accepted: Vec<LayerTensors>,
+    /// In-flight proposal: (layer, evaluator pending, tensors).
+    pending: Option<(usize, Pending, LayerTensors)>,
+    /// Quantize RTN proposals on device via the Pallas program.
+    pub device_quant: bool,
+}
+
+impl XlaObjective {
+    /// `eval` must already hold the uploaded FP weights of `prepared.fp`
+    /// and captured H₀ (see `coordinator::pipeline`).
+    ///
+    /// RTN proposals *can* run the fake-quant on device through the
+    /// standalone Pallas program (`INVAREXPLORE_DEVICE_QUANT=1`).  Under the
+    /// CPU PJRT client the interpret-mode kernel executes its grid as an
+    /// XLA while-loop (~75× the host codec, see EXPERIMENTS.md §Perf), so
+    /// the default is the bit-identical host codec; the Pallas path is
+    /// exercised by the cross-check tests and is the intended TPU route.
+    pub fn new(prepared: Prepared, eval: Evaluator) -> XlaObjective {
+        let device_quant = matches!(prepared.quantizer, Quantizer::Plain)
+            && std::env::var("INVAREXPLORE_DEVICE_QUANT").as_deref() == Ok("1");
+        XlaObjective {
+            prepared,
+            eval,
+            accepted: Vec::new(),
+            pending: None,
+            device_quant,
+        }
+    }
+
+    fn config(&self) -> &crate::model::OptConfig {
+        &self.prepared.fp.config
+    }
+
+    /// Quantize + upload the FFN tensors of layer `l` under transform `t`.
+    fn push_layer(&mut self, l: usize, t: &LayerTransform) -> crate::Result<LayerTensors> {
+        let fp = &self.prepared.fp;
+        let (up_w_t, up_b_t, down_w_t) = apply_to_tensors(
+            t,
+            fp.layer(l, "up.w"),
+            fp.layer(l, "up.b"),
+            fp.layer(l, "down.w"),
+        );
+        let (up_name, down_name) = (format!("l{l}.up.w"), format!("l{l}.down.w"));
+        let engine = &mut self.eval.engine;
+        let (up_q, down_q);
+        if self.device_quant {
+            // RTN semantics via the on-device Pallas kernel program
+            engine.update_tensor_device_quant(&up_name, &up_w_t, self.prepared.scheme)?;
+            engine.update_tensor_device_quant(&down_name, &down_w_t, self.prepared.scheme)?;
+            // host copies kept for revert (re-quantized identically on revert
+            // upload; cheap since fake-quant is deterministic)
+            up_q = up_w_t;
+            down_q = down_w_t;
+        } else {
+            up_q = self.prepared.quantize_tensor(&up_name, &up_w_t, Some(t));
+            down_q = self.prepared.quantize_tensor(&down_name, &down_w_t, Some(t));
+            engine.update_tensor(&up_name, &up_q)?;
+            engine.update_tensor(&down_name, &down_q)?;
+        }
+        engine.update_tensor(&format!("l{l}.up.b"), &up_b_t)?;
+        Ok(LayerTensors { up_w: up_q, up_b: up_b_t, down_w: down_q })
+    }
+
+    /// Re-upload the accepted tensors of layer `l` (proposal revert).
+    fn restore_layer(&mut self, l: usize) -> crate::Result<()> {
+        // move tensors out to appease the borrow checker, then put back
+        let tensors = std::mem::replace(
+            &mut self.accepted[l],
+            LayerTensors {
+                up_w: Tensor::zeros(0, 0),
+                up_b: Tensor::zeros(0, 0),
+                down_w: Tensor::zeros(0, 0),
+            },
+        );
+        let engine = &mut self.eval.engine;
+        if self.device_quant {
+            engine.update_tensor_device_quant(&format!("l{l}.up.w"), &tensors.up_w, self.prepared.scheme)?;
+            engine.update_tensor_device_quant(&format!("l{l}.down.w"), &tensors.down_w, self.prepared.scheme)?;
+        } else {
+            engine.update_tensor(&format!("l{l}.up.w"), &tensors.up_w)?;
+            engine.update_tensor(&format!("l{l}.down.w"), &tensors.down_w)?;
+        }
+        engine.update_tensor(&format!("l{l}.up.b"), &tensors.up_b)?;
+        self.accepted[l] = tensors;
+        Ok(())
+    }
+}
+
+impl Objective for XlaObjective {
+    fn n_layers(&self) -> usize {
+        self.config().n_layers
+    }
+
+    fn d_ffn(&self) -> usize {
+        self.config().d_ffn
+    }
+
+    /// Quantize every linear under the base method (identity transforms),
+    /// upload, and run the first full evaluation.
+    fn init(&mut self) -> crate::Result<Loss> {
+        let fp = &self.prepared.fp;
+        let cfg = self.config().clone();
+        // attention projections: quantized once, never touched by the search
+        for l in 0..cfg.n_layers {
+            for base in ["q.w", "k.w", "v.w", "o.w"] {
+                let name = format!("l{l}.{base}");
+                if self.device_quant {
+                    let t = fp.get(&name).clone();
+                    self.eval
+                        .engine
+                        .update_tensor_device_quant(&name, &t, self.prepared.scheme)?;
+                } else {
+                    let q = self.prepared.quantize_tensor(&name, fp.get(&name), None);
+                    self.eval.engine.update_tensor(&name, &q)?;
+                }
+            }
+        }
+        // FFN tensors via the shared path (identity transform)
+        self.accepted.clear();
+        for l in 0..cfg.n_layers {
+            let t = LayerTransform::identity(cfg.d_ffn);
+            let tensors = self.push_layer(l, &t)?;
+            self.accepted.push(tensors);
+        }
+        self.eval.full_eval()
+    }
+
+    fn try_layer(&mut self, l: usize, t: &LayerTransform) -> crate::Result<Loss> {
+        anyhow::ensure!(self.pending.is_none(), "overlapping proposals");
+        let tensors = self.push_layer(l, t)?;
+        let pending = self.eval.eval_from_layer(l)?;
+        let loss = pending.loss;
+        self.pending = Some((l, pending, tensors));
+        Ok(loss)
+    }
+
+    fn accept(&mut self) -> crate::Result<()> {
+        let (l, pending, tensors) = self.pending.take().expect("no pending proposal");
+        self.eval.accept(pending);
+        self.accepted[l] = tensors;
+        Ok(())
+    }
+
+    fn reject(&mut self) -> crate::Result<()> {
+        let (l, _pending, _tensors) = self.pending.take().expect("no pending proposal");
+        self.restore_layer(l)?;
+        Ok(())
+    }
+}

@@ -1,0 +1,188 @@
+//! Resumable search state + telemetry.
+
+use std::path::Path;
+
+use crate::runtime::Loss;
+use crate::transform::LayerTransform;
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+
+/// One telemetry record per search step (drives Figure 1).
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: usize,
+    pub layer: usize,
+    pub loss_total: f64,
+    pub ce: f64,
+    pub act_mse: f64,
+    pub accepted: bool,
+    /// Cumulative acceptance ratio up to this step.
+    pub accept_rate: f64,
+    pub elapsed_s: f64,
+}
+
+/// Full search state: current transforms, objective scalars, RNG, telemetry.
+pub struct SearchState {
+    pub transforms: Vec<LayerTransform>,
+    pub rng: Pcg64,
+    pub best: Loss,
+    pub alpha: f64,
+    pub step: usize,
+    pub accepts: usize,
+    pub telemetry: Vec<StepRecord>,
+    pub started: std::time::Instant,
+}
+
+impl SearchState {
+    pub fn new(n_layers: usize, d_ffn: usize, seed: u64) -> SearchState {
+        SearchState {
+            transforms: vec![LayerTransform::identity(d_ffn); n_layers],
+            rng: Pcg64::new(seed),
+            best: Loss { ce: f64::INFINITY, act_mse: 0.0 },
+            alpha: 0.0,
+            step: 0,
+            accepts: 0,
+            telemetry: Vec::new(),
+            started: std::time::Instant::now(),
+        }
+    }
+
+    pub fn accept_rate(&self) -> f64 {
+        if self.step == 0 {
+            0.0
+        } else {
+            self.accepts as f64 / self.step as f64
+        }
+    }
+
+    /// Serialize transforms + scalars (telemetry is exported separately as
+    /// CSV; the RNG restarts from a derived seed on resume).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("step", self.step)
+            .set("accepts", self.accepts)
+            .set("alpha", self.alpha)
+            .set("best_ce", self.best.ce)
+            .set("best_act_mse", self.best.act_mse)
+            .set(
+                "transforms",
+                Json::Arr(self.transforms.iter().map(|t| t.to_json()).collect()),
+            )
+    }
+
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path, seed: u64) -> crate::Result<SearchState> {
+        let j = crate::util::json::parse_file(path)?;
+        let transforms: Vec<LayerTransform> = j
+            .req("transforms")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(LayerTransform::from_json)
+            .collect::<crate::Result<_>>()?;
+        anyhow::ensure!(!transforms.is_empty(), "empty transform state");
+        let d_ffn = transforms[0].d_ffn();
+        let step = j.req("step")?.as_usize().unwrap_or(0);
+        let mut st = SearchState::new(transforms.len(), d_ffn, seed ^ (step as u64).wrapping_mul(0x9e37));
+        st.transforms = transforms;
+        st.step = step;
+        st.accepts = j.req("accepts")?.as_usize().unwrap_or(0);
+        st.alpha = j.req("alpha")?.as_f64().unwrap_or(0.0);
+        st.best = Loss {
+            ce: j.req("best_ce")?.as_f64().unwrap_or(f64::INFINITY),
+            act_mse: j.req("best_act_mse")?.as_f64().unwrap_or(0.0),
+        };
+        Ok(st)
+    }
+
+    /// Export telemetry as CSV (Figure 1 series).
+    pub fn telemetry_csv(&self, path: &Path) -> crate::Result<()> {
+        let mut w = crate::util::csv::CsvWriter::create(
+            path,
+            &["step", "layer", "loss", "ce", "act_mse", "accepted", "accept_rate", "elapsed_s"],
+        )?;
+        for r in &self.telemetry {
+            w.row(&[
+                r.step.to_string(),
+                r.layer.to_string(),
+                format!("{:.6}", r.loss_total),
+                format!("{:.6}", r.ce),
+                format!("{:.6e}", r.act_mse),
+                (r.accepted as u8).to_string(),
+                format!("{:.4}", r.accept_rate),
+                format!("{:.2}", r.elapsed_s),
+            ])?;
+        }
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_roundtrip() {
+        let mut st = SearchState::new(3, 16, 7);
+        st.step = 42;
+        st.accepts = 17;
+        st.alpha = 1.5;
+        st.best = Loss { ce: 2.0, act_mse: 0.25 };
+        let t = st.transforms[1].propose(
+            &mut st.rng,
+            crate::transform::TransformKinds::all(),
+            0.2,
+            0.05,
+            1e-4,
+        );
+        st.transforms[1] = t;
+
+        let dir = std::env::temp_dir().join("invarexplore_state_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("s.json");
+        st.save(&p).unwrap();
+        let back = SearchState::load(&p, 7).unwrap();
+        assert_eq!(back.step, 42);
+        assert_eq!(back.accepts, 17);
+        assert_eq!(back.transforms[1].perm, st.transforms[1].perm);
+        assert!((back.best.ce - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accept_rate() {
+        let mut st = SearchState::new(1, 4, 0);
+        assert_eq!(st.accept_rate(), 0.0);
+        st.step = 10;
+        st.accepts = 8;
+        assert!((st.accept_rate() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn telemetry_csv_written() {
+        let mut st = SearchState::new(1, 4, 0);
+        st.telemetry.push(StepRecord {
+            step: 1,
+            layer: 0,
+            loss_total: 3.0,
+            ce: 2.9,
+            act_mse: 0.1,
+            accepted: true,
+            accept_rate: 1.0,
+            elapsed_s: 0.5,
+        });
+        let dir = std::env::temp_dir().join("invarexplore_state_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.csv");
+        st.telemetry_csv(&p).unwrap();
+        let (hdr, rows) = crate::util::csv::read_csv(&p).unwrap();
+        assert_eq!(hdr[0], "step");
+        assert_eq!(rows.len(), 1);
+    }
+}

@@ -1,0 +1,242 @@
+//! Small dense linear algebra for the GPTQ baseline: Cholesky factorization,
+//! triangular solves and SPD inversion of the (damped) Hessian `H = 2XXᵀ+λI`.
+//!
+//! f64 throughout — GPTQ's error-compensation recursion is sensitive to the
+//! conditioning of the Hessian, and calibration Hessians here are small
+//! (`in_features ≤ 1280`), so the O(n³) cost is negligible next to the
+//! forward passes.
+
+/// Cholesky factorization `A = L·Lᵀ` (lower-triangular, in place on a copy).
+///
+/// Returns an error if `A` is not positive definite.
+pub fn cholesky(a: &[f64], n: usize) -> crate::Result<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                anyhow::ensure!(s > 0.0, "cholesky: not PD at pivot {i} (s={s})");
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `L·y = b` (forward substitution), `L` lower-triangular.
+pub fn solve_lower(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i * n + k] * y[k];
+        }
+        y[i] = s / l[i * n + i];
+    }
+    y
+}
+
+/// Solve `Lᵀ·x = y` (backward substitution).
+pub fn solve_upper_t(l: &[f64], n: usize, y: &[f64]) -> Vec<f64> {
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in i + 1..n {
+            s -= l[k * n + i] * x[k];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    x
+}
+
+/// SPD inverse via Cholesky: `A⁻¹ = L⁻ᵀ·L⁻¹`, column by column.
+pub fn spd_inverse(a: &[f64], n: usize) -> crate::Result<Vec<f64>> {
+    let l = cholesky(a, n)?;
+    let mut inv = vec![0.0; n * n];
+    let mut e = vec![0.0; n];
+    for c in 0..n {
+        e.fill(0.0);
+        e[c] = 1.0;
+        let y = solve_lower(&l, n, &e);
+        let x = solve_upper_t(&l, n, &y);
+        for r in 0..n {
+            inv[r * n + c] = x[r];
+        }
+    }
+    Ok(inv)
+}
+
+/// Upper-triangular Cholesky of the *inverse*: the `chol(H⁻¹)ᵀ` matrix that
+/// GPTQ's fast path uses (Frantar et al. 2023, Alg. 1).  Returns the
+/// upper-triangular factor `U` with `H⁻¹ = Uᵀ·U`.
+pub fn cholesky_inverse_upper(h: &[f64], n: usize) -> crate::Result<Vec<f64>> {
+    let inv = spd_inverse(h, n)?;
+    // chol(inv) lower L with inv = L·Lᵀ; we want U = Lᵀ.
+    let l = cholesky(&inv, n)?;
+    let mut u = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            u[j * n + i] = l[i * n + j];
+        }
+    }
+    Ok(u)
+}
+
+/// Dense symmetric rank-k update used by the Hessian builder:
+/// `H += 2 · Xᵀ·X` where `x` is `[samples, n]` row-major.
+pub fn sym_accumulate_xtx(h: &mut [f64], x: &[f32], samples: usize, n: usize, coeff: f64) {
+    assert_eq!(h.len(), n * n);
+    assert_eq!(x.len(), samples * n);
+    for s in 0..samples {
+        let row = &x[s * n..(s + 1) * n];
+        for i in 0..n {
+            let xi = row[i] as f64 * coeff;
+            if xi == 0.0 {
+                continue;
+            }
+            let hrow = &mut h[i * n..(i + 1) * n];
+            for (j, hj) in hrow.iter_mut().enumerate().skip(i) {
+                *hj += xi * row[j] as f64;
+            }
+        }
+    }
+}
+
+/// Mirror the upper triangle into the lower (after accumulation).
+pub fn symmetrize_upper(h: &mut [f64], n: usize) {
+    for i in 0..n {
+        for j in i + 1..n {
+            h[j * n + i] = h[i * n + j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{propcheck, rng::Pcg64};
+
+    fn random_spd(rng: &mut Pcg64, n: usize) -> Vec<f64> {
+        // A = B·Bᵀ + n·I is SPD.
+        let b: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b[i * n + k] * b[j * n + k];
+                }
+                a[i * n + j] = s + if i == j { n as f64 } else { 0.0 };
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        propcheck::check("L·Lᵀ == A", 16, |rng| {
+            let n = rng.below(12) + 2;
+            let a = random_spd(rng, n);
+            let l = cholesky(&a, n).map_err(|e| e.to_string())?;
+            for i in 0..n {
+                for j in 0..n {
+                    let mut s = 0.0;
+                    for k in 0..n {
+                        s += l[i * n + k] * l[j * n + k];
+                    }
+                    if (s - a[i * n + j]).abs() > 1e-8 * (1.0 + a[i * n + j].abs()) {
+                        return Err(format!("A[{i},{j}] {s} vs {}", a[i * n + j]));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(cholesky(&a, 2).is_err());
+    }
+
+    #[test]
+    fn solve_roundtrip() {
+        propcheck::check("A·x == b after solve", 16, |rng| {
+            let n = rng.below(10) + 2;
+            let a = random_spd(rng, n);
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let l = cholesky(&a, n).map_err(|e| e.to_string())?;
+            let y = solve_lower(&l, n, &b);
+            let x = solve_upper_t(&l, n, &y);
+            for i in 0..n {
+                let mut s = 0.0;
+                for j in 0..n {
+                    s += a[i * n + j] * x[j];
+                }
+                if (s - b[i]).abs() > 1e-7 {
+                    return Err(format!("row {i}: {s} vs {}", b[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn inverse_times_matrix_is_identity() {
+        let mut rng = Pcg64::new(2);
+        let n = 8;
+        let a = random_spd(&mut rng, n);
+        let inv = spd_inverse(&a, n).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += a[i * n + k] * inv[k * n + j];
+                }
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((s - expect).abs() < 1e-8, "({i},{j}) = {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_inverse_upper_property() {
+        // H⁻¹ == Uᵀ·U
+        let mut rng = Pcg64::new(3);
+        let n = 6;
+        let h = random_spd(&mut rng, n);
+        let u = cholesky_inverse_upper(&h, n).unwrap();
+        let inv = spd_inverse(&h, n).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += u[k * n + i] * u[k * n + j];
+                }
+                assert!((s - inv[i * n + j]).abs() < 1e-8);
+            }
+        }
+        // and U is upper-triangular
+        for i in 0..n {
+            for j in 0..i {
+                assert_eq!(u[i * n + j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn hessian_accumulation() {
+        let x = vec![1.0f32, 2.0, 3.0, 4.0]; // 2 samples, n=2
+        let mut h = vec![0.0f64; 4];
+        sym_accumulate_xtx(&mut h, &x, 2, 2, 2.0);
+        symmetrize_upper(&mut h, 2);
+        // 2·XᵀX: X = [[1,2],[3,4]] -> XᵀX = [[10,14],[14,20]]
+        assert_eq!(h, vec![20.0, 28.0, 28.0, 40.0]);
+    }
+}

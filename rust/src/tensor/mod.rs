@@ -1,0 +1,10 @@
+//! Dense f32 tensor substrate: row-major matrices, blocked matmul kernels,
+//! transformer primitive ops, and the small dense linear algebra (Cholesky)
+//! needed by the GPTQ baseline.
+
+pub mod linalg;
+pub mod ops;
+#[allow(clippy::module_inception)]
+pub mod tensor;
+
+pub use tensor::Tensor;

@@ -1,0 +1,246 @@
+//! Transformer primitive ops on raw f32 slices + the blocked matmul kernels
+//! used by the native forward pass (the calibration/oracle path; the search
+//! hot path runs through XLA instead).
+
+use super::Tensor;
+use crate::util::pool;
+
+/// `out[m,n] = a[m,k] @ b[n,k]^T` — the "linear layer" product where `b` is
+/// a row-major `[out_features, in_features]` weight matrix.  Both operands
+/// are traversed row-wise, so this is cache-friendly without packing.
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    // 4-wide j-blocking: keeps 4 accumulators live and lets the compiler
+    // auto-vectorize the k loop.
+    for i in 0..m {
+        let ar = &a[i * k..(i + 1) * k];
+        let or = &mut out[i * n..(i + 1) * n];
+        let mut j = 0;
+        while j + 4 <= n {
+            let b0 = &b[j * k..(j + 1) * k];
+            let b1 = &b[(j + 1) * k..(j + 2) * k];
+            let b2 = &b[(j + 2) * k..(j + 3) * k];
+            let b3 = &b[(j + 3) * k..(j + 4) * k];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for kk in 0..k {
+                let av = ar[kk];
+                s0 += av * b0[kk];
+                s1 += av * b1[kk];
+                s2 += av * b2[kk];
+                s3 += av * b3[kk];
+            }
+            or[j] = s0;
+            or[j + 1] = s1;
+            or[j + 2] = s2;
+            or[j + 3] = s3;
+            j += 4;
+        }
+        while j < n {
+            let br = &b[j * k..(j + 1) * k];
+            or[j] = dot(ar, br);
+            j += 1;
+        }
+    }
+}
+
+/// Thread-parallel [`matmul_nt`] splitting over rows of `a`.
+pub fn matmul_nt_par(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    let threads = pool::num_threads();
+    if m * n * k < 1 << 18 || threads == 1 {
+        return matmul_nt(a, b, m, k, n, out);
+    }
+    let rows_per_chunk = m.div_ceil(threads).max(1);
+    pool::parallel_chunks_mut(out, rows_per_chunk * n, threads, |ci, chunk| {
+        let row0 = ci * rows_per_chunk;
+        let rows = chunk.len() / n;
+        matmul_nt(&a[row0 * k..(row0 + rows) * k], b, rows, k, n, chunk);
+    });
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let chunks = a.len() / 8;
+    for c in 0..chunks {
+        for l in 0..8 {
+            acc[l] += a[c * 8 + l] * b[c * 8 + l];
+        }
+    }
+    let mut s: f32 = acc.iter().sum();
+    for i in chunks * 8..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Tensor-level linear layer: `x [t, in] @ w [out, in]^T + bias`.
+pub fn linear(x: &Tensor, w: &Tensor, bias: &[f32]) -> Tensor {
+    assert_eq!(x.cols, w.cols, "linear: in-dim mismatch");
+    assert_eq!(bias.len(), w.rows, "linear: bias mismatch");
+    let mut out = Tensor::zeros(x.rows, w.rows);
+    matmul_nt_par(&x.data, &w.data, x.rows, x.cols, w.rows, &mut out.data);
+    for r in 0..out.rows {
+        let row = out.row_mut(r);
+        for (o, b) in row.iter_mut().zip(bias) {
+            *o += *b;
+        }
+    }
+    out
+}
+
+/// LayerNorm over the last dim, matching the L2 model (eps 1e-5).
+pub const LN_EPS: f32 = 1e-5;
+
+pub fn layer_norm(x: &Tensor, w: &[f32], b: &[f32]) -> Tensor {
+    assert_eq!(x.cols, w.len());
+    let mut out = Tensor::zeros(x.rows, x.cols);
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let mean = row.iter().sum::<f32>() / x.cols as f32;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / x.cols as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        let dst = out.row_mut(r);
+        for c in 0..x.cols {
+            dst[c] = (row[c] - mean) * inv * w[c] + b[c];
+        }
+    }
+    out
+}
+
+/// In-place numerically-stable softmax over each row.
+pub fn softmax_rows(x: &mut Tensor) {
+    for r in 0..x.rows {
+        let row = x.row_mut(r);
+        let mx = row.iter().fold(f32::NEG_INFINITY, |m, v| m.max(*v));
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// In-place ReLU.
+pub fn relu(x: &mut Tensor) {
+    for v in &mut x.data {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// `a += b` elementwise.
+pub fn add_assign(a: &mut Tensor, b: &Tensor) {
+    assert_eq!(a.shape(), b.shape());
+    for (x, y) in a.data.iter_mut().zip(&b.data) {
+        *x += *y;
+    }
+}
+
+/// Log-softmax of one row returning only the value at `index` — the
+/// token-level log-prob used by the eval harness.
+pub fn log_prob_at(logits: &[f32], index: usize) -> f32 {
+    let mx = logits.iter().fold(f32::NEG_INFINITY, |m, v| m.max(*v));
+    let lse = mx + logits.iter().map(|v| (v - mx).exp()).sum::<f32>().ln();
+    logits[index] - lse
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+
+    fn naive_matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += a[i * k + kk] * b[j * k + kk];
+                }
+                out[i * n + j] = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive_property() {
+        propcheck::check("matmul_nt == naive", 32, |rng| {
+            let m = rng.below(9) + 1;
+            let k = rng.below(33) + 1;
+            let n = rng.below(17) + 1;
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+            let mut out = vec![0.0; m * n];
+            matmul_nt(&a, &b, m, k, n, &mut out);
+            propcheck::ensure_all_close(&out, &naive_matmul_nt(&a, &b, m, k, n), 1e-3, "matmul")
+        });
+    }
+
+    #[test]
+    fn matmul_par_matches_serial() {
+        let mut rng = crate::util::rng::Pcg64::new(0);
+        let (m, k, n) = (64, 96, 80);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+        let mut s = vec![0.0; m * n];
+        let mut p = vec![0.0; m * n];
+        matmul_nt(&a, &b, m, k, n, &mut s);
+        matmul_nt_par(&a, &b, m, k, n, &mut p);
+        for (x, y) in s.iter().zip(&p) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn linear_applies_bias() {
+        let x = Tensor::from_vec(1, 2, vec![1.0, 2.0]);
+        let w = Tensor::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let out = linear(&x, &w, &[10.0, 20.0]);
+        assert_eq!(out.data, vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn layer_norm_normalizes() {
+        let x = Tensor::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        let out = layer_norm(&x, &[1.0; 4], &[0.0; 4]);
+        let mean: f32 = out.data.iter().sum::<f32>() / 4.0;
+        let var: f32 = out.data.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut x = Tensor::from_vec(2, 3, vec![1.0, 2.0, 3.0, -1.0, 0.0, 1000.0]);
+        softmax_rows(&mut x);
+        for r in 0..2 {
+            let s: f32 = x.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(x.row(r).iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn log_prob_at_matches_manual() {
+        let logits = [0.5f32, 1.5, -0.5];
+        let lp = log_prob_at(&logits, 1);
+        let z: f32 = logits.iter().map(|v| v.exp()).sum();
+        assert!((lp - (1.5 - z.ln())).abs() < 1e-5);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let mut x = Tensor::from_vec(1, 3, vec![-1.0, 0.0, 2.0]);
+        relu(&mut x);
+        assert_eq!(x.data, vec![0.0, 0.0, 2.0]);
+    }
+}

@@ -1,0 +1,179 @@
+//! Row-major 2-D f32 tensor.  Higher-rank arrays in this repo are expressed
+//! as `[rows = product(leading dims), cols = last dim]` matrices plus
+//! explicit shape bookkeeping at the call site — the transformer only ever
+//! needs "matrix of row-vectors" semantics.
+
+/// A dense row-major `rows x cols` f32 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(rows: usize, cols: usize) -> Tensor {
+        Tensor {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Tensor {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Tensor { rows, cols, data }
+    }
+
+    /// 1-D vector as a single-row tensor.
+    pub fn row_vec(data: Vec<f32>) -> Tensor {
+        let cols = data.len();
+        Tensor { rows: 1, cols, data }
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Tensor {
+        let mut out = Tensor::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Frobenius-norm squared distance to another tensor.
+    pub fn sq_dist(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum()
+    }
+
+    /// Mean squared error vs another tensor.
+    pub fn mse(&self, other: &Tensor) -> f64 {
+        self.sq_dist(other) / self.numel() as f64
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    /// Gather rows: `out[i] = self[idx[i]]` (used by permutation transforms
+    /// and the embedding lookup).
+    pub fn gather_rows(&self, idx: &[usize]) -> Tensor {
+        let mut out = Tensor::zeros(idx.len(), self.cols);
+        for (i, &r) in idx.iter().enumerate() {
+            assert!(r < self.rows, "gather_rows: index {r} out of {}", self.rows);
+            out.row_mut(i).copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Gather columns: `out[:, j] = self[:, idx[j]]`.
+    pub fn gather_cols(&self, idx: &[usize]) -> Tensor {
+        let mut out = Tensor::zeros(self.rows, idx.len());
+        for r in 0..self.rows {
+            let src = self.row(r);
+            let dst = out.row_mut(r);
+            for (j, &c) in idx.iter().enumerate() {
+                dst[j] = src[c];
+            }
+        }
+        out
+    }
+
+    /// Elementwise in-place scale of row `r` by `s`.
+    pub fn scale_row(&mut self, r: usize, s: f32) {
+        for x in self.row_mut(r) {
+            *x *= s;
+        }
+    }
+
+    /// Elementwise in-place scale of column `c` by `s`.
+    pub fn scale_col(&mut self, c: usize, s: f32) {
+        for r in 0..self.rows {
+            self.data[r * self.cols + c] *= s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let t = Tensor::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.at(1, 2), 6.0);
+        assert_eq!(t.row(0), &[1., 2., 3.]);
+        assert_eq!(t.numel(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn bad_shape_panics() {
+        Tensor::from_vec(2, 2, vec![1.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let t = Tensor::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.transpose().transpose(), t);
+        assert_eq!(t.transpose().at(2, 1), 6.0);
+    }
+
+    #[test]
+    fn gather_rows_permutes() {
+        let t = Tensor::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let g = t.gather_rows(&[2, 0, 1]);
+        assert_eq!(g.data, vec![5., 6., 1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn gather_cols_permutes() {
+        let t = Tensor::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let g = t.gather_cols(&[1, 2, 0]);
+        assert_eq!(g.data, vec![2., 3., 1., 5., 6., 4.]);
+    }
+
+    #[test]
+    fn mse_and_scale() {
+        let a = Tensor::from_vec(1, 2, vec![0., 0.]);
+        let b = Tensor::from_vec(1, 2, vec![2., 0.]);
+        assert!((a.mse(&b) - 2.0).abs() < 1e-12);
+        let mut c = Tensor::from_vec(2, 2, vec![1., 1., 1., 1.]);
+        c.scale_row(0, 3.0);
+        c.scale_col(1, 2.0);
+        assert_eq!(c.data, vec![3., 6., 1., 2.]);
+    }
+}

@@ -1,0 +1,301 @@
+//! Application of a [`LayerTransform`] to FFN weights (Eqns. 21–22):
+//!
+//! ```text
+//!   W̄_up   = P · S · R · W_up        b̄_up = P · S · R · b_up
+//!   W̄_down = W_down · Rᵀ · S⁻¹ · Pᵀ
+//! ```
+//!
+//! Order matters: R innermost, then S, then P — matching the python-side
+//! test helper (`python/tests/test_model.py::apply_ffn_transform`) so both
+//! languages agree on the semantics.  P/S/R are never materialized as
+//! matrices: rotation mixes row pairs, scaling multiplies rows/columns,
+//! permutation gathers.
+
+use super::state::LayerTransform;
+use crate::model::Weights;
+use crate::tensor::Tensor;
+
+/// Transform `(W_up [f,d], b_up [1,f], W_down [d,f])`, returning new tensors.
+pub fn apply_to_tensors(
+    t: &LayerTransform,
+    w_up: &Tensor,
+    b_up: &Tensor,
+    w_down: &Tensor,
+) -> (Tensor, Tensor, Tensor) {
+    let f = t.d_ffn();
+    assert_eq!(w_up.rows, f, "W_up rows != d_ffn");
+    assert_eq!(b_up.numel(), f, "b_up size != d_ffn");
+    assert_eq!(w_down.cols, f, "W_down cols != d_ffn");
+
+    let mut wu = w_up.clone();
+    let mut bu = b_up.clone();
+    let mut wd = w_down.clone();
+
+    // R: rotate channel pairs (2p, 2p+1) by φ_p.  W_up rows / b_up entries
+    // rotate forward; W_down columns rotate forward too (W_down·Rᵀ mixes
+    // columns with the same angles).
+    for (p, &phi) in t.phis.iter().enumerate() {
+        if phi == 0.0 {
+            continue;
+        }
+        let (i, j) = (2 * p, 2 * p + 1);
+        let (c, s) = (phi.cos(), phi.sin());
+        rotate_rows(&mut wu, i, j, c, s);
+        let (bi, bj) = (bu.data[i], bu.data[j]);
+        bu.data[i] = c * bi - s * bj;
+        bu.data[j] = s * bi + c * bj;
+        rotate_cols(&mut wd, i, j, c, s);
+    }
+
+    // S: scale channel i by s_i on the up side, 1/s_i on the down side.
+    for (i, &s) in t.scale.iter().enumerate() {
+        if s == 1.0 {
+            continue;
+        }
+        wu.scale_row(i, s);
+        bu.data[i] *= s;
+        wd.scale_col(i, 1.0 / s);
+    }
+
+    // P: gather rows of W_up / entries of b_up / columns of W_down.
+    if !t.perm.iter().enumerate().all(|(i, &p)| i == p) {
+        wu = wu.gather_rows(&t.perm);
+        let bu_new: Vec<f32> = t.perm.iter().map(|&p| bu.data[p]).collect();
+        bu = Tensor::from_vec(1, f, bu_new);
+        wd = wd.gather_cols(&t.perm);
+    }
+
+    (wu, bu, wd)
+}
+
+/// Rotate rows i, j of a tensor in place: `(ri, rj) <- (c·ri - s·rj, s·ri + c·rj)`.
+fn rotate_rows(t: &mut Tensor, i: usize, j: usize, c: f32, s: f32) {
+    let cols = t.cols;
+    let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+    let (head, tail) = t.data.split_at_mut(hi * cols);
+    let ri = &mut head[lo * cols..(lo + 1) * cols];
+    let rj = &mut tail[..cols];
+    for k in 0..cols {
+        let (a, b) = (ri[k], rj[k]);
+        ri[k] = c * a - s * b;
+        rj[k] = s * a + c * b;
+    }
+}
+
+/// Rotate columns i, j of a tensor in place.
+fn rotate_cols(t: &mut Tensor, i: usize, j: usize, c: f32, s: f32) {
+    for r in 0..t.rows {
+        let base = r * t.cols;
+        let (a, b) = (t.data[base + i], t.data[base + j]);
+        t.data[base + i] = c * a - s * b;
+        t.data[base + j] = s * a + c * b;
+    }
+}
+
+/// Apply a transform to layer `l` of `base` (the untouched FP weights),
+/// writing the transformed tensors into `out`.  `base` and `out` may be the
+/// same model content-wise; `out` is overwritten at `l{l}.{up.w,up.b,down.w}`.
+pub fn apply_to_layer(base: &Weights, out: &mut Weights, l: usize, t: &LayerTransform) {
+    let (wu, bu, wd) = apply_to_tensors(
+        t,
+        base.layer(l, "up.w"),
+        base.layer(l, "up.b"),
+        base.layer(l, "down.w"),
+    );
+    out.set(&format!("l{l}.up.w"), wu);
+    out.set(&format!("l{l}.up.b"), bu);
+    out.set(&format!("l{l}.down.w"), wd);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::native::{forward, Capture};
+    use crate::model::OptConfig;
+    use crate::transform::TransformKinds;
+    use crate::util::{propcheck, rng::Pcg64};
+
+    fn rand_ffn(rng: &mut Pcg64, f: usize, d: usize) -> (Tensor, Tensor, Tensor) {
+        let wu = Tensor::from_vec(f, d, (0..f * d).map(|_| rng.normal() as f32).collect());
+        let bu = Tensor::from_vec(1, f, (0..f).map(|_| rng.normal() as f32).collect());
+        let wd = Tensor::from_vec(d, f, (0..f * d).map(|_| rng.normal() as f32).collect());
+        (wu, bu, wd)
+    }
+
+    /// Reference FFN: `W_down · relu(W_up·x + b_up)`.
+    fn ffn_out(wu: &Tensor, bu: &Tensor, wd: &Tensor, x: &[f32]) -> Vec<f32> {
+        let f = wu.rows;
+        let mut u = vec![0.0f32; f];
+        for i in 0..f {
+            let mut s = bu.data[i];
+            for (k, &xv) in x.iter().enumerate() {
+                s += wu.at(i, k) * xv;
+            }
+            u[i] = s.max(0.0);
+        }
+        let d = wd.rows;
+        let mut out = vec![0.0f32; d];
+        for r in 0..d {
+            let mut s = 0.0;
+            for (i, &uv) in u.iter().enumerate() {
+                s += wd.at(r, i) * uv;
+            }
+            out[r] = s;
+        }
+        out
+    }
+
+    #[test]
+    fn permutation_scaling_exact_invariance() {
+        propcheck::check("P,S leave FFN output unchanged", 24, |rng| {
+            let (f, d) = (16, 8);
+            let (wu, bu, wd) = rand_ffn(rng, f, d);
+            let t = LayerTransform::identity(f).propose(
+                rng,
+                TransformKinds::parse("ps").unwrap(),
+                0.5,
+                0.2,
+                0.0,
+            );
+            let (wu2, bu2, wd2) = apply_to_tensors(&t, &wu, &bu, &wd);
+            let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let y0 = ffn_out(&wu, &bu, &wd, &x);
+            let y1 = ffn_out(&wu2, &bu2, &wd2, &x);
+            propcheck::ensure_all_close(&y0, &y1, 1e-3, "FFN output")
+        });
+    }
+
+    #[test]
+    fn small_rotation_approx_invariance() {
+        // §3.2 pilot: small angles change outputs only marginally.
+        propcheck::check("small R approximately invariant", 16, |rng| {
+            let (f, d) = (16, 8);
+            let (wu, bu, wd) = rand_ffn(rng, f, d);
+            let t = LayerTransform::identity(f).propose(
+                rng,
+                TransformKinds::parse("r").unwrap(),
+                0.5,
+                0.0,
+                1e-4,
+            );
+            let (wu2, bu2, wd2) = apply_to_tensors(&t, &wu, &bu, &wd);
+            let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let y0 = ffn_out(&wu, &bu, &wd, &x);
+            let y1 = ffn_out(&wu2, &bu2, &wd2, &x);
+            let norm: f32 = y0.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-6);
+            let diff: f32 = y0
+                .iter()
+                .zip(&y1)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                .sqrt();
+            propcheck::ensure(diff / norm < 1e-2, format!("rel drift {}", diff / norm))
+        });
+    }
+
+    #[test]
+    fn large_rotation_breaks_invariance() {
+        let mut rng = Pcg64::new(7);
+        let (f, d) = (16, 8);
+        let (wu, bu, wd) = rand_ffn(&mut rng, f, d);
+        let mut t = LayerTransform::identity(f);
+        for p in t.phis.iter_mut() {
+            *p = 1.0; // ~57 degrees
+        }
+        let (wu2, bu2, wd2) = apply_to_tensors(&t, &wu, &bu, &wd);
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let y0 = ffn_out(&wu, &bu, &wd, &x);
+        let y1 = ffn_out(&wu2, &bu2, &wd2, &x);
+        let diff: f32 = y0.iter().zip(&y1).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 1e-3, "large rotation should not be invariant");
+    }
+
+    #[test]
+    fn rotation_orthogonality() {
+        // R then R⁻¹ (negated angles, before any S/P) is the identity.
+        let mut rng = Pcg64::new(8);
+        let (f, d) = (8, 4);
+        let (wu, bu, wd) = rand_ffn(&mut rng, f, d);
+        let mut t = LayerTransform::identity(f);
+        for p in t.phis.iter_mut() {
+            *p = rng.normal() as f32 * 0.5;
+        }
+        let mut t_inv = LayerTransform::identity(f);
+        for (a, b) in t_inv.phis.iter_mut().zip(&t.phis) {
+            *a = -b;
+        }
+        let (wu1, bu1, wd1) = apply_to_tensors(&t, &wu, &bu, &wd);
+        let (wu2, bu2, wd2) = apply_to_tensors(&t_inv, &wu1, &bu1, &wd1);
+        propcheck::ensure_all_close(&wu.data, &wu2.data, 1e-5, "wu").unwrap();
+        propcheck::ensure_all_close(&bu.data, &bu2.data, 1e-5, "bu").unwrap();
+        propcheck::ensure_all_close(&wd.data, &wd2.data, 1e-5, "wd").unwrap();
+    }
+
+    #[test]
+    fn full_model_invariance_via_native_forward() {
+        // End-to-end: transformed full model has (nearly) identical CE.
+        let cfg = OptConfig::test_config();
+        let base = Weights::random(cfg.clone(), 10);
+        let mut rng = Pcg64::new(11);
+        let toks: Vec<Vec<i32>> = (0..2)
+            .map(|_| (0..16).map(|_| rng.below(cfg.vocab) as i32).collect())
+            .collect();
+        let tgts: Vec<Vec<i32>> = toks
+            .iter()
+            .map(|s| {
+                let mut x = s[1..].to_vec();
+                x.push(s[0]);
+                x
+            })
+            .collect();
+        let mask = vec![vec![1.0; 16]; 2];
+        let ce0 = forward(&base, &toks, &tgts, &mask, Capture::default()).ce;
+
+        let mut w2 = base.clone();
+        for l in 0..cfg.n_layers {
+            let t = LayerTransform::identity(cfg.d_ffn).propose(
+                &mut rng,
+                TransformKinds::all(),
+                0.3,
+                0.1,
+                1e-4,
+            );
+            apply_to_layer(&base, &mut w2, l, &t);
+        }
+        let ce1 = forward(&w2, &toks, &tgts, &mask, Capture::default()).ce;
+        let drift = (ce1 - ce0).abs() / ce0;
+        assert!(drift < 1e-3, "CE drift {drift} (ce0={ce0}, ce1={ce1})");
+    }
+
+    #[test]
+    fn transform_changes_quant_error_distribution() {
+        // The mechanism the paper exploits: FP-invariant but quant-variant.
+        use crate::quant::{fake_quant, QuantScheme};
+        let mut rng = Pcg64::new(12);
+        let (f, d) = (32, 64);
+        let (wu, bu, wd) = rand_ffn(&mut rng, f, d);
+        let scheme = QuantScheme::new(2, 32);
+        let e0 = wd.mse(&fake_quant(&wd, scheme));
+        let t = LayerTransform::identity(f).propose(
+            &mut rng,
+            TransformKinds::parse("s").unwrap(),
+            0.5,
+            0.5,
+            0.0,
+        );
+        let (_, _, wd2) = apply_to_tensors(&t, &wu, &bu, &wd);
+        let e1 = wd2.mse(&fake_quant(&wd2, scheme));
+        assert!((e0 - e1).abs() / e0 > 1e-4, "quant error unchanged: {e0} vs {e1}");
+    }
+
+    #[test]
+    fn identity_transform_is_noop() {
+        let mut rng = Pcg64::new(13);
+        let (wu, bu, wd) = rand_ffn(&mut rng, 8, 4);
+        let t = LayerTransform::identity(8);
+        let (wu2, bu2, wd2) = apply_to_tensors(&t, &wu, &bu, &wd);
+        assert_eq!(wu, wu2);
+        assert_eq!(bu, bu2);
+        assert_eq!(wd, wd2);
+    }
+}

@@ -1,0 +1,11 @@
+//! Invariant transformations of the FFN block (paper §3.2, Eqns. 8–22).
+//!
+//! A transform is stored as vectors — a permutation π, a scale vector s and
+//! rotation angles φ — never as matrices; application is indexing and
+//! elementwise math (the paper makes the same point under Eqn. 11).
+
+pub mod apply;
+pub mod state;
+
+pub use apply::{apply_to_layer, apply_to_tensors};
+pub use state::{LayerTransform, TransformKinds};

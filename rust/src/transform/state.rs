@@ -1,0 +1,266 @@
+//! Transform state (π, s, φ per layer) and proposal sampling (Algorithm 1,
+//! lines 12–14).
+
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+
+/// Which transform families the search may use (Table-2 ablations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransformKinds {
+    pub permutation: bool,
+    pub scaling: bool,
+    pub rotation: bool,
+}
+
+impl TransformKinds {
+    pub fn all() -> Self {
+        TransformKinds { permutation: true, scaling: true, rotation: true }
+    }
+
+    pub fn none() -> Self {
+        TransformKinds { permutation: false, scaling: false, rotation: false }
+    }
+
+    /// Parse CLI strings like "psr", "p", "sr".
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        let mut k = Self::none();
+        for c in s.chars() {
+            match c {
+                'p' => k.permutation = true,
+                's' => k.scaling = true,
+                'r' => k.rotation = true,
+                _ => anyhow::bail!("unknown transform kind {c:?} (want subset of \"psr\")"),
+            }
+        }
+        Ok(k)
+    }
+
+    pub fn label(&self) -> String {
+        let mut s = String::new();
+        if self.permutation {
+            s.push('P');
+        }
+        if self.scaling {
+            s.push('S');
+        }
+        if self.rotation {
+            s.push('R');
+        }
+        if s.is_empty() {
+            s.push('-');
+        }
+        s
+    }
+}
+
+/// The invariant transform of one FFN block: `W̄_up = P·S·R·W_up`,
+/// `W̄_down = W_down·Rᵀ·S⁻¹·Pᵀ` (Eqns. 21–22).
+///
+/// * `perm[i]` = source index feeding output slot `i` (so `perm = identity`
+///   means no permutation);
+/// * `scale[i]` = multiplicative factor for FFN channel `i` (must be > 0
+///   for ReLU invariance);
+/// * `phis[p]` = rotation angle of the channel pair `(2p, 2p+1)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerTransform {
+    pub perm: Vec<usize>,
+    pub scale: Vec<f32>,
+    pub phis: Vec<f32>,
+}
+
+impl LayerTransform {
+    pub fn identity(d_ffn: usize) -> LayerTransform {
+        assert!(d_ffn % 2 == 0, "d_ffn must be even for pairwise rotation");
+        LayerTransform {
+            perm: (0..d_ffn).collect(),
+            scale: vec![1.0; d_ffn],
+            phis: vec![0.0; d_ffn / 2],
+        }
+    }
+
+    pub fn d_ffn(&self) -> usize {
+        self.perm.len()
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.perm.iter().enumerate().all(|(i, &p)| i == p)
+            && self.scale.iter().all(|&s| s == 1.0)
+            && self.phis.iter().all(|&p| p == 0.0)
+    }
+
+    /// Sample a proposal around this state (Algorithm 1 lines 12–14, plus
+    /// the §3.2 detail that only a `frac` subset of channels moves per step).
+    ///
+    /// * permutation: re-shuffle a random subset of `frac·d` slots;
+    /// * scaling: Gaussian random walk `s' ~ N(s, σ_s²)` on a subset
+    ///   (clamped positive — ReLU invariance needs s > 0);
+    /// * rotation: random walk `φ' ~ N(φ, σ_r²)` on a subset of pairs.
+    pub fn propose(
+        &self,
+        rng: &mut Pcg64,
+        kinds: TransformKinds,
+        frac: f64,
+        sigma_s: f64,
+        sigma_r: f64,
+    ) -> LayerTransform {
+        let d = self.d_ffn();
+        let k = ((d as f64 * frac).round() as usize).clamp(2, d);
+        let mut next = self.clone();
+
+        if kinds.permutation {
+            // shuffle the *composition*: pick k slots and cycle their sources
+            let slots = rng.sample_indices(d, k);
+            let mut srcs: Vec<usize> = slots.iter().map(|&i| next.perm[i]).collect();
+            rng.shuffle(&mut srcs);
+            for (slot, src) in slots.iter().zip(srcs) {
+                next.perm[*slot] = src;
+            }
+        }
+        if kinds.scaling {
+            for &i in &rng.sample_indices(d, k) {
+                let s = rng.normal_with(next.scale[i] as f64, sigma_s) as f32;
+                next.scale[i] = s.max(1e-3); // keep positive (ReLU identity)
+            }
+        }
+        if kinds.rotation {
+            let pairs = d / 2;
+            let kp = (k / 2).max(1);
+            for &p in &rng.sample_indices(pairs, kp) {
+                next.phis[p] = rng.normal_with(next.phis[p] as f64, sigma_r) as f32;
+            }
+        }
+        next
+    }
+
+    /// Validity: perm is a bijection, scales positive, sizes consistent.
+    pub fn validate(&self) -> crate::Result<()> {
+        let d = self.d_ffn();
+        anyhow::ensure!(self.scale.len() == d, "scale length mismatch");
+        anyhow::ensure!(self.phis.len() == d / 2, "phis length mismatch");
+        let mut seen = vec![false; d];
+        for &p in &self.perm {
+            anyhow::ensure!(p < d, "perm index {p} out of range");
+            anyhow::ensure!(!seen[p], "perm not a bijection (dup {p})");
+            seen[p] = true;
+        }
+        anyhow::ensure!(
+            self.scale.iter().all(|&s| s > 0.0 && s.is_finite()),
+            "scales must be positive finite"
+        );
+        anyhow::ensure!(self.phis.iter().all(|p| p.is_finite()), "phis must be finite");
+        Ok(())
+    }
+
+    // -- (de)serialization for search-state checkpoints ----------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("perm", self.perm.iter().map(|&p| Json::from(p)).collect::<Vec<_>>())
+            .set("scale", self.scale.iter().map(|&s| Json::from(s as f64)).collect::<Vec<_>>())
+            .set("phis", self.phis.iter().map(|&p| Json::from(p as f64)).collect::<Vec<_>>())
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<LayerTransform> {
+        let t = LayerTransform {
+            perm: j.req("perm")?.usize_array()?,
+            scale: j.req("scale")?.f64_array()?.into_iter().map(|v| v as f32).collect(),
+            phis: j.req("phis")?.f64_array()?.into_iter().map(|v| v as f32).collect(),
+        };
+        t.validate()?;
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+
+    #[test]
+    fn identity_is_identity() {
+        let t = LayerTransform::identity(64);
+        assert!(t.is_identity());
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn propose_stays_valid() {
+        propcheck::check("proposals remain valid transforms", 64, |rng| {
+            let mut t = LayerTransform::identity(32);
+            for _ in 0..10 {
+                t = t.propose(rng, TransformKinds::all(), 0.1, 1e-2, 1e-5);
+                t.validate().map_err(|e| e.to_string())?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn propose_respects_kinds() {
+        let mut rng = crate::util::rng::Pcg64::new(1);
+        let t0 = LayerTransform::identity(32);
+        let p_only = t0.propose(&mut rng, TransformKinds::parse("p").unwrap(), 0.2, 1e-2, 1e-5);
+        assert!(p_only.scale.iter().all(|&s| s == 1.0));
+        assert!(p_only.phis.iter().all(|&p| p == 0.0));
+        assert!(!p_only.perm.iter().enumerate().all(|(i, &p)| i == p));
+
+        let s_only = t0.propose(&mut rng, TransformKinds::parse("s").unwrap(), 0.2, 1e-1, 1e-5);
+        assert!(s_only.perm.iter().enumerate().all(|(i, &p)| i == p));
+        assert!(s_only.scale.iter().any(|&s| s != 1.0));
+    }
+
+    #[test]
+    fn proposal_changes_bounded_subset() {
+        let mut rng = crate::util::rng::Pcg64::new(2);
+        let t0 = LayerTransform::identity(100);
+        let t1 = t0.propose(&mut rng, TransformKinds::parse("s").unwrap(), 0.1, 1e-2, 1e-5);
+        let changed = t1.scale.iter().filter(|&&s| s != 1.0).count();
+        assert!(changed <= 10, "changed {changed}");
+    }
+
+    #[test]
+    fn scales_stay_positive() {
+        propcheck::check("scale positivity under huge sigma", 32, |rng| {
+            let mut t = LayerTransform::identity(16);
+            for _ in 0..20 {
+                t = t.propose(rng, TransformKinds::all(), 0.5, 10.0, 0.1);
+            }
+            propcheck::ensure(t.scale.iter().all(|&s| s > 0.0), "nonpositive scale")
+        });
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut rng = crate::util::rng::Pcg64::new(3);
+        let t = LayerTransform::identity(16).propose(&mut rng, TransformKinds::all(), 0.3, 0.05, 1e-4);
+        let back = LayerTransform::from_json(&t.to_json()).unwrap();
+        assert_eq!(t.perm, back.perm);
+        for (a, b) in t.scale.iter().zip(&back.scale) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!(TransformKinds::parse("psr").unwrap(), TransformKinds::all());
+        let p = TransformKinds::parse("p").unwrap();
+        assert!(p.permutation && !p.scaling && !p.rotation);
+        assert!(TransformKinds::parse("x").is_err());
+        assert_eq!(TransformKinds::all().label(), "PSR");
+        assert_eq!(TransformKinds::none().label(), "-");
+    }
+
+    #[test]
+    fn invalid_transforms_rejected() {
+        let mut t = LayerTransform::identity(8);
+        t.perm[0] = 1;
+        t.perm[1] = 1;
+        assert!(t.validate().is_err());
+        let mut t2 = LayerTransform::identity(8);
+        t2.scale[3] = -1.0;
+        assert!(t2.validate().is_err());
+        let mut t3 = LayerTransform::identity(8);
+        t3.phis[0] = f32::NAN;
+        assert!(t3.validate().is_err());
+    }
+}

@@ -1,0 +1,144 @@
+//! Criterion-less micro/macro benchmark harness (criterion is not vendored).
+//!
+//! The `rust/benches/*.rs` binaries use [`BenchSuite`] both for wall-clock
+//! measurement (perf_hotpath) and for driving the paper's table/figure
+//! reproductions, whose primary output is the table itself.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over repeated runs.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub p50: Duration,
+}
+
+impl Stats {
+    pub fn per_sec(&self) -> f64 {
+        if self.mean.as_secs_f64() > 0.0 {
+            1.0 / self.mean.as_secs_f64()
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Measure `f` adaptively: warm up, then run until `budget` or `max_iters`.
+pub fn measure<F: FnMut()>(mut f: F, budget: Duration, max_iters: usize) -> Stats {
+    // warmup
+    f();
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget && times.len() < max_iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    if times.is_empty() {
+        times.push(Duration::ZERO);
+    }
+    let mut sorted = times.clone();
+    sorted.sort();
+    let sum: Duration = times.iter().sum();
+    Stats {
+        iters: times.len(),
+        mean: sum / times.len() as u32,
+        min: sorted[0],
+        max: *sorted.last().unwrap(),
+        p50: sorted[sorted.len() / 2],
+    }
+}
+
+/// Named collection of benchmark results with aligned text output.
+pub struct BenchSuite {
+    name: String,
+    rows: Vec<(String, Stats)>,
+}
+
+impl BenchSuite {
+    pub fn new(name: &str) -> Self {
+        BenchSuite {
+            name: name.to_string(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn bench<F: FnMut()>(&mut self, label: &str, f: F) -> Stats {
+        let budget = Duration::from_millis(
+            std::env::var("INVAREXPLORE_BENCH_MS")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(1500),
+        );
+        let stats = measure(f, budget, 1000);
+        println!(
+            "  {label:<42} {:>12?} mean  {:>12?} p50  ({} iters)",
+            stats.mean, stats.p50, stats.iters
+        );
+        self.rows.push((label.to_string(), stats.clone()));
+        stats
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = format!("== bench suite: {} ==\n", self.name);
+        for (label, s) in &self.rows {
+            out.push_str(&format!(
+                "{label},{:.6e},{:.6e},{}\n",
+                s.mean.as_secs_f64(),
+                s.p50.as_secs_f64(),
+                s.iters
+            ));
+        }
+        out
+    }
+}
+
+/// Helper: should the bench run at paper scale? (`INVAREXPLORE_FULL=1`)
+pub fn full_scale() -> bool {
+    std::env::var("INVAREXPLORE_FULL").as_deref() == Ok("1")
+}
+
+/// Search-step budget for benches (`INVAREXPLORE_STEPS` override).
+pub fn step_budget(default: usize) -> usize {
+    std::env::var("INVAREXPLORE_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if full_scale() { 10_000 } else { default })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_iters() {
+        let s = measure(
+            || {
+                std::hint::black_box(1 + 1);
+            },
+            Duration::from_millis(20),
+            50,
+        );
+        assert!(s.iters >= 1 && s.iters <= 50);
+        assert!(s.min <= s.mean && s.mean <= s.max.max(s.mean));
+    }
+
+    #[test]
+    fn suite_report_contains_labels() {
+        let mut suite = BenchSuite::new("t");
+        suite.bench("fast_op", || {
+            std::hint::black_box(2 * 2);
+        });
+        assert!(suite.report().contains("fast_op"));
+    }
+
+    #[test]
+    fn step_budget_default() {
+        std::env::remove_var("INVAREXPLORE_STEPS");
+        std::env::remove_var("INVAREXPLORE_FULL");
+        assert_eq!(step_budget(123), 123);
+    }
+}

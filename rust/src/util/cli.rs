@@ -1,0 +1,166 @@
+//! Command-line argument parsing substrate (clap is not vendored).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positionals,
+//! and generates usage text from registered options.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec for one subcommand.
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments for a subcommand.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn req(&self, name: &str) -> crate::Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> crate::Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("invalid value for --{name}: {v:?}")),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Parse raw argv (after the subcommand) against a spec.
+pub fn parse_args(spec: &[ArgSpec], argv: &[String]) -> crate::Result<Args> {
+    let mut args = Args::default();
+    // seed defaults
+    for s in spec {
+        if let Some(d) = s.default {
+            args.values.insert(s.name.to_string(), d.to_string());
+        }
+    }
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(stripped) = a.strip_prefix("--") {
+            let (name, inline_val) = match stripped.split_once('=') {
+                Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                None => (stripped.to_string(), None),
+            };
+            let s = spec
+                .iter()
+                .find(|s| s.name == name)
+                .ok_or_else(|| anyhow::anyhow!("unknown option --{name}\n{}", usage(spec)))?;
+            if s.is_flag {
+                anyhow::ensure!(inline_val.is_none(), "--{name} takes no value");
+                args.flags.push(name);
+            } else {
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        argv.get(i)
+                            .cloned()
+                            .ok_or_else(|| anyhow::anyhow!("--{name} requires a value"))?
+                    }
+                };
+                args.values.insert(name, val);
+            }
+        } else {
+            args.positionals.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+/// Usage text generated from a spec.
+pub fn usage(spec: &[ArgSpec]) -> String {
+    let mut out = String::from("options:\n");
+    for s in spec {
+        let tail = if s.is_flag {
+            String::new()
+        } else if let Some(d) = s.default {
+            format!(" <value> (default: {d})")
+        } else {
+            " <value> (required)".to_string()
+        };
+        out.push_str(&format!("  --{}{}\n      {}\n", s.name, tail, s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<ArgSpec> {
+        vec![
+            ArgSpec { name: "model", help: "model name", default: Some("opt-base"), is_flag: false },
+            ArgSpec { name: "steps", help: "search steps", default: Some("100"), is_flag: false },
+            ArgSpec { name: "verbose", help: "chatty", default: None, is_flag: true },
+            ArgSpec { name: "out", help: "output path", default: None, is_flag: false },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = parse_args(&spec(), &sv(&["--steps", "250"])).unwrap();
+        assert_eq!(a.get("model"), Some("opt-base"));
+        assert_eq!(a.parse_or::<usize>("steps", 0).unwrap(), 250);
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = parse_args(&spec(), &sv(&["--model=opt-tiny", "--verbose", "pos1"])).unwrap();
+        assert_eq!(a.get("model"), Some("opt-tiny"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positionals, vec!["pos1"]);
+    }
+
+    #[test]
+    fn required_missing() {
+        let a = parse_args(&spec(), &sv(&[])).unwrap();
+        assert!(a.req("out").is_err());
+        assert!(a.req("model").is_ok());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parse_args(&spec(), &sv(&["--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse_args(&spec(), &sv(&["--out"])).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = usage(&spec());
+        assert!(u.contains("--model") && u.contains("default: opt-base"));
+    }
+}

@@ -1,0 +1,94 @@
+//! CSV emission for the figure/table benches (and a small reader used by
+//! tests to check what the benches wrote).
+
+use std::io::Write;
+use std::path::Path;
+
+/// Streaming CSV writer with a fixed header.
+pub struct CsvWriter {
+    file: std::io::BufWriter<std::fs::File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: &Path, header: &[&str]) -> crate::Result<CsvWriter> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut file = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvWriter {
+            file,
+            cols: header.len(),
+        })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> crate::Result<()> {
+        anyhow::ensure!(
+            values.len() == self.cols,
+            "CSV row has {} values, header has {}",
+            values.len(),
+            self.cols
+        );
+        writeln!(self.file, "{}", values.join(","))?;
+        Ok(())
+    }
+
+    /// Convenience for all-numeric rows.
+    pub fn row_f64(&mut self, values: &[f64]) -> crate::Result<()> {
+        let vs: Vec<String> = values.iter().map(|v| format!("{v}")).collect();
+        self.row(&vs)
+    }
+
+    pub fn flush(&mut self) -> crate::Result<()> {
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+/// Parse a simple CSV (no quoting — our writers never quote).
+pub fn read_csv(path: &Path) -> crate::Result<(Vec<String>, Vec<Vec<String>>)> {
+    let text = std::fs::read_to_string(path)?;
+    let mut lines = text.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty CSV"))?
+        .split(',')
+        .map(String::from)
+        .collect();
+    let rows = lines
+        .filter(|l| !l.is_empty())
+        .map(|l| l.split(',').map(String::from).collect())
+        .collect();
+    Ok((header, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("invarexplore_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.csv");
+        {
+            let mut w = CsvWriter::create(&p, &["step", "loss"]).unwrap();
+            w.row_f64(&[1.0, 0.5]).unwrap();
+            w.row(&["2".into(), "0.25".into()]).unwrap();
+            w.flush().unwrap();
+        }
+        let (hdr, rows) = read_csv(&p).unwrap();
+        assert_eq!(hdr, ["step", "loss"]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1], vec!["2", "0.25"]);
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let dir = std::env::temp_dir().join("invarexplore_csv_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut w = CsvWriter::create(&dir.join("y.csv"), &["a", "b"]).unwrap();
+        assert!(w.row(&["1".into()]).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Infrastructure substrates built from scratch for the offline sandbox
+//! (the vendored crate set only contains the `xla` closure — no serde, no
+//! clap, no rand, no criterion, no rayon).
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod logging;
+pub mod plot;
+pub mod pool;
+pub mod propcheck;
+pub mod rng;
+pub mod sampling;

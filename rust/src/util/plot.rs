@@ -1,0 +1,103 @@
+//! ASCII line plots for Figure-1 style optimization curves, rendered into
+//! bench output and EXPERIMENTS.md (no plotting library in the sandbox).
+
+/// Render one or more (x, y) series into a fixed-size ASCII grid.
+///
+/// Each series gets a distinct glyph; axes are annotated with min/max.
+pub fn render(
+    title: &str,
+    series: &[(&str, &[(f64, f64)])],
+    width: usize,
+    height: usize,
+) -> String {
+    let glyphs = ['*', 'o', '+', 'x', '#', '@'];
+    let pts: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|(_, s)| s.iter().copied())
+        .filter(|(x, y)| x.is_finite() && y.is_finite())
+        .collect();
+    if pts.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for (x, y) in &pts {
+        xmin = xmin.min(*x);
+        xmax = xmax.max(*x);
+        ymin = ymin.min(*y);
+        ymax = ymax.max(*y);
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, s)) in series.iter().enumerate() {
+        let g = glyphs[si % glyphs.len()];
+        for (x, y) in s.iter() {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            let cx = (((x - xmin) / (xmax - xmin)) * (width - 1) as f64).round() as usize;
+            let cy = (((y - ymin) / (ymax - ymin)) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy.min(height - 1)][cx.min(width - 1)] = g;
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", glyphs[si % glyphs.len()], name));
+    }
+    out.push_str(&format!("{ymax:>10.4} ┐\n"));
+    for row in &grid {
+        out.push_str("           │");
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{ymin:>10.4} ┴"));
+    out.push_str(&"─".repeat(width));
+    out.push('\n');
+    out.push_str(&format!("            {xmin:<12.1}{:>w$.1}\n", xmax, w = width.saturating_sub(12)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_points() {
+        let s1: Vec<(f64, f64)> = (0..20).map(|i| (i as f64, (i * i) as f64)).collect();
+        let out = render("quadratic", &[("sq", &s1)], 40, 10);
+        assert!(out.contains('*'));
+        assert!(out.contains("quadratic"));
+        // title + legend + ymax + grid rows + ymin + x axis
+        assert_eq!(out.lines().count(), 1 + 1 + 1 + 10 + 1 + 1);
+    }
+
+    #[test]
+    fn empty_series() {
+        let out = render("nothing", &[("e", &[])], 10, 5);
+        assert!(out.contains("no data"));
+    }
+
+    #[test]
+    fn constant_series_no_panic() {
+        let s: Vec<(f64, f64)> = (0..5).map(|i| (i as f64, 3.0)).collect();
+        let out = render("flat", &[("f", &s)], 20, 5);
+        assert!(out.contains('*'));
+    }
+
+    #[test]
+    fn multiple_series_distinct_glyphs() {
+        let a: Vec<(f64, f64)> = vec![(0.0, 0.0), (1.0, 1.0)];
+        let b: Vec<(f64, f64)> = vec![(0.0, 1.0), (1.0, 0.0)];
+        let out = render("two", &[("a", &a), ("b", &b)], 20, 8);
+        assert!(out.contains('*') && out.contains('o'));
+    }
+}

@@ -1,0 +1,174 @@
+//! Scoped thread-pool substrate (rayon/tokio are not vendored).
+//!
+//! Used for data-parallel work in the coordinator: calibration capture over
+//! batches, GPTQ over independent linear layers, and reasoning-task
+//! scoring.  Built on `std::thread::scope`, so closures may borrow.
+
+/// Number of worker threads to use (env override `INVAREXPLORE_THREADS`).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("INVAREXPLORE_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(1, 16)
+}
+
+/// Apply `f` to every index `0..n` in parallel, collecting results in order.
+///
+/// Work is distributed by atomic counter (dynamic scheduling), so uneven
+/// item costs (e.g. GPTQ on differently-shaped layers) balance well.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return (0..n).map(f).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slot_ptr = SendPtr(slots.as_mut_ptr());
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let next = &next;
+            let f = &f;
+            let slot_ptr = slot_ptr;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = f(i);
+                // SAFETY: each index i is claimed exactly once, so each slot
+                // is written by exactly one thread; the scope outlives use.
+                unsafe {
+                    *slot_ptr.get().add(i) = Some(out);
+                }
+            });
+        }
+    });
+
+    slots.into_iter().map(|s| s.expect("slot filled")).collect()
+}
+
+/// Wrapper making a raw pointer Send for the scoped-disjoint-writes pattern.
+///
+/// Accessed through [`SendPtr::get`] so closures capture the whole wrapper
+/// (Rust 2021 disjoint capture would otherwise grab the raw field, which is
+/// not `Send`).
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+// manual impls: `derive` would wrongly require `T: Copy`
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    fn get(self) -> *mut T {
+        self.0
+    }
+}
+
+/// Chunked parallel-for over a mutable slice: each worker gets disjoint
+/// chunks (used by the native forward's batched matmul).
+pub fn parallel_chunks_mut<T, F>(data: &mut [T], chunk: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.is_empty() {
+        return;
+    }
+    let threads = threads.max(1);
+    if threads == 1 || data.len() <= chunk {
+        for (ci, c) in data.chunks_mut(chunk).enumerate() {
+            f(ci, c);
+        }
+        return;
+    }
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let n_chunks = data.len().div_ceil(chunk);
+    let next = AtomicUsize::new(0);
+    let base = SendPtr(data.as_mut_ptr());
+    let len = data.len();
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(n_chunks) {
+            let next = &next;
+            let f = &f;
+            let base = base;
+            scope.spawn(move || loop {
+                let ci = next.fetch_add(1, Ordering::Relaxed);
+                if ci >= n_chunks {
+                    break;
+                }
+                let start = ci * chunk;
+                let end = (start + chunk).min(len);
+                // SAFETY: chunks are disjoint by construction.
+                let slice =
+                    unsafe { std::slice::from_raw_parts_mut(base.get().add(start), end - start) };
+                f(ci, slice);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order() {
+        let out = parallel_map(100, 8, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_empty_and_single() {
+        assert!(parallel_map(0, 4, |i| i).is_empty());
+        assert_eq!(parallel_map(1, 4, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn map_uneven_costs() {
+        let out = parallel_map(32, 4, |i| {
+            if i % 7 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            i
+        });
+        assert_eq!(out.len(), 32);
+    }
+
+    #[test]
+    fn chunks_mut_writes_all() {
+        let mut data = vec![0usize; 1000];
+        parallel_chunks_mut(&mut data, 64, 8, |ci, c| {
+            for (j, x) in c.iter_mut().enumerate() {
+                *x = ci * 64 + j;
+            }
+        });
+        assert_eq!(data, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn num_threads_positive() {
+        assert!(num_threads() >= 1);
+    }
+}

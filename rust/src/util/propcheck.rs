@@ -1,0 +1,92 @@
+//! Property-testing substrate ("proptest-lite": proptest is not vendored).
+//!
+//! Drives a closure over many seeded random cases; on failure it reports the
+//! failing seed so the case can be replayed deterministically.  Coordinator
+//! invariants (routing of proposals, transform algebra, codec round-trips)
+//! are checked with this throughout the test suite.
+
+use super::rng::Pcg64;
+
+/// Number of cases per property (env override `INVAREXPLORE_PROPCHECK_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("INVAREXPLORE_PROPCHECK_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` over `cases` seeded RNGs; panics with the failing seed.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Pcg64) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x5eed_0000 + case as u64;
+        let mut rng = Pcg64::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name:?} failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Like [`check`] with the default case count.
+pub fn check_default<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Pcg64) -> Result<(), String>,
+{
+    check(name, default_cases(), prop)
+}
+
+/// Assertion helpers returning `Result<(), String>` for use inside props.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn ensure_close(a: f32, b: f32, atol: f32, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= atol {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (atol {atol})"))
+    }
+}
+
+pub fn ensure_all_close(a: &[f32], b: &[f32], atol: f32, what: &str) -> Result<(), String> {
+    ensure(a.len() == b.len(), format!("{what}: length {} vs {}", a.len(), b.len()))?;
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > atol {
+            return Err(format!("{what}[{i}]: {x} vs {y} (atol {atol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("uniform in range", 32, |rng| {
+            let u = rng.uniform();
+            ensure((0.0..1.0).contains(&u), format!("u={u}"))
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 4, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_helpers() {
+        assert!(ensure_close(1.0, 1.0005, 1e-3, "x").is_ok());
+        assert!(ensure_close(1.0, 1.1, 1e-3, "x").is_err());
+        assert!(ensure_all_close(&[1.0, 2.0], &[1.0, 2.0], 0.0, "v").is_ok());
+        assert!(ensure_all_close(&[1.0], &[1.0, 2.0], 0.0, "v").is_err());
+    }
+}

@@ -1,0 +1,127 @@
+//! Token sampling strategies for the serving path: greedy, temperature,
+//! top-k — operating on raw logit slices from the `head_logits` program.
+
+use super::rng::Pcg64;
+
+/// Decoding strategy.
+#[derive(Debug, Clone, Copy)]
+pub enum Sampler {
+    Greedy,
+    /// Softmax sampling at a temperature (> 0).
+    Temperature(f32),
+    /// Top-k restricted temperature sampling.
+    TopK { k: usize, temperature: f32 },
+}
+
+impl Sampler {
+    /// Pick the next token id from `logits`.
+    pub fn sample(&self, logits: &[f32], rng: &mut Pcg64) -> usize {
+        match *self {
+            Sampler::Greedy => argmax(logits),
+            Sampler::Temperature(t) => {
+                let idx: Vec<usize> = (0..logits.len()).collect();
+                categorical(logits, &idx, t, rng)
+            }
+            Sampler::TopK { k, temperature } => {
+                let idx = top_k_indices(logits, k.max(1));
+                categorical(logits, &idx, temperature, rng)
+            }
+        }
+    }
+}
+
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Indices of the k largest logits (unordered).
+pub fn top_k_indices(logits: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    let k = k.min(logits.len());
+    idx.select_nth_unstable_by(k - 1, |&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+    idx.truncate(k);
+    idx
+}
+
+/// Sample among `idx` proportional to `softmax(logits[idx] / t)`.
+fn categorical(logits: &[f32], idx: &[usize], temperature: f32, rng: &mut Pcg64) -> usize {
+    let t = temperature.max(1e-4);
+    let mx = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f64> = idx.iter().map(|&i| (((logits[i] - mx) / t) as f64).exp()).collect();
+    let total: f64 = weights.iter().sum();
+    let mut u = rng.uniform() * total;
+    for (w, &i) in weights.iter().zip(idx) {
+        u -= w;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    *idx.last().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let logits = [0.1, 2.0, -1.0, 1.9];
+        let mut rng = Pcg64::new(0);
+        assert_eq!(Sampler::Greedy.sample(&logits, &mut rng), 1);
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let logits = [0.0, 5.0, 4.0, -3.0, 1.0];
+        let mut rng = Pcg64::new(1);
+        let s = Sampler::TopK { k: 2, temperature: 1.0 };
+        for _ in 0..100 {
+            let t = s.sample(&logits, &mut rng);
+            assert!(t == 1 || t == 2, "sampled outside top-2: {t}");
+        }
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let logits = [0.0, 1.0, 0.5];
+        let mut rng = Pcg64::new(2);
+        let s = Sampler::Temperature(0.01);
+        let hits = (0..200).filter(|_| s.sample(&logits, &mut rng) == 1).count();
+        assert!(hits > 195, "hits {hits}");
+    }
+
+    #[test]
+    fn high_temperature_spreads_mass() {
+        let logits = [0.0, 1.0];
+        let mut rng = Pcg64::new(3);
+        let s = Sampler::Temperature(100.0);
+        let hits = (0..2000).filter(|_| s.sample(&logits, &mut rng) == 0).count();
+        assert!((800..1200).contains(&hits), "hits {hits}");
+    }
+
+    #[test]
+    fn top_k_indices_correct() {
+        let logits = [3.0, 1.0, 4.0, 1.5, 5.0];
+        let mut idx = top_k_indices(&logits, 3);
+        idx.sort_unstable();
+        assert_eq!(idx, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn sampling_deterministic_per_seed() {
+        let logits: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin()).collect();
+        let s = Sampler::TopK { k: 8, temperature: 0.7 };
+        let run = |seed| {
+            let mut rng = Pcg64::new(seed);
+            (0..20).map(|_| s.sample(&logits, &mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(9), run(9));
+        assert_ne!(run(9), run(10));
+    }
+}

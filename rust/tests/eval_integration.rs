@@ -1,0 +1,103 @@
+//! Evaluation-harness integration: perplexity and few-shot reasoning on the
+//! real trained models through the XLA engine, with the sanity properties
+//! the paper's Table 1 depends on (FP best, bigger models better, trained
+//! models above chance).
+
+use invarexplore::coordinator::Session;
+use invarexplore::eval;
+use invarexplore::io::tasks;
+use invarexplore::runtime::Engine;
+
+fn session() -> Option<Session> {
+    match Session::load_default() {
+        Ok(s) => Some(s),
+        Err(_) => {
+            eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn fp_perplexity_beats_unigram_and_scales_with_size() {
+    let Some(session) = session() else { return };
+    let wiki = session.corpus("wiki").unwrap();
+    let mut ppls = Vec::new();
+    for model in ["opt-tiny", "opt-base"] {
+        let w = session.weights(model).unwrap();
+        let mut engine = Engine::load(&session.manifest, model).unwrap();
+        engine.upload_weights(&w).unwrap();
+        let ppl = eval::perplexity(&engine, &wiki, 32).unwrap();
+        eprintln!("{model}: wiki ppl {ppl:.2}");
+        assert!(ppl < session.manifest.data.vocab as f64, "{model} worse than uniform");
+        assert!(ppl > 1.0);
+        ppls.push(ppl);
+    }
+    assert!(
+        ppls[1] < ppls[0],
+        "bigger model must have lower ppl: {ppls:?}"
+    );
+}
+
+#[test]
+fn reasoning_above_chance_on_trained_model() {
+    let Some(session) = session() else { return };
+    let model = "opt-base";
+    let w = session.weights(model).unwrap();
+    let mut engine = Engine::load(&session.manifest, model).unwrap();
+    engine.upload_weights(&w).unwrap();
+
+    let (results, avg) = eval::eval_all_tasks(&engine, &session.manifest.data, 5, 40, 0).unwrap();
+    for r in &results {
+        eprintln!("{:8} acc {:6.2} (n={})", r.task, r.accuracy, r.n);
+    }
+    eprintln!("avg {avg:.2}");
+    // chance: 2-option tasks 50, 4-option 25 — average chance ≈ 41.7;
+    // a trained model must clear it by a margin
+    assert!(avg > 47.0, "avg accuracy {avg} not above chance margin");
+}
+
+#[test]
+fn reasoning_deterministic() {
+    let Some(session) = session() else { return };
+    let model = "opt-tiny";
+    let w = session.weights(model).unwrap();
+    let mut engine = Engine::load(&session.manifest, model).unwrap();
+    engine.upload_weights(&w).unwrap();
+    let examples = tasks::read(session.manifest.data.task("bool").unwrap()).unwrap();
+    let a = eval::eval_task(&engine, "bool", &examples, 5, 20, 7).unwrap();
+    let b = eval::eval_task(&engine, "bool", &examples, 5, 20, 7).unwrap();
+    assert_eq!(a.accuracy, b.accuracy);
+    let c = eval::eval_task(&engine, "bool", &examples, 5, 20, 8).unwrap();
+    // different seed shuffles demonstrations; accuracy may differ but both
+    // must be valid percentages
+    assert!((0.0..=100.0).contains(&c.accuracy));
+}
+
+#[test]
+fn quantization_degrades_reasoning_and_ppl() {
+    let Some(session) = session() else { return };
+    let model = "opt-base";
+    let w = session.weights(model).unwrap();
+    let wiki = session.corpus("wiki").unwrap();
+    let mut engine = Engine::load(&session.manifest, model).unwrap();
+
+    engine.upload_weights(&w).unwrap();
+    let ppl_fp = eval::perplexity(&engine, &wiki, 32).unwrap();
+
+    // 1-bit RTN — the paper's most damaged setting
+    let mut wq = w.clone();
+    for name in w.quant_names() {
+        wq.set(
+            &name,
+            invarexplore::quant::fake_quant(w.get(&name), invarexplore::quant::QuantScheme::new(1, 32)),
+        );
+    }
+    engine.upload_weights(&wq).unwrap();
+    let ppl_1bit = eval::perplexity(&engine, &wiki, 32).unwrap();
+    eprintln!("wiki ppl: fp {ppl_fp:.2} -> 1-bit {ppl_1bit:.2}");
+    assert!(
+        ppl_1bit > ppl_fp * 1.5,
+        "1-bit quantization should clearly hurt ({ppl_fp} -> {ppl_1bit})"
+    );
+}

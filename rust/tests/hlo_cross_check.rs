@@ -1,0 +1,276 @@
+//! Integration tests over the real artifacts: pin the three quantization
+//! implementations (Rust codec / Pallas kernel / jnp oracle-trained HLO)
+//! and the two forward implementations (native Rust / XLA programs)
+//! against each other.
+//!
+//! Requires `make artifacts`.  All cases share one process and run inside a
+//! single #[test] each to serialize PJRT client usage.
+
+use invarexplore::calib::CalibSet;
+use invarexplore::coordinator::Session;
+use invarexplore::io::tokens::TokenCorpus;
+use invarexplore::model::native::{self, Capture};
+use invarexplore::quant::{self, QuantScheme};
+use invarexplore::runtime::{Engine, Evaluator};
+use invarexplore::tensor::Tensor;
+use invarexplore::util::rng::Pcg64;
+
+fn session() -> Option<Session> {
+    match Session::load_default() {
+        Ok(s) => Some(s),
+        Err(_) => {
+            eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn calib(session: &Session, n: usize) -> CalibSet {
+    let pile = session.corpus("pile").unwrap();
+    CalibSet::from_corpus(&pile, n, session.manifest.seq)
+}
+
+/// Native Rust forward == monolithic HLO forward (CE, logprob, acts).
+#[test]
+fn native_forward_matches_hlo_monolith() {
+    let Some(session) = session() else { return };
+    let model = "opt-tiny";
+    let w = session.weights(model).unwrap();
+    let cs = calib(&session, session.manifest.batch);
+
+    // native
+    let nat = native::forward(
+        &w,
+        &cs.tokens,
+        &cs.targets,
+        &cs.masks,
+        Capture { hidden: true, linear_inputs: false, last_logits: false },
+    );
+
+    // HLO monolith
+    let engine = Engine::load(&session.manifest, model).unwrap();
+    let batch = engine.upload_batch(&cs.tokens, &cs.targets, &cs.masks).unwrap();
+    let (ce, lp, acts) = engine.run_forward_fp(&w, &batch).unwrap();
+
+    let rel = (nat.ce - ce).abs() / nat.ce;
+    assert!(rel < 1e-4, "CE mismatch: native {} vs hlo {}", nat.ce, ce);
+    for (a, b) in nat.seq_logprob.iter().zip(&lp) {
+        assert!((a - b).abs() < 0.3 + a.abs() * 1e-3, "logprob {a} vs {b}");
+    }
+    // hidden stack: acts is [L*B*T, D]; native hidden[l] is [B*T, D]
+    let cfg = &w.config;
+    let bt = cs.n_seqs() * cs.seqlen();
+    for l in 0..cfg.n_layers {
+        let hl = &nat.hidden[l];
+        let mut max_diff = 0f32;
+        for r in 0..bt {
+            for c in 0..cfg.d_model {
+                let diff = (hl.at(r, c) - acts.at(l * bt + r, c)).abs();
+                max_diff = max_diff.max(diff);
+            }
+        }
+        assert!(max_diff < 5e-3, "layer {l} hidden max diff {max_diff}");
+    }
+}
+
+/// Layer-pipelined engine == monolithic program (same weights, same batch).
+#[test]
+fn pipelined_engine_matches_monolith() {
+    let Some(session) = session() else { return };
+    let model = "opt-tiny";
+    let w = session.weights(model).unwrap();
+    let cs = calib(&session, session.manifest.batch);
+
+    let mut engine = Engine::load(&session.manifest, model).unwrap();
+    engine.upload_weights(&w).unwrap();
+    let batch = engine.upload_batch(&cs.tokens, &cs.targets, &cs.masks).unwrap();
+
+    let (ce_pipe, lp_pipe, _) = engine.forward_full(&batch).unwrap();
+    let (ce_mono, lp_mono, _) = engine.run_forward_fp(&w, &batch).unwrap();
+
+    assert!(
+        (ce_pipe - ce_mono).abs() < 1e-5 * ce_mono.abs().max(1.0),
+        "pipelined {ce_pipe} vs monolith {ce_mono}"
+    );
+    for (a, b) in lp_pipe.iter().zip(&lp_mono) {
+        assert!((a - b).abs() < 1e-2 + a.abs() * 1e-4);
+    }
+}
+
+/// Rust codec == on-device Pallas fake-quant program, for every scheme.
+#[test]
+fn rust_codec_matches_pallas_kernel_on_device() {
+    let Some(session) = session() else { return };
+    let model = "opt-tiny";
+    let engine = Engine::load(&session.manifest, model).unwrap();
+    let cfg = &session.manifest.model(model).unwrap().config;
+    let mut rng = Pcg64::new(42);
+
+    for &bits in &session.manifest.quant_bits {
+        for &group in &session.manifest.quant_groups {
+            let scheme = QuantScheme::new(bits, group);
+            for (r, c) in [
+                (cfg.d_model, cfg.d_model),
+                (cfg.d_ffn, cfg.d_model),
+                (cfg.d_model, cfg.d_ffn),
+            ] {
+                let w = Tensor::from_vec(
+                    r,
+                    c,
+                    (0..r * c).map(|_| rng.normal() as f32 * 0.1).collect(),
+                );
+                let host = quant::fake_quant(&w, scheme);
+                let device = engine.device_fake_quant(&w, scheme).unwrap();
+                let mut max_diff = 0f32;
+                for (a, b) in host.data.iter().zip(&device.data) {
+                    max_diff = max_diff.max((a - b).abs());
+                }
+                assert!(
+                    max_diff < 2e-6,
+                    "codec mismatch {scheme} shape ({r},{c}): {max_diff}"
+                );
+            }
+        }
+    }
+}
+
+/// In-graph Pallas quantized forward == rust-quantized weights + FP forward.
+#[test]
+fn forward_quant_monolith_matches_host_quantization() {
+    let Some(session) = session() else { return };
+    let model = "opt-tiny";
+    let w = session.weights(model).unwrap();
+    let cs = calib(&session, session.manifest.batch);
+    let scheme = QuantScheme::new(2, 64);
+
+    let engine = Engine::load(&session.manifest, model).unwrap();
+    let batch = engine.upload_batch(&cs.tokens, &cs.targets, &cs.masks).unwrap();
+
+    // H0 from the FP monolith
+    let (_, _, acts) = engine.run_forward_fp(&w, &batch).unwrap();
+
+    // path A: in-graph Pallas fake-quant
+    let (ce_a, _, mse_a) = engine.run_forward_quant(scheme, &w, &acts, &batch).unwrap();
+
+    // path B: host-quantized weights through the FP monolith
+    let mut wq = w.clone();
+    for name in w.quant_names() {
+        wq.set(&name, quant::fake_quant(w.get(&name), scheme));
+    }
+    let (ce_b, _, acts_b) = engine.run_forward_fp(&wq, &batch).unwrap();
+
+    assert!(
+        (ce_a - ce_b).abs() < 1e-4 * ce_b.max(1.0),
+        "in-graph {ce_a} vs host-quant {ce_b}"
+    );
+    // and the in-graph act MSE equals the host-computed one
+    let host_mse = {
+        let cfg = &w.config;
+        let bt = cs.n_seqs() * cs.seqlen();
+        let mut total = 0.0;
+        for l in 0..cfg.n_layers {
+            let mut s = 0.0;
+            for r in 0..bt {
+                for c in 0..cfg.d_model {
+                    let d = (acts_b.at(l * bt + r, c) - acts.at(l * bt + r, c)) as f64;
+                    s += d * d;
+                }
+            }
+            total += s / (bt * cfg.d_model) as f64;
+        }
+        total / cfg.n_layers as f64
+    };
+    assert!(
+        (mse_a - host_mse).abs() < 1e-6 + host_mse * 1e-2,
+        "act mse: in-graph {mse_a} vs host {host_mse}"
+    );
+}
+
+/// Incremental (prefix-cache) evaluation == full evaluation after an update.
+#[test]
+fn incremental_eval_matches_full_eval() {
+    let Some(session) = session() else { return };
+    let model = "opt-tiny";
+    let w = session.weights(model).unwrap();
+    let cs = calib(&session, 8);
+
+    let mut engine = Engine::load(&session.manifest, model).unwrap();
+    engine.upload_weights(&w).unwrap();
+    let match_layers = vec![0, 1];
+    let mut ev = Evaluator::new(engine, &cs, match_layers).unwrap();
+    ev.capture_h0().unwrap();
+
+    // quantize layer-1 FFN only, evaluate incrementally vs fully
+    let scheme = QuantScheme::new(2, 64);
+    let l = 1usize;
+    let base = ev.full_eval().unwrap();
+
+    let upq = quant::fake_quant(w.layer(l, "up.w"), scheme);
+    let downq = quant::fake_quant(w.layer(l, "down.w"), scheme);
+    ev.engine.update_tensor(&format!("l{l}.up.w"), &upq).unwrap();
+    ev.engine.update_tensor(&format!("l{l}.down.w"), &downq).unwrap();
+
+    let pending = ev.eval_from_layer(l).unwrap();
+    let inc = pending.loss;
+    ev.accept(pending);
+
+    // now recompute from scratch — must agree
+    let full = ev.full_eval().unwrap();
+    assert!(
+        (inc.ce - full.ce).abs() < 1e-6 * full.ce.max(1.0),
+        "incremental ce {} vs full {}",
+        inc.ce,
+        full.ce
+    );
+    assert!(
+        (inc.act_mse - full.act_mse).abs() < 1e-9 + full.act_mse * 1e-3,
+        "incremental mse {} vs full {}",
+        inc.act_mse,
+        full.act_mse
+    );
+    assert!(inc.ce > base.ce, "quantizing a layer must raise CE");
+}
+
+/// §3.2 pilot study: small random rotations leave the FP model's CE nearly
+/// unchanged (paper: 0.001% drift), measured on the real trained model
+/// through the XLA path.
+#[test]
+fn rotation_near_invariance_pilot() {
+    let Some(session) = session() else { return };
+    let model = "opt-small";
+    let w = session.weights(model).unwrap();
+    let cs = calib(&session, 8);
+
+    let mut engine = Engine::load(&session.manifest, model).unwrap();
+    engine.upload_weights(&w).unwrap();
+    let (ce0, _, _) = engine.eval_batch(&cs.tokens, &cs.targets, &cs.masks).unwrap();
+
+    // rotate every layer with sigma_r-scale angles
+    let mut rng = Pcg64::new(5);
+    let mut w2 = w.clone();
+    for l in 0..w.config.n_layers {
+        let mut t = invarexplore::transform::LayerTransform::identity(w.config.d_ffn);
+        for p in t.phis.iter_mut() {
+            *p = (rng.normal() * 1e-4) as f32;
+        }
+        invarexplore::transform::apply_to_layer(&w, &mut w2, l, &t);
+    }
+    engine.upload_weights(&w2).unwrap();
+    let (ce1, _, _) = engine.eval_batch(&cs.tokens, &cs.targets, &cs.masks).unwrap();
+    let drift = (ce1 - ce0).abs() / ce0;
+    assert!(drift < 1e-4, "rotation drift {drift:.2e} (ce {ce0} -> {ce1})");
+    eprintln!("rotation pilot: ce {ce0:.6} -> {ce1:.6} (drift {:.4}%)", drift * 100.0);
+}
+
+/// TokenCorpus sanity on real artifacts.
+#[test]
+fn corpora_load_and_chunk() {
+    let Some(session) = session() else { return };
+    for name in ["train", "pile", "wiki", "c4"] {
+        let c: TokenCorpus = session.corpus(name).unwrap();
+        assert_eq!(c.vocab, session.manifest.data.vocab);
+        assert!(c.tokens.len() > 1000, "{name} too small");
+        let seqs = c.sequences(4, session.manifest.seq);
+        assert_eq!(seqs.len(), 4);
+    }
+}

@@ -1,0 +1,310 @@
+//! Cross-module property tests (propcheck-driven): algebraic invariants
+//! that must hold for *any* seeded input, independent of artifacts.
+
+use invarexplore::quant::{self, PackedTensor, QuantScheme};
+use invarexplore::tensor::{ops, Tensor};
+use invarexplore::transform::{apply_to_tensors, LayerTransform, TransformKinds};
+use invarexplore::util::json::{self, Json};
+use invarexplore::util::propcheck::{check, ensure, ensure_all_close};
+use invarexplore::util::rng::Pcg64;
+
+fn rand_tensor(rng: &mut Pcg64, rows: usize, cols: usize, scale: f32) -> Tensor {
+    Tensor::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal() as f32 * scale).collect())
+}
+
+// ---------------------------------------------------------------------------
+// Transform algebra
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_permutation_composition_is_permutation() {
+    check("perm ∘ perm is a valid transform", 64, |rng| {
+        let d = 2 * (rng.below(31) + 2);
+        let mut t = LayerTransform::identity(d);
+        for _ in 0..5 {
+            t = t.propose(rng, TransformKinds::parse("p").unwrap(), 0.3, 0.0, 0.0);
+            t.validate().map_err(|e| e.to_string())?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_transform_preserves_ffn_rank_structure() {
+    // transformed tensors have the same shapes and finite values
+    check("transform output well-formed", 48, |rng| {
+        let f = 2 * (rng.below(15) + 2);
+        let d = rng.below(12) + 2;
+        let wu = rand_tensor(rng, f, d, 1.0);
+        let bu = rand_tensor(rng, 1, f, 1.0);
+        let wd = rand_tensor(rng, d, f, 1.0);
+        let t = LayerTransform::identity(f).propose(rng, TransformKinds::all(), 0.5, 0.3, 0.01);
+        let (wu2, bu2, wd2) = apply_to_tensors(&t, &wu, &bu, &wd);
+        ensure(wu2.shape() == (f, d), "wu shape")?;
+        ensure(bu2.numel() == f, "bu shape")?;
+        ensure(wd2.shape() == (d, f), "wd shape")?;
+        ensure(
+            wu2.data.iter().chain(&bu2.data).chain(&wd2.data).all(|v| v.is_finite()),
+            "non-finite output",
+        )
+    });
+}
+
+#[test]
+fn prop_permutation_scaling_preserve_frobenius_structure() {
+    // P alone preserves all row norms of W_up as a multiset; S scales them.
+    check("P preserves W_up row-norm multiset", 48, |rng| {
+        let f = 2 * (rng.below(15) + 2);
+        let d = rng.below(12) + 2;
+        let wu = rand_tensor(rng, f, d, 1.0);
+        let bu = rand_tensor(rng, 1, f, 1.0);
+        let wd = rand_tensor(rng, d, f, 1.0);
+        let t = LayerTransform::identity(f).propose(rng, TransformKinds::parse("p").unwrap(), 0.5, 0.0, 0.0);
+        let (wu2, _, _) = apply_to_tensors(&t, &wu, &bu, &wd);
+        let norms = |w: &Tensor| {
+            let mut v: Vec<i64> = (0..w.rows)
+                .map(|r| (w.row(r).iter().map(|x| (x * x) as f64).sum::<f64>() * 1e6) as i64)
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        ensure(norms(&wu) == norms(&wu2), "row-norm multiset changed")
+    });
+}
+
+#[test]
+fn prop_quantized_output_is_fixed_point() {
+    check("fake_quant idempotent under every scheme", 48, |rng| {
+        let bits = rng.below(4) + 1;
+        let group = *rng.choice(&[16usize, 32, 64]);
+        let scheme = QuantScheme::new(bits, group);
+        let rows = rng.below(6) + 1;
+        let cols = group * (rng.below(4) + 1);
+        let w = rand_tensor(rng, rows, cols, 2.0);
+        let q1 = quant::fake_quant(&w, scheme);
+        let q2 = quant::fake_quant(&q1, scheme);
+        ensure_all_close(&q1.data, &q2.data, 1e-5, "fixed point")
+    });
+}
+
+#[test]
+fn prop_pack_unpack_bounded_by_f16_scale_error() {
+    check("packed dequant ≈ exact dequant", 32, |rng| {
+        let scheme = QuantScheme::new(rng.below(3) + 1, 32);
+        let rows = rng.below(5) + 1;
+        let w = rand_tensor(rng, rows, 64, 1.0);
+        let q = quant::quantize(&w, scheme);
+        let exact = quant::dequantize(&q);
+        let packed = PackedTensor::pack(&q).unpack();
+        for (a, b) in exact.data.iter().zip(&packed.data) {
+            let tol = (a.abs() * 2e-3).max(2e-4);
+            if (a - b).abs() > tol {
+                return Err(format!("{a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quant_error_never_worse_after_clip_search() {
+    check("clip search dominates plain RTN", 32, |rng| {
+        let scheme = QuantScheme::new(rng.below(3) + 1, 32);
+        let rows = rng.below(5) + 1;
+        let scale = *rng.choice(&[0.05f32, 1.0, 20.0]);
+        let w = rand_tensor(rng, rows, 64, scale);
+        let plain = w.mse(&quant::fake_quant(&w, scheme));
+        let clipped = w.mse(&quant::clip::fake_quant_clip_search(
+            &w,
+            scheme,
+            &quant::clip::OMNI_CLIP_GRID,
+        ));
+        ensure(clipped <= plain + 1e-12, format!("{clipped} > {plain}"))
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Tensor / linalg
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_matmul_distributes_over_addition() {
+    check("X(A+B) == XA + XB", 32, |rng| {
+        let m = rng.below(6) + 1;
+        let k = rng.below(10) + 1;
+        let n = rng.below(8) + 1;
+        let x = rand_tensor(rng, m, k, 1.0);
+        let a = rand_tensor(rng, n, k, 1.0);
+        let b = rand_tensor(rng, n, k, 1.0);
+        let ab = Tensor::from_vec(n, k, a.data.iter().zip(&b.data).map(|(p, q)| p + q).collect());
+        let mut y_ab = vec![0.0; m * n];
+        let mut y_a = vec![0.0; m * n];
+        let mut y_b = vec![0.0; m * n];
+        ops::matmul_nt(&x.data, &ab.data, m, k, n, &mut y_ab);
+        ops::matmul_nt(&x.data, &a.data, m, k, n, &mut y_a);
+        ops::matmul_nt(&x.data, &b.data, m, k, n, &mut y_b);
+        let sum: Vec<f32> = y_a.iter().zip(&y_b).map(|(p, q)| p + q).collect();
+        ensure_all_close(&y_ab, &sum, 1e-3, "distributivity")
+    });
+}
+
+#[test]
+fn prop_softmax_rows_invariant_to_shift() {
+    check("softmax(x) == softmax(x + c)", 32, |rng| {
+        let t = rng.below(6) + 1;
+        let mut a = rand_tensor(rng, t, 8, 2.0);
+        let mut b = a.clone();
+        let c = rng.normal() as f32 * 10.0;
+        for v in &mut b.data {
+            *v += c;
+        }
+        ops::softmax_rows(&mut a);
+        ops::softmax_rows(&mut b);
+        ensure_all_close(&a.data, &b.data, 1e-5, "shift invariance")
+    });
+}
+
+#[test]
+fn prop_layer_norm_output_standardized() {
+    check("LN output has mean≈0, var≈1 with unit affine", 32, |rng| {
+        let rows = rng.below(4) + 1;
+        let scale = *rng.choice(&[0.1f32, 1.0, 50.0]);
+        let x = rand_tensor(rng, rows, 32, scale);
+        let out = ops::layer_norm(&x, &[1.0; 32], &[0.0; 32]);
+        for r in 0..out.rows {
+            let mean: f32 = out.row(r).iter().sum::<f32>() / 32.0;
+            let var: f32 = out.row(r).iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 32.0;
+            ensure((mean.abs()) < 1e-4, format!("mean {mean}"))?;
+            ensure((var - 1.0).abs() < 1e-2, format!("var {var}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_log_prob_normalized() {
+    check("Σ exp(logprob) == 1", 32, |rng| {
+        let logits: Vec<f32> = (0..64).map(|_| rng.normal() as f32 * 3.0).collect();
+        let total: f32 = (0..64).map(|i| ops::log_prob_at(&logits, i).exp()).sum();
+        ensure((total - 1.0).abs() < 1e-3, format!("Σp = {total}"))
+    });
+}
+
+// ---------------------------------------------------------------------------
+// JSON fuzz
+// ---------------------------------------------------------------------------
+
+fn random_json(rng: &mut Pcg64, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => Json::Num((rng.normal() * 100.0 * 1e6).round() / 1e6),
+        3 => {
+            let len = rng.below(8);
+            Json::Str((0..len).map(|_| *rng.choice(&['a', 'b', '"', '\\', 'π', '\n', '\t'])).collect())
+        }
+        4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.below(4))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    check("parse(to_string(v)) == v", 200, |rng| {
+        let v = random_json(rng, 3);
+        let text = v.to_string();
+        match json::parse(&text) {
+            Ok(back) => ensure(back == v, format!("roundtrip mismatch for {text}")),
+            Err(e) => Err(format!("parse failed on {text}: {e}")),
+        }
+    });
+}
+
+#[test]
+fn prop_json_parser_never_panics_on_garbage() {
+    check("parser total on random bytes", 200, |rng| {
+        let len = rng.below(40);
+        let garbage: String = (0..len)
+            .map(|_| *rng.choice(&['{', '}', '[', ']', '"', ':', ',', '1', 'e', '-', '.', ' ', 'n', 't']))
+            .collect();
+        let _ = json::parse(&garbage); // must return, not panic
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Search-state serialization
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_transform_json_roundtrip() {
+    check("LayerTransform JSON roundtrip", 64, |rng| {
+        let d = 2 * (rng.below(20) + 2);
+        let t = LayerTransform::identity(d).propose(rng, TransformKinds::all(), 0.4, 0.2, 0.02);
+        let back = LayerTransform::from_json(&t.to_json()).map_err(|e| e.to_string())?;
+        ensure(back.perm == t.perm, "perm")?;
+        for (a, b) in back.scale.iter().zip(&t.scale) {
+            if (a - b).abs() > 1e-5 {
+                return Err(format!("scale {a} vs {b}"));
+            }
+        }
+        for (a, b) in back.phis.iter().zip(&t.phis) {
+            if (a - b).abs() > 1e-6 {
+                return Err(format!("phi {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// GPTQ invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_gptq_output_respects_codebook_cardinality() {
+    // GPTQ's scale/zero are frozen from the *compensated* weights at group
+    // start, so the output need not be an RTN fixed point — but each
+    // (row, group) segment can still hold at most 2^bits distinct values.
+    check("GPTQ row-group holds ≤ 2^bits distinct values", 24, |rng| {
+        let bits = rng.below(2) + 2;
+        let scheme = QuantScheme::new(bits, 16);
+        let out = rng.below(6) + 2;
+        let inp = 48;
+        let x = rand_tensor(rng, 64, inp, 1.0);
+        let h = invarexplore::calib::hessian(&x, 0.01);
+        let w = rand_tensor(rng, out, inp, 1.0);
+        let gq = invarexplore::baselines::gptq::gptq_quantize(&w, &h, scheme, false, None);
+        for r in 0..out {
+            for g in 0..inp / scheme.group {
+                let seg = &gq.row(r)[g * scheme.group..(g + 1) * scheme.group];
+                let mut vals: Vec<i64> = seg.iter().map(|&v| (v as f64 * 1e6).round() as i64).collect();
+                vals.sort_unstable();
+                vals.dedup();
+                ensure(
+                    vals.len() <= 1 << bits,
+                    format!("row {r} group {g}: {} distinct values > {}", vals.len(), 1 << bits),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hessian_transform_preserves_spd() {
+    check("T·H·Tᵀ stays SPD", 24, |rng| {
+        let n = 16;
+        let x = rand_tensor(rng, 48, n, 1.0);
+        let h = invarexplore::calib::hessian(&x, 0.01);
+        let t = LayerTransform::identity(n).propose(rng, TransformKinds::all(), 0.5, 0.3, 0.1);
+        let ht = invarexplore::baselines::gptq::transform_hessian(&h, n, &t);
+        invarexplore::tensor::linalg::cholesky(&ht, n)
+            .map(|_| ())
+            .map_err(|e| format!("not SPD: {e}"))
+    });
+}

@@ -1,0 +1,236 @@
+//! Integration tests of the full search stack on real artifacts:
+//! Algorithm 1 must monotonically improve the calibration objective, be
+//! deterministic, compose with every baseline, and respect transform-kind
+//! ablation masks.
+
+use invarexplore::baselines::{self, Method};
+use invarexplore::calib::CalibSet;
+use invarexplore::coordinator::{PipelineOpts, SearchRun, Session};
+use invarexplore::quant::QuantScheme;
+use invarexplore::search::Objective;
+use invarexplore::transform::TransformKinds;
+
+fn session() -> Option<Session> {
+    match Session::load_default() {
+        Ok(s) => Some(s),
+        Err(_) => {
+            eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn base_opts(model: &str, method: Method) -> PipelineOpts {
+    let mut o = PipelineOpts::new(model, method, QuantScheme::new(2, 64));
+    o.calib_seqs = 8;
+    o.eval_seqs = 16;
+    o
+}
+
+#[test]
+fn search_improves_calibration_loss_monotonically() {
+    let Some(session) = session() else { return };
+    let opts = base_opts("opt-tiny", Method::Rtn);
+    let mut run = SearchRun::build(&session, &opts).unwrap();
+    run.init().unwrap();
+    let init_loss = run.state.best.total(run.state.alpha);
+    run.steps(60).unwrap();
+    let final_loss = run.state.best.total(run.state.alpha);
+    assert!(final_loss < init_loss, "no improvement: {init_loss} -> {final_loss}");
+    // monotone best-loss telemetry
+    let mut prev = f64::INFINITY;
+    for r in &run.state.telemetry {
+        assert!(r.loss_total <= prev + 1e-12);
+        prev = r.loss_total;
+    }
+    assert!(run.state.accepts > 0, "nothing accepted in 60 steps");
+}
+
+#[test]
+fn search_deterministic_under_seed() {
+    let Some(session) = session() else { return };
+    let result = |seed: u64| {
+        let mut o = base_opts("opt-tiny", Method::Rtn);
+        o.seed = seed;
+        let mut run = SearchRun::build(&session, &o).unwrap();
+        run.init().unwrap();
+        run.steps(25).unwrap();
+        (run.state.best.ce, run.state.accepts)
+    };
+    let a = result(3);
+    let b = result(3);
+    assert_eq!(a, b, "same seed must reproduce exactly");
+}
+
+#[test]
+fn search_composes_with_all_baselines() {
+    let Some(session) = session() else { return };
+    for method in [Method::Rtn, Method::Awq, Method::Gptq, Method::OmniQuant] {
+        let opts = base_opts("opt-tiny", method);
+        let mut run = SearchRun::build(&session, &opts).unwrap();
+        run.init().unwrap();
+        let init = run.state.best.total(run.state.alpha);
+        run.steps(25).unwrap();
+        let fin = run.state.best.total(run.state.alpha);
+        assert!(
+            fin <= init,
+            "{}: loss went up {init} -> {fin}",
+            method.name()
+        );
+        eprintln!(
+            "{}: loss {:.4} -> {:.4} (accept {:.2})",
+            method.name(),
+            init,
+            fin,
+            run.state.accept_rate()
+        );
+    }
+}
+
+#[test]
+fn ablation_masks_respected() {
+    let Some(session) = session() else { return };
+    for kinds in ["p", "s", "r"] {
+        let mut opts = base_opts("opt-tiny", Method::Rtn);
+        opts.kinds = TransformKinds::parse(kinds).unwrap();
+        let mut run = SearchRun::build(&session, &opts).unwrap();
+        run.init().unwrap();
+        run.steps(20).unwrap();
+        for t in &run.state.transforms {
+            if kinds != "p" {
+                assert!(
+                    t.perm.iter().enumerate().all(|(i, &p)| i == p),
+                    "{kinds}: permutation leaked"
+                );
+            }
+            if kinds != "s" {
+                assert!(t.scale.iter().all(|&s| s == 1.0), "{kinds}: scaling leaked");
+            }
+            if kinds != "r" {
+                assert!(t.phis.iter().all(|&p| p == 0.0), "{kinds}: rotation leaked");
+            }
+        }
+    }
+}
+
+#[test]
+fn accepted_transforms_preserve_fp_invariance() {
+    // After a search, applying the accepted transforms to the FP model must
+    // not change its function (up to rotation's approximation).
+    let Some(session) = session() else { return };
+    let opts = base_opts("opt-tiny", Method::Rtn);
+    let mut run = SearchRun::build(&session, &opts).unwrap();
+    run.init().unwrap();
+    run.steps(40).unwrap();
+
+    let w = session.weights("opt-tiny").unwrap();
+    let pile = session.corpus("pile").unwrap();
+    let cs = CalibSet::from_corpus(&pile, 8, session.manifest.seq);
+    let ce0 = invarexplore::model::native::forward(
+        &w,
+        &cs.tokens,
+        &cs.targets,
+        &cs.masks,
+        Default::default(),
+    )
+    .ce;
+    let mut w2 = w.clone();
+    for (l, t) in run.state.transforms.iter().enumerate() {
+        invarexplore::transform::apply_to_layer(&w, &mut w2, l, t);
+    }
+    let ce1 = invarexplore::model::native::forward(
+        &w2,
+        &cs.tokens,
+        &cs.targets,
+        &cs.masks,
+        Default::default(),
+    )
+    .ce;
+    let drift = (ce1 - ce0).abs() / ce0;
+    assert!(drift < 1e-3, "FP invariance broken: {ce0} -> {ce1}");
+}
+
+#[test]
+fn objective_reject_restores_state_exactly() {
+    // try a proposal, reject it, and verify a full re-eval equals the
+    // accepted loss (buffer restore is exact).
+    let Some(session) = session() else { return };
+    let opts = base_opts("opt-tiny", Method::Awq);
+    let mut run = SearchRun::build(&session, &opts).unwrap();
+    run.init().unwrap();
+    let before = run.state.best;
+
+    let proposal = run.state.transforms[0].propose(
+        &mut run.state.rng,
+        TransformKinds::all(),
+        0.2,
+        0.05,
+        1e-4,
+    );
+    let _ = run.obj.try_layer(0, &proposal).unwrap();
+    run.obj.reject().unwrap();
+    let after = run.obj.eval.full_eval().unwrap();
+    assert!(
+        (after.ce - before.ce).abs() < 1e-9 + before.ce * 1e-6,
+        "reject did not restore: {} vs {}",
+        before.ce,
+        after.ce
+    );
+}
+
+#[test]
+fn search_state_checkpoint_roundtrip_on_real_run() {
+    let Some(session) = session() else { return };
+    let opts = base_opts("opt-tiny", Method::Rtn);
+    let mut run = SearchRun::build(&session, &opts).unwrap();
+    run.init().unwrap();
+    run.steps(15).unwrap();
+    let dir = std::env::temp_dir().join("invarexplore_search_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("state.json");
+    run.state.save(&p).unwrap();
+    let restored = invarexplore::search::SearchState::load(&p, 0).unwrap();
+    assert_eq!(restored.step, run.state.step);
+    for (a, b) in restored.transforms.iter().zip(&run.state.transforms) {
+        assert_eq!(a.perm, b.perm);
+    }
+    // the saved transforms must apply cleanly to a fresh Prepared
+    let w = session.weights("opt-tiny").unwrap();
+    let pile = session.corpus("pile").unwrap();
+    let cs = CalibSet::from_corpus(&pile, 8, session.manifest.seq);
+    let prepared = baselines::prepare(Method::Rtn, opts.scheme, &w, &cs, None).unwrap();
+    let mut w2 = prepared.fp.clone();
+    for (l, t) in restored.transforms.iter().enumerate() {
+        invarexplore::transform::apply_to_layer(&prepared.fp, &mut w2, l, t);
+    }
+}
+
+#[test]
+fn resume_continues_from_checkpoint() {
+    let Some(session) = session() else { return };
+    let opts = base_opts("opt-tiny", Method::Rtn);
+    // run 20 steps, checkpoint
+    let mut run1 = SearchRun::build(&session, &opts).unwrap();
+    run1.init().unwrap();
+    run1.steps(20).unwrap();
+    let loss_at_ckpt = run1.state.best.total(run1.state.alpha);
+    let dir = std::env::temp_dir().join("invarexplore_resume_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("ckpt.json");
+    run1.state.save(&p).unwrap();
+
+    // restore in a fresh stack: loss must match the checkpointed loss
+    let saved = invarexplore::search::SearchState::load(&p, 0).unwrap();
+    let mut run2 = SearchRun::build(&session, &opts).unwrap();
+    run2.restore(saved).unwrap();
+    assert_eq!(run2.state.step, 20);
+    let restored_loss = run2.state.best.total(run2.state.alpha);
+    assert!(
+        (restored_loss - loss_at_ckpt).abs() < 1e-6 + loss_at_ckpt * 1e-4,
+        "restored {restored_loss} vs checkpoint {loss_at_ckpt}"
+    );
+    // and further steps keep improving monotonically
+    run2.steps(10).unwrap();
+    assert!(run2.state.best.total(run2.state.alpha) <= restored_loss + 1e-12);
+    assert_eq!(run2.state.step, 30);
+}
