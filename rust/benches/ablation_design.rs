@@ -105,8 +105,7 @@ fn main() -> anyhow::Result<()> {
         let t0 = std::time::Instant::now();
         let reps = 3;
         for _ in 0..reps {
-            let _ = run.obj.try_layer(l, &proposal)?;
-            run.obj.reject()?;
+            let _ = invarexplore::search::probe(&mut run.obj, l, &proposal)?;
         }
         let ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
         println!("  mutate layer {l}: {ms:7.1} ms/proposal (re-runs layers {l}..{n_layers})");

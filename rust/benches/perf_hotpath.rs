@@ -1,23 +1,72 @@
 //! Performance benchmark of the whole stack's hot paths (EXPERIMENTS.md
-//! §Perf): quant codecs, transforms, GPTQ re-quantization, XLA pipeline
-//! stages, incremental vs full evaluation, and end-to-end search-step
-//! throughput per model size and per base method.
+//! §Perf): the batched proposal engine (proposals/sec at K ∈ {1, 4, 8}),
+//! quant codecs, transforms, GPTQ re-quantization, XLA pipeline stages,
+//! incremental vs full evaluation, and end-to-end search-step throughput
+//! per model size and per base method.
 //!
-//! `INVAREXPLORE_BENCH_MS` bounds the per-case measurement budget.
+//! The batched-engine section runs on the synthetic objective and needs no
+//! artifacts; the XLA sections are skipped when `artifacts/` is absent.
+//!
+//! `INVAREXPLORE_BENCH_MS` bounds the per-case measurement budget;
+//! `INVAREXPLORE_STEPS` bounds the proposal counts.
 
 use invarexplore::baselines::Method;
 use invarexplore::calib::CalibSet;
 use invarexplore::coordinator::{PipelineOpts, SearchRun, Session};
 use invarexplore::quant::{self, QuantScheme};
 use invarexplore::runtime::Engine;
-use invarexplore::search::Objective;
+use invarexplore::search::hillclimb::SearchConfig;
+use invarexplore::search::{self, Objective, SearchState, SynthObjective};
 use invarexplore::tensor::Tensor;
 use invarexplore::transform::{LayerTransform, TransformKinds};
-use invarexplore::util::bench::BenchSuite;
+use invarexplore::util::bench::{step_budget, BenchSuite};
+use invarexplore::util::pool;
 use invarexplore::util::rng::Pcg64;
 
+/// Proposals/sec of the round engine on the synthetic objective for one K.
+fn synth_proposals_per_sec(k: usize, steps: usize) -> f64 {
+    // draft cost sized like a sandbox-scale FFN re-quantization (two
+    // 320x1280 matrices), the work a round fans out across the pool
+    let mut obj = SynthObjective::with_draft_work(16, 64, 2 * 320 * 1280);
+    let mut state = SearchState::new(16, 64, 0);
+    let cfg = SearchConfig {
+        kinds: TransformKinds::parse("s").unwrap(),
+        frac: 0.2,
+        sigma_s: 0.1,
+        sigma_r: 0.0,
+        alpha: Some(0.0),
+        log_every: 0,
+        batch: k,
+    };
+    search::hillclimb::ensure_init(&mut obj, &mut state, &cfg).unwrap();
+    let t0 = std::time::Instant::now();
+    search::run(&mut obj, &mut state, &cfg, steps).unwrap();
+    steps as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn bench_batched_engine() {
+    println!("== batched proposal engine (synthetic objective) ==");
+    println!("   threads = {}", pool::num_threads());
+    let steps = step_budget(96);
+    let base = synth_proposals_per_sec(1, steps);
+    println!("  K=1: {base:8.1} proposals/sec (sequential semantics)");
+    for k in [4, 8] {
+        let rate = synth_proposals_per_sec(k, steps);
+        println!("  K={k}: {rate:8.1} proposals/sec ({:.2}x vs K=1)", rate / base);
+    }
+}
+
 fn main() -> anyhow::Result<()> {
-    let session = Session::load_default()?;
+    // ---- round-based batched proposal engine (no artifacts needed) ---------
+    bench_batched_engine();
+
+    let session = match Session::load_default() {
+        Ok(s) => s,
+        Err(_) => {
+            eprintln!("SKIP: artifacts/ not built (run `make artifacts`) — XLA sections skipped");
+            return Ok(());
+        }
+    };
     let mut suite = BenchSuite::new("perf_hotpath");
     let mut rng = Pcg64::new(0);
 
@@ -97,7 +146,7 @@ fn main() -> anyhow::Result<()> {
         run.init()?;
         let n_layers = run.obj.n_layers();
 
-        // full evals at the two extremes of the prefix cache
+        // probe evals at the two extremes of the prefix cache
         let label_full = format!("{}: proposal at layer 0 (full re-run)", method.name());
         let label_last = format!("{}: proposal at last layer (prefix cache)", method.name());
         let mut try_at = |l: usize, label: &str, suite: &mut BenchSuite| {
@@ -109,22 +158,28 @@ fn main() -> anyhow::Result<()> {
                 1e-5,
             );
             suite.bench(label, || {
-                let _ = run.obj.try_layer(l, &proposal).unwrap();
-                run.obj.reject().unwrap();
+                let _ = search::probe(&mut run.obj, l, &proposal).unwrap();
             });
         };
         try_at(0, &label_full, &mut suite);
         try_at(n_layers - 1, &label_last, &mut suite);
 
-        // end-to-end search-step throughput
-        let stats = suite.bench(&format!("{}: full search step (random layer)", method.name()), || {
-            run.steps(1).unwrap();
-        });
-        println!(
-            "    -> {:.1} search steps/sec ({})",
-            stats.per_sec(),
-            method.name()
-        );
+        // end-to-end search-step throughput, sequential and batched rounds
+        for k in [1usize, 4, 8] {
+            run.cfg.batch = k;
+            let stats = suite.bench(
+                &format!("{}: full search step (batch K={k})", method.name()),
+                || {
+                    run.steps(k).unwrap();
+                },
+            );
+            println!(
+                "    -> {:.1} proposals/sec ({}, K={k})",
+                stats.per_sec() * k as f64,
+                method.name()
+            );
+        }
+        run.cfg.batch = 1;
     }
 
     println!("\n{}", suite.report());

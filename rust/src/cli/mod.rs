@@ -22,7 +22,8 @@ commands:
   table1..table5   regenerate the paper's tables (also: cargo bench)
   figure1          regenerate the paper's optimization-curve figure
 
-common options: --model, --method, --scheme (e.g. 2x64), --steps, --seed
+common options: --model, --method, --scheme (e.g. 2x64), --steps, --seed,
+--batch (K-wide concurrent proposal rounds; 1 = exact sequential search)
 run `invarexplore <command> --help` for details.
 ";
 
@@ -32,6 +33,7 @@ fn common_spec() -> Vec<ArgSpec> {
         ArgSpec { name: "method", help: "baseline method (rtn|gptq|awq|omniquant)", default: Some("awq"), is_flag: false },
         ArgSpec { name: "scheme", help: "quantization scheme bits x group, e.g. 1x64", default: Some("1x64"), is_flag: false },
         ArgSpec { name: "steps", help: "search steps", default: Some("200"), is_flag: false },
+        ArgSpec { name: "batch", help: "proposals per search round (1 = exact sequential semantics)", default: Some("1"), is_flag: false },
         ArgSpec { name: "kinds", help: "transform kinds subset of psr", default: Some("psr"), is_flag: false },
         ArgSpec { name: "match-layers", help: "activation-matching layer count", default: Some("2"), is_flag: false },
         ArgSpec { name: "calib-seqs", help: "calibration sequences", default: Some("32"), is_flag: false },
@@ -52,6 +54,7 @@ fn opts_from_args(a: &Args) -> crate::Result<PipelineOpts> {
     let scheme = QuantScheme::parse(a.get_or("scheme", "1x64"))?;
     let mut opts = PipelineOpts::new(a.get_or("model", "opt-small"), method, scheme);
     opts.steps = a.parse_or("steps", 200usize)?;
+    opts.batch = a.parse_or("batch", 1usize)?.max(1);
     opts.kinds = TransformKinds::parse(a.get_or("kinds", "psr"))?;
     opts.match_layers = a.parse_or("match-layers", 2usize)?;
     opts.calib_seqs = a.parse_or("calib-seqs", 32usize)?;
@@ -280,10 +283,17 @@ fn cmd_apply(a: &Args) -> crate::Result<i32> {
     let pile = session.corpus("pile")?;
     let calib = crate::calib::CalibSet::from_corpus(&pile, opts.calib_seqs, session.manifest.seq);
     let prepared = crate::baselines::prepare(opts.method, opts.scheme, &w, &calib, None)?;
-    // apply transforms to FP weights, then quantize under the method
+    // apply transforms to FP weights (batched across the thread pool),
+    // then quantize under the method
     let mut transformed = prepared.fp.clone();
-    for (l, t) in state.transforms.iter().enumerate() {
-        crate::transform::apply_to_layer(&prepared.fp, &mut transformed, l, t);
+    let reqs: Vec<(usize, &crate::transform::LayerTransform)> =
+        state.transforms.iter().enumerate().collect();
+    for (&(l, _), (wu, bu, wd)) in
+        reqs.iter().zip(crate::transform::apply_batch(&prepared.fp, &reqs))
+    {
+        transformed.set(&format!("l{l}.up.w"), wu);
+        transformed.set(&format!("l{l}.up.b"), bu);
+        transformed.set(&format!("l{l}.down.w"), wd);
     }
     let q = prepared.quantize_model(&transformed, Some(&state.transforms));
     save_weights(&q, std::path::Path::new(out))?;

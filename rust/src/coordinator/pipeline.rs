@@ -5,7 +5,7 @@ use crate::calib::CalibSet;
 use crate::eval::{self, TaskResult};
 use crate::quant::QuantScheme;
 use crate::runtime::{Engine, Evaluator};
-use crate::search::{self, Objective, SearchConfig, SearchState, XlaObjective};
+use crate::search::{self, DraftRequest, Objective, SearchConfig, SearchState, XlaObjective};
 use crate::transform::TransformKinds;
 
 use super::session::Session;
@@ -18,6 +18,9 @@ pub struct PipelineOpts {
     pub scheme: QuantScheme,
     /// Search steps; 0 = baseline only.
     pub steps: usize,
+    /// Proposals drafted per search round (`--batch`); 1 = exact
+    /// sequential semantics.
+    pub batch: usize,
     pub kinds: TransformKinds,
     /// Number of activation-matching layers (Table 4 knob).
     pub match_layers: usize,
@@ -39,6 +42,7 @@ impl PipelineOpts {
             method,
             scheme,
             steps: 0,
+            batch: 1,
             kinds: TransformKinds::all(),
             match_layers: 2,
             calib_seqs: 32,
@@ -116,6 +120,7 @@ impl SearchRun {
         let cfg = SearchConfig {
             kinds: opts.kinds,
             alpha: opts.alpha,
+            batch: opts.batch.max(1),
             ..SearchConfig::default()
         };
         Ok(SearchRun { obj, state, cfg, h0_bytes, ce_fp_calib })
@@ -141,8 +146,11 @@ impl SearchRun {
         }
         for (l, t) in saved.transforms.iter().enumerate() {
             if !t.is_identity() {
-                let loss = self.obj.try_layer(l, t)?;
-                self.obj.accept()?;
+                let mut drafts = self
+                    .obj
+                    .draft(&[DraftRequest { layer: l, transform: t.clone() }])?;
+                self.obj.eval_drafts(&drafts)?;
+                let loss = self.obj.commit(drafts.swap_remove(0))?;
                 self.state.best = loss;
             }
         }
@@ -158,9 +166,9 @@ impl SearchRun {
         Ok(())
     }
 
-    /// Run `n` more search steps.
+    /// Run `n` more search proposals, in `cfg.batch`-wide rounds.
     pub fn steps(&mut self, n: usize) -> crate::Result<()> {
-        search::run_steps(&mut self.obj, &mut self.state, &self.cfg, n)
+        search::run(&mut self.obj, &mut self.state, &self.cfg, n)
     }
 
     /// Evaluate perplexity + reasoning with the current quantized weights.

@@ -126,6 +126,33 @@ impl Engine {
         Ok(())
     }
 
+    /// Upload one layer's searched FFN tensors (`up.w`, `up.b`, `down.w` —
+    /// the only tensors a proposal touches, Eqns. 21–22).  When
+    /// `device_quant` carries a scheme, the two weight matrices are routed
+    /// through the standalone Pallas fake-quant program (RTN semantics);
+    /// the bias always uploads as-is.
+    pub fn upload_ffn(
+        &mut self,
+        l: usize,
+        up_w: &Tensor,
+        up_b: &Tensor,
+        down_w: &Tensor,
+        device_quant: Option<QuantScheme>,
+    ) -> crate::Result<()> {
+        let (up_name, down_name) = (format!("l{l}.up.w"), format!("l{l}.down.w"));
+        match device_quant {
+            Some(scheme) => {
+                self.update_tensor_device_quant(&up_name, up_w, scheme)?;
+                self.update_tensor_device_quant(&down_name, down_w, scheme)?;
+            }
+            None => {
+                self.update_tensor(&up_name, up_w)?;
+                self.update_tensor(&down_name, down_w)?;
+            }
+        }
+        self.update_tensor(&format!("l{l}.up.b"), up_b)
+    }
+
     /// Run the standalone Pallas fake-quant program on a host tensor and
     /// fetch the result (used by cross-check tests and the quantize CLI).
     pub fn device_fake_quant(&self, t: &Tensor, scheme: QuantScheme) -> crate::Result<Tensor> {

@@ -40,6 +40,14 @@ pub struct Pending {
     new_mse: Vec<Vec<f64>>,
 }
 
+/// Round-shared prefix for cold-cache batched evaluation: per-batch block
+/// outputs of layers `0..l_max` plus their act-MSE contributions, computed
+/// once per round with the accepted weights.
+struct SharedPrefix {
+    x: Vec<Vec<PjRtBuffer>>,
+    mse: Vec<Vec<f64>>,
+}
+
 pub struct Evaluator {
     pub engine: Engine,
     batches: Vec<BatchBufs>,
@@ -126,6 +134,102 @@ impl Evaluator {
     /// Evaluate the current device weights assuming only layers
     /// `>= from_layer` changed since the accepted state.
     pub fn eval_from_layer(&mut self, from_layer: usize) -> crate::Result<Pending> {
+        self.eval_inner(from_layer, None)
+    }
+
+    /// Score a round of proposal candidates, each mutating a *distinct*
+    /// layer, independently against the accepted state.
+    ///
+    /// `swap_in(engine, i)` must upload candidate `i`'s tensors and
+    /// `swap_out(engine, i)` must restore that layer's accepted tensors;
+    /// the engine therefore holds the accepted weights again when this
+    /// returns, and each candidate was scored in isolation.
+    ///
+    /// The shared prefix — every layer below a candidate's mutation point —
+    /// is never recomputed per candidate: with a warm accepted-state cache
+    /// it is read from `cache_x`; with a cold cache (no accept yet) it is
+    /// computed **once per round** up to the highest candidate layer and
+    /// shared by all candidates, instead of once per proposal.  (In the
+    /// shipped pipeline the cache is always warm — `init` ends in a full
+    /// evaluation — so the cold path serves drivers that score rounds
+    /// before a first full eval; committing such a pending falls back to
+    /// `full_eval`, see [`Evaluator::can_accept`].)
+    pub fn eval_proposals<FI, FO>(
+        &mut self,
+        layers: &[usize],
+        mut swap_in: FI,
+        mut swap_out: FO,
+    ) -> crate::Result<Vec<Pending>>
+    where
+        FI: FnMut(&mut Engine, usize) -> crate::Result<()>,
+        FO: FnMut(&mut Engine, usize) -> crate::Result<()>,
+    {
+        let n_layers = self.engine.n_layers();
+        let mut seen = vec![false; n_layers];
+        for &l in layers {
+            anyhow::ensure!(l < n_layers, "proposal layer {l} out of range");
+            anyhow::ensure!(!seen[l], "round candidates must mutate distinct layers (dup {l})");
+            seen[l] = true;
+        }
+
+        let shared = if self.cache_x.is_empty() && layers.iter().any(|&l| l > 0) {
+            Some(self.compute_shared_prefix(layers.iter().copied().max().unwrap_or(0))?)
+        } else {
+            None
+        };
+
+        let mut out = Vec::with_capacity(layers.len());
+        for (i, &l) in layers.iter().enumerate() {
+            // restore the accepted tensors even when the upload or the eval
+            // failed, so an error cannot leave candidate weights (or a
+            // partial mix from a mid-upload failure) on device
+            let evaled = match swap_in(&mut self.engine, i) {
+                Ok(()) => self.eval_inner(l, shared.as_ref()),
+                Err(e) => Err(e),
+            };
+            swap_out(&mut self.engine, i)?;
+            out.push(evaled?);
+        }
+        Ok(out)
+    }
+
+    /// Run embed + layers `0..l_max` once with the currently uploaded
+    /// (accepted) weights — the cold-cache shared prefix of one round.
+    fn compute_shared_prefix(&self, l_max: usize) -> crate::Result<SharedPrefix> {
+        let mut x = Vec::with_capacity(self.batches.len());
+        let mut mse = Vec::with_capacity(self.batches.len());
+        for (bi, b) in self.batches.iter().enumerate() {
+            let mut xs: Vec<PjRtBuffer> = Vec::with_capacity(l_max);
+            let embed_x = self.engine.embed(b)?;
+            let mut cur: &PjRtBuffer = &embed_x;
+            for l in 0..l_max {
+                let next = self.engine.run_layer(l, cur)?;
+                xs.push(next);
+                cur = xs.last().unwrap();
+            }
+            let mut mse_layer = vec![0.0f64; l_max];
+            if !self.h0.is_empty() {
+                for &l in &self.match_layers {
+                    if l < l_max {
+                        let xh = fetch_tensor(&xs[l])?;
+                        mse_layer[l] = xh.mse(&self.h0[bi][l]);
+                    }
+                }
+            }
+            x.push(xs);
+            mse.push(mse_layer);
+        }
+        Ok(SharedPrefix { x, mse })
+    }
+
+    /// Core incremental evaluation.  The prefix (layers `< from_layer`)
+    /// comes from the accepted cache, or from `shared` when the cache is
+    /// cold (round-shared prefix).
+    fn eval_inner(
+        &self,
+        from_layer: usize,
+        shared: Option<&SharedPrefix>,
+    ) -> crate::Result<Pending> {
         let n_layers = self.engine.n_layers();
         anyhow::ensure!(from_layer <= n_layers, "from_layer out of range");
         let use_cache = from_layer > 0 && !self.cache_x.is_empty();
@@ -138,18 +242,19 @@ impl Evaluator {
         for (bi, b) in self.batches.iter().enumerate() {
             let mut xs: Vec<PjRtBuffer> = Vec::with_capacity(n_layers - from_layer);
             {
-                // starting activation: embed (l=0) or cached prefix
+                // starting activation: embed (l=0), cached prefix, or the
+                // round-shared prefix
                 let embed_x;
-                let mut cur: &PjRtBuffer = if use_cache {
-                    &self.cache_x[bi][from_layer - 1]
-                } else {
+                let mut cur: &PjRtBuffer = if from_layer == 0 {
                     embed_x = self.engine.embed(b)?;
-                    // when starting at 0 the embed output is the input of l0
-                    if from_layer != 0 {
-                        // cannot start mid-model without a cache
-                        anyhow::bail!("eval_from_layer({from_layer}) without prefix cache");
-                    }
                     &embed_x
+                } else if use_cache {
+                    &self.cache_x[bi][from_layer - 1]
+                } else if let Some(pre) = shared {
+                    &pre.x[bi][from_layer - 1]
+                } else {
+                    // cannot start mid-model without a prefix
+                    anyhow::bail!("eval_from_layer({from_layer}) without prefix cache");
                 };
                 for l in from_layer..n_layers {
                     let next = self.engine.run_layer(l, cur)?;
@@ -183,8 +288,12 @@ impl Evaluator {
                 for &l in &self.match_layers {
                     total += if l >= from_layer {
                         new_mse[bi][l - from_layer]
-                    } else {
+                    } else if use_cache {
                         self.mse[bi][l]
+                    } else if let Some(pre) = shared {
+                        pre.mse[bi][l]
+                    } else {
+                        0.0
                     };
                 }
             }
@@ -197,6 +306,15 @@ impl Evaluator {
             new_x,
             new_mse,
         })
+    }
+
+    /// Can `p` be committed by splicing into the prefix cache?  False only
+    /// for a mid-model pending produced against a cold cache (the round-
+    /// shared-prefix path): its buffers cover layers `from_layer..L` only,
+    /// so the committer must fall back to a full evaluation instead of
+    /// [`Evaluator::accept`].
+    pub fn can_accept(&self, p: &Pending) -> bool {
+        !self.cache_x.is_empty() || p.from_layer == 0
     }
 
     /// Commit a pending evaluation: splice its buffers into the prefix cache.

@@ -1,8 +1,23 @@
-//! The random-walk hill-climbing driver (paper Algorithm 1).
+//! The hill-climbing search protocol (paper Algorithm 1) and its sequential
+//! reference driver.
 //!
-//! Generic over [`Objective`] so the accept/reject control flow, telemetry
-//! and determinism are tested without a PJRT client; the real objective is
-//! [`super::objective::XlaObjective`].
+//! The search talks to the system under optimization through the
+//! [`Objective`] trait, a three-stage **draft / evaluate / commit** protocol
+//! designed so independent proposals can be processed in concurrent K-wide
+//! rounds (see [`super::scheduler`]):
+//!
+//! 1. **draft** (`&self`, parallelizable) — the host-side work of a
+//!    proposal: apply the transform to the base FP weights and re-quantize
+//!    under the baseline's semantics.  Implementations fan the batch out
+//!    across [`crate::util::pool::parallel_map`].
+//! 2. **evaluate** (`&mut self`, serialized) — score each draft against the
+//!    current *accepted* state, restoring that state before returning.
+//! 3. **commit** (`&mut self`) — promote one evaluated draft into the
+//!    accepted state.
+//!
+//! [`run_steps`] is the one-proposal-at-a-time reference driver; the
+//! batched round engine in [`super::scheduler`] reproduces its telemetry
+//! bit-for-bit at `batch = 1` (pinned by tests).
 
 use super::state::{SearchState, StepRecord};
 use crate::runtime::Loss;
@@ -24,6 +39,9 @@ pub struct SearchConfig {
     pub alpha: Option<f64>,
     /// Log every n-th step.
     pub log_every: usize,
+    /// Proposals drafted per round (`--batch`).  1 = exact sequential
+    /// semantics; K > 1 drafts K proposals on distinct layers concurrently.
+    pub batch: usize,
 }
 
 impl Default for SearchConfig {
@@ -33,26 +51,53 @@ impl Default for SearchConfig {
     /// that rotation stays within the §3.2 approximate-invariance regime
     /// (FP CE drift < 0.1%, pinned by tests), large enough that the
     /// random walk moves in a few hundred steps.  Env overrides:
-    /// `INVAREXPLORE_SIGMA_R`, `INVAREXPLORE_SIGMA_S`, `INVAREXPLORE_FRAC`.
+    /// `INVAREXPLORE_SIGMA_R`, `INVAREXPLORE_SIGMA_S`, `INVAREXPLORE_FRAC`,
+    /// `INVAREXPLORE_BATCH`.
     fn default() -> Self {
-        let envf = |name: &str, default: f64| {
-            std::env::var(name)
-                .ok()
-                .and_then(|v| v.parse().ok())
-                .unwrap_or(default)
-        };
+        use crate::util::cli::env_override;
         SearchConfig {
             kinds: TransformKinds::all(),
-            frac: envf("INVAREXPLORE_FRAC", 0.1),
-            sigma_s: envf("INVAREXPLORE_SIGMA_S", 1e-2),
-            sigma_r: envf("INVAREXPLORE_SIGMA_R", 5e-3),
+            frac: env_override("INVAREXPLORE_FRAC", 0.1),
+            sigma_s: env_override("INVAREXPLORE_SIGMA_S", 1e-2),
+            sigma_r: env_override("INVAREXPLORE_SIGMA_R", 5e-3),
             alpha: None,
             log_every: 50,
+            batch: env_override("INVAREXPLORE_BATCH", 1usize).max(1),
         }
     }
 }
 
+/// One requested proposal: mutate `layer` with `transform`.
+#[derive(Debug, Clone)]
+pub struct DraftRequest {
+    pub layer: usize,
+    pub transform: LayerTransform,
+}
+
+/// A drafted proposal: the host-side work product, ready to evaluate.
+///
+/// `payload` carries implementation-specific state (e.g. re-quantized FFN
+/// tensors for the XLA objective); the driver only reads `layer` and
+/// `transform`.
+pub struct Draft {
+    pub layer: usize,
+    pub transform: LayerTransform,
+    pub payload: Box<dyn std::any::Any + Send>,
+}
+
 /// What the search loop needs from the system under optimization.
+///
+/// Protocol contract:
+///
+/// * [`Objective::eval_drafts`] scores every draft *independently* against
+///   the accepted state and leaves the accepted state in effect when it
+///   returns; it retains per-draft pending results so an immediately
+///   following `commit` is cheap (no re-evaluation).
+/// * [`Objective::commit`] promotes one draft of the **most recent**
+///   `eval_drafts` batch and invalidates that batch's other pendings —
+///   their losses are stale once the model changed.  Committing more than
+///   one draft requires a fresh `eval_drafts` in between (the scheduler's
+///   re-scoring pass).
 pub trait Objective {
     fn n_layers(&self) -> usize;
     fn d_ffn(&self) -> usize;
@@ -61,25 +106,40 @@ pub trait Objective {
     /// initial loss — Algorithm 1 lines 1–3.
     fn init(&mut self) -> crate::Result<Loss>;
 
-    /// Apply transform `t` to layer `l` (from the base FP weights),
-    /// re-quantize the affected tensors, evaluate.  The result is *pending*
-    /// until [`Objective::accept`] / [`Objective::reject`].
-    fn try_layer(&mut self, l: usize, t: &LayerTransform) -> crate::Result<Loss>;
+    /// Stage 1 — host-side draft of a batch of proposals on distinct
+    /// layers (transform application + re-quantization).
+    fn draft(&self, reqs: &[DraftRequest]) -> crate::Result<Vec<Draft>>;
 
-    /// Commit the pending proposal.
-    fn accept(&mut self) -> crate::Result<()>;
+    /// Stage 2 — score each draft against the accepted state.
+    fn eval_drafts(&mut self, drafts: &[Draft]) -> crate::Result<Vec<Loss>>;
 
-    /// Revert the pending proposal (restore layer weights).
-    fn reject(&mut self) -> crate::Result<()>;
+    /// Stage 3 — commit one draft from the most recent `eval_drafts`
+    /// batch; returns its exact loss.  Takes the draft by value so
+    /// implementations can move its payload (e.g. re-quantized weight
+    /// matrices) into the accepted state instead of cloning.
+    fn commit(&mut self, draft: Draft) -> crate::Result<Loss>;
+}
+
+/// Draft + evaluate a single proposal without committing it (the accepted
+/// state is untouched).  Probe helper for benches and tests.
+pub fn probe(obj: &mut dyn Objective, layer: usize, t: &LayerTransform) -> crate::Result<Loss> {
+    let drafts = obj.draft(&[DraftRequest { layer, transform: t.clone() }])?;
+    let losses = obj.eval_drafts(&drafts)?;
+    Ok(losses[0])
 }
 
 /// Initialize `state` from the objective (idempotent if already done).
+///
+/// Initialization is tracked by an explicit [`SearchState::initialized`]
+/// flag, *not* by `best.ce.is_finite()`: a legitimately non-finite initial
+/// CE (easy to hit at 2-bit) must not silently re-run the full init on
+/// every `run_steps` segment.
 pub fn ensure_init(
     obj: &mut dyn Objective,
     state: &mut SearchState,
     cfg: &SearchConfig,
 ) -> crate::Result<()> {
-    if state.best.ce.is_finite() {
+    if state.initialized {
         return Ok(());
     }
     let loss = obj.init()?;
@@ -94,6 +154,7 @@ pub fn ensure_init(
         }
     };
     state.best = loss;
+    state.initialized = true;
     crate::info!(
         "search init: ce {:.4} act_mse {:.3e} alpha {:.3e}",
         loss.ce,
@@ -103,7 +164,39 @@ pub fn ensure_init(
     Ok(())
 }
 
-/// Run `n_steps` proposals (Algorithm 1 lines 10–19), extending `state`.
+/// Push one telemetry record, logging every `cfg.log_every` steps.
+pub(super) fn record_step(
+    state: &mut SearchState,
+    cfg: &SearchConfig,
+    layer: usize,
+    accepted: bool,
+) {
+    let rec = StepRecord {
+        step: state.step,
+        layer,
+        loss_total: state.best.total(state.alpha),
+        ce: state.best.ce,
+        act_mse: state.best.act_mse,
+        accepted,
+        accept_rate: state.accept_rate(),
+        elapsed_s: state.started.elapsed().as_secs_f64(),
+    };
+    if cfg.log_every > 0 && state.step % cfg.log_every == 0 {
+        crate::info!(
+            "step {:5}  loss {:.4}  ce {:.4}  mse {:.3e}  acc {:.2}",
+            rec.step,
+            rec.loss_total,
+            rec.ce,
+            rec.act_mse,
+            rec.accept_rate
+        );
+    }
+    state.telemetry.push(rec);
+}
+
+/// Run `n_steps` proposals strictly one at a time (Algorithm 1 lines
+/// 10–19), extending `state`.  This is the reference semantics the batched
+/// scheduler must reproduce at `batch = 1`.
 pub fn run_steps(
     obj: &mut dyn Objective,
     state: &mut SearchState,
@@ -118,132 +211,48 @@ pub fn run_steps(
         let l = state.rng.below(n_layers);
         let proposal =
             state.transforms[l].propose(&mut state.rng, cfg.kinds, cfg.frac, cfg.sigma_s, cfg.sigma_r);
-        let loss = obj.try_layer(l, &proposal)?;
+        let mut drafts = obj.draft(&[DraftRequest { layer: l, transform: proposal }])?;
+        let loss = obj.eval_drafts(&drafts)?[0];
         let accepted = loss.total(state.alpha) < state.best.total(state.alpha);
         if accepted {
-            obj.accept()?;
-            state.transforms[l] = proposal;
-            state.best = loss;
+            let draft = drafts.swap_remove(0);
+            state.transforms[l] = draft.transform.clone();
+            let exact = obj.commit(draft)?;
+            state.best = exact;
             state.accepts += 1;
-        } else {
-            obj.reject()?;
         }
-        let rec = StepRecord {
-            step: state.step,
-            layer: l,
-            loss_total: state.best.total(state.alpha),
-            ce: state.best.ce,
-            act_mse: state.best.act_mse,
-            accepted,
-            accept_rate: state.accept_rate(),
-            elapsed_s: state.started.elapsed().as_secs_f64(),
-        };
-        if cfg.log_every > 0 && state.step % cfg.log_every == 0 {
-            crate::info!(
-                "step {:5}  loss {:.4}  ce {:.4}  mse {:.3e}  acc {:.2}",
-                rec.step,
-                rec.loss_total,
-                rec.ce,
-                rec.act_mse,
-                rec.accept_rate
-            );
-        }
-        state.telemetry.push(rec);
+        record_step(state, cfg, l, accepted);
     }
     Ok(())
+}
+
+/// Shared scaling-only driver-test config (α pinned to 0) — used by the
+/// hillclimb and scheduler test suites.
+#[cfg(test)]
+pub(crate) fn test_cfg() -> SearchConfig {
+    SearchConfig {
+        kinds: TransformKinds::parse("s").unwrap(),
+        frac: 0.3,
+        sigma_s: 0.3,
+        sigma_r: 0.0,
+        alpha: Some(0.0),
+        log_every: 0,
+        batch: 1,
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::rng::Pcg64;
-
-    /// Synthetic objective: loss = Σ per-layer potentials; a transform's
-    /// potential improves when its scale vector is closer to a hidden
-    /// optimum.  Deterministic, no XLA.
-    struct Synth {
-        n_layers: usize,
-        d: usize,
-        target: Vec<Vec<f32>>,
-        current: Vec<Vec<f32>>,
-        pending: Option<(usize, Vec<f32>)>,
-    }
-
-    impl Synth {
-        fn new(n_layers: usize, d: usize) -> Synth {
-            let mut rng = Pcg64::new(99);
-            let target = (0..n_layers)
-                .map(|_| (0..d).map(|_| (rng.uniform() as f32) * 2.0 + 0.5).collect())
-                .collect();
-            Synth {
-                n_layers,
-                d,
-                target,
-                current: vec![vec![1.0; d]; n_layers],
-                pending: None,
-            }
-        }
-
-        fn layer_loss(&self, l: usize, s: &[f32]) -> f64 {
-            s.iter()
-                .zip(&self.target[l])
-                .map(|(a, b)| ((a - b) as f64).powi(2))
-                .sum()
-        }
-
-        fn total_with(&self, l: usize, s: &[f32]) -> Loss {
-            let mut ce = 0.0;
-            for i in 0..self.n_layers {
-                ce += if i == l {
-                    self.layer_loss(i, s)
-                } else {
-                    self.layer_loss(i, &self.current[i])
-                };
-            }
-            Loss { ce, act_mse: 0.0 }
-        }
-    }
-
-    impl Objective for Synth {
-        fn n_layers(&self) -> usize {
-            self.n_layers
-        }
-        fn d_ffn(&self) -> usize {
-            self.d
-        }
-        fn init(&mut self) -> crate::Result<Loss> {
-            Ok(self.total_with(0, &self.current[0].clone()))
-        }
-        fn try_layer(&mut self, l: usize, t: &LayerTransform) -> crate::Result<Loss> {
-            let loss = self.total_with(l, &t.scale);
-            self.pending = Some((l, t.scale.clone()));
-            Ok(loss)
-        }
-        fn accept(&mut self) -> crate::Result<()> {
-            let (l, s) = self.pending.take().expect("pending");
-            self.current[l] = s;
-            Ok(())
-        }
-        fn reject(&mut self) -> crate::Result<()> {
-            self.pending.take().expect("pending");
-            Ok(())
-        }
-    }
+    use crate::search::synth::SynthObjective;
 
     fn cfg() -> SearchConfig {
-        SearchConfig {
-            kinds: TransformKinds::parse("s").unwrap(),
-            frac: 0.3,
-            sigma_s: 0.3,
-            sigma_r: 0.0,
-            alpha: Some(0.0),
-            log_every: 0,
-        }
+        test_cfg()
     }
 
     #[test]
     fn hillclimbing_reduces_loss_monotonically() {
-        let mut obj = Synth::new(3, 8);
+        let mut obj = SynthObjective::new(3, 8);
         let mut state = SearchState::new(3, 8, 1);
         run_steps(&mut obj, &mut state, &cfg(), 400).unwrap();
         let losses: Vec<f64> = state.telemetry.iter().map(|r| r.loss_total).collect();
@@ -258,7 +267,7 @@ mod tests {
     #[test]
     fn deterministic_given_seed() {
         let run = |seed| {
-            let mut obj = Synth::new(2, 8);
+            let mut obj = SynthObjective::new(2, 8);
             let mut state = SearchState::new(2, 8, seed);
             run_steps(&mut obj, &mut state, &cfg(), 100).unwrap();
             (state.best.ce, state.accepts)
@@ -267,11 +276,58 @@ mod tests {
         assert_ne!(run(5), run(6));
     }
 
+    /// Objective that counts `init` calls and reports a non-finite initial
+    /// CE — the regression case for the old `best.ce.is_finite()` sentinel.
+    struct InfInit {
+        init_calls: usize,
+    }
+
+    impl Objective for InfInit {
+        fn n_layers(&self) -> usize {
+            1
+        }
+        fn d_ffn(&self) -> usize {
+            4
+        }
+        fn init(&mut self) -> crate::Result<Loss> {
+            self.init_calls += 1;
+            Ok(Loss { ce: f64::INFINITY, act_mse: 0.0 })
+        }
+        fn draft(&self, reqs: &[DraftRequest]) -> crate::Result<Vec<Draft>> {
+            Ok(reqs
+                .iter()
+                .map(|r| Draft {
+                    layer: r.layer,
+                    transform: r.transform.clone(),
+                    payload: Box::new(()),
+                })
+                .collect())
+        }
+        fn eval_drafts(&mut self, drafts: &[Draft]) -> crate::Result<Vec<Loss>> {
+            Ok(drafts.iter().map(|_| Loss { ce: f64::INFINITY, act_mse: 0.0 }).collect())
+        }
+        fn commit(&mut self, _draft: Draft) -> crate::Result<Loss> {
+            panic!("nothing improves an infinite loss");
+        }
+    }
+
+    #[test]
+    fn non_finite_initial_ce_does_not_reinit() {
+        let mut obj = InfInit { init_calls: 0 };
+        let mut state = SearchState::new(1, 4, 0);
+        // segmented driving, as Figure 1 does between test-PPL evaluations
+        run_steps(&mut obj, &mut state, &cfg(), 5).unwrap();
+        run_steps(&mut obj, &mut state, &cfg(), 5).unwrap();
+        run_steps(&mut obj, &mut state, &cfg(), 5).unwrap();
+        assert_eq!(obj.init_calls, 1, "init must run exactly once per search");
+        assert!(state.initialized);
+        assert_eq!(state.step, 15);
+        assert_eq!(state.accepts, 0);
+    }
+
     #[test]
     fn rejected_proposals_leave_state_unchanged() {
-        struct AlwaysWorse {
-            pending: bool,
-        }
+        struct AlwaysWorse;
         impl Objective for AlwaysWorse {
             fn n_layers(&self) -> usize {
                 1
@@ -282,20 +338,24 @@ mod tests {
             fn init(&mut self) -> crate::Result<Loss> {
                 Ok(Loss { ce: 1.0, act_mse: 0.0 })
             }
-            fn try_layer(&mut self, _: usize, _: &LayerTransform) -> crate::Result<Loss> {
-                self.pending = true;
-                Ok(Loss { ce: 2.0, act_mse: 0.0 })
+            fn draft(&self, reqs: &[DraftRequest]) -> crate::Result<Vec<Draft>> {
+                Ok(reqs
+                    .iter()
+                    .map(|r| Draft {
+                        layer: r.layer,
+                        transform: r.transform.clone(),
+                        payload: Box::new(()),
+                    })
+                    .collect())
             }
-            fn accept(&mut self) -> crate::Result<()> {
+            fn eval_drafts(&mut self, drafts: &[Draft]) -> crate::Result<Vec<Loss>> {
+                Ok(drafts.iter().map(|_| Loss { ce: 2.0, act_mse: 0.0 }).collect())
+            }
+            fn commit(&mut self, _draft: Draft) -> crate::Result<Loss> {
                 panic!("must never accept");
             }
-            fn reject(&mut self) -> crate::Result<()> {
-                assert!(self.pending);
-                self.pending = false;
-                Ok(())
-            }
         }
-        let mut obj = AlwaysWorse { pending: false };
+        let mut obj = AlwaysWorse;
         let mut state = SearchState::new(1, 4, 0);
         run_steps(&mut obj, &mut state, &cfg(), 50).unwrap();
         assert_eq!(state.accepts, 0);
@@ -316,14 +376,21 @@ mod tests {
             fn init(&mut self) -> crate::Result<Loss> {
                 Ok(Loss { ce: 5.0, act_mse: 0.1 })
             }
-            fn try_layer(&mut self, _: usize, _: &LayerTransform) -> crate::Result<Loss> {
+            fn draft(&self, reqs: &[DraftRequest]) -> crate::Result<Vec<Draft>> {
+                Ok(reqs
+                    .iter()
+                    .map(|r| Draft {
+                        layer: r.layer,
+                        transform: r.transform.clone(),
+                        payload: Box::new(()),
+                    })
+                    .collect())
+            }
+            fn eval_drafts(&mut self, drafts: &[Draft]) -> crate::Result<Vec<Loss>> {
+                Ok(drafts.iter().map(|_| Loss { ce: 10.0, act_mse: 0.1 }).collect())
+            }
+            fn commit(&mut self, _draft: Draft) -> crate::Result<Loss> {
                 Ok(Loss { ce: 10.0, act_mse: 0.1 })
-            }
-            fn accept(&mut self) -> crate::Result<()> {
-                Ok(())
-            }
-            fn reject(&mut self) -> crate::Result<()> {
-                Ok(())
             }
         }
         let mut state = SearchState::new(1, 4, 0);
@@ -335,11 +402,28 @@ mod tests {
 
     #[test]
     fn telemetry_accept_rate_consistent() {
-        let mut obj = Synth::new(2, 8);
+        let mut obj = SynthObjective::new(2, 8);
         let mut state = SearchState::new(2, 8, 3);
         run_steps(&mut obj, &mut state, &cfg(), 200).unwrap();
         let last = state.telemetry.last().unwrap();
         assert!((last.accept_rate - state.accepts as f64 / 200.0).abs() < 1e-9);
         assert_eq!(state.telemetry.len(), 200);
+    }
+
+    #[test]
+    fn probe_leaves_accepted_state_untouched() {
+        let mut obj = SynthObjective::new(2, 8);
+        let mut state = SearchState::new(2, 8, 9);
+        run_steps(&mut obj, &mut state, &cfg(), 20).unwrap();
+        let before = obj.current_total();
+        let t = state.transforms[0].propose(
+            &mut state.rng,
+            TransformKinds::parse("s").unwrap(),
+            0.3,
+            0.3,
+            0.0,
+        );
+        let _ = probe(&mut obj, 0, &t).unwrap();
+        assert_eq!(obj.current_total(), before, "probe mutated accepted state");
     }
 }

@@ -1,18 +1,27 @@
 //! The paper's contribution: activation-guided discrete search over
 //! invariant transformations (Algorithm 1).
 //!
-//! * [`hillclimb`] — the generic random-walk hill-climbing driver, written
-//!   against the [`Objective`] trait so its control flow is unit-testable
-//!   without XLA;
+//! * [`hillclimb`] — the draft / evaluate / commit [`Objective`] protocol
+//!   plus the sequential reference driver, written trait-first so control
+//!   flow is unit-testable without XLA;
+//! * [`scheduler`] — the round-based batched proposal engine: K proposals
+//!   on distinct layers drafted concurrently per round (`--batch K`),
+//!   greedy acceptance with exact re-scoring of survivors;
 //! * [`objective`] — the real objective: transform → re-quantize → run the
 //!   AOT XLA programs through the incremental [`crate::runtime::Evaluator`];
+//! * [`synth`] — deterministic XLA-free objective for tests and the
+//!   `perf_hotpath` throughput bench;
 //! * [`state`] — resumable search state (π, s, φ per layer + RNG +
 //!   telemetry) with JSON checkpoints.
 
 pub mod hillclimb;
 pub mod objective;
+pub mod scheduler;
 pub mod state;
+pub mod synth;
 
-pub use hillclimb::{run_steps, Objective, SearchConfig};
+pub use hillclimb::{probe, run_steps, Draft, DraftRequest, Objective, SearchConfig};
 pub use objective::XlaObjective;
+pub use scheduler::{run, run_rounds};
 pub use state::{SearchState, StepRecord};
+pub use synth::SynthObjective;

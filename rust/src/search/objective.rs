@@ -1,25 +1,61 @@
 //! The real search objective: transform → re-quantize → evaluate on the
-//! AOT XLA programs.
+//! AOT XLA programs, speaking the draft / evaluate / commit protocol.
 //!
 //! Per proposal for layer *l*, only three tensors change: `up.w`, `up.b`,
-//! `down.w` (Eqns. 21–22; `down.b` is untouched).  The two weight matrices
-//! are re-quantized under the base method's semantics — on device through
-//! the standalone Pallas fake-quant program for RTN (keeping the L1 kernel
-//! on the hot path), or on host for the clip-search / GPTQ quantizers —
-//! and the incremental evaluator re-runs only layers ≥ *l*.
+//! `down.w` (Eqns. 21–22; `down.b` is untouched).  **Drafting** — transform
+//! application plus re-quantization under the base method's semantics — is
+//! pure host-side work on the base FP weights, independent of every other
+//! layer's accepted state, so a round of K drafts fans out across
+//! [`crate::util::pool::parallel_map`].  **Evaluation** swaps each
+//! candidate's tensors onto the device, scores it through the incremental
+//! evaluator (layers ≥ *l* only), and restores the accepted tensors, so
+//! candidates never observe each other.  **Commit** re-uploads the chosen
+//! candidate and splices its pending activation buffers into the accepted
+//! prefix cache — no re-evaluation.
+//!
+//! RTN proposals can re-quantize on device through the standalone Pallas
+//! fake-quant program (`INVAREXPLORE_DEVICE_QUANT=1`); the clip-search /
+//! GPTQ quantizers always run on host.
 
-use super::hillclimb::Objective;
+use std::collections::HashMap;
+
+use super::hillclimb::{Draft, DraftRequest, Objective};
 use crate::baselines::{Prepared, Quantizer};
-use crate::runtime::{Evaluator, Loss};
 use crate::runtime::evaluator::Pending;
+use crate::runtime::{Evaluator, Loss};
 use crate::tensor::Tensor;
 use crate::transform::{apply_to_tensors, LayerTransform};
+use crate::util::pool;
 
-/// Accepted quantized tensors of one layer (for cheap proposal revert).
+/// The three searched tensors of one layer: draft payload and accepted
+/// revert source.  Host-quantized values, or FP-transformed values when the
+/// Pallas device-quant path re-quantizes at upload.
 struct LayerTensors {
     up_w: Tensor,
     up_b: Tensor,
     down_w: Tensor,
+}
+
+/// Host-side drafting: apply `t` to layer `l` of the base FP weights and
+/// re-quantize under the method's semantics.  `&Prepared` only — safe to
+/// fan out across worker threads.
+fn draft_tensors(prepared: &Prepared, device_quant: bool, l: usize, t: &LayerTransform) -> LayerTensors {
+    let fp = &prepared.fp;
+    let (up_w_t, up_b_t, down_w_t) = apply_to_tensors(
+        t,
+        fp.layer(l, "up.w"),
+        fp.layer(l, "up.b"),
+        fp.layer(l, "down.w"),
+    );
+    if device_quant {
+        // FP values; the Pallas program quantizes at upload (deterministic,
+        // so accepted copies re-quantize identically on revert)
+        LayerTensors { up_w: up_w_t, up_b: up_b_t, down_w: down_w_t }
+    } else {
+        let up_q = prepared.quantize_tensor(&format!("l{l}.up.w"), &up_w_t, Some(t));
+        let down_q = prepared.quantize_tensor(&format!("l{l}.down.w"), &down_w_t, Some(t));
+        LayerTensors { up_w: up_q, up_b: up_b_t, down_w: down_q }
+    }
 }
 
 pub struct XlaObjective {
@@ -27,8 +63,9 @@ pub struct XlaObjective {
     pub eval: Evaluator,
     /// Accepted quantized FFN tensors per layer (revert source).
     accepted: Vec<LayerTensors>,
-    /// In-flight proposal: (layer, evaluator pending, tensors).
-    pending: Option<(usize, Pending, LayerTensors)>,
+    /// Pending evaluations of the most recent `eval_drafts` batch, keyed by
+    /// layer; cleared by any commit (the batch's other losses go stale).
+    round: HashMap<usize, Pending>,
     /// Quantize RTN proposals on device via the Pallas program.
     pub device_quant: bool,
 }
@@ -50,7 +87,7 @@ impl XlaObjective {
             prepared,
             eval,
             accepted: Vec::new(),
-            pending: None,
+            round: HashMap::new(),
             device_quant,
         }
     }
@@ -59,58 +96,15 @@ impl XlaObjective {
         &self.prepared.fp.config
     }
 
-    /// Quantize + upload the FFN tensors of layer `l` under transform `t`.
-    fn push_layer(&mut self, l: usize, t: &LayerTransform) -> crate::Result<LayerTensors> {
-        let fp = &self.prepared.fp;
-        let (up_w_t, up_b_t, down_w_t) = apply_to_tensors(
-            t,
-            fp.layer(l, "up.w"),
-            fp.layer(l, "up.b"),
-            fp.layer(l, "down.w"),
-        );
-        let (up_name, down_name) = (format!("l{l}.up.w"), format!("l{l}.down.w"));
-        let engine = &mut self.eval.engine;
-        let (up_q, down_q);
-        if self.device_quant {
-            // RTN semantics via the on-device Pallas kernel program
-            engine.update_tensor_device_quant(&up_name, &up_w_t, self.prepared.scheme)?;
-            engine.update_tensor_device_quant(&down_name, &down_w_t, self.prepared.scheme)?;
-            // host copies kept for revert (re-quantized identically on revert
-            // upload; cheap since fake-quant is deterministic)
-            up_q = up_w_t;
-            down_q = down_w_t;
-        } else {
-            up_q = self.prepared.quantize_tensor(&up_name, &up_w_t, Some(t));
-            down_q = self.prepared.quantize_tensor(&down_name, &down_w_t, Some(t));
-            engine.update_tensor(&up_name, &up_q)?;
-            engine.update_tensor(&down_name, &down_q)?;
-        }
-        engine.update_tensor(&format!("l{l}.up.b"), &up_b_t)?;
-        Ok(LayerTensors { up_w: up_q, up_b: up_b_t, down_w: down_q })
+    fn quant_scheme(&self) -> Option<crate::quant::QuantScheme> {
+        self.device_quant.then_some(self.prepared.scheme)
     }
 
-    /// Re-upload the accepted tensors of layer `l` (proposal revert).
-    fn restore_layer(&mut self, l: usize) -> crate::Result<()> {
-        // move tensors out to appease the borrow checker, then put back
-        let tensors = std::mem::replace(
-            &mut self.accepted[l],
-            LayerTensors {
-                up_w: Tensor::zeros(0, 0),
-                up_b: Tensor::zeros(0, 0),
-                down_w: Tensor::zeros(0, 0),
-            },
-        );
-        let engine = &mut self.eval.engine;
-        if self.device_quant {
-            engine.update_tensor_device_quant(&format!("l{l}.up.w"), &tensors.up_w, self.prepared.scheme)?;
-            engine.update_tensor_device_quant(&format!("l{l}.down.w"), &tensors.down_w, self.prepared.scheme)?;
-        } else {
-            engine.update_tensor(&format!("l{l}.up.w"), &tensors.up_w)?;
-            engine.update_tensor(&format!("l{l}.down.w"), &tensors.down_w)?;
-        }
-        engine.update_tensor(&format!("l{l}.up.b"), &tensors.up_b)?;
-        self.accepted[l] = tensors;
-        Ok(())
+    fn payload(draft: &Draft) -> &LayerTensors {
+        draft
+            .payload
+            .downcast_ref::<LayerTensors>()
+            .expect("XlaObjective drafts carry LayerTensors payloads")
     }
 }
 
@@ -143,35 +137,99 @@ impl Objective for XlaObjective {
                 }
             }
         }
-        // FFN tensors via the shared path (identity transform)
+        // FFN tensors via the shared drafting path (identity transform)
         self.accepted.clear();
+        self.round.clear();
         for l in 0..cfg.n_layers {
             let t = LayerTransform::identity(cfg.d_ffn);
-            let tensors = self.push_layer(l, &t)?;
+            let tensors = draft_tensors(&self.prepared, self.device_quant, l, &t);
+            self.eval.engine.upload_ffn(
+                l,
+                &tensors.up_w,
+                &tensors.up_b,
+                &tensors.down_w,
+                self.quant_scheme(),
+            )?;
             self.accepted.push(tensors);
         }
         self.eval.full_eval()
     }
 
-    fn try_layer(&mut self, l: usize, t: &LayerTransform) -> crate::Result<Loss> {
-        anyhow::ensure!(self.pending.is_none(), "overlapping proposals");
-        let tensors = self.push_layer(l, t)?;
-        let pending = self.eval.eval_from_layer(l)?;
-        let loss = pending.loss;
-        self.pending = Some((l, pending, tensors));
+    fn draft(&self, reqs: &[DraftRequest]) -> crate::Result<Vec<Draft>> {
+        let prepared = &self.prepared;
+        let device_quant = self.device_quant;
+        let threads = pool::num_threads().min(reqs.len().max(1));
+        Ok(pool::parallel_map(reqs.len(), threads, |i| {
+            let r = &reqs[i];
+            let tensors = draft_tensors(prepared, device_quant, r.layer, &r.transform);
+            Draft {
+                layer: r.layer,
+                transform: r.transform.clone(),
+                payload: Box::new(tensors),
+            }
+        }))
+    }
+
+    fn eval_drafts(&mut self, drafts: &[Draft]) -> crate::Result<Vec<Loss>> {
+        anyhow::ensure!(
+            self.accepted.len() == self.n_layers(),
+            "eval_drafts before init"
+        );
+        self.round.clear();
+        let layers: Vec<usize> = drafts.iter().map(|d| d.layer).collect();
+        let scheme = self.quant_scheme();
+        let accepted = &self.accepted;
+        let pendings = self.eval.eval_proposals(
+            &layers,
+            |engine, i| {
+                let t = Self::payload(&drafts[i]);
+                engine.upload_ffn(drafts[i].layer, &t.up_w, &t.up_b, &t.down_w, scheme)
+            },
+            |engine, i| {
+                let a = &accepted[drafts[i].layer];
+                engine.upload_ffn(drafts[i].layer, &a.up_w, &a.up_b, &a.down_w, scheme)
+            },
+        )?;
+        let mut losses = Vec::with_capacity(pendings.len());
+        for (d, p) in drafts.iter().zip(pendings) {
+            losses.push(p.loss);
+            self.round.insert(d.layer, p);
+        }
+        Ok(losses)
+    }
+
+    // Commit re-uploads the chosen tensors because eval_drafts always
+    // restores the accepted state (isolation).  That costs one extra FFN
+    // upload per *accepted* proposal vs the old leave-candidate-on-device
+    // flow — small next to the suffix evaluation a proposal already pays,
+    // and it keeps the protocol stateless between eval and commit.
+    fn commit(&mut self, draft: Draft) -> crate::Result<Loss> {
+        let pending = self.round.remove(&draft.layer).ok_or_else(|| {
+            anyhow::anyhow!("commit without a pending eval for layer {}", draft.layer)
+        })?;
+        // any other pendings of the batch are stale once the model changes
+        self.round.clear();
+        let tensors = *draft
+            .payload
+            .downcast::<LayerTensors>()
+            .map_err(|_| anyhow::anyhow!("XlaObjective drafts carry LayerTensors payloads"))?;
+        self.eval.engine.upload_ffn(
+            draft.layer,
+            &tensors.up_w,
+            &tensors.up_b,
+            &tensors.down_w,
+            self.quant_scheme(),
+        )?;
+        // a cold-cache pending (round-shared-prefix path) only covers its
+        // suffix layers; it cannot splice, so rebuild via a full evaluation
+        let loss = if self.eval.can_accept(&pending) {
+            let loss = pending.loss;
+            self.eval.accept(pending);
+            loss
+        } else {
+            self.eval.full_eval()?
+        };
+        self.accepted[draft.layer] = tensors;
         Ok(loss)
-    }
-
-    fn accept(&mut self) -> crate::Result<()> {
-        let (l, pending, tensors) = self.pending.take().expect("no pending proposal");
-        self.eval.accept(pending);
-        self.accepted[l] = tensors;
-        Ok(())
-    }
-
-    fn reject(&mut self) -> crate::Result<()> {
-        let (l, _pending, _tensors) = self.pending.take().expect("no pending proposal");
-        self.restore_layer(l)?;
-        Ok(())
     }
 }

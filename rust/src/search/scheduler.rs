@@ -1,0 +1,291 @@
+//! The round-based batched proposal engine.
+//!
+//! Each round drafts `K` proposals on **distinct** layers, fans the
+//! host-side transform application + re-quantization out across the thread
+//! pool (inside [`Objective::draft`]), scores all candidates against the
+//! round-start accepted state with one batched evaluation, then greedily
+//! accepts the best improving candidate and **re-scores the survivors** so
+//! every accepted loss is exact — candidates were scored independently, so
+//! once one lands the others' losses are stale.
+//!
+//! `K = 1` reproduces the sequential driver [`super::hillclimb::run_steps`]
+//! bit-for-bit: the same RNG stream (one layer draw + one proposal per
+//! step), the same loss arithmetic, the same telemetry (pinned by tests).
+//!
+//! Worst-case device cost of a round is `K + (K-1) + …` suffix evaluations
+//! when every candidate keeps improving; in practice accept rates are low,
+//! so a round costs `K` evaluations while drafting cost is divided by the
+//! worker count.
+
+use super::hillclimb::{ensure_init, record_step, Draft, DraftRequest, Objective, SearchConfig};
+use super::state::SearchState;
+
+/// Drive the search for `n_steps` proposals, honoring `cfg.batch`.
+///
+/// The single entry point used by the pipeline: dispatches to the exact
+/// sequential driver when `batch <= 1`, otherwise runs K-wide rounds.
+pub fn run(
+    obj: &mut dyn Objective,
+    state: &mut SearchState,
+    cfg: &SearchConfig,
+    n_steps: usize,
+) -> crate::Result<()> {
+    if cfg.batch <= 1 {
+        super::hillclimb::run_steps(obj, state, cfg, n_steps)
+    } else {
+        run_rounds(obj, state, cfg, n_steps, cfg.batch)
+    }
+}
+
+/// Run `n_steps` proposals in rounds of (up to) `k` concurrent candidates.
+pub fn run_rounds(
+    obj: &mut dyn Objective,
+    state: &mut SearchState,
+    cfg: &SearchConfig,
+    n_steps: usize,
+    k: usize,
+) -> crate::Result<()> {
+    anyhow::ensure!(k >= 1, "batch size must be >= 1");
+    ensure_init(obj, state, cfg)?;
+    let n_layers = obj.n_layers();
+
+    let mut remaining = n_steps;
+    while remaining > 0 {
+        // a round cannot exceed the layer count: candidates must mutate
+        // distinct layers to be independently scorable
+        let k_eff = k.min(remaining).min(n_layers);
+        let reqs = draw_round(state, cfg, n_layers, k_eff);
+        remaining -= k_eff;
+
+        let drafts = obj.draft(&reqs)?;
+        let mut losses = obj.eval_drafts(&drafts)?;
+
+        // greedy accept: best improving candidate first, survivors
+        // re-scored against the new accepted state before the next pick
+        let mut pool: Vec<Draft> = drafts;
+        let mut order: Vec<usize> = (0..pool.len()).collect();
+        loop {
+            let Some(i) = best_improving(&losses, state) else { break };
+            let draft = pool.swap_remove(i);
+            order.swap_remove(i);
+            losses.swap_remove(i);
+            let layer = draft.layer;
+            state.transforms[layer] = draft.transform.clone();
+            let exact = obj.commit(draft)?;
+            state.best = exact;
+            state.accepts += 1;
+            state.step += 1;
+            record_step(state, cfg, layer, true);
+            if pool.is_empty() {
+                break;
+            }
+            losses = obj.eval_drafts(&pool)?;
+        }
+
+        // rejected candidates, recorded in draft order
+        let mut rejects: Vec<(usize, usize)> =
+            order.iter().zip(&pool).map(|(&o, d)| (o, d.layer)).collect();
+        rejects.sort_by_key(|&(o, _)| o);
+        for (_, layer) in rejects {
+            state.step += 1;
+            record_step(state, cfg, layer, false);
+        }
+    }
+    Ok(())
+}
+
+/// Sample `k` proposals on distinct layers.  Layers are drawn by rejection
+/// so a single-candidate round consumes exactly one `below()` call — the
+/// sequential driver's stream.
+fn draw_round(
+    state: &mut SearchState,
+    cfg: &SearchConfig,
+    n_layers: usize,
+    k: usize,
+) -> Vec<DraftRequest> {
+    let mut taken = vec![false; n_layers];
+    let mut reqs = Vec::with_capacity(k);
+    while reqs.len() < k {
+        let l = state.rng.below(n_layers);
+        if taken[l] {
+            continue;
+        }
+        taken[l] = true;
+        let transform = state.transforms[l].propose(
+            &mut state.rng,
+            cfg.kinds,
+            cfg.frac,
+            cfg.sigma_s,
+            cfg.sigma_r,
+        );
+        reqs.push(DraftRequest { layer: l, transform });
+    }
+    reqs
+}
+
+/// Index of the lowest-loss candidate that improves on the accepted state.
+fn best_improving(losses: &[crate::runtime::Loss], state: &SearchState) -> Option<usize> {
+    let bar = state.best.total(state.alpha);
+    let mut best: Option<(usize, f64)> = None;
+    for (i, loss) in losses.iter().enumerate() {
+        let t = loss.total(state.alpha);
+        let beats_leader = match best {
+            None => true,
+            Some((_, bt)) => t < bt,
+        };
+        if t < bar && beats_leader {
+            best = Some((i, t));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Loss;
+    use crate::search::hillclimb::{run_steps, test_cfg as cfg};
+    use crate::search::synth::SynthObjective;
+    use std::cell::RefCell;
+
+    /// Candidate-count K=1 must reproduce the sequential driver bit-for-bit
+    /// (the `--batch 1` acceptance criterion): identical `StepRecord`
+    /// streams up to wall-clock, identical final state.
+    #[test]
+    fn k1_round_engine_is_bit_identical_to_sequential() {
+        let seq = {
+            let mut obj = SynthObjective::new(3, 8);
+            let mut state = SearchState::new(3, 8, 7);
+            run_steps(&mut obj, &mut state, &cfg(), 150).unwrap();
+            state
+        };
+        let batched = {
+            let mut obj = SynthObjective::new(3, 8);
+            let mut state = SearchState::new(3, 8, 7);
+            run_rounds(&mut obj, &mut state, &cfg(), 150, 1).unwrap();
+            state
+        };
+        assert_eq!(seq.telemetry.len(), batched.telemetry.len());
+        for (a, b) in seq.telemetry.iter().zip(&batched.telemetry) {
+            assert_eq!(a.step, b.step);
+            assert_eq!(a.layer, b.layer);
+            assert_eq!(a.accepted, b.accepted);
+            assert_eq!(a.loss_total.to_bits(), b.loss_total.to_bits(), "step {}", a.step);
+            assert_eq!(a.ce.to_bits(), b.ce.to_bits());
+            assert_eq!(a.act_mse.to_bits(), b.act_mse.to_bits());
+            assert_eq!(a.accept_rate.to_bits(), b.accept_rate.to_bits());
+        }
+        assert_eq!(seq.accepts, batched.accepts);
+        assert_eq!(seq.best.ce.to_bits(), batched.best.ce.to_bits());
+        assert_eq!(seq.transforms.len(), batched.transforms.len());
+        for (a, b) in seq.transforms.iter().zip(&batched.transforms) {
+            assert_eq!(a, b);
+        }
+    }
+
+    /// With K > 1 the accepted loss must stay monotone non-increasing: the
+    /// survivors' re-scoring pass keeps every committed loss exact.
+    #[test]
+    fn batched_rounds_keep_loss_monotone() {
+        let mut obj = SynthObjective::new(6, 8);
+        let mut state = SearchState::new(6, 8, 11);
+        run_rounds(&mut obj, &mut state, &cfg(), 240, 4).unwrap();
+        assert_eq!(state.telemetry.len(), 240);
+        let losses: Vec<f64> = state.telemetry.iter().map(|r| r.loss_total).collect();
+        for w in losses.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "loss increased: {} -> {}", w[0], w[1]);
+        }
+        assert!(losses.last().unwrap() < &(losses[0] * 0.5), "insufficient progress");
+        assert!(state.accepts > 10);
+        // best must equal the objective's actual committed state
+        assert!((state.best.ce - obj.current_total()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batched_rounds_deterministic_given_seed() {
+        let run = |seed| {
+            let mut obj = SynthObjective::new(5, 8);
+            let mut state = SearchState::new(5, 8, seed);
+            run_rounds(&mut obj, &mut state, &cfg(), 120, 4).unwrap();
+            (state.best.ce, state.accepts)
+        };
+        assert_eq!(run(5), run(5));
+        assert_ne!(run(5), run(6));
+    }
+
+    /// Delegating wrapper that records the layer set of every draft batch.
+    struct Recording {
+        inner: SynthObjective,
+        batches: RefCell<Vec<Vec<usize>>>,
+    }
+
+    impl Objective for Recording {
+        fn n_layers(&self) -> usize {
+            self.inner.n_layers()
+        }
+        fn d_ffn(&self) -> usize {
+            self.inner.d_ffn()
+        }
+        fn init(&mut self) -> crate::Result<Loss> {
+            self.inner.init()
+        }
+        fn draft(&self, reqs: &[DraftRequest]) -> crate::Result<Vec<Draft>> {
+            self.batches.borrow_mut().push(reqs.iter().map(|r| r.layer).collect());
+            self.inner.draft(reqs)
+        }
+        fn eval_drafts(&mut self, drafts: &[Draft]) -> crate::Result<Vec<Loss>> {
+            self.inner.eval_drafts(drafts)
+        }
+        fn commit(&mut self, draft: Draft) -> crate::Result<Loss> {
+            self.inner.commit(draft)
+        }
+    }
+
+    #[test]
+    fn rounds_draft_distinct_layers_and_clamp_to_layer_count() {
+        let mut obj = Recording {
+            inner: SynthObjective::new(3, 8),
+            batches: RefCell::new(Vec::new()),
+        };
+        let mut state = SearchState::new(3, 8, 2);
+        // k = 8 > n_layers = 3: rounds must clamp to 3 distinct layers
+        run_rounds(&mut obj, &mut state, &cfg(), 31, 8).unwrap();
+        assert_eq!(state.telemetry.len(), 31);
+        let batches = obj.batches.borrow();
+        assert!(!batches.is_empty());
+        let mut proposals = 0;
+        for b in batches.iter() {
+            assert!(b.len() <= 3, "round exceeded layer count: {b:?}");
+            let mut sorted = b.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), b.len(), "layers not distinct: {b:?}");
+            proposals += b.len();
+        }
+        assert!(proposals >= 31, "drafted fewer proposals than steps");
+    }
+
+    #[test]
+    fn run_dispatches_on_batch_config() {
+        let steps = 60;
+        let via_dispatch = {
+            let mut obj = SynthObjective::new(3, 8);
+            let mut state = SearchState::new(3, 8, 4);
+            run(&mut obj, &mut state, &cfg(), steps).unwrap(); // batch = 1
+            (state.best.ce, state.accepts)
+        };
+        let via_sequential = {
+            let mut obj = SynthObjective::new(3, 8);
+            let mut state = SearchState::new(3, 8, 4);
+            run_steps(&mut obj, &mut state, &cfg(), steps).unwrap();
+            (state.best.ce, state.accepts)
+        };
+        assert_eq!(via_dispatch, via_sequential);
+
+        let batched_cfg = SearchConfig { batch: 3, ..cfg() };
+        let mut obj = SynthObjective::new(3, 8);
+        let mut state = SearchState::new(3, 8, 4);
+        run(&mut obj, &mut state, &batched_cfg, steps).unwrap();
+        assert_eq!(state.telemetry.len(), steps);
+    }
+}

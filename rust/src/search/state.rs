@@ -27,6 +27,11 @@ pub struct SearchState {
     pub rng: Pcg64,
     pub best: Loss,
     pub alpha: f64,
+    /// Has `Objective::init` run for this state?  Explicit flag — `best.ce`
+    /// finiteness is NOT a reliable sentinel (a 2-bit model can legitimately
+    /// start at a non-finite CE, which must not re-trigger init on every
+    /// `run_steps` segment).
+    pub initialized: bool,
     pub step: usize,
     pub accepts: usize,
     pub telemetry: Vec<StepRecord>,
@@ -40,6 +45,7 @@ impl SearchState {
             rng: Pcg64::new(seed),
             best: Loss { ce: f64::INFINITY, act_mse: 0.0 },
             alpha: 0.0,
+            initialized: false,
             step: 0,
             accepts: 0,
             telemetry: Vec::new(),
@@ -62,6 +68,7 @@ impl SearchState {
             .set("step", self.step)
             .set("accepts", self.accepts)
             .set("alpha", self.alpha)
+            .set("initialized", self.initialized)
             .set("best_ce", self.best.ce)
             .set("best_act_mse", self.best.act_mse)
             .set(
@@ -99,6 +106,11 @@ impl SearchState {
             ce: j.req("best_ce")?.as_f64().unwrap_or(f64::INFINITY),
             act_mse: j.req("best_act_mse")?.as_f64().unwrap_or(0.0),
         };
+        // pre-flag checkpoints fall back to the old (finite-CE) heuristic
+        st.initialized = j
+            .get("initialized")
+            .and_then(Json::as_bool)
+            .unwrap_or(st.best.ce.is_finite());
         Ok(st)
     }
 
@@ -153,6 +165,19 @@ mod tests {
         assert_eq!(back.accepts, 17);
         assert_eq!(back.transforms[1].perm, st.transforms[1].perm);
         assert!((back.best.ce - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn initialized_flag_roundtrips_even_with_non_finite_ce() {
+        let mut st = SearchState::new(1, 4, 0);
+        st.initialized = true;
+        st.best = Loss { ce: f64::INFINITY, act_mse: 0.0 }; // legit at 2-bit
+        let dir = std::env::temp_dir().join("invarexplore_state_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("inf.json");
+        st.save(&p).unwrap();
+        let back = SearchState::load(&p, 0).unwrap();
+        assert!(back.initialized, "flag lost on a non-finite-CE checkpoint");
     }
 
     #[test]

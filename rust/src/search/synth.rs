@@ -1,0 +1,209 @@
+//! Synthetic, XLA-free [`Objective`] for driver tests and throughput
+//! benches.
+//!
+//! Loss = Σ per-layer potentials; a layer's potential improves when its
+//! scale vector approaches a hidden optimum.  Deterministic, no PJRT.  The
+//! `draft_work` knob adds a configurable amount of real host-side
+//! re-quantization work per draft (the codec the XLA objective runs per
+//! proposal), so `benches/perf_hotpath.rs` can measure how K-wide rounds
+//! hide per-candidate drafting latency.
+
+use std::collections::HashMap;
+
+use super::hillclimb::{Draft, DraftRequest, Objective};
+use crate::quant::{self, QuantScheme};
+use crate::runtime::Loss;
+use crate::tensor::Tensor;
+use crate::util::pool;
+use crate::util::rng::Pcg64;
+
+pub struct SynthObjective {
+    n_layers: usize,
+    d: usize,
+    target: Vec<Vec<f32>>,
+    current: Vec<Vec<f32>>,
+    /// Pending losses of the last `eval_drafts` batch, keyed by layer.
+    pending: HashMap<usize, Loss>,
+    /// Elements of synthetic groupwise fake-quant run per draft (0 = none).
+    pub draft_work: usize,
+}
+
+impl SynthObjective {
+    pub fn new(n_layers: usize, d: usize) -> SynthObjective {
+        let mut rng = Pcg64::new(99);
+        let target = (0..n_layers)
+            .map(|_| (0..d).map(|_| (rng.uniform() as f32) * 2.0 + 0.5).collect())
+            .collect();
+        SynthObjective {
+            n_layers,
+            d,
+            target,
+            current: vec![vec![1.0; d]; n_layers],
+            pending: HashMap::new(),
+            draft_work: 0,
+        }
+    }
+
+    /// Like [`SynthObjective::new`] with `elems` of fake-quant work per
+    /// draft (rounded up to whole 64-wide groups).
+    pub fn with_draft_work(n_layers: usize, d: usize, elems: usize) -> SynthObjective {
+        let mut o = SynthObjective::new(n_layers, d);
+        o.draft_work = elems;
+        o
+    }
+
+    fn layer_loss(&self, l: usize, s: &[f32]) -> f64 {
+        s.iter()
+            .zip(&self.target[l])
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum()
+    }
+
+    fn total_with(&self, l: usize, s: &[f32]) -> Loss {
+        let mut ce = 0.0;
+        for i in 0..self.n_layers {
+            ce += if i == l {
+                self.layer_loss(i, s)
+            } else {
+                self.layer_loss(i, &self.current[i])
+            };
+        }
+        Loss { ce, act_mse: 0.0 }
+    }
+
+    /// Current accepted total loss (test hook).
+    pub fn current_total(&self) -> f64 {
+        (0..self.n_layers).map(|l| self.layer_loss(l, &self.current[l])).sum()
+    }
+
+    /// The configurable host-side drafting cost: a groupwise fake-quant
+    /// pass over a tensor seeded from the proposal's scale vector.
+    fn burn(&self, req: &DraftRequest) {
+        if self.draft_work == 0 {
+            return;
+        }
+        let cols = 64;
+        let rows = self.draft_work.div_ceil(cols).max(1);
+        let scale = &req.transform.scale;
+        let data: Vec<f32> = (0..rows * cols)
+            .map(|i| scale[i % scale.len()] * ((i % 17) as f32 - 8.0))
+            .collect();
+        let t = Tensor::from_vec(rows, cols, data);
+        std::hint::black_box(quant::fake_quant(&t, QuantScheme::new(2, 64)));
+    }
+}
+
+impl Objective for SynthObjective {
+    fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    fn d_ffn(&self) -> usize {
+        self.d
+    }
+
+    fn init(&mut self) -> crate::Result<Loss> {
+        Ok(self.total_with(0, &self.current[0].clone()))
+    }
+
+    fn draft(&self, reqs: &[DraftRequest]) -> crate::Result<Vec<Draft>> {
+        let threads = pool::num_threads().min(reqs.len().max(1));
+        Ok(pool::parallel_map(reqs.len(), threads, |i| {
+            self.burn(&reqs[i]);
+            Draft {
+                layer: reqs[i].layer,
+                transform: reqs[i].transform.clone(),
+                payload: Box::new(()),
+            }
+        }))
+    }
+
+    fn eval_drafts(&mut self, drafts: &[Draft]) -> crate::Result<Vec<Loss>> {
+        self.pending.clear();
+        let mut out = Vec::with_capacity(drafts.len());
+        for d in drafts {
+            anyhow::ensure!(d.layer < self.n_layers, "draft layer out of range");
+            let loss = self.total_with(d.layer, &d.transform.scale);
+            anyhow::ensure!(
+                self.pending.insert(d.layer, loss).is_none(),
+                "duplicate draft for layer {}",
+                d.layer
+            );
+            out.push(loss);
+        }
+        Ok(out)
+    }
+
+    fn commit(&mut self, draft: Draft) -> crate::Result<Loss> {
+        let loss = self
+            .pending
+            .get(&draft.layer)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("commit without a pending eval for layer {}", draft.layer))?;
+        self.current[draft.layer] = draft.transform.scale;
+        // committing invalidates every other pending of the batch
+        self.pending.clear();
+        Ok(loss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transform::{LayerTransform, TransformKinds};
+
+    fn proposal(d: usize, seed: u64) -> LayerTransform {
+        let mut rng = Pcg64::new(seed);
+        LayerTransform::identity(d).propose(
+            &mut rng,
+            TransformKinds::parse("s").unwrap(),
+            0.5,
+            0.4,
+            0.0,
+        )
+    }
+
+    #[test]
+    fn commit_requires_prior_eval() {
+        let mut obj = SynthObjective::new(2, 8);
+        obj.init().unwrap();
+        let req = DraftRequest { layer: 0, transform: proposal(8, 1) };
+        let one_draft = |obj: &SynthObjective| {
+            obj.draft(std::slice::from_ref(&req)).unwrap().pop().unwrap()
+        };
+        assert!(obj.commit(one_draft(&obj)).is_err(), "commit before eval must fail");
+        let mut drafts = obj.draft(std::slice::from_ref(&req)).unwrap();
+        let losses = obj.eval_drafts(&drafts).unwrap();
+        let committed = obj.commit(drafts.swap_remove(0)).unwrap();
+        assert_eq!(losses[0], committed);
+        // second commit after the batch was committed: pendings invalidated
+        assert!(obj.commit(one_draft(&obj)).is_err());
+    }
+
+    #[test]
+    fn eval_scores_candidates_independently() {
+        let mut obj = SynthObjective::new(3, 8);
+        obj.init().unwrap();
+        let reqs: Vec<DraftRequest> = (0..3)
+            .map(|l| DraftRequest { layer: l, transform: proposal(8, 10 + l as u64) })
+            .collect();
+        let drafts = obj.draft(&reqs).unwrap();
+        let batch = obj.eval_drafts(&drafts).unwrap();
+        // one-at-a-time scoring must agree: candidates never see each other
+        for (i, d) in drafts.iter().enumerate() {
+            let single = obj.eval_drafts(std::slice::from_ref(d)).unwrap();
+            assert_eq!(single[0], batch[i], "candidate {i} not independent");
+        }
+    }
+
+    #[test]
+    fn draft_work_burns_deterministically() {
+        let obj = SynthObjective::with_draft_work(2, 8, 4096);
+        let reqs: Vec<DraftRequest> =
+            (0..2).map(|l| DraftRequest { layer: l, transform: proposal(8, l as u64) }).collect();
+        let a = obj.draft(&reqs).unwrap();
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0].layer, 0);
+        assert_eq!(a[1].layer, 1);
+    }
+}

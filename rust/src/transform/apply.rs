@@ -92,6 +92,29 @@ fn rotate_cols(t: &mut Tensor, i: usize, j: usize, c: f32, s: f32) {
     }
 }
 
+/// Apply many `(layer, transform)` pairs to `base` concurrently, returning
+/// the transformed `(W̄_up, b̄_up, W̄_down)` triple per request in order.
+///
+/// Borrow-friendly: `base` and the transforms are shared immutably across
+/// the worker threads of [`crate::util::pool::parallel_map`] (scoped
+/// threads, no `'static` bound), which is what lets the batched proposal
+/// scheduler draft K candidates without cloning the weight set.
+pub fn apply_batch(
+    base: &Weights,
+    reqs: &[(usize, &LayerTransform)],
+) -> Vec<(Tensor, Tensor, Tensor)> {
+    let threads = crate::util::pool::num_threads().min(reqs.len().max(1));
+    crate::util::pool::parallel_map(reqs.len(), threads, |i| {
+        let (l, t) = reqs[i];
+        apply_to_tensors(
+            t,
+            base.layer(l, "up.w"),
+            base.layer(l, "up.b"),
+            base.layer(l, "down.w"),
+        )
+    })
+}
+
 /// Apply a transform to layer `l` of `base` (the untouched FP weights),
 /// writing the transformed tensors into `out`.  `base` and `out` may be the
 /// same model content-wise; `out` is overwritten at `l{l}.{up.w,up.b,down.w}`.
@@ -286,6 +309,39 @@ mod tests {
         let (_, _, wd2) = apply_to_tensors(&t, &wu, &bu, &wd);
         let e1 = wd2.mse(&fake_quant(&wd2, scheme));
         assert!((e0 - e1).abs() / e0 > 1e-4, "quant error unchanged: {e0} vs {e1}");
+    }
+
+    #[test]
+    fn apply_batch_matches_sequential_application() {
+        let cfg = OptConfig::test_config();
+        let base = Weights::random(cfg.clone(), 21);
+        let mut rng = Pcg64::new(22);
+        let transforms: Vec<LayerTransform> = (0..cfg.n_layers)
+            .map(|_| {
+                LayerTransform::identity(cfg.d_ffn).propose(
+                    &mut rng,
+                    TransformKinds::all(),
+                    0.3,
+                    0.1,
+                    1e-3,
+                )
+            })
+            .collect();
+        let reqs: Vec<(usize, &LayerTransform)> =
+            transforms.iter().enumerate().collect();
+        let batch = apply_batch(&base, &reqs);
+        assert_eq!(batch.len(), cfg.n_layers);
+        for (l, t) in transforms.iter().enumerate() {
+            let (wu, bu, wd) = apply_to_tensors(
+                t,
+                base.layer(l, "up.w"),
+                base.layer(l, "up.b"),
+                base.layer(l, "down.w"),
+            );
+            assert_eq!(batch[l].0, wu, "layer {l} W_up mismatch");
+            assert_eq!(batch[l].1, bu, "layer {l} b_up mismatch");
+            assert_eq!(batch[l].2, wd, "layer {l} W_down mismatch");
+        }
     }
 
     #[test]

@@ -7,5 +7,5 @@
 pub mod apply;
 pub mod state;
 
-pub use apply::{apply_to_layer, apply_to_tensors};
+pub use apply::{apply_batch, apply_to_layer, apply_to_tensors};
 pub use state::{LayerTransform, TransformKinds};

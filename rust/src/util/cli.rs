@@ -5,6 +5,18 @@
 
 use std::collections::BTreeMap;
 
+/// Parse an environment-variable override: `None` when the variable is
+/// unset or fails to parse.  The crate-wide pattern for tuning knobs
+/// (`INVAREXPLORE_THREADS`, `INVAREXPLORE_SIGMA_R`, …).
+pub fn env_parse<T: std::str::FromStr>(name: &str) -> Option<T> {
+    std::env::var(name).ok().and_then(|v| v.parse().ok())
+}
+
+/// Env override with a fallback default.
+pub fn env_override<T: std::str::FromStr>(name: &str, default: T) -> T {
+    env_parse(name).unwrap_or(default)
+}
+
 /// Declarative option spec for one subcommand.
 pub struct ArgSpec {
     pub name: &'static str,
@@ -162,5 +174,23 @@ mod tests {
     fn usage_mentions_options() {
         let u = usage(&spec());
         assert!(u.contains("--model") && u.contains("default: opt-base"));
+    }
+
+    #[test]
+    fn env_override_roundtrip() {
+        // unique variable names: tests run concurrently in one process
+        std::env::remove_var("INVAREXPLORE_TEST_ENV_A");
+        assert_eq!(env_parse::<f64>("INVAREXPLORE_TEST_ENV_A"), None);
+        assert_eq!(env_override("INVAREXPLORE_TEST_ENV_A", 0.25f64), 0.25);
+
+        std::env::set_var("INVAREXPLORE_TEST_ENV_B", "42");
+        assert_eq!(env_parse::<usize>("INVAREXPLORE_TEST_ENV_B"), Some(42));
+        assert_eq!(env_override("INVAREXPLORE_TEST_ENV_B", 7usize), 42);
+
+        std::env::set_var("INVAREXPLORE_TEST_ENV_C", "not-a-number");
+        assert_eq!(env_parse::<f64>("INVAREXPLORE_TEST_ENV_C"), None);
+        assert_eq!(env_override("INVAREXPLORE_TEST_ENV_C", 1.5f64), 1.5);
+        std::env::remove_var("INVAREXPLORE_TEST_ENV_B");
+        std::env::remove_var("INVAREXPLORE_TEST_ENV_C");
     }
 }

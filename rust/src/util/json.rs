@@ -128,7 +128,11 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no inf/nan; readers treat null as "absent"
+                    // and fall back (e.g. search-state best_ce -> +inf)
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{n}"));
@@ -504,6 +508,16 @@ mod tests {
     fn integer_formatting() {
         assert_eq!(Json::Num(3.0).to_string(), "3");
         assert_eq!(Json::Num(3.5).to_string(), "3.5");
+    }
+
+    #[test]
+    fn non_finite_numbers_stay_parseable() {
+        // JSON has no inf/nan tokens; the writer must not emit them
+        for v in [f64::INFINITY, f64::NEG_INFINITY, f64::NAN] {
+            let text = Json::obj().set("x", v).to_string();
+            let back = parse(&text).unwrap();
+            assert_eq!(back.get("x").unwrap(), &Json::Null);
+        }
     }
 
     #[test]

@@ -6,9 +6,8 @@
 //! stdout stays machine-readable.
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::LazyLock;
 use std::time::Instant;
-
-use once_cell::sync::Lazy;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
@@ -20,7 +19,7 @@ pub enum Level {
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(2);
-static START: Lazy<Instant> = Lazy::new(Instant::now);
+static START: LazyLock<Instant> = LazyLock::new(Instant::now);
 
 /// Initialise from the environment; safe to call multiple times.
 pub fn init() {
@@ -32,7 +31,7 @@ pub fn init() {
         _ => Level::Info,
     };
     set_level(lvl);
-    Lazy::force(&START);
+    LazyLock::force(&START);
 }
 
 pub fn set_level(lvl: Level) {

@@ -6,10 +6,8 @@
 
 /// Number of worker threads to use (env override `INVAREXPLORE_THREADS`).
 pub fn num_threads() -> usize {
-    if let Ok(v) = std::env::var("INVAREXPLORE_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
-        }
+    if let Some(n) = crate::util::cli::env_parse::<usize>("INVAREXPLORE_THREADS") {
+        return n.max(1);
     }
     std::thread::available_parallelism()
         .map(|n| n.get())
@@ -171,4 +169,77 @@ mod tests {
     fn num_threads_positive() {
         assert!(num_threads() >= 1);
     }
+
+    // -- property tests: the batched proposal scheduler leans on the unsafe
+    //    slot-pointer internals, so pin the contract down hard. ------------
+
+    #[test]
+    fn prop_map_matches_sequential_for_any_geometry() {
+        crate::util::propcheck::check("parallel_map ≡ sequential map", 48, |rng| {
+            let n = rng.below(65); // includes n == 0
+            let threads = 1 + rng.below(16); // includes n < threads
+            let salt = rng.next_u64();
+            let out = parallel_map(n, threads, |i| (i as u64).wrapping_mul(salt) ^ i as u64);
+            let expect: Vec<u64> =
+                (0..n).map(|i| (i as u64).wrapping_mul(salt) ^ i as u64).collect();
+            crate::util::propcheck::ensure(
+                out == expect,
+                format!("mismatch at n={n} threads={threads}"),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_map_order_with_uneven_worker_costs() {
+        crate::util::propcheck::check("ordering under work-stealing imbalance", 8, |rng| {
+            let n = 16 + rng.below(17);
+            let slow = rng.below(n);
+            let out = parallel_map(n, 4, |i| {
+                if i == slow {
+                    std::thread::sleep(std::time::Duration::from_millis(3));
+                }
+                i
+            });
+            crate::util::propcheck::ensure(
+                out == (0..n).collect::<Vec<_>>(),
+                format!("order broken with slow item {slow}"),
+            )
+        });
+    }
+
+    #[test]
+    fn map_fewer_items_than_threads() {
+        // threads are clamped to n; every slot still filled exactly once
+        for n in 1..5 {
+            let out = parallel_map(n, 16, |i| i * 3);
+            assert_eq!(out, (0..n).map(|i| i * 3).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn map_zero_items_spawns_nothing() {
+        let out: Vec<usize> = parallel_map(0, 8, |_| panic!("worker must not run"));
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn map_worker_panic_propagates() {
+        // a panicking worker must unwind out of parallel_map (scope joins all
+        // threads first), not dead-lock or silently drop slots
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            parallel_map(32, 4, |i| {
+                if i == 17 {
+                    panic!("worker bug");
+                }
+                i
+            })
+        }));
+        assert!(result.is_err(), "worker panic was swallowed");
+    }
+
+    // NOTE: no set_var-based test for INVAREXPLORE_THREADS here — other
+    // unit tests read that variable concurrently through num_threads(),
+    // and mutating the process environment mid-test-run is a race (and
+    // getenv/setenv UB on glibc).  The parse-and-clamp behavior is covered
+    // via util::cli::env_parse's own tests on dedicated variable names.
 }

@@ -7,7 +7,7 @@ use invarexplore::baselines::{self, Method};
 use invarexplore::calib::CalibSet;
 use invarexplore::coordinator::{PipelineOpts, SearchRun, Session};
 use invarexplore::quant::QuantScheme;
-use invarexplore::search::Objective;
+use invarexplore::search;
 use invarexplore::transform::TransformKinds;
 
 fn session() -> Option<Session> {
@@ -151,9 +151,9 @@ fn accepted_transforms_preserve_fp_invariance() {
 }
 
 #[test]
-fn objective_reject_restores_state_exactly() {
-    // try a proposal, reject it, and verify a full re-eval equals the
-    // accepted loss (buffer restore is exact).
+fn probed_proposals_restore_state_exactly() {
+    // draft + evaluate a proposal without committing, and verify a full
+    // re-eval equals the accepted loss (buffer restore is exact).
     let Some(session) = session() else { return };
     let opts = base_opts("opt-tiny", Method::Awq);
     let mut run = SearchRun::build(&session, &opts).unwrap();
@@ -167,14 +167,75 @@ fn objective_reject_restores_state_exactly() {
         0.05,
         1e-4,
     );
-    let _ = run.obj.try_layer(0, &proposal).unwrap();
-    run.obj.reject().unwrap();
+    let _ = search::probe(&mut run.obj, 0, &proposal).unwrap();
     let after = run.obj.eval.full_eval().unwrap();
     assert!(
         (after.ce - before.ce).abs() < 1e-9 + before.ce * 1e-6,
-        "reject did not restore: {} vs {}",
+        "probe did not restore: {} vs {}",
         before.ce,
         after.ce
+    );
+}
+
+#[test]
+fn batched_rounds_match_sequential_at_k1_on_real_stack() {
+    // --batch 1 must reproduce the sequential search bit-for-bit on the
+    // full XLA objective: identical telemetry streams for a fixed seed.
+    let Some(session) = session() else { return };
+    let telem = |batch: usize| {
+        let mut o = base_opts("opt-tiny", Method::Rtn);
+        o.seed = 9;
+        o.batch = batch;
+        let mut run = SearchRun::build(&session, &o).unwrap();
+        run.init().unwrap();
+        run.steps(20).unwrap();
+        run.state
+    };
+    let seq = telem(1); // dispatches to the sequential driver
+    let k1 = {
+        // force the round engine at K = 1
+        let mut o = base_opts("opt-tiny", Method::Rtn);
+        o.seed = 9;
+        let mut run = SearchRun::build(&session, &o).unwrap();
+        run.init().unwrap();
+        search::run_rounds(&mut run.obj, &mut run.state, &run.cfg.clone(), 20, 1).unwrap();
+        run.state
+    };
+    assert_eq!(seq.telemetry.len(), k1.telemetry.len());
+    for (a, b) in seq.telemetry.iter().zip(&k1.telemetry) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.layer, b.layer);
+        assert_eq!(a.accepted, b.accepted);
+        assert_eq!(a.loss_total.to_bits(), b.loss_total.to_bits(), "step {}", a.step);
+        assert_eq!(a.ce.to_bits(), b.ce.to_bits());
+        assert_eq!(a.act_mse.to_bits(), b.act_mse.to_bits());
+    }
+    assert_eq!(seq.accepts, k1.accepts);
+}
+
+#[test]
+fn batched_rounds_improve_monotonically_on_real_stack() {
+    let Some(session) = session() else { return };
+    let mut o = base_opts("opt-tiny", Method::Rtn);
+    o.batch = 3;
+    let mut run = SearchRun::build(&session, &o).unwrap();
+    run.init().unwrap();
+    let init_loss = run.state.best.total(run.state.alpha);
+    run.steps(45).unwrap();
+    assert_eq!(run.state.telemetry.len(), 45);
+    let mut prev = f64::INFINITY;
+    for r in &run.state.telemetry {
+        assert!(r.loss_total <= prev + 1e-12, "loss increased under batching");
+        prev = r.loss_total;
+    }
+    assert!(run.state.best.total(run.state.alpha) <= init_loss);
+    // committed losses must be exact: a full re-eval reproduces best
+    let full = run.obj.eval.full_eval().unwrap();
+    assert!(
+        (full.ce - run.state.best.ce).abs() < 1e-9 + run.state.best.ce * 1e-6,
+        "accepted loss drifted from device state: {} vs {}",
+        run.state.best.ce,
+        full.ce
     );
 }
 
