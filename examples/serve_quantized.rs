@@ -1,23 +1,20 @@
-//! Serve a quantized model: batched greedy generation with the packed
-//! (deployment) weight format, reporting latency and throughput.
-//!
-//! Shows the deployment story end to end: the model is held in RAM in the
-//! bit-packed form (`quant::packed`, 1-bit codes + f16 group scales),
-//! unpacked tensor-by-tensor into the XLA engine, and served through the
-//! AOT `head_logits` program with full-context re-forward per token (no KV
-//! cache — honest about what this runtime implements).
+//! Serve a quantized model directly from the packed (deployment) weight
+//! format: the model stays bit-packed in RAM (`quant::packed`, 2-bit codes
+//! + f16 group scales), the decoder forward runs on the packed codes
+//! through the fused unpack→dequant→GEMV kernels, and each sequence decodes
+//! incrementally against its own KV cache (`serve::Server`) — no dense f32
+//! materialization of quantized linears and no full-context re-forward per
+//! token.
 //!
 //! ```text
 //! cargo run --release --example serve_quantized
 //! ```
 
-use std::time::Instant;
-
 use invarexplore::baselines::{self, Method};
 use invarexplore::calib::CalibSet;
 use invarexplore::coordinator::Session;
-use invarexplore::quant::{PackedTensor, QuantScheme};
-use invarexplore::runtime::Engine;
+use invarexplore::quant::QuantScheme;
+use invarexplore::serve::{Request, ServeOpts, Server};
 use invarexplore::util::rng::Pcg64;
 use invarexplore::util::sampling::Sampler;
 
@@ -33,88 +30,52 @@ fn main() -> anyhow::Result<()> {
     let calib = CalibSet::from_corpus(&pile, 16, session.manifest.seq);
     let prepared = baselines::prepare(Method::Awq, scheme, &w, &calib, None)?;
     let quantized = prepared.quantize_model(&prepared.fp, None);
-
-    let (packed, bytes) = prepared.pack_model(&quantized);
-    let total: usize = packed.iter().map(|(_, t)| t.rows * t.cols).sum();
+    let pm = prepared.packed_model(&quantized);
     println!(
-        "packed model: {:.2} MiB ({:.3} bits/param) for {} linear tensors",
-        bytes as f64 / (1 << 20) as f64,
-        bytes as f64 * 8.0 / total as f64,
-        packed.len()
+        "packed model: {:.2} MiB ({:.3} bits/param) for {} linear tensors, served as-is",
+        pm.packed_bytes() as f64 / (1 << 20) as f64,
+        pm.bits_per_param(),
+        pm.n_packed()
     );
 
-    // --- load: unpack packed codes into the engine ------------------------
-    let mut engine = Engine::load(&session.manifest, model)?;
-    engine.upload_weights(&prepared.fp)?; // embeddings/LN/biases stay FP
-    let t0 = Instant::now();
-    for (name, p) in &packed {
-        let dense = PackedTensor::unpack(p);
-        engine.update_tensor(name, &dense)?;
-    }
-    println!("unpack + upload: {:?}", t0.elapsed());
-
-    // --- serve: batched greedy generation ----------------------------------
-    let (b, t_max) = (engine.batch, engine.seq);
-    let wiki = session.corpus("wiki")?;
-    let prompt_len = 32;
+    // --- serve: batched generation with per-sequence KV caches ------------
+    let batch = 8;
+    let max_seq = pm.config().max_seq;
+    let prompt_len = usize::min(32, max_seq / 2);
     let gen_tokens = 24;
-    let prompts: Vec<Vec<i32>> = (0..b)
-        .map(|i| {
-            wiki.tokens[i * 200..i * 200 + prompt_len]
-                .iter()
-                .map(|&t| t as i32)
-                .collect()
-        })
-        .collect();
+    let wiki = session.corpus("wiki")?;
+    anyhow::ensure!(
+        wiki.tokens.len() > prompt_len,
+        "wiki corpus too small for a {prompt_len}-token prompt"
+    );
 
-    // half the batch decodes greedily, half with top-k sampling
-    let sampler_for = |i: usize| {
-        if i < b / 2 {
+    // SERVE_SAMPLER overrides decoding for the whole batch (greedy,
+    // temp:<t>, topk:<k>[:<t>]); default is half greedy / half top-k.
+    let override_sampler = match std::env::var("SERVE_SAMPLER") {
+        Ok(spec) => Some(Sampler::parse(&spec)?),
+        Err(_) => None,
+    };
+    let mut server = Server::new(&pm, ServeOpts { max_batch: batch, seed: 0 });
+    let mut rng = Pcg64::new(7);
+    for i in 0..batch {
+        // bounds-checked prompt sampling: any batch size works on any corpus
+        let start = rng.below(wiki.tokens.len() - prompt_len);
+        let prompt: Vec<i32> =
+            wiki.tokens[start..start + prompt_len].iter().map(|&t| t as i32).collect();
+        let sampler = override_sampler.unwrap_or(if i < batch / 2 {
             Sampler::Greedy
         } else {
             Sampler::TopK { k: 8, temperature: 0.8 }
-        }
-    };
-    let mut rng = Pcg64::new(0);
-    let mut seqs = prompts.clone();
-    let t0 = Instant::now();
-    let mut per_token = Vec::new();
-    for _ in 0..gen_tokens {
-        let t1 = Instant::now();
-        // pad each sequence to the compiled T
-        let cur_len = seqs[0].len();
-        let tokens: Vec<Vec<i32>> = seqs
-            .iter()
-            .map(|s| {
-                let mut padded = s.clone();
-                padded.resize(t_max, 0);
-                padded
-            })
-            .collect();
-        let targets = vec![vec![0i32; t_max]; b];
-        let mask = vec![vec![0f32; t_max]; b];
-        let batch = engine.upload_batch(&tokens, &targets, &mask)?;
-        let mut x = engine.embed(&batch)?;
-        for l in 0..engine.n_layers() {
-            x = engine.run_layer(l, &x)?;
-        }
-        let logits = engine.run_logits(&x)?; // [B*T, V]
-        for (s, seq) in seqs.iter_mut().enumerate() {
-            let row = logits.row(s * t_max + cur_len - 1);
-            let next = sampler_for(s).sample(row, &mut rng) as i32;
-            seq.push(next);
-        }
-        per_token.push(t1.elapsed());
+        });
+        server.submit(Request { id: i, prompt, max_new: gen_tokens, sampler });
     }
-    let elapsed = t0.elapsed();
-    let total_generated = b * gen_tokens;
-    let mean_ms = per_token.iter().map(|d| d.as_secs_f64()).sum::<f64>() / per_token.len() as f64 * 1e3;
-    println!(
-        "generated {total_generated} tokens in {elapsed:?}: {:.1} tok/s, {mean_ms:.1} ms/decode-step (batch {b})",
-        total_generated as f64 / elapsed.as_secs_f64()
-    );
-    for (i, s) in seqs.iter().take(2).enumerate() {
-        println!("sample {i}: ...{:?} -> {:?}", &s[prompt_len - 4..prompt_len], &s[prompt_len..prompt_len + 8]);
+
+    let (completions, stats) = server.run();
+    println!("{}", stats.summary());
+    for c in completions.iter().take(2) {
+        let tail = &c.prompt[c.prompt.len().saturating_sub(4)..];
+        let head = &c.generated[..c.generated.len().min(8)];
+        println!("sample {}: ...{tail:?} -> {head:?}", c.id);
     }
     Ok(())
 }

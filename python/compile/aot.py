@@ -216,7 +216,9 @@ class ProgramEmitter:
 
 def build_manifest(artifacts_dir: str, sizes: list[str]) -> dict:
     manifest: dict = {
-        "version": 1,
+        # version 2: zero-point clamped into [0, qmax] in the quantization
+        # kernels (keep in sync with rust/src/io/manifest.rs MANIFEST_VERSION)
+        "version": 2,
         "batch": {"B": BATCH, "T": SEQ},
         "quant_bits": list(QUANT_BITS),
         "quant_groups": list(QUANT_GROUPS),

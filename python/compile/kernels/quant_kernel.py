@@ -39,7 +39,7 @@ def _fake_quant_block(w_ref, o_ref, *, qmax: float):
     mn = jnp.min(w, axis=1, keepdims=True)
     rng = mx - mn
     scale = jnp.where(rng > 0, rng / qmax, 1.0)
-    zero = jnp.floor(-mn / scale + 0.5)
+    zero = jnp.clip(jnp.floor(-mn / scale + 0.5), 0.0, qmax)
     q = jnp.floor(w / scale + 0.5) + zero
     q = jnp.clip(q, 0.0, qmax)
     o_ref[...] = scale * (q - zero)

@@ -11,9 +11,14 @@ Conventions (shared with the Rust side — keep in sync!):
   elements along the *input* dimension (``in % group == 0``);
 * unsigned integer range ``q in [0, 2^bits - 1]`` (q_min = 0);
 * ``s_g = (max - min) / q_max``; degenerate groups (max == min) use
-  ``s_g = 1.0`` so a constant group dequantizes to ``round(c)``;
+  ``s_g = 1.0`` so a constant group dequantizes to ``round(c)`` saturated
+  into ``[-q_max, q_max]`` (the zero-point clamp caps how far from 0 a
+  constant group can reach);
 * rounding is ``floor(x + 0.5)`` (round-half-up) — NOT banker's rounding —
-  because ``f32::floor(x + 0.5)`` is what the Rust codec computes.
+  because ``f32::floor(x + 0.5)`` is what the Rust codec computes;
+* the zero-point is clamped into ``[0, q_max]`` so it always fits the
+  bit-packed deployment storage (``rust/src/quant/packed.rs`` stores zeros
+  in ``bits`` bits; single-sign groups would otherwise overflow it).
 """
 
 import jax.numpy as jnp
@@ -41,7 +46,7 @@ def quant_params_ref(w, bits: int, group: int):
     mn = wg.min(axis=-1)
     rng = mx - mn
     scale = jnp.where(rng > 0, rng / qmax, 1.0)
-    zero = round_half_up(-mn / scale)
+    zero = jnp.clip(round_half_up(-mn / scale), 0.0, qmax)
     return scale, zero
 
 

@@ -209,7 +209,8 @@ fn gptq_block(w: &mut Tensor, hs: &[f64], a: usize, len: usize, scheme: QuantSch
                 }
                 let range = mx - mn;
                 scale[r] = if range > 0.0 { range / qmax } else { 1.0 };
-                zero[r] = round_half_up(-mn / scale[r]);
+                // packable-zero clamp, matching quant::group::quantize
+                zero[r] = round_half_up(-mn / scale[r]).clamp(0.0, qmax);
             }
         }
         let d = hinv[j * len + j].max(1e-12);
@@ -252,7 +253,7 @@ fn plain_quant_span(w: &mut Tensor, a: usize, len: usize, scheme: QuantScheme) {
             }
             let range = mx - mn;
             let scale = if range > 0.0 { range / qmax } else { 1.0 };
-            let zero = round_half_up(-mn / scale);
+            let zero = round_half_up(-mn / scale).clamp(0.0, qmax);
             for (i, &v) in seg.iter().enumerate() {
                 let q = (round_half_up(v / scale) + zero).clamp(0.0, qmax);
                 w.set(r, g0 + i, scale * (q - zero));

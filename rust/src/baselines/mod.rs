@@ -145,6 +145,14 @@ impl Prepared {
         }
         (out, bytes)
     }
+
+    /// Deployment serving form: the packed linears of `weights` plus this
+    /// method's preprocessed FP weights for everything else — ready to
+    /// serve through [`crate::serve::Server`] without densifying.
+    pub fn packed_model(&self, weights: &Weights) -> crate::serve::PackedModel {
+        let (packed, _) = self.pack_model(weights);
+        crate::serve::PackedModel::new(self.fp.clone(), packed)
+    }
 }
 
 /// Prepare a model for quantization under `method`.
@@ -239,5 +247,17 @@ mod tests {
         assert_eq!(packed.len(), w.quant_names().len());
         let fp_bytes: usize = w.quant_names().iter().map(|n| w.get(n).numel() * 2).sum();
         assert!(bytes < fp_bytes / 4, "packed {bytes} vs fp16 {fp_bytes}");
+    }
+
+    #[test]
+    fn packed_model_plumbs_into_serving() {
+        let (w, calib) = test_setup();
+        let p = prepare(Method::Rtn, QuantScheme::new(2, 32), &w, &calib, None).unwrap();
+        let quantized = p.quantize_model(&p.fp, None);
+        let pm = p.packed_model(&quantized);
+        assert_eq!(pm.n_packed(), w.quant_names().len());
+        assert!(pm.bits_per_param() < 4.0);
+        // non-quantized params come from the prepared FP weights
+        assert_eq!(pm.unpacked_weights().get("emb"), p.fp.get("emb"));
     }
 }

@@ -10,6 +10,12 @@ use std::path::{Path, PathBuf};
 use crate::model::config::OptConfig;
 use crate::util::json::{self, Json};
 
+/// Expected manifest version.  Version 2 = zero-point-clamped quantization
+/// codec (PR 2): HLO programs compiled from the earlier unclamped Pallas
+/// kernel silently disagree with the host codec on single-sign groups, so
+/// older artifact trees are rejected with a regenerate hint.
+pub const MANIFEST_VERSION: usize = 2;
+
 /// One HLO program's signature.
 #[derive(Debug, Clone)]
 pub struct ProgramInfo {
@@ -98,6 +104,12 @@ impl Manifest {
     }
 
     pub fn from_json(root: &Json, dir: &Path) -> crate::Result<Manifest> {
+        let version = root.req("version")?.as_usize().unwrap_or(0);
+        anyhow::ensure!(
+            version == MANIFEST_VERSION,
+            "artifacts manifest version {version} != expected {MANIFEST_VERSION}: \
+             the quantization codec changed (zero-point clamp); rerun `make artifacts`"
+        );
         let batch_obj = root.req("batch")?;
         let batch = batch_obj.req("B")?.as_usize().unwrap();
         let seq = batch_obj.req("T")?.as_usize().unwrap();
@@ -204,7 +216,7 @@ mod tests {
     use super::*;
 
     const SAMPLE: &str = r#"{
-      "version": 1,
+      "version": 2,
       "batch": {"B": 8, "T": 128},
       "quant_bits": [1, 2],
       "quant_groups": [32],
@@ -248,5 +260,16 @@ mod tests {
     #[test]
     fn quant_program_name_format() {
         assert_eq!(Manifest::quant_program_name(512, 128, 2, 64), "quant_512x128_2b64");
+    }
+
+    #[test]
+    fn stale_manifest_version_rejected() {
+        // artifacts compiled before the zero-point clamp carry version 1;
+        // loading them must fail loudly instead of silently diverging from
+        // the host codec on single-sign groups
+        let stale = SAMPLE.replace("\"version\": 2", "\"version\": 1");
+        let root = json::parse(&stale).unwrap();
+        let err = Manifest::from_json(&root, Path::new("/art")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
     }
 }

@@ -35,6 +35,7 @@ pub mod model;
 pub mod quant;
 pub mod runtime;
 pub mod search;
+pub mod serve;
 pub mod tensor;
 pub mod transform;
 pub mod util;

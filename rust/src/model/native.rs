@@ -13,7 +13,14 @@
 //! XLA artifacts (see [`crate::runtime`]).  Sequences in a batch are
 //! independent (causal attention within each sequence), so the batch loop
 //! parallelizes over the thread pool.
+//!
+//! 3. **Serving substrate** (PR 2) — the incremental-decode path
+//!    ([`KvCache`], [`prefill`], [`decode_step`]) that [`crate::serve`]
+//!    drives, abstracted over [`DecoderParams`] so the same forward runs on
+//!    dense [`Weights`] or directly on the bit-packed deployment form
+//!    ([`crate::serve::PackedModel`]) without densifying it.
 
+use super::config::OptConfig;
 use super::Weights;
 use crate::tensor::ops::{self, layer_norm, linear, log_prob_at, relu, softmax_rows};
 use crate::tensor::Tensor;
@@ -286,6 +293,202 @@ fn block(w: &Weights, l: usize, x: &Tensor, cap: bool) -> (Tensor, Option<LayerI
     (x2, captured)
 }
 
+// ---------------------------------------------------------------------------
+// Incremental decoding (the serving path)
+// ---------------------------------------------------------------------------
+
+/// Parameter source for the incremental decoder forward: dense [`Weights`]
+/// or the packed deployment form.  `Sync` so independent sequences can
+/// decode in parallel against one shared parameter set.
+pub trait DecoderParams: Sync {
+    fn config(&self) -> &OptConfig;
+    /// Dense named tensor (embeddings, positions, LayerNorm params, biases).
+    fn dense(&self, name: &str) -> &Tensor;
+    /// `x @ W^T + b` for the layer-`l` linear `base` ∈ {q, k, v, o, up, down}.
+    fn linear(&self, l: usize, base: &str, x: &Tensor) -> Tensor;
+}
+
+impl DecoderParams for Weights {
+    fn config(&self) -> &OptConfig {
+        &self.config
+    }
+
+    fn dense(&self, name: &str) -> &Tensor {
+        self.get(name)
+    }
+
+    fn linear(&self, l: usize, base: &str, x: &Tensor) -> Tensor {
+        let w = self.layer(l, &format!("{base}.w"));
+        let b = self.layer(l, &format!("{base}.b"));
+        linear(x, w, &b.data)
+    }
+}
+
+/// Per-sequence key/value cache: one `[max_seq, d_model]` K and V store per
+/// layer, with the first `len` positions valid.  Feeding tokens through
+/// [`forward_cached`] appends to it, so each new token costs O(len) instead
+/// of the O(len²) full-context re-forward the serve example used to do.
+pub struct KvCache {
+    k: Vec<Tensor>,
+    v: Vec<Tensor>,
+    len: usize,
+    max_seq: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &OptConfig) -> KvCache {
+        KvCache {
+            k: (0..cfg.n_layers).map(|_| Tensor::zeros(cfg.max_seq, cfg.d_model)).collect(),
+            v: (0..cfg.n_layers).map(|_| Tensor::zeros(cfg.max_seq, cfg.d_model)).collect(),
+            len: 0,
+            max_seq: cfg.max_seq,
+        }
+    }
+
+    /// Number of cached positions.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Positions left before the compiled context length is exhausted.
+    pub fn remaining(&self) -> usize {
+        self.max_seq - self.len
+    }
+
+    /// Reset for a new sequence (buffers are reused, not reallocated).
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+}
+
+/// Feed `tokens` as positions `cache.len()..cache.len() + tokens.len()`,
+/// appending their K/V to the cache; returns the logits of the *last* fed
+/// position (`[vocab]`).  One entry point covers both prompt prefill (many
+/// tokens) and incremental decode (one token).
+pub fn forward_cached<P: DecoderParams + ?Sized>(
+    p: &P,
+    cache: &mut KvCache,
+    tokens: &[i32],
+) -> Vec<f32> {
+    let cfg = p.config();
+    let t_new = tokens.len();
+    assert!(t_new > 0, "forward_cached: empty token chunk");
+    let p0 = cache.len;
+    assert!(
+        p0 + t_new <= cache.max_seq,
+        "KV cache overflow: {p0} cached + {t_new} new > max_seq {}",
+        cache.max_seq
+    );
+
+    // embed + absolute positions
+    let emb = p.dense("emb");
+    let pos = p.dense("pos");
+    let mut x = Tensor::zeros(t_new, cfg.d_model);
+    for (i, &tok) in tokens.iter().enumerate() {
+        let er = emb.row(tok as usize);
+        let pr = pos.row(p0 + i);
+        let dst = x.row_mut(i);
+        for c in 0..cfg.d_model {
+            dst[c] = er[c] + pr[c];
+        }
+    }
+
+    let heads = cfg.n_heads;
+    let hd = cfg.head_dim();
+    let scale = 1.0 / (hd as f32).sqrt();
+    // one reusable attention-score buffer for the whole call (hot path:
+    // a decode step would otherwise allocate per layer x head)
+    let mut scores = vec![0.0f32; p0 + t_new];
+    for l in 0..cfg.n_layers {
+        // -- attention half --------------------------------------------------
+        let h = layer_norm(
+            &x,
+            &p.dense(&format!("l{l}.ln1.w")).data,
+            &p.dense(&format!("l{l}.ln1.b")).data,
+        );
+        let q = p.linear(l, "q", &h);
+        let k_new = p.linear(l, "k", &h);
+        let v_new = p.linear(l, "v", &h);
+        {
+            let kc = &mut cache.k[l];
+            let vc = &mut cache.v[l];
+            for i in 0..t_new {
+                kc.row_mut(p0 + i).copy_from_slice(k_new.row(i));
+                vc.row_mut(p0 + i).copy_from_slice(v_new.row(i));
+            }
+        }
+        let kc = &cache.k[l];
+        let vc = &cache.v[l];
+        let mut attn_out = Tensor::zeros(t_new, cfg.d_model);
+        for head in 0..heads {
+            let c0 = head * hd;
+            for i in 0..t_new {
+                let qr = &q.row(i)[c0..c0 + hd];
+                let ctx = p0 + i + 1; // causal: attend to positions 0..=p0+i
+                let scores = &mut scores[..ctx];
+                for (j, s) in scores.iter_mut().enumerate() {
+                    *s = ops::dot(qr, &kc.row(j)[c0..c0 + hd]) * scale;
+                }
+                let mx = scores.iter().fold(f32::NEG_INFINITY, |m, v| m.max(*v));
+                let mut sum = 0.0f32;
+                for s in scores.iter_mut() {
+                    *s = (*s - mx).exp();
+                    sum += *s;
+                }
+                let inv = 1.0 / sum;
+                let orow = &mut attn_out.row_mut(i)[c0..c0 + hd];
+                for (j, s) in scores.iter().enumerate() {
+                    let wgt = s * inv;
+                    if wgt == 0.0 {
+                        continue;
+                    }
+                    let vr = &vc.row(j)[c0..c0 + hd];
+                    for c in 0..hd {
+                        orow[c] += wgt * vr[c];
+                    }
+                }
+            }
+        }
+        let o = p.linear(l, "o", &attn_out);
+        ops::add_assign(&mut x, &o);
+
+        // -- FFN half --------------------------------------------------------
+        let h2 = layer_norm(
+            &x,
+            &p.dense(&format!("l{l}.ln2.w")).data,
+            &p.dense(&format!("l{l}.ln2.b")).data,
+        );
+        let mut u = p.linear(l, "up", &h2);
+        relu(&mut u);
+        let down = p.linear(l, "down", &u);
+        ops::add_assign(&mut x, &down);
+    }
+    cache.len = p0 + t_new;
+
+    // final LN + tied head, on the last position only
+    let last = Tensor::from_vec(1, cfg.d_model, x.row(t_new - 1).to_vec());
+    let hf = layer_norm(&last, &p.dense("lnf.w").data, &p.dense("lnf.b").data);
+    let mut logits = vec![0.0f32; cfg.vocab];
+    ops::matmul_nt(&hf.data, &emb.data, 1, cfg.d_model, cfg.vocab, &mut logits);
+    logits
+}
+
+/// Prompt prefill: reset the cache and feed the whole prompt; returns the
+/// last-position logits (the distribution of the first generated token).
+pub fn prefill<P: DecoderParams + ?Sized>(p: &P, cache: &mut KvCache, prompt: &[i32]) -> Vec<f32> {
+    cache.clear();
+    forward_cached(p, cache, prompt)
+}
+
+/// Single-token decode step against the cached context.
+pub fn decode_step<P: DecoderParams + ?Sized>(p: &P, cache: &mut KvCache, token: i32) -> Vec<f32> {
+    forward_cached(p, cache, &[token])
+}
+
 /// Convenience: perplexity of a token stream chunked into sequences.
 pub fn perplexity(w: &Weights, tokens: &[u32], seqlen: usize, max_seqs: usize) -> f64 {
     let n = ((tokens.len() - 1) / seqlen).min(max_seqs);
@@ -395,6 +598,74 @@ mod tests {
         let bwd = forward(&w, &rev_toks, &rev_tgts, &mask, Capture::default());
         assert!((fwd.ce - bwd.ce).abs() < 1e-9);
         assert!((fwd.seq_logprob[0] - bwd.seq_logprob[1]).abs() < 1e-4);
+    }
+
+    #[test]
+    fn cached_prefill_matches_full_forward_logits() {
+        let (w, toks, tgts, mask) = setup();
+        let full = forward(
+            &w,
+            &toks,
+            &tgts,
+            &mask,
+            Capture { last_logits: true, ..Default::default() },
+        );
+        for (b, seq) in toks.iter().enumerate() {
+            let mut cache = KvCache::new(&w.config);
+            let logits = prefill(&w, &mut cache, seq);
+            assert_eq!(cache.len(), seq.len());
+            for (a, f) in logits.iter().zip(&full.last_logits[b]) {
+                assert!((a - f).abs() < 1e-3, "seq {b}: {a} vs {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_decode_matches_full_reforward() {
+        // feeding tokens one at a time through the KV cache must agree with
+        // re-forwarding the full context at every step (the old serve path)
+        let (w, toks, ..) = setup();
+        let seq = &toks[0];
+        let mut cache = KvCache::new(&w.config);
+        let mut inc = prefill(&w, &mut cache, &seq[..4]);
+        for t in 4..seq.len() {
+            let prefix = vec![seq[..t].to_vec()];
+            let tgts = vec![vec![0i32; t]];
+            let mask = vec![vec![0f32; t]];
+            let full = forward(
+                &w,
+                &prefix,
+                &tgts,
+                &mask,
+                Capture { last_logits: true, ..Default::default() },
+            );
+            for (a, f) in inc.iter().zip(&full.last_logits[0]) {
+                assert!((a - f).abs() < 1e-3, "t={t}: {a} vs {f}");
+            }
+            inc = decode_step(&w, &mut cache, seq[t]);
+        }
+        assert_eq!(cache.len(), seq.len());
+        assert_eq!(cache.remaining(), w.config.max_seq - seq.len());
+    }
+
+    #[test]
+    fn cache_clear_reuses_buffers() {
+        let (w, toks, ..) = setup();
+        let mut cache = KvCache::new(&w.config);
+        let a = prefill(&w, &mut cache, &toks[0]);
+        let b = prefill(&w, &mut cache, &toks[0]); // clear + refill
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "KV cache overflow")]
+    fn cache_overflow_panics() {
+        let cfg = OptConfig::test_config();
+        let w = Weights::random(cfg.clone(), 1);
+        let mut cache = KvCache::new(&cfg);
+        let toks = vec![1i32; cfg.max_seq];
+        prefill(&w, &mut cache, &toks);
+        decode_step(&w, &mut cache, 1); // one past max_seq
     }
 
     #[test]

@@ -35,7 +35,8 @@ fn fake_quant_group_clipped(seg: &[f32], out: &mut [f32], qmax: f32, ratio: f32)
     let (cmn, cmx) = (mid - half, mid + half);
     let range = cmx - cmn;
     let scale = if range > 0.0 { range / qmax } else { 1.0 };
-    let zero = round_half_up(-cmn / scale);
+    // same packable-zero clamp as the plain codec (quant::group)
+    let zero = round_half_up(-cmn / scale).clamp(0.0, qmax);
     let mut err = 0.0f64;
     for (o, &v) in out.iter_mut().zip(seg) {
         let q = (round_half_up(v / scale) + zero).clamp(0.0, qmax);

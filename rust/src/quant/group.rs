@@ -2,8 +2,14 @@
 //!
 //! MUST stay bit-compatible with `python/compile/kernels/ref.py` and the
 //! Pallas kernel: q_min = 0, `s = (max-min)/qmax` with degenerate-group
-//! fallback `s = 1`, and round-half-up (`floor(x + 0.5)`).  A cross-layer
-//! test (`rust/tests/hlo_cross_check.rs`) pins all three implementations
+//! fallback `s = 1` (a constant group dequantizes to `round(c)` saturated
+//! into `[-qmax, qmax]`), round-half-up (`floor(x + 0.5)`), and the
+//! zero-point clamped into `[0, qmax]` so it always fits the packed
+//! integer width
+//! (`quant::packed` stores zeros in `bits` bits — an unclamped zero from a
+//! single-sign group would saturate or truncate there and silently corrupt
+//! the deployment form).  A cross-layer test
+//! (`rust/tests/hlo_cross_check.rs`) pins all three implementations
 //! together.
 
 use super::QuantScheme;
@@ -57,7 +63,15 @@ pub fn quantize(w: &Tensor, scheme: QuantScheme) -> GroupQuant {
             }
             let range = mx - mn;
             let scale = if range > 0.0 { range / qmax } else { 1.0 };
-            let zero = round_half_up(-mn / scale);
+            // clamp: all-positive groups would otherwise yield zero < 0 and
+            // all-negative groups zero > qmax, neither of which survives the
+            // bit-packed storage (see module doc).  Deliberate trade-off:
+            // a clamped single-sign group loses the s/2 error bound (its
+            // representable range is pinned at 0) — the alternative of
+            // widening [mn, mx] to include 0 would keep s/2 but change the
+            // paper's s = (max-min)/qmax scale definition everywhere.
+            // Near-zero-mean LLM weight groups are unaffected.
+            let zero = round_half_up(-mn / scale).clamp(0.0, qmax);
             scales[r * n_groups + g] = scale;
             zeros[r * n_groups + g] = zero;
             let dst = &mut codes[r * cols + g * scheme.group..r * cols + (g + 1) * scheme.group];
@@ -123,7 +137,7 @@ pub fn fake_quant_into(w: &Tensor, scheme: QuantScheme, out: &mut Tensor) {
             }
             let range = mx - mn;
             let scale = if range > 0.0 { range / qmax } else { 1.0 };
-            let zero = round_half_up(-mn / scale);
+            let zero = round_half_up(-mn / scale).clamp(0.0, qmax);
             for (o, &v) in orow[a..a + scheme.group].iter_mut().zip(seg) {
                 let q = (round_half_up(v / scale) + zero).clamp(0.0, qmax);
                 *o = scale * (q - zero);
@@ -164,11 +178,46 @@ mod tests {
             let n_groups = cols / scheme.group;
             for r in 0..rows {
                 for c in 0..cols {
-                    let s = q.scales[r * n_groups + c / scheme.group];
+                    let g = c / scheme.group;
+                    let seg = &w.row(r)[g * scheme.group..(g + 1) * scheme.group];
+                    let mn = seg.iter().fold(f32::INFINITY, |m, &v| m.min(v));
+                    let mx = seg.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+                    let s = q.scales[r * n_groups + g];
+                    // zero-spanning groups keep the classic s/2 bound; a
+                    // single-sign group additionally pays for the zero-point
+                    // clamp (its representable range is pinned at 0)
+                    let bound = if mn <= 0.0 && mx >= 0.0 {
+                        s * 0.5 + 1e-5
+                    } else {
+                        mn.abs().min(mx.abs()) + s * 0.5 + 1e-5
+                    };
                     let err = (w.at(r, c) - deq.at(r, c)).abs();
-                    if err > s * 0.5 + 1e-5 {
-                        return Err(format!("err {err} > s/2 {s} at ({r},{c})"));
+                    if err > bound {
+                        return Err(format!("err {err} > bound {bound} at ({r},{c})"));
                     }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_point_always_packable() {
+        // REGRESSION (PR 2): single-sign groups used to produce zero-points
+        // outside [0, qmax], which corrupted the bit-packed deployment form.
+        propcheck::check("zero ∈ [0, qmax] under shifted distributions", 48, |rng| {
+            let scheme = QuantScheme::new(rng.below(8) + 1, 32);
+            let shift = *rng.choice(&[-4.0f32, -1.0, 0.0, 1.0, 4.0]);
+            let w = Tensor::from_vec(
+                2,
+                64,
+                (0..128).map(|_| rng.normal() as f32 * 0.5 + shift).collect(),
+            );
+            let q = quantize(&w, scheme);
+            let qmax = scheme.qmax();
+            for &z in &q.zeros {
+                if !(0.0..=qmax).contains(&z) || z != z.floor() {
+                    return Err(format!("zero {z} not an integer in [0, {qmax}]"));
                 }
             }
             Ok(())
@@ -230,6 +279,17 @@ mod tests {
         let deq = fake_quant(&w, QuantScheme::new(2, 32));
         // degenerate fallback: s=1 -> dequantizes to round(3.2) = 3
         assert!(deq.data.iter().all(|&v| (v - 3.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn degenerate_far_constant_saturates() {
+        // post-clamp semantics (module doc): a constant group with
+        // |c| > qmax saturates to ±qmax instead of reaching round(c)
+        let scheme = QuantScheme::new(2, 32);
+        let hi = fake_quant(&Tensor::from_vec(1, 32, vec![10.0; 32]), scheme);
+        assert!(hi.data.iter().all(|&v| (v - 3.0).abs() < 1e-6));
+        let lo = fake_quant(&Tensor::from_vec(1, 32, vec![-10.0; 32]), scheme);
+        assert!(lo.data.iter().all(|&v| (v + 3.0).abs() < 1e-6));
     }
 
     #[test]

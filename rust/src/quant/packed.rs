@@ -1,7 +1,9 @@
 //! Bit-packed storage of quantized codes — the *actual* memory layout a
 //! deployment would ship, used to compute the honest "Bits/Param" and
-//! memory-savings columns of Table 3 and by the serve example to hold the
-//! model compressed in RAM.
+//! memory-savings columns of Table 3 and, since PR 2, to *serve* the model
+//! directly: the fused unpack→dequant→GEMM kernels here run the decoder
+//! forward on the packed codes without ever materializing a dense f32 copy
+//! of a quantized linear (see [`crate::serve`]).
 //!
 //! Codes are packed little-endian, `bits` each, into u32 words, rows padded
 //! to word boundaries so rows stay independently addressable.  Scales are
@@ -9,7 +11,17 @@
 //! and zero-points as packed ints.
 
 use super::{GroupQuant, QuantScheme};
-use crate::tensor::Tensor;
+use crate::tensor::{ops, Tensor};
+use crate::util::pool;
+
+/// Output-row tile of the fused GEMM kernels.  MUST stay a multiple of 4:
+/// [`ops::matmul_nt`] switches from its 4-wide j-blocked inner kernel to a
+/// per-column `dot` tail based on column alignment, and a multiple-of-4
+/// tile keeps that classification identical between a whole-matrix call
+/// and the tiled calls — which is what makes [`PackedTensor::linear`]
+/// bit-identical to `ops::linear` over [`PackedTensor::unpack`] (pinned by
+/// `fused_linear_bit_identical_to_unpack`).
+const ROW_TILE: usize = 64;
 
 /// A weight matrix in deployment form.
 #[derive(Debug, Clone)]
@@ -26,7 +38,18 @@ pub struct PackedTensor {
     pub zero_words: Vec<u32>,
 }
 
-/// Lossy f32 -> f16 (round-to-nearest, ties away from zero).
+/// Lossy f32 -> f16 (round-to-nearest, **ties away from zero**).
+///
+/// Rounding choice, documented deliberately: Rust's `f32::round` resolves a
+/// value exactly halfway between two representable f16 mantissas toward the
+/// larger magnitude, unlike IEEE-754's default round-to-nearest-even.  This
+/// matches the `floor(x + 0.5)` round-half-up convention the quantization
+/// codec uses on non-negative inputs (`quant::group`), keeps the packer
+/// dependency-free, and differs from ties-to-even only on exact midpoints
+/// (≤ 1 ulp, i.e. within the scale-precision tolerance every packed-dequant
+/// test already budgets for).  Every value that IS exactly representable in
+/// f16 round-trips bit-exactly — pinned over all 65536 bit patterns by
+/// `f16_u16_exhaustive_roundtrip`.
 pub fn f32_to_f16_bits(x: f32) -> u16 {
     let sign: u16 = if x.is_sign_negative() { 0x8000 } else { 0 };
     let ax = x.abs();
@@ -138,24 +161,118 @@ impl PackedTensor {
     }
 
     /// Unpack back to dense dequantized weights (f16 scale precision —
-    /// this is the deployment-faithful dequant).
+    /// this is the deployment-faithful dequant).  Built on the same fused
+    /// row decoder the serving kernels use, so packed-direct vs
+    /// unpack-to-dense parity holds by construction.
     pub fn unpack(&self) -> Tensor {
-        let bits = self.scheme.bits;
-        let per_word = 32 / bits;
-        let n_groups = self.cols / self.scheme.group;
         let mut out = Tensor::zeros(self.rows, self.cols);
         for r in 0..self.rows {
-            let row_words = &self.words[r * self.words_per_row..(r + 1) * self.words_per_row];
-            for c in 0..self.cols {
-                let code = ((row_words[c / per_word] >> ((c % per_word) * bits))
-                    & ((1 << bits) - 1)) as f32;
-                let g = r * n_groups + c / self.scheme.group;
-                let scale = f16_bits_to_f32(self.scales_f16[g]);
-                let zero = unpack_value(&self.zero_words, bits, g) as f32;
-                out.data[r * self.cols + c] = scale * (code - zero);
-            }
+            self.dequant_row_into(r, out.row_mut(r));
         }
         out
+    }
+
+    /// Scale (f16-rounded, deployment precision) and zero-point of group
+    /// `g` of row `r`.
+    pub fn group_params(&self, r: usize, g: usize) -> (f32, f32) {
+        let n_groups = self.cols / self.scheme.group;
+        debug_assert!(r < self.rows && g < n_groups);
+        let idx = r * n_groups + g;
+        (
+            f16_bits_to_f32(self.scales_f16[idx]),
+            unpack_value(&self.zero_words, self.scheme.bits, idx) as f32,
+        )
+    }
+
+    /// Integer code at `(r, c)`.
+    pub fn code(&self, r: usize, c: usize) -> u8 {
+        let row_words = &self.words[r * self.words_per_row..(r + 1) * self.words_per_row];
+        unpack_value(row_words, self.scheme.bits, c)
+    }
+
+    /// Iterate one row's groups as `(group index, scale, zero)` — the
+    /// walk order of the fused kernels, exposed for tests and tooling.
+    pub fn row_groups(&self, r: usize) -> impl Iterator<Item = (usize, f32, f32)> + '_ {
+        (0..self.cols / self.scheme.group).map(move |g| {
+            let (s, z) = self.group_params(r, g);
+            (g, s, z)
+        })
+    }
+
+    /// Fused unpack→dequant of one row into `out` (len `cols`), group by
+    /// group, without touching any other row.
+    pub fn dequant_row_into(&self, r: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.cols, "dequant_row_into: bad buffer");
+        let bits = self.scheme.bits;
+        let per_word = 32 / bits;
+        let mask = (1u32 << bits) - 1;
+        let group = self.scheme.group;
+        let row_words = &self.words[r * self.words_per_row..(r + 1) * self.words_per_row];
+        for (g, scale, zero) in self.row_groups(r) {
+            let a = g * group;
+            for (i, o) in out[a..a + group].iter_mut().enumerate() {
+                let c = a + i;
+                let code = ((row_words[c / per_word] >> ((c % per_word) * bits)) & mask) as f32;
+                *o = scale * (code - zero);
+            }
+        }
+    }
+
+    /// Fused dequant of rows `[r0, r0 + n)` into a `[n, cols]` scratch tile.
+    pub fn dequant_rows_into(&self, r0: usize, n: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), n * self.cols, "dequant_rows_into: bad buffer");
+        for (i, chunk) in out.chunks_mut(self.cols).enumerate() {
+            self.dequant_row_into(r0 + i, chunk);
+        }
+    }
+
+    /// Fused unpack→dequant→GEMM/GEMV serving kernel:
+    /// `x [m, cols] @ deq(W) [rows, cols]^T + bias`, computed directly from
+    /// the packed codes.  Work is tiled over [`ROW_TILE`] output rows (the
+    /// tiles decode + multiply in parallel on the thread pool), so at most
+    /// one small dense tile per worker is ever live — the full quantized
+    /// matrix is never densified.  Bit-identical to
+    /// `ops::linear(x, &self.unpack(), bias)`.
+    pub fn linear(&self, x: &Tensor, bias: &[f32]) -> Tensor {
+        let mut out = Tensor::zeros(x.rows, self.rows);
+        self.linear_into(x, bias, &mut out);
+        out
+    }
+
+    /// [`PackedTensor::linear`] into a preallocated output.
+    pub fn linear_into(&self, x: &Tensor, bias: &[f32], out: &mut Tensor) {
+        assert_eq!(x.cols, self.cols, "packed linear: in-dim mismatch");
+        assert_eq!(bias.len(), self.rows, "packed linear: bias mismatch");
+        assert_eq!(out.shape(), (x.rows, self.rows), "packed linear: bad out");
+        let (m, k, n) = (x.rows, self.cols, self.rows);
+        if m == 0 {
+            return;
+        }
+        let n_tiles = n.div_ceil(ROW_TILE);
+        // Small calls — notably the per-token decode GEMVs, which already
+        // run under the server's per-sequence parallelism — stay serial:
+        // spawning scoped threads per tile would cost more than the tiles'
+        // work.  Same size threshold as matmul_nt_par; the result is
+        // identical either way (tiles are independent and order-preserved).
+        let threads = if m * k * n < 1 << 18 { 1 } else { pool::num_threads().min(n_tiles) };
+        let tiles: Vec<Vec<f32>> = pool::parallel_map(n_tiles, threads, |ti| {
+            let j0 = ti * ROW_TILE;
+            let nb = ROW_TILE.min(n - j0);
+            let mut dense = vec![0.0f32; nb * k];
+            self.dequant_rows_into(j0, nb, &mut dense);
+            let mut block = vec![0.0f32; m * nb];
+            ops::matmul_nt(&x.data, &dense, m, k, nb, &mut block);
+            block
+        });
+        for (ti, block) in tiles.iter().enumerate() {
+            let j0 = ti * ROW_TILE;
+            let nb = block.len() / m;
+            for i in 0..m {
+                out.data[i * n + j0..i * n + j0 + nb]
+                    .copy_from_slice(&block[i * nb..(i + 1) * nb]);
+            }
+        }
+        ops::add_bias(out, bias);
     }
 
     /// Total storage in bytes (codes + scales + zeros).
@@ -172,7 +289,7 @@ impl PackedTensor {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::group::quantize;
+    use crate::quant::group::{dequantize, quantize};
     use crate::util::{propcheck, rng::Pcg64};
 
     #[test]
@@ -186,22 +303,57 @@ mod tests {
     }
 
     #[test]
+    fn f16_u16_exhaustive_roundtrip() {
+        // every finite f16 bit pattern must survive f16 -> f32 -> f16
+        // bit-exactly; infinities map to themselves and NaNs stay NaN.
+        for h in 0..=u16::MAX {
+            let f = f16_bits_to_f32(h);
+            let back = f32_to_f16_bits(f);
+            if f.is_nan() {
+                assert_eq!(back & 0x7c00, 0x7c00, "{h:#06x}: NaN lost exponent");
+                assert_ne!(back & 0x03ff, 0, "{h:#06x}: NaN became infinity");
+            } else {
+                assert_eq!(back, h, "{h:#06x} -> {f} -> {back:#06x}");
+            }
+        }
+    }
+
+    #[test]
     fn pack_unpack_preserves_codes() {
-        propcheck::check("pack/unpack code fidelity", 24, |rng| {
-            let bits = rng.below(4) + 1;
+        propcheck::check("pack/unpack code fidelity", 48, |rng| {
+            // bits 1..=8 including the non-divisors of 32 (5, 6, 7), over
+            // centered, shifted, and (at |shift| = 3) mostly single-sign
+            // weight distributions — the zero-point clamp regression surface
+            let bits = rng.below(8) + 1;
             let scheme = QuantScheme::new(bits, 32);
             let rows = rng.below(5) + 1;
             let cols = 32 * (rng.below(3) + 1);
+            let shift = *rng.choice(&[-3.0f32, -0.75, 0.0, 0.75, 3.0]);
             let w = Tensor::from_vec(
                 rows,
                 cols,
-                (0..rows * cols).map(|_| rng.normal() as f32).collect(),
+                (0..rows * cols).map(|_| rng.normal() as f32 + shift).collect(),
             );
             let q = quantize(&w, scheme);
             let packed = PackedTensor::pack(&q);
-            let unpacked = packed.unpack();
+            let n_groups = cols / scheme.group;
+            // codes and zero-points survive packing exactly
+            for r in 0..rows {
+                for c in 0..cols {
+                    if packed.code(r, c) != q.codes[r * cols + c] {
+                        return Err(format!("code mismatch at ({r},{c})"));
+                    }
+                }
+                for (g, _scale, zero) in packed.row_groups(r) {
+                    let zq = q.zeros[r * n_groups + g];
+                    if zero != zq {
+                        return Err(format!("zero mismatch row {r} group {g}: {zero} vs {zq}"));
+                    }
+                }
+            }
             // unpack differs from exact dequant only by f16 scale rounding
-            let exact = crate::quant::group::dequantize(&q);
+            let exact = dequantize(&q);
+            let unpacked = packed.unpack();
             for (a, b) in exact.data.iter().zip(&unpacked.data) {
                 let tol = (a.abs() * 2e-3).max(1e-4);
                 if (a - b).abs() > tol {
@@ -210,6 +362,89 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn single_sign_groups_pack_faithfully() {
+        // REGRESSION (PR 2): all-positive groups used to produce a negative
+        // zero-point that saturated to 0 in pack's `z as u8` cast, and
+        // all-negative groups a zero > qmax that was truncated under the
+        // pack mask — so unpack() silently disagreed with dequantize().
+        // The codec now clamps zero into [0, qmax]; packed↔dense dequant
+        // parity must hold for single-sign groups too.
+        let mut rng = Pcg64::new(11);
+        for &(lo, hi) in &[(0.5f32, 2.5f32), (-2.5, -0.5)] {
+            for bits in [1usize, 2, 3, 4, 8] {
+                let scheme = QuantScheme::new(bits, 32);
+                let w = Tensor::from_vec(
+                    2,
+                    64,
+                    (0..128).map(|_| lo + (hi - lo) * rng.uniform() as f32).collect(),
+                );
+                let q = quantize(&w, scheme);
+                let qmax = scheme.qmax();
+                assert!(
+                    q.zeros.iter().all(|&z| (0.0..=qmax).contains(&z)),
+                    "codec zero escaped [0, qmax] (bits {bits}, range {lo}..{hi})"
+                );
+                let exact = dequantize(&q);
+                let unpacked = PackedTensor::pack(&q).unpack();
+                for (a, b) in exact.data.iter().zip(&unpacked.data) {
+                    let tol = (a.abs() * 2e-3).max(1e-4);
+                    assert!(
+                        (a - b).abs() <= tol,
+                        "packed dequant diverged: {a} vs {b} (bits {bits}, range {lo}..{hi})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_linear_bit_identical_to_unpack() {
+        // the serving-path acceptance pin: the fused packed GEMM must equal
+        // a dense ops::linear over unpack() BIT-FOR-BIT, across row counts
+        // that exercise full tiles, partial tiles, and non-multiple-of-4
+        // matmul tails.
+        propcheck::check("packed linear == dense linear over unpack()", 16, |rng| {
+            let bits = rng.below(4) + 1;
+            let scheme = QuantScheme::new(bits, 32);
+            let rows = rng.below(150) + 1;
+            let cols = 32 * (rng.below(3) + 1);
+            let m = rng.below(3) + 1;
+            let w = Tensor::from_vec(
+                rows,
+                cols,
+                (0..rows * cols).map(|_| rng.normal() as f32).collect(),
+            );
+            let packed = PackedTensor::pack(&quantize(&w, scheme));
+            let x = Tensor::from_vec(
+                m,
+                cols,
+                (0..m * cols).map(|_| rng.normal() as f32).collect(),
+            );
+            let bias: Vec<f32> = (0..rows).map(|_| rng.normal() as f32).collect();
+            let fused = packed.linear(&x, &bias);
+            let dense = crate::tensor::ops::linear(&x, &packed.unpack(), &bias);
+            propcheck::ensure(
+                fused.data == dense.data,
+                format!("bitwise mismatch at rows={rows} cols={cols} m={m} bits={bits}"),
+            )
+        });
+    }
+
+    #[test]
+    fn dequant_row_matches_unpack() {
+        let mut rng = Pcg64::new(4);
+        let scheme = QuantScheme::new(3, 32);
+        let w = Tensor::from_vec(5, 96, (0..5 * 96).map(|_| rng.normal() as f32).collect());
+        let packed = PackedTensor::pack(&quantize(&w, scheme));
+        let dense = packed.unpack();
+        let mut row = vec![0.0f32; 96];
+        for r in 0..5 {
+            packed.dequant_row_into(r, &mut row);
+            assert_eq!(row.as_slice(), dense.row(r), "row {r}");
+        }
     }
 
     #[test]

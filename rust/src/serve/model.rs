@@ -1,0 +1,198 @@
+//! The packed deployment model: bit-packed quantized linears + the FP
+//! weights for everything else (embeddings, positions, LayerNorms, biases).
+//!
+//! Implements [`DecoderParams`], so the incremental serving path runs the
+//! forward pass *directly on the packed codes* through the fused
+//! unpack→dequant→GEMM kernels of [`PackedTensor`] — the quantized linears
+//! are never materialized as dense f32.  The parity pin: serving from the
+//! packed form is bit-identical to serving from
+//! [`PackedModel::unpacked_weights`] (see
+//! `packed_forward_bit_identical_to_unpacked_dense`).
+
+use std::collections::HashMap;
+
+use crate::model::native::DecoderParams;
+use crate::model::{OptConfig, Weights};
+use crate::quant::PackedTensor;
+use crate::tensor::{ops, Tensor};
+
+/// A model held in deployment form: FP non-linear parameters plus one
+/// [`PackedTensor`] per quantized linear.
+pub struct PackedModel {
+    fp: Weights,
+    packed: HashMap<String, PackedTensor>,
+}
+
+impl PackedModel {
+    /// Build from preprocessed FP weights plus packed linears (as produced
+    /// by `baselines::Prepared::pack_model`).  Each packed tensor must
+    /// match its parameter's shape; any quantizable linear *not* listed
+    /// falls back to the dense FP weight.
+    pub fn new(fp: Weights, packed: Vec<(String, PackedTensor)>) -> PackedModel {
+        let mut map = HashMap::new();
+        for (name, p) in packed {
+            let expect = fp.config.param_shape(&name).expect("known parameter");
+            assert_eq!((p.rows, p.cols), expect, "packed {name:?}: shape mismatch");
+            map.insert(name, p);
+        }
+        PackedModel { fp, packed: map }
+    }
+
+    pub fn config(&self) -> &OptConfig {
+        &self.fp.config
+    }
+
+    /// Number of linears held in packed form.
+    pub fn n_packed(&self) -> usize {
+        self.packed.len()
+    }
+
+    /// Total bytes of the packed linears (codes + f16 scales + zeros).
+    pub fn packed_bytes(&self) -> usize {
+        self.packed.values().map(|p| p.nbytes()).sum()
+    }
+
+    /// Measured bits/param over the packed linears (the Table-3 number the
+    /// serving path actually holds in RAM).
+    pub fn bits_per_param(&self) -> f64 {
+        let params: usize = self.packed.values().map(|p| p.rows * p.cols).sum();
+        self.packed_bytes() as f64 * 8.0 / params.max(1) as f64
+    }
+
+    /// Dense weight set with every packed linear replaced by its
+    /// deployment-faithful dequantization — the reference the parity tests
+    /// (and the unpack-to-dense baseline in `benches/serve_decode.rs`) pin
+    /// the packed-direct forward against.
+    pub fn unpacked_weights(&self) -> Weights {
+        let mut w = self.fp.clone();
+        for (name, p) in &self.packed {
+            w.set(name, p.unpack());
+        }
+        w
+    }
+}
+
+impl DecoderParams for PackedModel {
+    fn config(&self) -> &OptConfig {
+        &self.fp.config
+    }
+
+    fn dense(&self, name: &str) -> &Tensor {
+        self.fp.get(name)
+    }
+
+    fn linear(&self, l: usize, base: &str, x: &Tensor) -> Tensor {
+        let bias = &self.fp.layer(l, &format!("{base}.b")).data;
+        let wname = format!("l{l}.{base}.w");
+        match self.packed.get(&wname) {
+            Some(p) => p.linear(x, bias),
+            None => ops::linear(x, self.fp.get(&wname), bias),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::native::{self, KvCache};
+    use crate::quant::{self, QuantScheme};
+    use crate::serve::{Request, ServeOpts, Server};
+    use crate::util::rng::Pcg64;
+    use crate::util::sampling::Sampler;
+
+    fn packed_pair() -> (PackedModel, Weights) {
+        let w = Weights::random(OptConfig::test_config(), 9);
+        let scheme = QuantScheme::new(2, 32);
+        let packed: Vec<(String, PackedTensor)> = w
+            .quant_names()
+            .iter()
+            .map(|n| (n.clone(), PackedTensor::pack(&quant::quantize(w.get(n), scheme))))
+            .collect();
+        let pm = PackedModel::new(w.clone(), packed);
+        let dense = pm.unpacked_weights();
+        (pm, dense)
+    }
+
+    #[test]
+    fn packed_forward_bit_identical_to_unpacked_dense() {
+        // the tentpole acceptance pin: packed-direct serving == serving over
+        // unpack()-ed dense weights, bit for bit, through prefill AND decode
+        let (pm, dense) = packed_pair();
+        let mut rng = Pcg64::new(1);
+        let toks: Vec<i32> = (0..12).map(|_| rng.below(pm.config().vocab) as i32).collect();
+        let mut c1 = KvCache::new(pm.config());
+        let mut c2 = KvCache::new(&dense.config);
+        let l1 = native::prefill(&pm, &mut c1, &toks);
+        let l2 = native::prefill(&dense, &mut c2, &toks);
+        assert_eq!(l1, l2, "prefill logits must be bit-identical");
+        for t in [3i32, 7, 11, 40] {
+            let d1 = native::decode_step(&pm, &mut c1, t);
+            let d2 = native::decode_step(&dense, &mut c2, t);
+            assert_eq!(d1, d2, "decode logits must be bit-identical (token {t})");
+        }
+    }
+
+    #[test]
+    fn serves_from_packed_without_densifying() {
+        let (pm, _) = packed_pair();
+        let vocab = pm.config().vocab;
+        let mut server = Server::new(&pm, ServeOpts { max_batch: 3, seed: 1 });
+        let mut rng = Pcg64::new(2);
+        for i in 0..4 {
+            server.submit(Request {
+                id: i,
+                prompt: (0..6).map(|_| rng.below(vocab) as i32).collect(),
+                max_new: 5,
+                sampler: if i % 2 == 0 {
+                    Sampler::Greedy
+                } else {
+                    Sampler::TopK { k: 8, temperature: 0.8 }
+                },
+            });
+        }
+        let (done, stats) = server.run();
+        assert_eq!(done.len(), 4);
+        assert!(done.iter().all(|c| c.generated.len() == 5));
+        assert_eq!(stats.generated_tokens, 20);
+        assert_eq!(stats.decoded_tokens, 16); // 20 minus one prefill sample each
+        assert!(stats.decode_steps >= 4, "KV decode rounds expected");
+    }
+
+    #[test]
+    fn packed_and_dense_servers_agree() {
+        // same requests through the packed model and its dense unpack must
+        // produce identical token streams (bit-identical logits + per-
+        // request RNG streams)
+        fn submit_reqs<P: DecoderParams + ?Sized>(server: &mut Server<'_, P>, vocab: usize) {
+            let mut rng = Pcg64::new(8);
+            for i in 0..3 {
+                server.submit(Request {
+                    id: i,
+                    prompt: (0..5).map(|_| rng.below(vocab) as i32).collect(),
+                    max_new: 4,
+                    sampler: Sampler::TopK { k: 4, temperature: 0.7 },
+                });
+            }
+        }
+        let (pm, dense) = packed_pair();
+        let vocab = pm.config().vocab;
+        let mut s1 = Server::new(&pm, ServeOpts { max_batch: 2, seed: 3 });
+        submit_reqs(&mut s1, vocab);
+        let (d1, _) = s1.run();
+        let mut s2 = Server::new(&dense, ServeOpts { max_batch: 2, seed: 3 });
+        submit_reqs(&mut s2, vocab);
+        let (d2, _) = s2.run();
+        for (a, b) in d1.iter().zip(&d2) {
+            assert_eq!(a.generated, b.generated, "request {}", a.id);
+        }
+    }
+
+    #[test]
+    fn memory_accounting_reports_compression() {
+        let (pm, _) = packed_pair();
+        assert_eq!(pm.n_packed(), 12); // 6 linears x 2 layers
+        let bpp = pm.bits_per_param();
+        // 2-bit codes + f16 scale / g32 + 2-bit zero / g32 ≈ 2.6, plus slack
+        assert!(bpp > 2.0 && bpp < 3.2, "bits/param {bpp}");
+    }
+}

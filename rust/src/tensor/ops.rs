@@ -82,13 +82,20 @@ pub fn linear(x: &Tensor, w: &Tensor, bias: &[f32]) -> Tensor {
     assert_eq!(bias.len(), w.rows, "linear: bias mismatch");
     let mut out = Tensor::zeros(x.rows, w.rows);
     matmul_nt_par(&x.data, &w.data, x.rows, x.cols, w.rows, &mut out.data);
+    add_bias(&mut out, bias);
+    out
+}
+
+/// `out[r, :] += bias` for every row — the bias half of [`linear`], shared
+/// with the fused packed-weight kernels (`quant::packed`) so both the dense
+/// and the packed-direct paths add bias with identical f32 semantics.
+pub fn add_bias(out: &mut Tensor, bias: &[f32]) {
+    assert_eq!(bias.len(), out.cols, "add_bias: bias mismatch");
     for r in 0..out.rows {
-        let row = out.row_mut(r);
-        for (o, b) in row.iter_mut().zip(bias) {
+        for (o, b) in out.row_mut(r).iter_mut().zip(bias) {
             *o += *b;
         }
     }
-    out
 }
 
 /// LayerNorm over the last dim, matching the L2 model (eps 1e-5).
@@ -206,6 +213,13 @@ mod tests {
         let w = Tensor::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
         let out = linear(&x, &w, &[10.0, 20.0]);
         assert_eq!(out.data, vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn add_bias_every_row() {
+        let mut x = Tensor::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        add_bias(&mut x, &[10.0, 20.0]);
+        assert_eq!(x.data, vec![11.0, 22.0, 13.0, 24.0]);
     }
 
     #[test]

@@ -14,6 +14,30 @@ pub enum Sampler {
 }
 
 impl Sampler {
+    /// Parse a CLI/serve-config spec: `greedy`, `temp:0.8`, `topk:8` or
+    /// `topk:8:0.7` (temperature defaults to 1.0).
+    pub fn parse(s: &str) -> crate::Result<Sampler> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts[0].to_ascii_lowercase().as_str() {
+            "greedy" => Ok(Sampler::Greedy),
+            "temp" | "temperature" => {
+                anyhow::ensure!(parts.len() == 2, "bad sampler {s:?} (want temp:<t>)");
+                Ok(Sampler::Temperature(parts[1].parse()?))
+            }
+            "topk" => {
+                anyhow::ensure!(
+                    parts.len() == 2 || parts.len() == 3,
+                    "bad sampler {s:?} (want topk:<k>[:<t>])"
+                );
+                let k: usize = parts[1].parse()?;
+                anyhow::ensure!(k >= 1, "bad sampler {s:?}: k must be >= 1");
+                let temperature = if parts.len() == 3 { parts[2].parse()? } else { 1.0 };
+                Ok(Sampler::TopK { k, temperature })
+            }
+            _ => anyhow::bail!("unknown sampler {s:?} (greedy|temp:<t>|topk:<k>[:<t>])"),
+        }
+    }
+
     /// Pick the next token id from `logits`.
     pub fn sample(&self, logits: &[f32], rng: &mut Pcg64) -> usize {
         match *self {
@@ -111,6 +135,24 @@ mod tests {
         let mut idx = top_k_indices(&logits, 3);
         idx.sort_unstable();
         assert_eq!(idx, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn parse_forms() {
+        assert!(matches!(Sampler::parse("greedy").unwrap(), Sampler::Greedy));
+        assert!(matches!(Sampler::parse("temp:0.5").unwrap(), Sampler::Temperature(t) if t == 0.5));
+        assert!(matches!(
+            Sampler::parse("topk:8:0.7").unwrap(),
+            Sampler::TopK { k: 8, temperature } if temperature == 0.7
+        ));
+        assert!(matches!(
+            Sampler::parse("TOPK:4").unwrap(),
+            Sampler::TopK { k: 4, temperature } if temperature == 1.0
+        ));
+        assert!(Sampler::parse("nope").is_err());
+        assert!(Sampler::parse("temp").is_err());
+        assert!(Sampler::parse("topk:x").is_err());
+        assert!(Sampler::parse("topk:0").is_err());
     }
 
     #[test]
