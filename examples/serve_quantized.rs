@@ -1,20 +1,24 @@
 //! Serve a quantized model directly from the packed (deployment) weight
-//! format: the model stays bit-packed in RAM (`quant::packed`, 2-bit codes
-//! + f16 group scales), the decoder forward runs on the packed codes
-//! through the fused unpack→dequant→GEMV kernels, and each sequence decodes
-//! incrementally against its own KV cache (`serve::Server`) — no dense f32
-//! materialization of quantized linears and no full-context re-forward per
-//! token.
+//! format through the continuous-batching scheduler: the model stays
+//! bit-packed in RAM (`quant::packed`, 2-bit codes + f16 group scales), the
+//! decoder forward runs on the packed codes through the fused
+//! unpack→dequant→GEMV kernels, and `serve::Scheduler` admits requests into
+//! freed decode slots mid-flight, reuses KV pages across prompts sharing a
+//! prefix (radix-trie prefix cache over chunked, refcounted KV pages), and
+//! streams tokens through per-request sinks.  Telemetry (TTFT and
+//! inter-token latency percentiles, queue depth, prefix-cache hit rate,
+//! live KV bytes) is dumped as JSON at the end.
 //!
 //! ```text
 //! cargo run --release --example serve_quantized
+//! SERVE_POLICY=spf SERVE_SAMPLER=topk:8:0.7 cargo run --release --example serve_quantized
 //! ```
 
 use invarexplore::baselines::{self, Method};
 use invarexplore::calib::CalibSet;
 use invarexplore::coordinator::Session;
 use invarexplore::quant::QuantScheme;
-use invarexplore::serve::{Request, ServeOpts, Server};
+use invarexplore::serve::{AdmissionPolicy, FnSink, Request, Scheduler, ServeOpts};
 use invarexplore::util::rng::Pcg64;
 use invarexplore::util::sampling::Sampler;
 
@@ -38,10 +42,12 @@ fn main() -> anyhow::Result<()> {
         pm.n_packed()
     );
 
-    // --- serve: batched generation with per-sequence KV caches ------------
-    let batch = 8;
+    // --- serve: continuous batching with prefix caching + streaming -------
+    let batch = 4;
+    let n_requests = 8;
     let max_seq = pm.config().max_seq;
     let prompt_len = usize::min(32, max_seq / 2);
+    let shared_len = prompt_len / 2; // half the prompt is a shared prefix
     let gen_tokens = 24;
     let wiki = session.corpus("wiki")?;
     anyhow::ensure!(
@@ -50,32 +56,68 @@ fn main() -> anyhow::Result<()> {
     );
 
     // SERVE_SAMPLER overrides decoding for the whole batch (greedy,
-    // temp:<t>, topk:<k>[:<t>]); default is half greedy / half top-k.
+    // temp:<t>, topk:<k>[:<t>]); SERVE_POLICY picks admission (fcfs|spf|edf)
     let override_sampler = match std::env::var("SERVE_SAMPLER") {
         Ok(spec) => Some(Sampler::parse(&spec)?),
         Err(_) => None,
     };
-    let mut server = Server::new(&pm, ServeOpts { max_batch: batch, seed: 0 });
+    let policy = match std::env::var("SERVE_POLICY") {
+        Ok(spec) => AdmissionPolicy::parse(&spec)?,
+        Err(_) => AdmissionPolicy::Fcfs,
+    };
+    let mut scheduler = Scheduler::new(
+        &pm,
+        ServeOpts { max_batch: batch, policy, prefix_cache: true, ..Default::default() },
+    );
+
     let mut rng = Pcg64::new(7);
-    for i in 0..batch {
-        // bounds-checked prompt sampling: any batch size works on any corpus
-        let start = rng.below(wiki.tokens.len() - prompt_len);
-        let prompt: Vec<i32> =
-            wiki.tokens[start..start + prompt_len].iter().map(|&t| t as i32).collect();
-        let sampler = override_sampler.unwrap_or(if i < batch / 2 {
+    // all prompts share a prefix (half the requests one prefix, half
+    // another), so the radix-trie prefix cache gets real hits
+    let starts: Vec<usize> =
+        (0..2).map(|_| rng.below(wiki.tokens.len() - prompt_len)).collect();
+    for i in 0..n_requests {
+        let base = starts[i % 2];
+        let shared: Vec<i32> =
+            wiki.tokens[base..base + shared_len].iter().map(|&t| t as i32).collect();
+        let tail_at = rng.below(wiki.tokens.len() - prompt_len);
+        let tail: Vec<i32> = wiki.tokens[tail_at..tail_at + (prompt_len - shared_len)]
+            .iter()
+            .map(|&t| t as i32)
+            .collect();
+        let prompt: Vec<i32> = shared.into_iter().chain(tail).collect();
+        let sampler = override_sampler.unwrap_or(if i < n_requests / 2 {
             Sampler::Greedy
         } else {
             Sampler::TopK { k: 8, temperature: 0.8 }
         });
-        server.submit(Request { id: i, prompt, max_new: gen_tokens, sampler });
+        let mut req = Request::new(i, prompt, gen_tokens, sampler);
+        if i == 0 {
+            // stream the first request's tokens as they are sampled; the
+            // scheduler clamps max_new to the remaining context, so compute
+            // the real stream length for the terminating newline
+            let stream_len = gen_tokens.min(max_seq - prompt_len);
+            req = req.with_sink(Box::new(FnSink(move |tok: i32, idx: usize| {
+                use std::io::Write;
+                if idx == 0 {
+                    print!("stream[0]: ");
+                }
+                print!("{tok} ");
+                if idx + 1 == stream_len {
+                    println!();
+                }
+                let _ = std::io::stdout().flush();
+            })));
+        }
+        scheduler.submit(req);
     }
 
-    let (completions, stats) = server.run();
+    let (completions, stats) = scheduler.run();
     println!("{}", stats.summary());
     for c in completions.iter().take(2) {
         let tail = &c.prompt[c.prompt.len().saturating_sub(4)..];
         let head = &c.generated[..c.generated.len().min(8)];
-        println!("sample {}: ...{tail:?} -> {head:?}", c.id);
+        println!("sample {} ({}): ...{tail:?} -> {head:?}", c.id, c.finish.label());
     }
+    println!("metrics: {}", scheduler.metrics().to_json().to_string());
     Ok(())
 }

@@ -182,12 +182,12 @@ fn main() {
     println!("decode (packed-direct, greedy, {gen} tokens): {packed_rate:.1} tok/s");
 
     // ---- end-to-end batched serving on the packed model -------------------
-    let mut server = Server::new(&pm, ServeOpts { max_batch: 4, seed: 0 });
+    let mut server = Server::new(&pm, ServeOpts { max_batch: 4, seed: 0, ..Default::default() });
     for i in 0..4 {
         let start = rng.below(64);
         let prompt: Vec<i32> =
             (start..start + 8).map(|t| (t % cfg.vocab) as i32).collect();
-        server.submit(Request { id: i, prompt, max_new: gen, sampler: Sampler::Greedy });
+        server.submit(Request::new(i, prompt, gen, Sampler::Greedy));
     }
     let (done, stats) = server.run();
     assert_eq!(done.len(), 4);

@@ -20,6 +20,8 @@
 //!    dense [`Weights`] or directly on the bit-packed deployment form
 //!    ([`crate::serve::PackedModel`]) without densifying it.
 
+use std::sync::Arc;
+
 use super::config::OptConfig;
 use super::Weights;
 use crate::tensor::ops::{self, layer_norm, linear, log_prob_at, relu, softmax_rows};
@@ -324,24 +326,46 @@ impl DecoderParams for Weights {
     }
 }
 
-/// Per-sequence key/value cache: one `[max_seq, d_model]` K and V store per
-/// layer, with the first `len` positions valid.  Feeding tokens through
-/// [`forward_cached`] appends to it, so each new token costs O(len) instead
-/// of the O(len²) full-context re-forward the serve example used to do.
+/// Positions per KV page (see [`KvCache`]).
+pub const KV_PAGE: usize = 16;
+
+/// Per-sequence key/value cache with **chunked page allocation**: each layer
+/// holds a list of refcounted pages of [`KV_PAGE`] positions, allocated on
+/// demand as tokens are fed — a short sequence holds
+/// `ceil(len / KV_PAGE)` pages instead of the eager `[max_seq, d_model]`
+/// store the PR-2 cache allocated up front (see [`KvCache::eager_bytes`]).
+///
+/// Pages are `Arc`-shared, which gives two copy-on-write operations the
+/// serving layer builds on:
+///
+/// * [`KvCache::fork_at`] — O(pages) snapshot of a prefix; the fork shares
+///   every page with its parent, and either side clones a page lazily the
+///   first time it writes to a shared one (`Arc::make_mut`).  This is what
+///   the radix-trie prefix cache (`serve::prefix`) hands out on a hit, so
+///   requests sharing a prompt prefix skip the shared portion of prefill.
+/// * [`KvCache::truncate`] — roll the sequence back to an earlier position
+///   (speculative decoding / retry paths), dropping now-unreferenced pages.
+///
+/// Feeding tokens through [`forward_cached`] appends to the cache, so each
+/// new token costs O(len) instead of the O(len²) full-context re-forward
+/// the serve example used to do.
 pub struct KvCache {
-    k: Vec<Tensor>,
-    v: Vec<Tensor>,
+    /// `k[layer][page]` — each page holds `KV_PAGE * d_model` floats.
+    k: Vec<Vec<Arc<Vec<f32>>>>,
+    v: Vec<Vec<Arc<Vec<f32>>>>,
     len: usize,
     max_seq: usize,
+    d_model: usize,
 }
 
 impl KvCache {
     pub fn new(cfg: &OptConfig) -> KvCache {
         KvCache {
-            k: (0..cfg.n_layers).map(|_| Tensor::zeros(cfg.max_seq, cfg.d_model)).collect(),
-            v: (0..cfg.n_layers).map(|_| Tensor::zeros(cfg.max_seq, cfg.d_model)).collect(),
+            k: (0..cfg.n_layers).map(|_| Vec::new()).collect(),
+            v: (0..cfg.n_layers).map(|_| Vec::new()).collect(),
             len: 0,
             max_seq: cfg.max_seq,
+            d_model: cfg.d_model,
         }
     }
 
@@ -359,9 +383,101 @@ impl KvCache {
         self.max_seq - self.len
     }
 
-    /// Reset for a new sequence (buffers are reused, not reallocated).
+    /// Reset for a new sequence, releasing all pages — so
+    /// [`KvCache::allocated_bytes`] / [`KvCache::page_refs`] never report a
+    /// previous sequence's pages as resident (the live-KV gauge in
+    /// `serve::metrics` is built on them).
     pub fn clear(&mut self) {
+        for ps in self.k.iter_mut().chain(self.v.iter_mut()) {
+            ps.clear();
+        }
         self.len = 0;
+    }
+
+    /// Key row of `pos` at layer `l` (must be `< len`, or freshly written).
+    #[inline]
+    pub fn k_row(&self, l: usize, pos: usize) -> &[f32] {
+        let off = (pos % KV_PAGE) * self.d_model;
+        &self.k[l][pos / KV_PAGE][off..off + self.d_model]
+    }
+
+    /// Value row of `pos` at layer `l`.
+    #[inline]
+    pub fn v_row(&self, l: usize, pos: usize) -> &[f32] {
+        let off = (pos % KV_PAGE) * self.d_model;
+        &self.v[l][pos / KV_PAGE][off..off + self.d_model]
+    }
+
+    /// Write the K/V rows of `pos` at layer `l`, allocating (or
+    /// copy-on-write cloning) pages as needed.  Does not advance `len`;
+    /// [`forward_cached`] commits the new length after all layers wrote.
+    pub fn put(&mut self, l: usize, pos: usize, krow: &[f32], vrow: &[f32]) {
+        debug_assert!(pos < self.max_seq, "KV put past max_seq");
+        let d = self.d_model;
+        let (pi, off) = (pos / KV_PAGE, (pos % KV_PAGE) * d);
+        let page_floats = KV_PAGE * d;
+        let kp = Self::page_mut(&mut self.k[l], pi, page_floats);
+        kp[off..off + d].copy_from_slice(krow);
+        let vp = Self::page_mut(&mut self.v[l], pi, page_floats);
+        vp[off..off + d].copy_from_slice(vrow);
+    }
+
+    fn page_mut(pages: &mut Vec<Arc<Vec<f32>>>, pi: usize, page_floats: usize) -> &mut Vec<f32> {
+        while pages.len() <= pi {
+            pages.push(Arc::new(vec![0.0; page_floats]));
+        }
+        Arc::make_mut(&mut pages[pi])
+    }
+
+    /// Snapshot the first `pos` cached positions as a new cache sharing
+    /// every page with `self` (refcounted; copy-on-write on either side).
+    /// `pos` may be anywhere in `0..=len()`, including mid-page.
+    pub fn fork_at(&self, pos: usize) -> KvCache {
+        assert!(pos <= self.len, "fork_at({pos}) beyond cached len {}", self.len);
+        let n_pages = pos.div_ceil(KV_PAGE);
+        KvCache {
+            k: self.k.iter().map(|ps| ps[..n_pages.min(ps.len())].to_vec()).collect(),
+            v: self.v.iter().map(|ps| ps[..n_pages.min(ps.len())].to_vec()).collect(),
+            len: pos,
+            max_seq: self.max_seq,
+            d_model: self.d_model,
+        }
+    }
+
+    /// Roll the sequence back to `pos` positions, dropping whole pages past
+    /// the cut (a partially-covered last page is kept; its stale tail is
+    /// overwritten before it can be read again).
+    pub fn truncate(&mut self, pos: usize) {
+        assert!(pos <= self.len, "truncate({pos}) beyond cached len {}", self.len);
+        let n_pages = pos.div_ceil(KV_PAGE);
+        for ps in self.k.iter_mut().chain(self.v.iter_mut()) {
+            ps.truncate(n_pages);
+        }
+        self.len = pos;
+    }
+
+    /// Bytes held by this cache's allocated pages (pages shared with a fork
+    /// are counted in full here; use [`KvCache::page_refs`] to dedup).
+    pub fn allocated_bytes(&self) -> usize {
+        let page_bytes = KV_PAGE * self.d_model * std::mem::size_of::<f32>();
+        self.k.iter().chain(self.v.iter()).map(|ps| ps.len() * page_bytes).sum()
+    }
+
+    /// `(address, bytes)` of every allocated page — lets callers holding
+    /// several forks account unique live KV bytes (dedup by address).
+    pub fn page_refs(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        let page_bytes = KV_PAGE * self.d_model * std::mem::size_of::<f32>();
+        self.k
+            .iter()
+            .chain(self.v.iter())
+            .flatten()
+            .map(move |p| (Arc::as_ptr(p) as usize, page_bytes))
+    }
+
+    /// What the PR-2 eager cache allocated per sequence up front:
+    /// full-context K and V stores for every layer.
+    pub fn eager_bytes(cfg: &OptConfig) -> usize {
+        cfg.n_layers * 2 * cfg.max_seq * cfg.d_model * std::mem::size_of::<f32>()
     }
 }
 
@@ -413,16 +529,12 @@ pub fn forward_cached<P: DecoderParams + ?Sized>(
         let q = p.linear(l, "q", &h);
         let k_new = p.linear(l, "k", &h);
         let v_new = p.linear(l, "v", &h);
-        {
-            let kc = &mut cache.k[l];
-            let vc = &mut cache.v[l];
-            for i in 0..t_new {
-                kc.row_mut(p0 + i).copy_from_slice(k_new.row(i));
-                vc.row_mut(p0 + i).copy_from_slice(v_new.row(i));
-            }
+        for i in 0..t_new {
+            cache.put(l, p0 + i, k_new.row(i), v_new.row(i));
         }
-        let kc = &cache.k[l];
-        let vc = &cache.v[l];
+        // K/V rows are read through the inlined page arithmetic of
+        // k_row/v_row (div + mod per access) — no per-layer gather
+        // allocation on the decode hot path
         let mut attn_out = Tensor::zeros(t_new, cfg.d_model);
         for head in 0..heads {
             let c0 = head * hd;
@@ -431,7 +543,7 @@ pub fn forward_cached<P: DecoderParams + ?Sized>(
                 let ctx = p0 + i + 1; // causal: attend to positions 0..=p0+i
                 let scores = &mut scores[..ctx];
                 for (j, s) in scores.iter_mut().enumerate() {
-                    *s = ops::dot(qr, &kc.row(j)[c0..c0 + hd]) * scale;
+                    *s = ops::dot(qr, &cache.k_row(l, j)[c0..c0 + hd]) * scale;
                 }
                 let mx = scores.iter().fold(f32::NEG_INFINITY, |m, v| m.max(*v));
                 let mut sum = 0.0f32;
@@ -446,7 +558,7 @@ pub fn forward_cached<P: DecoderParams + ?Sized>(
                     if wgt == 0.0 {
                         continue;
                     }
-                    let vr = &vc.row(j)[c0..c0 + hd];
+                    let vr = &cache.v_row(l, j)[c0..c0 + hd];
                     for c in 0..hd {
                         orow[c] += wgt * vr[c];
                     }
@@ -649,12 +761,17 @@ mod tests {
     }
 
     #[test]
-    fn cache_clear_reuses_buffers() {
+    fn cache_clear_resets_state_and_accounting() {
         let (w, toks, ..) = setup();
         let mut cache = KvCache::new(&w.config);
         let a = prefill(&w, &mut cache, &toks[0]);
         let b = prefill(&w, &mut cache, &toks[0]); // clear + refill
         assert_eq!(a, b);
+        // clear releases pages: a reused cache never reports the previous
+        // sequence's pages as resident
+        cache.clear();
+        assert_eq!(cache.allocated_bytes(), 0);
+        assert_eq!(cache.page_refs().count(), 0);
     }
 
     #[test]
@@ -666,6 +783,102 @@ mod tests {
         let toks = vec![1i32; cfg.max_seq];
         prefill(&w, &mut cache, &toks);
         decode_step(&w, &mut cache, 1); // one past max_seq
+    }
+
+    #[test]
+    fn chunked_pages_allocate_lazily() {
+        let cfg = OptConfig::test_config();
+        let w = Weights::random(cfg.clone(), 1);
+        let mut cache = KvCache::new(&cfg);
+        assert_eq!(cache.allocated_bytes(), 0, "no pages before any token");
+        prefill(&w, &mut cache, &[3i32; 5]);
+        // 5 tokens fit in one KV_PAGE page per layer per K/V store
+        let page_bytes = KV_PAGE * cfg.d_model * 4;
+        assert_eq!(cache.allocated_bytes(), cfg.n_layers * 2 * page_bytes);
+        assert!(
+            cache.allocated_bytes() < KvCache::eager_bytes(&cfg),
+            "short sequences must hold fewer bytes than the eager full-context cache"
+        );
+    }
+
+    #[test]
+    fn fork_at_zero_mid_and_len_continue_bit_identically() {
+        let cfg = OptConfig::test_config();
+        let w = Weights::random(cfg.clone(), 5);
+        let mut rng = crate::util::rng::Pcg64::new(11);
+        let seq: Vec<i32> = (0..20).map(|_| rng.below(cfg.vocab) as i32).collect();
+        let mut base = KvCache::new(&cfg);
+        prefill(&w, &mut base, &seq);
+
+        for cut in [0usize, 7, seq.len()] {
+            let mut fork = base.fork_at(cut);
+            assert_eq!(fork.len(), cut);
+            let cont: Vec<i32> = (0..4).map(|i| ((cut + i) % cfg.vocab) as i32).collect();
+            let from_fork = forward_cached(&w, &mut fork, &cont);
+            let mut fresh = KvCache::new(&cfg);
+            let full: Vec<i32> = seq[..cut].iter().chain(&cont).copied().collect();
+            let from_fresh = forward_cached(&w, &mut fresh, &full);
+            assert_eq!(from_fork, from_fresh, "fork at {cut} diverged");
+        }
+
+        // copy-on-write: the mid-page fork wrote into a shared page above,
+        // but the parent's state must be untouched
+        let d = decode_step(&w, &mut base, 1);
+        let mut control = KvCache::new(&cfg);
+        prefill(&w, &mut control, &seq);
+        let d2 = decode_step(&w, &mut control, 1);
+        assert_eq!(d, d2, "fork writes leaked into the parent cache");
+    }
+
+    #[test]
+    fn truncate_rolls_back_then_refills() {
+        let cfg = OptConfig::test_config();
+        let w = Weights::random(cfg.clone(), 6);
+        let seq: Vec<i32> = (0..18).map(|i| (i * 5 % cfg.vocab) as i32).collect();
+        let mut cache = KvCache::new(&cfg);
+        prefill(&w, &mut cache, &seq);
+        cache.truncate(9);
+        assert_eq!(cache.len(), 9);
+        let alt = [4i32, 9, 2];
+        let a = forward_cached(&w, &mut cache, &alt);
+        let mut fresh = KvCache::new(&cfg);
+        let full: Vec<i32> = seq[..9].iter().chain(&alt).copied().collect();
+        let b = forward_cached(&w, &mut fresh, &full);
+        assert_eq!(a, b, "decode after truncate diverged from fresh prefix");
+        cache.truncate(0);
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn fork_shares_pages_until_write() {
+        use std::collections::HashSet;
+        let cfg = OptConfig::test_config();
+        let w = Weights::random(cfg.clone(), 7);
+        let mut cache = KvCache::new(&cfg);
+        prefill(&w, &mut cache, &[2i32; 20]);
+        let fork = cache.fork_at(20);
+        let parent: HashSet<usize> = cache.page_refs().map(|(p, _)| p).collect();
+        assert!(
+            fork.page_refs().all(|(p, _)| parent.contains(&p)),
+            "a fresh fork must alias its parent's pages"
+        );
+        // unique accounting: parent + full fork hold one page set
+        let mut seen = HashSet::new();
+        let mut unique = 0usize;
+        for (ptr, b) in cache.page_refs().chain(fork.page_refs()) {
+            if seen.insert(ptr) {
+                unique += b;
+            }
+        }
+        assert_eq!(unique, cache.allocated_bytes());
+    }
+
+    #[test]
+    #[should_panic(expected = "fork_at")]
+    fn fork_past_len_panics() {
+        let cfg = OptConfig::test_config();
+        let cache = KvCache::new(&cfg);
+        cache.fork_at(1);
     }
 
     #[test]

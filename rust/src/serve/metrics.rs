@@ -1,0 +1,274 @@
+//! Production telemetry for the serve scheduler: fixed log-bucket latency
+//! histograms (TTFT, inter-token), queue depth, prefix-cache hit rate and
+//! live-KV accounting, serialized through [`crate::util::json`].
+//!
+//! Everything is fixed-size and allocation-free on the record path, so the
+//! scheduler can stamp every token without perturbing the latencies it is
+//! measuring.
+
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+const N_BUCKETS: usize = 31;
+
+/// Fixed log₂-bucket latency histogram: bucket `i` counts samples in
+/// `[2^i µs, 2^(i+1) µs)`, covering 1 µs up to ~35 minutes.  Quantiles are
+/// bucket upper bounds (≤ 2x overestimate), which is enough resolution for
+/// p50/p95/p99 serving dashboards.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    buckets: [u64; N_BUCKETS],
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram { buckets: [0; N_BUCKETS], count: 0, sum_us: 0, max_us: 0 }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros().min(u64::MAX as u128) as u64;
+        let i = (us.max(1).ilog2() as usize).min(N_BUCKETS - 1);
+        self.buckets[i] += 1;
+        self.count += 1;
+        self.sum_us = self.sum_us.saturating_add(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_micros(self.sum_us / self.count)
+        }
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us)
+    }
+
+    /// Upper bound of the bucket holding the `q`-quantile sample (clamped
+    /// to the true maximum so p100 is exact).
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= rank {
+                let upper = 1u64 << (i + 1).min(63);
+                return Duration::from_micros(upper.min(self.max_us.max(1)));
+            }
+        }
+        Duration::from_micros(self.max_us)
+    }
+
+    /// `{count, mean_us, p50_us, p95_us, p99_us, max_us}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("count", self.count as usize)
+            .set("mean_us", self.mean().as_micros() as f64)
+            .set("p50_us", self.quantile(0.50).as_micros() as f64)
+            .set("p95_us", self.quantile(0.95).as_micros() as f64)
+            .set("p99_us", self.quantile(0.99).as_micros() as f64)
+            .set("max_us", self.max_us as f64)
+    }
+}
+
+/// Telemetry for one scheduler run (or several — it accumulates).
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    /// Submit → first sampled token, per request.
+    pub ttft: Histogram,
+    /// Gap between consecutive tokens of one sequence, per decode step.
+    pub inter_token: Histogram,
+    queue_depth_sum: u64,
+    queue_depth_max: usize,
+    queue_samples: u64,
+    /// Prefix-cache counters (mirrors `serve::prefix::PrefixStats`).
+    pub prefix_lookups: u64,
+    pub prefix_hits: u64,
+    /// Prompt tokens whose prefill was skipped thanks to prefix reuse.
+    pub prefix_hit_tokens: u64,
+    pub prefix_evictions: u64,
+    /// Peak unique live KV bytes (active sequences + prefix cache, shared
+    /// pages counted once).
+    pub kv_live_bytes_peak: usize,
+    /// What eager full-context allocation would have resident at the same
+    /// peak (PR-2's per-sequence `[max_seq, d_model]` stores).
+    pub kv_eager_bytes_peak: usize,
+    /// Finish-reason counters.
+    pub finished_length: u64,
+    pub finished_stop: u64,
+    pub cancelled: u64,
+    pub rejected: u64,
+}
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        ServeMetrics::default()
+    }
+
+    /// Sample the queue depth at an admission round.
+    pub fn record_queue_depth(&mut self, depth: usize) {
+        self.queue_depth_sum += depth as u64;
+        self.queue_depth_max = self.queue_depth_max.max(depth);
+        self.queue_samples += 1;
+    }
+
+    pub fn queue_depth_max(&self) -> usize {
+        self.queue_depth_max
+    }
+
+    pub fn queue_depth_mean(&self) -> f64 {
+        if self.queue_samples == 0 {
+            0.0
+        } else {
+            self.queue_depth_sum as f64 / self.queue_samples as f64
+        }
+    }
+
+    /// Fraction of prefix-cache lookups that reused at least one token.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / self.prefix_lookups as f64
+        }
+    }
+
+    /// Record a live-KV snapshot; keeps the peak.
+    pub fn record_kv_bytes(&mut self, live: usize, eager_equivalent: usize) {
+        self.kv_live_bytes_peak = self.kv_live_bytes_peak.max(live);
+        self.kv_eager_bytes_peak = self.kv_eager_bytes_peak.max(eager_equivalent);
+    }
+
+    /// Full telemetry dump (the serve example prints this).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("ttft", self.ttft.to_json())
+            .set("inter_token", self.inter_token.to_json())
+            .set(
+                "queue",
+                Json::obj()
+                    .set("depth_max", self.queue_depth_max)
+                    .set("depth_mean", self.queue_depth_mean())
+                    .set("samples", self.queue_samples as usize),
+            )
+            .set(
+                "prefix_cache",
+                Json::obj()
+                    .set("lookups", self.prefix_lookups as usize)
+                    .set("hits", self.prefix_hits as usize)
+                    .set("hit_rate", self.prefix_hit_rate())
+                    .set("hit_tokens", self.prefix_hit_tokens as usize)
+                    .set("evictions", self.prefix_evictions as usize),
+            )
+            .set(
+                "kv",
+                Json::obj()
+                    .set("live_bytes_peak", self.kv_live_bytes_peak)
+                    .set("eager_bytes_peak", self.kv_eager_bytes_peak),
+            )
+            .set(
+                "finished",
+                Json::obj()
+                    .set("length", self.finished_length as usize)
+                    .set("stop", self.finished_stop as usize)
+                    .set("cancelled", self.cancelled as usize)
+                    .set("rejected", self.rejected as usize),
+            )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_bracket_samples() {
+        let mut h = Histogram::new();
+        for ms in [1u64, 2, 4, 8, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 5);
+        let p50 = h.quantile(0.5);
+        // third sample is 4ms; bucket upper bound gives at most 2x
+        assert!(p50 >= Duration::from_millis(4) && p50 <= Duration::from_millis(8), "{p50:?}");
+        // p100 is clamped to the true max
+        assert_eq!(h.quantile(1.0), Duration::from_millis(100));
+        assert!(h.quantile(0.99) <= Duration::from_millis(100));
+        assert!(h.mean() >= Duration::from_millis(20));
+    }
+
+    #[test]
+    fn histogram_empty_and_zero() {
+        let mut h = Histogram::new();
+        assert_eq!(h.quantile(0.5), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+        h.record(Duration::ZERO); // lands in the first bucket, no panic
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn histogram_ordering_monotone() {
+        let mut h = Histogram::new();
+        let mut us = 1u64;
+        for _ in 0..20 {
+            h.record(Duration::from_micros(us));
+            us = us.saturating_mul(3);
+        }
+        assert!(h.quantile(0.5) <= h.quantile(0.95));
+        assert!(h.quantile(0.95) <= h.quantile(0.99));
+        assert!(h.quantile(0.99) <= h.quantile(1.0));
+    }
+
+    #[test]
+    fn metrics_json_shape() {
+        let mut m = ServeMetrics::new();
+        m.ttft.record(Duration::from_millis(3));
+        m.inter_token.record(Duration::from_micros(700));
+        m.record_queue_depth(4);
+        m.record_queue_depth(2);
+        m.prefix_lookups = 4;
+        m.prefix_hits = 1;
+        m.prefix_hit_tokens = 64;
+        m.record_kv_bytes(1000, 4000);
+        m.finished_length = 2;
+        let j = m.to_json();
+        assert_eq!(j.get("queue").unwrap().get("depth_max").unwrap().as_usize(), Some(4));
+        let pc = j.get("prefix_cache").unwrap();
+        assert_eq!(pc.get("hit_tokens").unwrap().as_usize(), Some(64));
+        assert!((pc.get("hit_rate").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-12);
+        assert_eq!(j.get("kv").unwrap().get("live_bytes_peak").unwrap().as_usize(), Some(1000));
+        assert!(j.get("ttft").unwrap().get("p95_us").unwrap().as_f64().unwrap() > 0.0);
+        // the dump is valid JSON round-trip
+        let text = j.to_string();
+        assert!(crate::util::json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn queue_depth_mean() {
+        let mut m = ServeMetrics::new();
+        assert_eq!(m.queue_depth_mean(), 0.0);
+        m.record_queue_depth(3);
+        m.record_queue_depth(5);
+        assert!((m.queue_depth_mean() - 4.0).abs() < 1e-12);
+        assert_eq!(m.queue_depth_max(), 5);
+    }
+}

@@ -1,28 +1,52 @@
-//! Native packed-inference serving: a batched admission loop that prefills
-//! each prompt once and then decodes every active sequence one token per
-//! round against its own per-sequence [`KvCache`] — replacing the
-//! full-context re-forward per token the serve example used to do.
+//! Native packed-inference serving: a **continuous-batching scheduler**
+//! over the incremental decode path, replacing the PR-2 drain loop.
 //!
-//! The server is generic over [`DecoderParams`], so the same loop serves a
+//! * [`scheduler`] — the engine: a pluggable [`AdmissionPolicy`] (FCFS,
+//!   shortest-prompt-first, deadline-aware) fills freed decode slots
+//!   mid-flight; malformed requests are *rejected with an error completion*
+//!   ([`FinishReason::Rejected`]) instead of panicking the server; requests
+//!   can be cancelled (queued or in-flight) through a [`CancelHandle`].
+//! * [`prefix`] — a radix-trie prefix cache over token prefixes with
+//!   refcounted KV pages and LRU eviction: requests sharing a prompt
+//!   prefix skip the shared portion of prefill entirely
+//!   (`KvCache::fork_at` in `model::native`).
+//! * [`stream`] — per-request token sinks (streaming callbacks),
+//!   stop-token / stop-sequence termination, and the finish reason
+//!   attached to every [`Completion`].
+//! * [`metrics`] — production telemetry: TTFT and inter-token latency
+//!   histograms (p50/p95/p99), queue depth, prefix-cache hit rate and live
+//!   KV bytes, dumped through `util::json`.
+//!
+//! The engine is generic over [`DecoderParams`], so the same loop serves a
 //! dense [`crate::model::Weights`] or a [`PackedModel`] computing directly
 //! on the bit-packed deployment weights (fused unpack→dequant→GEMV kernels
 //! in `quant::packed` — no dense f32 materialization of quantized linears).
 //!
 //! Sampling is deterministic per request: every request draws from its own
-//! RNG stream (`seed` ⊕ request id), so completions do not depend on batch
-//! composition, admission order, or the number of pool threads — pinned by
-//! `batch_size_does_not_change_outputs`.
+//! RNG stream (`seed` ⊕ request id), and every kernel on the path computes
+//! each sequence position independently, so completions are **bit-identical
+//! across batch size, admission policy, thread count, and prefix cache
+//! on/off** — pinned by `completions_invariant_to_batch_policy_and_prefix`.
+//!
+//! [`DecoderParams`]: crate::model::native::DecoderParams
 
+pub mod metrics;
 pub mod model;
+pub mod prefix;
+pub mod scheduler;
+pub mod stream;
 
+pub use metrics::{Histogram, ServeMetrics};
 pub use model::PackedModel;
+pub use prefix::{PrefixCache, PrefixStats};
+/// The serving engine is also exported under PR-2's `Server` name, so
+/// existing call sites keep working.
+pub use scheduler::Scheduler as Server;
+pub use scheduler::{AdmissionPolicy, CancelHandle, Scheduler};
+pub use stream::{ChannelSink, FinishReason, FnSink, StopCondition, StreamEvent, TokenSink};
 
-use std::collections::VecDeque;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use crate::model::native::{self, DecoderParams, KvCache};
-use crate::util::pool;
-use crate::util::rng::Pcg64;
 use crate::util::sampling::Sampler;
 
 /// One generation request.
@@ -32,37 +56,113 @@ pub struct Request {
     /// Tokens to generate; clamped to the remaining context on admission.
     pub max_new: usize,
     pub sampler: Sampler,
+    /// Tokens that terminate generation ([`FinishReason::Stop`]).
+    pub stop: Vec<i32>,
+    /// Token sequences that terminate generation once the generated tail
+    /// matches one of them.
+    pub stop_seqs: Vec<Vec<i32>>,
+    /// Admission priority: lower admits first under every policy
+    /// (policy-specific ordering breaks ties).
+    pub priority: i32,
+    /// Soft deadline in milliseconds from submission; orders admission
+    /// under [`AdmissionPolicy::Deadline`] (earliest deadline first).
+    pub deadline_ms: Option<u64>,
+    /// Streaming sink receiving every sampled token and the finish reason.
+    pub sink: Option<Box<dyn TokenSink>>,
 }
 
-/// A finished request.
-#[derive(Debug, Clone)]
+impl Request {
+    pub fn new(id: usize, prompt: Vec<i32>, max_new: usize, sampler: Sampler) -> Request {
+        Request {
+            id,
+            prompt,
+            max_new,
+            sampler,
+            stop: Vec::new(),
+            stop_seqs: Vec::new(),
+            priority: 0,
+            deadline_ms: None,
+            sink: None,
+        }
+    }
+
+    pub fn with_stop(mut self, stop: Vec<i32>) -> Request {
+        self.stop = stop;
+        self
+    }
+
+    pub fn with_stop_seqs(mut self, seqs: Vec<Vec<i32>>) -> Request {
+        self.stop_seqs = seqs;
+        self
+    }
+
+    pub fn with_priority(mut self, priority: i32) -> Request {
+        self.priority = priority;
+        self
+    }
+
+    pub fn with_deadline_ms(mut self, ms: u64) -> Request {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
+    pub fn with_sink(mut self, sink: Box<dyn TokenSink>) -> Request {
+        self.sink = Some(sink);
+        self
+    }
+}
+
+/// A finished request.  Every submitted request produces exactly one
+/// completion — including rejected and cancelled ones (`finish` says why).
+#[derive(Debug, Clone, PartialEq)]
 pub struct Completion {
     pub id: usize,
     pub prompt: Vec<i32>,
     pub generated: Vec<i32>,
+    pub finish: FinishReason,
 }
 
-/// Server knobs.
+/// Scheduler knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct ServeOpts {
     /// Maximum sequences decoded concurrently per round.
     pub max_batch: usize,
     /// Base sampling seed (each request gets its own stream, split by id).
     pub seed: u64,
+    /// Order in which queued requests claim freed decode slots.
+    pub policy: AdmissionPolicy,
+    /// Reuse KV pages across requests sharing prompt prefixes.
+    pub prefix_cache: bool,
+    /// Unique-page byte budget of the prefix cache (LRU eviction past it).
+    pub prefix_cache_bytes: usize,
 }
 
 impl Default for ServeOpts {
     fn default() -> Self {
-        ServeOpts { max_batch: 8, seed: 0 }
+        ServeOpts {
+            max_batch: 8,
+            seed: 0,
+            policy: AdmissionPolicy::Fcfs,
+            prefix_cache: false,
+            prefix_cache_bytes: 32 << 20,
+        }
     }
 }
 
-/// Latency/throughput accounting for one [`Server::run`].
+/// Latency/throughput accounting for one [`Scheduler::run`].
 #[derive(Debug, Clone, Default)]
 pub struct ServeStats {
     pub requests: usize,
-    /// Prompt tokens processed during prefill.
+    /// Requests rejected at admission (malformed — see
+    /// [`FinishReason::Rejected`]).
+    pub rejected: usize,
+    /// Requests cancelled (queued or mid-flight).
+    pub cancelled: usize,
+    /// Prompt tokens actually processed during prefill (prefix-cache hits
+    /// excluded).
     pub prefill_tokens: usize,
+    /// Prompt tokens served from the prefix cache instead of prefill.
+    pub prefix_hit_tokens: usize,
     /// All sampled tokens (including the one sampled at the prefill step).
     pub generated_tokens: usize,
     /// Tokens sampled in decode rounds only (excludes prefill samples).
@@ -87,237 +187,19 @@ impl ServeStats {
 
     pub fn summary(&self) -> String {
         format!(
-            "served {} requests: {} prompt tokens prefilled in {:.1?}; \
+            "served {} requests ({} rejected, {} cancelled): {} prompt tokens \
+             prefilled (+{} reused from prefix cache) in {:.1?}; \
              {} tokens generated over {} decode rounds in {:.1?} ({:.1} tok/s decode)",
             self.requests,
+            self.rejected,
+            self.cancelled,
             self.prefill_tokens,
+            self.prefix_hit_tokens,
             self.prefill_time,
             self.generated_tokens,
             self.decode_steps,
             self.decode_time,
             self.decode_tok_per_sec(),
         )
-    }
-}
-
-/// An admitted in-flight sequence.
-struct Active {
-    req: Request,
-    cache: KvCache,
-    generated: Vec<i32>,
-    /// Most recently sampled token, not yet fed back through the model.
-    last: i32,
-    rng: Pcg64,
-}
-
-/// Batched serving loop over any [`DecoderParams`] source.
-pub struct Server<'a, P: DecoderParams + ?Sized> {
-    params: &'a P,
-    opts: ServeOpts,
-    queue: VecDeque<Request>,
-}
-
-impl<'a, P: DecoderParams + ?Sized> Server<'a, P> {
-    pub fn new(params: &'a P, opts: ServeOpts) -> Server<'a, P> {
-        assert!(opts.max_batch >= 1, "max_batch must be >= 1");
-        Server { params, opts, queue: VecDeque::new() }
-    }
-
-    pub fn submit(&mut self, req: Request) {
-        self.queue.push_back(req);
-    }
-
-    pub fn pending(&self) -> usize {
-        self.queue.len()
-    }
-
-    /// Drain the queue to completion: admit up to `max_batch` sequences,
-    /// prefill the admitted prompts in parallel (once each), then decode
-    /// all active sequences one token per round (data-parallel over
-    /// sequences — each owns its KV cache).
-    pub fn run(&mut self) -> (Vec<Completion>, ServeStats) {
-        let params = self.params;
-        let max_seq = params.config().max_seq;
-        let mut stats = ServeStats::default();
-        let mut done: Vec<Completion> = Vec::new();
-        let mut active: Vec<Active> = Vec::new();
-
-        while !self.queue.is_empty() || !active.is_empty() {
-            // -- admission: claim free slots, validate, set up state ---------
-            let mut admitted: Vec<Active> = Vec::new();
-            while active.len() + admitted.len() < self.opts.max_batch {
-                let Some(mut req) = self.queue.pop_front() else { break };
-                assert!(!req.prompt.is_empty(), "request {}: empty prompt", req.id);
-                assert!(
-                    req.prompt.len() < max_seq,
-                    "request {}: prompt len {} must leave room in max_seq {}",
-                    req.id,
-                    req.prompt.len(),
-                    max_seq
-                );
-                req.max_new = req.max_new.min(max_seq - req.prompt.len());
-                stats.requests += 1;
-                if req.max_new == 0 {
-                    done.push(Completion { id: req.id, prompt: req.prompt, generated: Vec::new() });
-                    continue;
-                }
-                stats.prefill_tokens += req.prompt.len();
-                let cache = KvCache::new(params.config());
-                let rng = Pcg64::with_stream(self.opts.seed, req.id as u64);
-                admitted.push(Active { req, cache, generated: Vec::new(), last: 0, rng });
-            }
-
-            // -- prefill the admitted batch in parallel (one prompt each) ----
-            if !admitted.is_empty() {
-                let t0 = Instant::now();
-                let threads = pool::num_threads().min(admitted.len());
-                pool::parallel_chunks_mut(&mut admitted, 1, threads, |_i, slot| {
-                    let a = &mut slot[0];
-                    let logits = native::prefill(params, &mut a.cache, &a.req.prompt);
-                    let first = a.req.sampler.sample(&logits, &mut a.rng) as i32;
-                    a.generated.push(first);
-                    a.last = first;
-                });
-                stats.prefill_time += t0.elapsed();
-                stats.generated_tokens += admitted.len();
-                active.append(&mut admitted);
-            }
-
-            // -- retire finished sequences (frees admission slots) -----------
-            let mut i = 0;
-            while i < active.len() {
-                if active[i].generated.len() >= active[i].req.max_new {
-                    let a = active.swap_remove(i);
-                    done.push(Completion {
-                        id: a.req.id,
-                        prompt: a.req.prompt,
-                        generated: a.generated,
-                    });
-                } else {
-                    i += 1;
-                }
-            }
-            if active.is_empty() {
-                continue; // admit more, or fall out when the queue is dry
-            }
-
-            // -- one decode round: every active sequence advances one token --
-            let t0 = Instant::now();
-            let threads = pool::num_threads().min(active.len());
-            pool::parallel_chunks_mut(&mut active, 1, threads, |_i, slot| {
-                let a = &mut slot[0];
-                let logits = native::decode_step(params, &mut a.cache, a.last);
-                let next = a.req.sampler.sample(&logits, &mut a.rng) as i32;
-                a.generated.push(next);
-                a.last = next;
-            });
-            stats.decode_time += t0.elapsed();
-            stats.decode_steps += 1;
-            stats.decoded_tokens += active.len();
-            stats.generated_tokens += active.len();
-        }
-
-        done.sort_by_key(|c| c.id);
-        (done, stats)
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::model::{OptConfig, Weights};
-
-    fn test_weights() -> Weights {
-        Weights::random(OptConfig::test_config(), 3)
-    }
-
-    fn requests(n: usize, vocab: usize) -> Vec<Request> {
-        let mut rng = Pcg64::new(5);
-        (0..n)
-            .map(|i| Request {
-                id: i,
-                prompt: (0..4 + i % 3).map(|_| rng.below(vocab) as i32).collect(),
-                max_new: 3 + i % 4,
-                sampler: if i % 2 == 0 {
-                    Sampler::Greedy
-                } else {
-                    Sampler::TopK { k: 4, temperature: 0.9 }
-                },
-            })
-            .collect()
-    }
-
-    #[test]
-    fn serves_all_requests_to_completion() {
-        let w = test_weights();
-        let mut server = Server::new(&w, ServeOpts { max_batch: 2, seed: 0 });
-        for r in requests(5, w.config.vocab) {
-            server.submit(r);
-        }
-        assert_eq!(server.pending(), 5);
-        let (done, stats) = server.run();
-        assert_eq!(done.len(), 5);
-        assert_eq!(stats.requests, 5);
-        let total: usize = done.iter().map(|c| c.generated.len()).sum();
-        assert_eq!(stats.generated_tokens, total);
-        // every request samples exactly one token at prefill time
-        assert_eq!(stats.decoded_tokens, total - 5);
-        for c in &done {
-            assert_eq!(c.generated.len(), 3 + c.id % 4);
-            assert!(c.generated.iter().all(|&t| (t as usize) < w.config.vocab));
-        }
-    }
-
-    #[test]
-    fn batch_size_does_not_change_outputs() {
-        let w = test_weights();
-        let run = |max_batch: usize| {
-            let mut s = Server::new(&w, ServeOpts { max_batch, seed: 42 });
-            for r in requests(6, w.config.vocab) {
-                s.submit(r);
-            }
-            let (done, _) = s.run();
-            done.into_iter().map(|c| c.generated).collect::<Vec<_>>()
-        };
-        assert_eq!(run(1), run(4));
-    }
-
-    #[test]
-    fn max_new_clamped_to_context() {
-        let w = test_weights();
-        let max_seq = w.config.max_seq;
-        let mut s = Server::new(&w, ServeOpts::default());
-        s.submit(Request {
-            id: 0,
-            prompt: vec![1; max_seq - 2],
-            max_new: 100,
-            sampler: Sampler::Greedy,
-        });
-        let (done, _) = s.run();
-        assert_eq!(done[0].generated.len(), 2);
-    }
-
-    #[test]
-    fn zero_max_new_completes_without_decoding() {
-        let w = test_weights();
-        let mut s = Server::new(&w, ServeOpts::default());
-        s.submit(Request { id: 7, prompt: vec![1, 2, 3], max_new: 0, sampler: Sampler::Greedy });
-        let (done, stats) = s.run();
-        assert_eq!(done.len(), 1);
-        assert!(done[0].generated.is_empty());
-        assert_eq!(stats.decode_steps, 0);
-        // the zero-max_new request never prefills or decodes, so the rate
-        // accounting must not go negative/undercount (review finding)
-        assert_eq!(stats.decoded_tokens, 0);
-        assert_eq!(stats.generated_tokens, 0);
-    }
-
-    #[test]
-    #[should_panic(expected = "empty prompt")]
-    fn empty_prompt_rejected() {
-        let w = test_weights();
-        let mut s = Server::new(&w, ServeOpts::default());
-        s.submit(Request { id: 0, prompt: vec![], max_new: 1, sampler: Sampler::Greedy });
-        s.run();
     }
 }

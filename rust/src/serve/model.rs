@@ -136,19 +136,20 @@ mod tests {
     fn serves_from_packed_without_densifying() {
         let (pm, _) = packed_pair();
         let vocab = pm.config().vocab;
-        let mut server = Server::new(&pm, ServeOpts { max_batch: 3, seed: 1 });
+        let mut server =
+            Server::new(&pm, ServeOpts { max_batch: 3, seed: 1, ..Default::default() });
         let mut rng = Pcg64::new(2);
         for i in 0..4 {
-            server.submit(Request {
-                id: i,
-                prompt: (0..6).map(|_| rng.below(vocab) as i32).collect(),
-                max_new: 5,
-                sampler: if i % 2 == 0 {
+            server.submit(Request::new(
+                i,
+                (0..6).map(|_| rng.below(vocab) as i32).collect(),
+                5,
+                if i % 2 == 0 {
                     Sampler::Greedy
                 } else {
                     Sampler::TopK { k: 8, temperature: 0.8 }
                 },
-            });
+            ));
         }
         let (done, stats) = server.run();
         assert_eq!(done.len(), 4);
@@ -166,25 +167,49 @@ mod tests {
         fn submit_reqs<P: DecoderParams + ?Sized>(server: &mut Server<'_, P>, vocab: usize) {
             let mut rng = Pcg64::new(8);
             for i in 0..3 {
-                server.submit(Request {
-                    id: i,
-                    prompt: (0..5).map(|_| rng.below(vocab) as i32).collect(),
-                    max_new: 4,
-                    sampler: Sampler::TopK { k: 4, temperature: 0.7 },
-                });
+                server.submit(Request::new(
+                    i,
+                    (0..5).map(|_| rng.below(vocab) as i32).collect(),
+                    4,
+                    Sampler::TopK { k: 4, temperature: 0.7 },
+                ));
             }
         }
         let (pm, dense) = packed_pair();
         let vocab = pm.config().vocab;
-        let mut s1 = Server::new(&pm, ServeOpts { max_batch: 2, seed: 3 });
+        let mut s1 = Server::new(&pm, ServeOpts { max_batch: 2, seed: 3, ..Default::default() });
         submit_reqs(&mut s1, vocab);
         let (d1, _) = s1.run();
-        let mut s2 = Server::new(&dense, ServeOpts { max_batch: 2, seed: 3 });
+        let mut s2 = Server::new(&dense, ServeOpts { max_batch: 2, seed: 3, ..Default::default() });
         submit_reqs(&mut s2, vocab);
         let (d2, _) = s2.run();
         for (a, b) in d1.iter().zip(&d2) {
             assert_eq!(a.generated, b.generated, "request {}", a.id);
         }
+    }
+
+    #[test]
+    fn packed_serving_unaffected_by_prefix_cache() {
+        // determinism survives on the packed-direct path too: fused-kernel
+        // prefill over a prefix-cache fork == full prefill, bit for bit
+        let (pm, _) = packed_pair();
+        let vocab = pm.config().vocab;
+        let run = |prefix_cache: bool| {
+            let mut s = Server::new(
+                &pm,
+                ServeOpts { max_batch: 2, seed: 5, prefix_cache, ..Default::default() },
+            );
+            let mut rng = Pcg64::new(3);
+            let shared: Vec<i32> = (0..6).map(|_| rng.below(vocab) as i32).collect();
+            for i in 0..4 {
+                let mut p = shared.clone();
+                p.push(rng.below(vocab) as i32);
+                s.submit(Request::new(i, p, 4, Sampler::TopK { k: 4, temperature: 0.8 }));
+            }
+            let (done, _) = s.run();
+            done.into_iter().map(|c| c.generated).collect::<Vec<_>>()
+        };
+        assert_eq!(run(true), run(false));
     }
 
     #[test]

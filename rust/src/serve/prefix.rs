@@ -1,0 +1,427 @@
+//! Radix-trie prefix cache over token sequences, backed by the refcounted
+//! KV pages of [`KvCache`].
+//!
+//! Each trie node stores the KV state of one cached prompt prefix; edges
+//! are token runs (path-compressed).  A lookup walks the trie along the
+//! incoming prompt and returns a [`KvCache::fork_at`] of the longest cached
+//! prefix — O(pages) and sharing every page with the stored entry — so the
+//! caller only prefills the unshared suffix.  Inserting a served prompt
+//! costs one fork; interior nodes created by edge splits share pages with
+//! their children, so the trie's unique footprint stays close to one copy
+//! of the distinct token content.
+//!
+//! Eviction is LRU over leaves against a **unique-byte** budget (shared
+//! pages counted once, see [`PrefixCache::bytes`]): evicting a leaf drops
+//! only the pages no surviving node references.
+//!
+//! Determinism: a hit changes *where* prefill computation happens, not its
+//! result — cached K/V rows are bit-identical to recomputation (row-wise
+//! independent kernels), pinned by `hit_continues_bit_identically` here and
+//! `prop_prefix_cache_is_transparent` in `serve::scheduler`.
+
+use std::collections::HashSet;
+
+use crate::model::native::KvCache;
+
+/// Trie-internal counters (the scheduler's `ServeMetrics` tracks reuse —
+/// including same-round chaining the trie can't see — itself; `evictions`
+/// is mirrored from here).
+#[derive(Debug, Clone, Default)]
+pub struct PrefixStats {
+    pub lookups: u64,
+    pub hits: u64,
+    /// Prompt tokens served from cache instead of prefill.
+    pub hit_tokens: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+}
+
+struct Node {
+    /// Tokens along the edge from the parent to this node.
+    edge: Vec<i32>,
+    /// KV state covering the whole prefix ending at this node
+    /// (`cache.len()` equals the prefix length).
+    cache: KvCache,
+    children: Vec<Node>,
+    /// LRU stamp (monotone clock, bumped on lookup/insert touches).
+    used: u64,
+}
+
+/// Radix-trie prefix cache with refcounted pages and LRU eviction.
+pub struct PrefixCache {
+    roots: Vec<Node>,
+    max_bytes: usize,
+    clock: u64,
+    stats: PrefixStats,
+}
+
+impl PrefixCache {
+    /// `max_bytes` bounds the unique page footprint; least-recently-used
+    /// leaves are evicted past it.
+    pub fn new(max_bytes: usize) -> PrefixCache {
+        PrefixCache { roots: Vec::new(), max_bytes, clock: 0, stats: PrefixStats::default() }
+    }
+
+    pub fn stats(&self) -> &PrefixStats {
+        &self.stats
+    }
+
+    /// Number of cached prefixes (trie nodes).
+    pub fn len(&self) -> usize {
+        fn count(nodes: &[Node]) -> usize {
+            nodes.iter().map(|n| 1 + count(&n.children)).sum()
+        }
+        count(&self.roots)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.roots.is_empty()
+    }
+
+    /// Longest cached proper prefix of `tokens`: `(matched_len, fork)`.
+    ///
+    /// Never matches all of `tokens` — the caller must re-feed at least the
+    /// last prompt token to obtain last-position logits — and only counts a
+    /// hit when at least one token is reused.
+    pub fn lookup(&mut self, tokens: &[i32]) -> Option<(usize, KvCache)> {
+        self.stats.lookups += 1;
+        self.clock += 1;
+        let clock = self.clock;
+        let limit = tokens.len().saturating_sub(1);
+        if limit == 0 {
+            return None;
+        }
+        let mut nodes = &mut self.roots;
+        let mut depth = 0usize;
+        let mut best: Option<(usize, KvCache)> = None;
+        loop {
+            let idx = match nodes.iter().position(|n| n.edge.first() == tokens.get(depth)) {
+                Some(i) => i,
+                None => break,
+            };
+            let cur = nodes;
+            let node = &mut cur[idx];
+            let mut m = 0;
+            while m < node.edge.len() && depth + m < limit && node.edge[m] == tokens[depth + m] {
+                m += 1;
+            }
+            // the position() match guarantees edge[0] == tokens[depth] and
+            // every path into the loop has depth < limit, so m >= 1
+            debug_assert!(m > 0);
+            node.used = clock;
+            best = Some((depth + m, node.cache.fork_at(depth + m)));
+            if m == node.edge.len() && depth + m < limit {
+                depth += m;
+                nodes = &mut node.children;
+                continue;
+            }
+            break;
+        }
+        if let Some((n, _)) = &best {
+            self.stats.hits += 1;
+            self.stats.hit_tokens += *n as u64;
+        }
+        best
+    }
+
+    /// Cache the KV state of a served prompt.  `cache.len()` must equal
+    /// `tokens.len()`; the trie stores a fork (pages shared with the
+    /// caller, copy-on-write from here on).
+    pub fn insert(&mut self, tokens: &[i32], cache: &KvCache) {
+        assert_eq!(cache.len(), tokens.len(), "prefix insert: cache/token length mismatch");
+        if tokens.is_empty() {
+            return;
+        }
+        self.clock += 1;
+        self.stats.insertions += 1;
+        let clock = self.clock;
+        let mut nodes = &mut self.roots;
+        let mut depth = 0usize;
+        loop {
+            let idx = match nodes.iter().position(|n| n.edge.first() == tokens.get(depth)) {
+                Some(i) => i,
+                None => {
+                    nodes.push(Node {
+                        edge: tokens[depth..].to_vec(),
+                        cache: cache.fork_at(tokens.len()),
+                        children: Vec::new(),
+                        used: clock,
+                    });
+                    return;
+                }
+            };
+            let cur = nodes;
+            let node = &mut cur[idx];
+            let mut m = 0;
+            while m < node.edge.len()
+                && depth + m < tokens.len()
+                && node.edge[m] == tokens[depth + m]
+            {
+                m += 1;
+            }
+            if m < node.edge.len() {
+                // diverged (or the new prefix ends) mid-edge: split at m.
+                // The node keeps the first m tokens and becomes an interior
+                // node whose cache is a fork of the inserted state (shares
+                // pages with both sides); the old tail moves to a child.
+                let tail = node.edge.split_off(m);
+                let child = Node {
+                    edge: tail,
+                    cache: std::mem::replace(&mut node.cache, cache.fork_at(depth + m)),
+                    children: std::mem::take(&mut node.children),
+                    used: node.used,
+                };
+                node.children = vec![child];
+                node.used = clock;
+                if depth + m < tokens.len() {
+                    node.children.push(Node {
+                        edge: tokens[depth + m..].to_vec(),
+                        cache: cache.fork_at(tokens.len()),
+                        children: Vec::new(),
+                        used: clock,
+                    });
+                }
+                return;
+            }
+            // full edge match
+            node.used = clock;
+            if depth + m == tokens.len() {
+                return; // already cached (same tokens ⇒ same KV, bit for bit)
+            }
+            depth += m;
+            nodes = &mut node.children;
+        }
+    }
+
+    /// Unique live bytes across all cached pages (a page shared by several
+    /// nodes — or by a node and its parent via edge splits — counts once).
+    pub fn bytes(&self) -> usize {
+        let mut seen = HashSet::new();
+        self.add_unique_bytes(&mut seen)
+    }
+
+    /// [`PrefixCache::bytes`] against an external `seen` set, so callers
+    /// can account trie pages and active-sequence pages without double
+    /// counting (the scheduler's live-KV gauge).
+    pub fn add_unique_bytes(&self, seen: &mut HashSet<usize>) -> usize {
+        let mut total = 0;
+        let mut stack: Vec<&Node> = self.roots.iter().collect();
+        while let Some(n) = stack.pop() {
+            for (ptr, b) in n.cache.page_refs() {
+                if seen.insert(ptr) {
+                    total += b;
+                }
+            }
+            stack.extend(n.children.iter());
+        }
+        total
+    }
+
+    /// Evict LRU leaves until the unique-byte footprint fits `max_bytes`.
+    ///
+    /// Page refcounts are built once per call and updated incrementally as
+    /// leaves are popped, so an eviction storm costs one accounting pass
+    /// plus O(nodes) per evicted leaf — not a full unique-byte recount per
+    /// eviction.
+    pub fn enforce_budget(&mut self) {
+        use std::collections::HashMap;
+        // ptr -> (bytes, refs across all nodes)
+        fn collect(nodes: &[Node], counts: &mut HashMap<usize, (usize, usize)>) {
+            for n in nodes {
+                for (ptr, b) in n.cache.page_refs() {
+                    counts.entry(ptr).or_insert((b, 0)).1 += 1;
+                }
+                collect(&n.children, counts);
+            }
+        }
+        let mut counts: HashMap<usize, (usize, usize)> = HashMap::new();
+        collect(&self.roots, &mut counts);
+        let mut total: usize = counts.values().map(|(b, _)| *b).sum();
+        while total > self.max_bytes {
+            let Some(removed) = self.pop_lru_leaf() else { break };
+            for (ptr, b) in removed.cache.page_refs() {
+                if let Some(e) = counts.get_mut(&ptr) {
+                    e.1 -= 1;
+                    if e.1 == 0 {
+                        total -= b;
+                    }
+                }
+            }
+            self.stats.evictions += 1;
+        }
+    }
+
+    fn pop_lru_leaf(&mut self) -> Option<Node> {
+        fn min_leaf(nodes: &[Node]) -> Option<u64> {
+            let mut best: Option<u64> = None;
+            for n in nodes {
+                let cand = if n.children.is_empty() { Some(n.used) } else { min_leaf(&n.children) };
+                if let Some(c) = cand {
+                    best = Some(best.map_or(c, |b| b.min(c)));
+                }
+            }
+            best
+        }
+        fn take(nodes: &mut Vec<Node>, stamp: u64) -> Option<Node> {
+            if let Some(i) = nodes.iter().position(|n| n.children.is_empty() && n.used == stamp) {
+                return Some(nodes.remove(i));
+            }
+            nodes.iter_mut().find_map(|n| take(&mut n.children, stamp))
+        }
+        let stamp = min_leaf(&self.roots)?;
+        take(&mut self.roots, stamp)
+    }
+
+    /// Drop everything (tests / model reload).
+    pub fn clear(&mut self) {
+        self.roots.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::native::{forward_cached, prefill};
+    use crate::model::{OptConfig, Weights};
+
+    fn setup() -> (Weights, OptConfig) {
+        let cfg = OptConfig::test_config();
+        (Weights::random(cfg.clone(), 4), cfg)
+    }
+
+    fn filled(w: &Weights, cfg: &OptConfig, tokens: &[i32]) -> KvCache {
+        let mut c = KvCache::new(cfg);
+        prefill(w, &mut c, tokens);
+        c
+    }
+
+    #[test]
+    fn lookup_miss_then_hit() {
+        let (w, cfg) = setup();
+        let mut pc = PrefixCache::new(usize::MAX);
+        let prompt = vec![1i32, 2, 3, 4, 5, 6];
+        assert!(pc.lookup(&prompt).is_none());
+        let cache = filled(&w, &cfg, &prompt);
+        pc.insert(&prompt, &cache);
+
+        // identical prompt: matches all but the last token
+        let (n, fork) = pc.lookup(&prompt).expect("hit");
+        assert_eq!(n, prompt.len() - 1);
+        assert_eq!(fork.len(), n);
+
+        // longer prompt sharing the full prefix
+        let longer: Vec<i32> = prompt.iter().copied().chain([9, 9]).collect();
+        let (n, _) = pc.lookup(&longer).expect("hit");
+        assert_eq!(n, prompt.len());
+
+        // diverging after 3 tokens
+        let other = vec![1i32, 2, 3, 7, 7, 7];
+        let (n, _) = pc.lookup(&other).expect("partial hit");
+        assert_eq!(n, 3);
+
+        // different first token: miss
+        assert!(pc.lookup(&[9, 1, 2]).is_none());
+        let s = pc.stats();
+        assert_eq!(s.lookups, 5, "including the pre-insert miss");
+        assert_eq!(s.hits, 3);
+    }
+
+    #[test]
+    fn hit_continues_bit_identically() {
+        let (w, cfg) = setup();
+        let mut pc = PrefixCache::new(usize::MAX);
+        let first = vec![5i32, 8, 13, 21, 3, 9, 11, 2];
+        pc.insert(&first, &filled(&w, &cfg, &first));
+
+        // second prompt shares 5 tokens then diverges
+        let second: Vec<i32> = first[..5].iter().copied().chain([40, 41, 42]).collect();
+        let (n, mut fork) = pc.lookup(&second).expect("hit");
+        assert_eq!(n, 5);
+        let via_cache = forward_cached(&w, &mut fork, &second[n..]);
+        let mut fresh = KvCache::new(&cfg);
+        let via_fresh = prefill(&w, &mut fresh, &second);
+        assert_eq!(via_cache, via_fresh, "prefix-cache prefill must be bit-identical");
+    }
+
+    #[test]
+    fn edge_split_keeps_both_entries() {
+        let (w, cfg) = setup();
+        let mut pc = PrefixCache::new(usize::MAX);
+        let a = vec![1i32, 2, 3, 4, 5, 6];
+        let b = vec![1i32, 2, 3, 9, 9, 9];
+        pc.insert(&a, &filled(&w, &cfg, &a));
+        pc.insert(&b, &filled(&w, &cfg, &b)); // splits a's edge at 3
+        assert_eq!(pc.len(), 3, "interior + two leaves");
+        let (na, _) = pc.lookup(&a).expect("a survives the split");
+        assert_eq!(na, a.len() - 1);
+        let (nb, _) = pc.lookup(&b).expect("b cached");
+        assert_eq!(nb, b.len() - 1);
+        // the interior node itself serves the common prefix
+        let c = vec![1i32, 2, 3, 7];
+        let (nc, fork) = pc.lookup(&c).expect("common prefix");
+        assert_eq!(nc, 3);
+        assert_eq!(fork.len(), 3);
+    }
+
+    #[test]
+    fn single_token_prompt_never_hits() {
+        let (w, cfg) = setup();
+        let mut pc = PrefixCache::new(usize::MAX);
+        let prompt = vec![7i32, 8];
+        pc.insert(&prompt, &filled(&w, &cfg, &prompt));
+        // a 1-token prompt has no proper prefix to reuse
+        assert!(pc.lookup(&[7]).is_none());
+        assert!(pc.lookup(&[]).is_none());
+    }
+
+    #[test]
+    fn shared_pages_counted_once() {
+        let (w, cfg) = setup();
+        let mut pc = PrefixCache::new(usize::MAX);
+        let a = vec![1i32, 2, 3, 4, 5, 6];
+        let cache = filled(&w, &cfg, &a);
+        pc.insert(&a, &cache);
+        let solo = pc.bytes();
+        assert!(solo > 0);
+        assert_eq!(solo, cache.allocated_bytes(), "trie shares the caller's pages");
+        // inserting a prompt diverging mid-page shares the common pages
+        let b = vec![1i32, 2, 3, 9, 9, 9];
+        pc.insert(&b, &filled(&w, &cfg, &b));
+        assert!(pc.bytes() <= 2 * solo, "unique accounting must dedup shared pages");
+    }
+
+    #[test]
+    fn lru_eviction_respects_budget() {
+        let (w, cfg) = setup();
+        let one_entry = filled(&w, &cfg, &[1, 2, 3, 4]).allocated_bytes();
+        // budget for about two disjoint entries
+        let mut pc = PrefixCache::new(2 * one_entry);
+        let prompts: Vec<Vec<i32>> = (0..4)
+            .map(|i| (0..4).map(|t| (10 * i + t) as i32).collect())
+            .collect();
+        for p in &prompts {
+            pc.insert(p, &filled(&w, &cfg, p));
+            pc.enforce_budget();
+        }
+        assert!(pc.bytes() <= 2 * one_entry, "budget enforced");
+        assert!(pc.stats().evictions >= 2, "oldest entries evicted");
+        // the most recent entry survives
+        assert!(pc.lookup(&prompts[3]).is_some());
+        // the oldest was evicted
+        assert!(pc.lookup(&prompts[0]).is_none());
+    }
+
+    #[test]
+    fn insert_is_idempotent() {
+        let (w, cfg) = setup();
+        let mut pc = PrefixCache::new(usize::MAX);
+        let p = vec![3i32, 1, 4, 1, 5];
+        let cache = filled(&w, &cfg, &p);
+        pc.insert(&p, &cache);
+        let n1 = pc.len();
+        let b1 = pc.bytes();
+        pc.insert(&p, &cache);
+        assert_eq!(pc.len(), n1);
+        assert_eq!(pc.bytes(), b1);
+    }
+}

@@ -1,0 +1,1003 @@
+//! The continuous-batching engine: admission policies, mid-flight slot
+//! refill, per-request rejection and cancellation, prefix-cache reuse,
+//! streaming sinks and telemetry.
+//!
+//! One scheduling round = (1) sample queue depth, (2) admit requests into
+//! free decode slots in policy order — validating each one and emitting a
+//! [`FinishReason::Rejected`] completion instead of panicking on malformed
+//! input, (3) prefill the admitted prompts (reusing the longest cached
+//! prefix when the prefix cache is on), (4) retire finished / stopped /
+//! cancelled sequences (freeing their slots for the next round's
+//! admission), (5) advance every active sequence one token.  The loop runs
+//! until queue and slots are both empty, so slots freed mid-flight are
+//! refilled while other sequences keep decoding — no drain barrier.
+//!
+//! Determinism: each request samples from its own RNG stream
+//! (`seed` ⊕ id) and every kernel computes sequence positions
+//! independently, so completions are bit-identical across `max_batch`,
+//! admission policy, thread count, and prefix cache on/off (pinned below).
+//! Prefill is data-parallel across admitted prompts; with the prefix cache
+//! on, prompts are grouped by sorted order (lexicographic neighbors
+//! maximize shared prefixes) — groups prefill in parallel while slots
+//! within a group chain off their predecessor's cache, so same-round
+//! sharing is captured without serializing unrelated prompts.
+
+use std::collections::HashSet;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::model::native::{self, DecoderParams, KvCache};
+use crate::serve::metrics::ServeMetrics;
+use crate::serve::prefix::PrefixCache;
+use crate::serve::stream::{FinishReason, StopCondition};
+use crate::serve::{Completion, Request, ServeOpts, ServeStats};
+use crate::util::pool;
+use crate::util::rng::Pcg64;
+
+/// Order in which queued requests claim freed decode slots.  All policies
+/// respect `Request::priority` first (lower admits first); completions do
+/// not depend on the policy — only latency does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmissionPolicy {
+    /// First come, first served (arrival order).
+    #[default]
+    Fcfs,
+    /// Shortest prompt first (ties by arrival): minimizes mean TTFT under
+    /// mixed prompt lengths.
+    ShortestPrompt,
+    /// Earliest deadline first; requests without a deadline go last, by
+    /// arrival.
+    Deadline,
+}
+
+impl AdmissionPolicy {
+    /// Parse a CLI/serve-config spec: `fcfs`, `spf` (or `shortest`),
+    /// `edf` (or `deadline`).
+    pub fn parse(s: &str) -> crate::Result<AdmissionPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "fcfs" => Ok(AdmissionPolicy::Fcfs),
+            "spf" | "shortest" | "shortest-prompt" => Ok(AdmissionPolicy::ShortestPrompt),
+            "edf" | "deadline" => Ok(AdmissionPolicy::Deadline),
+            _ => anyhow::bail!("unknown admission policy {s:?} (fcfs|spf|edf)"),
+        }
+    }
+
+    /// Index of the queued request to admit next.
+    fn select(&self, queue: &[Queued], epoch: Instant) -> usize {
+        let key = |q: &Queued| -> (i64, u64, u64) {
+            match self {
+                AdmissionPolicy::Fcfs => (q.req.priority as i64, 0, q.arrival),
+                AdmissionPolicy::ShortestPrompt => {
+                    (q.req.priority as i64, q.req.prompt.len() as u64, q.arrival)
+                }
+                AdmissionPolicy::Deadline => {
+                    let d = q
+                        .deadline_at
+                        .map(|d| d.saturating_duration_since(epoch).as_millis() as u64)
+                        .unwrap_or(u64::MAX);
+                    (q.req.priority as i64, d, q.arrival)
+                }
+            }
+        };
+        queue
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, q)| key(q))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// Shared cancellation registry.  Clone it out of the scheduler
+/// ([`Scheduler::cancel_handle`]) and call [`CancelHandle::cancel`] from
+/// any thread — including a streaming sink running inside a decode round.
+/// A cancelled request finishes with [`FinishReason::Cancelled`] at the
+/// next round boundary (queued requests are cancelled at admission).
+///
+/// Cancellations apply to requests queued or in flight when consumed; a
+/// cancellation is dropped once its request finishes (for any reason), and
+/// unmatched ids are dropped when a run drains, so stale cancels never
+/// leak into later requests reusing an id.
+#[derive(Debug, Clone, Default)]
+pub struct CancelHandle {
+    ids: Arc<Mutex<HashSet<usize>>>,
+}
+
+impl CancelHandle {
+    pub fn cancel(&self, id: usize) {
+        self.ids.lock().unwrap().insert(id);
+    }
+
+    pub fn is_cancelled(&self, id: usize) -> bool {
+        self.ids.lock().unwrap().contains(&id)
+    }
+
+    fn snapshot(&self) -> HashSet<usize> {
+        self.ids.lock().unwrap().clone()
+    }
+
+    /// Drop a consumed id so the set cannot grow unboundedly and a later
+    /// request reusing the id is not spuriously cancelled.
+    fn clear_id(&self, id: usize) {
+        self.ids.lock().unwrap().remove(&id);
+    }
+
+    /// Drop everything — called when a run drains, at which point any
+    /// remaining id matches no queued or in-flight request.
+    fn clear_all(&self) {
+        self.ids.lock().unwrap().clear();
+    }
+}
+
+/// A queued request plus its admission bookkeeping.
+struct Queued {
+    req: Request,
+    arrival: u64,
+    submitted_at: Instant,
+    deadline_at: Option<Instant>,
+}
+
+/// An admitted in-flight sequence.
+struct Slot {
+    req: Request,
+    cache: KvCache,
+    stop: StopCondition,
+    generated: Vec<i32>,
+    /// Most recently sampled token, not yet fed back through the model.
+    last: i32,
+    rng: Pcg64,
+    /// Prompt tokens reused from the prefix cache (trie hit) or from a
+    /// same-round neighbor's cache (intra-round chaining) — not prefilled.
+    reused: usize,
+    /// Set when a stop condition fired; retired at the round boundary.
+    finish: Option<FinishReason>,
+    submitted_at: Instant,
+    last_token_at: Instant,
+    /// Measured inside the (parallel) sampling closure, drained into the
+    /// metrics histograms on the scheduler thread.
+    ttft: Option<Duration>,
+    itl_pending: Option<Duration>,
+}
+
+impl Slot {
+    /// Commit the token sampled from `logits` (prefill or decode step).
+    fn push_token(&mut self, logits: &[f32]) {
+        let tok = self.req.sampler.sample(logits, &mut self.rng) as i32;
+        let idx = self.generated.len();
+        self.generated.push(tok);
+        self.last = tok;
+        let now = Instant::now();
+        if idx == 0 {
+            self.ttft = Some(now.duration_since(self.submitted_at));
+        } else {
+            self.itl_pending = Some(now.duration_since(self.last_token_at));
+        }
+        self.last_token_at = now;
+        if let Some(sink) = self.req.sink.as_mut() {
+            sink.on_token(tok, idx);
+        }
+        if self.stop.hit(&self.generated) {
+            self.finish = Some(FinishReason::Stop);
+        }
+    }
+}
+
+/// Continuous-batching scheduler over any [`DecoderParams`] source.
+pub struct Scheduler<'a, P: DecoderParams + ?Sized> {
+    params: &'a P,
+    opts: ServeOpts,
+    queue: Vec<Queued>,
+    arrivals: u64,
+    epoch: Instant,
+    cancel: CancelHandle,
+    prefix: Option<PrefixCache>,
+    metrics: ServeMetrics,
+}
+
+impl<'a, P: DecoderParams + ?Sized> Scheduler<'a, P> {
+    pub fn new(params: &'a P, opts: ServeOpts) -> Scheduler<'a, P> {
+        assert!(opts.max_batch >= 1, "max_batch must be >= 1");
+        Scheduler {
+            params,
+            opts,
+            queue: Vec::new(),
+            arrivals: 0,
+            epoch: Instant::now(),
+            cancel: CancelHandle::default(),
+            prefix: opts.prefix_cache.then(|| PrefixCache::new(opts.prefix_cache_bytes)),
+            metrics: ServeMetrics::new(),
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        let arrival = self.arrivals;
+        self.arrivals += 1;
+        let submitted_at = Instant::now();
+        let deadline_at = req.deadline_ms.map(|ms| submitted_at + Duration::from_millis(ms));
+        self.queue.push(Queued { req, arrival, submitted_at, deadline_at });
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Handle for cancelling requests from other threads (or sinks).
+    pub fn cancel_handle(&self) -> CancelHandle {
+        self.cancel.clone()
+    }
+
+    /// Cancel a request by id (queued or in-flight).
+    pub fn cancel(&self, id: usize) {
+        self.cancel.cancel(id);
+    }
+
+    /// Telemetry accumulated over all completed `run` calls.
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.metrics
+    }
+
+    /// Unique bytes currently held by the prefix cache (0 when disabled).
+    pub fn prefix_cache_bytes(&self) -> usize {
+        self.prefix.as_ref().map_or(0, |pc| pc.bytes())
+    }
+
+    /// Run the continuous-batching loop until queue and slots are empty.
+    /// Every submitted request yields exactly one [`Completion`] (sorted by
+    /// id), including rejected and cancelled ones.
+    pub fn run(&mut self) -> (Vec<Completion>, ServeStats) {
+        let params = self.params;
+        let cfg = params.config();
+        let max_seq = cfg.max_seq;
+        let mut prefix = self.prefix.take();
+        let mut stats = ServeStats::default();
+        let mut done: Vec<Completion> = Vec::new();
+        let mut active: Vec<Slot> = Vec::new();
+        let mut round: u64 = 0;
+
+        while !self.queue.is_empty() || !active.is_empty() {
+            round += 1;
+            self.metrics.record_queue_depth(self.queue.len());
+            let cancelled = self.cancel.snapshot();
+
+            // -- admission: policy picks requests for the free slots ---------
+            let mut admitted: Vec<Slot> = Vec::new();
+            while active.len() + admitted.len() < self.opts.max_batch && !self.queue.is_empty() {
+                let idx = self.opts.policy.select(&self.queue, self.epoch);
+                // selection orders by explicit (priority, key, arrival)
+                // tuples, so container order is irrelevant: O(1) extraction
+                let q = self.queue.swap_remove(idx);
+                let mut req = q.req;
+                stats.requests += 1;
+                req.max_new = req.max_new.min(max_seq.saturating_sub(req.prompt.len()));
+                let verdict = if cancelled.contains(&req.id) {
+                    Some(FinishReason::Cancelled)
+                } else if req.prompt.is_empty() {
+                    Some(FinishReason::Rejected(format!("request {}: empty prompt", req.id)))
+                } else if req.prompt.len() >= max_seq {
+                    Some(FinishReason::Rejected(format!(
+                        "request {}: prompt length {} must leave room to generate \
+                         within max_seq {}",
+                        req.id,
+                        req.prompt.len(),
+                        max_seq
+                    )))
+                } else if req.max_new == 0 {
+                    Some(FinishReason::Length)
+                } else {
+                    None
+                };
+                if let Some(reason) = verdict {
+                    let id = req.id;
+                    finish_unstarted(&mut done, &mut self.metrics, &mut stats, req, reason);
+                    self.cancel.clear_id(id);
+                    continue;
+                }
+                let stop = StopCondition {
+                    tokens: std::mem::take(&mut req.stop),
+                    sequences: std::mem::take(&mut req.stop_seqs),
+                };
+                let rng = Pcg64::with_stream(self.opts.seed, req.id as u64);
+                let now = Instant::now();
+                admitted.push(Slot {
+                    req,
+                    cache: KvCache::new(cfg),
+                    stop,
+                    generated: Vec::new(),
+                    last: 0,
+                    rng,
+                    reused: 0,
+                    finish: None,
+                    submitted_at: q.submitted_at,
+                    last_token_at: now,
+                    ttft: None,
+                    itl_pending: None,
+                });
+            }
+
+            // -- prefill the admitted prompts (once each) --------------------
+            let admitted_any = !admitted.is_empty();
+            if admitted_any {
+                let t0 = Instant::now();
+                if let Some(pc) = prefix.as_mut() {
+                    // 1. look up each prompt against the trie (sequential,
+                    //    cheap — forks share pages, no forward pass)
+                    for s in admitted.iter_mut() {
+                        if let Some((hit, fork)) = pc.lookup(&s.req.prompt) {
+                            s.cache = fork;
+                            s.reused = hit;
+                        }
+                    }
+                    // 2. prefill data-parallel ACROSS groups of prompts
+                    //    sorted lexicographically: within a group each slot
+                    //    chains off its sorted predecessor's cache (sorted
+                    //    neighbors maximize common prefixes), which captures
+                    //    same-round sharing without serializing unrelated
+                    //    prompts behind one another.  Forks are bit-identical
+                    //    to recomputation, so outputs don't depend on the
+                    //    grouping.
+                    admitted.sort_by(|a, b| {
+                        (&a.req.prompt, a.req.id).cmp(&(&b.req.prompt, b.req.id))
+                    });
+                    let mut groups: Vec<Vec<Slot>> = Vec::new();
+                    for s in admitted.drain(..) {
+                        match groups.last_mut() {
+                            Some(g) if g[0].req.prompt[0] == s.req.prompt[0] => g.push(s),
+                            _ => groups.push(vec![s]),
+                        }
+                    }
+                    let threads = pool::num_threads().min(groups.len());
+                    pool::parallel_chunks_mut(&mut groups, 1, threads, |_i, chunk| {
+                        let group = &mut chunk[0];
+                        for j in 0..group.len() {
+                            if j > 0 {
+                                let (prev, cur) = group.split_at_mut(j);
+                                let p = &prev[j - 1];
+                                let s = &mut cur[0];
+                                let lcp = common_prefix(&p.req.prompt, &s.req.prompt)
+                                    .min(s.req.prompt.len() - 1);
+                                if lcp > s.cache.len() {
+                                    s.cache = p.cache.fork_at(lcp);
+                                    s.reused = lcp;
+                                }
+                            }
+                            let s = &mut group[j];
+                            let start = s.cache.len();
+                            let logits = native::forward_cached(
+                                params,
+                                &mut s.cache,
+                                &s.req.prompt[start..],
+                            );
+                            s.push_token(&logits);
+                        }
+                    });
+                    for g in &mut groups {
+                        admitted.append(g);
+                    }
+                    // 3. account reuse and publish the prefilled prompts
+                    for s in admitted.iter() {
+                        stats.prefill_tokens += s.req.prompt.len() - s.reused;
+                        stats.prefix_hit_tokens += s.reused;
+                        self.metrics.prefix_lookups += 1;
+                        if s.reused > 0 {
+                            self.metrics.prefix_hits += 1;
+                            self.metrics.prefix_hit_tokens += s.reused as u64;
+                        }
+                        pc.insert(&s.req.prompt, &s.cache);
+                    }
+                    pc.enforce_budget();
+                } else {
+                    stats.prefill_tokens +=
+                        admitted.iter().map(|s| s.req.prompt.len()).sum::<usize>();
+                    let threads = pool::num_threads().min(admitted.len());
+                    pool::parallel_chunks_mut(&mut admitted, 1, threads, |_i, slot| {
+                        let s = &mut slot[0];
+                        let logits = native::forward_cached(params, &mut s.cache, &s.req.prompt);
+                        s.push_token(&logits);
+                    });
+                }
+                stats.prefill_time += t0.elapsed();
+                stats.generated_tokens += admitted.len();
+                for s in &mut admitted {
+                    if let Some(d) = s.ttft.take() {
+                        self.metrics.ttft.record(d);
+                    }
+                }
+                active.append(&mut admitted);
+            }
+
+            // -- live-KV gauge: unique pages over slots + prefix trie --------
+            // Sampled on admission rounds (where peaks form) plus every 16th
+            // decode round, so the unique-page walk doesn't tax every token
+            // round and skew the latency histograms it sits next to.
+            if admitted_any || round % 16 == 0 {
+                let mut seen: HashSet<usize> = HashSet::new();
+                let mut live = 0usize;
+                for s in &active {
+                    for (ptr, b) in s.cache.page_refs() {
+                        if seen.insert(ptr) {
+                            live += b;
+                        }
+                    }
+                }
+                if let Some(pc) = prefix.as_ref() {
+                    live += pc.add_unique_bytes(&mut seen);
+                }
+                self.metrics.record_kv_bytes(live, active.len() * KvCache::eager_bytes(cfg));
+            }
+
+            // -- retire finished sequences (frees admission slots) -----------
+            let mut i = 0;
+            while i < active.len() {
+                let reason = if let Some(r) = active[i].finish.clone() {
+                    Some(r)
+                } else if active[i].generated.len() >= active[i].req.max_new {
+                    Some(FinishReason::Length)
+                } else if cancelled.contains(&active[i].req.id) {
+                    Some(FinishReason::Cancelled)
+                } else {
+                    None
+                };
+                let Some(reason) = reason else {
+                    i += 1;
+                    continue;
+                };
+                let mut s = active.swap_remove(i);
+                match &reason {
+                    FinishReason::Length => self.metrics.finished_length += 1,
+                    FinishReason::Stop => self.metrics.finished_stop += 1,
+                    FinishReason::Cancelled => {
+                        self.metrics.cancelled += 1;
+                        stats.cancelled += 1;
+                    }
+                    FinishReason::Rejected(_) => {}
+                }
+                if let Some(sink) = s.req.sink.as_mut() {
+                    sink.on_finish(&reason);
+                }
+                // a finished request's pending cancellation (if any) is
+                // consumed with it — the set never grows unboundedly and a
+                // later request reusing the id is unaffected
+                self.cancel.clear_id(s.req.id);
+                done.push(Completion {
+                    id: s.req.id,
+                    prompt: std::mem::take(&mut s.req.prompt),
+                    generated: std::mem::take(&mut s.generated),
+                    finish: reason,
+                });
+            }
+            if active.is_empty() {
+                continue; // admit more, or fall out when the queue is dry
+            }
+
+            // -- one decode round: every active sequence advances one token --
+            let t0 = Instant::now();
+            let threads = pool::num_threads().min(active.len());
+            pool::parallel_chunks_mut(&mut active, 1, threads, |_i, slot| {
+                let s = &mut slot[0];
+                let logits = native::decode_step(params, &mut s.cache, s.last);
+                s.push_token(&logits);
+            });
+            stats.decode_time += t0.elapsed();
+            stats.decode_steps += 1;
+            stats.decoded_tokens += active.len();
+            stats.generated_tokens += active.len();
+            for s in &mut active {
+                if let Some(d) = s.itl_pending.take() {
+                    self.metrics.inter_token.record(d);
+                }
+            }
+        }
+
+        // lookups/hits/hit_tokens accumulate in the prefill phase (they
+        // include same-round chaining the trie's own stats can't see);
+        // evictions only happen inside the trie
+        if let Some(pc) = &prefix {
+            self.metrics.prefix_evictions = pc.stats().evictions;
+        }
+        self.prefix = prefix;
+        // the queue is drained, so any cancellation left in the registry
+        // matches nothing — drop them so a cancel racing a request's
+        // completion can never leak into a later request reusing the id
+        self.cancel.clear_all();
+        done.sort_by_key(|c| c.id);
+        (done, stats)
+    }
+}
+
+/// Length of the shared leading run of two token sequences.
+fn common_prefix(a: &[i32], b: &[i32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+/// Finish a request that never reached a decode slot (rejection,
+/// cancellation while queued, or `max_new == 0`).
+fn finish_unstarted(
+    done: &mut Vec<Completion>,
+    metrics: &mut ServeMetrics,
+    stats: &mut ServeStats,
+    mut req: Request,
+    reason: FinishReason,
+) {
+    match &reason {
+        FinishReason::Cancelled => {
+            metrics.cancelled += 1;
+            stats.cancelled += 1;
+        }
+        FinishReason::Rejected(_) => {
+            metrics.rejected += 1;
+            stats.rejected += 1;
+        }
+        FinishReason::Length => metrics.finished_length += 1,
+        FinishReason::Stop => metrics.finished_stop += 1,
+    }
+    if let Some(sink) = req.sink.as_mut() {
+        sink.on_finish(&reason);
+    }
+    done.push(Completion {
+        id: req.id,
+        prompt: std::mem::take(&mut req.prompt),
+        generated: Vec::new(),
+        finish: reason,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{OptConfig, Weights};
+    use crate::serve::stream::{ChannelSink, FnSink, StreamEvent};
+    use crate::util::propcheck;
+    use crate::util::sampling::Sampler;
+
+    fn test_weights() -> Weights {
+        Weights::random(OptConfig::test_config(), 3)
+    }
+
+    /// One layer, 96-position context: room for 64-token shared prefixes.
+    fn wide_config() -> OptConfig {
+        OptConfig {
+            name: "serve-test".into(),
+            vocab: 64,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ffn: 32,
+            max_seq: 96,
+        }
+    }
+
+    fn requests(n: usize, vocab: usize) -> Vec<Request> {
+        let mut rng = Pcg64::new(5);
+        (0..n)
+            .map(|i| {
+                Request::new(
+                    i,
+                    (0..4 + i % 3).map(|_| rng.below(vocab) as i32).collect(),
+                    3 + i % 4,
+                    if i % 2 == 0 {
+                        Sampler::Greedy
+                    } else {
+                        Sampler::TopK { k: 4, temperature: 0.9 }
+                    },
+                )
+            })
+            .collect()
+    }
+
+    // -- legacy Server behavior (PR 2), now on the scheduler ----------------
+
+    #[test]
+    fn serves_all_requests_to_completion() {
+        let w = test_weights();
+        let mut server = Scheduler::new(&w, ServeOpts { max_batch: 2, ..Default::default() });
+        for r in requests(5, w.config.vocab) {
+            server.submit(r);
+        }
+        assert_eq!(server.pending(), 5);
+        let (done, stats) = server.run();
+        assert_eq!(done.len(), 5);
+        assert_eq!(stats.requests, 5);
+        let total: usize = done.iter().map(|c| c.generated.len()).sum();
+        assert_eq!(stats.generated_tokens, total);
+        // every request samples exactly one token at prefill time
+        assert_eq!(stats.decoded_tokens, total - 5);
+        for c in &done {
+            assert_eq!(c.generated.len(), 3 + c.id % 4);
+            assert_eq!(c.finish, FinishReason::Length);
+            assert!(c.generated.iter().all(|&t| (t as usize) < w.config.vocab));
+        }
+    }
+
+    #[test]
+    fn max_new_clamped_to_context() {
+        let w = test_weights();
+        let max_seq = w.config.max_seq;
+        let mut s = Scheduler::new(&w, ServeOpts::default());
+        s.submit(Request::new(0, vec![1; max_seq - 2], 100, Sampler::Greedy));
+        let (done, _) = s.run();
+        assert_eq!(done[0].generated.len(), 2);
+        assert_eq!(done[0].finish, FinishReason::Length);
+    }
+
+    #[test]
+    fn zero_max_new_completes_without_decoding() {
+        let w = test_weights();
+        let mut s = Scheduler::new(&w, ServeOpts::default());
+        s.submit(Request::new(7, vec![1, 2, 3], 0, Sampler::Greedy));
+        let (done, stats) = s.run();
+        assert_eq!(done.len(), 1);
+        assert!(done[0].generated.is_empty());
+        assert_eq!(stats.decode_steps, 0);
+        assert_eq!(stats.decoded_tokens, 0);
+        assert_eq!(stats.generated_tokens, 0);
+    }
+
+    // -- satellite: per-request rejection instead of batch abort ------------
+
+    #[test]
+    fn bad_requests_reject_without_aborting_the_batch() {
+        let w = test_weights();
+        let mut s = Scheduler::new(&w, ServeOpts { max_batch: 2, ..Default::default() });
+        s.submit(Request::new(0, vec![], 3, Sampler::Greedy)); // empty prompt
+        s.submit(Request::new(1, vec![1, 2, 3], 3, Sampler::Greedy)); // fine
+        s.submit(Request::new(2, vec![0; w.config.max_seq], 3, Sampler::Greedy)); // too long
+        s.submit(Request::new(3, vec![4, 5], 2, Sampler::Greedy)); // fine
+        let (done, stats) = s.run();
+        assert_eq!(done.len(), 4, "every request yields a completion");
+        assert_eq!(stats.rejected, 2);
+        match &done[0].finish {
+            FinishReason::Rejected(msg) => assert!(msg.contains("empty prompt"), "{msg}"),
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        match &done[2].finish {
+            FinishReason::Rejected(msg) => assert!(msg.contains("max_seq"), "{msg}"),
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        // the good requests ran to completion despite the bad ones
+        assert_eq!(done[1].finish, FinishReason::Length);
+        assert_eq!(done[1].generated.len(), 3);
+        assert_eq!(done[3].generated.len(), 2);
+    }
+
+    // -- satellite: stop tokens / stop sequences ----------------------------
+
+    #[test]
+    fn stop_token_terminates_decode() {
+        let w = test_weights();
+        let free = {
+            let mut s = Scheduler::new(&w, ServeOpts::default());
+            s.submit(Request::new(0, vec![1, 2, 3, 4], 8, Sampler::Greedy));
+            s.run().0.remove(0).generated
+        };
+        assert_eq!(free.len(), 8, "unconstrained greedy runs to max_new");
+        let stop_tok = free[2];
+        let mut s = Scheduler::new(&w, ServeOpts::default());
+        s.submit(Request::new(0, vec![1, 2, 3, 4], 8, Sampler::Greedy).with_stop(vec![stop_tok]));
+        let (done, _) = s.run();
+        // greedy replays the same stream, so it stops at the first
+        // occurrence of the stop token (which is included in the output)
+        let expected = free.iter().position(|&t| t == stop_tok).unwrap() + 1;
+        assert_eq!(done[0].generated, free[..expected].to_vec());
+        assert_eq!(done[0].finish, FinishReason::Stop);
+    }
+
+    #[test]
+    fn stop_token_sampled_at_prefill_time() {
+        let w = test_weights();
+        let first = {
+            let mut s = Scheduler::new(&w, ServeOpts::default());
+            s.submit(Request::new(0, vec![3, 1, 4], 6, Sampler::Greedy));
+            s.run().0.remove(0).generated[0]
+        };
+        let mut s = Scheduler::new(&w, ServeOpts::default());
+        s.submit(Request::new(0, vec![3, 1, 4], 6, Sampler::Greedy).with_stop(vec![first]));
+        let (done, stats) = s.run();
+        assert_eq!(done[0].generated, vec![first]);
+        assert_eq!(done[0].finish, FinishReason::Stop);
+        assert_eq!(stats.decode_steps, 0, "stop hit at prefill: no decode rounds run");
+        assert_eq!(stats.decoded_tokens, 0);
+    }
+
+    #[test]
+    fn stop_sequence_terminates_decode() {
+        let w = test_weights();
+        let free = {
+            let mut s = Scheduler::new(&w, ServeOpts::default());
+            s.submit(Request::new(0, vec![2, 7, 1], 8, Sampler::Greedy));
+            s.run().0.remove(0).generated
+        };
+        let stop_seq = free[1..3].to_vec();
+        let mut s = Scheduler::new(&w, ServeOpts::default());
+        s.submit(
+            Request::new(0, vec![2, 7, 1], 8, Sampler::Greedy)
+                .with_stop_seqs(vec![stop_seq.clone()]),
+        );
+        let (done, _) = s.run();
+        let pos = free.windows(2).position(|win| win == &stop_seq[..]).unwrap();
+        assert_eq!(done[0].generated.len(), pos + 2);
+        assert_eq!(done[0].finish, FinishReason::Stop);
+    }
+
+    // -- cancellation -------------------------------------------------------
+
+    #[test]
+    fn queued_request_cancelled_before_admission() {
+        let w = test_weights();
+        let mut s = Scheduler::new(&w, ServeOpts { max_batch: 1, ..Default::default() });
+        s.submit(Request::new(0, vec![1, 2], 2, Sampler::Greedy));
+        s.submit(Request::new(1, vec![3, 4], 2, Sampler::Greedy));
+        s.cancel(1);
+        let (done, stats) = s.run();
+        assert_eq!(done[0].finish, FinishReason::Length);
+        assert_eq!(done[1].finish, FinishReason::Cancelled);
+        assert!(done[1].generated.is_empty());
+        assert_eq!(stats.cancelled, 1);
+    }
+
+    #[test]
+    fn cancel_mid_flight_from_streaming_sink() {
+        let w = test_weights();
+        let mut s = Scheduler::new(&w, ServeOpts::default());
+        let handle = s.cancel_handle();
+        let sink = FnSink(move |_tok: i32, idx: usize| {
+            if idx == 2 {
+                handle.cancel(0);
+            }
+        });
+        s.submit(Request::new(0, vec![1, 2, 3], 20, Sampler::Greedy).with_sink(Box::new(sink)));
+        let (done, stats) = s.run();
+        assert_eq!(done[0].finish, FinishReason::Cancelled);
+        assert!(
+            done[0].generated.len() >= 3 && done[0].generated.len() < 20,
+            "cancelled mid-flight after {} tokens",
+            done[0].generated.len()
+        );
+        assert_eq!(stats.cancelled, 1);
+    }
+
+    // -- streaming ----------------------------------------------------------
+
+    #[test]
+    fn streaming_sink_receives_tokens_then_finish() {
+        let w = test_weights();
+        let mut s = Scheduler::new(&w, ServeOpts::default());
+        let (sink, rx) = ChannelSink::new();
+        s.submit(Request::new(0, vec![5, 6, 7], 4, Sampler::Greedy).with_sink(Box::new(sink)));
+        let (done, _) = s.run();
+        let events: Vec<StreamEvent> = rx.try_iter().collect();
+        assert_eq!(events.len(), 5, "4 tokens + finish");
+        let streamed: Vec<i32> = events
+            .iter()
+            .filter_map(|e| match e {
+                StreamEvent::Token { token, .. } => Some(*token),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(streamed, done[0].generated);
+        assert_eq!(events.last(), Some(&StreamEvent::Finish(FinishReason::Length)));
+        for (i, e) in events[..4].iter().enumerate() {
+            assert!(matches!(e, StreamEvent::Token { index, .. } if *index == i));
+        }
+    }
+
+    #[test]
+    fn rejected_request_still_notifies_its_sink() {
+        let w = test_weights();
+        let mut s = Scheduler::new(&w, ServeOpts::default());
+        let (sink, rx) = ChannelSink::new();
+        s.submit(Request::new(0, vec![], 4, Sampler::Greedy).with_sink(Box::new(sink)));
+        let (done, _) = s.run();
+        assert!(matches!(done[0].finish, FinishReason::Rejected(_)));
+        let events: Vec<StreamEvent> = rx.try_iter().collect();
+        assert_eq!(events.len(), 1, "no tokens, just the finish event");
+        assert!(matches!(events[0], StreamEvent::Finish(FinishReason::Rejected(_))));
+    }
+
+    // -- admission policies -------------------------------------------------
+
+    #[test]
+    fn admission_policies_order_the_queue() {
+        let w = test_weights();
+        let order: Arc<Mutex<Vec<usize>>> = Arc::default();
+        let mk = |id: usize, plen: usize, order: &Arc<Mutex<Vec<usize>>>| {
+            let o = order.clone();
+            Request::new(id, vec![1; plen], 1, Sampler::Greedy).with_sink(Box::new(FnSink(
+                move |_t: i32, idx: usize| {
+                    if idx == 0 {
+                        o.lock().unwrap().push(id);
+                    }
+                },
+            )))
+        };
+
+        // shortest-prompt-first admits by prompt length, not arrival
+        let spf = AdmissionPolicy::ShortestPrompt;
+        let mut s =
+            Scheduler::new(&w, ServeOpts { max_batch: 1, policy: spf, ..Default::default() });
+        s.submit(mk(0, 8, &order));
+        s.submit(mk(1, 2, &order));
+        s.submit(mk(2, 5, &order));
+        s.run();
+        assert_eq!(*order.lock().unwrap(), vec![1, 2, 0]);
+
+        // earliest deadline first; no deadline goes last
+        order.lock().unwrap().clear();
+        let mut s = Scheduler::new(
+            &w,
+            ServeOpts { max_batch: 1, policy: AdmissionPolicy::Deadline, ..Default::default() },
+        );
+        s.submit(mk(0, 3, &order));
+        s.submit(mk(1, 3, &order).with_deadline_ms(5000));
+        s.submit(mk(2, 3, &order).with_deadline_ms(10));
+        s.run();
+        assert_eq!(*order.lock().unwrap(), vec![2, 1, 0]);
+
+        // priority beats arrival under every policy
+        order.lock().unwrap().clear();
+        let mut s = Scheduler::new(&w, ServeOpts { max_batch: 1, ..Default::default() });
+        s.submit(mk(0, 3, &order));
+        s.submit(mk(1, 3, &order).with_priority(-1));
+        s.run();
+        assert_eq!(*order.lock().unwrap(), vec![1, 0]);
+    }
+
+    #[test]
+    fn policy_parse_forms() {
+        assert_eq!(AdmissionPolicy::parse("fcfs").unwrap(), AdmissionPolicy::Fcfs);
+        assert_eq!(AdmissionPolicy::parse("SPF").unwrap(), AdmissionPolicy::ShortestPrompt);
+        assert_eq!(AdmissionPolicy::parse("deadline").unwrap(), AdmissionPolicy::Deadline);
+        assert!(AdmissionPolicy::parse("lifo").is_err());
+    }
+
+    // -- determinism pins (acceptance) --------------------------------------
+
+    fn mixed_specs(vocab: usize) -> Vec<(usize, Vec<i32>, usize)> {
+        let mut rng = Pcg64::new(5);
+        let shared: Vec<i32> = (0..6).map(|_| rng.below(vocab) as i32).collect();
+        (0..8)
+            .map(|i| {
+                let mut prompt = if i % 2 == 0 { shared.clone() } else { Vec::new() };
+                prompt.extend((0..3 + i % 4).map(|_| rng.below(vocab) as i32));
+                (i, prompt, 3 + i % 5)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn completions_invariant_to_batch_policy_and_prefix() {
+        let w = test_weights();
+        let run = |max_batch: usize, policy: AdmissionPolicy, prefix_cache: bool| {
+            let mut s = Scheduler::new(
+                &w,
+                ServeOpts { max_batch, policy, prefix_cache, seed: 42, ..Default::default() },
+            );
+            for (id, prompt, max_new) in mixed_specs(w.config.vocab) {
+                let sampler = if id % 2 == 0 {
+                    Sampler::Greedy
+                } else {
+                    Sampler::TopK { k: 4, temperature: 0.9 }
+                };
+                let mut r = Request::new(id, prompt, max_new, sampler);
+                if id == 3 {
+                    r = r.with_stop(vec![11]);
+                }
+                if id == 5 {
+                    r = r.with_deadline_ms(1000).with_priority(1);
+                }
+                s.submit(r);
+            }
+            let (done, _) = s.run();
+            done.into_iter().map(|c| (c.id, c.generated, c.finish)).collect::<Vec<_>>()
+        };
+        let reference = run(1, AdmissionPolicy::Fcfs, false);
+        for (mb, pol, pc) in [
+            (4, AdmissionPolicy::Fcfs, false),
+            (1, AdmissionPolicy::ShortestPrompt, false),
+            (4, AdmissionPolicy::ShortestPrompt, false),
+            (4, AdmissionPolicy::Fcfs, true),
+            (4, AdmissionPolicy::ShortestPrompt, true),
+            (4, AdmissionPolicy::Deadline, true),
+        ] {
+            assert_eq!(reference, run(mb, pol, pc), "max_batch {mb}, {pol:?}, prefix {pc}");
+        }
+    }
+
+    // -- satellite: prefix-cache property test ------------------------------
+
+    #[test]
+    fn prop_prefix_cache_is_transparent() {
+        let w = test_weights();
+        propcheck::check("prefix_cache_transparent", 12, |rng| {
+            let vocab = w.config.vocab;
+            let n = 2 + rng.below(5);
+            let shared_len = 2 + rng.below(8);
+            let shared: Vec<i32> = (0..shared_len).map(|_| rng.below(vocab) as i32).collect();
+            let specs: Vec<(usize, Vec<i32>, usize)> = (0..n)
+                .map(|i| {
+                    let mut p = shared[..1 + rng.below(shared_len)].to_vec();
+                    p.extend((0..rng.below(6)).map(|_| rng.below(vocab) as i32));
+                    (i, p, 1 + rng.below(5))
+                })
+                .collect();
+            let run = |prefix_cache: bool| {
+                let mut s = Scheduler::new(
+                    &w,
+                    ServeOpts { max_batch: 3, seed: 9, prefix_cache, ..Default::default() },
+                );
+                for (id, p, m) in &specs {
+                    s.submit(Request::new(
+                        *id,
+                        p.clone(),
+                        *m,
+                        Sampler::TopK { k: 6, temperature: 0.8 },
+                    ));
+                }
+                let (done, _) = s.run();
+                done.into_iter().map(|c| c.generated).collect::<Vec<_>>()
+            };
+            propcheck::ensure(run(true) == run(false), "prefix cache changed completions")
+        });
+    }
+
+    // -- acceptance: shared prefixes skip prefill, chunked KV beats eager ---
+
+    #[test]
+    fn shared_prefix_prefills_fewer_tokens() {
+        let w = Weights::random(wide_config(), 2);
+        let shared: Vec<i32> = (0..64).map(|i| (i % 64) as i32).collect();
+        let mk = |id: usize, tail: i32| {
+            let mut p = shared.clone();
+            p.extend([tail, tail + 1]);
+            Request::new(id, p, 4, Sampler::Greedy)
+        };
+        let opts = ServeOpts { max_batch: 4, prefix_cache: true, ..Default::default() };
+        let mut s = Scheduler::new(&w, opts);
+        s.submit(mk(0, 1));
+        s.submit(mk(1, 7));
+        let (done, stats) = s.run();
+        assert_eq!(done.len(), 2);
+        let prompt_len = 66;
+        assert!(
+            stats.prefill_tokens < 2 * prompt_len,
+            "sharing a 64-token prefix must prefill fewer than 2x prompt tokens \
+             (prefilled {})",
+            stats.prefill_tokens
+        );
+        assert_eq!(stats.prefill_tokens + stats.prefix_hit_tokens, 2 * prompt_len);
+        assert_eq!(stats.prefix_hit_tokens, 64, "the whole shared prefix is reused");
+        let m = s.metrics();
+        assert_eq!(m.prefix_hits, 1);
+        assert_eq!(m.prefix_lookups, 2);
+        assert_eq!(m.prefix_hit_tokens, 64);
+        assert!(
+            m.kv_live_bytes_peak < m.kv_eager_bytes_peak,
+            "chunked KV ({} B) must stay under eager full-context KV ({} B)",
+            m.kv_live_bytes_peak,
+            m.kv_eager_bytes_peak
+        );
+        assert!(s.prefix_cache_bytes() > 0, "trie retains the shared pages");
+    }
+
+    #[test]
+    fn metrics_populated_after_run() {
+        let w = test_weights();
+        let mut s = Scheduler::new(&w, ServeOpts { max_batch: 2, ..Default::default() });
+        for i in 0..4 {
+            s.submit(Request::new(i, vec![1, 2, 3, i as i32], 3, Sampler::Greedy));
+        }
+        let (done, _) = s.run();
+        assert_eq!(done.len(), 4);
+        let m = s.metrics();
+        assert_eq!(m.ttft.count(), 4);
+        assert!(m.inter_token.count() > 0);
+        assert_eq!(m.finished_length, 4);
+        assert!(m.kv_live_bytes_peak > 0);
+        assert!(
+            m.kv_live_bytes_peak < m.kv_eager_bytes_peak,
+            "short sequences resident in chunked pages beat eager allocation"
+        );
+        assert!(m.queue_depth_max() >= 2, "queue observed before slots drained");
+        // the telemetry dump is valid JSON
+        assert!(crate::util::json::parse(&m.to_json().to_string()).is_ok());
+    }
+}

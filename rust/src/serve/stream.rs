@@ -1,0 +1,185 @@
+//! Per-request streaming output and termination: token sinks the scheduler
+//! calls as each token is sampled, stop-token / stop-sequence conditions,
+//! and the finish reason attached to every [`crate::serve::Completion`].
+
+use std::sync::mpsc;
+
+/// Why a request finished.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generated `max_new` tokens (or exhausted the context window).
+    Length,
+    /// Sampled a stop token, or the generated tail completed a stop
+    /// sequence.
+    Stop,
+    /// Cancelled through a [`crate::serve::CancelHandle`] before finishing.
+    Cancelled,
+    /// Rejected at admission; the payload says why.  A malformed request
+    /// produces this completion instead of aborting the whole batch.
+    Rejected(String),
+}
+
+impl FinishReason {
+    /// Short stable label (metrics / JSON field values).
+    pub fn label(&self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Stop => "stop",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::Rejected(_) => "rejected",
+        }
+    }
+}
+
+/// Streaming sink for one request.  The scheduler calls it from the worker
+/// thread driving the sequence (hence `Send`): `on_token` once per sampled
+/// token, then `on_finish` exactly once.
+pub trait TokenSink: Send {
+    /// `index` is the 0-based position within the generated tokens.
+    fn on_token(&mut self, token: i32, index: usize);
+    /// Called once when the request leaves the scheduler (any reason,
+    /// including rejection — in that case with no preceding `on_token`).
+    fn on_finish(&mut self, _reason: &FinishReason) {}
+}
+
+/// Event delivered by [`ChannelSink`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StreamEvent {
+    Token { index: usize, token: i32 },
+    Finish(FinishReason),
+}
+
+/// [`TokenSink`] forwarding events over an mpsc channel, for consumers on
+/// another thread (or drained after `run` in synchronous use).
+pub struct ChannelSink {
+    tx: mpsc::Sender<StreamEvent>,
+}
+
+impl ChannelSink {
+    pub fn new() -> (ChannelSink, mpsc::Receiver<StreamEvent>) {
+        let (tx, rx) = mpsc::channel();
+        (ChannelSink { tx }, rx)
+    }
+}
+
+impl TokenSink for ChannelSink {
+    fn on_token(&mut self, token: i32, index: usize) {
+        // receiver may be gone (consumer lost interest); generation goes on
+        let _ = self.tx.send(StreamEvent::Token { index, token });
+    }
+
+    fn on_finish(&mut self, reason: &FinishReason) {
+        let _ = self.tx.send(StreamEvent::Finish(reason.clone()));
+    }
+}
+
+/// [`TokenSink`] from a closure over `(token, index)`; finish is dropped.
+pub struct FnSink<F: FnMut(i32, usize) + Send>(pub F);
+
+impl<F: FnMut(i32, usize) + Send> TokenSink for FnSink<F> {
+    fn on_token(&mut self, token: i32, index: usize) {
+        (self.0)(token, index)
+    }
+}
+
+/// Stop-token / stop-sequence termination state for one request.
+#[derive(Debug, Clone, Default)]
+pub struct StopCondition {
+    /// Single tokens that terminate generation when sampled.
+    pub tokens: Vec<i32>,
+    /// Token sequences that terminate generation once the generated tail
+    /// matches one of them exactly.
+    pub sequences: Vec<Vec<i32>>,
+}
+
+impl StopCondition {
+    pub fn none() -> StopCondition {
+        StopCondition::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty() && self.sequences.is_empty()
+    }
+
+    /// Does generation stop after `generated` (whose last element is the
+    /// token just sampled)?  The terminating token/sequence is part of the
+    /// completion.
+    pub fn hit(&self, generated: &[i32]) -> bool {
+        let Some(&last) = generated.last() else {
+            return false;
+        };
+        if self.tokens.contains(&last) {
+            return true;
+        }
+        self.sequences.iter().any(|s| {
+            !s.is_empty()
+                && generated.len() >= s.len()
+                && &generated[generated.len() - s.len()..] == s.as_slice()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stop_tokens_match_last_only() {
+        let stop = StopCondition { tokens: vec![5, 9], sequences: vec![] };
+        assert!(!stop.hit(&[]));
+        assert!(!stop.hit(&[5, 1])); // 5 earlier in the stream doesn't stop
+        assert!(stop.hit(&[1, 5]));
+        assert!(stop.hit(&[9]));
+        assert!(!stop.hit(&[2, 3]));
+    }
+
+    #[test]
+    fn stop_sequences_match_tail() {
+        let stop = StopCondition { tokens: vec![], sequences: vec![vec![7, 8], vec![3]] };
+        assert!(stop.hit(&[1, 7, 8]));
+        assert!(!stop.hit(&[7, 8, 1]));
+        assert!(stop.hit(&[3]));
+        assert!(!stop.hit(&[7])); // prefix of a sequence is not a hit
+        // an empty stop sequence never matches
+        let degenerate = StopCondition { tokens: vec![], sequences: vec![vec![]] };
+        assert!(!degenerate.hit(&[1, 2]));
+    }
+
+    #[test]
+    fn empty_condition_never_hits() {
+        let stop = StopCondition::none();
+        assert!(stop.is_empty());
+        assert!(!stop.hit(&[1, 2, 3]));
+    }
+
+    #[test]
+    fn channel_sink_streams_in_order() {
+        let (mut sink, rx) = ChannelSink::new();
+        sink.on_token(10, 0);
+        sink.on_token(20, 1);
+        sink.on_finish(&FinishReason::Stop);
+        let events: Vec<StreamEvent> = rx.try_iter().collect();
+        assert_eq!(
+            events,
+            vec![
+                StreamEvent::Token { index: 0, token: 10 },
+                StreamEvent::Token { index: 1, token: 20 },
+                StreamEvent::Finish(FinishReason::Stop),
+            ]
+        );
+    }
+
+    #[test]
+    fn channel_sink_survives_dropped_receiver() {
+        let (mut sink, rx) = ChannelSink::new();
+        drop(rx);
+        sink.on_token(1, 0); // must not panic
+        sink.on_finish(&FinishReason::Length);
+    }
+
+    #[test]
+    fn finish_reason_labels() {
+        assert_eq!(FinishReason::Length.label(), "length");
+        assert_eq!(FinishReason::Rejected("x".into()).label(), "rejected");
+    }
+}
