@@ -12,12 +12,18 @@
 //! ```text
 //! cargo run --release --example serve_quantized
 //! SERVE_POLICY=spf SERVE_SAMPLER=topk:8:0.7 cargo run --release --example serve_quantized
+//! SERVE_ALLOC="2x64,ffn_up=3x64,ffn_down=1x64" cargo run --release --example serve_quantized
 //! ```
+//!
+//! `SERVE_ALLOC` takes a mixed-precision [`BitAllocation`] string
+//! (`default[,tensor=scheme]*`); the packed model then holds each linear at
+//! its allocated width and the fused kernels serve the heterogeneous form
+//! directly.
 
 use invarexplore::baselines::{self, Method};
 use invarexplore::calib::CalibSet;
 use invarexplore::coordinator::Session;
-use invarexplore::quant::QuantScheme;
+use invarexplore::quant::BitAllocation;
 use invarexplore::serve::{AdmissionPolicy, FnSink, Request, Scheduler, ServeOpts};
 use invarexplore::util::rng::Pcg64;
 use invarexplore::util::sampling::Sampler;
@@ -25,20 +31,24 @@ use invarexplore::util::sampling::Sampler;
 fn main() -> anyhow::Result<()> {
     let session = Session::load_default()?;
     let model = "opt-small";
-    let scheme = QuantScheme::new(2, 64);
-    println!("== serving {model} quantized at {scheme} ==");
+    let alloc = match std::env::var("SERVE_ALLOC") {
+        Ok(spec) => BitAllocation::parse(&spec)?,
+        Err(_) => BitAllocation::parse("2x64")?,
+    };
+    println!("== serving {model} quantized at allocation {} ==", alloc.label());
 
     // --- offline: quantize with AWQ and pack ------------------------------
     let w = session.weights(model)?;
     let pile = session.corpus("pile")?;
     let calib = CalibSet::from_corpus(&pile, 16, session.manifest.seq);
-    let prepared = baselines::prepare(Method::Awq, scheme, &w, &calib, None)?;
+    let prepared = baselines::prepare_mixed(Method::Awq, &alloc, &w, &calib, None)?;
     let quantized = prepared.quantize_model(&prepared.fp, None);
     let pm = prepared.packed_model(&quantized);
     println!(
-        "packed model: {:.2} MiB ({:.3} bits/param) for {} linear tensors, served as-is",
+        "packed model: {:.2} MiB ({:.3} bits/param, {}) for {} linear tensors, served as-is",
         pm.packed_bytes() as f64 / (1 << 20) as f64,
         pm.bits_per_param(),
+        pm.bits_summary(),
         pm.n_packed()
     );
 

@@ -216,12 +216,27 @@ class ProgramEmitter:
 
 def build_manifest(artifacts_dir: str, sizes: list[str]) -> dict:
     manifest: dict = {
-        # version 2: zero-point clamped into [0, qmax] in the quantization
-        # kernels (keep in sync with rust/src/io/manifest.rs MANIFEST_VERSION)
-        "version": 2,
+        # version 3: mixed-precision quant_allocations presets (version 2
+        # clamped the zero-point into [0, qmax]; keep in sync with
+        # rust/src/io/manifest.rs MANIFEST_VERSION)
+        "version": 3,
         "batch": {"B": BATCH, "T": SEQ},
         "quant_bits": list(QUANT_BITS),
         "quant_groups": list(QUANT_GROUPS),
+        # BitAllocation strings the Rust side parse-validates: a uniform
+        # reference plus a BiLLM-style "spend the budget on ffn_up" preset
+        # at the same bits/param (up.w and down.w have equal numel).
+        "quant_allocations": [
+            f"{b}x{g}"
+            for b in QUANT_BITS
+            for g in QUANT_GROUPS
+        ]
+        + [
+            f"{b}x{g},ffn_up={b + 1}x{g},ffn_down={b - 1}x{g}"
+            for b in QUANT_BITS
+            if 2 <= b <= 7
+            for g in QUANT_GROUPS
+        ],
         "models": {},
     }
     data_manifest_path = os.path.join(artifacts_dir, "data", "data_manifest.json")

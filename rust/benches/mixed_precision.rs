@@ -1,0 +1,179 @@
+//! Mixed-precision bit-allocation benchmarks — search convergence and
+//! heterogeneous packed serving:
+//!
+//! 1. **search convergence at a fixed budget** — on the synthetic
+//!    mixed-precision objective, a transform-only search at the uniform
+//!    2x64 allocation vs the same search continued with budget-preserving
+//!    bit-swap moves (`p_alloc`); the searched allocation must reach a
+//!    strictly lower CE at the same (or lower) bits/param;
+//! 2. **heterogeneous packed decode** — tok/s of the fused packed serving
+//!    path across allocations (uniform 2-bit, mixed 1..4-bit), plus the
+//!    bit-identity pin of mixed packed serving vs unpack-then-dense.
+//!
+//! Runs entirely on synthetic models — no artifacts needed.  `--smoke` (or
+//! env `MIXED_PRECISION_SMOKE=1`) shrinks the workload and asserts the
+//! acceptance criteria; wired into CI.  `BENCH_mixed_precision.json` is
+//! written on every run (the perf-trajectory artifact CI uploads).
+
+use std::time::Instant;
+
+use invarexplore::model::native::{self, KvCache};
+use invarexplore::model::{OptConfig, Weights};
+use invarexplore::quant::{BitAllocation, QuantScheme};
+use invarexplore::search::hillclimb::SearchConfig;
+use invarexplore::search::{self, MixedSynthObjective, SearchState};
+use invarexplore::serve::PackedModel;
+use invarexplore::transform::TransformKinds;
+use invarexplore::util::bench::{self, step_budget, BenchSuite, Stats};
+use invarexplore::util::rng::Pcg64;
+
+fn search_cfg(p_alloc: f64) -> SearchConfig {
+    SearchConfig {
+        kinds: TransformKinds::parse("s").unwrap(),
+        frac: 0.2,
+        sigma_s: 0.1,
+        sigma_r: 0.0,
+        alpha: Some(0.0),
+        log_every: 0,
+        batch: 4,
+        p_alloc,
+    }
+}
+
+/// Transform-only search, then continue the SAME state with bit-swap moves
+/// mixed in.  Returns (uniform-CE, mixed-CE, budget, final bits/param,
+/// accepted swaps, objective).
+fn convergence(
+    steps: usize,
+    seed: u64,
+) -> (f64, f64, f64, f64, usize, MixedSynthObjective) {
+    let scheme = QuantScheme::new(2, 64);
+    let mut obj = MixedSynthObjective::new(8, 16, scheme);
+    let alloc = obj.alloc_state();
+    let budget = alloc.budget;
+    let mut state = SearchState::new(8, 16, seed).with_alloc(alloc);
+
+    // phase 1: transforms only — the uniform-allocation reference
+    search::run(&mut obj, &mut state, &search_cfg(0.0), steps).unwrap();
+    let uniform_ce = state.best.ce;
+
+    // phase 2: same budget, same engine, allocation moves enabled
+    search::run(&mut obj, &mut state, &search_cfg(0.5), steps).unwrap();
+    let mixed_ce = state.best.ce;
+    let final_bpp = state.alloc.as_ref().unwrap().bits_per_param();
+    (uniform_ce, mixed_ce, budget, final_bpp, state.alloc_accepts, obj)
+}
+
+/// tok/s of greedy packed-direct decoding under one allocation.
+fn packed_decode_rate(w: &Weights, alloc: &BitAllocation, gen: usize) -> (PackedModel, f64) {
+    let pm = PackedModel::from_allocation(w.clone(), alloc).unwrap();
+    let mut rng = Pcg64::new(11);
+    let prompt: Vec<i32> = (0..8).map(|_| rng.below(w.config.vocab) as i32).collect();
+    let mut cache = KvCache::new(pm.config());
+    let t0 = Instant::now();
+    let mut logits = native::prefill(&pm, &mut cache, &prompt);
+    for _ in 1..gen {
+        let next = invarexplore::util::sampling::argmax(&logits) as i32;
+        logits = native::decode_step(&pm, &mut cache, next);
+    }
+    let rate = gen as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    (pm, rate)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("MIXED_PRECISION_SMOKE").as_deref() == Ok("1");
+    if smoke {
+        bench::smoke_budget_ms(60);
+    }
+    let mut suite = BenchSuite::new("mixed_precision");
+    println!("== mixed_precision{} ==", if smoke { " (SMOKE)" } else { "" });
+
+    // ---- 1. search convergence: uniform vs searched allocation ------------
+    let steps = step_budget(if smoke { 160 } else { 600 });
+    let t0 = Instant::now();
+    let (uniform_ce, mixed_ce, budget, final_bpp, swaps, obj) = convergence(steps, 7);
+    let search_time = t0.elapsed();
+    println!(
+        "search ({steps}+{steps} steps): uniform 2x64 CE {uniform_ce:.4} -> searched \
+         allocation CE {mixed_ce:.4} ({swaps} bit swaps accepted, \
+         {final_bpp:.3} bits/param vs budget {budget:.3})"
+    );
+    suite.record(
+        "mixed search step (phase-2 wall clock)",
+        Stats::one_shot(search_time / (2 * steps).max(1) as u32),
+    );
+
+    // the tentpole acceptance pin: at the same or lower bits/param budget,
+    // the searched mixed allocation beats uniform 2x64 STRICTLY
+    assert!(
+        final_bpp <= budget + 1e-9,
+        "searched allocation exceeded budget: {final_bpp} > {budget}"
+    );
+    assert!(swaps >= 1, "search never accepted a bit swap");
+    assert!(
+        mixed_ce < uniform_ce,
+        "searched allocation must strictly beat uniform: {mixed_ce} vs {uniform_ce}"
+    );
+    assert!(
+        obj.alloc_term() < obj.uniform_alloc_term(),
+        "allocation error must drop below the uniform reference"
+    );
+    println!("ok: searched allocation strictly beats uniform 2x64 at the same budget");
+
+    // ---- 2. heterogeneous packed decode -----------------------------------
+    let cfg = if smoke {
+        OptConfig::test_config()
+    } else {
+        OptConfig {
+            name: "mixed-bench".into(),
+            vocab: 512,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 8,
+            d_ffn: 512,
+            max_seq: 128,
+        }
+    };
+    let w = Weights::random(cfg.clone(), 1);
+    let gen = if smoke { 2 } else { 32 };
+    let allocs = [
+        ("uniform 2-bit", BitAllocation::parse("2x32").unwrap()),
+        (
+            "mixed 1..4-bit",
+            BitAllocation::parse("2x32,ffn_up=4x32,ffn_down=1x32,attn_q=3x32").unwrap(),
+        ),
+    ];
+    for (label, alloc) in &allocs {
+        let (pm, rate) = packed_decode_rate(&w, alloc, gen);
+        println!(
+            "decode ({label}, {}, {:.3} bits/param): {rate:.1} tok/s",
+            pm.bits_summary(),
+            pm.bits_per_param()
+        );
+        suite.record(
+            &format!("packed decode per token ({label})"),
+            Stats::one_shot(std::time::Duration::from_secs_f64(1.0 / rate.max(1e-9))),
+        );
+    }
+
+    // bit-identity pin: mixed packed serving == unpack-then-dense serving
+    let (pm, _) = packed_decode_rate(&w, &allocs[1].1, 2);
+    let dense = pm.unpacked_weights();
+    let mut rng = Pcg64::new(3);
+    let prompt: Vec<i32> = (0..8).map(|_| rng.below(cfg.vocab) as i32).collect();
+    let mut c1 = KvCache::new(pm.config());
+    let mut c2 = KvCache::new(&dense.config);
+    let l1 = native::prefill(&pm, &mut c1, &prompt);
+    let l2 = native::prefill(&dense, &mut c2, &prompt);
+    assert_eq!(l1, l2, "mixed packed prefill must be bit-identical to dense");
+    for t in [1i32, 5] {
+        let d1 = native::decode_step(&pm, &mut c1, t);
+        let d2 = native::decode_step(&dense, &mut c2, t);
+        assert_eq!(d1, d2, "mixed packed decode must be bit-identical to dense");
+    }
+    println!("ok: mixed-precision packed serving bit-identical to unpack-then-dense");
+
+    let out = suite.write_json(std::path::Path::new(".")).expect("write BENCH json");
+    println!("perf trajectory written to {}", out.display());
+}

@@ -37,6 +37,7 @@ fn synth_proposals_per_sec(k: usize, steps: usize) -> f64 {
         alpha: Some(0.0),
         log_every: 0,
         batch: k,
+        p_alloc: 0.0,
     };
     search::hillclimb::ensure_init(&mut obj, &mut state, &cfg).unwrap();
     let t0 = std::time::Instant::now();

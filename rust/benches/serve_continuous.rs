@@ -23,6 +23,7 @@ use std::time::Instant;
 
 use invarexplore::model::{OptConfig, Weights};
 use invarexplore::serve::{Completion, Request, Scheduler, ServeOpts};
+use invarexplore::util::bench::{BenchSuite, Stats};
 use invarexplore::util::rng::Pcg64;
 use invarexplore::util::sampling::Sampler;
 
@@ -128,6 +129,16 @@ fn main() {
     // ---- report -----------------------------------------------------------
     let cont_tok = total_generated(&cont_done);
     let drain_tok = total_generated(&drain_done);
+    // per-token wall-clock of each strategy -> BENCH_serve_continuous.json
+    // (the perf trajectory CI uploads on every run)
+    let mut suite = BenchSuite::new("serve_continuous");
+    let per_tok = |d: std::time::Duration, toks: usize| {
+        Stats::one_shot(std::time::Duration::from_secs_f64(
+            d.as_secs_f64() / toks.max(1) as f64,
+        ))
+    };
+    suite.record("continuous scheduler (per generated token)", per_tok(cont_time, cont_tok));
+    suite.record("drain-loop baseline (per generated token)", per_tok(drain_time, drain_tok));
     println!(
         "throughput: continuous {cont_tok} tokens in {cont_time:.1?} \
          ({:.1} tok/s) vs drain-loop {drain_tok} tokens in {drain_time:.1?} ({:.1} tok/s)",
@@ -188,4 +199,7 @@ fn main() {
          for sequences shorter than max_seq"
     );
     println!("ok: completions batch-strategy-invariant; prefix + paged-KV invariants hold");
+
+    let out = suite.write_json(std::path::Path::new(".")).expect("write BENCH json");
+    println!("perf trajectory written to {}", out.display());
 }

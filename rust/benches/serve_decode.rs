@@ -19,7 +19,7 @@ use invarexplore::model::{OptConfig, Weights};
 use invarexplore::quant::{self, PackedTensor, QuantScheme};
 use invarexplore::serve::{PackedModel, Request, ServeOpts, Server};
 use invarexplore::tensor::{ops, Tensor};
-use invarexplore::util::bench::BenchSuite;
+use invarexplore::util::bench::{self, BenchSuite, Stats};
 use invarexplore::util::rng::Pcg64;
 use invarexplore::util::sampling::Sampler;
 
@@ -148,23 +148,22 @@ fn main() {
     let gen = if smoke { 2 } else { 32 };
 
     // ---- GEMV: fused packed vs unpack-to-dense ----------------------------
+    // smoke still measures real rows (tiny per-case budget) so the
+    // BENCH_serve_decode.json trajectory CI uploads is never empty
+    if smoke {
+        bench::smoke_budget_ms(60);
+    }
+    let mut suite = BenchSuite::new("serve_decode");
     let p_down = PackedTensor::pack(&quant::quantize(w.get("l0.down.w"), scheme));
     let x = Tensor::from_vec(1, cfg.d_ffn, (0..cfg.d_ffn).map(|_| rng.normal() as f32).collect());
     let bias = vec![0.0f32; cfg.d_model];
-    if smoke {
+    suite.bench("fused packed GEMV (down.w)", || {
         std::hint::black_box(p_down.linear(&x, &bias));
+    });
+    suite.bench("unpack-to-dense GEMV (down.w)", || {
         let d = p_down.unpack();
         std::hint::black_box(ops::linear(&x, &d, &bias));
-    } else {
-        let mut suite = BenchSuite::new("serve_decode");
-        suite.bench("fused packed GEMV (down.w)", || {
-            std::hint::black_box(p_down.linear(&x, &bias));
-        });
-        suite.bench("unpack-to-dense GEMV (down.w)", || {
-            let d = p_down.unpack();
-            std::hint::black_box(ops::linear(&x, &d, &bias));
-        });
-    }
+    });
 
     // ---- decode: KV cache vs full-context re-forward ----------------------
     let (kv_toks, kv_rate) = kv_cache_decode(&dense, &prompt, gen);
@@ -180,6 +179,12 @@ fn main() {
     }
     let (_, packed_rate) = kv_cache_decode(&pm, &prompt, gen);
     println!("decode (packed-direct, greedy, {gen} tokens): {packed_rate:.1} tok/s");
+    let per_tok = |rate: f64| {
+        Stats::one_shot(std::time::Duration::from_secs_f64(1.0 / rate.max(1e-9)))
+    };
+    suite.record("KV-cache decode (per token, dense)", per_tok(kv_rate));
+    suite.record("full re-forward decode (per token, dense)", per_tok(full_rate));
+    suite.record("KV-cache decode (per token, packed-direct)", per_tok(packed_rate));
 
     // ---- end-to-end batched serving on the packed model -------------------
     let mut server = Server::new(&pm, ServeOpts { max_batch: 4, seed: 0, ..Default::default() });
@@ -192,4 +197,7 @@ fn main() {
     let (done, stats) = server.run();
     assert_eq!(done.len(), 4);
     println!("server (packed, batch 4): {}", stats.summary());
+
+    let out = suite.write_json(std::path::Path::new(".")).expect("write BENCH json");
+    println!("perf trajectory written to {}", out.display());
 }

@@ -84,6 +84,7 @@ pub fn prepare(scheme: QuantScheme, weights: &Weights, stats: &CalibStats) -> Pr
     Prepared {
         method: Method::Awq,
         scheme,
+        alloc: super::BitAllocation::uniform(scheme),
         fp,
         quantizer: Quantizer::Clipped(&clip::AWQ_CLIP_GRID),
     }

@@ -76,6 +76,7 @@ pub fn prepare(scheme: QuantScheme, weights: &Weights, stats: &CalibStats) -> Pr
     Prepared {
         method: Method::Gptq,
         scheme,
+        alloc: super::BitAllocation::uniform(scheme),
         fp: weights.clone(),
         quantizer: Quantizer::Gptq { hessians, exact: false },
     }

@@ -26,7 +26,7 @@ use std::collections::HashMap;
 
 use crate::calib::{CalibSet, CalibStats};
 use crate::model::Weights;
-use crate::quant::{self, clip, QuantScheme};
+use crate::quant::{self, clip, BitAllocation, QuantScheme};
 use crate::tensor::Tensor;
 use crate::transform::LayerTransform;
 
@@ -81,7 +81,13 @@ pub enum Quantizer {
 /// A model prepared for quantization by one method.
 pub struct Prepared {
     pub method: Method,
+    /// Default (uniform) scheme — `alloc.default`; kept as a field because
+    /// most of the stack is still scheme-first.
     pub scheme: QuantScheme,
+    /// Per-tensor schemes.  Uniform (`alloc.default == scheme`, no
+    /// overrides) unless built through [`prepare_mixed`] or mutated by an
+    /// accepted bit-swap search move.
+    pub alloc: BitAllocation,
     /// Preprocessed FP weights — the θ₀ the InvarExplore search transforms.
     pub fp: Weights,
     pub quantizer: Quantizer,
@@ -89,25 +95,39 @@ pub struct Prepared {
 
 impl Prepared {
     /// Quantize (fake-quant) one linear weight under this method's
-    /// semantics.  `name` is the canonical parameter name (`l0.down.w`);
-    /// `transform` is the currently-applied FFN transform of that layer,
-    /// needed only by GPTQ to transform the stored Hessian of `down.w`.
+    /// semantics at the tensor's *allocated* scheme.  `name` is the
+    /// canonical parameter name (`l0.down.w`); `transform` is the
+    /// currently-applied FFN transform of that layer, needed only by GPTQ
+    /// to transform the stored Hessian of `down.w`.
     pub fn quantize_tensor(
         &self,
         name: &str,
         w: &Tensor,
         transform: Option<&LayerTransform>,
     ) -> Tensor {
+        self.quantize_tensor_with(name, w, self.alloc.scheme_for(name), transform)
+    }
+
+    /// [`Prepared::quantize_tensor`] at an explicit scheme — the bit-swap
+    /// drafting path probes ±1-bit schemes without mutating the accepted
+    /// allocation.
+    pub fn quantize_tensor_with(
+        &self,
+        name: &str,
+        w: &Tensor,
+        scheme: QuantScheme,
+        transform: Option<&LayerTransform>,
+    ) -> Tensor {
         match &self.quantizer {
-            Quantizer::Plain => quant::fake_quant(w, self.scheme),
-            Quantizer::Clipped(grid) => clip::fake_quant_clip_search(w, self.scheme, grid),
+            Quantizer::Plain => quant::fake_quant(w, scheme),
+            Quantizer::Clipped(grid) => clip::fake_quant_clip_search(w, scheme, grid),
             Quantizer::Gptq { hessians, exact } => {
                 let h = hessians
                     .get(name)
                     .unwrap_or_else(|| panic!("GPTQ: no hessian for {name:?}"));
                 let is_down = name.ends_with("down.w");
                 let t = if is_down { transform } else { None };
-                gptq::gptq_quantize(w, h, self.scheme, *exact, t)
+                gptq::gptq_quantize(w, h, scheme, *exact, t)
             }
         }
     }
@@ -121,7 +141,9 @@ impl Prepared {
     ) -> Weights {
         let mut out = weights.clone();
         for name in weights.quant_names() {
-            let layer: usize = name[1..name.find('.').unwrap()].parse().unwrap();
+            let layer = crate::model::config::split_layer_prefix(&name)
+                .0
+                .expect("quant names carry a layer prefix");
             let t = transforms.map(|ts| &ts[layer]);
             let q = self.quantize_tensor(&name, weights.get(&name), t);
             out.set(&name, q);
@@ -129,7 +151,9 @@ impl Prepared {
         out
     }
 
-    /// Packed (deployment) form of every quantizable tensor + total bytes.
+    /// Packed (deployment) form of every quantizable tensor + total bytes,
+    /// each tensor packed at its allocated scheme (heterogeneous
+    /// allocations pack heterogeneous [`quant::PackedTensor`]s).
     ///
     /// Packing always uses the plain codec on the *method-quantized* values
     /// (codes are what they are; scales/zeros re-derived), which is a
@@ -138,7 +162,7 @@ impl Prepared {
         let mut out = Vec::new();
         let mut bytes = 0;
         for name in weights.quant_names() {
-            let q = quant::quantize(weights.get(&name), self.scheme);
+            let q = quant::quantize(weights.get(&name), self.alloc.scheme_for(&name));
             let p = quant::PackedTensor::pack(&q);
             bytes += p.nbytes();
             out.push((name, p));
@@ -182,6 +206,24 @@ pub fn prepare(
         Method::OmniQuant => Ok(omniquant::prepare(scheme, weights, stats.unwrap())),
         Method::Gptq => Ok(gptq::prepare(scheme, weights, stats.unwrap())),
     }
+}
+
+/// [`prepare`] with a mixed-precision [`BitAllocation`]: the method's
+/// preprocessing (scale folding, Hessians, clip grids) is calibrated at the
+/// allocation's *default* scheme, while every tensor quantizes and packs at
+/// its allocated scheme.  Group sizes are validated against the model's
+/// tensor shapes up front.
+pub fn prepare_mixed(
+    method: Method,
+    alloc: &BitAllocation,
+    weights: &Weights,
+    calib: &CalibSet,
+    stats: Option<&CalibStats>,
+) -> crate::Result<Prepared> {
+    alloc.validate(&weights.config)?;
+    let mut p = prepare(method, alloc.default, weights, calib, stats)?;
+    p.alloc = alloc.clone();
+    Ok(p)
 }
 
 #[cfg(test)]
@@ -247,6 +289,42 @@ mod tests {
         assert_eq!(packed.len(), w.quant_names().len());
         let fp_bytes: usize = w.quant_names().iter().map(|n| w.get(n).numel() * 2).sum();
         assert!(bytes < fp_bytes / 4, "packed {bytes} vs fp16 {fp_bytes}");
+    }
+
+    #[test]
+    fn mixed_allocation_quantizes_and_packs_per_tensor() {
+        let (w, calib) = test_setup();
+        let alloc = BitAllocation::parse("2x32,ffn_up=4x32,l0.q.w=1x16").unwrap();
+        let p = prepare_mixed(Method::Rtn, &alloc, &w, &calib, None).unwrap();
+        assert_eq!(p.scheme, QuantScheme::new(2, 32));
+        // per-tensor quantization obeys the allocation: 4-bit up.w must be
+        // strictly closer to FP than the same tensor at the 2-bit default
+        let name = "l0.up.w";
+        let four_bit = p.quantize_tensor(name, w.get(name), None);
+        let two_bit = p.quantize_tensor_with(name, w.get(name), QuantScheme::new(2, 32), None);
+        let err4 = w.get(name).mse(&four_bit);
+        let err2 = w.get(name).mse(&two_bit);
+        assert!(err4 < err2, "4-bit err {err4} !< 2-bit err {err2}");
+        // packing carries per-tensor schemes
+        let (packed, _) = p.pack_model(&p.fp);
+        let find = |n: &str| packed.iter().find(|(pn, _)| pn == n).unwrap();
+        assert_eq!(find("l0.up.w").1.scheme, QuantScheme::new(4, 32));
+        assert_eq!(find("l1.up.w").1.scheme, QuantScheme::new(4, 32));
+        assert_eq!(find("l0.q.w").1.scheme, QuantScheme::new(1, 16));
+        assert_eq!(find("l1.q.w").1.scheme, QuantScheme::new(2, 32));
+        assert_eq!(find("l0.down.w").1.scheme, QuantScheme::new(2, 32));
+        // mixed packed model serves
+        let pm = p.packed_model(&p.fp);
+        assert_eq!(pm.n_packed(), w.quant_names().len());
+    }
+
+    #[test]
+    fn mixed_allocation_group_mismatch_rejected() {
+        let (w, calib) = test_setup();
+        // q.w has 32 columns; group 64 cannot divide it
+        let alloc = BitAllocation::parse("2x32,attn_q=2x64").unwrap();
+        let err = prepare_mixed(Method::Rtn, &alloc, &w, &calib, None).unwrap_err();
+        assert!(err.to_string().contains("not divisible"), "{err}");
     }
 
     #[test]

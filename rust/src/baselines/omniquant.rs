@@ -66,6 +66,7 @@ pub fn prepare(scheme: QuantScheme, weights: &Weights, stats: &CalibStats) -> Pr
     Prepared {
         method: Method::OmniQuant,
         scheme,
+        alloc: super::BitAllocation::uniform(scheme),
         fp,
         quantizer: Quantizer::Clipped(&clip::OMNI_CLIP_GRID),
     }

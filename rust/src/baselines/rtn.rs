@@ -9,6 +9,7 @@ pub fn prepare(scheme: QuantScheme, weights: &Weights) -> Prepared {
     Prepared {
         method: super::Method::Rtn,
         scheme,
+        alloc: super::BitAllocation::uniform(scheme),
         fp: weights.clone(),
         quantizer: Quantizer::Plain,
     }

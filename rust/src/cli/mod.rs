@@ -23,7 +23,9 @@ commands:
   figure1          regenerate the paper's optimization-curve figure
 
 common options: --model, --method, --scheme (e.g. 2x64), --steps, --seed,
---batch (K-wide concurrent proposal rounds; 1 = exact sequential search)
+--batch (K-wide concurrent proposal rounds; 1 = exact sequential search),
+--alloc (mixed-precision allocation, e.g. 2x64,ffn_up=3x64,l0.q.w=4x128),
+--alloc-prob (probability a proposal is a budget-preserving bit swap)
 run `invarexplore <command> --help` for details.
 ";
 
@@ -32,6 +34,8 @@ fn common_spec() -> Vec<ArgSpec> {
         ArgSpec { name: "model", help: "model size (opt-tiny|opt-small|opt-base)", default: Some("opt-small"), is_flag: false },
         ArgSpec { name: "method", help: "baseline method (rtn|gptq|awq|omniquant)", default: Some("awq"), is_flag: false },
         ArgSpec { name: "scheme", help: "quantization scheme bits x group, e.g. 1x64", default: Some("1x64"), is_flag: false },
+        ArgSpec { name: "alloc", help: "mixed-precision bit allocation, e.g. 2x64,ffn_up=3x64 (overrides --scheme)", default: None, is_flag: false },
+        ArgSpec { name: "alloc-prob", help: "probability a search proposal is a bit-swap allocation move (default: $INVAREXPLORE_P_ALLOC or 0)", default: None, is_flag: false },
         ArgSpec { name: "steps", help: "search steps", default: Some("200"), is_flag: false },
         ArgSpec { name: "batch", help: "proposals per search round (1 = exact sequential semantics)", default: Some("1"), is_flag: false },
         ArgSpec { name: "kinds", help: "transform kinds subset of psr", default: Some("psr"), is_flag: false },
@@ -51,8 +55,23 @@ fn common_spec() -> Vec<ArgSpec> {
 
 fn opts_from_args(a: &Args) -> crate::Result<PipelineOpts> {
     let method = Method::parse(a.get_or("method", "awq"))?;
-    let scheme = QuantScheme::parse(a.get_or("scheme", "1x64"))?;
+    let alloc = a.get("alloc").map(crate::quant::BitAllocation::parse).transpose()?;
+    // --alloc's default scheme doubles as --scheme so budget accounting and
+    // reports stay consistent
+    let scheme = match &alloc {
+        Some(al) => al.default,
+        None => QuantScheme::parse(a.get_or("scheme", "1x64"))?,
+    };
     let mut opts = PipelineOpts::new(a.get_or("model", "opt-small"), method, scheme);
+    opts.alloc = alloc;
+    // --alloc-prob wins; otherwise the documented env knob is honored
+    opts.p_alloc = match a.get("alloc-prob") {
+        Some(v) => v
+            .parse::<f64>()
+            .map_err(|_| anyhow::anyhow!("bad --alloc-prob {v:?} (want a probability)"))?,
+        None => crate::util::cli::env_override("INVAREXPLORE_P_ALLOC", 0.0f64),
+    }
+    .clamp(0.0, 1.0);
     opts.steps = a.parse_or("steps", 200usize)?;
     opts.batch = a.parse_or("batch", 1usize)?.max(1);
     opts.kinds = TransformKinds::parse(a.get_or("kinds", "psr"))?;
@@ -104,6 +123,10 @@ fn cmd_info() -> crate::Result<i32> {
     println!("artifacts root : {}", m.root.display());
     println!("batch geometry : B={} T={}", m.batch, m.seq);
     println!("quant schemes  : bits {:?} × groups {:?}", m.quant_bits, m.quant_groups);
+    if !m.quant_allocations.is_empty() {
+        let labels: Vec<String> = m.quant_allocations.iter().map(|a| a.label()).collect();
+        println!("allocations    : {labels:?}");
+    }
     println!("vocab          : {}", m.data.vocab);
     for (name, info) in &m.models {
         let c = &info.config;
@@ -170,7 +193,8 @@ fn cmd_quantize(a: &Args) -> crate::Result<i32> {
     let w = session.weights(&opts.model)?;
     let pile = session.corpus("pile")?;
     let calib = crate::calib::CalibSet::from_corpus(&pile, opts.calib_seqs, session.manifest.seq);
-    let prepared = crate::baselines::prepare(opts.method, opts.scheme, &w, &calib, None)?;
+    let alloc = opts.allocation();
+    let prepared = crate::baselines::prepare_mixed(opts.method, &alloc, &w, &calib, None)?;
     let (packed, bytes) = prepared.pack_model(&prepared.fp);
     let total_params: usize = packed.iter().map(|(_, t)| t.rows * t.cols).sum();
     let fp16_bytes = total_params * 2;
@@ -178,7 +202,7 @@ fn cmd_quantize(a: &Args) -> crate::Result<i32> {
         "{} {} {}: {} quantized tensors, packed {:.2} MiB vs FP16 {:.2} MiB ({:.1}% saving), {:.3} bits/param",
         opts.method.name(),
         opts.model,
-        opts.scheme,
+        alloc.label(),
         packed.len(),
         bytes as f64 / (1 << 20) as f64,
         fp16_bytes as f64 / (1 << 20) as f64,
@@ -224,6 +248,15 @@ fn cmd_search(a: &Args) -> crate::Result<i32> {
             100.0 * state.accept_rate(),
             state.best.total(state.alpha)
         );
+        if let Some(alloc) = &state.alloc {
+            println!(
+                "searched allocation ({} bit swaps accepted, {:.3} bits/param <= budget {:.3}): {}",
+                state.alloc_accepts,
+                alloc.bits_per_param(),
+                alloc.budget,
+                alloc.to_allocation(opts.scheme).label()
+            );
+        }
         if let Some(out) = a.get("out") {
             state.save(std::path::Path::new(out))?;
             println!("search state saved to {out}");
@@ -282,7 +315,8 @@ fn cmd_apply(a: &Args) -> crate::Result<i32> {
     let w = session.weights(&opts.model)?;
     let pile = session.corpus("pile")?;
     let calib = crate::calib::CalibSet::from_corpus(&pile, opts.calib_seqs, session.manifest.seq);
-    let prepared = crate::baselines::prepare(opts.method, opts.scheme, &w, &calib, None)?;
+    let prepared =
+        crate::baselines::prepare_mixed(opts.method, &opts.allocation(), &w, &calib, None)?;
     // apply transforms to FP weights (batched across the thread pool),
     // then quantize under the method
     let mut transformed = prepared.fp.clone();

@@ -3,9 +3,11 @@
 use crate::baselines::{self, Method};
 use crate::calib::CalibSet;
 use crate::eval::{self, TaskResult};
-use crate::quant::QuantScheme;
+use crate::quant::{BitAllocation, QuantScheme};
 use crate::runtime::{Engine, Evaluator};
-use crate::search::{self, DraftRequest, Objective, SearchConfig, SearchState, XlaObjective};
+use crate::search::{
+    self, AllocState, DraftRequest, Objective, SearchConfig, SearchState, XlaObjective,
+};
 use crate::transform::TransformKinds;
 
 use super::session::Session;
@@ -33,6 +35,11 @@ pub struct PipelineOpts {
     /// Reasoning examples per task (0 = skip reasoning).
     pub reasoning_n: usize,
     pub shots: usize,
+    /// Mixed-precision allocation (`--alloc`); `None` = uniform `scheme`.
+    pub alloc: Option<BitAllocation>,
+    /// Probability a search proposal is a bit-swap allocation move
+    /// (`--alloc-prob`); > 0 enables allocation search.
+    pub p_alloc: f64,
 }
 
 impl PipelineOpts {
@@ -51,7 +58,17 @@ impl PipelineOpts {
             eval_seqs: 64,
             reasoning_n: 0,
             shots: 5,
+            alloc: None,
+            p_alloc: 0.0,
         }
+    }
+
+    /// The effective allocation: `--alloc` when given, else uniform at
+    /// `scheme`.
+    pub fn allocation(&self) -> BitAllocation {
+        self.alloc
+            .clone()
+            .unwrap_or_else(|| BitAllocation::uniform(self.scheme))
     }
 }
 
@@ -102,8 +119,15 @@ impl SearchRun {
         );
 
         let t0 = std::time::Instant::now();
-        let prepared = baselines::prepare(opts.method, opts.scheme, &w, &calib, None)?;
-        crate::info!("prepared {} in {:?}", opts.method.name(), t0.elapsed());
+        let alloc = opts.allocation();
+        let prepared = baselines::prepare_mixed(opts.method, &alloc, &w, &calib, None)?;
+        crate::info!(
+            "prepared {} in {:?} (allocation {}, {:.3} bits/param)",
+            opts.method.name(),
+            t0.elapsed(),
+            alloc.label(),
+            alloc.bits_per_param(&w.config)
+        );
 
         let mut engine = Engine::load(manifest, &opts.model)?;
         engine.upload_weights(&prepared.fp)?;
@@ -115,12 +139,17 @@ impl SearchRun {
         let h0_bytes = evaluator.h0_bytes();
 
         let (n_layers, d_ffn) = (cfg.n_layers, cfg.d_ffn);
+        let model_cfg = cfg.clone();
         let obj = XlaObjective::new(prepared, evaluator);
-        let state = SearchState::new(n_layers, d_ffn, opts.seed);
+        let mut state = SearchState::new(n_layers, d_ffn, opts.seed);
+        if opts.p_alloc > 0.0 {
+            state = state.with_alloc(AllocState::new(&model_cfg, &alloc));
+        }
         let cfg = SearchConfig {
             kinds: opts.kinds,
             alpha: opts.alpha,
             batch: opts.batch.max(1),
+            p_alloc: opts.p_alloc.clamp(0.0, 1.0),
             ..SearchConfig::default()
         };
         Ok(SearchRun { obj, state, cfg, h0_bytes, ce_fp_calib })
@@ -146,22 +175,34 @@ impl SearchRun {
         }
         for (l, t) in saved.transforms.iter().enumerate() {
             if !t.is_identity() {
-                let mut drafts = self
-                    .obj
-                    .draft(&[DraftRequest { layer: l, transform: t.clone() }])?;
+                let mut drafts = self.obj.draft(&[DraftRequest::transform(l, t.clone())])?;
                 self.obj.eval_drafts(&drafts)?;
                 let loss = self.obj.commit(drafts.swap_remove(0))?;
                 self.state.best = loss;
             }
         }
+        // re-materialize the checkpointed mixed-precision allocation (after
+        // the transforms, so FFN tensors re-quantize under them)
+        if let Some(alloc) = &saved.alloc {
+            let loss = self.obj.restore_allocation(&alloc.entries, &saved.transforms)?;
+            self.state.best = loss;
+        }
         self.state.transforms = saved.transforms;
         self.state.step = saved.step;
         self.state.accepts = saved.accepts;
+        self.state.alloc_accepts = saved.alloc_accepts;
+        if saved.alloc.is_some() {
+            // adopt the checkpoint's allocation + budget; a checkpoint
+            // without one keeps the fresh AllocState `build` may have
+            // attached for this run's `--alloc-prob`
+            self.state.alloc = saved.alloc;
+        }
         crate::info!(
-            "resumed at step {} (loss {:.4}, {} accepts)",
+            "resumed at step {} (loss {:.4}, {} accepts, {} bit swaps)",
             self.state.step,
             self.state.best.total(self.state.alpha),
-            self.state.accepts
+            self.state.accepts,
+            self.state.alloc_accepts
         );
         Ok(())
     }

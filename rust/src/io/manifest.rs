@@ -10,11 +10,18 @@ use std::path::{Path, PathBuf};
 use crate::model::config::OptConfig;
 use crate::util::json::{self, Json};
 
-/// Expected manifest version.  Version 2 = zero-point-clamped quantization
-/// codec (PR 2): HLO programs compiled from the earlier unclamped Pallas
-/// kernel silently disagree with the host codec on single-sign groups, so
-/// older artifact trees are rejected with a regenerate hint.
-pub const MANIFEST_VERSION: usize = 2;
+/// Expected manifest version.
+///
+/// * Version 2 = zero-point-clamped quantization codec (PR 2): HLO programs
+///   compiled from the earlier unclamped Pallas kernel silently disagree
+///   with the host codec on single-sign groups.
+/// * Version 3 = mixed-precision artifacts: the manifest carries
+///   `quant_allocations` (heterogeneous per-tensor scheme presets the
+///   standalone fake-quant programs are emitted for), so version-2 trees
+///   lack the programs a mixed allocation needs.
+///
+/// Older trees are rejected with a regenerate hint.
+pub const MANIFEST_VERSION: usize = 3;
 
 /// One HLO program's signature.
 #[derive(Debug, Clone)]
@@ -85,6 +92,10 @@ pub struct Manifest {
     pub seq: usize,
     pub quant_bits: Vec<usize>,
     pub quant_groups: Vec<usize>,
+    /// Mixed-precision allocation presets (parse-validated
+    /// [`crate::quant::BitAllocation`] strings, e.g.
+    /// `"2x64,ffn_up=3x64"`).  Optional; empty for uniform-only trees.
+    pub quant_allocations: Vec<crate::quant::BitAllocation>,
     pub models: Vec<(String, ModelInfo)>,
     pub data: DataInfo,
 }
@@ -108,7 +119,8 @@ impl Manifest {
         anyhow::ensure!(
             version == MANIFEST_VERSION,
             "artifacts manifest version {version} != expected {MANIFEST_VERSION}: \
-             the quantization codec changed (zero-point clamp); rerun `make artifacts`"
+             the artifact schema changed (v2: zero-point clamp; v3: mixed-precision \
+             quant_allocations); rerun `make artifacts`"
         );
         let batch_obj = root.req("batch")?;
         let batch = batch_obj.req("B")?.as_usize().unwrap();
@@ -181,6 +193,18 @@ impl Manifest {
                 .map(|v| v.usize_array())
                 .transpose()?
                 .unwrap_or_default(),
+            quant_allocations: root
+                .get("quant_allocations")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(|v| {
+                    crate::quant::BitAllocation::parse(
+                        v.as_str()
+                            .ok_or_else(|| anyhow::anyhow!("quant_allocations: expected string"))?,
+                    )
+                })
+                .collect::<crate::Result<Vec<_>>>()?,
             models,
             data: DataInfo {
                 vocab: data_json.req("vocab")?.as_usize().unwrap_or(0),
@@ -216,10 +240,11 @@ mod tests {
     use super::*;
 
     const SAMPLE: &str = r#"{
-      "version": 2,
+      "version": 3,
       "batch": {"B": 8, "T": 128},
       "quant_bits": [1, 2],
       "quant_groups": [32],
+      "quant_allocations": ["2x64", "2x64,ffn_up=3x64,ffn_down=1x64"],
       "data": {
         "vocab": 2048,
         "corpora": {"wiki": {"path": "data/wiki.tok", "tokens": 100}},
@@ -255,6 +280,32 @@ mod tests {
         assert_eq!(m.data.corpus("wiki").unwrap(), Path::new("/art/data/wiki.tok"));
         assert!(m.data.corpus("nope").is_err());
         assert!(model.program("nope").is_err());
+        // mixed-precision presets are parse-validated BitAllocations
+        assert_eq!(m.quant_allocations.len(), 2);
+        assert!(m.quant_allocations[0].is_uniform());
+        assert_eq!(
+            m.quant_allocations[1].scheme_for("l0.up.w"),
+            crate::quant::QuantScheme::new(3, 64)
+        );
+    }
+
+    #[test]
+    fn bad_allocation_preset_rejected() {
+        let bad = SAMPLE.replace("ffn_up=3x64", "lm_head=3x64");
+        let root = json::parse(&bad).unwrap();
+        let err = Manifest::from_json(&root, Path::new("/art")).unwrap_err();
+        assert!(err.to_string().contains("unknown tensor"), "{err}");
+    }
+
+    #[test]
+    fn missing_allocations_default_empty() {
+        let no_alloc = SAMPLE.replace(
+            "\"quant_allocations\": [\"2x64\", \"2x64,ffn_up=3x64,ffn_down=1x64\"],",
+            "",
+        );
+        let root = json::parse(&no_alloc).unwrap();
+        let m = Manifest::from_json(&root, Path::new("/art")).unwrap();
+        assert!(m.quant_allocations.is_empty());
     }
 
     #[test]
@@ -264,12 +315,14 @@ mod tests {
 
     #[test]
     fn stale_manifest_version_rejected() {
-        // artifacts compiled before the zero-point clamp carry version 1;
-        // loading them must fail loudly instead of silently diverging from
-        // the host codec on single-sign groups
-        let stale = SAMPLE.replace("\"version\": 2", "\"version\": 1");
-        let root = json::parse(&stale).unwrap();
-        let err = Manifest::from_json(&root, Path::new("/art")).unwrap_err();
-        assert!(err.to_string().contains("make artifacts"), "{err}");
+        // v1 predates the zero-point clamp, v2 the mixed-precision
+        // allocations; both must fail loudly with a regenerate hint instead
+        // of silently diverging at runtime
+        for old in ["\"version\": 1", "\"version\": 2"] {
+            let stale = SAMPLE.replace("\"version\": 3", old);
+            let root = json::parse(&stale).unwrap();
+            let err = Manifest::from_json(&root, Path::new("/art")).unwrap_err();
+            assert!(err.to_string().contains("make artifacts"), "{err}");
+        }
     }
 }

@@ -24,6 +24,21 @@ pub const LAYER_PARAM_NAMES: [&str; 16] = [
 /// Quantizable linear weights within a layer (mirrors `LAYER_QUANT_NAMES`).
 pub const LAYER_QUANT_NAMES: [&str; 6] = ["q.w", "k.w", "v.w", "o.w", "up.w", "down.w"];
 
+/// Split a canonical parameter name into its optional layer prefix and base
+/// name: `"l3.up.w"` → `(Some(3), "up.w")`, `"emb"` → `(None, "emb")`.
+/// The single source of truth for the `l<i>.` grammar — shared by shape
+/// lookup, bit-allocation selectors, and the allocation search.
+pub fn split_layer_prefix(name: &str) -> (Option<usize>, &str) {
+    if let Some((head, rest)) = name.split_once('.') {
+        if head.len() > 1 && head.starts_with('l') && head[1..].chars().all(|c| c.is_ascii_digit()) {
+            if let Ok(l) = head[1..].parse() {
+                return (Some(l), rest);
+            }
+        }
+    }
+    (None, name)
+}
+
 impl OptConfig {
     pub fn head_dim(&self) -> usize {
         debug_assert_eq!(self.d_model % self.n_heads, 0);
@@ -43,6 +58,19 @@ impl OptConfig {
         names
     }
 
+    /// Names of all quantizable linear weights, layer by layer (the tensor
+    /// universe a mixed-precision [`crate::quant::BitAllocation`] ranges
+    /// over).
+    pub fn quant_names(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for i in 0..self.n_layers {
+            for base in LAYER_QUANT_NAMES {
+                out.push(format!("l{i}.{base}"));
+            }
+        }
+        out
+    }
+
     /// Total parameter count (tied LM head: emb counted once).
     pub fn num_params(&self) -> usize {
         let d = self.d_model;
@@ -53,11 +81,7 @@ impl OptConfig {
     /// Expected shape of a named parameter.
     pub fn param_shape(&self, name: &str) -> crate::Result<(usize, usize)> {
         let (d, f, v, t) = (self.d_model, self.d_ffn, self.vocab, self.max_seq);
-        let base = match name.split_once('.') {
-            Some((head, rest)) if head.len() > 1 && head.starts_with('l')
-                && head[1..].chars().all(|c| c.is_ascii_digit()) => rest,
-            _ => name,
-        };
+        let (_, base) = split_layer_prefix(name);
         Ok(match base {
             "emb" => (v, d),
             "pos" => (t, d),
@@ -137,6 +161,15 @@ mod tests {
             })
             .sum();
         assert_eq!(total, cfg.num_params());
+    }
+
+    #[test]
+    fn split_layer_prefix_grammar() {
+        assert_eq!(split_layer_prefix("l3.up.w"), (Some(3), "up.w"));
+        assert_eq!(split_layer_prefix("l12.q.w"), (Some(12), "q.w"));
+        assert_eq!(split_layer_prefix("emb"), (None, "emb"));
+        assert_eq!(split_layer_prefix("lnf.w"), (None, "lnf.w")); // not a layer
+        assert_eq!(split_layer_prefix("up.w"), (None, "up.w"));
     }
 
     #[test]

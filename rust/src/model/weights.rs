@@ -91,13 +91,7 @@ impl Weights {
 
     /// Names of all quantizable linear weights, layer by layer.
     pub fn quant_names(&self) -> Vec<String> {
-        let mut out = Vec::new();
-        for i in 0..self.config.n_layers {
-            for base in super::config::LAYER_QUANT_NAMES {
-                out.push(format!("l{i}.{base}"));
-            }
-        }
-        out
+        self.config.quant_names()
     }
 
     /// Random weights for tests (same scale scheme as the python init).

@@ -10,4 +10,4 @@ pub mod scheme;
 
 pub use group::{dequantize, fake_quant, fake_quant_into, quant_mse, quantize, GroupQuant};
 pub use packed::PackedTensor;
-pub use scheme::QuantScheme;
+pub use scheme::{BitAllocation, QuantScheme};

@@ -1,4 +1,9 @@
-//! Quantization scheme descriptor.
+//! Quantization scheme descriptors: the uniform [`QuantScheme`] and the
+//! mixed-precision [`BitAllocation`] (per-tensor schemes under a global
+//! bits/param budget — BiLLM/PTQ1.61-style heterogeneous precision).
+
+use crate::model::config::{split_layer_prefix, LAYER_QUANT_NAMES};
+use crate::model::OptConfig;
 
 /// Bits + group size for asymmetric unsigned integer group quantization.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -27,11 +32,31 @@ impl QuantScheme {
     }
 
     /// Parse "2x64" / "3b128"-style strings from the CLI.
+    ///
+    /// The whole string must be consumed: `"2x64x32"` is rejected (the old
+    /// parser's `split_once` left the tail inside the group field, which a
+    /// strict integer parse now surfaces as an explicit trailing-garbage
+    /// error instead of an opaque `ParseIntError`).
     pub fn parse(s: &str) -> crate::Result<QuantScheme> {
         let (b, g) = s
             .split_once(['x', 'b'])
             .ok_or_else(|| anyhow::anyhow!("bad quant scheme {s:?} (want e.g. 2x64)"))?;
-        Ok(QuantScheme::new(b.trim().parse()?, g.trim().parse()?))
+        let bits: usize = b
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad bits {b:?} in quant scheme {s:?} (want e.g. 2x64)"))?;
+        let group: usize = g.trim().parse().map_err(|_| {
+            anyhow::anyhow!(
+                "bad group {g:?} in quant scheme {s:?}: the group must be a plain \
+                 integer with nothing after it (want e.g. 2x64)"
+            )
+        })?;
+        anyhow::ensure!(
+            (1..=8).contains(&bits),
+            "quant scheme {s:?}: bits {bits} outside 1..=8"
+        );
+        anyhow::ensure!(group > 0, "quant scheme {s:?}: group must be positive");
+        Ok(QuantScheme { bits, group })
     }
 
     pub fn label(&self) -> String {
@@ -42,6 +67,183 @@ impl QuantScheme {
 impl std::fmt::Display for QuantScheme {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "{}-bit g{}", self.bits, self.group)
+    }
+}
+
+/// Normalize an override selector to a canonical tensor selector: either a
+/// layer-agnostic base name (`up.w`) or a full parameter name (`l3.up.w`).
+/// Friendly aliases (`ffn_up`, `attn_q`, …) map to base names.  Anything
+/// that is not a quantizable linear is rejected — the "unknown tensor"
+/// parse-error path.
+fn normalize_selector(sel: &str) -> crate::Result<String> {
+    let aliased = match sel {
+        "ffn_up" => "up.w",
+        "ffn_down" => "down.w",
+        "attn_q" => "q.w",
+        "attn_k" => "k.w",
+        "attn_v" => "v.w",
+        "attn_o" => "o.w",
+        other => other,
+    };
+    let (_, base) = split_layer_prefix(aliased);
+    anyhow::ensure!(
+        LAYER_QUANT_NAMES.contains(&base),
+        "unknown tensor {sel:?} in bit allocation (quantizable: q.w|k.w|v.w|o.w|up.w|down.w, \
+         optionally l<i>-prefixed like l0.up.w; aliases attn_q|attn_k|attn_v|attn_o|ffn_up|ffn_down)"
+    );
+    Ok(aliased.to_string())
+}
+
+/// Mixed-precision bit allocation: a default [`QuantScheme`] plus per-tensor
+/// overrides, e.g. `"2x64,ffn_up=3x64,l0.q.w=4x128"`.
+///
+/// Selector precedence at lookup time: an exact full-name override
+/// (`l0.up.w`) wins over a layer-agnostic base-name override (`up.w`),
+/// which wins over the default.  The global budget of an allocation is its
+/// size-weighted mean [`QuantScheme::bits_per_param`] over a model's
+/// quantizable tensors ([`BitAllocation::bits_per_param`]); the bit-swap
+/// search move in `search::alloc` only ever proposes allocations at or
+/// under that budget.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BitAllocation {
+    pub default: QuantScheme,
+    /// Normalized `(selector, scheme)` overrides in precedence-irrelevant
+    /// storage order (duplicates are rejected at parse time).
+    pub overrides: Vec<(String, QuantScheme)>,
+}
+
+impl BitAllocation {
+    /// The allocation every tensor shares: the pre-mixed-precision world.
+    pub fn uniform(default: QuantScheme) -> BitAllocation {
+        BitAllocation { default, overrides: Vec::new() }
+    }
+
+    /// Parse `"<default>[,<selector>=<scheme>]*"`, e.g.
+    /// `"2x64,ffn_up=3x64,l0.q.w=4x128"`.  A bare scheme (`"2x64"`) parses
+    /// as a uniform allocation.
+    pub fn parse(s: &str) -> crate::Result<BitAllocation> {
+        let mut parts = s.split(',');
+        let head = parts.next().unwrap_or("");
+        anyhow::ensure!(
+            !head.trim().is_empty(),
+            "empty bit allocation (want e.g. \"2x64,ffn_up=3x64\")"
+        );
+        anyhow::ensure!(
+            !head.contains('='),
+            "bit allocation {s:?} must start with the default scheme (e.g. \"2x64\"), \
+             not an override"
+        );
+        let default = QuantScheme::parse(head.trim())?;
+        let mut overrides: Vec<(String, QuantScheme)> = Vec::new();
+        for part in parts {
+            let part = part.trim();
+            anyhow::ensure!(
+                !part.is_empty(),
+                "empty override entry in bit allocation {s:?} (trailing or doubled comma?)"
+            );
+            let (sel, scheme) = part.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("bad override {part:?} in bit allocation {s:?} (want name=scheme)")
+            })?;
+            let sel = normalize_selector(sel.trim())?;
+            anyhow::ensure!(
+                overrides.iter().all(|(existing, _)| existing != &sel),
+                "duplicate tensor {sel:?} in bit allocation {s:?}"
+            );
+            overrides.push((sel, QuantScheme::parse(scheme.trim())?));
+        }
+        Ok(BitAllocation { default, overrides })
+    }
+
+    /// No overrides — every tensor uses the default scheme.
+    pub fn is_uniform(&self) -> bool {
+        self.overrides.is_empty()
+    }
+
+    /// Scheme of one tensor.  `name` is a canonical parameter name
+    /// (`l0.up.w`); exact overrides beat base-name overrides beat default.
+    pub fn scheme_for(&self, name: &str) -> QuantScheme {
+        if let Some((_, s)) = self.overrides.iter().find(|(sel, _)| sel == name) {
+            return *s;
+        }
+        let (_, base) = split_layer_prefix(name);
+        self.overrides
+            .iter()
+            .find(|(sel, _)| sel == base)
+            .map(|(_, s)| *s)
+            .unwrap_or(self.default)
+    }
+
+    /// Insert or replace an exact per-tensor override (the bit-swap commit
+    /// path writes searched schemes back through this).
+    pub fn set_scheme(&mut self, name: &str, scheme: QuantScheme) {
+        if let Some(entry) = self.overrides.iter_mut().find(|(sel, _)| sel == name) {
+            entry.1 = scheme;
+        } else {
+            self.overrides.push((name.to_string(), scheme));
+        }
+    }
+
+    /// Global budget accounting: the size-weighted mean
+    /// [`QuantScheme::bits_per_param`] over every quantizable tensor of
+    /// `cfg` — the honest "Bits/Param" of the heterogeneous model.
+    pub fn bits_per_param(&self, cfg: &OptConfig) -> f64 {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for name in cfg.quant_names() {
+            let (r, c) = cfg.param_shape(&name).expect("quant names are known params");
+            let numel = (r * c) as f64;
+            num += numel * self.scheme_for(&name).bits_per_param();
+            den += numel;
+        }
+        num / den.max(1.0)
+    }
+
+    /// Check this allocation against a concrete model: every tensor's group
+    /// must divide its column count (the group codec's precondition), and
+    /// every exact `l<i>.`-prefixed override must name a layer that exists
+    /// — a phantom `l12.q.w` on a 12-layer model (layers 0..=11) would
+    /// otherwise parse cleanly and then silently never apply.
+    pub fn validate(&self, cfg: &OptConfig) -> crate::Result<()> {
+        for (sel, _) in &self.overrides {
+            if let (Some(l), _) = split_layer_prefix(sel) {
+                anyhow::ensure!(
+                    l < cfg.n_layers,
+                    "bit allocation: override {sel:?} names layer {l}, but {} has \
+                     only {} layers (l0..=l{})",
+                    cfg.name,
+                    cfg.n_layers,
+                    cfg.n_layers.saturating_sub(1)
+                );
+            }
+        }
+        for name in cfg.quant_names() {
+            let s = self.scheme_for(&name);
+            let (_, c) = cfg.param_shape(&name)?;
+            anyhow::ensure!(
+                c % s.group == 0,
+                "bit allocation: {name} has {c} columns, not divisible by group {}",
+                s.group
+            );
+        }
+        Ok(())
+    }
+
+    /// Canonical round-trippable form: `default[,sel=scheme]*`.
+    pub fn label(&self) -> String {
+        let mut out = self.default.label();
+        for (sel, s) in &self.overrides {
+            out.push(',');
+            out.push_str(sel);
+            out.push('=');
+            out.push_str(&s.label());
+        }
+        out
+    }
+}
+
+impl std::fmt::Display for BitAllocation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
     }
 }
 
@@ -74,8 +276,137 @@ mod tests {
     }
 
     #[test]
+    fn parse_rejects_trailing_garbage() {
+        // REGRESSION: "2x64x32" used to die inside the group integer parse
+        // with a bare ParseIntError; it must be rejected with a message that
+        // names the offending tail.
+        let err = QuantScheme::parse("2x64x32").unwrap_err().to_string();
+        assert!(err.contains("64x32"), "unhelpful error: {err}");
+        assert!(QuantScheme::parse("2x64 extra").is_err());
+        assert!(QuantScheme::parse("2x").is_err());
+        assert!(QuantScheme::parse("x64").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_out_of_range_without_panicking() {
+        // CLI input must produce Err, not the constructor assert
+        assert!(QuantScheme::parse("0x64").is_err());
+        assert!(QuantScheme::parse("9x64").is_err());
+        assert!(QuantScheme::parse("2x0").is_err());
+    }
+
+    #[test]
     #[should_panic]
     fn zero_bits_rejected() {
         QuantScheme::new(0, 64);
+    }
+
+    // ---- BitAllocation ----------------------------------------------------
+
+    #[test]
+    fn allocation_parse_and_lookup() {
+        let a = BitAllocation::parse("2x64,ffn_up=3x64,l0.q.w=4x128").unwrap();
+        assert_eq!(a.default, QuantScheme::new(2, 64));
+        // alias normalizes to the base name and applies to every layer
+        assert_eq!(a.scheme_for("l0.up.w"), QuantScheme::new(3, 64));
+        assert_eq!(a.scheme_for("l7.up.w"), QuantScheme::new(3, 64));
+        // exact override beats the default
+        assert_eq!(a.scheme_for("l0.q.w"), QuantScheme::new(4, 128));
+        // other layers' q.w fall back to the default
+        assert_eq!(a.scheme_for("l1.q.w"), QuantScheme::new(2, 64));
+        assert_eq!(a.scheme_for("l0.down.w"), QuantScheme::new(2, 64));
+    }
+
+    #[test]
+    fn exact_override_beats_base_override() {
+        let a = BitAllocation::parse("2x64,up.w=3x64,l1.up.w=1x64").unwrap();
+        assert_eq!(a.scheme_for("l0.up.w"), QuantScheme::new(3, 64));
+        assert_eq!(a.scheme_for("l1.up.w"), QuantScheme::new(1, 64));
+    }
+
+    #[test]
+    fn allocation_error_paths() {
+        // empty allocation / empty override entry
+        assert!(BitAllocation::parse("").is_err());
+        assert!(BitAllocation::parse("2x64,").is_err());
+        assert!(BitAllocation::parse("2x64,,ffn_up=3x64").is_err());
+        // must start with a default scheme, not an override
+        assert!(BitAllocation::parse("ffn_up=3x64").is_err());
+        // duplicate tensor (also via alias collision)
+        assert!(BitAllocation::parse("2x64,up.w=3x64,up.w=4x64").is_err());
+        assert!(BitAllocation::parse("2x64,ffn_up=3x64,up.w=4x64").is_err());
+        // bits outside 1..=8
+        assert!(BitAllocation::parse("2x64,ffn_up=9x64").is_err());
+        assert!(BitAllocation::parse("2x64,ffn_up=0x64").is_err());
+        // unknown tensor
+        let err = BitAllocation::parse("2x64,lm_head=4x128").unwrap_err().to_string();
+        assert!(err.contains("unknown tensor"), "{err}");
+        // override missing '='
+        assert!(BitAllocation::parse("2x64,ffn_up").is_err());
+    }
+
+    #[test]
+    fn budget_is_size_weighted_mean() {
+        let cfg = OptConfig::test_config(); // d=32, f=64: qkvo 32x32, up 64x32, down 32x64
+        let uniform = BitAllocation::uniform(QuantScheme::new(2, 32));
+        let per_tensor = QuantScheme::new(2, 32).bits_per_param();
+        assert!((uniform.bits_per_param(&cfg) - per_tensor).abs() < 1e-12);
+
+        let mixed = BitAllocation::parse("2x32,ffn_up=4x32").unwrap();
+        // hand-computed size-weighted mean over one layer's tensors
+        // (identical per layer, so one layer's mean == the model mean)
+        let qkvo = 4.0 * (32.0 * 32.0);
+        let up = 64.0 * 32.0;
+        let down = 32.0 * 64.0;
+        let expect = (qkvo * QuantScheme::new(2, 32).bits_per_param()
+            + up * QuantScheme::new(4, 32).bits_per_param()
+            + down * QuantScheme::new(2, 32).bits_per_param())
+            / (qkvo + up + down);
+        assert!((mixed.bits_per_param(&cfg) - expect).abs() < 1e-12);
+        assert!(mixed.bits_per_param(&cfg) > uniform.bits_per_param(&cfg));
+    }
+
+    #[test]
+    fn label_roundtrips() {
+        for s in ["2x64", "2x64,up.w=3x64,l0.q.w=4x128"] {
+            let a = BitAllocation::parse(s).unwrap();
+            let b = BitAllocation::parse(&a.label()).unwrap();
+            assert_eq!(a, b, "{s}");
+        }
+    }
+
+    #[test]
+    fn set_scheme_inserts_and_replaces() {
+        let mut a = BitAllocation::uniform(QuantScheme::new(2, 32));
+        a.set_scheme("l0.up.w", QuantScheme::new(3, 32));
+        assert_eq!(a.scheme_for("l0.up.w"), QuantScheme::new(3, 32));
+        a.set_scheme("l0.up.w", QuantScheme::new(4, 32));
+        assert_eq!(a.scheme_for("l0.up.w"), QuantScheme::new(4, 32));
+        assert_eq!(a.overrides.len(), 1);
+    }
+
+    #[test]
+    fn validate_checks_group_divisibility() {
+        let cfg = OptConfig::test_config(); // all cols are 32 or 64
+        assert!(BitAllocation::parse("2x32").unwrap().validate(&cfg).is_ok());
+        // group 64 does not divide the 32-column attention tensors
+        assert!(BitAllocation::parse("2x64").unwrap().validate(&cfg).is_err());
+        assert!(BitAllocation::parse("2x32,ffn_down=2x64")
+            .unwrap()
+            .validate(&cfg)
+            .is_ok()); // down.w has 64 cols
+    }
+
+    #[test]
+    fn validate_rejects_phantom_layer_overrides() {
+        // test_config has 2 layers (l0, l1): an l2 override would be
+        // silently inert — validate must reject it loudly
+        let cfg = OptConfig::test_config();
+        assert!(BitAllocation::parse("2x32,l1.q.w=4x32").unwrap().validate(&cfg).is_ok());
+        let err = BitAllocation::parse("2x32,l2.q.w=4x32")
+            .unwrap()
+            .validate(&cfg)
+            .unwrap_err();
+        assert!(err.to_string().contains("only 2 layers"), "{err}");
     }
 }

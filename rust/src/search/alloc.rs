@@ -1,0 +1,379 @@
+//! Mixed-precision allocation state for the discrete search, and the
+//! budget-preserving **bit-swap** move.
+//!
+//! The search treats the per-tensor bit widths as one more discrete axis
+//! next to the invariance transforms: a proposal either mutates one layer's
+//! FFN transform (the original InvarExplore move) or *swaps a bit* — steal
+//! one bit from a donor tensor, grant one to a receiver tensor — subject to
+//! the global [`AllocState::budget`] in bits/param.  Equal-size tensor
+//! pairs (any two attention projections, or `up.w`/`down.w` across layers)
+//! swap at exactly constant bits/param; unequal pairs are admitted only
+//! when the resulting allocation stays at or under the budget, so the
+//! accepted allocation can only ever get *cheaper* than the budget, never
+//! more expensive.
+
+use crate::model::OptConfig;
+use crate::quant::{BitAllocation, QuantScheme};
+use crate::transform::LayerTransform;
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+
+/// One quantizable tensor tracked by the allocation search.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AllocEntry {
+    pub name: String,
+    pub layer: usize,
+    pub numel: usize,
+    pub scheme: QuantScheme,
+}
+
+/// The bit-swap proposal: `donor` loses one bit, `receiver` gains one.
+///
+/// The accepted FFN transform of each affected layer rides along (filled by
+/// the driver at proposal time, `None` for attention tensors), so an
+/// objective can re-quantize the affected tensors from the base FP weights
+/// without reaching back into the search state.
+#[derive(Debug, Clone)]
+pub struct BitSwap {
+    pub donor: String,
+    pub donor_layer: usize,
+    pub receiver: String,
+    pub receiver_layer: usize,
+    pub donor_transform: Option<LayerTransform>,
+    pub receiver_transform: Option<LayerTransform>,
+}
+
+impl BitSwap {
+    /// The round scheduler's resource key: drafts must touch distinct
+    /// layers to be independently scorable, and a swap occupies both of its
+    /// tensors' layers.
+    pub fn min_layer(&self) -> usize {
+        self.donor_layer.min(self.receiver_layer)
+    }
+}
+
+/// Accepted per-tensor allocation + the global budget, owned by
+/// [`super::SearchState`] when allocation search is enabled.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AllocState {
+    pub entries: Vec<AllocEntry>,
+    /// Bits/param ceiling; set to the starting allocation's bits/param.
+    pub budget: f64,
+}
+
+fn is_ffn(name: &str) -> bool {
+    name.ends_with("up.w") || name.ends_with("down.w")
+}
+
+impl AllocState {
+    /// Track every quantizable tensor of `cfg`, starting from `alloc`.
+    /// The budget is the starting allocation's own bits/param.
+    pub fn new(cfg: &OptConfig, alloc: &BitAllocation) -> AllocState {
+        let entries = cfg
+            .quant_names()
+            .iter()
+            .map(|name| {
+                let (r, c) = cfg.param_shape(name).expect("quant names are known params");
+                let layer = crate::model::config::split_layer_prefix(name)
+                    .0
+                    .expect("quant names carry a layer prefix");
+                AllocEntry {
+                    name: name.clone(),
+                    layer,
+                    numel: r * c,
+                    scheme: alloc.scheme_for(name),
+                }
+            })
+            .collect();
+        let mut st = AllocState { entries, budget: 0.0 };
+        st.budget = st.bits_per_param();
+        st
+    }
+
+    /// Build from an explicit tensor list (synthetic objectives).  Budget
+    /// defaults to the starting bits/param when `budget` is `None`.
+    pub fn from_entries(entries: Vec<AllocEntry>, budget: Option<f64>) -> AllocState {
+        let mut st = AllocState { entries, budget: 0.0 };
+        st.budget = budget.unwrap_or_else(|| st.bits_per_param());
+        st
+    }
+
+    /// Size-weighted mean bits/param of the current allocation.
+    pub fn bits_per_param(&self) -> f64 {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for e in &self.entries {
+            num += e.numel as f64 * e.scheme.bits_per_param();
+            den += e.numel as f64;
+        }
+        num / den.max(1.0)
+    }
+
+    fn index_of(&self, name: &str) -> Option<usize> {
+        self.entries.iter().position(|e| e.name == name)
+    }
+
+    /// Current scheme of one tracked tensor.
+    pub fn scheme_of(&self, name: &str) -> Option<QuantScheme> {
+        self.index_of(name).map(|i| self.entries[i].scheme)
+    }
+
+    /// Would swapping a bit from `entries[d]` to `entries[r]` be legal?
+    /// Distinct tensors, donor stays >= 1 bit, receiver stays <= 8 bits,
+    /// and the resulting allocation does not exceed the budget.
+    pub fn swap_is_valid(&self, d: usize, r: usize) -> bool {
+        if d == r {
+            return false;
+        }
+        let (donor, recv) = (&self.entries[d], &self.entries[r]);
+        if donor.scheme.bits <= 1 || recv.scheme.bits >= 8 {
+            return false;
+        }
+        let mut total = 0.0;
+        let mut den = 0.0;
+        for (i, e) in self.entries.iter().enumerate() {
+            let bits = if i == d {
+                e.scheme.bits - 1
+            } else if i == r {
+                e.scheme.bits + 1
+            } else {
+                e.scheme.bits
+            };
+            total += e.numel as f64 * QuantScheme::new(bits, e.scheme.group).bits_per_param();
+            den += e.numel as f64;
+        }
+        total / den.max(1.0) <= self.budget + 1e-9
+    }
+
+    /// Draw a budget-preserving swap by rejection sampling (bounded at
+    /// `tries` draws so the RNG stream stays deterministic).  `free` — when
+    /// given — restricts both affected layers to unclaimed round slots;
+    /// `transforms` supplies the accepted FFN transform each affected FFN
+    /// tensor must be re-quantized under.
+    pub fn propose(
+        &self,
+        rng: &mut Pcg64,
+        transforms: &[LayerTransform],
+        free: Option<&[bool]>,
+        tries: usize,
+    ) -> Option<BitSwap> {
+        let n = self.entries.len();
+        if n < 2 {
+            return None;
+        }
+        for _ in 0..tries {
+            let d = rng.below(n);
+            let r = rng.below(n);
+            if !self.swap_is_valid(d, r) {
+                continue;
+            }
+            let (donor, recv) = (&self.entries[d], &self.entries[r]);
+            if let Some(free) = free {
+                if !free[donor.layer] || (donor.layer != recv.layer && !free[recv.layer]) {
+                    continue;
+                }
+            }
+            let t_of = |e: &AllocEntry| {
+                (is_ffn(&e.name) && e.layer < transforms.len())
+                    .then(|| transforms[e.layer].clone())
+            };
+            return Some(BitSwap {
+                donor: donor.name.clone(),
+                donor_layer: donor.layer,
+                receiver: recv.name.clone(),
+                receiver_layer: recv.layer,
+                donor_transform: t_of(donor),
+                receiver_transform: t_of(recv),
+            });
+        }
+        None
+    }
+
+    /// Commit a swap into the accepted allocation.
+    pub fn apply(&mut self, swap: &BitSwap) {
+        let d = self.index_of(&swap.donor).expect("donor tracked");
+        let r = self.index_of(&swap.receiver).expect("receiver tracked");
+        assert!(self.swap_is_valid(d, r), "applying an invalid bit swap");
+        self.entries[d].scheme.bits -= 1;
+        self.entries[r].scheme.bits += 1;
+        debug_assert!(self.bits_per_param() <= self.budget + 1e-9);
+    }
+
+    /// Export the searched allocation as a [`BitAllocation`] (exact
+    /// per-tensor overrides for every tensor that differs from `default`).
+    pub fn to_allocation(&self, default: QuantScheme) -> BitAllocation {
+        let mut alloc = BitAllocation::uniform(default);
+        for e in &self.entries {
+            if e.scheme != default {
+                alloc.set_scheme(&e.name, e.scheme);
+            }
+        }
+        alloc
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj().set("budget", self.budget).set(
+            "entries",
+            Json::Arr(
+                self.entries
+                    .iter()
+                    .map(|e| {
+                        Json::obj()
+                            .set("name", e.name.as_str())
+                            .set("layer", e.layer)
+                            .set("numel", e.numel)
+                            .set("bits", e.scheme.bits)
+                            .set("group", e.scheme.group)
+                    })
+                    .collect(),
+            ),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<AllocState> {
+        let entries = j
+            .req("entries")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|e| {
+                Ok(AllocEntry {
+                    name: e.req("name")?.as_str().unwrap_or("").to_string(),
+                    layer: e.req("layer")?.as_usize().unwrap_or(0),
+                    numel: e.req("numel")?.as_usize().unwrap_or(0),
+                    scheme: QuantScheme::new(
+                        e.req("bits")?.as_usize().unwrap_or(2),
+                        e.req("group")?.as_usize().unwrap_or(64),
+                    ),
+                })
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        anyhow::ensure!(!entries.is_empty(), "empty allocation state");
+        Ok(AllocState {
+            entries,
+            budget: j.req("budget")?.as_f64().unwrap_or(0.0),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 2 layers x {up.w, down.w}, equal sizes -> every swap is exactly
+    /// budget-preserving.
+    pub(crate) fn ffn_entries(n_layers: usize, scheme: QuantScheme) -> Vec<AllocEntry> {
+        let mut out = Vec::new();
+        for l in 0..n_layers {
+            for base in ["up.w", "down.w"] {
+                out.push(AllocEntry {
+                    name: format!("l{l}.{base}"),
+                    layer: l,
+                    numel: 4096,
+                    scheme,
+                });
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn new_tracks_every_quant_tensor() {
+        let cfg = OptConfig::test_config();
+        let st = AllocState::new(&cfg, &BitAllocation::uniform(QuantScheme::new(2, 32)));
+        assert_eq!(st.entries.len(), cfg.quant_names().len());
+        assert_eq!(st.scheme_of("l1.down.w"), Some(QuantScheme::new(2, 32)));
+        assert_eq!(st.entries[0].layer, 0);
+        assert!((st.budget - QuantScheme::new(2, 32).bits_per_param()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn equal_size_swap_preserves_budget_exactly() {
+        let mut st = AllocState::from_entries(ffn_entries(2, QuantScheme::new(2, 64)), None);
+        let before = st.bits_per_param();
+        let swap = BitSwap {
+            donor: "l0.up.w".into(),
+            donor_layer: 0,
+            receiver: "l1.down.w".into(),
+            receiver_layer: 1,
+            donor_transform: None,
+            receiver_transform: None,
+        };
+        st.apply(&swap);
+        assert_eq!(st.scheme_of("l0.up.w").unwrap().bits, 1);
+        assert_eq!(st.scheme_of("l1.down.w").unwrap().bits, 3);
+        assert!((st.bits_per_param() - before).abs() < 1e-12);
+    }
+
+    #[test]
+    fn swap_validity_respects_bit_range_and_budget() {
+        let mut entries = ffn_entries(1, QuantScheme::new(2, 64));
+        entries[0].scheme = QuantScheme::new(1, 64); // can't donate below 1 bit
+        entries[1].scheme = QuantScheme::new(8, 64); // can't receive past 8
+        let st = AllocState::from_entries(entries, None);
+        assert!(!st.swap_is_valid(0, 1));
+        assert!(!st.swap_is_valid(0, 0));
+        // 8-bit tensor can donate to the 1-bit tensor
+        assert!(st.swap_is_valid(1, 0));
+
+        // unequal sizes: granting to the BIGGER tensor would exceed budget
+        let entries = vec![
+            AllocEntry { name: "l0.up.w".into(), layer: 0, numel: 64, scheme: QuantScheme::new(2, 64) },
+            AllocEntry { name: "l0.down.w".into(), layer: 0, numel: 4096, scheme: QuantScheme::new(2, 64) },
+        ];
+        let st = AllocState::from_entries(entries, None);
+        assert!(!st.swap_is_valid(0, 1), "small donor, big receiver must exceed budget");
+        assert!(st.swap_is_valid(1, 0), "big donor, small receiver stays under budget");
+    }
+
+    #[test]
+    fn propose_is_deterministic_and_valid() {
+        let st = AllocState::from_entries(ffn_entries(3, QuantScheme::new(2, 64)), None);
+        let transforms = vec![LayerTransform::identity(8); 3];
+        let mut r1 = Pcg64::new(9);
+        let mut r2 = Pcg64::new(9);
+        let a = st.propose(&mut r1, &transforms, None, 32).unwrap();
+        let b = st.propose(&mut r2, &transforms, None, 32).unwrap();
+        assert_eq!((a.donor.clone(), a.receiver.clone()), (b.donor, b.receiver));
+        assert_ne!(a.donor, a.receiver);
+        // FFN tensors carry their layer's accepted transform
+        assert!(a.donor_transform.is_some());
+        assert_eq!(a.min_layer(), a.donor_layer.min(a.receiver_layer));
+    }
+
+    #[test]
+    fn propose_honors_free_mask() {
+        let st = AllocState::from_entries(ffn_entries(3, QuantScheme::new(2, 64)), None);
+        let transforms = vec![LayerTransform::identity(8); 3];
+        let mut rng = Pcg64::new(4);
+        // only layer 2 free -> both endpoints must live in layer 2
+        let free = [false, false, true];
+        for _ in 0..10 {
+            if let Some(s) = st.propose(&mut rng, &transforms, Some(&free), 64) {
+                assert_eq!(s.donor_layer, 2);
+                assert_eq!(s.receiver_layer, 2);
+            }
+        }
+    }
+
+    #[test]
+    fn to_allocation_roundtrips_through_schemes() {
+        let mut st = AllocState::from_entries(ffn_entries(2, QuantScheme::new(2, 64)), None);
+        st.entries[0].scheme = QuantScheme::new(3, 64);
+        st.entries[3].scheme = QuantScheme::new(1, 64);
+        let alloc = st.to_allocation(QuantScheme::new(2, 64));
+        for e in &st.entries {
+            assert_eq!(alloc.scheme_for(&e.name), e.scheme, "{}", e.name);
+        }
+        assert_eq!(alloc.overrides.len(), 2);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut st = AllocState::from_entries(ffn_entries(2, QuantScheme::new(2, 64)), None);
+        st.entries[1].scheme = QuantScheme::new(4, 64);
+        let j = st.to_json();
+        let back = AllocState::from_json(&crate::util::json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(st, back);
+    }
+}

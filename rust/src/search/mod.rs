@@ -9,19 +9,25 @@
 //!   greedy acceptance with exact re-scoring of survivors;
 //! * [`objective`] — the real objective: transform → re-quantize → run the
 //!   AOT XLA programs through the incremental [`crate::runtime::Evaluator`];
-//! * [`synth`] — deterministic XLA-free objective for tests and the
-//!   `perf_hotpath` throughput bench;
+//! * [`alloc`] — the mixed-precision allocation axis: per-tensor bit
+//!   widths under a global bits/param budget, mutated by budget-preserving
+//!   [`BitSwap`] moves that mix into the same proposal stream
+//!   (`cfg.p_alloc`);
+//! * [`synth`] — deterministic XLA-free objectives for tests and the
+//!   `perf_hotpath` / `mixed_precision` benches;
 //! * [`state`] — resumable search state (π, s, φ per layer + RNG +
-//!   telemetry) with JSON checkpoints.
+//!   allocation + telemetry) with JSON checkpoints.
 
+pub mod alloc;
 pub mod hillclimb;
 pub mod objective;
 pub mod scheduler;
 pub mod state;
 pub mod synth;
 
-pub use hillclimb::{probe, run_steps, Draft, DraftRequest, Objective, SearchConfig};
+pub use alloc::{AllocEntry, AllocState, BitSwap};
+pub use hillclimb::{probe, run_steps, Draft, DraftRequest, Move, Objective, SearchConfig};
 pub use objective::XlaObjective;
 pub use scheduler::{run, run_rounds};
 pub use state::{SearchState, StepRecord};
-pub use synth::SynthObjective;
+pub use synth::{MixedSynthObjective, SynthObjective};

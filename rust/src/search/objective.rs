@@ -1,25 +1,36 @@
-//! The real search objective: transform → re-quantize → evaluate on the
+//! The real search objective: apply a move → re-quantize → evaluate on the
 //! AOT XLA programs, speaking the draft / evaluate / commit protocol.
 //!
-//! Per proposal for layer *l*, only three tensors change: `up.w`, `up.b`,
-//! `down.w` (Eqns. 21–22; `down.b` is untouched).  **Drafting** — transform
-//! application plus re-quantization under the base method's semantics — is
-//! pure host-side work on the base FP weights, independent of every other
+//! **Transform moves** (Eqns. 21–22): per proposal for layer *l*, only
+//! three tensors change — `up.w`, `up.b`, `down.w` (`down.b` is untouched).
+//! Drafting — transform application plus re-quantization under the base
+//! method's semantics and the tensor's *allocated* scheme — is pure
+//! host-side work on the base FP weights, independent of every other
 //! layer's accepted state, so a round of K drafts fans out across
-//! [`crate::util::pool::parallel_map`].  **Evaluation** swaps each
-//! candidate's tensors onto the device, scores it through the incremental
-//! evaluator (layers ≥ *l* only), and restores the accepted tensors, so
-//! candidates never observe each other.  **Commit** re-uploads the chosen
-//! candidate and splices its pending activation buffers into the accepted
-//! prefix cache — no re-evaluation.
+//! [`crate::util::pool::parallel_map`].
+//!
+//! **Bit-swap moves** (mixed-precision PR): the donor and receiver tensors
+//! are re-quantized from the base FP weights under their new bit widths
+//! (FFN tensors first re-apply the accepted transform that rides along on
+//! the [`BitSwap`]), swapped onto the device for scoring from the lowest
+//! affected layer, and folded into the accepted allocation on commit.
+//!
+//! **Evaluation** swaps each candidate's tensors onto the device, scores it
+//! through the incremental evaluator (layers ≥ the candidate's entry layer
+//! only), and restores the accepted tensors, so candidates never observe
+//! each other.  **Commit** re-uploads the chosen candidate and splices its
+//! pending activation buffers into the accepted prefix cache — no
+//! re-evaluation.
 //!
 //! RTN proposals can re-quantize on device through the standalone Pallas
-//! fake-quant program (`INVAREXPLORE_DEVICE_QUANT=1`); the clip-search /
-//! GPTQ quantizers always run on host.
+//! fake-quant program (`INVAREXPLORE_DEVICE_QUANT=1`) — *uniform
+//! allocations only*: the device path routes whole layers through one
+//! scheme, so allocation moves always use the host codec.
 
 use std::collections::HashMap;
 
-use super::hillclimb::{Draft, DraftRequest, Objective};
+use super::alloc::BitSwap;
+use super::hillclimb::{Draft, DraftRequest, Move, Objective};
 use crate::baselines::{Prepared, Quantizer};
 use crate::runtime::evaluator::Pending;
 use crate::runtime::{Evaluator, Loss};
@@ -36,9 +47,23 @@ struct LayerTensors {
     down_w: Tensor,
 }
 
-/// Host-side drafting: apply `t` to layer `l` of the base FP weights and
-/// re-quantize under the method's semantics.  `&Prepared` only — safe to
-/// fan out across worker threads.
+/// Bit-swap draft payload: the two re-quantized tensors under their new
+/// schemes, plus the swap itself (commit updates the accepted allocation).
+struct SwapTensors {
+    donor: (String, usize, Tensor),
+    receiver: (String, usize, Tensor),
+}
+
+/// Draft payload — transform or bit swap.
+enum Payload {
+    Ffn(LayerTensors),
+    Swap(SwapTensors),
+}
+
+/// Host-side drafting of a transform move: apply `t` to layer `l` of the
+/// base FP weights and re-quantize under the method's semantics at each
+/// tensor's allocated scheme.  `&Prepared` only — safe to fan out across
+/// worker threads.
 fn draft_tensors(prepared: &Prepared, device_quant: bool, l: usize, t: &LayerTransform) -> LayerTensors {
     let fp = &prepared.fp;
     let (up_w_t, up_b_t, down_w_t) = apply_to_tensors(
@@ -58,11 +83,57 @@ fn draft_tensors(prepared: &Prepared, device_quant: bool, l: usize, t: &LayerTra
     }
 }
 
+/// Re-quantize one swap-eligible tensor from the base FP weights at an
+/// explicit scheme, re-applying the layer's accepted FFN transform when one
+/// is given.  Shared by bit-swap drafting and allocation-checkpoint
+/// restore.
+fn requant_at(
+    prepared: &Prepared,
+    name: &str,
+    layer: usize,
+    transform: Option<&LayerTransform>,
+    scheme: crate::quant::QuantScheme,
+) -> Tensor {
+    let fp = &prepared.fp;
+    let src;
+    let (w, t): (&Tensor, Option<&LayerTransform>) = match transform {
+        Some(t) if name.ends_with("up.w") || name.ends_with("down.w") => {
+            let (up_w_t, _, down_w_t) = apply_to_tensors(
+                t,
+                fp.layer(layer, "up.w"),
+                fp.layer(layer, "up.b"),
+                fp.layer(layer, "down.w"),
+            );
+            src = if name.ends_with("up.w") { up_w_t } else { down_w_t };
+            (&src, Some(t))
+        }
+        _ => (fp.get(name), transform),
+    };
+    prepared.quantize_tensor_with(name, w, scheme, t)
+}
+
+/// Host-side drafting of one side of a bit swap: re-quantize `name` at
+/// `bits_delta` bits relative to its accepted scheme.
+fn draft_swap_tensor(
+    prepared: &Prepared,
+    name: &str,
+    layer: usize,
+    transform: &Option<LayerTransform>,
+    bits_delta: i64,
+) -> Tensor {
+    let old = prepared.alloc.scheme_for(name);
+    let bits = (old.bits as i64 + bits_delta) as usize;
+    let scheme = crate::quant::QuantScheme::new(bits, old.group);
+    requant_at(prepared, name, layer, transform.as_ref(), scheme)
+}
+
 pub struct XlaObjective {
     prepared: Prepared,
     pub eval: Evaluator,
     /// Accepted quantized FFN tensors per layer (revert source).
     accepted: Vec<LayerTensors>,
+    /// Accepted quantized attention tensors (bit-swap revert source).
+    accepted_attn: HashMap<String, Tensor>,
     /// Pending evaluations of the most recent `eval_drafts` batch, keyed by
     /// layer; cleared by any commit (the batch's other losses go stale).
     round: HashMap<usize, Pending>,
@@ -80,13 +151,16 @@ impl XlaObjective {
     /// XLA while-loop (~75× the host codec, see EXPERIMENTS.md §Perf), so
     /// the default is the bit-identical host codec; the Pallas path is
     /// exercised by the cross-check tests and is the intended TPU route.
+    /// Mixed (non-uniform) allocations always use the host codec.
     pub fn new(prepared: Prepared, eval: Evaluator) -> XlaObjective {
         let device_quant = matches!(prepared.quantizer, Quantizer::Plain)
+            && prepared.alloc.is_uniform()
             && std::env::var("INVAREXPLORE_DEVICE_QUANT").as_deref() == Ok("1");
         XlaObjective {
             prepared,
             eval,
             accepted: Vec::new(),
+            accepted_attn: HashMap::new(),
             round: HashMap::new(),
             device_quant,
         }
@@ -96,15 +170,87 @@ impl XlaObjective {
         &self.prepared.fp.config
     }
 
+    /// The accepted per-tensor allocation (bit swaps commit into it).
+    pub fn allocation(&self) -> &crate::quant::BitAllocation {
+        &self.prepared.alloc
+    }
+
     fn quant_scheme(&self) -> Option<crate::quant::QuantScheme> {
         self.device_quant.then_some(self.prepared.scheme)
     }
 
-    fn payload(draft: &Draft) -> &LayerTensors {
+    fn payload(draft: &Draft) -> &Payload {
         draft
             .payload
-            .downcast_ref::<LayerTensors>()
-            .expect("XlaObjective drafts carry LayerTensors payloads")
+            .downcast_ref::<Payload>()
+            .expect("XlaObjective drafts carry Payload")
+    }
+
+    /// Re-materialize a checkpointed per-tensor allocation (the resume
+    /// path): every tensor whose scheme differs from the current accepted
+    /// allocation is re-quantized from the base FP weights — FFN tensors
+    /// under the checkpoint's accepted `transforms` — re-uploaded, and
+    /// folded into the accepted allocation; returns a fresh full
+    /// evaluation.  Must run after `init` (and after the transforms
+    /// themselves have been re-committed).
+    pub fn restore_allocation(
+        &mut self,
+        entries: &[super::alloc::AllocEntry],
+        transforms: &[LayerTransform],
+    ) -> crate::Result<Loss> {
+        anyhow::ensure!(
+            self.accepted.len() == self.n_layers(),
+            "restore_allocation before init"
+        );
+        anyhow::ensure!(
+            !self.device_quant,
+            "allocation restore requires the host quantizer (unset INVAREXPLORE_DEVICE_QUANT)"
+        );
+        self.round.clear();
+        for e in entries {
+            if self.prepared.alloc.scheme_for(&e.name) == e.scheme {
+                continue;
+            }
+            let is_ffn = e.name.ends_with("up.w") || e.name.ends_with("down.w");
+            let t = if is_ffn { transforms.get(e.layer) } else { None };
+            let q = requant_at(&self.prepared, &e.name, e.layer, t, e.scheme);
+            self.eval.engine.update_tensor(&e.name, &q)?;
+            self.prepared.alloc.set_scheme(&e.name, e.scheme);
+            if e.name.ends_with("up.w") {
+                self.accepted[e.layer].up_w = q;
+            } else if e.name.ends_with("down.w") {
+                self.accepted[e.layer].down_w = q;
+            } else {
+                self.accepted_attn.insert(e.name.clone(), q);
+            }
+        }
+        self.eval.full_eval()
+    }
+}
+
+/// Host-side drafting of one move — free function over `&Prepared` only,
+/// so a round of drafts fans out across worker threads (the engine's
+/// device handles never cross a thread boundary).
+fn draft_payload(
+    prepared: &Prepared,
+    device_quant: bool,
+    r: &DraftRequest,
+) -> crate::Result<Payload> {
+    match &r.mv {
+        Move::Transform(t) => Ok(Payload::Ffn(draft_tensors(prepared, device_quant, r.layer, t))),
+        Move::BitSwap(s) => {
+            anyhow::ensure!(
+                !device_quant,
+                "allocation moves require the host quantizer (unset INVAREXPLORE_DEVICE_QUANT)"
+            );
+            let donor = draft_swap_tensor(prepared, &s.donor, s.donor_layer, &s.donor_transform, -1);
+            let receiver =
+                draft_swap_tensor(prepared, &s.receiver, s.receiver_layer, &s.receiver_transform, 1);
+            Ok(Payload::Swap(SwapTensors {
+                donor: (s.donor.clone(), s.donor_layer, donor),
+                receiver: (s.receiver.clone(), s.receiver_layer, receiver),
+            }))
+        }
     }
 }
 
@@ -120,20 +266,24 @@ impl Objective for XlaObjective {
     /// Quantize every linear under the base method (identity transforms),
     /// upload, and run the first full evaluation.
     fn init(&mut self) -> crate::Result<Loss> {
-        let fp = &self.prepared.fp;
         let cfg = self.config().clone();
-        // attention projections: quantized once, never touched by the search
+        // attention projections: quantized once, touched again only by
+        // bit-swap moves
+        self.accepted_attn.clear();
         for l in 0..cfg.n_layers {
             for base in ["q.w", "k.w", "v.w", "o.w"] {
                 let name = format!("l{l}.{base}");
                 if self.device_quant {
-                    let t = fp.get(&name).clone();
+                    let t = self.prepared.fp.get(&name).clone();
                     self.eval
                         .engine
                         .update_tensor_device_quant(&name, &t, self.prepared.scheme)?;
                 } else {
-                    let q = self.prepared.quantize_tensor(&name, fp.get(&name), None);
+                    let q = self
+                        .prepared
+                        .quantize_tensor(&name, self.prepared.fp.get(&name), None);
                     self.eval.engine.update_tensor(&name, &q)?;
+                    self.accepted_attn.insert(name, q);
                 }
             }
         }
@@ -159,15 +309,14 @@ impl Objective for XlaObjective {
         let prepared = &self.prepared;
         let device_quant = self.device_quant;
         let threads = pool::num_threads().min(reqs.len().max(1));
-        Ok(pool::parallel_map(reqs.len(), threads, |i| {
-            let r = &reqs[i];
-            let tensors = draft_tensors(prepared, device_quant, r.layer, &r.transform);
-            Draft {
-                layer: r.layer,
-                transform: r.transform.clone(),
-                payload: Box::new(tensors),
-            }
-        }))
+        let payloads = pool::parallel_map(reqs.len(), threads, |i| {
+            draft_payload(prepared, device_quant, &reqs[i])
+        });
+        let mut out = Vec::with_capacity(reqs.len());
+        for (p, r) in payloads.into_iter().zip(reqs) {
+            out.push(Draft { layer: r.layer, mv: r.mv.clone(), payload: Box::new(p?) });
+        }
+        Ok(out)
     }
 
     fn eval_drafts(&mut self, drafts: &[Draft]) -> crate::Result<Vec<Loss>> {
@@ -179,15 +328,38 @@ impl Objective for XlaObjective {
         let layers: Vec<usize> = drafts.iter().map(|d| d.layer).collect();
         let scheme = self.quant_scheme();
         let accepted = &self.accepted;
+        let accepted_attn = &self.accepted_attn;
         let pendings = self.eval.eval_proposals(
             &layers,
-            |engine, i| {
-                let t = Self::payload(&drafts[i]);
-                engine.upload_ffn(drafts[i].layer, &t.up_w, &t.up_b, &t.down_w, scheme)
+            |engine, i| match Self::payload(&drafts[i]) {
+                Payload::Ffn(t) => {
+                    engine.upload_ffn(drafts[i].layer, &t.up_w, &t.up_b, &t.down_w, scheme)
+                }
+                Payload::Swap(s) => {
+                    engine.update_tensor(&s.donor.0, &s.donor.2)?;
+                    engine.update_tensor(&s.receiver.0, &s.receiver.2)
+                }
             },
-            |engine, i| {
-                let a = &accepted[drafts[i].layer];
-                engine.upload_ffn(drafts[i].layer, &a.up_w, &a.up_b, &a.down_w, scheme)
+            |engine, i| match Self::payload(&drafts[i]) {
+                Payload::Ffn(_) => {
+                    let a = &accepted[drafts[i].layer];
+                    engine.upload_ffn(drafts[i].layer, &a.up_w, &a.up_b, &a.down_w, scheme)
+                }
+                Payload::Swap(s) => {
+                    for (name, layer, _) in [&s.donor, &s.receiver] {
+                        let acc = if name.ends_with("up.w") {
+                            &accepted[*layer].up_w
+                        } else if name.ends_with("down.w") {
+                            &accepted[*layer].down_w
+                        } else {
+                            accepted_attn
+                                .get(name)
+                                .unwrap_or_else(|| panic!("no accepted copy of {name:?}"))
+                        };
+                        engine.update_tensor(name, acc)?;
+                    }
+                    Ok(())
+                }
             },
         )?;
         let mut losses = Vec::with_capacity(pendings.len());
@@ -199,27 +371,54 @@ impl Objective for XlaObjective {
     }
 
     // Commit re-uploads the chosen tensors because eval_drafts always
-    // restores the accepted state (isolation).  That costs one extra FFN
-    // upload per *accepted* proposal vs the old leave-candidate-on-device
-    // flow — small next to the suffix evaluation a proposal already pays,
-    // and it keeps the protocol stateless between eval and commit.
+    // restores the accepted state (isolation).  That costs one extra upload
+    // per *accepted* proposal vs the old leave-candidate-on-device flow —
+    // small next to the suffix evaluation a proposal already pays, and it
+    // keeps the protocol stateless between eval and commit.
     fn commit(&mut self, draft: Draft) -> crate::Result<Loss> {
         let pending = self.round.remove(&draft.layer).ok_or_else(|| {
             anyhow::anyhow!("commit without a pending eval for layer {}", draft.layer)
         })?;
         // any other pendings of the batch are stale once the model changes
         self.round.clear();
-        let tensors = *draft
+        let payload = *draft
             .payload
-            .downcast::<LayerTensors>()
-            .map_err(|_| anyhow::anyhow!("XlaObjective drafts carry LayerTensors payloads"))?;
-        self.eval.engine.upload_ffn(
-            draft.layer,
-            &tensors.up_w,
-            &tensors.up_b,
-            &tensors.down_w,
-            self.quant_scheme(),
-        )?;
+            .downcast::<Payload>()
+            .map_err(|_| anyhow::anyhow!("XlaObjective drafts carry Payload"))?;
+        match payload {
+            Payload::Ffn(tensors) => {
+                self.eval.engine.upload_ffn(
+                    draft.layer,
+                    &tensors.up_w,
+                    &tensors.up_b,
+                    &tensors.down_w,
+                    self.quant_scheme(),
+                )?;
+                self.accepted[draft.layer] = tensors;
+            }
+            Payload::Swap(s) => {
+                anyhow::ensure!(draft.mv.as_swap().is_some(), "swap payload without a swap move");
+                for ((name, _, t), delta) in [(&s.donor, -1i64), (&s.receiver, 1)] {
+                    self.eval.engine.update_tensor(name, t)?;
+                    // fold the new scheme into the accepted allocation
+                    let old = self.prepared.alloc.scheme_for(name);
+                    let bits = (old.bits as i64 + delta) as usize;
+                    self.prepared
+                        .alloc
+                        .set_scheme(name, crate::quant::QuantScheme::new(bits, old.group));
+                }
+                // store the accepted copies
+                for (name, layer, t) in [s.donor, s.receiver] {
+                    if name.ends_with("up.w") {
+                        self.accepted[layer].up_w = t;
+                    } else if name.ends_with("down.w") {
+                        self.accepted[layer].down_w = t;
+                    } else {
+                        self.accepted_attn.insert(name, t);
+                    }
+                }
+            }
+        }
         // a cold-cache pending (round-shared-prefix path) only covers its
         // suffix layers; it cannot splice, so rebuild via a full evaluation
         let loss = if self.eval.can_accept(&pending) {
@@ -229,7 +428,6 @@ impl Objective for XlaObjective {
         } else {
             self.eval.full_eval()?
         };
-        self.accepted[draft.layer] = tensors;
         Ok(loss)
     }
 }

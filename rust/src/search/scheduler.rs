@@ -17,7 +17,10 @@
 //! so a round costs `K` evaluations while drafting cost is divided by the
 //! worker count.
 
-use super::hillclimb::{ensure_init, record_step, Draft, DraftRequest, Objective, SearchConfig};
+use super::hillclimb::{
+    commit_to_state, draw_alloc_move, ensure_init, record_step, Draft, DraftRequest, Objective,
+    SearchConfig,
+};
 use super::state::SearchState;
 
 /// Drive the search for `n_steps` proposals, honoring `cfg.batch`.
@@ -52,10 +55,12 @@ pub fn run_rounds(
     let mut remaining = n_steps;
     while remaining > 0 {
         // a round cannot exceed the layer count: candidates must mutate
-        // distinct layers to be independently scorable
+        // distinct layers to be independently scorable (a bit swap occupies
+        // both of its tensors' layers, so a round may come back smaller
+        // than k_eff — `remaining` is decremented by what was drawn)
         let k_eff = k.min(remaining).min(n_layers);
         let reqs = draw_round(state, cfg, n_layers, k_eff);
-        remaining -= k_eff;
+        remaining -= reqs.len();
 
         let drafts = obj.draft(&reqs)?;
         let mut losses = obj.eval_drafts(&drafts)?;
@@ -70,7 +75,7 @@ pub fn run_rounds(
             order.swap_remove(i);
             losses.swap_remove(i);
             let layer = draft.layer;
-            state.transforms[layer] = draft.transform.clone();
+            commit_to_state(state, &draft);
             let exact = obj.commit(draft)?;
             state.best = exact;
             state.accepts += 1;
@@ -94,23 +99,44 @@ pub fn run_rounds(
     Ok(())
 }
 
-/// Sample `k` proposals on distinct layers.  Layers are drawn by rejection
-/// so a single-candidate round consumes exactly one `below()` call — the
-/// sequential driver's stream.
+/// Sample up to `k` proposals on distinct layers.  Layers are drawn by
+/// rejection so a single-candidate round consumes exactly one `below()`
+/// call — the sequential driver's stream.  With allocation search active,
+/// at most one candidate per round is a bit swap (it occupies *both* of its
+/// tensors' layers, keeping every candidate's resource set disjoint so the
+/// round's drafts stay independently scorable and survivors stay valid
+/// after any commit).
 fn draw_round(
     state: &mut SearchState,
     cfg: &SearchConfig,
     n_layers: usize,
     k: usize,
 ) -> Vec<DraftRequest> {
-    let mut taken = vec![false; n_layers];
+    let mut free = vec![true; n_layers];
     let mut reqs = Vec::with_capacity(k);
+    let mut alloc_drawn = false;
     while reqs.len() < k {
+        if !alloc_drawn && draw_alloc_move(state, cfg) {
+            alloc_drawn = true; // at most one allocation move per round
+            let SearchState { alloc, rng, transforms, .. } = state;
+            if let Some(swap) =
+                alloc.as_ref().unwrap().propose(rng, transforms, Some(&free), 32)
+            {
+                free[swap.donor_layer] = false;
+                free[swap.receiver_layer] = false;
+                reqs.push(DraftRequest::swap(swap));
+                continue;
+            }
+            // no valid swap on the free layers — fall through to a transform
+        }
+        if free.iter().all(|&f| !f) {
+            break; // layer capacity exhausted mid-round (a swap took two)
+        }
         let l = state.rng.below(n_layers);
-        if taken[l] {
+        if !free[l] {
             continue;
         }
-        taken[l] = true;
+        free[l] = false;
         let transform = state.transforms[l].propose(
             &mut state.rng,
             cfg.kinds,
@@ -118,7 +144,7 @@ fn draw_round(
             cfg.sigma_s,
             cfg.sigma_r,
         );
-        reqs.push(DraftRequest { layer: l, transform });
+        reqs.push(DraftRequest::transform(l, transform));
     }
     reqs
 }
@@ -263,6 +289,66 @@ mod tests {
             proposals += b.len();
         }
         assert!(proposals >= 31, "drafted fewer proposals than steps");
+    }
+
+    /// Mixed transform + bit-swap rounds: loss stays monotone, every
+    /// accepted state is exact, swaps are actually accepted, and the
+    /// allocation never exceeds its budget.
+    #[test]
+    fn mixed_precision_rounds_stay_monotone_and_under_budget() {
+        use crate::quant::QuantScheme;
+        use crate::search::synth::MixedSynthObjective;
+
+        let scheme = QuantScheme::new(2, 64);
+        let mut obj = MixedSynthObjective::new(6, 8, scheme);
+        let alloc = obj.alloc_state();
+        let budget = alloc.budget;
+        let mut state = SearchState::new(6, 8, 13).with_alloc(alloc);
+        let cfg = SearchConfig { p_alloc: 0.5, ..cfg() };
+        run_rounds(&mut obj, &mut state, &cfg, 240, 4).unwrap();
+
+        assert_eq!(state.telemetry.len(), 240);
+        let losses: Vec<f64> = state.telemetry.iter().map(|r| r.loss_total).collect();
+        for w in losses.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "loss increased: {} -> {}", w[0], w[1]);
+        }
+        assert!(state.accepts > 10);
+        assert!(state.alloc_accepts >= 1, "no bit swap was ever accepted");
+        assert!(state.alloc_accepts <= state.accepts);
+        let alloc = state.alloc.as_ref().unwrap();
+        assert!(
+            alloc.bits_per_param() <= budget + 1e-9,
+            "allocation exceeded budget: {} > {budget}",
+            alloc.bits_per_param()
+        );
+        // heterogeneity actually emerged and pays off vs the uniform start
+        assert!(alloc.entries.iter().any(|e| e.scheme.bits != scheme.bits));
+        assert!(obj.alloc_term() < obj.uniform_alloc_term());
+        // accepted loss is exact
+        assert!((state.best.ce - obj.current_total()).abs() < 1e-9);
+    }
+
+    /// Sequential driver handles the same mixed-move stream (batch = 1).
+    #[test]
+    fn mixed_precision_sequential_driver() {
+        use crate::quant::QuantScheme;
+        use crate::search::synth::MixedSynthObjective;
+
+        let mut obj = MixedSynthObjective::new(4, 8, QuantScheme::new(2, 64));
+        let alloc = obj.alloc_state();
+        let mut state = SearchState::new(4, 8, 21).with_alloc(alloc);
+        let cfg = SearchConfig { p_alloc: 0.5, ..cfg() };
+        run_steps(&mut obj, &mut state, &cfg, 200).unwrap();
+        assert!(state.alloc_accepts >= 1);
+        assert!((state.best.ce - obj.current_total()).abs() < 1e-9);
+        let run_seeded = |seed| {
+            let mut obj = MixedSynthObjective::new(4, 8, QuantScheme::new(2, 64));
+            let alloc = obj.alloc_state();
+            let mut state = SearchState::new(4, 8, seed).with_alloc(alloc);
+            run_steps(&mut obj, &mut state, &cfg, 100).unwrap();
+            (state.best.ce, state.accepts, state.alloc_accepts)
+        };
+        assert_eq!(run_seeded(3), run_seeded(3), "mixed search must be deterministic");
     }
 
     #[test]

@@ -2,6 +2,7 @@
 
 use std::path::Path;
 
+use super::alloc::AllocState;
 use crate::runtime::Loss;
 use crate::transform::LayerTransform;
 use crate::util::json::Json;
@@ -34,6 +35,11 @@ pub struct SearchState {
     pub initialized: bool,
     pub step: usize,
     pub accepts: usize,
+    /// Accepted bit-swap moves (subset of `accepts`).
+    pub alloc_accepts: usize,
+    /// Mixed-precision allocation search state; `None` = transform-only
+    /// search (the historical behavior).
+    pub alloc: Option<AllocState>,
     pub telemetry: Vec<StepRecord>,
     pub started: std::time::Instant,
 }
@@ -48,9 +54,18 @@ impl SearchState {
             initialized: false,
             step: 0,
             accepts: 0,
+            alloc_accepts: 0,
+            alloc: None,
             telemetry: Vec::new(),
             started: std::time::Instant::now(),
         }
+    }
+
+    /// Enable mixed-precision allocation search (bit-swap proposals draw
+    /// their donors/receivers from — and commit into — this state).
+    pub fn with_alloc(mut self, alloc: AllocState) -> SearchState {
+        self.alloc = Some(alloc);
+        self
     }
 
     pub fn accept_rate(&self) -> f64 {
@@ -64,9 +79,10 @@ impl SearchState {
     /// Serialize transforms + scalars (telemetry is exported separately as
     /// CSV; the RNG restarts from a derived seed on resume).
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut j = Json::obj()
             .set("step", self.step)
             .set("accepts", self.accepts)
+            .set("alloc_accepts", self.alloc_accepts)
             .set("alpha", self.alpha)
             .set("initialized", self.initialized)
             .set("best_ce", self.best.ce)
@@ -74,7 +90,11 @@ impl SearchState {
             .set(
                 "transforms",
                 Json::Arr(self.transforms.iter().map(|t| t.to_json()).collect()),
-            )
+            );
+        if let Some(alloc) = &self.alloc {
+            j = j.set("alloc", alloc.to_json());
+        }
+        j
     }
 
     pub fn save(&self, path: &Path) -> crate::Result<()> {
@@ -111,6 +131,10 @@ impl SearchState {
             .get("initialized")
             .and_then(Json::as_bool)
             .unwrap_or(st.best.ce.is_finite());
+        // optional fields added by the mixed-precision PR; absent in older
+        // checkpoints (transform-only searches)
+        st.alloc_accepts = j.get("alloc_accepts").and_then(Json::as_usize).unwrap_or(0);
+        st.alloc = j.get("alloc").map(AllocState::from_json).transpose()?;
         Ok(st)
     }
 
@@ -178,6 +202,27 @@ mod tests {
         st.save(&p).unwrap();
         let back = SearchState::load(&p, 0).unwrap();
         assert!(back.initialized, "flag lost on a non-finite-CE checkpoint");
+    }
+
+    #[test]
+    fn alloc_state_roundtrips_and_is_optional() {
+        use crate::quant::{BitAllocation, QuantScheme};
+
+        // without alloc: key absent, loads back as None
+        let st = SearchState::new(1, 4, 0);
+        assert!(st.to_json().get("alloc").is_none());
+
+        let cfg = crate::model::OptConfig::test_config();
+        let alloc = AllocState::new(&cfg, &BitAllocation::uniform(QuantScheme::new(2, 32)));
+        let mut st = SearchState::new(cfg.n_layers, cfg.d_ffn, 0).with_alloc(alloc);
+        st.alloc_accepts = 3;
+        let dir = std::env::temp_dir().join("invarexplore_state_test4");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("alloc.json");
+        st.save(&p).unwrap();
+        let back = SearchState::load(&p, 0).unwrap();
+        assert_eq!(back.alloc_accepts, 3);
+        assert_eq!(back.alloc, st.alloc);
     }
 
     #[test]

@@ -1,16 +1,26 @@
-//! Synthetic, XLA-free [`Objective`] for driver tests and throughput
-//! benches.
+//! Synthetic, XLA-free objectives for driver tests and throughput benches.
 //!
-//! Loss = Σ per-layer potentials; a layer's potential improves when its
-//! scale vector approaches a hidden optimum.  Deterministic, no PJRT.  The
-//! `draft_work` knob adds a configurable amount of real host-side
-//! re-quantization work per draft (the codec the XLA objective runs per
-//! proposal), so `benches/perf_hotpath.rs` can measure how K-wide rounds
-//! hide per-candidate drafting latency.
+//! [`SynthObjective`] — transform moves only: loss = Σ per-layer
+//! potentials; a layer's potential improves when its scale vector
+//! approaches a hidden optimum.  Deterministic, no PJRT.  The `draft_work`
+//! knob adds a configurable amount of real host-side re-quantization work
+//! per draft (the codec the XLA objective runs per proposal), so
+//! `benches/perf_hotpath.rs` can measure how K-wide rounds hide
+//! per-candidate drafting latency.
+//!
+//! [`MixedSynthObjective`] — the mixed-precision landscape: the same
+//! transform potentials plus a per-tensor quantization-error term
+//! `Σ_t sens_t · numel_t · 4^{-bits_t} / Σ_t numel_t` (b-bit groupwise MSE
+//! scales as 2^{-2b}), over one `up.w`/`down.w` pair per layer with
+//! deliberately heterogeneous sensitivities.  Budget-preserving bit swaps
+//! that move bits toward sensitive tensors strictly lower the loss, so a
+//! searched allocation beats the uniform one at the same bits/param —
+//! the `benches/mixed_precision.rs` acceptance pin.
 
 use std::collections::HashMap;
 
-use super::hillclimb::{Draft, DraftRequest, Objective};
+use super::alloc::{AllocEntry, AllocState, BitSwap};
+use super::hillclimb::{Draft, DraftRequest, Move, Objective};
 use crate::quant::{self, QuantScheme};
 use crate::runtime::Loss;
 use crate::tensor::Tensor;
@@ -79,12 +89,13 @@ impl SynthObjective {
     /// The configurable host-side drafting cost: a groupwise fake-quant
     /// pass over a tensor seeded from the proposal's scale vector.
     fn burn(&self, req: &DraftRequest) {
+        let Some(t) = req.mv.as_transform() else { return };
         if self.draft_work == 0 {
             return;
         }
         let cols = 64;
         let rows = self.draft_work.div_ceil(cols).max(1);
-        let scale = &req.transform.scale;
+        let scale = &t.scale;
         let data: Vec<f32> = (0..rows * cols)
             .map(|i| scale[i % scale.len()] * ((i % 17) as f32 - 8.0))
             .collect();
@@ -112,7 +123,7 @@ impl Objective for SynthObjective {
             self.burn(&reqs[i]);
             Draft {
                 layer: reqs[i].layer,
-                transform: reqs[i].transform.clone(),
+                mv: reqs[i].mv.clone(),
                 payload: Box::new(()),
             }
         }))
@@ -123,7 +134,10 @@ impl Objective for SynthObjective {
         let mut out = Vec::with_capacity(drafts.len());
         for d in drafts {
             anyhow::ensure!(d.layer < self.n_layers, "draft layer out of range");
-            let loss = self.total_with(d.layer, &d.transform.scale);
+            let t = d.mv.as_transform().ok_or_else(|| {
+                anyhow::anyhow!("SynthObjective does not support allocation moves")
+            })?;
+            let loss = self.total_with(d.layer, &t.scale);
             anyhow::ensure!(
                 self.pending.insert(d.layer, loss).is_none(),
                 "duplicate draft for layer {}",
@@ -140,8 +154,208 @@ impl Objective for SynthObjective {
             .get(&draft.layer)
             .copied()
             .ok_or_else(|| anyhow::anyhow!("commit without a pending eval for layer {}", draft.layer))?;
-        self.current[draft.layer] = draft.transform.scale;
+        let t = draft
+            .mv
+            .as_transform()
+            .ok_or_else(|| anyhow::anyhow!("SynthObjective does not support allocation moves"))?;
+        self.current[draft.layer] = t.scale.clone();
         // committing invalidates every other pending of the batch
+        self.pending.clear();
+        Ok(loss)
+    }
+}
+
+/// Synthetic mixed-precision objective (see module docs).
+///
+/// `ce = transform potential + alloc error`; both terms are deterministic,
+/// so search runs are reproducible given a seed.  One `up.w`/`down.w`
+/// tensor pair per layer, all of equal `numel`, so every bit swap is
+/// *exactly* budget-preserving.
+pub struct MixedSynthObjective {
+    base: SynthObjective,
+    /// Tensor name -> (sensitivity, numel).
+    tensors: Vec<(String, f64, usize)>,
+    /// Accepted bits per tensor.
+    bits: HashMap<String, usize>,
+    group: usize,
+    /// Bits every tensor starts at (the uniform reference allocation).
+    uniform_bits: usize,
+    /// Pendings of the last eval batch: layer -> (loss, swap to apply).
+    pending: HashMap<usize, (Loss, Option<(String, String)>)>,
+}
+
+/// Tensor universe of the synthetic mixed-precision landscape — shared by
+/// the objective and [`MixedSynthObjective::alloc_state`] so the driver's
+/// proposals always name tensors the objective tracks.
+fn synth_tensors(n_layers: usize) -> Vec<(String, f64, usize)> {
+    let mut rng = Pcg64::new(4242);
+    let mut out = Vec::new();
+    for l in 0..n_layers {
+        for base in ["up.w", "down.w"] {
+            // sensitivities spread over ~4 orders of magnitude: plenty of
+            // strictly-improving swaps exist from any uniform start
+            let sens = 10f64.powf(rng.uniform() * 4.0 - 2.0);
+            out.push((format!("l{l}.{base}"), sens, 4096));
+        }
+    }
+    out
+}
+
+impl MixedSynthObjective {
+    pub fn new(n_layers: usize, d: usize, scheme: QuantScheme) -> MixedSynthObjective {
+        let tensors = synth_tensors(n_layers);
+        let bits = tensors.iter().map(|(n, _, _)| (n.clone(), scheme.bits)).collect();
+        MixedSynthObjective {
+            base: SynthObjective::new(n_layers, d),
+            tensors,
+            bits,
+            group: scheme.group,
+            uniform_bits: scheme.bits,
+            pending: HashMap::new(),
+        }
+    }
+
+    /// The matching driver-side allocation state (same tensor universe,
+    /// budget = the uniform allocation's bits/param).
+    pub fn alloc_state(&self) -> AllocState {
+        let entries = self
+            .tensors
+            .iter()
+            .map(|(name, _, numel)| AllocEntry {
+                name: name.clone(),
+                layer: crate::model::config::split_layer_prefix(name)
+                    .0
+                    .expect("synth tensors carry a layer prefix"),
+                numel: *numel,
+                scheme: QuantScheme::new(self.uniform_bits, self.group),
+            })
+            .collect();
+        AllocState::from_entries(entries, None)
+    }
+
+    /// Allocation error term for a hypothetical bits map: the size-weighted
+    /// sensitivity-scaled 4^{-bits} error.
+    fn alloc_term_with(&self, swap: Option<(&str, &str)>) -> f64 {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (name, sens, numel) in &self.tensors {
+            let mut b = self.bits[name];
+            if let Some((donor, receiver)) = swap {
+                if name == donor {
+                    b -= 1;
+                }
+                if name == receiver {
+                    b += 1;
+                }
+            }
+            num += sens * *numel as f64 * 4f64.powi(-(b as i32));
+            den += *numel as f64;
+        }
+        num / den
+    }
+
+    /// Accepted allocation error (test/bench hook).
+    pub fn alloc_term(&self) -> f64 {
+        self.alloc_term_with(None)
+    }
+
+    /// Allocation error of the uniform reference at the same budget.
+    pub fn uniform_alloc_term(&self) -> f64 {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (_, sens, numel) in &self.tensors {
+            num += sens * *numel as f64 * 4f64.powi(-(self.uniform_bits as i32));
+            den += *numel as f64;
+        }
+        num / den
+    }
+
+    /// Accepted total loss (test/bench hook).
+    pub fn current_total(&self) -> f64 {
+        self.base.current_total() + self.alloc_term()
+    }
+
+    fn swap_of(&self, s: &BitSwap) -> crate::Result<(String, String)> {
+        anyhow::ensure!(
+            self.bits.contains_key(&s.donor) && self.bits.contains_key(&s.receiver),
+            "bit swap names an untracked tensor ({} -> {})",
+            s.donor,
+            s.receiver
+        );
+        anyhow::ensure!(self.bits[&s.donor] > 1, "donor {} already at 1 bit", s.donor);
+        anyhow::ensure!(self.bits[&s.receiver] < 8, "receiver {} already at 8 bits", s.receiver);
+        Ok((s.donor.clone(), s.receiver.clone()))
+    }
+}
+
+impl Objective for MixedSynthObjective {
+    fn n_layers(&self) -> usize {
+        self.base.n_layers
+    }
+
+    fn d_ffn(&self) -> usize {
+        self.base.d
+    }
+
+    fn init(&mut self) -> crate::Result<Loss> {
+        let base = self.base.init()?;
+        Ok(Loss { ce: base.ce + self.alloc_term(), act_mse: base.act_mse })
+    }
+
+    fn draft(&self, reqs: &[DraftRequest]) -> crate::Result<Vec<Draft>> {
+        Ok(reqs
+            .iter()
+            .map(|r| Draft {
+                layer: r.layer,
+                mv: r.mv.clone(),
+                payload: Box::new(()),
+            })
+            .collect())
+    }
+
+    fn eval_drafts(&mut self, drafts: &[Draft]) -> crate::Result<Vec<Loss>> {
+        self.pending.clear();
+        let mut out = Vec::with_capacity(drafts.len());
+        for d in drafts {
+            anyhow::ensure!(d.layer < self.base.n_layers, "draft layer out of range");
+            let (loss, swap) = match &d.mv {
+                Move::Transform(t) => {
+                    let base = self.base.total_with(d.layer, &t.scale);
+                    (Loss { ce: base.ce + self.alloc_term(), act_mse: base.act_mse }, None)
+                }
+                Move::BitSwap(s) => {
+                    let (donor, receiver) = self.swap_of(s)?;
+                    let ce = self.base.total_with(0, &self.base.current[0].clone()).ce
+                        + self.alloc_term_with(Some((donor.as_str(), receiver.as_str())));
+                    (Loss { ce, act_mse: 0.0 }, Some((donor, receiver)))
+                }
+            };
+            anyhow::ensure!(
+                self.pending.insert(d.layer, (loss, swap)).is_none(),
+                "duplicate draft for layer {}",
+                d.layer
+            );
+            out.push(loss);
+        }
+        Ok(out)
+    }
+
+    fn commit(&mut self, draft: Draft) -> crate::Result<Loss> {
+        let (loss, swap) = self
+            .pending
+            .get(&draft.layer)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("commit without a pending eval for layer {}", draft.layer))?;
+        match (&draft.mv, swap) {
+            (Move::Transform(t), None) => {
+                self.base.current[draft.layer] = t.scale.clone();
+            }
+            (Move::BitSwap(_), Some((donor, receiver))) => {
+                *self.bits.get_mut(&donor).unwrap() -= 1;
+                *self.bits.get_mut(&receiver).unwrap() += 1;
+            }
+            _ => anyhow::bail!("pending/move mismatch at commit"),
+        }
         self.pending.clear();
         Ok(loss)
     }
@@ -167,7 +381,7 @@ mod tests {
     fn commit_requires_prior_eval() {
         let mut obj = SynthObjective::new(2, 8);
         obj.init().unwrap();
-        let req = DraftRequest { layer: 0, transform: proposal(8, 1) };
+        let req = DraftRequest::transform(0, proposal(8, 1));
         let one_draft = |obj: &SynthObjective| {
             obj.draft(std::slice::from_ref(&req)).unwrap().pop().unwrap()
         };
@@ -184,9 +398,8 @@ mod tests {
     fn eval_scores_candidates_independently() {
         let mut obj = SynthObjective::new(3, 8);
         obj.init().unwrap();
-        let reqs: Vec<DraftRequest> = (0..3)
-            .map(|l| DraftRequest { layer: l, transform: proposal(8, 10 + l as u64) })
-            .collect();
+        let reqs: Vec<DraftRequest> =
+            (0..3).map(|l| DraftRequest::transform(l, proposal(8, 10 + l as u64))).collect();
         let drafts = obj.draft(&reqs).unwrap();
         let batch = obj.eval_drafts(&drafts).unwrap();
         // one-at-a-time scoring must agree: candidates never see each other
@@ -200,10 +413,96 @@ mod tests {
     fn draft_work_burns_deterministically() {
         let obj = SynthObjective::with_draft_work(2, 8, 4096);
         let reqs: Vec<DraftRequest> =
-            (0..2).map(|l| DraftRequest { layer: l, transform: proposal(8, l as u64) }).collect();
+            (0..2).map(|l| DraftRequest::transform(l, proposal(8, l as u64))).collect();
         let a = obj.draft(&reqs).unwrap();
         assert_eq!(a.len(), 2);
         assert_eq!(a[0].layer, 0);
         assert_eq!(a[1].layer, 1);
+    }
+
+    #[test]
+    fn synth_objective_rejects_allocation_moves() {
+        let mut obj = SynthObjective::new(2, 8);
+        obj.init().unwrap();
+        let swap = BitSwap {
+            donor: "l0.up.w".into(),
+            donor_layer: 0,
+            receiver: "l1.down.w".into(),
+            receiver_layer: 1,
+            donor_transform: None,
+            receiver_transform: None,
+        };
+        let drafts = obj.draft(&[DraftRequest::swap(swap)]).unwrap();
+        assert!(obj.eval_drafts(&drafts).is_err());
+    }
+
+    // ---- MixedSynthObjective ----------------------------------------------
+
+    fn some_swap(obj: &MixedSynthObjective) -> BitSwap {
+        // pick the least-sensitive tensor as donor, most-sensitive as
+        // receiver — by construction a strictly improving move
+        let mut ts = obj.tensors.clone();
+        ts.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let donor = ts.first().unwrap().0.clone();
+        let receiver = ts.last().unwrap().0.clone();
+        let layer_of = |n: &str| n[1..n.find('.').unwrap()].parse().unwrap();
+        BitSwap {
+            donor_layer: layer_of(&donor),
+            receiver_layer: layer_of(&receiver),
+            donor,
+            receiver,
+            donor_transform: None,
+            receiver_transform: None,
+        }
+    }
+
+    #[test]
+    fn sensitivity_ordered_swap_strictly_improves() {
+        let mut obj = MixedSynthObjective::new(4, 8, QuantScheme::new(2, 64));
+        let init = obj.init().unwrap();
+        let swap = some_swap(&obj);
+        let drafts = obj.draft(&[DraftRequest::swap(swap)]).unwrap();
+        let loss = obj.eval_drafts(&drafts).unwrap()[0];
+        assert!(
+            loss.ce < init.ce,
+            "low->high sensitivity swap must improve: {} vs {}",
+            loss.ce,
+            init.ce
+        );
+    }
+
+    #[test]
+    fn committed_swap_updates_alloc_term() {
+        let mut obj = MixedSynthObjective::new(4, 8, QuantScheme::new(2, 64));
+        obj.init().unwrap();
+        let uniform = obj.alloc_term();
+        assert_eq!(obj.alloc_term(), obj.uniform_alloc_term());
+        let swap = some_swap(&obj);
+        let donor = swap.donor.clone();
+        let mut drafts = obj.draft(&[DraftRequest::swap(swap)]).unwrap();
+        let loss = obj.eval_drafts(&drafts).unwrap()[0];
+        let committed = obj.commit(drafts.swap_remove(0)).unwrap();
+        assert_eq!(loss, committed);
+        assert!(obj.alloc_term() < uniform);
+        assert_eq!(obj.bits[&donor], 1);
+    }
+
+    #[test]
+    fn transform_and_swap_moves_compose() {
+        let mut obj = MixedSynthObjective::new(3, 8, QuantScheme::new(2, 64));
+        obj.init().unwrap();
+        // transform eval carries the CURRENT alloc term unchanged
+        let t = proposal(8, 3);
+        let drafts = obj.draft(&[DraftRequest::transform(1, t.clone())]).unwrap();
+        let loss = obj.eval_drafts(&drafts).unwrap()[0];
+        let expect = obj.base.total_with(1, &t.scale).ce + obj.alloc_term();
+        assert!((loss.ce - expect).abs() < 1e-12, "transform eval must add the accepted alloc term");
+        // alloc_state matches the tracked tensor universe
+        let st = obj.alloc_state();
+        assert_eq!(st.entries.len(), obj.tensors.len());
+        for e in &st.entries {
+            assert!(obj.bits.contains_key(&e.name), "{}", e.name);
+        }
+        assert!((st.bits_per_param() - QuantScheme::new(2, 64).bits_per_param()).abs() < 1e-12);
     }
 }

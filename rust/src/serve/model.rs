@@ -13,11 +13,16 @@ use std::collections::HashMap;
 
 use crate::model::native::DecoderParams;
 use crate::model::{OptConfig, Weights};
-use crate::quant::PackedTensor;
+use crate::quant::{self, BitAllocation, PackedTensor, QuantScheme};
 use crate::tensor::{ops, Tensor};
 
 /// A model held in deployment form: FP non-linear parameters plus one
 /// [`PackedTensor`] per quantized linear.
+///
+/// Every packed tensor carries its own [`QuantScheme`], so heterogeneous
+/// (mixed-precision) allocations serve through the exact same hot path as
+/// uniform ones — the fused kernels read each tensor's bits/group from its
+/// own header, never from a global.
 pub struct PackedModel {
     fp: Weights,
     packed: HashMap<String, PackedTensor>,
@@ -38,6 +43,22 @@ impl PackedModel {
         PackedModel { fp, packed: map }
     }
 
+    /// Pack `fp`'s quantizable linears under a (possibly heterogeneous)
+    /// [`BitAllocation`], keeping everything else dense — the one-call
+    /// route from weights + allocation string to a servable model.
+    pub fn from_allocation(fp: Weights, alloc: &BitAllocation) -> crate::Result<PackedModel> {
+        alloc.validate(&fp.config)?;
+        let packed = fp
+            .quant_names()
+            .iter()
+            .map(|n| {
+                let q = quant::quantize(fp.get(n), alloc.scheme_for(n));
+                (n.clone(), PackedTensor::pack(&q))
+            })
+            .collect();
+        Ok(PackedModel::new(fp, packed))
+    }
+
     pub fn config(&self) -> &OptConfig {
         &self.fp.config
     }
@@ -45,6 +66,22 @@ impl PackedModel {
     /// Number of linears held in packed form.
     pub fn n_packed(&self) -> usize {
         self.packed.len()
+    }
+
+    /// Scheme of one packed linear (`None` when it serves dense).
+    pub fn scheme_of(&self, name: &str) -> Option<QuantScheme> {
+        self.packed.get(name).map(|p| p.scheme)
+    }
+
+    /// `"min..max bits"` summary of the packed schemes — log-line fodder
+    /// for heterogeneous models.
+    pub fn bits_summary(&self) -> String {
+        let bits: Vec<usize> = self.packed.values().map(|p| p.scheme.bits).collect();
+        match (bits.iter().min(), bits.iter().max()) {
+            (Some(lo), Some(hi)) if lo == hi => format!("{lo}-bit uniform"),
+            (Some(lo), Some(hi)) => format!("{lo}..{hi}-bit mixed"),
+            _ => "dense".into(),
+        }
     }
 
     /// Total bytes of the packed linears (codes + f16 scales + zeros).
@@ -210,6 +247,69 @@ mod tests {
             done.into_iter().map(|c| c.generated).collect::<Vec<_>>()
         };
         assert_eq!(run(true), run(false));
+    }
+
+    /// Heterogeneous packed pair: every tensor class at a different scheme.
+    fn mixed_pair() -> (PackedModel, Weights) {
+        let w = Weights::random(OptConfig::test_config(), 17);
+        let alloc =
+            BitAllocation::parse("2x32,ffn_up=4x32,ffn_down=1x32,l0.q.w=3x16").unwrap();
+        let pm = PackedModel::from_allocation(w, &alloc).unwrap();
+        let dense = pm.unpacked_weights();
+        (pm, dense)
+    }
+
+    #[test]
+    fn mixed_precision_packed_forward_bit_identical_to_unpacked_dense() {
+        // the mixed-precision acceptance pin: serving from heterogeneous
+        // packed weights == serving from their dense unpack, bit for bit,
+        // through prefill AND decode
+        let (pm, dense) = mixed_pair();
+        assert_eq!(pm.scheme_of("l0.up.w"), Some(QuantScheme::new(4, 32)));
+        assert_eq!(pm.scheme_of("l1.down.w"), Some(QuantScheme::new(1, 32)));
+        assert_eq!(pm.scheme_of("l0.q.w"), Some(QuantScheme::new(3, 16)));
+        assert_eq!(pm.scheme_of("l1.q.w"), Some(QuantScheme::new(2, 32)));
+        assert_eq!(pm.bits_summary(), "1..4-bit mixed");
+        let mut rng = Pcg64::new(5);
+        let toks: Vec<i32> = (0..10).map(|_| rng.below(pm.config().vocab) as i32).collect();
+        let mut c1 = KvCache::new(pm.config());
+        let mut c2 = KvCache::new(&dense.config);
+        let l1 = native::prefill(&pm, &mut c1, &toks);
+        let l2 = native::prefill(&dense, &mut c2, &toks);
+        assert_eq!(l1, l2, "mixed prefill logits must be bit-identical");
+        for t in [2i32, 9, 31] {
+            let d1 = native::decode_step(&pm, &mut c1, t);
+            let d2 = native::decode_step(&dense, &mut c2, t);
+            assert_eq!(d1, d2, "mixed decode logits must be bit-identical (token {t})");
+        }
+    }
+
+    #[test]
+    fn mixed_and_uniform_servers_both_run_end_to_end() {
+        let (pm, _) = mixed_pair();
+        let vocab = pm.config().vocab;
+        let mut server =
+            Server::new(&pm, ServeOpts { max_batch: 2, seed: 4, ..Default::default() });
+        let mut rng = Pcg64::new(6);
+        for i in 0..3 {
+            server.submit(Request::new(
+                i,
+                (0..5).map(|_| rng.below(vocab) as i32).collect(),
+                4,
+                Sampler::TopK { k: 4, temperature: 0.9 },
+            ));
+        }
+        let (done, stats) = server.run();
+        assert_eq!(done.len(), 3);
+        assert!(done.iter().all(|c| c.generated.len() == 4));
+        assert_eq!(stats.generated_tokens, 12);
+    }
+
+    #[test]
+    fn from_allocation_rejects_bad_groups() {
+        let w = Weights::random(OptConfig::test_config(), 3);
+        let alloc = BitAllocation::parse("2x64").unwrap(); // 64 ∤ 32-col attn
+        assert!(PackedModel::from_allocation(w, &alloc).is_err());
     }
 
     #[test]

@@ -4,7 +4,10 @@
 //! measurement (perf_hotpath) and for driving the paper's table/figure
 //! reproductions, whose primary output is the table itself.
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use super::json::Json;
 
 /// Timing statistics over repeated runs.
 #[derive(Debug, Clone)]
@@ -23,6 +26,12 @@ impl Stats {
         } else {
             f64::INFINITY
         }
+    }
+
+    /// A single externally-measured timing (e.g. one wall-clock run of a
+    /// whole serving workload) as a recordable row.
+    pub fn one_shot(d: Duration) -> Stats {
+        Stats { iters: 1, mean: d, min: d, max: d, p50: d }
     }
 }
 
@@ -94,6 +103,61 @@ impl BenchSuite {
         }
         out
     }
+
+    /// Measured rows so far (label, stats).
+    pub fn rows(&self) -> &[(String, Stats)] {
+        &self.rows
+    }
+
+    /// Record an externally-measured result (e.g. [`Stats::one_shot`]) as a
+    /// row, so one-shot workload timings land in the JSON trajectory next
+    /// to the loop-measured rows.
+    pub fn record(&mut self, label: &str, stats: Stats) {
+        println!(
+            "  {label:<42} {:>12?} mean  ({} iters, recorded)",
+            stats.mean, stats.iters
+        );
+        self.rows.push((label.to_string(), stats));
+    }
+
+    /// Serialize the suite as JSON — the machine-readable perf trajectory
+    /// CI archives per run (`BENCH_<suite>.json` artifacts), replacing the
+    /// log-scrape-only text report.
+    pub fn to_json(&self) -> Json {
+        Json::obj().set("suite", self.name.as_str()).set(
+            "rows",
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|(label, s)| {
+                        Json::obj()
+                            .set("label", label.as_str())
+                            .set("mean_s", s.mean.as_secs_f64())
+                            .set("p50_s", s.p50.as_secs_f64())
+                            .set("min_s", s.min.as_secs_f64())
+                            .set("max_s", s.max.as_secs_f64())
+                            .set("iters", s.iters)
+                    })
+                    .collect(),
+            ),
+        )
+    }
+
+    /// Write `BENCH_<suite>.json` into `dir`, returning the path.
+    pub fn write_json(&self, dir: &Path) -> crate::Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_json().to_string())?;
+        Ok(path)
+    }
+}
+
+/// Per-case measurement budget for CI smoke runs: honor an explicit
+/// `INVAREXPLORE_BENCH_MS`, else drop to `ms` so a smoke still measures
+/// real (non-empty) rows without holding the pipeline for seconds per case.
+pub fn smoke_budget_ms(ms: u64) {
+    if std::env::var("INVAREXPLORE_BENCH_MS").is_err() {
+        std::env::set_var("INVAREXPLORE_BENCH_MS", ms.to_string());
+    }
 }
 
 /// Helper: should the bench run at paper scale? (`INVAREXPLORE_FULL=1`)
@@ -140,5 +204,24 @@ mod tests {
         std::env::remove_var("INVAREXPLORE_STEPS");
         std::env::remove_var("INVAREXPLORE_FULL");
         assert_eq!(step_budget(123), 123);
+    }
+
+    #[test]
+    fn json_trajectory_written_and_parseable() {
+        let mut suite = BenchSuite::new("unit_test_suite");
+        suite.bench("tiny_op", || {
+            std::hint::black_box(3 * 3);
+        });
+        let dir = std::env::temp_dir().join("invarexplore_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = suite.write_json(&dir).unwrap();
+        assert!(path.ends_with("BENCH_unit_test_suite.json"));
+        let j = crate::util::json::parse_file(&path).unwrap();
+        assert_eq!(j.req("suite").unwrap().as_str(), Some("unit_test_suite"));
+        let rows = j.req("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1, "smoke trajectories must not be empty");
+        assert_eq!(rows[0].req("label").unwrap().as_str(), Some("tiny_op"));
+        assert!(rows[0].req("iters").unwrap().as_usize().unwrap() >= 1);
+        assert!(rows[0].req("mean_s").unwrap().as_f64().is_some());
     }
 }
