@@ -13,12 +13,17 @@
 //! cargo run --release --example serve_quantized
 //! SERVE_POLICY=spf SERVE_SAMPLER=topk:8:0.7 cargo run --release --example serve_quantized
 //! SERVE_ALLOC="2x64,ffn_up=3x64,ffn_down=1x64" cargo run --release --example serve_quantized
+//! SERVE_SPEC=4 SERVE_DRAFT_ALLOC=1x64 cargo run --release --example serve_quantized
 //! ```
 //!
 //! `SERVE_ALLOC` takes a mixed-precision [`BitAllocation`] string
 //! (`default[,tensor=scheme]*`); the packed model then holds each linear at
 //! its allocated width and the fused kernels serve the heterogeneous form
-//! directly.
+//! directly.  `SERVE_SPEC=k` turns on self-speculative decoding: the same
+//! base weights are re-packed at the aggressive `SERVE_DRAFT_ALLOC`
+//! (default `1x64`) as a draft model that proposes `k` tokens per round,
+//! verified by the target in one chunked forward — completions are
+//! bit-identical to `SERVE_SPEC=0`, only faster.
 
 use invarexplore::baselines::{self, Method};
 use invarexplore::calib::CalibSet;
@@ -75,10 +80,35 @@ fn main() -> anyhow::Result<()> {
         Ok(spec) => AdmissionPolicy::parse(&spec)?,
         Err(_) => AdmissionPolicy::Fcfs,
     };
+    // SERVE_SPEC=k: self-speculative decoding with a low-bit draft of the
+    // same base weights (SERVE_DRAFT_ALLOC, default 1x64)
+    let spec: usize = match std::env::var("SERVE_SPEC") {
+        Ok(v) => v.parse().map_err(|_| anyhow::anyhow!("bad SERVE_SPEC {v:?}"))?,
+        Err(_) => 0,
+    };
+    let draft = if spec > 0 {
+        let da = BitAllocation::parse(
+            &std::env::var("SERVE_DRAFT_ALLOC").unwrap_or_else(|_| "1x64".into()),
+        )?;
+        let d = pm.draft(&da)?;
+        println!(
+            "speculative decoding: {spec} draft tokens/round from {} \
+             ({:.2} MiB draft next to {:.2} MiB target)",
+            da.label(),
+            d.packed_bytes() as f64 / (1 << 20) as f64,
+            pm.packed_bytes() as f64 / (1 << 20) as f64
+        );
+        Some(d)
+    } else {
+        None
+    };
     let mut scheduler = Scheduler::new(
         &pm,
-        ServeOpts { max_batch: batch, policy, prefix_cache: true, ..Default::default() },
+        ServeOpts { max_batch: batch, policy, prefix_cache: true, spec, ..Default::default() },
     );
+    if let Some(d) = &draft {
+        scheduler = scheduler.with_draft(d);
+    }
 
     let mut rng = Pcg64::new(7);
     // all prompts share a prefix (half the requests one prefix, half

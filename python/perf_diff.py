@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Perf-trajectory regression diff for CI.
+
+Compares the current run's ``BENCH_<suite>.json`` files (written by the
+``rust/benches`` smoke runs, uploaded as the ``bench-trajectory-*``
+artifact) against the baseline downloaded from the latest successful run
+on main:
+
+* every row present in both runs is diffed on ``mean_s``; rows slower
+  than the threshold are annotated (GitHub ``::warning::`` lines);
+* each suite's **headline** metric — its first recorded row, which the
+  benches deliberately order to lead with the claim under test (e.g.
+  ``chunked verify`` for ``serve_speculative``) — FAILS the job when it
+  regresses more than the threshold.
+
+Noise guard: shared CI runners jitter hard at microsecond scale, so rows
+whose baseline mean is under ``MIN_BASELINE_S`` (default 200 µs) only
+ever warn.  Overrides: ``PERF_DIFF_THRESHOLD`` (fractional slowdown,
+default 0.20) and ``PERF_DIFF_MIN_BASELINE_S``.
+
+Usage: ``perf_diff.py <baseline-dir> <current-dir>`` — both directories
+are searched recursively (artifact downloads nest); a missing or empty
+baseline skips cleanly (first run on a fresh branch history).
+"""
+
+import json
+import os
+import re
+import sys
+
+THRESHOLD = float(os.environ.get("PERF_DIFF_THRESHOLD", "0.20"))
+MIN_BASELINE_S = float(os.environ.get("PERF_DIFF_MIN_BASELINE_S", "200e-6"))
+
+
+def natural_key(path):
+    """Sort key treating digit runs numerically (zero-padded), so
+    ``bench-trajectory-12-2`` orders after ``bench-trajectory-12-1`` and
+    after ``...-9-1``."""
+    return re.sub(r"\d+", lambda m: m.group().zfill(12), path)
+
+
+def load_suites(root):
+    """Map suite name -> ordered [(label, mean_s)] from BENCH_*.json under root.
+
+    Files are visited in natural-sorted path order and later files replace
+    earlier ones per suite — when a re-run leaves several
+    ``bench-trajectory-<run>-<attempt>`` artifact directories side by side,
+    the highest attempt's numbers win.
+    """
+    suites = {}
+    if not os.path.isdir(root):
+        return suites
+    paths = []
+    for dirpath, _dirnames, filenames in os.walk(root):
+        for fn in filenames:
+            if fn.startswith("BENCH_") and fn.endswith(".json"):
+                paths.append(os.path.join(dirpath, fn))
+    for path in sorted(paths, key=natural_key):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+            rows = [(r["label"], float(r["mean_s"])) for r in doc["rows"]]
+            suites[doc["suite"]] = rows
+        except (OSError, ValueError, KeyError) as e:
+            print(f"::warning::perf_diff: skipping unreadable {path}: {e}")
+    return suites
+
+
+def main(argv):
+    if len(argv) != 3:
+        print("usage: perf_diff.py <baseline-dir> <current-dir>", file=sys.stderr)
+        return 2
+    baseline = load_suites(argv[1])
+    current = load_suites(argv[2])
+    if not current:
+        print(f"::error::perf_diff: no BENCH_*.json found under {argv[2]}")
+        return 1
+    if not baseline:
+        print("perf_diff: no baseline trajectories (first run?); nothing to compare")
+        return 0
+
+    failures = []
+    for suite, rows in sorted(current.items()):
+        base_rows = dict(baseline.get(suite, []))
+        if not base_rows:
+            print(f"perf_diff: suite {suite!r} has no baseline; skipping")
+            continue
+        headline = rows[0][0] if rows else None
+        for label, mean_s in rows:
+            if label not in base_rows:
+                print(f"perf_diff: {suite}/{label!r} is new; no baseline")
+                continue
+            base = base_rows[label]
+            if base <= 0.0:
+                continue
+            ratio = mean_s / base
+            line = (
+                f"{suite}/{label}: {base * 1e3:.3f} ms -> {mean_s * 1e3:.3f} ms "
+                f"({ratio:.2f}x)"
+            )
+            if ratio <= 1.0 + THRESHOLD:
+                print(f"perf_diff: ok {line}")
+                continue
+            gated = label == headline and base >= MIN_BASELINE_S
+            if gated:
+                print(f"::error::perf regression (headline): {line}")
+                failures.append(f"{suite}/{label}")
+            else:
+                why = "sub-noise-floor baseline" if base < MIN_BASELINE_S else "non-headline"
+                print(f"::warning::perf regression ({why}): {line}")
+
+    if failures:
+        print(
+            f"perf_diff: {len(failures)} headline regression(s) past "
+            f"{THRESHOLD:.0%}: {', '.join(failures)}"
+        )
+        return 1
+    print("perf_diff: no headline regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

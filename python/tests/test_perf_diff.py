@@ -1,0 +1,96 @@
+"""Tests for the CI perf-trajectory regression diff (perf_diff.py):
+headline gating, noise floor, missing-baseline skips.  Pure stdlib — runs
+without the jax toolchain the aot tests need."""
+
+import importlib.util
+import json
+import os
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "perf_diff", os.path.join(os.path.dirname(__file__), "..", "perf_diff.py")
+)
+perf_diff = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(perf_diff)
+
+
+def write_suite(root, suite, rows):
+    root.mkdir(parents=True, exist_ok=True)
+    doc = {
+        "suite": suite,
+        "rows": [
+            {"label": l, "mean_s": m, "p50_s": m, "min_s": m, "max_s": m, "iters": 3}
+            for l, m in rows
+        ],
+    }
+    (root / f"BENCH_{suite}.json").write_text(json.dumps(doc))
+
+
+def run(tmp_path, base_rows, cur_rows):
+    write_suite(tmp_path / "base", "s", base_rows)
+    write_suite(tmp_path / "cur" / "nested", "s", cur_rows)  # artifacts nest
+    return perf_diff.main(["perf_diff.py", str(tmp_path / "base"), str(tmp_path / "cur")])
+
+
+def test_headline_regression_fails(tmp_path):
+    assert run(tmp_path, [("head", 1e-3), ("other", 1e-3)], [("head", 1.5e-3), ("other", 1e-3)]) == 1
+
+
+def test_non_headline_regression_only_warns(tmp_path):
+    assert run(tmp_path, [("head", 1e-3), ("other", 1e-3)], [("head", 1e-3), ("other", 9e-3)]) == 0
+
+
+def test_within_threshold_passes(tmp_path):
+    assert run(tmp_path, [("head", 1e-3)], [("head", 1.15e-3)]) == 0
+
+
+def test_sub_noise_floor_headline_only_warns(tmp_path):
+    # 10 µs baseline jitters too hard on shared runners to gate on
+    assert run(tmp_path, [("head", 1e-5)], [("head", 9e-5)]) == 0
+
+
+def test_missing_baseline_skips(tmp_path):
+    write_suite(tmp_path / "cur", "s", [("head", 1e-3)])
+    assert perf_diff.main(["perf_diff.py", str(tmp_path / "nope"), str(tmp_path / "cur")]) == 0
+
+
+def test_missing_current_fails(tmp_path):
+    write_suite(tmp_path / "base", "s", [("head", 1e-3)])
+    assert perf_diff.main(["perf_diff.py", str(tmp_path / "base"), str(tmp_path / "gone")]) == 1
+
+
+def test_new_row_and_new_suite_tolerated(tmp_path):
+    write_suite(tmp_path / "base", "s", [("head", 1e-3)])
+    write_suite(tmp_path / "cur", "s", [("head", 1e-3), ("fresh", 1.0)])
+    write_suite(tmp_path / "cur2", "brand_new", [("head", 1.0)])
+    assert perf_diff.main(["perf_diff.py", str(tmp_path / "base"), str(tmp_path / "cur")]) == 0
+    assert perf_diff.main(["perf_diff.py", str(tmp_path / "base"), str(tmp_path / "cur2")]) == 0
+
+
+def test_threshold_env_override(tmp_path, monkeypatch):
+    # exercise the real env-var parsing path, not just the module constant
+    monkeypatch.setenv("PERF_DIFF_THRESHOLD", "1.0")
+    spec = importlib.util.spec_from_file_location("perf_diff_env", _SPEC.origin)
+    fresh = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(fresh)
+    assert fresh.THRESHOLD == 1.0
+    write_suite(tmp_path / "base", "s", [("head", 1e-3)])
+    write_suite(tmp_path / "cur", "s", [("head", 1.9e-3)])
+    assert fresh.main(["perf_diff.py", str(tmp_path / "base"), str(tmp_path / "cur")]) == 0
+
+
+def test_highest_attempt_artifact_wins(tmp_path):
+    # a workflow re-run leaves bench-trajectory-<run>-<attempt> dirs side by
+    # side; the diff must read the latest attempt's numbers (natural order:
+    # attempt 10 > attempt 9, run 12 > run 9)
+    write_suite(tmp_path / "base" / "bench-trajectory-9-1", "s", [("head", 1e-3)])
+    write_suite(tmp_path / "base" / "bench-trajectory-12-1", "s", [("head", 2e-3)])
+    for attempt, mean in [(1, 9e-3), (9, 9e-3), (10, 2.1e-3)]:
+        write_suite(
+            tmp_path / "cur" / f"bench-trajectory-12-{attempt}", "s", [("head", mean)]
+        )
+    # latest current (2.1ms) vs latest baseline (2ms): within threshold
+    assert perf_diff.main(["perf_diff.py", str(tmp_path / "base"), str(tmp_path / "cur")]) == 0
+    suites = perf_diff.load_suites(str(tmp_path / "cur"))
+    assert suites["s"] == [("head", 2.1e-3)]

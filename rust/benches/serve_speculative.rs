@@ -1,0 +1,293 @@
+//! Self-speculative decoding benchmarks:
+//!
+//! 1. **chunked verify vs sequential verify** — `native::forward_chunk`
+//!    over k+1 tokens against k+1 sequential `decode_step`s replaying the
+//!    *same* token trace from the same KV prefix (identical acceptance
+//!    trace, identical logits — pinned bitwise), isolating the weight-
+//!    traffic amortization the speculative verify path is built on;
+//! 2. **end-to-end speculative serving** — `serve::Scheduler` with a
+//!    low-bit draft attached vs plain decoding, tok/s and acceptance rate
+//!    at batch 1 and batch 4;
+//! 3. **the determinism pin** — greedy speculative completions bit-identical
+//!    to non-speculative across {batch 1,4} x {FCFS,SPF,EDF} x prefix
+//!    cache on/off (plus a stochastic top-k run: acceptance re-samples
+//!    through the request RNG, so even sampled completions are identical).
+//!
+//! Runs entirely on synthetic random models — no artifacts needed.
+//! `--smoke` (or env `SERVE_SPECULATIVE_SMOKE=1`) shrinks the workload,
+//! asserts the invariants (a: identity matrix, b: chunked verify strictly
+//! beats sequential at the same trace), writes
+//! `BENCH_serve_speculative.json`, and exits — wired into CI.
+
+use std::time::Instant;
+
+use invarexplore::model::native::{self, KvCache};
+use invarexplore::model::{OptConfig, Weights};
+use invarexplore::quant::BitAllocation;
+use invarexplore::serve::{
+    AdmissionPolicy, Completion, PackedModel, Request, Scheduler, ServeOpts, ServeStats,
+};
+use invarexplore::util::bench::{self, BenchSuite, Stats};
+use invarexplore::util::rng::Pcg64;
+use invarexplore::util::sampling::Sampler;
+
+/// Model for the chunked-vs-sequential verify microbench: wide enough that
+/// weight streaming dominates (the effect being measured), small enough
+/// for CI smoke.
+fn verify_config(smoke: bool) -> OptConfig {
+    OptConfig {
+        name: "spec-verify-bench".into(),
+        vocab: 512,
+        d_model: 128,
+        n_layers: if smoke { 2 } else { 4 },
+        n_heads: 8,
+        d_ffn: 512,
+        max_seq: 96,
+    }
+}
+
+/// Small model for the scheduler matrix (many runs, tiny forwards).
+fn matrix_config() -> OptConfig {
+    OptConfig {
+        name: "spec-matrix".into(),
+        vocab: 96,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 4,
+        d_ffn: 64,
+        max_seq: 64,
+    }
+}
+
+fn packed(w: &Weights, alloc: &str) -> PackedModel {
+    PackedModel::from_allocation(w.clone(), &BitAllocation::parse(alloc).unwrap()).unwrap()
+}
+
+type Traffic = Vec<(usize, Vec<i32>, usize)>;
+
+/// Shared-prefix traffic over two prompt families.
+fn traffic(cfg: &OptConfig, n: usize, gen: usize) -> Traffic {
+    let mut rng = Pcg64::new(11);
+    let shared: Vec<Vec<i32>> = (0..2)
+        .map(|_| (0..6).map(|_| rng.below(cfg.vocab) as i32).collect())
+        .collect();
+    (0..n)
+        .map(|i| {
+            let mut p = shared[i % 2].clone();
+            p.extend((0..3 + i % 3).map(|_| rng.below(cfg.vocab) as i32));
+            (i, p, gen)
+        })
+        .collect()
+}
+
+fn run_sched(
+    target: &PackedModel,
+    draft: Option<&PackedModel>,
+    specs: &Traffic,
+    sampler: Sampler,
+    spec: usize,
+    max_batch: usize,
+    policy: AdmissionPolicy,
+    prefix_cache: bool,
+) -> (Vec<Completion>, ServeStats) {
+    let mut s = Scheduler::new(
+        target,
+        ServeOpts { max_batch, policy, prefix_cache, seed: 7, spec, ..Default::default() },
+    );
+    if let Some(d) = draft {
+        s = s.with_draft(d);
+    }
+    for (id, p, m) in specs {
+        s.submit(Request::new(*id, p.clone(), *m, sampler));
+    }
+    s.run()
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("SERVE_SPECULATIVE_SMOKE").as_deref() == Ok("1");
+    let k = 4usize;
+    println!("== serve_speculative: draft k={k}{} ==", if smoke { ", SMOKE" } else { "" });
+    if smoke {
+        bench::smoke_budget_ms(120);
+    }
+    let mut suite = BenchSuite::new("serve_speculative");
+
+    // ---- (b) chunked verify vs sequential verify, same acceptance trace ----
+    let vcfg = verify_config(smoke);
+    let vw = Weights::random(vcfg.clone(), 3);
+    let target = packed(&vw, "2x32");
+    let mut rng = Pcg64::new(5);
+    let prompt: Vec<i32> = (0..16).map(|_| rng.below(vcfg.vocab) as i32).collect();
+    let mut base = KvCache::new(&vcfg);
+    let mut logits = native::prefill(&target, &mut base, &prompt);
+    // greedy trace: the exact tokens a (perfect-acceptance) verify replays
+    let gen = if smoke { 20 } else { 60 };
+    let mut trace = Vec::with_capacity(gen);
+    for _ in 0..gen {
+        let t = invarexplore::util::sampling::argmax(&logits) as i32;
+        trace.push(t);
+        logits = native::decode_step(&target, &mut base, t);
+    }
+    base.truncate(prompt.len());
+
+    // bitwise pin outside the timed loops: every chunk row == its decode_step
+    {
+        let mut c1 = base.fork_at(prompt.len());
+        let mut c2 = base.fork_at(prompt.len());
+        for chunk in trace.chunks(k + 1) {
+            let rows = native::forward_chunk(&target, &mut c1, chunk);
+            for (i, &t) in chunk.iter().enumerate() {
+                let step = native::decode_step(&target, &mut c2, t);
+                assert_eq!(rows.row(i), step.as_slice(), "verify parity broke at {t}");
+            }
+        }
+        println!("parity: chunked verify bit-identical to sequential decode_steps");
+    }
+
+    let chunked = suite.bench("chunked verify (per trace, k+1 rows/pass)", || {
+        let mut c = base.fork_at(prompt.len());
+        for chunk in trace.chunks(k + 1) {
+            std::hint::black_box(native::forward_chunk(&target, &mut c, chunk));
+        }
+    });
+    let sequential = suite.bench("sequential verify (per trace, 1 row/pass)", || {
+        let mut c = base.fork_at(prompt.len());
+        for &t in &trace {
+            std::hint::black_box(native::decode_step(&target, &mut c, t));
+        }
+    });
+    println!(
+        "verify ({} tokens, {} model): chunked {:?} vs sequential {:?} p50 ({:.2}x)",
+        trace.len(),
+        vcfg.name,
+        chunked.p50,
+        sequential.p50,
+        sequential.p50.as_secs_f64() / chunked.p50.as_secs_f64().max(1e-12),
+    );
+    assert!(
+        chunked.p50 < sequential.p50,
+        "chunked verify ({:?}) must strictly beat sequential decode_step \
+         verification ({:?}) at the same acceptance trace",
+        chunked.p50,
+        sequential.p50
+    );
+
+    // ---- (a) determinism matrix + end-to-end tok/s -------------------------
+    let mcfg = matrix_config();
+    let mw = Weights::random(mcfg.clone(), 1);
+    let mtarget = packed(&mw, "2x16,ffn_up=3x16");
+    // aggressive 1-bit draft: worst-case acceptance, identity must hold
+    let lowbit_draft = mtarget.draft(&BitAllocation::parse("1x16").unwrap()).unwrap();
+    // same-allocation draft: perfect greedy acceptance, best-case tok/s
+    let perfect_draft = mtarget.draft(&BitAllocation::parse("2x16,ffn_up=3x16").unwrap()).unwrap();
+    let specs = traffic(&mcfg, if smoke { 6 } else { 16 }, if smoke { 6 } else { 24 });
+
+    let strip = |done: Vec<Completion>| -> Vec<(usize, Vec<i32>)> {
+        done.into_iter().map(|c| (c.id, c.generated)).collect()
+    };
+    let reference = strip(
+        run_sched(&mtarget, None, &specs, Sampler::Greedy, 0, 1, AdmissionPolicy::Fcfs, false).0,
+    );
+    for draft in [&lowbit_draft, &perfect_draft] {
+        for mb in [1usize, 4] {
+            for policy in [
+                AdmissionPolicy::Fcfs,
+                AdmissionPolicy::ShortestPrompt,
+                AdmissionPolicy::Deadline,
+            ] {
+                for pc in [false, true] {
+                    let (done, stats) = run_sched(
+                        &mtarget,
+                        Some(draft),
+                        &specs,
+                        Sampler::Greedy,
+                        k,
+                        mb,
+                        policy,
+                        pc,
+                    );
+                    assert_eq!(
+                        reference,
+                        strip(done),
+                        "speculative completions diverged at batch {mb}, {policy:?}, \
+                         prefix {pc}"
+                    );
+                    assert!(stats.verify_chunks > 0, "speculation must actually engage");
+                }
+            }
+        }
+    }
+    println!("ok: greedy speculative completions bit-identical across batch x policy x prefix");
+    // stochastic sampling is covered too: acceptance re-samples through the
+    // per-request RNG stream, so top-k completions also match exactly
+    let topk = Sampler::TopK { k: 4, temperature: 0.9 };
+    let plain_topk =
+        strip(run_sched(&mtarget, None, &specs, topk, 0, 1, AdmissionPolicy::Fcfs, false).0);
+    let spec_topk = strip(
+        run_sched(&mtarget, Some(&lowbit_draft), &specs, topk, k, 4, AdmissionPolicy::Fcfs, true)
+            .0,
+    );
+    assert_eq!(plain_topk, spec_topk, "top-k speculative completions diverged");
+    println!("ok: top-k speculative completions bit-identical too");
+
+    // end-to-end tok/s + acceptance at batch 1 and 4 (perfect + low-bit)
+    for mb in [1usize, 4] {
+        let t0 = Instant::now();
+        let (_, plain) =
+            run_sched(&mtarget, None, &specs, Sampler::Greedy, 0, mb, AdmissionPolicy::Fcfs, true);
+        let plain_time = t0.elapsed();
+        let t0 = Instant::now();
+        let (_, spec) = run_sched(
+            &mtarget,
+            Some(&perfect_draft),
+            &specs,
+            Sampler::Greedy,
+            k,
+            mb,
+            AdmissionPolicy::Fcfs,
+            true,
+        );
+        let spec_time = t0.elapsed();
+        let (_, lowbit) = run_sched(
+            &mtarget,
+            Some(&lowbit_draft),
+            &specs,
+            Sampler::Greedy,
+            k,
+            mb,
+            AdmissionPolicy::Fcfs,
+            true,
+        );
+        println!(
+            "batch {mb}: plain {:.1} tok/s vs speculative {:.1} tok/s \
+             (perfect-draft acceptance {:.0}%, {:.2} tokens/verify; \
+             1-bit draft acceptance {:.0}%)",
+            plain.decoded_tokens as f64 / plain_time.as_secs_f64().max(1e-9),
+            spec.decoded_tokens as f64 / spec_time.as_secs_f64().max(1e-9),
+            100.0 * spec.spec_accept_rate(),
+            spec.spec_tokens_per_verify(),
+            100.0 * lowbit.spec_accept_rate(),
+        );
+        assert!(
+            (spec.spec_accept_rate() - 1.0).abs() < 1e-12,
+            "a same-allocation draft must reach full greedy acceptance"
+        );
+        let per_tok = |d: std::time::Duration, toks: usize| {
+            Stats::one_shot(std::time::Duration::from_secs_f64(
+                d.as_secs_f64() / toks.max(1) as f64,
+            ))
+        };
+        suite.record(
+            &format!("speculative decode (per token, batch {mb})"),
+            per_tok(spec_time, spec.decoded_tokens),
+        );
+        suite.record(
+            &format!("plain decode (per token, batch {mb})"),
+            per_tok(plain_time, plain.decoded_tokens),
+        );
+    }
+
+    let out = suite.write_json(std::path::Path::new(".")).expect("write BENCH json");
+    println!("perf trajectory written to {}", out.display());
+}

@@ -19,13 +19,15 @@ commands:
   quantize         quantize with a baseline method, report quality + memory
   search           run the InvarExplore search on top of a baseline
   apply            materialize searched transforms into an .iwt weight file
+  serve            drive the continuous-batching scheduler from packed weights
   table1..table5   regenerate the paper's tables (also: cargo bench)
   figure1          regenerate the paper's optimization-curve figure
 
 common options: --model, --method, --scheme (e.g. 2x64), --steps, --seed,
 --batch (K-wide concurrent proposal rounds; 1 = exact sequential search),
 --alloc (mixed-precision allocation, e.g. 2x64,ffn_up=3x64,l0.q.w=4x128),
---alloc-prob (probability a proposal is a budget-preserving bit swap)
+--alloc-prob (probability a proposal is a budget-preserving bit swap),
+--spec (self-speculative draft length for `serve`; env SERVE_SPEC)
 run `invarexplore <command> --help` for details.
 ";
 
@@ -49,6 +51,13 @@ fn common_spec() -> Vec<ArgSpec> {
         ArgSpec { name: "out", help: "output path (state json / weights iwt)", default: None, is_flag: false },
         ArgSpec { name: "csv", help: "telemetry CSV output path", default: None, is_flag: false },
         ArgSpec { name: "resume", help: "resume search from a state.json checkpoint", default: None, is_flag: false },
+        ArgSpec { name: "spec", help: "serve: draft tokens per speculative round (0 = off; default: $SERVE_SPEC or 0)", default: None, is_flag: false },
+        ArgSpec { name: "draft-alloc", help: "serve: draft-model bit allocation (default: $SERVE_DRAFT_ALLOC, else the cheapest manifest preset under the target's budget)", default: None, is_flag: false },
+        ArgSpec { name: "policy", help: "serve: admission policy fcfs|spf|edf (default: $SERVE_POLICY or fcfs)", default: None, is_flag: false },
+        ArgSpec { name: "sampler", help: "serve: decoding sampler greedy|temp:<t>|topk:<k>[:<t>] (default: $SERVE_SAMPLER or greedy)", default: None, is_flag: false },
+        ArgSpec { name: "requests", help: "serve: synthetic requests to submit", default: Some("8"), is_flag: false },
+        ArgSpec { name: "max-new", help: "serve: tokens to generate per request", default: Some("24"), is_flag: false },
+        ArgSpec { name: "max-batch", help: "serve: concurrent decode slots", default: Some("4"), is_flag: false },
         ArgSpec { name: "help", help: "show options", default: None, is_flag: true },
     ]
 }
@@ -103,6 +112,7 @@ pub fn main_with_args(argv: Vec<String>) -> crate::Result<i32> {
         "quantize" => cmd_quantize(&a),
         "search" => cmd_search(&a),
         "apply" => cmd_apply(&a),
+        "serve" => cmd_serve(&a),
         "table1" => cmd_table(&a, 1),
         "table2" => cmd_table(&a, 2),
         "table3" => cmd_table(&a, 3),
@@ -332,6 +342,157 @@ fn cmd_apply(a: &Args) -> crate::Result<i32> {
     let q = prepared.quantize_model(&transformed, Some(&state.transforms));
     save_weights(&q, std::path::Path::new(out))?;
     println!("applied {} layer transforms; quantized weights written to {out}", state.transforms.len());
+    Ok(0)
+}
+
+/// Cheapest manifest allocation preset strictly under the target's budget
+/// (validated against the model), else one bit below the target's default
+/// scheme — the "nearly free in memory" draft self-speculative decoding
+/// wants.  `None` when no strictly-cheaper viable allocation exists (the
+/// caller then serves without speculation).
+fn default_draft_allocation(
+    manifest: &crate::io::manifest::Manifest,
+    target: &crate::quant::BitAllocation,
+    cfg: &crate::model::OptConfig,
+) -> Option<crate::quant::BitAllocation> {
+    let budget = target.bits_per_param(cfg);
+    let preset = manifest
+        .quant_allocations
+        .iter()
+        .filter(|al| al.validate(cfg).is_ok() && al.bits_per_param(cfg) < budget)
+        .min_by(|x, y| x.bits_per_param(cfg).partial_cmp(&y.bits_per_param(cfg)).unwrap());
+    if let Some(p) = preset {
+        return Some(p.clone());
+    }
+    let fallback = crate::quant::BitAllocation::uniform(QuantScheme::new(
+        (target.default.bits.saturating_sub(1)).max(1),
+        target.default.group,
+    ));
+    (fallback.validate(cfg).is_ok() && fallback.bits_per_param(cfg) < budget).then_some(fallback)
+}
+
+/// `invarexplore serve`: quantize + pack the model under `--alloc`, then
+/// drive the continuous-batching scheduler on synthetic shared-prefix wiki
+/// traffic — with self-speculative decoding (`--spec k` / `SERVE_SPEC`)
+/// drafting on an aggressive low-bit re-quantization of the same base
+/// weights (`--draft-alloc`, defaulting to the cheapest manifest preset).
+fn cmd_serve(a: &Args) -> crate::Result<i32> {
+    use crate::serve::{AdmissionPolicy, Request, Scheduler, ServeOpts};
+    use crate::util::sampling::Sampler;
+
+    let session = Session::load_default()?;
+    let opts = opts_from_args(a)?;
+    let alloc = opts.allocation();
+    let w = session.weights(&opts.model)?;
+    let pile = session.corpus("pile")?;
+    let calib = crate::calib::CalibSet::from_corpus(&pile, opts.calib_seqs, session.manifest.seq);
+    let prepared = crate::baselines::prepare_mixed(opts.method, &alloc, &w, &calib, None)?;
+    let quantized = prepared.quantize_model(&prepared.fp, None);
+    let pm = prepared.packed_model(&quantized);
+    println!(
+        "== serving {} at {} ({:.2} MiB packed, {}) ==",
+        opts.model,
+        alloc.label(),
+        pm.packed_bytes() as f64 / (1 << 20) as f64,
+        pm.bits_summary()
+    );
+
+    let spec = match a.get("spec") {
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("bad --spec {v:?} (want a draft length)"))?,
+        None => crate::util::cli::env_override("SERVE_SPEC", 0usize),
+    };
+    let policy = match a
+        .get("policy")
+        .map(str::to_string)
+        .or_else(|| std::env::var("SERVE_POLICY").ok())
+    {
+        Some(v) => AdmissionPolicy::parse(&v)?,
+        None => AdmissionPolicy::Fcfs,
+    };
+    let sampler = match a
+        .get("sampler")
+        .map(str::to_string)
+        .or_else(|| std::env::var("SERVE_SAMPLER").ok())
+    {
+        Some(v) => Sampler::parse(&v)?,
+        None => Sampler::Greedy,
+    };
+    let n_requests = a.parse_or("requests", 8usize)?.max(1);
+    let max_new = a.parse_or("max-new", 24usize)?;
+
+    let draft_alloc = match a
+        .get("draft-alloc")
+        .map(str::to_string)
+        .or_else(|| std::env::var("SERVE_DRAFT_ALLOC").ok())
+    {
+        Some(s) => Some(crate::quant::BitAllocation::parse(&s)?),
+        None => default_draft_allocation(&session.manifest, &alloc, pm.config()),
+    };
+    let draft = match (spec > 0, draft_alloc) {
+        (true, Some(da)) => {
+            let d = pm.draft(&da)?;
+            println!(
+                "draft model ({} tokens/round): {} — {:.2} MiB next to the target's {:.2} MiB",
+                spec,
+                da.label(),
+                d.packed_bytes() as f64 / (1 << 20) as f64,
+                pm.packed_bytes() as f64 / (1 << 20) as f64
+            );
+            Some(d)
+        }
+        (true, None) => {
+            println!("serve: no allocation cheaper than the target; speculation disabled");
+            None
+        }
+        _ => None,
+    };
+
+    let serve_opts = ServeOpts {
+        max_batch: a.parse_or("max-batch", 4usize)?.max(1),
+        seed: opts.seed,
+        policy,
+        prefix_cache: true,
+        spec,
+        ..Default::default()
+    };
+    let mut scheduler = Scheduler::new(&pm, serve_opts);
+    if let Some(d) = &draft {
+        scheduler = scheduler.with_draft(d);
+    }
+
+    // synthetic shared-prefix wiki traffic (two prompt families, so the
+    // prefix cache and the speculative path are both exercised)
+    let max_seq = pm.config().max_seq;
+    let prompt_len = usize::min(32, max_seq / 2);
+    let shared_len = prompt_len / 2;
+    let wiki = session.corpus("wiki")?;
+    anyhow::ensure!(
+        wiki.tokens.len() > prompt_len,
+        "wiki corpus too small for a {prompt_len}-token prompt"
+    );
+    let mut rng = crate::util::rng::Pcg64::new(opts.seed ^ 0x5e7e);
+    let starts: Vec<usize> =
+        (0..2).map(|_| rng.below(wiki.tokens.len() - prompt_len)).collect();
+    for i in 0..n_requests {
+        let base = starts[i % 2];
+        let tail_at = rng.below(wiki.tokens.len() - prompt_len);
+        let prompt: Vec<i32> = wiki.tokens[base..base + shared_len]
+            .iter()
+            .chain(&wiki.tokens[tail_at..tail_at + (prompt_len - shared_len)])
+            .map(|&t| t as i32)
+            .collect();
+        scheduler.submit(Request::new(i, prompt, max_new, sampler));
+    }
+
+    let (completions, stats) = scheduler.run();
+    println!("{}", stats.summary());
+    for c in completions.iter().take(2) {
+        let head = &c.generated[..c.generated.len().min(8)];
+        println!("sample {} ({}): -> {head:?}", c.id, c.finish.label());
+    }
+    println!("metrics: {}", scheduler.metrics().to_json().to_string());
     Ok(0)
 }
 

@@ -481,15 +481,18 @@ impl KvCache {
     }
 }
 
-/// Feed `tokens` as positions `cache.len()..cache.len() + tokens.len()`,
-/// appending their K/V to the cache; returns the logits of the *last* fed
-/// position (`[vocab]`).  One entry point covers both prompt prefill (many
-/// tokens) and incremental decode (one token).
-pub fn forward_cached<P: DecoderParams + ?Sized>(
+/// Shared core of the incremental forwards: feed `tokens` as positions
+/// `cache.len()..cache.len() + tokens.len()`, appending their K/V to the
+/// cache, and return the post-block residual stream `[t_new, d_model]`.
+/// Every op on this path (LayerNorm, the linears, attention, ReLU) computes
+/// each row independently, so a k-token chunk is **bit-identical per row**
+/// to k sequential one-token calls — the invariant both the prefix cache
+/// and the speculative chunked-verify path ([`forward_chunk`]) build on.
+fn forward_hidden<P: DecoderParams + ?Sized>(
     p: &P,
     cache: &mut KvCache,
     tokens: &[i32],
-) -> Vec<f32> {
+) -> Tensor {
     let cfg = p.config();
     let t_new = tokens.len();
     assert!(t_new > 0, "forward_cached: empty token chunk");
@@ -580,12 +583,62 @@ pub fn forward_cached<P: DecoderParams + ?Sized>(
         ops::add_assign(&mut x, &down);
     }
     cache.len = p0 + t_new;
+    x
+}
+
+/// Feed `tokens` as positions `cache.len()..cache.len() + tokens.len()`,
+/// appending their K/V to the cache; returns the logits of the *last* fed
+/// position (`[vocab]`).  One entry point covers both prompt prefill (many
+/// tokens) and incremental decode (one token).
+pub fn forward_cached<P: DecoderParams + ?Sized>(
+    p: &P,
+    cache: &mut KvCache,
+    tokens: &[i32],
+) -> Vec<f32> {
+    let cfg = p.config();
+    let x = forward_hidden(p, cache, tokens);
 
     // final LN + tied head, on the last position only
-    let last = Tensor::from_vec(1, cfg.d_model, x.row(t_new - 1).to_vec());
+    let last = Tensor::from_vec(1, cfg.d_model, x.row(tokens.len() - 1).to_vec());
     let hf = layer_norm(&last, &p.dense("lnf.w").data, &p.dense("lnf.b").data);
+    let emb = p.dense("emb");
     let mut logits = vec![0.0f32; cfg.vocab];
     ops::matmul_nt(&hf.data, &emb.data, 1, cfg.d_model, cfg.vocab, &mut logits);
+    logits
+}
+
+/// Chunked incremental forward — the speculative-decoding verify kernel:
+/// feed all of `tokens` in one pass and return the logits of **every** fed
+/// position as a `[tokens.len(), vocab]` tensor (row `i` is the next-token
+/// distribution after `tokens[..=i]`).
+///
+/// One chunked call streams each weight matrix once for the whole chunk —
+/// the fused packed GEMM ([`crate::quant::PackedTensor::linear_into`])
+/// decodes a weight tile once and multiplies all k rows against it, and the
+/// tied-head projection runs one `[k, vocab]` GEMM instead of k GEMVs — so
+/// weight traffic is amortized k× over verifying with k sequential
+/// [`decode_step`]s.  Row `i` is **bit-identical** to what the i-th
+/// sequential `decode_step` would have returned (pinned by
+/// `forward_chunk_bit_identical_to_sequential_decode_steps`), which is what
+/// makes speculative verification a pure perf optimization.
+pub fn forward_chunk<P: DecoderParams + ?Sized>(
+    p: &P,
+    cache: &mut KvCache,
+    tokens: &[i32],
+) -> Tensor {
+    let cfg = p.config();
+    let x = forward_hidden(p, cache, tokens);
+
+    // final LN + tied head over every fed position in one weight pass.
+    // Serial matmul on purpose: verify chunks run inside the scheduler's
+    // per-slot parallelism, and a [k+1, vocab] head crosses the
+    // matmul_nt_par size threshold on real configs — spawning nested
+    // worker scopes per slot per round (the oversubscription decode_step
+    // deliberately avoids).  The result is bit-identical either way.
+    let hf = layer_norm(&x, &p.dense("lnf.w").data, &p.dense("lnf.b").data);
+    let emb = p.dense("emb");
+    let mut logits = Tensor::zeros(tokens.len(), cfg.vocab);
+    ops::matmul_nt(&hf.data, &emb.data, tokens.len(), cfg.d_model, cfg.vocab, &mut logits.data);
     logits
 }
 
@@ -879,6 +932,92 @@ mod tests {
         let cfg = OptConfig::test_config();
         let cache = KvCache::new(&cfg);
         cache.fork_at(1);
+    }
+
+    #[test]
+    fn forward_chunk_bit_identical_to_sequential_decode_steps() {
+        // the speculative-verify acceptance pin: one chunked forward over k
+        // tokens must return, at every row, EXACTLY the logits k sequential
+        // single-token decode_steps produce — bit for bit, including across
+        // KV page boundaries (KV_PAGE = 16; the chunks below straddle it).
+        let cfg = OptConfig::test_config();
+        let w = Weights::random(cfg.clone(), 8);
+        let mut rng = crate::util::rng::Pcg64::new(21);
+        let prompt: Vec<i32> = (0..6).map(|_| rng.below(cfg.vocab) as i32).collect();
+        for chunk_len in [1usize, 3, 8, 13] {
+            let chunk: Vec<i32> =
+                (0..chunk_len).map(|_| rng.below(cfg.vocab) as i32).collect();
+            let mut seq_cache = KvCache::new(&cfg);
+            prefill(&w, &mut seq_cache, &prompt);
+            let seq_logits: Vec<Vec<f32>> =
+                chunk.iter().map(|&t| decode_step(&w, &mut seq_cache, t)).collect();
+            let mut chunk_cache = KvCache::new(&cfg);
+            prefill(&w, &mut chunk_cache, &prompt);
+            let chunked = forward_chunk(&w, &mut chunk_cache, &chunk);
+            assert_eq!(chunked.shape(), (chunk_len, cfg.vocab));
+            assert_eq!(chunk_cache.len(), seq_cache.len());
+            for (i, row) in seq_logits.iter().enumerate() {
+                assert_eq!(
+                    chunked.row(i),
+                    row.as_slice(),
+                    "chunk len {chunk_len}: row {i} diverged from sequential decode"
+                );
+            }
+        }
+    }
+
+    /// Wide single-layer config so rollback chunks can straddle multiple
+    /// KV pages (test_config's max_seq of 32 only holds 2 pages).
+    fn rollback_config() -> OptConfig {
+        OptConfig {
+            name: "rollback-test".into(),
+            vocab: 64,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ffn: 32,
+            max_seq: 96,
+        }
+    }
+
+    #[test]
+    fn prop_fork_append_truncate_roundtrips_bit_identically() {
+        // speculation's rollback invariant: fork_at → append k tokens →
+        // truncate back must leave a cache whose continuations are
+        // bit-identical to never having appended, for k straddling page
+        // boundaries — and the parent must never see the fork's writes.
+        let cfg = rollback_config();
+        let w = Weights::random(cfg.clone(), 13);
+        crate::util::propcheck::check("fork/append/truncate identity", 12, |rng| {
+            let p = 1 + rng.below(2 * KV_PAGE + 4); // prefix crosses 0..=2 boundaries
+            let seq: Vec<i32> = (0..p).map(|_| rng.below(cfg.vocab) as i32).collect();
+            let mut base = KvCache::new(&cfg);
+            prefill(&w, &mut base, &seq);
+            for k in [1usize, KV_PAGE - 1, KV_PAGE, 2 * KV_PAGE] {
+                let mut fork = base.fork_at(p);
+                let junk: Vec<i32> = (0..k).map(|_| rng.below(cfg.vocab) as i32).collect();
+                forward_chunk(&w, &mut fork, &junk);
+                fork.truncate(p);
+                if fork.len() != p {
+                    return Err(format!("p={p} k={k}: truncate left len {}", fork.len()));
+                }
+                // the rolled-back fork continues exactly like a fresh prefix
+                let cont: Vec<i32> = (0..3).map(|_| rng.below(cfg.vocab) as i32).collect();
+                let a = forward_cached(&w, &mut fork, &cont);
+                let mut fresh = KvCache::new(&cfg);
+                let full: Vec<i32> = seq.iter().chain(&cont).copied().collect();
+                let b = forward_cached(&w, &mut fresh, &full);
+                if a != b {
+                    return Err(format!("p={p} k={k}: rolled-back continuation diverged"));
+                }
+            }
+            // the parent never saw any of the forks' speculative writes
+            let d = decode_step(&w, &mut base, 1);
+            let mut control = KvCache::new(&cfg);
+            prefill(&w, &mut control, &seq);
+            let d2 = decode_step(&w, &mut control, 1);
+            crate::util::propcheck::ensure(d == d2, format!("p={p}: parent corrupted"))
+        });
     }
 
     #[test]

@@ -201,19 +201,43 @@ impl PackedTensor {
 
     /// Fused unpack→dequant of one row into `out` (len `cols`), group by
     /// group, without touching any other row.
+    ///
+    /// Hot-loop shape: when a group holds more elements than the code space
+    /// (`2^bits <= 256` entries), the per-group dequant values
+    /// `scale * (q - zero)` are precomputed once into a lookup table and
+    /// each element becomes an unpack + table load, instead of re-running
+    /// the float multiply/subtract per element.  The LUT entry for code `q`
+    /// is the exact same f32 expression the direct path evaluates, so both
+    /// paths are bit-identical (the direct path is kept for sparse groups
+    /// where filling `2^bits` entries would outweigh the group itself, and
+    /// doubles as the reference in `dequant_lut_bit_identical_to_direct`).
     pub fn dequant_row_into(&self, r: usize, out: &mut [f32]) {
         assert_eq!(out.len(), self.cols, "dequant_row_into: bad buffer");
         let bits = self.scheme.bits;
         let per_word = 32 / bits;
         let mask = (1u32 << bits) - 1;
         let group = self.scheme.group;
+        let n_levels = 1usize << bits;
         let row_words = &self.words[r * self.words_per_row..(r + 1) * self.words_per_row];
+        let mut lut = [0.0f32; 256];
         for (g, scale, zero) in self.row_groups(r) {
             let a = g * group;
-            for (i, o) in out[a..a + group].iter_mut().enumerate() {
-                let c = a + i;
-                let code = ((row_words[c / per_word] >> ((c % per_word) * bits)) & mask) as f32;
-                *o = scale * (code - zero);
+            if n_levels <= group {
+                for (q, slot) in lut[..n_levels].iter_mut().enumerate() {
+                    *slot = scale * (q as f32 - zero);
+                }
+                for (i, o) in out[a..a + group].iter_mut().enumerate() {
+                    let c = a + i;
+                    let code = (row_words[c / per_word] >> ((c % per_word) * bits)) & mask;
+                    *o = lut[code as usize];
+                }
+            } else {
+                for (i, o) in out[a..a + group].iter_mut().enumerate() {
+                    let c = a + i;
+                    let code =
+                        ((row_words[c / per_word] >> ((c % per_word) * bits)) & mask) as f32;
+                    *o = scale * (code - zero);
+                }
             }
         }
     }
@@ -430,6 +454,45 @@ mod tests {
                 fused.data == dense.data,
                 format!("bitwise mismatch at rows={rows} cols={cols} m={m} bits={bits}"),
             )
+        });
+    }
+
+    #[test]
+    fn dequant_lut_bit_identical_to_direct() {
+        // the LUT fast path (2^bits <= group) must reproduce the direct
+        // per-element `scale * (q - zero)` bit-for-bit, for every bit width
+        // on both sides of the gate (bits 8 over group 32 takes the direct
+        // path; everything else below takes the LUT).
+        propcheck::check("dequant LUT == direct dequant", 24, |rng| {
+            let bits = rng.below(8) + 1;
+            let group = *rng.choice(&[16usize, 32, 64]);
+            let scheme = QuantScheme::new(bits, group);
+            let rows = rng.below(4) + 1;
+            let cols = group * (rng.below(3) + 1);
+            let shift = *rng.choice(&[-2.0f32, 0.0, 2.0]);
+            let w = Tensor::from_vec(
+                rows,
+                cols,
+                (0..rows * cols).map(|_| rng.normal() as f32 + shift).collect(),
+            );
+            let packed = PackedTensor::pack(&quantize(&w, scheme));
+            let mut row = vec![0.0f32; cols];
+            for r in 0..rows {
+                packed.dequant_row_into(r, &mut row);
+                // reference: the direct formula over code/group accessors
+                for (g, scale, zero) in packed.row_groups(r) {
+                    for c in g * group..(g + 1) * group {
+                        let want = scale * (packed.code(r, c) as f32 - zero);
+                        if row[c].to_bits() != want.to_bits() {
+                            return Err(format!(
+                                "bits={bits} group={group} ({r},{c}): {} vs {want}",
+                                row[c]
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
         });
     }
 

@@ -90,6 +90,69 @@ impl Histogram {
     }
 }
 
+/// Maximum count tracked exactly by [`CountHistogram`] (larger samples
+/// clamp into the last bucket).  Draft lengths are single digits in
+/// practice, so 64 leaves ample headroom.
+const COUNT_BUCKETS: usize = 65;
+
+/// Fixed linear-bucket histogram over small non-negative counts — the
+/// speculative accepted-length distribution (how many draft tokens each
+/// verify step accepted).  Allocation-free on the record path, like
+/// [`Histogram`].
+#[derive(Debug, Clone)]
+pub struct CountHistogram {
+    buckets: [u64; COUNT_BUCKETS],
+    count: u64,
+    sum: u64,
+}
+
+impl Default for CountHistogram {
+    fn default() -> CountHistogram {
+        CountHistogram::new()
+    }
+}
+
+impl CountHistogram {
+    pub fn new() -> CountHistogram {
+        CountHistogram { buckets: [0; COUNT_BUCKETS], count: 0, sum: 0 }
+    }
+
+    pub fn record(&mut self, n: usize) {
+        self.buckets[n.min(COUNT_BUCKETS - 1)] += 1;
+        self.count += 1;
+        self.sum += n as u64;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Samples recorded at exactly `n` (clamped into the last bucket).
+    pub fn at(&self, n: usize) -> u64 {
+        self.buckets[n.min(COUNT_BUCKETS - 1)]
+    }
+
+    /// `{count, mean, buckets: [per-value counts up to the largest seen]}`.
+    pub fn to_json(&self) -> Json {
+        let hi = self.buckets.iter().rposition(|&b| b > 0).map_or(0, |i| i + 1);
+        Json::obj()
+            .set("count", self.count as usize)
+            .set("mean", self.mean())
+            .set(
+                "buckets",
+                Json::Arr(self.buckets[..hi].iter().map(|&b| Json::from(b as usize)).collect()),
+            )
+    }
+}
+
 /// Telemetry for one scheduler run (or several — it accumulates).
 #[derive(Debug, Clone, Default)]
 pub struct ServeMetrics {
@@ -117,6 +180,14 @@ pub struct ServeMetrics {
     pub finished_stop: u64,
     pub cancelled: u64,
     pub rejected: u64,
+    /// Speculative decoding: accepted draft tokens per verify step (the
+    /// accepted-length histogram; one sample per chunked verify).
+    pub spec_accept_len: CountHistogram,
+    /// Tokens committed across all chunked verify steps (matched drafts
+    /// plus the correction/bonus sample each).
+    pub spec_committed_tokens: u64,
+    /// Draft tokens proposed across all verify steps.
+    pub spec_draft_tokens: u64,
 }
 
 impl ServeMetrics {
@@ -158,6 +229,25 @@ impl ServeMetrics {
         self.kv_eager_bytes_peak = self.kv_eager_bytes_peak.max(eager_equivalent);
     }
 
+    /// Record one slot's speculative round (one chunked verify step).
+    pub fn record_spec_round(&mut self, round: &crate::serve::SpecRound) {
+        self.spec_accept_len.record(round.matched);
+        self.spec_committed_tokens += round.committed as u64;
+        self.spec_draft_tokens += round.drafted as u64;
+    }
+
+    /// Mean tokens committed per chunked verify step — the speculative
+    /// throughput multiplier over one-token-per-round decoding (1.0 means
+    /// speculation is buying nothing).
+    pub fn spec_tokens_per_verify(&self) -> f64 {
+        let steps = self.spec_accept_len.count();
+        if steps == 0 {
+            0.0
+        } else {
+            self.spec_committed_tokens as f64 / steps as f64
+        }
+    }
+
     /// Full telemetry dump (the serve example prints this).
     pub fn to_json(&self) -> Json {
         Json::obj()
@@ -184,6 +274,15 @@ impl ServeMetrics {
                 Json::obj()
                     .set("live_bytes_peak", self.kv_live_bytes_peak)
                     .set("eager_bytes_peak", self.kv_eager_bytes_peak),
+            )
+            .set(
+                "speculative",
+                Json::obj()
+                    .set("verify_steps", self.spec_accept_len.count() as usize)
+                    .set("draft_tokens", self.spec_draft_tokens as usize)
+                    .set("committed_tokens", self.spec_committed_tokens as usize)
+                    .set("tokens_per_verify", self.spec_tokens_per_verify())
+                    .set("accepted_len", self.spec_accept_len.to_json()),
             )
             .set(
                 "finished",
@@ -260,6 +359,48 @@ mod tests {
         // the dump is valid JSON round-trip
         let text = j.to_string();
         assert!(crate::util::json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn count_histogram_buckets_and_mean() {
+        let mut h = CountHistogram::new();
+        assert_eq!(h.mean(), 0.0);
+        for n in [0usize, 2, 2, 4] {
+            h.record(n);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.at(2), 2);
+        assert_eq!(h.at(1), 0);
+        assert!((h.mean() - 2.0).abs() < 1e-12);
+        // clamp: outsized samples land in the last bucket instead of panicking
+        h.record(10_000);
+        assert_eq!(h.at(COUNT_BUCKETS - 1), 1);
+        let j = h.to_json();
+        assert_eq!(j.get("count").unwrap().as_usize(), Some(5));
+        let buckets = j.get("buckets").unwrap().as_arr().unwrap();
+        assert_eq!(buckets.len(), COUNT_BUCKETS, "clamped sample extends the dump");
+        assert_eq!(buckets[2].as_usize(), Some(2));
+    }
+
+    #[test]
+    fn spec_rounds_feed_accept_histogram() {
+        use crate::serve::SpecRound;
+        let mut m = ServeMetrics::new();
+        assert_eq!(m.spec_tokens_per_verify(), 0.0);
+        m.record_spec_round(&SpecRound { drafted: 4, matched: 4, committed: 5 });
+        m.record_spec_round(&SpecRound { drafted: 4, matched: 1, committed: 2 });
+        m.record_spec_round(&SpecRound { drafted: 2, matched: 0, committed: 1 });
+        assert_eq!(m.spec_accept_len.count(), 3);
+        assert_eq!(m.spec_draft_tokens, 10);
+        assert_eq!(m.spec_committed_tokens, 8);
+        assert!((m.spec_tokens_per_verify() - 8.0 / 3.0).abs() < 1e-12);
+        let j = m.to_json();
+        let spec = j.get("speculative").unwrap();
+        assert_eq!(spec.get("verify_steps").unwrap().as_usize(), Some(3));
+        assert_eq!(spec.get("draft_tokens").unwrap().as_usize(), Some(10));
+        let accepted = spec.get("accepted_len").unwrap();
+        assert_eq!(accepted.get("count").unwrap().as_usize(), Some(3));
+        assert!(crate::util::json::parse(&j.to_string()).is_ok());
     }
 
     #[test]

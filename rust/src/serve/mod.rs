@@ -15,7 +15,13 @@
 //!   attached to every [`Completion`].
 //! * [`metrics`] — production telemetry: TTFT and inter-token latency
 //!   histograms (p50/p95/p99), queue depth, prefix-cache hit rate and live
-//!   KV bytes, dumped through `util::json`.
+//!   KV bytes, speculative accepted-length histogram, dumped through
+//!   `util::json`.
+//! * [`spec`] — self-speculative decoding: an ultra-low-bit draft model
+//!   ([`PackedModel::draft`]) proposes `ServeOpts::spec` tokens per round
+//!   and the target verifies them in one chunked forward
+//!   (`model::native::forward_chunk`), committing multiple tokens per
+//!   weight pass while staying bit-identical to plain decoding.
 //!
 //! The engine is generic over [`DecoderParams`], so the same loop serves a
 //! dense [`crate::model::Weights`] or a [`PackedModel`] computing directly
@@ -34,15 +40,17 @@ pub mod metrics;
 pub mod model;
 pub mod prefix;
 pub mod scheduler;
+pub mod spec;
 pub mod stream;
 
-pub use metrics::{Histogram, ServeMetrics};
+pub use metrics::{CountHistogram, Histogram, ServeMetrics};
 pub use model::PackedModel;
 pub use prefix::{PrefixCache, PrefixStats};
 /// The serving engine is also exported under PR-2's `Server` name, so
 /// existing call sites keep working.
 pub use scheduler::Scheduler as Server;
 pub use scheduler::{AdmissionPolicy, CancelHandle, Scheduler};
+pub use spec::SpecRound;
 pub use stream::{ChannelSink, FinishReason, FnSink, StopCondition, StreamEvent, TokenSink};
 
 use std::time::Duration;
@@ -135,6 +143,11 @@ pub struct ServeOpts {
     pub prefix_cache: bool,
     /// Unique-page byte budget of the prefix cache (LRU eviction past it).
     pub prefix_cache_bytes: usize,
+    /// Self-speculative decoding: draft tokens proposed per decode round
+    /// (0 = off).  Takes effect only once a draft model is attached via
+    /// [`Scheduler::with_draft`]; completions are bit-identical to plain
+    /// decoding either way — speculation is a pure throughput knob.
+    pub spec: usize,
 }
 
 impl Default for ServeOpts {
@@ -145,6 +158,7 @@ impl Default for ServeOpts {
             policy: AdmissionPolicy::Fcfs,
             prefix_cache: false,
             prefix_cache_bytes: 32 << 20,
+            spec: 0,
         }
     }
 }
@@ -167,13 +181,30 @@ pub struct ServeStats {
     pub generated_tokens: usize,
     /// Tokens sampled in decode rounds only (excludes prefill samples).
     pub decoded_tokens: usize,
-    /// Decode rounds executed (each round advances every active sequence).
+    /// Decode rounds executed (each round advances every active sequence —
+    /// by one token plain, by up to `spec + 1` tokens speculative).
     pub decode_steps: usize,
+    /// Draft-model tokens proposed across all speculative rounds.
+    pub draft_tokens: usize,
+    /// Draft tokens the target's sampler accepted.
+    pub spec_matched: usize,
+    /// Chunked verify forwards executed (one per slot per speculative
+    /// round that had draft budget).
+    pub verify_chunks: usize,
     pub prefill_time: Duration,
     pub decode_time: Duration,
 }
 
 impl ServeStats {
+    /// Fraction of proposed draft tokens the target accepted.
+    pub fn spec_accept_rate(&self) -> f64 {
+        if self.draft_tokens == 0 {
+            0.0
+        } else {
+            self.spec_matched as f64 / self.draft_tokens as f64
+        }
+    }
+
     /// Tokens produced per second in the decode phase (excludes the sample
     /// taken at prefill time, which is accounted under prefill).
     pub fn decode_tok_per_sec(&self) -> f64 {
@@ -185,11 +216,35 @@ impl ServeStats {
         }
     }
 
+    /// Mean tokens committed per chunked verify (each verify commits its
+    /// matched drafts plus one correction/bonus sample; plain-fallback
+    /// rounds are excluded).  0 when speculation never engaged.
+    pub fn spec_tokens_per_verify(&self) -> f64 {
+        if self.verify_chunks == 0 {
+            0.0
+        } else {
+            (self.spec_matched + self.verify_chunks) as f64 / self.verify_chunks as f64
+        }
+    }
+
     pub fn summary(&self) -> String {
+        let spec = if self.verify_chunks > 0 {
+            format!(
+                "; speculative: {}/{} draft tokens accepted ({:.0}%), \
+                 {:.2} tokens/verify over {} verify chunks",
+                self.spec_matched,
+                self.draft_tokens,
+                100.0 * self.spec_accept_rate(),
+                self.spec_tokens_per_verify(),
+                self.verify_chunks,
+            )
+        } else {
+            String::new()
+        };
         format!(
             "served {} requests ({} rejected, {} cancelled): {} prompt tokens \
              prefilled (+{} reused from prefix cache) in {:.1?}; \
-             {} tokens generated over {} decode rounds in {:.1?} ({:.1} tok/s decode)",
+             {} tokens generated over {} decode rounds in {:.1?} ({:.1} tok/s decode){spec}",
             self.requests,
             self.rejected,
             self.cancelled,

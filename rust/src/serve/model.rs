@@ -63,6 +63,18 @@ impl PackedModel {
         &self.fp.config
     }
 
+    /// Materialize a **draft model** for self-speculative decoding: the
+    /// same base FP weights re-quantized under a (typically much more
+    /// aggressive) allocation.  Ultra-low-bit packing makes the draft
+    /// nearly free next to the target — a 1-bit draft of a 2.x-bit target
+    /// adds under half the target's packed bytes — and because it shares
+    /// the base weights its proposals track the target closely, which is
+    /// what speculative acceptance rates live on.  Attach it with
+    /// [`crate::serve::Scheduler::with_draft`].
+    pub fn draft(&self, alloc: &BitAllocation) -> crate::Result<PackedModel> {
+        PackedModel::from_allocation(self.fp.clone(), alloc)
+    }
+
     /// Number of linears held in packed form.
     pub fn n_packed(&self) -> usize {
         self.packed.len()
@@ -303,6 +315,46 @@ mod tests {
         assert_eq!(done.len(), 3);
         assert!(done.iter().all(|c| c.generated.len() == 4));
         assert_eq!(stats.generated_tokens, 12);
+    }
+
+    #[test]
+    fn draft_model_is_smaller_and_speculation_is_transparent() {
+        // the self-speculative pair: a 1-bit draft of the 2-bit target is
+        // materially smaller, and serving with it attached changes nothing
+        // about the completions — only how many tokens each round commits
+        let (pm, _) = packed_pair();
+        let draft = pm.draft(&BitAllocation::uniform(QuantScheme::new(1, 32))).unwrap();
+        assert!(
+            draft.packed_bytes() < pm.packed_bytes(),
+            "1-bit draft ({} B) must undercut the 2-bit target ({} B)",
+            draft.packed_bytes(),
+            pm.packed_bytes()
+        );
+        let vocab = pm.config().vocab;
+        let run = |spec: usize| {
+            let opts = ServeOpts { max_batch: 2, seed: 6, spec, ..Default::default() };
+            let mut s = Server::new(&pm, opts).with_draft(&draft);
+            let mut rng = Pcg64::new(4);
+            for i in 0..3 {
+                s.submit(Request::new(
+                    i,
+                    (0..5).map(|_| rng.below(vocab) as i32).collect(),
+                    6,
+                    Sampler::Greedy,
+                ));
+            }
+            let (done, stats) = s.run();
+            (done.into_iter().map(|c| c.generated).collect::<Vec<_>>(), stats)
+        };
+        let (plain, plain_stats) = run(0);
+        let (specd, spec_stats) = run(3);
+        assert_eq!(plain, specd, "speculation changed packed-path completions");
+        assert_eq!(plain_stats.verify_chunks, 0, "spec=0 must not verify");
+        assert!(spec_stats.verify_chunks > 0, "spec=3 must run chunked verifies");
+        assert_eq!(
+            plain_stats.generated_tokens, spec_stats.generated_tokens,
+            "token accounting must agree across modes"
+        );
     }
 
     #[test]

@@ -29,6 +29,7 @@ use std::time::{Duration, Instant};
 use crate::model::native::{self, DecoderParams, KvCache};
 use crate::serve::metrics::ServeMetrics;
 use crate::serve::prefix::PrefixCache;
+use crate::serve::spec::{self, SpecRound};
 use crate::serve::stream::{FinishReason, StopCondition};
 use crate::serve::{Completion, Request, ServeOpts, ServeStats};
 use crate::util::pool;
@@ -149,6 +150,13 @@ struct Slot {
     /// Prompt tokens reused from the prefix cache (trie hit) or from a
     /// same-round neighbor's cache (intra-round chaining) — not prefilled.
     reused: usize,
+    /// Draft-model KV cache (speculative decoding only); caught up lazily
+    /// on the slot's first speculative round, rolled back with the target
+    /// cache after each verify.
+    draft_cache: Option<KvCache>,
+    /// This round's speculation outcome, drained into stats/metrics at the
+    /// round boundary (`None` on plain decode rounds).
+    spec_round: Option<SpecRound>,
     /// Set when a stop condition fired; retired at the round boundary.
     finish: Option<FinishReason>,
     submitted_at: Instant,
@@ -192,6 +200,9 @@ pub struct Scheduler<'a, P: DecoderParams + ?Sized> {
     cancel: CancelHandle,
     prefix: Option<PrefixCache>,
     metrics: ServeMetrics,
+    /// Draft model for self-speculative decoding ([`Scheduler::with_draft`];
+    /// active when `opts.spec > 0`).
+    draft: Option<&'a dyn DecoderParams>,
 }
 
 impl<'a, P: DecoderParams + ?Sized> Scheduler<'a, P> {
@@ -206,7 +217,23 @@ impl<'a, P: DecoderParams + ?Sized> Scheduler<'a, P> {
             cancel: CancelHandle::default(),
             prefix: opts.prefix_cache.then(|| PrefixCache::new(opts.prefix_cache_bytes)),
             metrics: ServeMetrics::new(),
+            draft: None,
         }
+    }
+
+    /// Attach a draft model for self-speculative decoding (typically the
+    /// same base weights packed at an aggressive low-bit allocation —
+    /// [`crate::serve::PackedModel::draft`]).  Speculation runs once
+    /// `ServeOpts::spec > 0` *and* a draft is attached; completions stay
+    /// bit-identical to plain decoding either way, so this is purely a
+    /// throughput knob.  The draft must share the target's vocabulary and
+    /// context length (its depth/width may differ).
+    pub fn with_draft(mut self, draft: &'a dyn DecoderParams) -> Scheduler<'a, P> {
+        let (t, d) = (self.params.config(), draft.config());
+        assert_eq!(t.vocab, d.vocab, "draft/target vocab mismatch");
+        assert_eq!(t.max_seq, d.max_seq, "draft/target context-length mismatch");
+        self.draft = Some(draft);
+        self
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -306,6 +333,11 @@ impl<'a, P: DecoderParams + ?Sized> Scheduler<'a, P> {
                     last: 0,
                     rng,
                     reused: 0,
+                    draft_cache: match self.draft {
+                        Some(d) if self.opts.spec > 0 => Some(KvCache::new(d.config())),
+                        _ => None,
+                    },
+                    spec_round: None,
                     finish: None,
                     submitted_at: q.submitted_at,
                     last_token_at: now,
@@ -413,7 +445,11 @@ impl<'a, P: DecoderParams + ?Sized> Scheduler<'a, P> {
                 let mut seen: HashSet<usize> = HashSet::new();
                 let mut live = 0usize;
                 for s in &active {
-                    for (ptr, b) in s.cache.page_refs() {
+                    // draft KV pages are full-width f32 like the target's
+                    // (only the draft's *weights* are cheap), so they count
+                    // toward residency on the same footing
+                    let draft_pages = s.draft_cache.iter().flat_map(|dc| dc.page_refs());
+                    for (ptr, b) in s.cache.page_refs().chain(draft_pages) {
                         if seen.insert(ptr) {
                             live += b;
                         }
@@ -422,7 +458,12 @@ impl<'a, P: DecoderParams + ?Sized> Scheduler<'a, P> {
                 if let Some(pc) = prefix.as_ref() {
                     live += pc.add_unique_bytes(&mut seen);
                 }
-                self.metrics.record_kv_bytes(live, active.len() * KvCache::eager_bytes(cfg));
+                let draft_eager = match self.draft {
+                    Some(d) if self.opts.spec > 0 => KvCache::eager_bytes(d.config()),
+                    _ => 0,
+                };
+                let eager_per_slot = KvCache::eager_bytes(cfg) + draft_eager;
+                self.metrics.record_kv_bytes(live, active.len() * eager_per_slot);
             }
 
             // -- retire finished sequences (frees admission slots) -----------
@@ -469,23 +510,49 @@ impl<'a, P: DecoderParams + ?Sized> Scheduler<'a, P> {
                 continue; // admit more, or fall out when the queue is dry
             }
 
-            // -- one decode round: every active sequence advances one token --
+            // -- one decode round: every active sequence advances — one token
+            //    plain, up to spec+1 tokens speculative (draft + chunked
+            //    verify; bit-identical completions either way) ---------------
             let t0 = Instant::now();
             let threads = pool::num_threads().min(active.len());
+            let (spec_k, draft) = (self.opts.spec, self.draft);
             pool::parallel_chunks_mut(&mut active, 1, threads, |_i, slot| {
                 let s = &mut slot[0];
-                let logits = native::decode_step(params, &mut s.cache, s.last);
-                s.push_token(&logits);
+                match draft {
+                    Some(d) if spec_k > 0 => advance_speculative(params, d, s, spec_k),
+                    _ => {
+                        let logits = native::decode_step(params, &mut s.cache, s.last);
+                        s.push_token(&logits);
+                    }
+                }
             });
             stats.decode_time += t0.elapsed();
             stats.decode_steps += 1;
-            stats.decoded_tokens += active.len();
-            stats.generated_tokens += active.len();
+            let mut round_tokens = 0usize;
             for s in &mut active {
+                match s.spec_round.take() {
+                    Some(r) => {
+                        // every round commits its matched drafts plus one
+                        // correction/bonus sample — ServeStats' and
+                        // ServeMetrics' tokens/verify derivations both
+                        // lean on this coupling
+                        debug_assert_eq!(r.committed, r.matched + 1);
+                        round_tokens += r.committed;
+                        stats.draft_tokens += r.drafted;
+                        stats.spec_matched += r.matched;
+                        if r.drafted > 0 {
+                            stats.verify_chunks += 1;
+                            self.metrics.record_spec_round(&r);
+                        }
+                    }
+                    None => round_tokens += 1,
+                }
                 if let Some(d) = s.itl_pending.take() {
                     self.metrics.inter_token.record(d);
                 }
             }
+            stats.decoded_tokens += round_tokens;
+            stats.generated_tokens += round_tokens;
         }
 
         // lookups/hits/hit_tokens accumulate in the prefill phase (they
@@ -507,6 +574,86 @@ impl<'a, P: DecoderParams + ?Sized> Scheduler<'a, P> {
 /// Length of the shared leading run of two token sequences.
 fn common_prefix(a: &[i32], b: &[i32]) -> usize {
     a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+/// One speculative decode round for one slot: the draft proposes up to `k`
+/// tokens, the target verifies the pending token plus every draft in a
+/// single chunked forward ([`native::forward_chunk`] — one weight pass for
+/// the whole chunk), and the verify logits are re-sampled **sequentially**
+/// with the request's own sampler and RNG stream.  Tokens commit while they
+/// agree with the draft; the first disagreement's sample is itself the
+/// token plain decoding would have emitted, so completions — greedy or
+/// stochastic — are bit-identical to speculation off (row `i` of the chunk
+/// logits is bit-identical to the i-th sequential `decode_step`, and the
+/// RNG is consumed once per committed token in both worlds).  The rejected
+/// suffix rolls back through [`KvCache::truncate`] on both caches.
+fn advance_speculative<P: DecoderParams + ?Sized>(
+    params: &P,
+    draft: &dyn DecoderParams,
+    s: &mut Slot,
+    k: usize,
+) {
+    let n0 = s.cache.len();
+    let remaining_new = s.req.max_new - s.generated.len();
+    let k = spec::clamp_k(k, remaining_new, s.cache.remaining());
+    if k == 0 {
+        // no draft budget (last token of the request, or context exhausted
+        // past the pending token): plain decode step
+        let logits = native::decode_step(params, &mut s.cache, s.last);
+        s.push_token(&logits);
+        s.spec_round = Some(SpecRound { drafted: 0, matched: 0, committed: 1 });
+        return;
+    }
+
+    // 1. the draft greedily proposes k tokens continuing prompt + generated,
+    //    catching its cache up first.  Only the gap past the draft cache is
+    //    materialized: the whole prompt on the slot's first speculative
+    //    round, 1-2 tokens on steady-state rounds — never the full stream.
+    let dc_len = s.draft_cache.as_ref().map_or(0, KvCache::len);
+    let prompt = &s.req.prompt;
+    let gap: Vec<i32> = if dc_len < prompt.len() {
+        prompt[dc_len..].iter().chain(s.generated.iter()).copied().collect()
+    } else {
+        s.generated[dc_len - prompt.len()..].to_vec()
+    };
+    let dc = s.draft_cache.as_mut().expect("speculative slot has a draft cache");
+    let drafts = spec::propose(draft, dc, &gap, k);
+
+    // 2. the target verifies pending token + drafts in one chunked forward
+    let mut chunk = vec![s.last];
+    chunk.extend(&drafts);
+    let logits = native::forward_chunk(params, &mut s.cache, &chunk);
+
+    // 3. sequential acceptance through the slot's sampler/RNG
+    let prev_token_at = s.last_token_at;
+    let mut committed_n = 0;
+    let mut matched = 0;
+    for i in 0..=k {
+        s.push_token(logits.row(i));
+        committed_n += 1;
+        if s.finish.is_some() || s.generated.len() >= s.req.max_new {
+            break;
+        }
+        if i < k {
+            if s.last != drafts[i] {
+                break;
+            }
+            matched += 1;
+        }
+    }
+    // telemetry: the intra-chunk gaps push_token measured are meaningless
+    // (every committed token materialized in the one verify forward) —
+    // report the round's wall-clock gap amortized per committed token
+    s.itl_pending = Some(s.last_token_at.duration_since(prev_token_at) / committed_n as u32);
+
+    // 4. roll back the rejected suffix: the target keeps exactly the fed
+    //    prefix backing the committed tokens, the draft whatever prefix of
+    //    it the drafting pass already holds
+    s.cache.truncate(n0 + committed_n);
+    let dc = s.draft_cache.as_mut().expect("speculative slot has a draft cache");
+    let keep = dc.len().min(n0 + committed_n);
+    dc.truncate(keep);
+    s.spec_round = Some(SpecRound { drafted: k, matched, committed: committed_n });
 }
 
 /// Finish a request that never reached a decode slot (rejection,
@@ -900,6 +1047,154 @@ mod tests {
         ] {
             assert_eq!(reference, run(mb, pol, pc), "max_batch {mb}, {pol:?}, prefix {pc}");
         }
+    }
+
+    // -- speculative decoding (tentpole) ------------------------------------
+
+    /// Run `mixed_specs` traffic through a scheduler, optionally with a
+    /// draft model attached and speculation on.
+    fn run_mixed(
+        w: &Weights,
+        draft: Option<&dyn DecoderParams>,
+        spec: usize,
+        max_batch: usize,
+        policy: AdmissionPolicy,
+        prefix_cache: bool,
+    ) -> (Vec<(usize, Vec<i32>, FinishReason)>, crate::serve::ServeStats) {
+        let mut s = Scheduler::new(
+            w,
+            ServeOpts { max_batch, policy, prefix_cache, seed: 42, spec, ..Default::default() },
+        );
+        if let Some(d) = draft {
+            s = s.with_draft(d);
+        }
+        for (id, prompt, max_new) in mixed_specs(w.config.vocab) {
+            let sampler = if id % 2 == 0 {
+                Sampler::Greedy
+            } else {
+                Sampler::TopK { k: 4, temperature: 0.9 }
+            };
+            let mut r = Request::new(id, prompt, max_new, sampler);
+            if id == 3 {
+                r = r.with_stop(vec![11]);
+            }
+            if id == 5 {
+                r = r.with_deadline_ms(1000).with_priority(1);
+            }
+            s.submit(r);
+        }
+        let (done, stats) = s.run();
+        (done.into_iter().map(|c| (c.id, c.generated, c.finish)).collect(), stats)
+    }
+
+    #[test]
+    fn speculative_completions_bit_identical_across_matrix() {
+        // THE tentpole invariant: speculation is a pure perf optimization —
+        // completions (greedy AND stochastic, with stop tokens, deadlines,
+        // priorities in the mix) are bit-identical to speculation off across
+        // batch size x admission policy x prefix cache, even under an
+        // adversarial draft trained on nothing the target agrees with.
+        let w = test_weights();
+        let bad_draft = Weights::random(OptConfig::test_config(), 77);
+        let good_draft = test_weights(); // same seed: agrees under greedy
+        let reference = run_mixed(&w, None, 0, 1, AdmissionPolicy::Fcfs, false).0;
+        for draft in [&bad_draft, &good_draft] {
+            for spec in [1usize, 3] {
+                for (mb, pol, pc) in [
+                    (1, AdmissionPolicy::Fcfs, false),
+                    (4, AdmissionPolicy::Fcfs, true),
+                    (4, AdmissionPolicy::ShortestPrompt, false),
+                    (4, AdmissionPolicy::Deadline, true),
+                ] {
+                    let (done, stats) = run_mixed(&w, Some(draft), spec, mb, pol, pc);
+                    assert_eq!(
+                        reference, done,
+                        "spec {spec}, max_batch {mb}, {pol:?}, prefix {pc} diverged"
+                    );
+                    assert!(stats.verify_chunks > 0, "speculation must actually run");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn perfect_draft_reaches_full_acceptance() {
+        // self-speculation's best case: the draft IS the target, so under
+        // greedy sampling every proposal matches and each verify commits
+        // k+1 tokens — rounds collapse accordingly
+        let w = test_weights();
+        let draft = test_weights();
+        let submit = |s: &mut Scheduler<'_, Weights>| {
+            for i in 0..3 {
+                s.submit(Request::new(i, vec![1, 2 + i as i32, 3], 9, Sampler::Greedy));
+            }
+        };
+        let mut plain = Scheduler::new(&w, ServeOpts { max_batch: 3, ..Default::default() });
+        submit(&mut plain);
+        let (plain_done, plain_stats) = plain.run();
+
+        let opts = ServeOpts { max_batch: 3, spec: 3, ..Default::default() };
+        let mut spec = Scheduler::new(&w, opts).with_draft(&draft);
+        submit(&mut spec);
+        let (spec_done, spec_stats) = spec.run();
+
+        assert_eq!(plain_done, spec_done);
+        assert_eq!(
+            spec_stats.spec_matched, spec_stats.draft_tokens,
+            "a perfect draft must never be rejected"
+        );
+        assert!((spec_stats.spec_accept_rate() - 1.0).abs() < 1e-12);
+        assert!(
+            spec_stats.decode_steps < plain_stats.decode_steps,
+            "full acceptance must collapse decode rounds ({} vs {})",
+            spec_stats.decode_steps,
+            plain_stats.decode_steps
+        );
+        assert_eq!(plain_stats.generated_tokens, spec_stats.generated_tokens);
+        assert_eq!(plain_stats.decoded_tokens, spec_stats.decoded_tokens);
+    }
+
+    #[test]
+    fn spec_opt_without_draft_decodes_plainly() {
+        // spec > 0 with no draft attached (or a draft with spec == 0) is
+        // plain decoding, not an error
+        let w = test_weights();
+        let draft = test_weights();
+        let run = |spec: usize, attach: bool| {
+            let mut s = Scheduler::new(&w, ServeOpts { spec, ..Default::default() });
+            if attach {
+                s = s.with_draft(&draft);
+            }
+            s.submit(Request::new(0, vec![4, 5, 6], 5, Sampler::Greedy));
+            s.run()
+        };
+        let (no_draft, stats) = run(4, false);
+        assert_eq!(stats.verify_chunks, 0);
+        let (with_draft_spec0, stats0) = run(0, true);
+        assert_eq!(stats0.verify_chunks, 0);
+        assert_eq!(no_draft[0].generated, with_draft_spec0[0].generated);
+    }
+
+    #[test]
+    fn spec_metrics_track_acceptance() {
+        let w = test_weights();
+        let draft = Weights::random(OptConfig::test_config(), 31);
+        let opts = ServeOpts { max_batch: 2, spec: 2, ..Default::default() };
+        let mut s = Scheduler::new(&w, opts).with_draft(&draft);
+        for i in 0..3 {
+            s.submit(Request::new(i, vec![7, 8, 9, i as i32], 6, Sampler::Greedy));
+        }
+        let (done, stats) = s.run();
+        assert_eq!(done.len(), 3);
+        let m = s.metrics();
+        assert_eq!(m.spec_accept_len.count() as usize, stats.verify_chunks);
+        assert!(m.spec_tokens_per_verify() >= 1.0, "every verify commits at least one token");
+        assert_eq!(m.spec_draft_tokens as usize, stats.draft_tokens);
+        let j = m.to_json();
+        let spec = j.get("speculative").unwrap();
+        assert_eq!(spec.get("verify_steps").unwrap().as_usize(), Some(stats.verify_chunks));
+        // committed tokens across verifies + plain fallback steps == decoded
+        assert!(m.spec_committed_tokens as usize <= stats.decoded_tokens);
     }
 
     // -- satellite: prefix-cache property test ------------------------------

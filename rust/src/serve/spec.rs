@@ -1,0 +1,136 @@
+//! Self-speculative decoding: a cheaper **draft model** (the same base
+//! weights quantized at an aggressive low-bit allocation — nearly free in
+//! memory next to the target, see [`crate::serve::PackedModel::draft`])
+//! proposes `k` tokens per decode round, and the target model verifies the
+//! whole proposal in **one chunked incremental forward**
+//! ([`crate::model::native::forward_chunk`]) instead of `k` sequential
+//! [`crate::model::native::decode_step`]s — amortizing every weight
+//! matrix's memory traffic `k`× per verify.
+//!
+//! This module owns the draft side: catching the draft's KV cache up to the
+//! committed token stream and greedily proposing the next `k` tokens.  The
+//! verify/accept/rollback half lives in the scheduler's decode round
+//! (`serve::scheduler`), because acceptance consumes the per-request
+//! sampler + RNG stream: tokens are re-sampled **sequentially** from the
+//! chunked verify logits and accepted while they agree with the draft, so
+//! the emitted stream — and the RNG stream behind it — is bit-identical to
+//! plain decoding for *every* sampler, not just greedy (the draft only
+//! controls how many tokens each round commits, never which).  Rejected
+//! suffixes roll back through the chunked KV cache's copy-on-write
+//! [`crate::model::native::KvCache::truncate`].
+
+use crate::model::native::{forward_cached, DecoderParams, KvCache};
+use crate::util::sampling::argmax;
+
+/// Per-round speculation telemetry for one slot, drained into
+/// [`crate::serve::ServeStats`] / [`crate::serve::ServeMetrics`] at the
+/// round boundary.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SpecRound {
+    /// Draft tokens proposed this round (0 when the round degenerated to a
+    /// plain decode step — no context or generation budget left to draft).
+    pub drafted: usize,
+    /// Leading draft tokens the target's sampler agreed with.
+    pub matched: usize,
+    /// Tokens actually committed to the completion this round (matched
+    /// tokens plus the correction/bonus sample; >= 1).
+    pub committed: usize,
+}
+
+/// Largest draft length a slot can absorb this round: each verify feeds
+/// `k + 1` positions (the pending token plus `k` drafts) and commits at
+/// most `k + 1` tokens, so `k` is bounded by the remaining generation
+/// budget minus the guaranteed sample and by the remaining KV context
+/// minus the pending token's position.
+pub fn clamp_k(k: usize, remaining_new: usize, remaining_ctx: usize) -> usize {
+    k.min(remaining_new.saturating_sub(1)).min(remaining_ctx.saturating_sub(1))
+}
+
+/// Greedily propose `k` draft tokens continuing the committed stream (the
+/// request's prompt plus everything sampled so far, whose last token is
+/// the pending one not yet fed to the target).
+///
+/// The draft cache holds K/V for a prefix of that stream; `gap` is the
+/// rest — tokens `cache.len()..` of it.  It is at least the pending token
+/// (typically 1-2 tokens on steady-state rounds) and the whole prompt on
+/// the slot's first speculative round, and is fed in one chunked catch-up
+/// forward.  Passing only the gap keeps steady-state rounds free of
+/// O(prompt + generated) stream copies.  On return the cache holds
+/// everything except the last draft (which stays pending exactly like the
+/// target's `last`); the scheduler truncates it back to the verified
+/// length after acceptance.
+pub fn propose<D: DecoderParams + ?Sized>(
+    draft: &D,
+    cache: &mut KvCache,
+    gap: &[i32],
+    k: usize,
+) -> Vec<i32> {
+    debug_assert!(k >= 1, "propose: k must be >= 1");
+    debug_assert!(!gap.is_empty(), "gap must include at least the pending token");
+    let mut drafts = Vec::with_capacity(k);
+    let mut logits = forward_cached(draft, cache, gap);
+    drafts.push(argmax(&logits) as i32);
+    while drafts.len() < k {
+        let pending = *drafts.last().expect("at least one draft");
+        logits = forward_cached(draft, cache, &[pending]);
+        drafts.push(argmax(&logits) as i32);
+    }
+    drafts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{OptConfig, Weights};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn propose_catches_up_and_leaves_last_draft_pending() {
+        let cfg = OptConfig::test_config();
+        let w = Weights::random(cfg.clone(), 4);
+        let mut rng = Pcg64::new(2);
+        let committed: Vec<i32> = (0..7).map(|_| rng.below(cfg.vocab) as i32).collect();
+        // cold cache: the catch-up gap is the whole committed stream
+        let mut cache = KvCache::new(&cfg);
+        let drafts = propose(&w, &mut cache, &committed, 4);
+        assert_eq!(drafts.len(), 4);
+        assert_eq!(cache.len(), committed.len() + 3, "last draft stays pending");
+        assert!(drafts.iter().all(|&t| (t as usize) < cfg.vocab));
+    }
+
+    #[test]
+    fn propose_equals_plain_greedy_continuation() {
+        // drafting IS greedy decoding on the draft model: proposing k tokens
+        // must equal k greedy decode steps from the same prefix, and a warm
+        // cache (partial catch-up) must not change the proposal
+        let cfg = OptConfig::test_config();
+        let w = Weights::random(cfg.clone(), 5);
+        let mut rng = Pcg64::new(3);
+        let committed: Vec<i32> = (0..6).map(|_| rng.below(cfg.vocab) as i32).collect();
+
+        let mut reference = Vec::new();
+        let mut cache = KvCache::new(&cfg);
+        let mut logits = crate::model::native::prefill(&w, &mut cache, &committed);
+        for _ in 0..3 {
+            let t = argmax(&logits) as i32;
+            reference.push(t);
+            logits = crate::model::native::decode_step(&w, &mut cache, t);
+        }
+
+        let mut cold = KvCache::new(&cfg);
+        assert_eq!(propose(&w, &mut cold, &committed, 3), reference);
+
+        let mut warm = KvCache::new(&cfg);
+        crate::model::native::prefill(&w, &mut warm, &committed[..4]);
+        assert_eq!(propose(&w, &mut warm, &committed[4..], 3), reference);
+    }
+
+    #[test]
+    fn clamp_k_honors_budgets() {
+        assert_eq!(clamp_k(4, 10, 10), 4);
+        assert_eq!(clamp_k(4, 3, 10), 2, "leave room for the guaranteed sample");
+        assert_eq!(clamp_k(4, 10, 2), 1, "leave room for the pending token");
+        assert_eq!(clamp_k(4, 1, 10), 0, "one token left: plain decode");
+        assert_eq!(clamp_k(4, 0, 0), 0);
+    }
+}
