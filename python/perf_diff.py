@@ -18,9 +18,18 @@ whose baseline mean is under ``MIN_BASELINE_S`` (default 200 µs) only
 ever warn.  Overrides: ``PERF_DIFF_THRESHOLD`` (fractional slowdown,
 default 0.20) and ``PERF_DIFF_MIN_BASELINE_S``.
 
-Usage: ``perf_diff.py <baseline-dir> <current-dir>`` — both directories
-are searched recursively (artifact downloads nest); a missing or empty
-baseline skips cleanly (first run on a fresh branch history).
+Usage: ``perf_diff.py <baseline-dir> <current-dir> [--history <dir>]`` —
+both directories are searched recursively (artifact downloads nest); a
+missing or empty baseline skips cleanly (first run on a fresh branch
+history).
+
+``--history`` points at the ``runs/`` tree of the rolling ``perf-history``
+branch (one subdirectory of BENCH_*.json per main run).  Each row's
+current mean is then also compared against the **best** mean over the
+last ``PERF_DIFF_HISTORY_RUNS`` (default 10) runs: a sequence of
+single-run slowdowns that each stay under the threshold still trips a
+``::warning::`` once the accumulated drift crosses it.  Drift checks are
+warn-only — they never fail the job.
 """
 
 import json
@@ -30,6 +39,7 @@ import sys
 
 THRESHOLD = float(os.environ.get("PERF_DIFF_THRESHOLD", "0.20"))
 MIN_BASELINE_S = float(os.environ.get("PERF_DIFF_MIN_BASELINE_S", "200e-6"))
+HISTORY_RUNS = int(os.environ.get("PERF_DIFF_HISTORY_RUNS", "10"))
 
 
 def natural_key(path):
@@ -66,15 +76,77 @@ def load_suites(root):
     return suites
 
 
+def load_history(root):
+    """suite -> label -> [mean_s, ...] oldest-to-newest over the last
+    ``HISTORY_RUNS`` run subdirectories of ``root`` (natural-sorted, so
+    ``runs/12-1`` is newer than ``runs/9-1``)."""
+    history = {}
+    if not os.path.isdir(root):
+        return history
+    run_dirs = sorted(
+        (d for d in os.listdir(root) if os.path.isdir(os.path.join(root, d))),
+        key=natural_key,
+    )
+    for d in run_dirs[-HISTORY_RUNS:]:
+        for suite, rows in load_suites(os.path.join(root, d)).items():
+            per_suite = history.setdefault(suite, {})
+            for label, mean_s in rows:
+                per_suite.setdefault(label, []).append(mean_s)
+    return history
+
+
+def drift_report(history, current):
+    """Warn (never fail) on rows whose current mean has drifted past the
+    threshold over the *best* mean in the recent history window — the slow
+    regressions single-run diffs can't see.  Returns the flagged rows."""
+    drifted = []
+    for suite, rows in sorted(current.items()):
+        hist = history.get(suite, {})
+        for label, mean_s in rows:
+            means = [m for m in hist.get(label, []) if m > 0.0]
+            if len(means) < 2:
+                continue  # no window to drift across
+            best = min(means)
+            if best < MIN_BASELINE_S:
+                continue  # noise floor: same guard as the single-run gate
+            ratio = mean_s / best
+            if ratio > 1.0 + THRESHOLD:
+                print(
+                    f"::warning::perf drift over last {len(means)} runs: "
+                    f"{suite}/{label}: best {best * 1e3:.3f} ms -> "
+                    f"{mean_s * 1e3:.3f} ms ({ratio:.2f}x)"
+                )
+                drifted.append(f"{suite}/{label}")
+    if drifted:
+        print(f"perf_diff: {len(drifted)} slow drift(s) flagged (warn-only)")
+    else:
+        print("perf_diff: no slow drifts against the history window")
+    return drifted
+
+
+USAGE = "usage: perf_diff.py <baseline-dir> <current-dir> [--history <dir>]"
+
+
 def main(argv):
-    if len(argv) != 3:
-        print("usage: perf_diff.py <baseline-dir> <current-dir>", file=sys.stderr)
+    args = list(argv[1:])
+    history_dir = None
+    if "--history" in args:
+        i = args.index("--history")
+        if i + 1 >= len(args):
+            print(USAGE, file=sys.stderr)
+            return 2
+        history_dir = args[i + 1]
+        del args[i : i + 2]
+    if len(args) != 2:
+        print(USAGE, file=sys.stderr)
         return 2
-    baseline = load_suites(argv[1])
-    current = load_suites(argv[2])
+    baseline = load_suites(args[0])
+    current = load_suites(args[1])
     if not current:
-        print(f"::error::perf_diff: no BENCH_*.json found under {argv[2]}")
+        print(f"::error::perf_diff: no BENCH_*.json found under {args[1]}")
         return 1
+    if history_dir is not None:
+        drift_report(load_history(history_dir), current)
     if not baseline:
         print("perf_diff: no baseline trajectories (first run?); nothing to compare")
         return 0

@@ -80,6 +80,95 @@ def test_threshold_env_override(tmp_path, monkeypatch):
     assert fresh.main(["perf_diff.py", str(tmp_path / "base"), str(tmp_path / "cur")]) == 0
 
 
+def write_history(root, runs):
+    """runs: [(dirname, [(label, mean_s)])] — one BENCH dir per main run."""
+    for name, rows in runs:
+        write_suite(root / name, "s", rows)
+
+
+def run_with_history(tmp_path, base_rows, cur_rows, history_runs):
+    write_suite(tmp_path / "base", "s", base_rows)
+    write_suite(tmp_path / "cur", "s", cur_rows)
+    write_history(tmp_path / "hist", history_runs)
+    return perf_diff.main(
+        [
+            "perf_diff.py",
+            str(tmp_path / "base"),
+            str(tmp_path / "cur"),
+            "--history",
+            str(tmp_path / "hist"),
+        ]
+    )
+
+
+def test_history_drift_warns_but_passes(tmp_path, capsys):
+    # each step is under the 20% gate vs its immediate baseline, but the
+    # accumulated drift over the window (1.0 -> 1.4 ms) crosses it
+    history = [(f"runs-{i}-1", [("head", (1.0 + 0.1 * i) * 1e-3)]) for i in range(4)]
+    rc = run_with_history(
+        tmp_path, [("head", 1.3e-3)], [("head", 1.4e-3)], history
+    )
+    out = capsys.readouterr().out
+    assert rc == 0, "drift is warn-only"
+    assert "perf drift over last 4 runs" in out
+    assert "s/head" in out
+
+
+def test_history_no_drift_stays_quiet(tmp_path, capsys):
+    history = [(f"runs-{i}-1", [("head", 1e-3)]) for i in range(3)]
+    rc = run_with_history(tmp_path, [("head", 1e-3)], [("head", 1.05e-3)], history)
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "perf drift" not in out
+    assert "no slow drifts" in out
+
+
+def test_history_window_bounds_runs(tmp_path, capsys, monkeypatch):
+    # the fast old run falls outside the window, so no drift is flagged
+    monkeypatch.setattr(perf_diff, "HISTORY_RUNS", 2)
+    history = [
+        ("runs-1-1", [("head", 1e-3)]),  # ancient, fast — must be ignored
+        ("runs-2-1", [("head", 1.4e-3)]),
+        ("runs-3-1", [("head", 1.45e-3)]),
+    ]
+    rc = run_with_history(tmp_path, [("head", 1.4e-3)], [("head", 1.5e-3)], history)
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "perf drift" not in out
+
+
+def test_history_sub_noise_floor_ignored(tmp_path, capsys):
+    # microsecond-scale rows never flag drift (same guard as the gate)
+    history = [(f"runs-{i}-1", [("head", 1e-5)]) for i in range(3)]
+    rc = run_with_history(tmp_path, [("head", 9e-5)], [("head", 9e-5)], history)
+    assert rc == 0
+    assert "perf drift" not in capsys.readouterr().out
+
+
+def test_history_missing_dir_is_fine(tmp_path):
+    write_suite(tmp_path / "base", "s", [("head", 1e-3)])
+    write_suite(tmp_path / "cur", "s", [("head", 1e-3)])
+    rc = perf_diff.main(
+        [
+            "perf_diff.py",
+            str(tmp_path / "base"),
+            str(tmp_path / "cur"),
+            "--history",
+            str(tmp_path / "nope"),
+        ]
+    )
+    assert rc == 0
+
+
+def test_history_flag_requires_value(tmp_path):
+    write_suite(tmp_path / "base", "s", [("head", 1e-3)])
+    write_suite(tmp_path / "cur", "s", [("head", 1e-3)])
+    rc = perf_diff.main(
+        ["perf_diff.py", str(tmp_path / "base"), str(tmp_path / "cur"), "--history"]
+    )
+    assert rc == 2
+
+
 def test_highest_attempt_artifact_wins(tmp_path):
     # a workflow re-run leaves bench-trajectory-<run>-<attempt> dirs side by
     # side; the diff must read the latest attempt's numbers (natural order:

@@ -1,0 +1,146 @@
+//! Kernel-layer microbenchmarks for the packed serving path:
+//!
+//! 1. **dequant bandwidth** — `PackedTensor::dequant_row_into` at the
+//!    scalar tier vs the dispatched SIMD tier (AVX2 unpacks 8 codes per
+//!    instruction; SSE2 dequant stays scalar by design), reported in GB/s
+//!    of produced f32s;
+//! 2. **GEMV vs cache-blocked GEMM** — `linear_batch` over k ∈ {1, 4, 16}
+//!    activation rows against k independent fused `linear` GEMVs.  The
+//!    blocked path dequantizes every ROW_TILE of weight rows once for all
+//!    k rows, so it must win strictly for k > 1 at every dispatch level;
+//!
+//! both swept over bits ∈ {2, 3, 4} × group ∈ {64, 128} — the serving
+//! schemes.  Every A/B pair is bit-identical by construction (pinned in
+//! `quant::packed`'s tests); this bench re-asserts the k-row identity and
+//! measures only speed.
+//!
+//! Runs on synthetic random weights — no artifacts needed.  `--smoke` (or
+//! env `KERNEL_MICROBENCH_SMOKE=1`) shrinks the matrix and the per-case
+//! budget; the strict-win assertions still run, so CI catches a SIMD or
+//! blocking regression even in smoke.  Writes `BENCH_kernel_microbench.json`
+//! (the perf trajectory CI archives) and fails loudly if it cannot.
+
+use invarexplore::quant::{self, simd, PackedTensor, QuantScheme, SimdLevel};
+use invarexplore::tensor::Tensor;
+use invarexplore::util::bench::{self, BenchSuite};
+use invarexplore::util::rng::Pcg64;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("KERNEL_MICROBENCH_SMOKE").as_deref() == Ok("1");
+    // rows = packed output rows, cols = reduction dim (multiple of every
+    // swept group so each combo tiles evenly; ragged tails are covered by
+    // the exhaustive identity tests, not re-measured here)
+    let (rows, cols) = if smoke { (128, 256) } else { (512, 1024) };
+    let hw = simd::detect();
+    println!(
+        "== kernel_microbench: [{rows}x{cols}] weights, detected {hw:?}{} ==",
+        if smoke { ", SMOKE" } else { "" }
+    );
+    if smoke {
+        bench::smoke_budget_ms(30);
+    }
+    let mut suite = BenchSuite::new("kernel_microbench");
+    let mut rng = Pcg64::new(11);
+
+    for &bits in &[2usize, 3, 4] {
+        for &group in &[64usize, 128] {
+            let w = Tensor::from_vec(
+                rows,
+                cols,
+                (0..rows * cols).map(|_| rng.normal() as f32).collect(),
+            );
+            let p = PackedTensor::pack(&quant::quantize(&w, QuantScheme::new(bits, group)));
+
+            // ---- dequant bandwidth: scalar tier vs dispatched tier --------
+            let mut buf = vec![0.0f32; rows * cols];
+            simd::set_simd_level(SimdLevel::Scalar);
+            let scalar = suite.bench(&format!("dequant {bits}x{group} scalar"), || {
+                for r in 0..rows {
+                    p.dequant_row_into(r, &mut buf[r * cols..(r + 1) * cols]);
+                }
+                std::hint::black_box(&buf);
+            });
+            simd::set_simd_level(hw);
+            let dispatched = suite.bench(&format!("dequant {bits}x{group} simd"), || {
+                for r in 0..rows {
+                    p.dequant_row_into(r, &mut buf[r * cols..(r + 1) * cols]);
+                }
+                std::hint::black_box(&buf);
+            });
+            let gb = (rows * cols * 4) as f64 / 1e9;
+            println!(
+                "  dequant {bits}x{group}: scalar {:.2} GB/s -> {hw:?} {:.2} GB/s ({:.2}x)",
+                gb / scalar.mean.as_secs_f64().max(1e-12),
+                gb / dispatched.mean.as_secs_f64().max(1e-12),
+                scalar.mean.as_secs_f64() / dispatched.mean.as_secs_f64().max(1e-12),
+            );
+            // AVX2 vectorizes every serving width (bits <= 4 pack >= 8
+            // codes/word); SSE2 dequant is scalar by design, nothing to pin
+            if hw == SimdLevel::Avx2 {
+                assert!(
+                    dispatched.mean < scalar.mean,
+                    "AVX2 dequant {bits}x{group} not strictly faster: {:?} vs scalar {:?}",
+                    dispatched.mean,
+                    scalar.mean
+                );
+            }
+
+            // ---- GEMV vs cache-blocked multi-row GEMM ---------------------
+            let bias = vec![0.0f32; rows];
+            for &k in &[1usize, 4, 16] {
+                let x = Tensor::from_vec(
+                    k,
+                    cols,
+                    (0..k * cols).map(|_| rng.normal() as f32).collect(),
+                );
+                let row_views: Vec<Tensor> = (0..k)
+                    .map(|r| {
+                        Tensor::from_vec(1, cols, x.data[r * cols..(r + 1) * cols].to_vec())
+                    })
+                    .collect();
+                let blocked = suite.bench(&format!("gemm {bits}x{group} k={k} blocked"), || {
+                    std::hint::black_box(p.linear_batch(&x, &bias));
+                });
+                let gemvs = suite.bench(&format!("gemm {bits}x{group} k={k} as GEMVs"), || {
+                    for row in &row_views {
+                        std::hint::black_box(p.linear(row, &bias));
+                    }
+                });
+                // identity: the blocked call == k row-at-a-time calls
+                let batched = p.linear_batch(&x, &bias);
+                for (r, row) in row_views.iter().enumerate() {
+                    let single = p.linear(row, &bias);
+                    assert_eq!(
+                        batched.data[r * rows..(r + 1) * rows],
+                        single.data[..],
+                        "gemm {bits}x{group} k={k}: blocked row {r} diverged from GEMV"
+                    );
+                }
+                println!(
+                    "  gemm {bits}x{group} k={k}: blocked {:?} vs {k} GEMVs {:?} ({:.2}x)",
+                    blocked.mean,
+                    gemvs.mean,
+                    gemvs.mean.as_secs_f64() / blocked.mean.as_secs_f64().max(1e-12),
+                );
+                // for k > 1 the blocked path dequantizes each weight tile
+                // once instead of k times — a level-independent strict win
+                if k > 1 {
+                    assert!(
+                        blocked.mean < gemvs.mean,
+                        "blocked GEMM {bits}x{group} k={k} not strictly faster: \
+                         {:?} vs {:?}",
+                        blocked.mean,
+                        gemvs.mean
+                    );
+                }
+            }
+        }
+    }
+    simd::set_simd_level(hw);
+
+    let out = suite.write_json(std::path::Path::new(".")).expect("write BENCH json");
+    let len = std::fs::metadata(&out).map(|m| m.len()).unwrap_or(0);
+    assert!(len > 0, "BENCH json missing or empty at {}", out.display());
+    println!("perf trajectory written to {}", out.display());
+}

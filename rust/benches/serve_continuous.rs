@@ -21,6 +21,7 @@
 
 use std::time::Instant;
 
+use invarexplore::model::native::KvDtype;
 use invarexplore::model::{OptConfig, Weights};
 use invarexplore::serve::{Completion, Request, Scheduler, ServeOpts};
 use invarexplore::util::bench::{BenchSuite, Stats};
@@ -199,6 +200,51 @@ fn main() {
          for sequences shorter than max_seq"
     );
     println!("ok: completions batch-strategy-invariant; prefix + paged-KV invariants hold");
+
+    // ---- quantized KV: int8 pages under the same traffic ------------------
+    // Same requests, same scheduler, KV stored as int8.  No stop conditions,
+    // so every request still finishes at its max_new length; the page
+    // positions touched are identical to the f32 run and the live-KV peaks
+    // compare page sizes directly.
+    let mut int8 = Scheduler::new(
+        &w,
+        ServeOpts {
+            max_batch,
+            prefix_cache: true,
+            kv_dtype: KvDtype::Int8,
+            ..Default::default()
+        },
+    );
+    let t0 = Instant::now();
+    submit_all(&mut int8, &specs);
+    let (int8_done, _) = int8.run();
+    let int8_time = t0.elapsed();
+    let im = int8.metrics();
+    suite.record(
+        "continuous scheduler, int8 KV (per generated token)",
+        per_tok(int8_time, total_generated(&int8_done)),
+    );
+    assert_eq!(int8_done.len(), specs.len());
+    for (a, b) in int8_done.iter().zip(&cont_done) {
+        assert_eq!(
+            a.generated.len(),
+            b.generated.len(),
+            "request {}: int8 KV must still serve to the same length",
+            a.id
+        );
+    }
+    assert!(
+        cm.kv_live_bytes_peak as f64 >= 3.5 * im.kv_live_bytes_peak as f64,
+        "int8 live-KV peak {} B is not >=3.5x under the f32 peak {} B",
+        im.kv_live_bytes_peak,
+        cm.kv_live_bytes_peak
+    );
+    println!(
+        "kv residency (int8 pages): peak {} B vs f32 {} B ({:.2}x lower)",
+        im.kv_live_bytes_peak,
+        cm.kv_live_bytes_peak,
+        cm.kv_live_bytes_peak as f64 / im.kv_live_bytes_peak.max(1) as f64,
+    );
 
     let out = suite.write_json(std::path::Path::new(".")).expect("write BENCH json");
     println!("perf trajectory written to {}", out.display());

@@ -164,6 +164,37 @@ fn main() {
         let d = p_down.unpack();
         std::hint::black_box(ops::linear(&x, &d, &bias));
     });
+    // multi-row GEMM (the chunked-verify shape): one cache-blocked call that
+    // dequantizes each weight tile once for all k rows, vs k fused GEMVs
+    let k_rows = 4;
+    let xk = Tensor::from_vec(
+        k_rows,
+        cfg.d_ffn,
+        (0..k_rows * cfg.d_ffn).map(|_| rng.normal() as f32).collect(),
+    );
+    let row_views: Vec<Tensor> = (0..k_rows)
+        .map(|r| {
+            Tensor::from_vec(1, cfg.d_ffn, xk.data[r * cfg.d_ffn..(r + 1) * cfg.d_ffn].to_vec())
+        })
+        .collect();
+    suite.bench("blocked packed GEMM k=4 (down.w)", || {
+        std::hint::black_box(p_down.linear_batch(&xk, &bias));
+    });
+    suite.bench("4x fused packed GEMV (down.w)", || {
+        for row in &row_views {
+            std::hint::black_box(p_down.linear(row, &bias));
+        }
+    });
+    // pin: the blocked path is bit-identical to the row-at-a-time path
+    let batched = p_down.linear_batch(&xk, &bias);
+    for (r, row) in row_views.iter().enumerate() {
+        let single = p_down.linear(row, &bias);
+        assert_eq!(
+            batched.data[r * cfg.d_model..(r + 1) * cfg.d_model],
+            single.data[..],
+            "blocked GEMM row {r} diverged from the fused GEMV"
+        );
+    }
 
     // ---- decode: KV cache vs full-context re-forward ----------------------
     let (kv_toks, kv_rate) = kv_cache_decode(&dense, &prompt, gen);

@@ -27,7 +27,8 @@ common options: --model, --method, --scheme (e.g. 2x64), --steps, --seed,
 --batch (K-wide concurrent proposal rounds; 1 = exact sequential search),
 --alloc (mixed-precision allocation, e.g. 2x64,ffn_up=3x64,l0.q.w=4x128),
 --alloc-prob (probability a proposal is a budget-preserving bit swap),
---spec (self-speculative draft length for `serve`; env SERVE_SPEC)
+--spec (self-speculative draft length for `serve`; env SERVE_SPEC),
+--kv-dtype (KV-cache storage f32|int8|int4 for `serve`; env SERVE_KV_DTYPE)
 run `invarexplore <command> --help` for details.
 ";
 
@@ -54,6 +55,7 @@ fn common_spec() -> Vec<ArgSpec> {
         ArgSpec { name: "spec", help: "serve: draft tokens per speculative round (0 = off; default: $SERVE_SPEC or 0)", default: None, is_flag: false },
         ArgSpec { name: "draft-alloc", help: "serve: draft-model bit allocation (default: $SERVE_DRAFT_ALLOC, else the cheapest manifest preset under the target's budget)", default: None, is_flag: false },
         ArgSpec { name: "policy", help: "serve: admission policy fcfs|spf|edf (default: $SERVE_POLICY or fcfs)", default: None, is_flag: false },
+        ArgSpec { name: "kv-dtype", help: "serve: KV-cache storage f32|int8|int4 (default: $SERVE_KV_DTYPE or f32; f32 is bit-identical, int8/int4 trade a documented error bound for ~3.6x/~6.4x lower KV residency)", default: None, is_flag: false },
         ArgSpec { name: "sampler", help: "serve: decoding sampler greedy|temp:<t>|topk:<k>[:<t>] (default: $SERVE_SAMPLER or greedy)", default: None, is_flag: false },
         ArgSpec { name: "requests", help: "serve: synthetic requests to submit", default: Some("8"), is_flag: false },
         ArgSpec { name: "max-new", help: "serve: tokens to generate per request", default: Some("24"), is_flag: false },
@@ -419,6 +421,14 @@ fn cmd_serve(a: &Args) -> crate::Result<i32> {
         Some(v) => Sampler::parse(&v)?,
         None => Sampler::Greedy,
     };
+    let kv_dtype = match a
+        .get("kv-dtype")
+        .map(str::to_string)
+        .or_else(|| std::env::var("SERVE_KV_DTYPE").ok())
+    {
+        Some(v) => crate::model::native::KvDtype::parse(&v)?,
+        None => crate::model::native::KvDtype::F32,
+    };
     let n_requests = a.parse_or("requests", 8usize)?.max(1);
     let max_new = a.parse_or("max-new", 24usize)?;
 
@@ -455,8 +465,12 @@ fn cmd_serve(a: &Args) -> crate::Result<i32> {
         policy,
         prefix_cache: true,
         spec,
+        kv_dtype,
         ..Default::default()
     };
+    if kv_dtype != crate::model::native::KvDtype::F32 {
+        println!("kv cache stored as {} (documented-tolerance mode)", kv_dtype.label());
+    }
     let mut scheduler = Scheduler::new(&pm, serve_opts);
     if let Some(d) = &draft {
         scheduler = scheduler.with_draft(d);

@@ -7,7 +7,9 @@ pub mod clip;
 pub mod group;
 pub mod packed;
 pub mod scheme;
+pub mod simd;
 
 pub use group::{dequantize, fake_quant, fake_quant_into, quant_mse, quantize, GroupQuant};
 pub use packed::PackedTensor;
 pub use scheme::{BitAllocation, QuantScheme};
+pub use simd::{set_simd_level, SimdLevel};

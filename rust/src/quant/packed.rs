@@ -10,7 +10,7 @@
 //! stored as f16 bit patterns (matching the paper's FP16 scale accounting)
 //! and zero-points as packed ints.
 
-use super::{GroupQuant, QuantScheme};
+use super::{simd, GroupQuant, QuantScheme};
 use crate::tensor::{ops, Tensor};
 use crate::util::pool;
 
@@ -131,6 +131,198 @@ fn unpack_value(words: &[u32], bits: usize, index: usize) -> u8 {
     ((w >> ((index % per_word) * bits)) & ((1 << bits) - 1)) as u8
 }
 
+/// Vectorized unpack→dequant of one group span: 8 codes per round are
+/// sheared out of a broadcast word with a per-lane variable shift
+/// (`vpsrlvd`), masked, converted, and evaluated as `scale * (code - zero)`
+/// — the exact f32 expression of both scalar paths (the LUT entry for code
+/// `q` *is* `scale * (q - zero)`), so this is bit-identical to scalar by
+/// construction.  Groups need not align to word boundaries (bits=3 packs
+/// 10 codes/word): the span runs scalar to the first boundary, vectorizes
+/// whole words (codes never straddle words — `pack_values` flushes early),
+/// and finishes any ragged word/group tail scalar.  Callable only when
+/// `per_word >= 8`, i.e. bits ≤ 4 — the serving bit widths.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dequant_span_avx2(
+    row_words: &[u32],
+    bits: usize,
+    scale: f32,
+    zero: f32,
+    start: usize,
+    out: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let per_word = 32 / bits;
+    debug_assert!(per_word >= 8);
+    let mask = (1u32 << bits) - 1;
+    let end = start + out.len();
+    let maskv = _mm256_set1_epi32(mask as i32);
+    let scalev = _mm256_set1_ps(scale);
+    let zerov = _mm256_set1_ps(zero);
+    let rounds = per_word / 8;
+    let mut c = start;
+    while c < end && c % per_word != 0 {
+        let code = (row_words[c / per_word] >> ((c % per_word) * bits)) & mask;
+        out[c - start] = scale * (code as f32 - zero);
+        c += 1;
+    }
+    while c + per_word <= end {
+        let wv = _mm256_set1_epi32(row_words[c / per_word] as i32);
+        for r in 0..rounds {
+            // lane l of round r extracts code r*8 + l of the word
+            let base = (r * 8 * bits) as i32;
+            let b = bits as i32;
+            let shifts = _mm256_setr_epi32(
+                base,
+                base + b,
+                base + 2 * b,
+                base + 3 * b,
+                base + 4 * b,
+                base + 5 * b,
+                base + 6 * b,
+                base + 7 * b,
+            );
+            let codes = _mm256_and_si256(_mm256_srlv_epi32(wv, shifts), maskv);
+            let vals = _mm256_mul_ps(scalev, _mm256_sub_ps(_mm256_cvtepi32_ps(codes), zerov));
+            _mm256_storeu_ps(out.as_mut_ptr().add(c - start + r * 8), vals);
+        }
+        // per_word % 8 codes (bits=3: codes 8..10) finish scalar
+        for t in rounds * 8..per_word {
+            let code = (row_words[c / per_word] >> (t * bits)) & mask;
+            out[c - start + t] = scale * (code as f32 - zero);
+        }
+        c += per_word;
+    }
+    while c < end {
+        let code = (row_words[c / per_word] >> ((c % per_word) * bits)) & mask;
+        out[c - start] = scale * (code as f32 - zero);
+        c += 1;
+    }
+}
+
+/// One activation row against a transposed weight tile:
+/// `out[j] = Σ_kk ar[kk] · tile_t[kk·nb + j]` with the kk loop outermost.
+/// Per output element this is the exact kk-sequential one-mul-one-add
+/// accumulation of [`ops::matmul_nt`]'s 4-wide blocked kernel, so every
+/// dispatch tier below is bit-identical to the dense reference; the
+/// vector tiers just compute 4 (SSE2) or 8 (AVX2) independent output
+/// columns per instruction.  `nb` must be a multiple of 4 — the caller
+/// splits off `matmul_nt`'s per-column `dot`-scheme tail separately.
+fn gemm_row(ar: &[f32], tile_t: &[f32], nb: usize, out: &mut [f32]) {
+    debug_assert_eq!(nb % 4, 0);
+    debug_assert_eq!(out.len(), nb);
+    debug_assert_eq!(tile_t.len(), ar.len() * nb);
+    if nb == 0 {
+        return;
+    }
+    #[cfg(target_arch = "x86_64")]
+    match simd::level() {
+        // SAFETY: the dispatch level only reports Avx2 when the CPU has it.
+        simd::SimdLevel::Avx2 => return unsafe { gemm_row_avx2(ar, tile_t, nb, out) },
+        simd::SimdLevel::Sse2 => return gemm_row_sse2(ar, tile_t, nb, out),
+        simd::SimdLevel::Scalar => {}
+    }
+    gemm_row_scalar(ar, tile_t, nb, out);
+}
+
+fn gemm_row_scalar(ar: &[f32], tile_t: &[f32], nb: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    for (kk, &av) in ar.iter().enumerate() {
+        let trow = &tile_t[kk * nb..(kk + 1) * nb];
+        for (o, &w) in out.iter_mut().zip(trow) {
+            *o += av * w;
+        }
+    }
+}
+
+// SSE2 is the x86-64 architecture baseline, so no runtime probe or
+// `target_feature` gate is needed; explicit `_mm_mul_ps` + `_mm_add_ps`
+// (never FMA) keeps every lane IEEE-identical to the scalar loop.
+#[cfg(target_arch = "x86_64")]
+fn gemm_row_sse2(ar: &[f32], tile_t: &[f32], nb: usize, out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let k = ar.len();
+    let mut j = 0;
+    // SAFETY: j-ranges stay within nb; tile_t is k*nb; unaligned load/store.
+    while j + 16 <= nb {
+        unsafe {
+            let mut a0 = _mm_setzero_ps();
+            let mut a1 = _mm_setzero_ps();
+            let mut a2 = _mm_setzero_ps();
+            let mut a3 = _mm_setzero_ps();
+            for kk in 0..k {
+                let av = _mm_set1_ps(*ar.get_unchecked(kk));
+                let t = tile_t.as_ptr().add(kk * nb + j);
+                a0 = _mm_add_ps(a0, _mm_mul_ps(av, _mm_loadu_ps(t)));
+                a1 = _mm_add_ps(a1, _mm_mul_ps(av, _mm_loadu_ps(t.add(4))));
+                a2 = _mm_add_ps(a2, _mm_mul_ps(av, _mm_loadu_ps(t.add(8))));
+                a3 = _mm_add_ps(a3, _mm_mul_ps(av, _mm_loadu_ps(t.add(12))));
+            }
+            let o = out.as_mut_ptr().add(j);
+            _mm_storeu_ps(o, a0);
+            _mm_storeu_ps(o.add(4), a1);
+            _mm_storeu_ps(o.add(8), a2);
+            _mm_storeu_ps(o.add(12), a3);
+        }
+        j += 16;
+    }
+    while j < nb {
+        unsafe {
+            let mut acc = _mm_setzero_ps();
+            for kk in 0..k {
+                let av = _mm_set1_ps(*ar.get_unchecked(kk));
+                let t = tile_t.as_ptr().add(kk * nb + j);
+                acc = _mm_add_ps(acc, _mm_mul_ps(av, _mm_loadu_ps(t)));
+            }
+            _mm_storeu_ps(out.as_mut_ptr().add(j), acc);
+        }
+        j += 4;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gemm_row_avx2(ar: &[f32], tile_t: &[f32], nb: usize, out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let k = ar.len();
+    let mut j = 0;
+    // a full ROW_TILE fits in 8 live ymm accumulators: one pass over the
+    // activation row and the transposed tile computes all 64 columns
+    while j + 64 <= nb {
+        let mut acc = [_mm256_setzero_ps(); 8];
+        for kk in 0..k {
+            let av = _mm256_set1_ps(*ar.get_unchecked(kk));
+            let t = tile_t.as_ptr().add(kk * nb + j);
+            for (l, a) in acc.iter_mut().enumerate() {
+                *a = _mm256_add_ps(*a, _mm256_mul_ps(av, _mm256_loadu_ps(t.add(8 * l))));
+            }
+        }
+        for (l, a) in acc.iter().enumerate() {
+            _mm256_storeu_ps(out.as_mut_ptr().add(j + 8 * l), *a);
+        }
+        j += 64;
+    }
+    while j + 8 <= nb {
+        let mut acc = _mm256_setzero_ps();
+        for kk in 0..k {
+            let av = _mm256_set1_ps(*ar.get_unchecked(kk));
+            let t = tile_t.as_ptr().add(kk * nb + j);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(av, _mm256_loadu_ps(t)));
+        }
+        _mm256_storeu_ps(out.as_mut_ptr().add(j), acc);
+        j += 8;
+    }
+    if j < nb {
+        // nb % 8 == 4: one xmm block
+        let mut acc = _mm_setzero_ps();
+        for kk in 0..k {
+            let av = _mm_set1_ps(*ar.get_unchecked(kk));
+            acc = _mm_add_ps(acc, _mm_mul_ps(av, _mm_loadu_ps(tile_t.as_ptr().add(kk * nb + j))));
+        }
+        _mm_storeu_ps(out.as_mut_ptr().add(j), acc);
+    }
+}
+
 impl PackedTensor {
     /// Pack a [`GroupQuant`].
     pub fn pack(q: &GroupQuant) -> PackedTensor {
@@ -211,6 +403,12 @@ impl PackedTensor {
     /// paths are bit-identical (the direct path is kept for sparse groups
     /// where filling `2^bits` entries would outweigh the group itself, and
     /// doubles as the reference in `dequant_lut_bit_identical_to_direct`).
+    ///
+    /// At [`simd::SimdLevel::Avx2`] and bits ≤ 4, the unpack+dequant runs
+    /// 8 codes per instruction through [`dequant_span_avx2`] — bit-identical
+    /// to both scalar paths (same f32 expression per element), pinned by
+    /// `simd_dequant_bit_identical_to_scalar`.  Bits ≥ 5 pack fewer than 8
+    /// codes per word and stay scalar at every tier (not serving widths).
     pub fn dequant_row_into(&self, r: usize, out: &mut [f32]) {
         assert_eq!(out.len(), self.cols, "dequant_row_into: bad buffer");
         let bits = self.scheme.bits;
@@ -219,6 +417,17 @@ impl PackedTensor {
         let group = self.scheme.group;
         let n_levels = 1usize << bits;
         let row_words = &self.words[r * self.words_per_row..(r + 1) * self.words_per_row];
+        #[cfg(target_arch = "x86_64")]
+        if per_word >= 8 && simd::level() == simd::SimdLevel::Avx2 {
+            for (g, scale, zero) in self.row_groups(r) {
+                let a = g * group;
+                // SAFETY: dispatch level established AVX2 support.
+                unsafe {
+                    dequant_span_avx2(row_words, bits, scale, zero, a, &mut out[a..a + group])
+                };
+            }
+            return;
+        }
         let mut lut = [0.0f32; 256];
         for (g, scale, zero) in self.row_groups(r) {
             let a = g * group;
@@ -276,16 +485,15 @@ impl PackedTensor {
         // Small calls — notably the per-token decode GEMVs, which already
         // run under the server's per-sequence parallelism — stay serial:
         // spawning scoped threads per tile would cost more than the tiles'
-        // work.  Same size threshold as matmul_nt_par; the result is
+        // work.  Shared size threshold with matmul_nt_par; the result is
         // identical either way (tiles are independent and order-preserved).
-        let threads = if m * k * n < 1 << 18 { 1 } else { pool::num_threads().min(n_tiles) };
+        let threads =
+            if m * k * n < ops::par_threshold() { 1 } else { pool::num_threads().min(n_tiles) };
         let tiles: Vec<Vec<f32>> = pool::parallel_map(n_tiles, threads, |ti| {
             let j0 = ti * ROW_TILE;
             let nb = ROW_TILE.min(n - j0);
-            let mut dense = vec![0.0f32; nb * k];
-            self.dequant_rows_into(j0, nb, &mut dense);
             let mut block = vec![0.0f32; m * nb];
-            ops::matmul_nt(&x.data, &dense, m, k, nb, &mut block);
+            self.gemm_tile(x, j0, nb, &mut block);
             block
         });
         for (ti, block) in tiles.iter().enumerate() {
@@ -297,6 +505,52 @@ impl PackedTensor {
             }
         }
         ops::add_bias(out, bias);
+    }
+
+    /// Multi-row serving entry point: identical math to
+    /// [`PackedTensor::linear`], named for call sites that batch `k`
+    /// activation rows (chunked verify, batched prefill, multi-row
+    /// `forward_chunk`) so the weight-traffic amortization is explicit —
+    /// every ROW_TILE of packed rows is decoded ONCE and multiplied against
+    /// all `k` rows, instead of re-streamed/re-dequantized per row as `k`
+    /// independent GEMVs would.  Bit-identical to `k` single-row
+    /// [`PackedTensor::linear`] calls (each output element's accumulation
+    /// never depends on `x.rows`; pinned by
+    /// `linear_batch_bit_identical_to_row_calls`).
+    pub fn linear_batch(&self, x: &Tensor, bias: &[f32]) -> Tensor {
+        self.linear(x, bias)
+    }
+
+    /// Decode one ROW_TILE of weight rows once and multiply all `m`
+    /// activation rows against it — the cache-blocked core of
+    /// [`PackedTensor::linear_into`].  The columns `ops::matmul_nt` would
+    /// cover with its 4-wide blocked kernel are dequantized *transposed*
+    /// into a `[k, nb4]` tile so [`gemm_row`] reads contiguous SIMD lanes;
+    /// the ≤3 `dot`-tail columns (final tile only — ROW_TILE is a multiple
+    /// of 4, so the tile-local split equals the whole-matrix split) stay
+    /// row-major and reproduce `dot`'s 8-accumulator scheme exactly.
+    fn gemm_tile(&self, x: &Tensor, j0: usize, nb: usize, block: &mut [f32]) {
+        let (m, k) = (x.rows, self.cols);
+        let nb4 = nb & !3;
+        let mut tile_t = vec![0.0f32; k * nb4];
+        let mut rowbuf = vec![0.0f32; k];
+        for j in 0..nb4 {
+            self.dequant_row_into(j0 + j, &mut rowbuf);
+            for (kk, &v) in rowbuf.iter().enumerate() {
+                tile_t[kk * nb4 + j] = v;
+            }
+        }
+        let tail = nb - nb4;
+        let mut tail_rows = vec![0.0f32; tail * k];
+        self.dequant_rows_into(j0 + nb4, tail, &mut tail_rows);
+        for i in 0..m {
+            let ar = &x.data[i * k..(i + 1) * k];
+            let orow = &mut block[i * nb..(i + 1) * nb];
+            gemm_row(ar, &tile_t, nb4, &mut orow[..nb4]);
+            for t in 0..tail {
+                orow[nb4 + t] = ops::dot(ar, &tail_rows[t * k..(t + 1) * k]);
+            }
+        }
     }
 
     /// Total storage in bytes (codes + scales + zeros).
@@ -455,6 +709,117 @@ mod tests {
                 format!("bitwise mismatch at rows={rows} cols={cols} m={m} bits={bits}"),
             )
         });
+    }
+
+    #[test]
+    fn simd_dequant_bit_identical_to_scalar() {
+        // tentpole pin: for every serving bit width × group size × ragged
+        // word tail, the AVX2 unpack+dequant must reproduce the scalar path
+        // bit-for-bit.  The sweep covers word-unaligned group starts
+        // (bits=3 packs 10 codes/word, so groups start mid-word from the
+        // second group on) and partial trailing words; on hardware without
+        // AVX2 both legs run scalar and the test degenerates to reflexivity.
+        let _g = simd::test_guard();
+        let prev = simd::level();
+        let mut rng = Pcg64::new(7);
+        for bits in 1..=4usize {
+            for group in [16usize, 32, 64, 128] {
+                for mult in 1..=3usize {
+                    let cols = group * mult;
+                    let shift = *rng.choice(&[-2.0f32, 0.0, 2.0]);
+                    let w = Tensor::from_vec(
+                        3,
+                        cols,
+                        (0..3 * cols).map(|_| rng.normal() as f32 + shift).collect(),
+                    );
+                    let packed = PackedTensor::pack(&quantize(&w, QuantScheme::new(bits, group)));
+                    let mut scalar = vec![0.0f32; cols];
+                    let mut vector = vec![0.0f32; cols];
+                    for r in 0..3 {
+                        simd::set_simd_level(simd::SimdLevel::Scalar);
+                        packed.dequant_row_into(r, &mut scalar);
+                        simd::set_simd_level(simd::detect());
+                        packed.dequant_row_into(r, &mut vector);
+                        for c in 0..cols {
+                            assert_eq!(
+                                scalar[c].to_bits(),
+                                vector[c].to_bits(),
+                                "bits={bits} group={group} cols={cols} ({r},{c}): {} vs {}",
+                                scalar[c],
+                                vector[c]
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        simd::set_simd_level(prev);
+    }
+
+    #[test]
+    fn simd_gemm_bit_identical_across_levels() {
+        // the fused GEMM tile kernel must produce the same bits at every
+        // dispatch tier (Scalar / SSE2 / AVX2, clamped to hardware), over
+        // full 64-row tiles, partial tiles, every lane-remainder shape
+        // (8-wide main, 4-wide xmm block), and non-multiple-of-4 dot tails.
+        let _g = simd::test_guard();
+        let prev = simd::level();
+        let mut rng = Pcg64::new(9);
+        for &(rows, m) in &[(64usize, 1usize), (70, 3), (129, 4), (30, 2)] {
+            let cols = 96;
+            let w = Tensor::from_vec(
+                rows,
+                cols,
+                (0..rows * cols).map(|_| rng.normal() as f32).collect(),
+            );
+            let packed = PackedTensor::pack(&quantize(&w, QuantScheme::new(2, 32)));
+            let x =
+                Tensor::from_vec(m, cols, (0..m * cols).map(|_| rng.normal() as f32).collect());
+            let bias: Vec<f32> = (0..rows).map(|_| rng.normal() as f32).collect();
+            simd::set_simd_level(simd::SimdLevel::Scalar);
+            let want = packed.linear(&x, &bias);
+            for lvl in [simd::SimdLevel::Sse2, simd::SimdLevel::Avx2] {
+                simd::set_simd_level(lvl);
+                let got = packed.linear(&x, &bias);
+                for (i, (a, b)) in want.data.iter().zip(&got.data).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{lvl:?} rows={rows} m={m} idx={i}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+        simd::set_simd_level(prev);
+    }
+
+    #[test]
+    fn linear_batch_bit_identical_to_row_calls() {
+        // the multi-row entry point must equal k independent single-row
+        // GEMVs bit-for-bit.  Geometry crosses ops::par_threshold() for the
+        // batched call (parallel tiles) while each row call stays serial —
+        // so this also pins serial == parallel for the packed GEMM (the
+        // hoisted-threshold satellite).
+        let mut rng = Pcg64::new(3);
+        let (rows, cols, m) = (256usize, 128usize, 8usize);
+        assert!(m * cols * rows >= ops::par_threshold());
+        assert!(cols * rows < ops::par_threshold());
+        let w = Tensor::from_vec(
+            rows,
+            cols,
+            (0..rows * cols).map(|_| rng.normal() as f32).collect(),
+        );
+        let packed = PackedTensor::pack(&quantize(&w, QuantScheme::new(3, 32)));
+        let x = Tensor::from_vec(m, cols, (0..m * cols).map(|_| rng.normal() as f32).collect());
+        let bias: Vec<f32> = (0..rows).map(|_| rng.normal() as f32).collect();
+        let batched = packed.linear_batch(&x, &bias);
+        for i in 0..m {
+            let xi = Tensor::from_vec(1, cols, x.row(i).to_vec());
+            let row = packed.linear(&xi, &bias);
+            for (c, (a, b)) in batched.row(i).iter().zip(&row.data).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "row {i} col {c}: {a} vs {b}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,127 @@
+//! Runtime SIMD dispatch for the packed serving kernels.
+//!
+//! x86-64 only: SSE2 is part of the architecture baseline (always present),
+//! AVX2 is probed once with `is_x86_feature_detected!`.  Every vector path
+//! is written to be **bit-identical** to its scalar fallback — explicit
+//! `mul` + `add` intrinsics (no FMA contraction) with per-output-element
+//! accumulation order unchanged — so the dispatch level never changes
+//! results, only speed (pinned by the scalar-vs-SIMD identity tests in
+//! `quant::packed`).
+//!
+//! Override order: an explicit [`set_simd_level`] call (tests, the kernel
+//! microbench's in-process A/B comparison) beats the `INVAREXPLORE_SIMD`
+//! env value (`scalar` | `sse2` | `avx2`), which beats hardware detection.
+//! Requesting a level the CPU lacks falls back to the best supported one.
+//! The resolved level is logged once at first use.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Vector ISA tier the packed kernels run at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SimdLevel {
+    /// Portable scalar loops — the reference every other tier must match.
+    Scalar = 0,
+    /// 4-lane f32: the fused GEMM tile kernel only (SSE2 has no variable
+    /// shift or gather, so dequant stays scalar at this tier).
+    Sse2 = 1,
+    /// 8-lane f32: vectorized code unpack + dequant (bits ≤ 4) and the
+    /// 8-wide GEMM tile kernel.
+    Avx2 = 2,
+}
+
+const UNSET: u8 = u8::MAX;
+static LEVEL: AtomicU8 = AtomicU8::new(UNSET);
+
+fn decode(v: u8) -> SimdLevel {
+    match v {
+        2 => SimdLevel::Avx2,
+        1 => SimdLevel::Sse2,
+        _ => SimdLevel::Scalar,
+    }
+}
+
+/// Best level this CPU supports.
+pub fn detect() -> SimdLevel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            SimdLevel::Avx2
+        } else {
+            SimdLevel::Sse2
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        SimdLevel::Scalar
+    }
+}
+
+/// The active dispatch level, resolving (and logging) it on first use.
+#[inline]
+pub fn level() -> SimdLevel {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != UNSET {
+        return decode(v);
+    }
+    init()
+}
+
+#[cold]
+fn init() -> SimdLevel {
+    let hw = detect();
+    let lvl = match std::env::var("INVAREXPLORE_SIMD").as_deref() {
+        Ok("scalar") => SimdLevel::Scalar,
+        Ok("sse2") => SimdLevel::Sse2.min(hw),
+        Ok("avx2") => SimdLevel::Avx2.min(hw),
+        Ok(other) => {
+            crate::warn_!("INVAREXPLORE_SIMD={other:?} not recognized; using detected level");
+            hw
+        }
+        Err(_) => hw,
+    };
+    // racing first calls may both log; harmless (same line) and lock-free
+    crate::info!("simd dispatch: {lvl:?} (detected {hw:?})");
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+    lvl
+}
+
+/// Force a dispatch level (clamped to hardware support) — the in-process
+/// hook the bit-identity tests and `benches/kernel_microbench.rs` use to
+/// compare tiers without mutating the environment (see the getenv/setenv
+/// UB note in `util::pool`'s tests).
+pub fn set_simd_level(lvl: SimdLevel) {
+    LEVEL.store(lvl.min(detect()) as u8, Ordering::Relaxed);
+}
+
+/// Serializes tests that flip the global dispatch level, so two A/B
+/// comparisons can't interleave their level switches.  (Every tier is
+/// bit-identical, so a race would not change results — this just keeps
+/// each test's "scalar" leg honestly scalar.)
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_level_clamps_to_hardware() {
+        let _g = test_guard();
+        let prev = level();
+        set_simd_level(SimdLevel::Avx2);
+        assert!(level() <= detect());
+        set_simd_level(SimdLevel::Scalar);
+        assert_eq!(level(), SimdLevel::Scalar);
+        set_simd_level(prev); // restore for concurrently-running tests
+    }
+
+    #[test]
+    fn detect_is_stable() {
+        assert_eq!(detect(), detect());
+        #[cfg(target_arch = "x86_64")]
+        assert!(detect() >= SimdLevel::Sse2, "SSE2 is the x86-64 baseline");
+    }
+}

@@ -8,6 +8,7 @@
 
 use std::time::Duration;
 
+use crate::model::native::KvDtype;
 use crate::util::json::Json;
 
 const N_BUCKETS: usize = 31;
@@ -173,8 +174,12 @@ pub struct ServeMetrics {
     /// pages counted once).
     pub kv_live_bytes_peak: usize,
     /// What eager full-context allocation would have resident at the same
-    /// peak (PR-2's per-sequence `[max_seq, d_model]` stores).
+    /// peak (PR-2's per-sequence f32 `[max_seq, d_model]` stores — an
+    /// f32 baseline regardless of `kv_dtype`, so quantized modes show
+    /// their residency win against the same yardstick).
     pub kv_eager_bytes_peak: usize,
+    /// Storage precision the run's KV caches used (labels the `kv` dump).
+    pub kv_dtype: KvDtype,
     /// Finish-reason counters.
     pub finished_length: u64,
     pub finished_stop: u64,
@@ -272,6 +277,7 @@ impl ServeMetrics {
             .set(
                 "kv",
                 Json::obj()
+                    .set("dtype", self.kv_dtype.label())
                     .set("live_bytes_peak", self.kv_live_bytes_peak)
                     .set("eager_bytes_peak", self.kv_eager_bytes_peak),
             )
@@ -348,8 +354,10 @@ mod tests {
         m.prefix_hits = 1;
         m.prefix_hit_tokens = 64;
         m.record_kv_bytes(1000, 4000);
+        m.kv_dtype = KvDtype::Int8;
         m.finished_length = 2;
         let j = m.to_json();
+        assert_eq!(j.get("kv").unwrap().get("dtype").unwrap().as_str(), Some("int8"));
         assert_eq!(j.get("queue").unwrap().get("depth_max").unwrap().as_usize(), Some(4));
         let pc = j.get("prefix_cache").unwrap();
         assert_eq!(pc.get("hit_tokens").unwrap().as_usize(), Some(64));

@@ -138,6 +138,19 @@ impl DecoderParams for PackedModel {
             None => ops::linear(x, self.fp.get(&wname), bias),
         }
     }
+
+    fn linear_batch(&self, l: usize, base: &str, x: &Tensor) -> Tensor {
+        // routes multi-row chunks to the cache-blocked packed GEMM, which
+        // dequantizes each ROW_TILE of weight rows once for all activation
+        // rows (bit-identical to `linear` — pinned by
+        // `linear_batch_bit_identical_to_row_calls` in quant::packed)
+        let bias = &self.fp.layer(l, &format!("{base}.b")).data;
+        let wname = format!("l{l}.{base}.w");
+        match self.packed.get(&wname) {
+            Some(p) => p.linear_batch(x, bias),
+            None => ops::linear(x, self.fp.get(&wname), bias),
+        }
+    }
 }
 
 #[cfg(test)]

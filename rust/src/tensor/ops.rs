@@ -5,6 +5,53 @@
 use super::Tensor;
 use crate::util::pool;
 
+/// Problem-size floor (`m·k·n` MACs) below which the parallel kernels stay
+/// serial.  Shared by [`matmul_nt_par`] and the packed fused-GEMM tiles
+/// (`quant::packed::{linear_into, linear_batch}`) so the serial/parallel
+/// decision can't drift between the dense and packed paths — small
+/// per-token decode GEMVs already run under the server's per-sequence
+/// parallelism, and spawning scoped threads for them costs more than the
+/// work (the original nested-parallelism footgun this constant de-dupes).
+pub const fn par_threshold() -> usize {
+    1 << 18
+}
+
+/// Columns `[j0, j1)` of one output row — the inner kernel shared by
+/// [`matmul_nt`] and [`matmul_nt_blocked`].  4-wide j-blocking keeps 4
+/// accumulators live and lets the compiler auto-vectorize the k loop;
+/// leftover columns fall back to per-column [`dot`].  `j0` must be a
+/// multiple of 4 so a tiled caller's blocked-vs-dot column split matches a
+/// whole-row call exactly (bit-identity across tilings).
+#[inline]
+fn row_span(ar: &[f32], b: &[f32], k: usize, j0: usize, j1: usize, or: &mut [f32]) {
+    debug_assert_eq!(j0 % 4, 0);
+    let mut j = j0;
+    while j + 4 <= j1 {
+        let b0 = &b[j * k..(j + 1) * k];
+        let b1 = &b[(j + 1) * k..(j + 2) * k];
+        let b2 = &b[(j + 2) * k..(j + 3) * k];
+        let b3 = &b[(j + 3) * k..(j + 4) * k];
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for kk in 0..k {
+            let av = ar[kk];
+            s0 += av * b0[kk];
+            s1 += av * b1[kk];
+            s2 += av * b2[kk];
+            s3 += av * b3[kk];
+        }
+        or[j] = s0;
+        or[j + 1] = s1;
+        or[j + 2] = s2;
+        or[j + 3] = s3;
+        j += 4;
+    }
+    while j < j1 {
+        let br = &b[j * k..(j + 1) * k];
+        or[j] = dot(ar, br);
+        j += 1;
+    }
+}
+
 /// `out[m,n] = a[m,k] @ b[n,k]^T` — the "linear layer" product where `b` is
 /// a row-major `[out_features, in_features]` weight matrix.  Both operands
 /// are traversed row-wise, so this is cache-friendly without packing.
@@ -12,43 +59,40 @@ pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), n * k);
     assert_eq!(out.len(), m * n);
-    // 4-wide j-blocking: keeps 4 accumulators live and lets the compiler
-    // auto-vectorize the k loop.
     for i in 0..m {
-        let ar = &a[i * k..(i + 1) * k];
-        let or = &mut out[i * n..(i + 1) * n];
-        let mut j = 0;
-        while j + 4 <= n {
-            let b0 = &b[j * k..(j + 1) * k];
-            let b1 = &b[(j + 1) * k..(j + 2) * k];
-            let b2 = &b[(j + 2) * k..(j + 3) * k];
-            let b3 = &b[(j + 3) * k..(j + 4) * k];
-            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-            for kk in 0..k {
-                let av = ar[kk];
-                s0 += av * b0[kk];
-                s1 += av * b1[kk];
-                s2 += av * b2[kk];
-                s3 += av * b3[kk];
-            }
-            or[j] = s0;
-            or[j + 1] = s1;
-            or[j + 2] = s2;
-            or[j + 3] = s3;
-            j += 4;
+        row_span(&a[i * k..(i + 1) * k], b, k, 0, n, &mut out[i * n..(i + 1) * n]);
+    }
+}
+
+/// [`matmul_nt`] with the loop nest inverted into [64-row `b` tiles × all
+/// `m` rows of `a`]: each weight tile is streamed from memory ONCE for the
+/// whole batch instead of once per row, which is what makes tall-skinny
+/// multi-row products — the `[k, vocab]` tied-head GEMM of chunked verify,
+/// batched prefill logits — cache-blocked rather than `m`× re-streamed.
+/// Bit-identical to [`matmul_nt`]: every output element runs the exact
+/// same kk-sequential accumulation, only the order independent elements
+/// are produced in changes (and the tile width is a multiple of 4, so the
+/// blocked-vs-`dot` column split matches too).  Serial by design: callers
+/// sit under the server's per-sequence parallelism.
+pub fn matmul_nt_blocked(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    const B_TILE: usize = 64;
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + B_TILE).min(n);
+        for i in 0..m {
+            row_span(&a[i * k..(i + 1) * k], b, k, j0, j1, &mut out[i * n..(i + 1) * n]);
         }
-        while j < n {
-            let br = &b[j * k..(j + 1) * k];
-            or[j] = dot(ar, br);
-            j += 1;
-        }
+        j0 = j1;
     }
 }
 
 /// Thread-parallel [`matmul_nt`] splitting over rows of `a`.
 pub fn matmul_nt_par(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     let threads = pool::num_threads();
-    if m * n * k < 1 << 18 || threads == 1 {
+    if m * n * k < par_threshold() || threads == 1 {
         return matmul_nt(a, b, m, k, n, out);
     }
     let rows_per_chunk = m.div_ceil(threads).max(1);
@@ -194,17 +238,45 @@ mod tests {
 
     #[test]
     fn matmul_par_matches_serial() {
+        // bit-exact, not approximate: the parallel split only changes which
+        // thread computes a row, never the row's accumulation — the pin the
+        // shared par_threshold() satellite rides on.  (m, k, n) is sized
+        // past the threshold so the parallel path actually engages.
         let mut rng = crate::util::rng::Pcg64::new(0);
         let (m, k, n) = (64, 96, 80);
+        assert!(m * n * k >= par_threshold());
         let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
         let b: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
         let mut s = vec![0.0; m * n];
         let mut p = vec![0.0; m * n];
         matmul_nt(&a, &b, m, k, n, &mut s);
         matmul_nt_par(&a, &b, m, k, n, &mut p);
-        for (x, y) in s.iter().zip(&p) {
-            assert!((x - y).abs() < 1e-4);
+        for (i, (x, y)) in s.iter().zip(&p).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "serial != parallel at {i}: {x} vs {y}");
         }
+    }
+
+    #[test]
+    fn matmul_blocked_bit_identical_to_plain() {
+        // the cache-blocked loop nest must not change a single bit — over
+        // n < one tile, n spanning tiles, and non-multiple-of-4 dot tails.
+        propcheck::check("matmul_nt_blocked == matmul_nt", 24, |rng| {
+            let m = rng.below(6) + 1;
+            let k = rng.below(48) + 1;
+            let n = rng.below(200) + 1;
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+            let mut plain = vec![0.0; m * n];
+            let mut blocked = vec![0.0; m * n];
+            matmul_nt(&a, &b, m, k, n, &mut plain);
+            matmul_nt_blocked(&a, &b, m, k, n, &mut blocked);
+            for (i, (x, y)) in plain.iter().zip(&blocked).enumerate() {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!("m={m} k={k} n={n} idx={i}: {x} vs {y}"));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]
