@@ -1,0 +1,23 @@
+//! loom model checks for the two concurrency protocols every serving PR
+//! stacks on: `util::pool`'s claim-counter + raw-pointer partitioning and
+//! the scheduler's round-boundary cancellation registry.
+//!
+//! These are *models*, not imports of the production code: `util::pool`
+//! builds on `std::thread::scope` and std atomics, which loom cannot
+//! instrument (loom requires its own `loom::sync`/`loom::thread` types,
+//! and has no scoped threads). Each test re-expresses the production
+//! protocol 1:1 in loom vocabulary — same orderings, same claim and
+//! partition arithmetic, same registry call sequence — so a bug in the
+//! protocol itself (e.g. the `Relaxed` claim counter permitting a
+//! double-claim, or a cancellation lost across a round boundary) is caught
+//! even though the concrete functions are not linked.
+//!
+//! Run with the nightly verify workflow, or locally:
+//!
+//! ```text
+//! cd rust/loom-model
+//! RUSTFLAGS="--cfg loom" cargo test --release
+//! ```
+//!
+//! The tests live in `tests/` behind `#![cfg(loom)]`; without the cfg this
+//! crate is intentionally empty so accidental plain builds are free.

@@ -1,0 +1,97 @@
+//! Models the scheduler's `CancelHandle` protocol: external threads insert
+//! ids at any time; the scheduler thread takes a `snapshot()` at each round
+//! boundary, finishes matching requests (calling `clear_id`), and calls
+//! `clear_all` when a run drains. The pinned invariants:
+//!
+//! * a cancel that lands before the final snapshot is either observed by
+//!   that snapshot or wiped by the drain — never silently resurrected for
+//!   a later request reusing the id;
+//! * the registry is empty after every drain, in every interleaving.
+#![cfg(loom)]
+
+use loom::sync::{Arc, Mutex};
+use loom::thread;
+
+#[derive(Clone, Default)]
+struct Registry {
+    ids: Arc<Mutex<Vec<usize>>>,
+}
+
+// Same call surface as scheduler::CancelHandle (Vec for a set: loom models
+// the lock protocol, not the container).
+impl Registry {
+    fn cancel(&self, id: usize) {
+        let mut g = self.ids.lock().unwrap();
+        if !g.contains(&id) {
+            g.push(id);
+        }
+    }
+    fn snapshot(&self) -> Vec<usize> {
+        self.ids.lock().unwrap().clone()
+    }
+    fn clear_id(&self, id: usize) {
+        self.ids.lock().unwrap().retain(|&x| x != id);
+    }
+    fn clear_all(&self) {
+        self.ids.lock().unwrap().clear();
+    }
+}
+
+#[test]
+fn registry_empty_after_drain_in_every_interleaving() {
+    loom::model(|| {
+        let reg = Registry::default();
+        let external = {
+            let reg = reg.clone();
+            thread::spawn(move || {
+                reg.cancel(7);
+                reg.cancel(9);
+            })
+        };
+
+        // Scheduler round: snapshot, finish the in-flight request 7 if its
+        // cancel was observed, dropping its id like finish paths do.
+        let snap = reg.snapshot();
+        if snap.contains(&7) {
+            reg.clear_id(7);
+        }
+
+        external.join().unwrap();
+        // Run drains: unmatched ids (9, and 7 if its cancel raced past the
+        // snapshot) must all be wiped so reused ids are never spuriously
+        // cancelled.
+        reg.clear_all();
+        assert!(reg.snapshot().is_empty(), "drain leaked cancellations");
+    });
+}
+
+#[test]
+fn observed_cancel_is_consumed_not_resurrected() {
+    loom::model(|| {
+        let reg = Registry::default();
+        let external = {
+            let reg = reg.clone();
+            thread::spawn(move || reg.cancel(3))
+        };
+
+        // Round 1: maybe observe and consume the cancel.
+        let observed_r1 = reg.snapshot().contains(&3);
+        if observed_r1 {
+            reg.clear_id(3);
+        }
+        external.join().unwrap();
+
+        // Round 2 (same run, id 3 finished in round 1): a consumed cancel
+        // must not reappear; an unconsumed one must still be visible so the
+        // round boundary can act on it.
+        let observed_r2 = reg.snapshot().contains(&3);
+        assert!(
+            observed_r1 ^ observed_r2,
+            "cancel must be seen exactly once across round boundaries"
+        );
+        if observed_r2 {
+            reg.clear_id(3);
+        }
+        assert!(reg.snapshot().is_empty());
+    });
+}

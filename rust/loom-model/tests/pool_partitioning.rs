@@ -1,0 +1,85 @@
+//! Models `util::pool::parallel_map` / `parallel_chunks_mut`: workers claim
+//! work items from a shared atomic counter with `Ordering::Relaxed` and
+//! write disjoint slots of one buffer through a shared raw pointer
+//! (`SendPtr`). loom's `UnsafeCell` access tracking fails the test if any
+//! interleaving lets two threads touch the same slot concurrently, and the
+//! final assertion fails if any interleaving loses or duplicates a claim.
+#![cfg(loom)]
+
+use loom::cell::UnsafeCell;
+use loom::sync::atomic::{AtomicUsize, Ordering};
+use loom::sync::Arc;
+use loom::thread;
+
+/// The claim loop of `parallel_map`, verbatim: `fetch_add(1, Relaxed)`
+/// hands out indices; the winner writes slot `i` exactly once.
+#[test]
+fn relaxed_claim_counter_partitions_slot_writes() {
+    loom::model(|| {
+        const N: usize = 3;
+        let next = Arc::new(AtomicUsize::new(0));
+        let slots: Arc<Vec<UnsafeCell<usize>>> =
+            Arc::new((0..N).map(|_| UnsafeCell::new(usize::MAX)).collect());
+
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let next = next.clone();
+            let slots = slots.clone();
+            handles.push(thread::spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= N {
+                    break;
+                }
+                // Production writes `*slot_ptr.get().add(i) = Some(out)`;
+                // the UnsafeCell stands in for that raw write and lets
+                // loom police exclusive access per slot.
+                slots[i].with_mut(|p| unsafe { *p = i * i });
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Join is the only synchronization (as with thread::scope): every
+        // claim must have produced exactly its own slot's value.
+        for (i, s) in slots.iter().enumerate() {
+            s.with(|p| assert_eq!(unsafe { *p }, i * i, "slot {i} lost or torn"));
+        }
+    });
+}
+
+/// The chunk partition of `parallel_chunks_mut`: claimed chunk index `ci`
+/// maps to `[ci*chunk, min((ci+1)*chunk, len))`. Two threads, ragged tail.
+#[test]
+fn chunk_ranges_are_disjoint_and_cover() {
+    loom::model(|| {
+        const LEN: usize = 5;
+        const CHUNK: usize = 2;
+        let n_chunks = LEN.div_ceil(CHUNK);
+        let next = Arc::new(AtomicUsize::new(0));
+        let data: Arc<Vec<UnsafeCell<usize>>> =
+            Arc::new((0..LEN).map(|_| UnsafeCell::new(0)).collect());
+
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let next = next.clone();
+            let data = data.clone();
+            handles.push(thread::spawn(move || loop {
+                let ci = next.fetch_add(1, Ordering::Relaxed);
+                if ci >= n_chunks {
+                    break;
+                }
+                let start = ci * CHUNK;
+                let end = (start + CHUNK).min(LEN);
+                for k in start..end {
+                    data[k].with_mut(|p| unsafe { *p += k + 1 });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        for (k, c) in data.iter().enumerate() {
+            c.with(|p| assert_eq!(unsafe { *p }, k + 1, "element {k} written != once"));
+        }
+    });
+}

@@ -25,6 +25,11 @@
 //!   `xla` crate's PJRT CPU client and executes them from the search hot
 //!   path.  Python never runs at request time.
 
+// Every unsafe block/impl must carry a `// SAFETY:` comment; `cargo xtask
+// lint` enforces the same invariant (plus CLAMPED/PANIC-OK/DETERMINISM
+// annotations) tree-wide, and CI denies this lint in clippy.
+#![warn(clippy::undocumented_unsafe_blocks)]
+
 pub mod baselines;
 pub mod calib;
 pub mod cli;

@@ -456,14 +456,21 @@ impl Page {
                     KvDtype::Int8 => {
                         let crow = &mut codes[row * d..(row + 1) * d];
                         for (c, code) in crow.iter_mut().enumerate() {
+                            // CLAMPED: quant() clamps to [-qmax, qmax] =
+                            // [-127, 127], exact in i8; `as u8` is the
+                            // intended two's-complement byte reinterpret,
+                            // inverted by `as i8` in load_rows.
                             *code = quant(c) as i8 as u8;
                         }
                     }
                     KvDtype::Int4 => {
                         let crow = &mut codes[row * (d / 2)..(row + 1) * (d / 2)];
                         for (i, byte) in crow.iter_mut().enumerate() {
+                            // CLAMPED: quant() clamps to [-qmax, qmax] =
+                            // [-7, 7], so the +7 bias lands in [0, 14] —
+                            // a valid nibble.
                             let lo = (quant(2 * i) as i32 + 7) as u8;
-                            let hi = (quant(2 * i + 1) as i32 + 7) as u8;
+                            let hi = (quant(2 * i + 1) as i32 + 7) as u8; // CLAMPED: see lo
                             *byte = lo | (hi << 4);
                         }
                     }
@@ -486,6 +493,9 @@ impl Page {
                         KvDtype::Int8 => {
                             let crow = &codes[r * d..(r + 1) * d];
                             for (c, (o, &b)) in orow.iter_mut().zip(crow).enumerate() {
+                                // CLAMPED: `as i8` is the sign-restoring
+                                // reinterpret of the byte written by
+                                // store_rows, then widened — no truncation.
                                 *o = (b as i8) as f32 * srow[c / sg];
                             }
                         }

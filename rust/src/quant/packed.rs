@@ -66,6 +66,7 @@ pub fn f32_to_f16_bits(x: f32) -> u16 {
         if n >= 1024 {
             return sign | 0x0400; // rounds up into the smallest normal
         }
+        // CLAMPED: n < 1024 (checked above), so it fits the 10-bit field.
         return sign | n as u16;
     }
     // normal: mantissa in [1024, 2048) units of 2^(e-10)
@@ -74,6 +75,8 @@ pub fn f32_to_f16_bits(x: f32) -> u16 {
     if e > 15 {
         return sign | 0x7c00; // inf/overflow
     }
+    // CLAMPED: e in [-14, 15] here so e+15 in [1, 30] (5-bit field); mant
+    // in [1024, 2048) so mant-1024 in [0, 1024) (10-bit field).
     sign | (((e + 15) as u16) << 10) | ((mant - 1024) as u16)
 }
 
@@ -128,6 +131,7 @@ fn pack_values(values: impl Iterator<Item = u8>, bits: usize) -> Vec<u32> {
 fn unpack_value(words: &[u32], bits: usize, index: usize) -> u8 {
     let per_word = 32 / bits;
     let w = words[index / per_word];
+    // CLAMPED: masked to `bits` <= 8 low bits before the cast.
     ((w >> ((index % per_word) * bits)) & ((1 << bits) - 1)) as u8
 }
 
@@ -141,6 +145,12 @@ fn unpack_value(words: &[u32], bits: usize, index: usize) -> u8 {
 /// whole words (codes never straddle words — `pack_values` flushes early),
 /// and finishes any ragged word/group tail scalar.  Callable only when
 /// `per_word >= 8`, i.e. bits ≤ 4 — the serving bit widths.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2 (dispatch goes through
+/// `simd::level()`), that `per_word >= 8`, and that
+/// `row_words[(start + out.len() - 1) / per_word]` is in bounds; the
+/// vector stores cover `out[..]` exactly, 8 lanes at a time.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn dequant_span_avx2(
@@ -243,8 +253,12 @@ fn gemm_row_sse2(ar: &[f32], tile_t: &[f32], nb: usize, out: &mut [f32]) {
     use std::arch::x86_64::*;
     let k = ar.len();
     let mut j = 0;
-    // SAFETY: j-ranges stay within nb; tile_t is k*nb; unaligned load/store.
     while j + 16 <= nb {
+        // SAFETY: j + 16 <= nb so the four unaligned 4-lane load/store
+        // blocks at j..j+16 stay inside `out` (len nb) and each
+        // `tile_t[kk*nb + j ..]` access inside `tile_t` (len k*nb);
+        // `kk < k` bounds get_unchecked on `ar`. SSE2 is the x86-64
+        // baseline, so the intrinsics are always available.
         unsafe {
             let mut a0 = _mm_setzero_ps();
             let mut a1 = _mm_setzero_ps();
@@ -267,6 +281,9 @@ fn gemm_row_sse2(ar: &[f32], tile_t: &[f32], nb: usize, out: &mut [f32]) {
         j += 16;
     }
     while j < nb {
+        // SAFETY: nb % 4 == 0 (debug-asserted by gemm_row) and j < nb, so
+        // the 4-lane load/store at j..j+4 stays inside `out` and
+        // `tile_t[kk*nb + j ..]`; SSE2 is the x86-64 baseline.
         unsafe {
             let mut acc = _mm_setzero_ps();
             for kk in 0..k {
@@ -280,6 +297,11 @@ fn gemm_row_sse2(ar: &[f32], tile_t: &[f32], nb: usize, out: &mut [f32]) {
     }
 }
 
+/// # Safety
+/// Caller must ensure the CPU supports AVX2 (dispatch goes through
+/// `simd::level()`) and `nb % 4 == 0` with `out.len() == nb`,
+/// `tile_t.len() == ar.len() * nb`: every 64/8/4-lane block below stays
+/// inside those bounds.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn gemm_row_avx2(ar: &[f32], tile_t: &[f32], nb: usize, out: &mut [f32]) {
@@ -340,6 +362,8 @@ impl PackedTensor {
             words.extend(std::iter::repeat(0).take(words_per_row - row_words.len()));
         }
         let scales_f16 = q.scales.iter().map(|&s| f32_to_f16_bits(s)).collect();
+        // CLAMPED: GroupQuant zero-points are clamped to [0, qmax] by the
+        // codec (the PR-2 single-sign-group fix), so z fits `bits` bits.
         let zero_words = pack_values(q.zeros.iter().map(|&z| z as u8), bits.max(1));
         PackedTensor {
             scheme: q.scheme,
@@ -578,6 +602,22 @@ mod tests {
             assert!((x - y).abs() <= tol, "{x} -> {y}");
         }
         assert!(f16_bits_to_f32(f32_to_f16_bits(1e30)).is_infinite());
+    }
+
+    #[test]
+    fn miri_small_pack_roundtrip() {
+        // Miri-sized: one row, three 4-bit groups, fixed inputs. The
+        // exhaustive and property tests in this module are too slow under
+        // the interpreter; the nightly verify workflow (verify.yml) runs
+        // `cargo miri test -- miri_` with INVAREXPLORE_SIMD=scalar so the
+        // unsafe packed kernels get checked on their scalar path.
+        let scheme = QuantScheme::new(4, 32);
+        let w = Tensor::from_vec(1, 96, (0..96).map(|i| i as f32 * 0.25 - 12.0).collect());
+        let packed = PackedTensor::pack(&quantize(&w, scheme));
+        let dense = packed.unpack();
+        let mut row = vec![0.0f32; 96];
+        packed.dequant_row_into(0, &mut row);
+        assert_eq!(row.as_slice(), dense.row(0));
     }
 
     #[test]

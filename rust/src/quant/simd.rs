@@ -81,6 +81,7 @@ fn init() -> SimdLevel {
     };
     // racing first calls may both log; harmless (same line) and lock-free
     crate::info!("simd dispatch: {lvl:?} (detected {hw:?})");
+    // CLAMPED: SimdLevel discriminants are 0..=2, well inside u8.
     LEVEL.store(lvl as u8, Ordering::Relaxed);
     lvl
 }
@@ -90,6 +91,7 @@ fn init() -> SimdLevel {
 /// compare tiers without mutating the environment (see the getenv/setenv
 /// UB note in `util::pool`'s tests).
 pub fn set_simd_level(lvl: SimdLevel) {
+    // CLAMPED: SimdLevel discriminants are 0..=2, well inside u8.
     LEVEL.store(lvl.min(detect()) as u8, Ordering::Relaxed);
 }
 

@@ -9,6 +9,9 @@
 //! [`PackedModel::unpacked_weights`] (see
 //! `packed_forward_bit_identical_to_unpacked_dense`).
 
+// DETERMINISM: HashMap holds the packed linears for keyed lookup by
+// parameter name only; the forward pass asks for specific names, so
+// iteration order never influences compute or output.
 use std::collections::HashMap;
 
 use crate::model::native::DecoderParams;
@@ -36,6 +39,11 @@ impl PackedModel {
     pub fn new(fp: Weights, packed: Vec<(String, PackedTensor)>) -> PackedModel {
         let mut map = HashMap::new();
         for (name, p) in packed {
+            // PANIC-OK: construction-time contract with the packer, not a
+            // request path — pack_model/from_allocation only emit names
+            // drawn from `fp.config`'s parameter table, and a caller
+            // handing us an unknown name is a programming error we want
+            // loud at startup, before any request is accepted.
             let expect = fp.config.param_shape(&name).expect("known parameter");
             assert_eq!((p.rows, p.cols), expect, "packed {name:?}: shape mismatch");
             map.insert(name, p);

@@ -19,6 +19,9 @@
 //! independent kernels), pinned by `hit_continues_bit_identically` here and
 //! `prop_prefix_cache_is_transparent` in `serve::scheduler`.
 
+// DETERMINISM: HashSet deduplicates page pointers when accounting unique
+// bytes; only its membership and the commutative byte sum are used, so
+// iteration order cannot affect eviction decisions or metrics.
 use std::collections::HashSet;
 
 use crate::model::native::KvCache;
@@ -224,6 +227,9 @@ impl PrefixCache {
     /// plus O(nodes) per evicted leaf — not a full unique-byte recount per
     /// eviction.
     pub fn enforce_budget(&mut self) {
+        // DETERMINISM: refcount map keyed by page pointer; eviction order
+        // comes from LRU `used` stamps and the byte total is a commutative
+        // sum, so map iteration order never changes which leaf is evicted.
         use std::collections::HashMap;
         // ptr -> (bytes, refs across all nodes)
         fn collect(nodes: &[Node], counts: &mut HashMap<usize, (usize, usize)>) {

@@ -22,6 +22,9 @@
 //! within a group chain off their predecessor's cache, so same-round
 //! sharing is captured without serializing unrelated prompts.
 
+// DETERMINISM: HashSet here backs the cancellation registry and admitted-id
+// tracking — membership tests and keyed removal only; no iteration order
+// ever reaches scheduling decisions or completions.
 use std::collections::HashSet;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -105,28 +108,35 @@ pub struct CancelHandle {
 }
 
 impl CancelHandle {
+    /// Lock the id set, recovering from poison: the registry holds a plain
+    /// `HashSet`, so a panic on another thread cannot leave it in a
+    /// torn state — worst case a cancellation is retained, never invented.
+    fn ids(&self) -> std::sync::MutexGuard<'_, HashSet<usize>> {
+        self.ids.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     pub fn cancel(&self, id: usize) {
-        self.ids.lock().unwrap().insert(id);
+        self.ids().insert(id);
     }
 
     pub fn is_cancelled(&self, id: usize) -> bool {
-        self.ids.lock().unwrap().contains(&id)
+        self.ids().contains(&id)
     }
 
     fn snapshot(&self) -> HashSet<usize> {
-        self.ids.lock().unwrap().clone()
+        self.ids().clone()
     }
 
     /// Drop a consumed id so the set cannot grow unboundedly and a later
     /// request reusing the id is not spuriously cancelled.
     fn clear_id(&self, id: usize) {
-        self.ids.lock().unwrap().remove(&id);
+        self.ids().remove(&id);
     }
 
     /// Drop everything — called when a run drains, at which point any
     /// remaining id matches no queued or in-flight request.
     fn clear_all(&self) {
-        self.ids.lock().unwrap().clear();
+        self.ids().clear();
     }
 }
 
@@ -620,6 +630,9 @@ fn advance_speculative<P: DecoderParams + ?Sized>(
     } else {
         s.generated[dc_len - prompt.len()..].to_vec()
     };
+    // PANIC-OK: draft_cache is Some for every slot that reaches this
+    // function — advance_speculative is only called when a draft model is
+    // attached, and admission creates the draft cache alongside the slot.
     let dc = s.draft_cache.as_mut().expect("speculative slot has a draft cache");
     let drafts = spec::propose(draft, dc, &gap, k);
 
@@ -654,6 +667,8 @@ fn advance_speculative<P: DecoderParams + ?Sized>(
     //    prefix backing the committed tokens, the draft whatever prefix of
     //    it the drafting pass already holds
     s.cache.truncate(n0 + committed_n);
+    // PANIC-OK: same invariant as the propose step above — draft_cache is
+    // Some for the lifetime of a speculative slot.
     let dc = s.draft_cache.as_mut().expect("speculative slot has a draft cache");
     let keep = dc.len().min(n0 + committed_n);
     dc.truncate(keep);
@@ -808,6 +823,26 @@ mod tests {
         assert_eq!(done[1].finish, FinishReason::Length);
         assert_eq!(done[1].generated.len(), 3);
         assert_eq!(done[3].generated.len(), 2);
+    }
+
+    #[test]
+    fn cancel_handle_survives_a_poisoned_lock() {
+        // Regression companion to the CancelHandle poison-recovery change:
+        // a panic on a thread holding the registry lock must not cascade
+        // into every later cancel/is_cancelled call.
+        let h = CancelHandle::default();
+        h.cancel(1);
+        let h2 = h.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = h2.ids.lock().unwrap();
+            panic!("poison the registry lock");
+        })
+        .join();
+        h.cancel(2); // must not panic
+        assert!(h.is_cancelled(1));
+        assert!(h.is_cancelled(2));
+        h.clear_all();
+        assert!(!h.is_cancelled(2));
     }
 
     // -- satellite: stop tokens / stop sequences ----------------------------

@@ -68,12 +68,13 @@ pub fn propose<D: DecoderParams + ?Sized>(
     debug_assert!(k >= 1, "propose: k must be >= 1");
     debug_assert!(!gap.is_empty(), "gap must include at least the pending token");
     let mut drafts = Vec::with_capacity(k);
-    let mut logits = forward_cached(draft, cache, gap);
-    drafts.push(argmax(&logits) as i32);
+    let logits = forward_cached(draft, cache, gap);
+    let mut pending = argmax(&logits) as i32;
+    drafts.push(pending);
     while drafts.len() < k {
-        let pending = *drafts.last().expect("at least one draft");
-        logits = forward_cached(draft, cache, &[pending]);
-        drafts.push(argmax(&logits) as i32);
+        let logits = forward_cached(draft, cache, &[pending]);
+        pending = argmax(&logits) as i32;
+        drafts.push(pending);
     }
     drafts
 }

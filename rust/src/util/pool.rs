@@ -67,7 +67,20 @@ where
 /// (Rust 2021 disjoint capture would otherwise grab the raw field, which is
 /// not `Send`).
 struct SendPtr<T>(*mut T);
+// SAFETY: SendPtr is only ever constructed over a buffer that outlives the
+// `thread::scope` in which it is shared, and every user partitions writes
+// so no two threads touch the same element: `parallel_map` writes slot `i`
+// only from the thread that won `i` from the atomic claim counter, and
+// `parallel_chunks_mut` hands each worker `[ci*chunk, min((ci+1)*chunk,
+// len))` for distinct claimed `ci`, so the derived `&mut` ranges never
+// alias. No references into the buffer exist outside the scope while
+// workers run (the owner is borrowed away by `as_mut_ptr`), so moving the
+// raw pointer to another thread cannot create aliased mutable access.
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: sharing `&SendPtr` across threads only exposes a copy of the raw
+// pointer; dereferencing stays unsafe at each use site, where the
+// disjoint-write argument above applies. T: Send is required by the public
+// entry points, which move T values across worker threads.
 unsafe impl<T> Sync for SendPtr<T> {}
 
 // manual impls: `derive` would wrongly require `T: Copy`
@@ -118,9 +131,15 @@ where
                 }
                 let start = ci * chunk;
                 let end = (start + chunk).min(len);
-                // SAFETY: chunks are disjoint by construction.
-                let slice =
-                    unsafe { std::slice::from_raw_parts_mut(base.get().add(start), end - start) };
+                // SAFETY: `ci` is claimed exactly once from the atomic
+                // counter and `ci < n_chunks`, so `start < len` and
+                // `end <= len`: the range is in bounds of the original
+                // slice, and ranges for distinct `ci` are disjoint, so no
+                // two live `&mut [T]` overlap. The scope keeps `data`
+                // borrowed until all workers join.
+                let slice = unsafe {
+                    std::slice::from_raw_parts_mut(base.get().add(start), end - start)
+                };
                 f(ci, slice);
             });
         }

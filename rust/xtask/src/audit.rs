@@ -1,0 +1,295 @@
+//! `cargo xtask audit` — measure the unsafe/panic/cast surface and compare
+//! it against the committed `rust/AUDIT.json` baseline.
+//!
+//! The report is hand-rendered JSON with globally-unique top-level scalar
+//! keys so `--check-baseline` can extract integers with a string scan
+//! instead of a JSON parser (this crate is dependency-free by design).
+//! Baseline comparison is directional: surface *counts* may shrink freely
+//! but may not grow past the committed numbers, and coverage invariants
+//! (every unsafe annotated, every serve panic site justified, every
+//! quant/model cast clamped) must hold exactly.
+
+use crate::lexer::{annotated, has_token, split_lines, test_regions};
+use crate::lint::{
+    has_cast, lint_source, rust_files, scope_of, CLAMPED_TAGS, DETERMINISM_TAGS, PANIC_OK_TAGS,
+    SAFETY_TAGS,
+};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+const PANIC_PATTERNS: &[&str] = &[
+    ".unwrap()",
+    ".expect(",
+    "panic!(",
+    "unreachable!(",
+    "todo!(",
+    "unimplemented!(",
+];
+const CAST_PATTERNS: &[&str] = &["as u8", "as u16", "as i8"];
+
+#[derive(Debug, Default, Clone)]
+pub struct FileStats {
+    pub unsafe_sites: u64,
+    pub panic_sites: u64,
+}
+
+#[derive(Debug, Default)]
+pub struct Audit {
+    pub unsafe_total: u64,
+    pub unsafe_safety_annotated: u64,
+    pub serve_panic_sites: u64,
+    pub serve_panic_ok: u64,
+    pub clamped_casts: u64,
+    pub casts_unjustified: u64,
+    pub determinism_notes: u64,
+    pub lint_violations: u64,
+    pub per_file: BTreeMap<String, FileStats>,
+}
+
+impl Audit {
+    pub fn serve_panic_reachable(&self) -> u64 {
+        self.serve_panic_sites - self.serve_panic_ok
+    }
+    pub fn unsafe_unannotated(&self) -> u64 {
+        self.unsafe_total - self.unsafe_safety_annotated
+    }
+}
+
+/// Scan the tree and compute the audit counters.
+pub fn audit_tree(base: &Path, roots: &[PathBuf]) -> std::io::Result<Audit> {
+    let mut a = Audit::default();
+    for root in roots {
+        for path in rust_files(root)? {
+            let rel = path.strip_prefix(base).unwrap_or(&path);
+            let rel = rel.to_string_lossy().replace('\\', "/");
+            let src = std::fs::read_to_string(&path)?;
+            let lines = split_lines(&src);
+            let tests = test_regions(&lines);
+            let scope = scope_of(&rel);
+            let mut fs = FileStats::default();
+
+            for (idx, line) in lines.iter().enumerate() {
+                let code = &line.code;
+                if has_token(code, "unsafe") {
+                    a.unsafe_total += 1;
+                    fs.unsafe_sites += 1;
+                    if annotated(&lines, idx, SAFETY_TAGS) {
+                        a.unsafe_safety_annotated += 1;
+                    }
+                }
+                if tests[idx] {
+                    continue;
+                }
+                if scope.serve && PANIC_PATTERNS.iter().any(|p| code.contains(p)) {
+                    a.serve_panic_sites += 1;
+                    fs.panic_sites += 1;
+                    if annotated(&lines, idx, PANIC_OK_TAGS) {
+                        a.serve_panic_ok += 1;
+                    }
+                }
+                let casty = CAST_PATTERNS.iter().any(|p| has_cast(code, p));
+                if (scope.quant || scope.model) && casty {
+                    if code.contains("clamp(") || annotated(&lines, idx, CLAMPED_TAGS) {
+                        a.clamped_casts += 1;
+                    } else {
+                        a.casts_unjustified += 1;
+                    }
+                }
+                if (scope.quant || scope.model || scope.serve)
+                    && annotated(&lines, idx, DETERMINISM_TAGS)
+                    && code.contains("std::collections::")
+                {
+                    a.determinism_notes += 1;
+                }
+            }
+            if fs.unsafe_sites > 0 || fs.panic_sites > 0 {
+                a.per_file.insert(rel.clone(), fs);
+            }
+            a.lint_violations += lint_source(&rel, &src).len() as u64;
+        }
+    }
+    Ok(a)
+}
+
+/// Render the audit as stable, diff-friendly JSON.
+pub fn render_json(a: &Audit) -> String {
+    let kv = |k: &str, v: u64| format!("  \"{k}\": {v},\n");
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": 1,\n");
+    s.push_str(&kv("unsafe_total", a.unsafe_total));
+    s.push_str(&kv("unsafe_safety_annotated", a.unsafe_safety_annotated));
+    s.push_str(&kv("unsafe_unannotated", a.unsafe_unannotated()));
+    s.push_str(&kv("serve_panic_sites", a.serve_panic_sites));
+    s.push_str(&kv("serve_panic_ok", a.serve_panic_ok));
+    s.push_str(&kv("serve_panic_reachable", a.serve_panic_reachable()));
+    s.push_str(&kv("clamped_casts", a.clamped_casts));
+    s.push_str(&kv("casts_unjustified", a.casts_unjustified));
+    s.push_str(&kv("determinism_notes", a.determinism_notes));
+    s.push_str(&kv("lint_violations", a.lint_violations));
+    s.push_str("  \"per_file\": {\n");
+    let n = a.per_file.len();
+    for (i, (file, fs)) in a.per_file.iter().enumerate() {
+        let (u, p) = (fs.unsafe_sites, fs.panic_sites);
+        let sep = if i + 1 < n { "," } else { "" };
+        s.push_str(&format!(
+            "    \"{file}\": {{ \"unsafe\": {u}, \"panic\": {p} }}{sep}\n"
+        ));
+    }
+    s.push_str("  },\n");
+    // Dynamic-analysis clean bill. Maintained by hand when the nightly
+    // verify workflow (.github/workflows/verify.yml) changes status; the
+    // static counters above are regenerated by `cargo xtask audit --write`.
+    let dynamic = [
+        ("miri", "clean: util::pool + scalar quant::packed, weekly"),
+        ("asan", "clean: pool + scheduler + packed test suites"),
+        ("tsan", "clean: pool + scheduler test suites"),
+        ("loom", "clean: pool partitioning + cancel registry models"),
+    ];
+    s.push_str("  \"dynamic\": {\n");
+    let m = dynamic.len();
+    for (i, (k, v)) in dynamic.iter().enumerate() {
+        let sep = if i + 1 < m { "," } else { "" };
+        s.push_str(&format!("    \"{k}\": \"{v}\"{sep}\n"));
+    }
+    s.push_str("  }\n");
+    s.push_str("}\n");
+    s
+}
+
+/// Extract an integer value for a top-level scalar key from rendered JSON.
+/// Keys are globally unique by construction, so a string scan suffices.
+pub fn extract_int(json: &str, key: &str) -> Option<u64> {
+    let needle = format!("\"{key}\":");
+    let k = json.find(&needle)?;
+    let rest = json[k + needle.len()..].trim_start();
+    let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok()
+}
+
+/// Compare a freshly-computed audit against the committed baseline.
+/// Returns a list of human-readable failures (empty = pass).
+pub fn check_baseline(computed: &Audit, baseline_json: &str) -> Vec<String> {
+    let mut fails = Vec::new();
+    // Coverage invariants: exact, independent of the baseline.
+    let unsafe_bare = computed.unsafe_unannotated();
+    if unsafe_bare != 0 {
+        fails.push(format!("{unsafe_bare} unsafe site(s) lack a SAFETY justification"));
+    }
+    let panics_bare = computed.serve_panic_reachable();
+    if panics_bare != 0 {
+        fails.push(format!("{panics_bare} serve/ panic site(s) lack a PANIC-OK justification"));
+    }
+    let casts_bare = computed.casts_unjustified;
+    if casts_bare != 0 {
+        fails.push(format!("{casts_bare} cast site(s) lack a clamp or CLAMPED justification"));
+    }
+    let lints = computed.lint_violations;
+    if lints != 0 {
+        fails.push(format!("{lints} lint violation(s); run `cargo xtask lint`"));
+    }
+    // Directional surface ceilings vs the committed baseline: shrinking is
+    // free, growth demands a deliberate `cargo xtask audit --write`.
+    for (key, value) in [
+        ("unsafe_total", computed.unsafe_total),
+        ("serve_panic_sites", computed.serve_panic_sites),
+    ] {
+        match extract_int(baseline_json, key) {
+            Some(base) if value > base => {
+                fails.push(format!("{key} grew {base} -> {value}; re-baseline if intended"));
+            }
+            Some(_) => {}
+            None => fails.push(format!("baseline AUDIT.json missing key {key}")),
+        }
+    }
+    fails
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn audit_of(rel: &str, src: &str) -> Audit {
+        let mut a = Audit::default();
+        let lines = split_lines(src);
+        let tests = test_regions(&lines);
+        let scope = scope_of(rel);
+        for (idx, line) in lines.iter().enumerate() {
+            let code = &line.code;
+            if has_token(code, "unsafe") {
+                a.unsafe_total += 1;
+                if annotated(&lines, idx, SAFETY_TAGS) {
+                    a.unsafe_safety_annotated += 1;
+                }
+            }
+            if tests[idx] {
+                continue;
+            }
+            if scope.serve && PANIC_PATTERNS.iter().any(|p| code.contains(p)) {
+                a.serve_panic_sites += 1;
+                if annotated(&lines, idx, PANIC_OK_TAGS) {
+                    a.serve_panic_ok += 1;
+                }
+            }
+        }
+        a.lint_violations += lint_source(rel, src).len() as u64;
+        a
+    }
+
+    #[test]
+    fn counts_unsafe_and_annotations() {
+        let src = "// SAFETY: fine\nunsafe { a() }\nunsafe { b() }\n";
+        let a = audit_of("src/util/x.rs", src);
+        assert_eq!(a.unsafe_total, 2);
+        assert_eq!(a.unsafe_safety_annotated, 1);
+        assert_eq!(a.unsafe_unannotated(), 1);
+    }
+
+    #[test]
+    fn render_and_extract_roundtrip() {
+        let a = Audit {
+            unsafe_total: 10,
+            unsafe_safety_annotated: 10,
+            serve_panic_sites: 3,
+            serve_panic_ok: 3,
+            ..Default::default()
+        };
+        let json = render_json(&a);
+        assert_eq!(extract_int(&json, "unsafe_total"), Some(10));
+        assert_eq!(extract_int(&json, "serve_panic_sites"), Some(3));
+        assert_eq!(extract_int(&json, "serve_panic_reachable"), Some(0));
+        assert_eq!(extract_int(&json, "missing_key"), None);
+    }
+
+    #[test]
+    fn baseline_blocks_growth_but_allows_shrink() {
+        let mut a = Audit {
+            unsafe_total: 4,
+            unsafe_safety_annotated: 4,
+            serve_panic_sites: 1,
+            serve_panic_ok: 1,
+            ..Default::default()
+        };
+        let baseline = render_json(&Audit {
+            unsafe_total: 4,
+            unsafe_safety_annotated: 4,
+            serve_panic_sites: 2,
+            serve_panic_ok: 2,
+            ..Default::default()
+        });
+        assert!(check_baseline(&a, &baseline).is_empty());
+        a.unsafe_total = 5;
+        a.unsafe_safety_annotated = 5;
+        let fails = check_baseline(&a, &baseline);
+        assert_eq!(fails.len(), 1);
+        assert!(fails[0].contains("unsafe_total grew"));
+    }
+
+    #[test]
+    fn baseline_requires_full_coverage() {
+        let a = Audit { unsafe_total: 2, unsafe_safety_annotated: 1, ..Default::default() };
+        let baseline = render_json(&a);
+        let fails = check_baseline(&a, &baseline);
+        assert!(fails.iter().any(|f| f.contains("SAFETY")));
+    }
+}

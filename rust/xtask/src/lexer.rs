@@ -1,0 +1,397 @@
+//! Line-oriented lexical pass over Rust source.
+//!
+//! Splits every line into a *code* channel and a *comment* channel:
+//! string/char literal contents are blanked (delimiters kept so column
+//! structure survives), comments are moved wholesale to the comment
+//! channel. Downstream lint rules then pattern-match on the code channel
+//! without false positives from literals, and look up annotations
+//! (`SAFETY:`, `CLAMPED:`, ...) on the comment channel.
+//!
+//! This is deliberately *lexical*, not syntactic: it has to run on stable
+//! with zero dependencies, and every invariant we check is expressible at
+//! line granularity. Handled Rust lexical edge cases: raw strings
+//! (`r"..."`, `r#"..."#`, any hash depth), byte strings, nested block
+//! comments, escaped char literals, and char-literal-vs-lifetime
+//! disambiguation (`'a'` vs `'a`).
+
+/// One source line after lexing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Line {
+    /// Code with literal contents blanked and comments removed.
+    pub code: String,
+    /// Concatenated comment text from this line (line + block comments).
+    pub comment: String,
+}
+
+#[derive(PartialEq, Eq, Clone, Copy)]
+enum Mode {
+    Normal,
+    LineComment,
+    BlockComment,
+    Str,
+    RawStr,
+}
+
+/// Lex `src` into per-line code/comment channels.
+pub fn split_lines(src: &str) -> Vec<Line> {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut lines = Vec::new();
+    let mut code: Vec<u8> = Vec::new();
+    let mut comment: Vec<u8> = Vec::new();
+    let mut mode = Mode::Normal;
+    let mut block_depth = 0u32;
+    let mut raw_hashes = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        let nxt = if i + 1 < n { b[i + 1] } else { 0 };
+        if c == b'\n' {
+            lines.push(flush(&mut code, &mut comment));
+            if matches!(mode, Mode::LineComment) {
+                mode = Mode::Normal;
+            }
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Normal => {
+                if c == b'/' && nxt == b'/' {
+                    mode = Mode::LineComment;
+                    i += 2;
+                } else if c == b'/' && nxt == b'*' {
+                    mode = Mode::BlockComment;
+                    block_depth = 1;
+                    i += 2;
+                } else if c == b'"' {
+                    code.push(b'"');
+                    mode = Mode::Str;
+                    i += 1;
+                } else if c == b'r' && (nxt == b'"' || nxt == b'#') {
+                    // Raw string candidate: r"..." or r#"..."# (any hash depth).
+                    let mut j = i + 1;
+                    let mut hashes = 0usize;
+                    while j < n && b[j] == b'#' {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if j < n && b[j] == b'"' {
+                        code.push(b'r');
+                        code.resize(code.len() + hashes, b'#');
+                        code.push(b'"');
+                        mode = Mode::RawStr;
+                        raw_hashes = hashes;
+                        i = j + 1;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == b'b' && nxt == b'"' {
+                    code.extend_from_slice(b"b\"");
+                    mode = Mode::Str;
+                    i += 2;
+                } else if c == b'\'' {
+                    // Char literal vs lifetime.
+                    if nxt == b'\\' {
+                        // Escaped char literal: consume through closing quote.
+                        code.extend_from_slice(b"' '");
+                        let mut j = i + 2;
+                        if j < n {
+                            j += 1; // the escaped character itself
+                        }
+                        while j < n && b[j] != b'\'' {
+                            j += 1;
+                        }
+                        i = j + 1;
+                    } else if i + 2 < n && b[i + 2] == b'\'' {
+                        code.extend_from_slice(b"' '");
+                        i += 3;
+                    } else {
+                        // Lifetime: keep the tick, continue normally.
+                        code.push(c);
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            Mode::BlockComment => {
+                if c == b'/' && nxt == b'*' {
+                    block_depth += 1;
+                    i += 2;
+                } else if c == b'*' && nxt == b'/' {
+                    block_depth -= 1;
+                    i += 2;
+                    if block_depth == 0 {
+                        mode = Mode::Normal;
+                    }
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == b'\\' {
+                    code.extend_from_slice(b"  ");
+                    i += 2;
+                } else if c == b'"' {
+                    code.push(b'"');
+                    mode = Mode::Normal;
+                    i += 1;
+                } else {
+                    code.push(b' ');
+                    i += 1;
+                }
+            }
+            Mode::RawStr => {
+                let h = raw_hashes;
+                let closes =
+                    c == b'"' && i + 1 + h <= n && b[i + 1..i + 1 + h].iter().all(|&x| x == b'#');
+                if closes {
+                    code.push(b'"');
+                    code.resize(code.len() + h, b'#');
+                    mode = Mode::Normal;
+                    i += 1 + h;
+                } else {
+                    code.push(b' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        lines.push(flush(&mut code, &mut comment));
+    }
+    lines
+}
+
+fn flush(code: &mut Vec<u8>, comment: &mut Vec<u8>) -> Line {
+    let line = Line {
+        code: String::from_utf8_lossy(code).into_owned(),
+        comment: String::from_utf8_lossy(comment).into_owned(),
+    };
+    code.clear();
+    comment.clear();
+    line
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// True if `tok` appears in `code` with non-identifier characters (or the
+/// line boundary) on both sides.
+pub fn has_token(code: &str, tok: &str) -> bool {
+    let cb = code.as_bytes();
+    let tb = tok.as_bytes();
+    let mut start = 0usize;
+    while start + tb.len() <= cb.len() {
+        match code[start..].find(tok) {
+            None => return false,
+            Some(off) => {
+                let k = start + off;
+                let before_ok = k == 0 || !is_ident(cb[k - 1]);
+                let after_ok = k + tb.len() >= cb.len() || !is_ident(cb[k + tb.len()]);
+                if before_ok && after_ok {
+                    return true;
+                }
+                start = k + 1;
+            }
+        }
+    }
+    false
+}
+
+/// Mark lines that belong to `#[cfg(test)]` items (the attribute line, the
+/// item header, and everything inside its braces), by brace-depth tracking
+/// on the code channel. String-blanking upstream means `{}` inside format
+/// strings cannot corrupt the depth count.
+pub fn test_regions(lines: &[Line]) -> Vec<bool> {
+    let mut in_test = vec![false; lines.len()];
+    let mut depth: i64 = 0;
+    let mut pending_attr = false;
+    let mut pending_depth: i64 = 0;
+    let mut region_stack: Vec<i64> = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let stripped = line.code.trim();
+        if stripped.starts_with("#[cfg") && has_token(&line.code, "test") {
+            pending_attr = true;
+            pending_depth = depth;
+            in_test[idx] = true;
+        }
+        if !region_stack.is_empty() || pending_attr {
+            in_test[idx] = true;
+        }
+        for ch in line.code.bytes() {
+            match ch {
+                b'{' => {
+                    if pending_attr {
+                        region_stack.push(depth);
+                        pending_attr = false;
+                    }
+                    depth += 1;
+                }
+                b'}' => {
+                    depth -= 1;
+                    if region_stack.last() == Some(&depth) {
+                        region_stack.pop();
+                    }
+                }
+                b';' => {
+                    // `#[cfg(test)] use ...;` — attribute consumed by a
+                    // braceless item at the same depth.
+                    if pending_attr && depth == pending_depth {
+                        pending_attr = false;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    in_test
+}
+
+/// True if line `idx` carries one of `tags` (with non-empty justification
+/// text after a `:`-terminated tag) in its own comment or in the contiguous
+/// comment/attribute block immediately above it.
+pub fn annotated(lines: &[Line], idx: usize, tags: &[&str]) -> bool {
+    let ok = |comment: &str| -> bool {
+        for t in tags {
+            if let Some(k) = comment.find(t) {
+                if t.ends_with(':') {
+                    if !comment[k + t.len()..].trim().is_empty() {
+                        return true;
+                    }
+                } else {
+                    return true;
+                }
+            }
+        }
+        false
+    };
+    if ok(&lines[idx].comment) {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let s = lines[j].code.trim();
+        if !s.is_empty() && !s.starts_with("#[") {
+            return false;
+        }
+        if ok(&lines[j].comment) {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(src: &str) -> Vec<String> {
+        split_lines(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn strips_line_comments() {
+        let l = split_lines("let x = 1; // SAFETY: fine\n");
+        assert_eq!(l[0].code, "let x = 1; ");
+        assert!(l[0].comment.contains("SAFETY: fine"));
+    }
+
+    #[test]
+    fn blanks_string_contents() {
+        let c = codes("let s = \"unsafe { as u8 }\";\n");
+        assert!(!c[0].contains("unsafe"));
+        assert!(!c[0].contains("as u8"));
+        assert!(c[0].contains('"'));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let c = codes("let s = r#\"has \"quotes\" and unsafe\"#; let y = 2;\n");
+        assert!(!c[0].contains("unsafe"));
+        assert!(c[0].contains("let y = 2;"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let c = codes("a /* outer /* inner */ still comment */ b\n");
+        assert_eq!(c[0].replace(' ', ""), "ab");
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let c = codes("let c = '{'; fn f<'a>(x: &'a str) {}\n");
+        // The brace inside the char literal must be blanked...
+        assert!(!c[0].contains('{') || c[0].matches('{').count() == 1);
+        // ...while the lifetime tick survives without eating code.
+        assert!(c[0].contains("&'a str"));
+    }
+
+    #[test]
+    fn escaped_char_literal() {
+        let c = codes("let q = '\\''; let z = 1;\n");
+        assert!(c[0].contains("let z = 1;"));
+    }
+
+    #[test]
+    fn format_string_braces_do_not_break_depth() {
+        let src = "#[cfg(test)]\nmod t {\n    fn f() { let _ = \"{{{}}\"; }\n}\nfn g() {}\n";
+        let lines = split_lines(src);
+        let regions = test_regions(&lines);
+        assert_eq!(regions, vec![true, true, true, true, false]);
+    }
+
+    #[test]
+    fn cfg_test_use_item_does_not_capture_rest_of_file() {
+        let src = "#[cfg(test)]\nuse crate::x;\nfn live() {}\n";
+        let lines = split_lines(src);
+        let regions = test_regions(&lines);
+        assert!(regions[0] && regions[1]);
+        assert!(!regions[2]);
+    }
+
+    #[test]
+    fn token_boundaries() {
+        assert!(has_token("unsafe {", "unsafe"));
+        assert!(!has_token("unsafer {", "unsafe"));
+        assert!(!has_token("an_unsafe {", "unsafe"));
+        assert!(has_token("use std::collections::HashMap;", "HashMap"));
+    }
+
+    #[test]
+    fn annotation_same_line_and_above() {
+        let src = "// SAFETY: ptr valid\nunsafe { x() }\nunsafe { y() } // SAFETY: y ok\n";
+        let lines = split_lines(src);
+        assert!(annotated(&lines, 1, &["SAFETY:"]));
+        assert!(annotated(&lines, 2, &["SAFETY:"]));
+        assert!(!annotated(&lines, 0, &["CLAMPED:"]));
+    }
+
+    #[test]
+    fn empty_justification_rejected() {
+        let lines = split_lines("// SAFETY:\nunsafe { x() }\n");
+        assert!(!annotated(&lines, 1, &["SAFETY:"]));
+    }
+
+    #[test]
+    fn annotation_blocked_by_code_line() {
+        let lines = split_lines("// SAFETY: for the other block\nlet a = 1;\nunsafe { x() }\n");
+        assert!(!annotated(&lines, 2, &["SAFETY:"]));
+    }
+
+    #[test]
+    fn doc_safety_section_accepted() {
+        let src = "/// # Safety\n/// caller is checked\n#[inline]\nunsafe fn f() {}\n";
+        let lines = split_lines(src);
+        assert!(annotated(&lines, 3, &["SAFETY:", "# Safety"]));
+    }
+}

@@ -1,0 +1,30 @@
+//! Repo-native static analysis for the invarexplore workspace.
+//!
+//! Run as `cargo xtask lint` / `cargo xtask audit` (alias in
+//! `rust/.cargo/config.toml`). See the README "Correctness tooling"
+//! section for the rule catalogue and annotation grammar.
+
+pub mod audit;
+pub mod lexer;
+pub mod lint;
+
+use std::path::PathBuf;
+
+/// The `rust/` workspace directory (parent of this crate).
+pub fn workspace_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask lives inside the workspace")
+        .to_path_buf()
+}
+
+/// Default lint/audit roots, relative to the workspace dir. `xtask/tests`
+/// is excluded on purpose: it holds fixture files with seeded violations.
+pub fn default_roots() -> Vec<PathBuf> {
+    let base = workspace_root();
+    ["src", "benches", "xla-stub/src", "xtask/src"]
+        .iter()
+        .map(|r| base.join(r))
+        .filter(|p| p.is_dir())
+        .collect()
+}

@@ -1,0 +1,332 @@
+//! Repo-specific invariant lints.
+//!
+//! Four rules, each tied to a historical or structural failure mode of
+//! this codebase (see README "Correctness tooling"):
+//!
+//! 1. `undocumented-unsafe` — any `unsafe` keyword without a `SAFETY:`
+//!    (or `# Safety` doc section) justification. Applies everywhere,
+//!    tests included: unsound test helpers are still unsound.
+//! 2. `unclamped-cast` — truncating integer casts (`as u8` / `as u16` /
+//!    `as i8`) in `quant/` or `model/` without a same-line `clamp(` or a
+//!    `CLAMPED:` justification. This is the PR-2 bug class: an unclamped
+//!    `z as u8` zero-point silently corrupted PackedTensor for
+//!    single-sign groups.
+//! 3. `serve-panic-path` — `unwrap`/`expect`/`panic!`-family calls in
+//!    `serve/` outside a `PANIC-OK: <why unreachable>` annotation.
+//!    Malformed requests must end in `FinishReason::Rejected`, never
+//!    abort a batch.
+//! 4. `nondet-*` — nondeterminism hazards in bit-identity code:
+//!    `std::collections::HashMap`/`HashSet` imports (iteration order) in
+//!    `quant/`, `model/`, `serve/`; wall clocks (`Instant`/`SystemTime`)
+//!    in `quant/`, `model/`; ambient RNG (`thread_rng`, `from_entropy`,
+//!    `RandomState`, `getrandom`) anywhere in those three. Each needs a
+//!    `DETERMINISM:` note arguing why determinism is preserved.
+//!
+//! Every escape hatch is a per-site annotation with mandatory
+//! justification text — there is no file-level or blanket exemption.
+
+use crate::lexer::{annotated, has_token, split_lines, test_regions, Line};
+use std::path::{Path, PathBuf};
+
+pub const SAFETY_TAGS: &[&str] = &["SAFETY:", "# Safety"];
+pub const CLAMPED_TAGS: &[&str] = &["CLAMPED:"];
+pub const PANIC_OK_TAGS: &[&str] = &["PANIC-OK:"];
+pub const DETERMINISM_TAGS: &[&str] = &["DETERMINISM:"];
+
+const PANIC_PATTERNS: &[&str] = &[
+    ".unwrap()",
+    ".expect(",
+    "panic!(",
+    "unreachable!(",
+    "todo!(",
+    "unimplemented!(",
+];
+const CAST_PATTERNS: &[&str] = &["as u8", "as u16", "as i8"];
+const RNG_TOKENS: &[&str] = &["thread_rng", "from_entropy", "RandomState", "getrandom"];
+const CLOCK_TOKENS: &[&str] = &["Instant", "SystemTime"];
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub snippet: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.snippet)
+    }
+}
+
+/// Path scope of a file, derived from its directory components.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Scope {
+    pub quant: bool,
+    pub model: bool,
+    pub serve: bool,
+}
+
+pub fn scope_of(rel: &str) -> Scope {
+    let mut s = Scope::default();
+    for comp in rel.split(['/', '\\']) {
+        match comp {
+            "quant" => s.quant = true,
+            "model" => s.model = true,
+            "serve" => s.serve = true,
+            _ => {}
+        }
+    }
+    s
+}
+
+fn snippet(code: &str) -> String {
+    let t = code.trim();
+    let mut s: String = t.chars().take(60).collect();
+    if t.chars().count() > 60 {
+        s.push_str("...");
+    }
+    s
+}
+
+/// True if `code` contains `pat` as a token-bounded phrase (the character
+/// after the match must not extend an identifier, so `as u8` does not
+/// match inside `as u8x16`).
+pub fn has_cast(code: &str, pat: &str) -> bool {
+    let cb = code.as_bytes();
+    let mut start = 0usize;
+    while let Some(off) = code[start..].find(pat) {
+        let k = start + off;
+        let before_ok = k == 0 || !(cb[k - 1].is_ascii_alphanumeric() || cb[k - 1] == b'_');
+        let end = k + pat.len();
+        let after_ok = end >= cb.len() || !(cb[end].is_ascii_alphanumeric() || cb[end] == b'_');
+        if before_ok && after_ok {
+            return true;
+        }
+        start = k + 1;
+    }
+    false
+}
+
+/// Lint one file's source. `rel` is the repo-relative path used both for
+/// diagnostics and for rule scoping.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Violation> {
+    let lines = split_lines(src);
+    let tests = test_regions(&lines);
+    let scope = scope_of(rel);
+    let mut out = Vec::new();
+
+    let mut push = |idx: usize, rule: &'static str, line: &Line| {
+        out.push(Violation {
+            file: rel.to_string(),
+            line: idx + 1,
+            rule,
+            snippet: snippet(&line.code),
+        });
+    };
+
+    for (idx, line) in lines.iter().enumerate() {
+        let code = &line.code;
+
+        // Rule 1: undocumented unsafe. Everywhere, tests included.
+        if has_token(code, "unsafe") && !annotated(&lines, idx, SAFETY_TAGS) {
+            push(idx, "undocumented-unsafe", line);
+        }
+
+        if tests[idx] {
+            continue;
+        }
+
+        // Rule 2: truncating casts in quant/ and model/.
+        if (scope.quant || scope.model)
+            && CAST_PATTERNS.iter().any(|p| has_cast(code, p))
+            && !code.contains("clamp(")
+            && !annotated(&lines, idx, CLAMPED_TAGS)
+        {
+            push(idx, "unclamped-cast", line);
+        }
+
+        // Rule 3: panic paths in serve/.
+        if scope.serve
+            && PANIC_PATTERNS.iter().any(|p| code.contains(p))
+            && !annotated(&lines, idx, PANIC_OK_TAGS)
+        {
+            push(idx, "serve-panic-path", line);
+        }
+
+        // Rule 4: nondeterminism hazards.
+        if scope.quant || scope.model || scope.serve {
+            if code.contains("std::collections::")
+                && (has_token(code, "HashMap") || has_token(code, "HashSet"))
+                && !annotated(&lines, idx, DETERMINISM_TAGS)
+            {
+                push(idx, "nondet-hash-iteration", line);
+            }
+            if RNG_TOKENS.iter().any(|t| has_token(code, t))
+                && !annotated(&lines, idx, DETERMINISM_TAGS)
+            {
+                push(idx, "nondet-rng", line);
+            }
+        }
+        if (scope.quant || scope.model)
+            && CLOCK_TOKENS.iter().any(|t| has_token(code, t))
+            && !annotated(&lines, idx, DETERMINISM_TAGS)
+        {
+            push(idx, "nondet-clock", line);
+        }
+    }
+    out
+}
+
+/// Recursively collect `.rs` files under `root`, sorted for deterministic
+/// output, skipping build artifacts.
+pub fn rust_files(root: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut files = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<_> = std::fs::read_dir(&dir)?
+            .collect::<Result<Vec<_>, _>>()?
+            .into_iter()
+            .map(|e| e.path())
+            .collect();
+        entries.sort();
+        for path in entries {
+            if path.is_dir() {
+                let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+                if name != "target" {
+                    stack.push(path);
+                }
+            } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+                files.push(path);
+            }
+        }
+    }
+    files.sort();
+    Ok(files)
+}
+
+/// Lint every `.rs` file under each root. Diagnostic paths are reported
+/// relative to `base` (typically the `rust/` workspace dir).
+pub fn lint_tree(base: &Path, roots: &[PathBuf]) -> std::io::Result<Vec<Violation>> {
+    let mut all = Vec::new();
+    for root in roots {
+        for path in rust_files(root)? {
+            let rel = path.strip_prefix(base).unwrap_or(&path);
+            let rel = rel.to_string_lossy().replace('\\', "/");
+            let src = std::fs::read_to_string(&path)?;
+            all.extend(lint_source(&rel, &src));
+        }
+    }
+    Ok(all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unsafe_without_safety_flagged() {
+        let v = lint_source("src/util/x.rs", "fn f() {\n    unsafe { g() }\n}\n");
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "undocumented-unsafe");
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn unsafe_with_safety_clean() {
+        let v = lint_source(
+            "src/util/x.rs",
+            "fn f() {\n    // SAFETY: g has no preconditions here\n    unsafe { g() }\n}\n",
+        );
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn unsafe_in_string_not_flagged() {
+        let v = lint_source("src/util/x.rs", "fn f() { let s = \"unsafe\"; }\n");
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn cast_rules_scoped_to_quant_and_model() {
+        let src = "fn f(x: u32) -> u8 { x as u8 }\n";
+        assert_eq!(lint_source("src/quant/x.rs", src).len(), 1);
+        assert_eq!(lint_source("src/model/x.rs", src).len(), 1);
+        assert!(lint_source("src/util/x.rs", src).is_empty());
+        assert!(lint_source("src/serve/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cast_with_clamp_or_annotation_clean() {
+        let clamped = "fn f(x: f32) -> u8 { x.clamp(0.0, 255.0) as u8 }\n";
+        assert!(lint_source("src/quant/x.rs", clamped).is_empty());
+        let ann = "fn f(x: u32) -> u8 {\n    // CLAMPED: caller masks\n    x as u8\n}\n";
+        assert!(lint_source("src/quant/x.rs", ann).is_empty());
+    }
+
+    #[test]
+    fn cast_token_boundary() {
+        // `as usize` must not match the `as u8`-style patterns; identifiers
+        // ending in the pattern must not match either.
+        let v = lint_source("src/quant/x.rs", "let y = x as usize;\n");
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn serve_panics_flagged_unless_panic_ok() {
+        let bad = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        let v = lint_source("src/serve/x.rs", bad);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "serve-panic-path");
+        let ok = "fn f() -> u32 {\n    // PANIC-OK: admit() rejects None\n    x.unwrap()\n}\n";
+        assert!(lint_source("src/serve/x.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn serve_test_code_exempt_from_panic_rule() {
+        let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { Some(1).unwrap(); }\n}\n";
+        assert!(lint_source("src/serve/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hashmap_import_needs_determinism_note() {
+        let bad = "use std::collections::HashMap;\n";
+        let v = lint_source("src/model/x.rs", bad);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "nondet-hash-iteration");
+        let ok = "// DETERMINISM: keyed lookups only\nuse std::collections::HashMap;\n";
+        assert!(lint_source("src/model/x.rs", ok).is_empty());
+        // BTreeMap is always fine.
+        assert!(lint_source("src/model/x.rs", "use std::collections::BTreeMap;\n").is_empty());
+    }
+
+    #[test]
+    fn clocks_banned_in_kernels_not_serve() {
+        let src = "use std::time::Instant;\n";
+        assert_eq!(lint_source("src/quant/x.rs", src).len(), 1);
+        assert_eq!(lint_source("src/model/x.rs", src).len(), 1);
+        // serve/ telemetry legitimately uses wall clocks.
+        assert!(lint_source("src/serve/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn ambient_rng_flagged() {
+        let v = lint_source("src/quant/x.rs", "let mut r = thread_rng();\n");
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "nondet-rng");
+    }
+
+    #[test]
+    fn empty_justification_is_a_violation() {
+        let src = "// PANIC-OK:\nfn f() { x.unwrap(); }\n";
+        let v = lint_source("src/serve/x.rs", src);
+        assert_eq!(v.len(), 1);
+    }
+
+    #[test]
+    fn display_has_file_line() {
+        let v = lint_source("src/serve/x.rs", "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n");
+        let s = v[0].to_string();
+        assert!(s.starts_with("src/serve/x.rs:1:"), "{s}");
+    }
+}

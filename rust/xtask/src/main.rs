@@ -1,0 +1,128 @@
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use xtask::audit::{audit_tree, check_baseline, render_json};
+use xtask::lint::lint_tree;
+use xtask::{default_roots, workspace_root};
+
+const USAGE: &str = "\
+usage: cargo xtask <command>
+
+commands:
+  lint [--root DIR]...        run the invariant lints (default roots:
+                              src, benches, xla-stub/src, xtask/src)
+  audit                       print the unsafe/panic/cast audit as JSON
+  audit --write               regenerate rust/AUDIT.json static counters
+  audit --check-baseline      fail if the surface regressed vs rust/AUDIT.json
+";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => cmd_lint(&args[1..]),
+        Some("audit") => cmd_audit(&args[1..]),
+        _ => {
+            eprint!("{USAGE}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn cmd_lint(args: &[String]) -> ExitCode {
+    let base = workspace_root();
+    let mut roots: Vec<PathBuf> = Vec::new();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => match it.next() {
+                Some(dir) => roots.push(PathBuf::from(dir)),
+                None => {
+                    eprintln!("--root needs a directory argument");
+                    return ExitCode::from(2);
+                }
+            },
+            other => {
+                eprintln!("unknown lint argument: {other}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    if roots.is_empty() {
+        roots = default_roots();
+    }
+    let violations = match lint_tree(&base, &roots) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("lint: io error: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    for v in &violations {
+        println!("{v}");
+    }
+    if violations.is_empty() {
+        println!("xtask lint: clean");
+        ExitCode::SUCCESS
+    } else {
+        println!("xtask lint: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn cmd_audit(args: &[String]) -> ExitCode {
+    let base = workspace_root();
+    let roots = default_roots();
+    let audit = match audit_tree(&base, &roots) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("audit: io error: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let json = render_json(&audit);
+    let baseline_path = base.join("AUDIT.json");
+    match args.first().map(String::as_str) {
+        None => {
+            print!("{json}");
+            ExitCode::SUCCESS
+        }
+        Some("--write") => {
+            if let Err(e) = std::fs::write(&baseline_path, &json) {
+                eprintln!("audit: cannot write {}: {e}", baseline_path.display());
+                return ExitCode::from(2);
+            }
+            println!("wrote {}", baseline_path.display());
+            ExitCode::SUCCESS
+        }
+        Some("--check-baseline") => {
+            let baseline = match std::fs::read_to_string(&baseline_path) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("audit: cannot read {}: {e}", baseline_path.display());
+                    return ExitCode::from(2);
+                }
+            };
+            let fails = check_baseline(&audit, &baseline);
+            if fails.is_empty() {
+                println!("xtask audit: surface within baseline");
+                println!(
+                    "  unsafe {}/{} annotated, serve panics {}/{} justified",
+                    audit.unsafe_safety_annotated,
+                    audit.unsafe_total,
+                    audit.serve_panic_ok,
+                    audit.serve_panic_sites
+                );
+                ExitCode::SUCCESS
+            } else {
+                for f in &fails {
+                    eprintln!("xtask audit: {f}");
+                }
+                ExitCode::FAILURE
+            }
+        }
+        Some(other) => {
+            eprintln!("unknown audit argument: {other}");
+            ExitCode::from(2)
+        }
+    }
+}

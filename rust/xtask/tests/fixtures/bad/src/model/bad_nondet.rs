@@ -1,0 +1,10 @@
+// Seeded violation fixture: nondeterminism hazards in a model/ kernel path.
+// Line 3: [nondet-hash-iteration]; lines 4 and 8: [nondet-clock].
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn weights() -> HashMap<String, f32> {
+    let m = HashMap::new();
+    let _t = Instant::now();
+    m
+}

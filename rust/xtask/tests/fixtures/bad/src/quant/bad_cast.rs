@@ -1,0 +1,9 @@
+// Seeded violation fixture: unclamped truncating cast in a quant/ path.
+// Line 4 must be reported as [unclamped-cast].
+pub fn zero_point(z: f32) -> u8 {
+    z as u8
+}
+
+pub fn fine_clamped(z: f32) -> u8 {
+    z.clamp(0.0, 255.0) as u8
+}

@@ -1,0 +1,5 @@
+// Seeded violation fixture: panic path in a serve/ request flow.
+// Line 4 must be reported as [serve-panic-path].
+pub fn lookup(slot: Option<u32>) -> u32 {
+    slot.unwrap()
+}

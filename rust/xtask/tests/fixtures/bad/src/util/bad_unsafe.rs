@@ -1,0 +1,5 @@
+// Seeded violation fixture: unsafe without a SAFETY justification.
+// Line 4 must be reported as [undocumented-unsafe].
+pub fn read_first(p: *const u8) -> u8 {
+    unsafe { *p }
+}

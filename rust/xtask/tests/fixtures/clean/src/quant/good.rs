@@ -1,0 +1,15 @@
+// Clean fixture: every invariant site carries its justification.
+use std::collections::BTreeMap;
+
+pub fn zero_point(z: f32) -> u8 {
+    z.clamp(0.0, 255.0) as u8
+}
+
+pub fn masked(w: u32) -> u8 {
+    // CLAMPED: masked to 8 bits on the same expression
+    (w & 0xff) as u8
+}
+
+pub fn scales() -> BTreeMap<String, f32> {
+    BTreeMap::new()
+}

@@ -1,0 +1,12 @@
+// Clean fixture: justified panic site plus a rejection-style flow.
+pub fn admit(prompt: &[i32]) -> Result<(), String> {
+    if prompt.is_empty() {
+        return Err("empty prompt".to_string());
+    }
+    Ok(())
+}
+
+pub fn slot_cache(c: Option<u32>) -> u32 {
+    // PANIC-OK: c is Some for every slot admitted by admit()
+    c.unwrap()
+}

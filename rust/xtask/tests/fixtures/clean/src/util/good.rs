@@ -1,0 +1,8 @@
+// Clean fixture: annotated unsafe.
+pub fn read_first(p: *const u8, len: usize) -> Option<u8> {
+    if len == 0 {
+        return None;
+    }
+    // SAFETY: len > 0 was checked above, so p points to at least one byte.
+    Some(unsafe { *p })
+}
