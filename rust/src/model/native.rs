@@ -777,6 +777,14 @@ fn forward_hidden<P: DecoderParams + ?Sized>(
     let pos = p.dense("pos");
     let mut x = Tensor::zeros(t_new, cfg.d_model);
     for (i, &tok) in tokens.iter().enumerate() {
+        // Callers (the serving scheduler rejects out-of-vocab prompts at
+        // admission) must uphold this; assert so a violation fails with a
+        // clear message instead of a wrapped `as usize` row index.
+        assert!(
+            tok >= 0 && (tok as usize) < cfg.vocab,
+            "token id {tok} outside vocab 0..{}",
+            cfg.vocab
+        );
         let er = emb.row(tok as usize);
         let pr = pos.row(p0 + i);
         let dst = x.row_mut(i);

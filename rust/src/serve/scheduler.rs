@@ -320,6 +320,17 @@ impl<'a, P: DecoderParams + ?Sized> Scheduler<'a, P> {
                         req.prompt.len(),
                         max_seq
                     )))
+                } else if let Some(&bad) =
+                    req.prompt.iter().find(|&&t| t < 0 || t as usize >= cfg.vocab)
+                {
+                    // A wild token id would otherwise reach the embedding
+                    // row lookup inside the parallel prefill and abort the
+                    // whole batch (negative ids wrap to huge row indices
+                    // through `as usize`).
+                    Some(FinishReason::Rejected(format!(
+                        "request {}: prompt token {} outside vocab 0..{}",
+                        req.id, bad, cfg.vocab
+                    )))
                 } else if req.max_new == 0 {
                     Some(FinishReason::Length)
                 } else {
@@ -823,6 +834,33 @@ mod tests {
         assert_eq!(done[1].finish, FinishReason::Length);
         assert_eq!(done[1].generated.len(), 3);
         assert_eq!(done[3].generated.len(), 2);
+    }
+
+    #[test]
+    fn out_of_vocab_prompt_rejects_without_aborting_the_batch() {
+        // Regression (found by the xtask panic-path triage): a prompt token
+        // outside the vocab used to reach the embedding row lookup inside
+        // the parallel prefill and panic the whole batch — negative ids
+        // wrap to huge row indices through `as usize`.
+        let w = test_weights();
+        let vocab = w.config.vocab as i32;
+        let mut s = Scheduler::new(&w, ServeOpts { max_batch: 2, ..Default::default() });
+        s.submit(Request::new(0, vec![1, vocab, 2], 3, Sampler::Greedy)); // id == vocab
+        s.submit(Request::new(1, vec![1, 2, 3], 3, Sampler::Greedy)); // fine
+        s.submit(Request::new(2, vec![1, -4, 2], 3, Sampler::Greedy)); // negative id
+        let (done, stats) = s.run();
+        assert_eq!(done.len(), 3, "every request yields a completion");
+        assert_eq!(stats.rejected, 2);
+        for bad in [0, 2] {
+            match &done[bad].finish {
+                FinishReason::Rejected(msg) => {
+                    assert!(msg.contains("outside vocab"), "{msg}")
+                }
+                other => panic!("expected rejection, got {other:?}"),
+            }
+        }
+        assert_eq!(done[1].finish, FinishReason::Length);
+        assert_eq!(done[1].generated.len(), 3);
     }
 
     #[test]
