@@ -24,6 +24,11 @@
 //! (default `1x64`) as a draft model that proposes `k` tokens per round,
 //! verified by the target in one chunked forward — completions are
 //! bit-identical to `SERVE_SPEC=0`, only faster.
+//!
+//! `INVAREXPLORE_TRACE=trace.json` turns the recorder on and, at the end,
+//! dumps a Chrome trace (load it in `chrome://tracing` / Perfetto to see
+//! each request's queue→prefill→decode lifecycle) and prints the
+//! Prometheus text rendering of the serve/kernel metrics.
 
 use invarexplore::baselines::{self, Method};
 use invarexplore::calib::CalibSet;
@@ -159,5 +164,10 @@ fn main() -> anyhow::Result<()> {
         println!("sample {} ({}): ...{tail:?} -> {head:?}", c.id, c.finish.label());
     }
     println!("metrics: {}", scheduler.metrics().to_json().to_string());
+    if let Some(path) = invarexplore::obs::trace_out_path() {
+        let n = invarexplore::obs::chrome::dump(&path)?;
+        println!("trace: {n} events -> {}", path.display());
+        print!("{}", invarexplore::obs::prometheus::render(scheduler.metrics()));
+    }
     Ok(())
 }

@@ -30,6 +30,13 @@ last ``PERF_DIFF_HISTORY_RUNS`` (default 10) runs: a sequence of
 single-run slowdowns that each stay under the threshold still trips a
 ``::warning::`` once the accumulated drift crosses it.  Drift checks are
 warn-only — they never fail the job.
+
+Suites may also carry a flat ``"counters"`` object (e.g. the achieved
+per-SIMD-tier GB/s the traced kernel pass records as
+``kernel_gemm_gbps_<tier>``).  Counters whose name contains ``gbps`` are
+treated as higher-is-better throughputs and get the same warn-only drift
+check against the history window's best value; other counters (like
+``trace_off_overhead_frac``) are carried for the record but not judged.
 """
 
 import json
@@ -49,6 +56,18 @@ def natural_key(path):
     return re.sub(r"\d+", lambda m: m.group().zfill(12), path)
 
 
+def bench_paths(root):
+    """All BENCH_*.json under root, natural-sorted (artifact dirs nest)."""
+    paths = []
+    if not os.path.isdir(root):
+        return paths
+    for dirpath, _dirnames, filenames in os.walk(root):
+        for fn in filenames:
+            if fn.startswith("BENCH_") and fn.endswith(".json"):
+                paths.append(os.path.join(dirpath, fn))
+    return sorted(paths, key=natural_key)
+
+
 def load_suites(root):
     """Map suite name -> ordered [(label, mean_s)] from BENCH_*.json under root.
 
@@ -58,14 +77,7 @@ def load_suites(root):
     the highest attempt's numbers win.
     """
     suites = {}
-    if not os.path.isdir(root):
-        return suites
-    paths = []
-    for dirpath, _dirnames, filenames in os.walk(root):
-        for fn in filenames:
-            if fn.startswith("BENCH_") and fn.endswith(".json"):
-                paths.append(os.path.join(dirpath, fn))
-    for path in sorted(paths, key=natural_key):
+    for path in bench_paths(root):
         try:
             with open(path) as f:
                 doc = json.load(f)
@@ -76,22 +88,57 @@ def load_suites(root):
     return suites
 
 
-def load_history(root):
-    """suite -> label -> [mean_s, ...] oldest-to-newest over the last
-    ``HISTORY_RUNS`` run subdirectories of ``root`` (natural-sorted, so
-    ``runs/12-1`` is newer than ``runs/9-1``)."""
-    history = {}
+def load_counters(root):
+    """Map suite name -> {counter: value} from the optional per-suite
+    ``"counters"`` object; suites without one map to ``{}``.  Same
+    highest-attempt-wins ordering as ``load_suites``."""
+    counters = {}
+    for path in bench_paths(root):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+            counters[doc["suite"]] = {
+                name: float(v) for name, v in doc.get("counters", {}).items()
+            }
+        except (OSError, ValueError, KeyError, TypeError, AttributeError) as e:
+            print(f"::warning::perf_diff: skipping unreadable {path}: {e}")
+    return counters
+
+
+def recent_run_dirs(root):
+    """The last ``HISTORY_RUNS`` run subdirectories of the history tree,
+    oldest-to-newest (natural-sorted, so ``runs/12-1`` is newer than
+    ``runs/9-1``)."""
     if not os.path.isdir(root):
-        return history
+        return []
     run_dirs = sorted(
         (d for d in os.listdir(root) if os.path.isdir(os.path.join(root, d))),
         key=natural_key,
     )
-    for d in run_dirs[-HISTORY_RUNS:]:
-        for suite, rows in load_suites(os.path.join(root, d)).items():
+    return [os.path.join(root, d) for d in run_dirs[-HISTORY_RUNS:]]
+
+
+def load_history(root):
+    """suite -> label -> [mean_s, ...] oldest-to-newest over the recent
+    history window."""
+    history = {}
+    for run in recent_run_dirs(root):
+        for suite, rows in load_suites(run).items():
             per_suite = history.setdefault(suite, {})
             for label, mean_s in rows:
                 per_suite.setdefault(label, []).append(mean_s)
+    return history
+
+
+def load_counter_history(root):
+    """suite -> counter -> [value, ...] oldest-to-newest over the recent
+    history window."""
+    history = {}
+    for run in recent_run_dirs(root):
+        for suite, vals in load_counters(run).items():
+            per_suite = history.setdefault(suite, {})
+            for name, v in vals.items():
+                per_suite.setdefault(name, []).append(v)
     return history
 
 
@@ -124,6 +171,33 @@ def drift_report(history, current):
     return drifted
 
 
+def counter_drift_report(history, current):
+    """Warn (never fail) on higher-is-better throughput counters —
+    ``gbps``-named values like the per-tier achieved GB/s — that have
+    dropped more than the threshold below the history window's best.
+    Returns the flagged counters."""
+    flagged = []
+    for suite, vals in sorted(current.items()):
+        hist = history.get(suite, {})
+        for name, value in sorted(vals.items()):
+            if "gbps" not in name:
+                continue  # not a judged throughput (e.g. overhead fractions)
+            past = [v for v in hist.get(name, []) if v > 0.0]
+            if len(past) < 2 or value <= 0.0:
+                continue  # no window to drift across
+            best = max(past)
+            if value * (1.0 + THRESHOLD) < best:
+                print(
+                    f"::warning::throughput drift over last {len(past)} runs: "
+                    f"{suite}/{name}: best {best:.2f} -> {value:.2f} "
+                    f"({value / best:.2f}x)"
+                )
+                flagged.append(f"{suite}/{name}")
+    if flagged:
+        print(f"perf_diff: {len(flagged)} throughput drift(s) flagged (warn-only)")
+    return flagged
+
+
 USAGE = "usage: perf_diff.py <baseline-dir> <current-dir> [--history <dir>]"
 
 
@@ -147,6 +221,7 @@ def main(argv):
         return 1
     if history_dir is not None:
         drift_report(load_history(history_dir), current)
+        counter_drift_report(load_counter_history(history_dir), load_counters(args[1]))
     if not baseline:
         print("perf_diff: no baseline trajectories (first run?); nothing to compare")
         return 0

@@ -15,7 +15,7 @@ perf_diff = importlib.util.module_from_spec(_SPEC)
 _SPEC.loader.exec_module(perf_diff)
 
 
-def write_suite(root, suite, rows):
+def write_suite(root, suite, rows, counters=None):
     root.mkdir(parents=True, exist_ok=True)
     doc = {
         "suite": suite,
@@ -24,6 +24,8 @@ def write_suite(root, suite, rows):
             for l, m in rows
         ],
     }
+    if counters is not None:
+        doc["counters"] = counters
     (root / f"BENCH_{suite}.json").write_text(json.dumps(doc))
 
 
@@ -167,6 +169,73 @@ def test_history_flag_requires_value(tmp_path):
         ["perf_diff.py", str(tmp_path / "base"), str(tmp_path / "cur"), "--history"]
     )
     assert rc == 2
+
+
+def test_load_counters_parses_and_defaults_empty(tmp_path):
+    write_suite(
+        tmp_path / "cur",
+        "s",
+        [("head", 1e-3)],
+        counters={"kernel_gemm_gbps_avx2": 12.5, "trace_off_overhead_frac": 0.002},
+    )
+    write_suite(tmp_path / "cur2", "bare", [("head", 1e-3)])  # no counters key
+    assert perf_diff.load_counters(str(tmp_path / "cur")) == {
+        "s": {"kernel_gemm_gbps_avx2": 12.5, "trace_off_overhead_frac": 0.002}
+    }
+    assert perf_diff.load_counters(str(tmp_path / "cur2")) == {"bare": {}}
+    assert perf_diff.load_counters(str(tmp_path / "nope")) == {}
+
+
+def run_counter_history(tmp_path, cur_counters, history_counters):
+    """history_counters: [(dirname, counters-dict)] — rows stay constant so
+    only the counter path can warn."""
+    write_suite(tmp_path / "base", "s", [("head", 1e-3)])
+    write_suite(tmp_path / "cur", "s", [("head", 1e-3)], counters=cur_counters)
+    for name, counters in history_counters:
+        write_suite(tmp_path / "hist" / name, "s", [("head", 1e-3)], counters=counters)
+    return perf_diff.main(
+        [
+            "perf_diff.py",
+            str(tmp_path / "base"),
+            str(tmp_path / "cur"),
+            "--history",
+            str(tmp_path / "hist"),
+        ]
+    )
+
+
+def test_gbps_counter_drop_warns_but_passes(tmp_path, capsys):
+    history = [
+        (f"runs-{i}-1", {"kernel_gemm_gbps_avx2": 10.0 + i}) for i in range(3)
+    ]
+    rc = run_counter_history(tmp_path, {"kernel_gemm_gbps_avx2": 7.0}, history)
+    out = capsys.readouterr().out
+    assert rc == 0, "counter drift is warn-only"
+    assert "throughput drift over last 3 runs" in out
+    assert "s/kernel_gemm_gbps_avx2" in out
+
+
+def test_gbps_counter_within_threshold_stays_quiet(tmp_path, capsys):
+    history = [(f"runs-{i}-1", {"kernel_gemm_gbps_avx2": 10.0}) for i in range(3)]
+    rc = run_counter_history(tmp_path, {"kernel_gemm_gbps_avx2": 9.5}, history)
+    assert rc == 0
+    assert "throughput drift" not in capsys.readouterr().out
+
+
+def test_non_gbps_counter_never_judged(tmp_path, capsys):
+    # overhead fractions are lower-is-better; the gbps heuristic must not
+    # flag them however much they move
+    history = [(f"runs-{i}-1", {"trace_off_overhead_frac": 0.001}) for i in range(3)]
+    rc = run_counter_history(tmp_path, {"trace_off_overhead_frac": 0.009}, history)
+    assert rc == 0
+    assert "throughput drift" not in capsys.readouterr().out
+
+
+def test_gbps_counter_needs_two_history_samples(tmp_path, capsys):
+    history = [("runs-0-1", {"kernel_gemm_gbps_avx2": 20.0})]
+    rc = run_counter_history(tmp_path, {"kernel_gemm_gbps_avx2": 5.0}, history)
+    assert rc == 0
+    assert "throughput drift" not in capsys.readouterr().out
 
 
 def test_highest_attempt_artifact_wins(tmp_path):

@@ -20,6 +20,7 @@
 //! blocking regression even in smoke.  Writes `BENCH_kernel_microbench.json`
 //! (the perf trajectory CI archives) and fails loudly if it cannot.
 
+use invarexplore::obs;
 use invarexplore::quant::{self, simd, PackedTensor, QuantScheme, SimdLevel};
 use invarexplore::tensor::Tensor;
 use invarexplore::util::bench::{self, BenchSuite};
@@ -138,6 +139,64 @@ fn main() {
         }
     }
     simd::set_simd_level(hw);
+
+    // ---- obs: tracing-disabled overhead on the fused GEMV path ------------
+    // The recorder's contract is "off = one relaxed atomic load per kernel
+    // call".  Measure the instrumented entry point (`linear_into`) against
+    // the raw kernel body with the gate compiled out of the loop entirely
+    // (`linear_into_raw`), tracing disabled, and pin the overhead under 1%.
+    // Min-of-iters per pass and best-of-3 passes damp scheduler noise; the
+    // measured fraction lands in the bench JSON as a tracked counter.
+    obs::set_enabled(false);
+    let w = Tensor::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal() as f32).collect());
+    let p = PackedTensor::pack(&quant::quantize(&w, QuantScheme::new(3, 64)));
+    let x1 = Tensor::from_vec(1, cols, (0..cols).map(|_| rng.normal() as f32).collect());
+    let bias = vec![0.0f32; rows];
+    let mut out_t = Tensor::zeros(1, rows);
+    let budget = std::time::Duration::from_millis(if smoke { 40 } else { 250 });
+    let mut overhead = f64::INFINITY;
+    for _ in 0..3 {
+        let instr = bench::measure(
+            || {
+                p.linear_into(&x1, &bias, &mut out_t);
+                std::hint::black_box(&out_t);
+            },
+            budget,
+            10_000,
+        );
+        let raw = bench::measure(
+            || {
+                p.linear_into_raw(&x1, &bias, &mut out_t);
+                std::hint::black_box(&out_t);
+            },
+            budget,
+            10_000,
+        );
+        let r = raw.min.as_secs_f64().max(1e-12);
+        overhead = overhead.min((instr.min.as_secs_f64() - r) / r);
+    }
+    suite.set_counter("trace_off_overhead_frac", overhead);
+    println!("  tracing-off overhead on fused GEMV: {:.4}%", overhead * 100.0);
+    assert!(
+        overhead < 0.01,
+        "tracing-disabled overhead {:.3}% on the fused GEMV path exceeds 1%",
+        overhead * 100.0
+    );
+
+    // ---- obs: achieved GB/s per tier from a traced pass -------------------
+    // Brief tracing-on pass so the per-tier kernel counters (the series the
+    // perf-history drift check reads) ship with every bench artifact.
+    obs::kernel::reset();
+    obs::set_enabled(true);
+    let x16 = Tensor::from_vec(16, cols, (0..16 * cols).map(|_| rng.normal() as f32).collect());
+    for _ in 0..8 {
+        std::hint::black_box(p.linear_batch(&x16, &bias));
+    }
+    obs::set_enabled(false);
+    for (name, v) in obs::kernel::snapshot().counters() {
+        suite.set_counter(&name, v);
+    }
+    obs::kernel::reset();
 
     let out = suite.write_json(std::path::Path::new(".")).expect("write BENCH json");
     let len = std::fs::metadata(&out).map(|m| m.len()).unwrap_or(0);

@@ -60,6 +60,7 @@ fn common_spec() -> Vec<ArgSpec> {
         ArgSpec { name: "requests", help: "serve: synthetic requests to submit", default: Some("8"), is_flag: false },
         ArgSpec { name: "max-new", help: "serve: tokens to generate per request", default: Some("24"), is_flag: false },
         ArgSpec { name: "max-batch", help: "serve: concurrent decode slots", default: Some("4"), is_flag: false },
+        ArgSpec { name: "trace-out", help: "write a Chrome trace (chrome://tracing JSON) of this run to PATH and print Prometheus metrics (default: $INVAREXPLORE_TRACE=PATH)", default: None, is_flag: false },
         ArgSpec { name: "help", help: "show options", default: None, is_flag: true },
     ]
 }
@@ -93,6 +94,24 @@ fn opts_from_args(a: &Args) -> crate::Result<PipelineOpts> {
     opts.shots = a.parse_or("shots", 5usize)?;
     opts.seed = a.parse_or("seed", 0u64)?;
     Ok(opts)
+}
+
+/// Resolve `--trace-out` (CLI wins) or `INVAREXPLORE_TRACE=<path>` and, if
+/// tracing was requested, switch the recorder on before any spans fire.
+fn trace_setup(a: &Args) -> Option<std::path::PathBuf> {
+    let path = a
+        .get("trace-out")
+        .map(std::path::PathBuf::from)
+        .or_else(crate::obs::trace_out_path)?;
+    crate::obs::set_enabled(true);
+    Some(path)
+}
+
+/// Dump the recorder to `path` as Chrome trace JSON and report the count.
+fn trace_finish(path: &std::path::Path) -> crate::Result<()> {
+    let n = crate::obs::chrome::dump(path)?;
+    println!("trace: {n} events -> {}", path.display());
+    Ok(())
 }
 
 pub fn main_with_args(argv: Vec<String>) -> crate::Result<i32> {
@@ -233,8 +252,13 @@ fn cmd_quantize(a: &Args) -> crate::Result<i32> {
 fn cmd_search(a: &Args) -> crate::Result<i32> {
     let session = Session::load_default()?;
     let opts = opts_from_args(a)?;
+    let trace = trace_setup(a);
     if let Some(resume) = a.get("resume") {
-        return cmd_search_resume(&session, &opts, a, resume);
+        let rc = cmd_search_resume(&session, &opts, a, resume)?;
+        if let Some(path) = &trace {
+            search_trace_report(path)?;
+        }
+        return Ok(rc);
     }
     let r = pipeline::run_pipeline(&session, &opts)?;
     println!(
@@ -278,7 +302,19 @@ fn cmd_search(a: &Args) -> crate::Result<i32> {
             println!("telemetry written to {csv}");
         }
     }
+    if let Some(path) = &trace {
+        search_trace_report(path)?;
+    }
     Ok(0)
+}
+
+/// Chrome trace + Prometheus text for a search run (move-family acceptance
+/// and per-tier kernel throughput; no serve metrics in this path).
+fn search_trace_report(path: &std::path::Path) -> crate::Result<()> {
+    trace_finish(path)?;
+    print!("{}", crate::obs::prometheus::render_search(&crate::obs::search::snapshot()));
+    print!("{}", crate::obs::prometheus::render_kernel(&crate::obs::kernel::snapshot()));
+    Ok(())
 }
 
 /// `search --resume state.json`: restore a checkpoint, continue for
@@ -384,6 +420,7 @@ fn cmd_serve(a: &Args) -> crate::Result<i32> {
 
     let session = Session::load_default()?;
     let opts = opts_from_args(a)?;
+    let trace = trace_setup(a);
     let alloc = opts.allocation();
     let w = session.weights(&opts.model)?;
     let pile = session.corpus("pile")?;
@@ -507,6 +544,10 @@ fn cmd_serve(a: &Args) -> crate::Result<i32> {
         println!("sample {} ({}): -> {head:?}", c.id, c.finish.label());
     }
     println!("metrics: {}", scheduler.metrics().to_json().to_string());
+    if let Some(path) = &trace {
+        trace_finish(path)?;
+        print!("{}", crate::obs::prometheus::render(scheduler.metrics()));
+    }
     Ok(0)
 }
 

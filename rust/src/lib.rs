@@ -37,6 +37,7 @@ pub mod coordinator;
 pub mod eval;
 pub mod io;
 pub mod model;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod search;

@@ -926,6 +926,8 @@ pub fn forward_chunk<P: DecoderParams + ?Sized>(
     cache: &mut KvCache,
     tokens: &[i32],
 ) -> Tensor {
+    // inert guard when tracing is off; the span id carries the chunk width
+    let _sp = crate::obs::trace::span("model", "forward_chunk", tokens.len() as u64);
     let cfg = p.config();
     let x = forward_hidden(p, cache, tokens);
 
@@ -956,6 +958,8 @@ pub fn forward_chunk<P: DecoderParams + ?Sized>(
 /// Prompt prefill: reset the cache and feed the whole prompt; returns the
 /// last-position logits (the distribution of the first generated token).
 pub fn prefill<P: DecoderParams + ?Sized>(p: &P, cache: &mut KvCache, prompt: &[i32]) -> Vec<f32> {
+    // inert guard when tracing is off; the span id carries the prompt length
+    let _sp = crate::obs::trace::span("model", "prefill", prompt.len() as u64);
     cache.clear();
     forward_cached(p, cache, prompt)
 }

@@ -1,0 +1,158 @@
+//! Chrome trace-event-format export (`chrome://tracing` / Perfetto / the
+//! `about:tracing` JSON flavor) for the recorder's event stream.
+//!
+//! We emit the object form — `{"traceEvents": [...], "displayTimeUnit":
+//! "ms"}` — with `ph: "X"` complete events for spans, `ph: "i"` instants
+//! and `ph: "C"` counters, all timestamped in microseconds since the trace
+//! epoch as the format requires.  Serialization goes through
+//! [`crate::util::json`]; no new dependency.
+
+use std::path::Path;
+
+use super::trace::{self, Event, Phase};
+use crate::util::json::Json;
+
+/// One event in Chrome trace-event JSON shape (shared with
+/// `util::bench`'s TRACE_<suite>.json writer, which splices recorder
+/// events in next to its own bench-row spans).
+pub(crate) fn event_json(ev: &Event) -> Json {
+    let mut j = Json::obj()
+        .set("name", ev.name)
+        .set("cat", ev.cat)
+        .set("ph", ev.ph.ph())
+        .set("pid", 1usize)
+        .set("tid", ev.tid as usize)
+        .set("ts", ev.ts_us as f64);
+    match ev.ph {
+        Phase::Complete => {
+            j = j.set("dur", ev.dur_us as f64);
+            if ev.id != 0 {
+                j = j.set("args", Json::obj().set("id", ev.id as usize));
+            }
+        }
+        Phase::Mark => {
+            // "t": thread-scoped instant (the viewer draws it on its track)
+            j = j.set("s", "t");
+            if ev.id != 0 {
+                j = j.set("args", Json::obj().set("id", ev.id as usize));
+            }
+        }
+        Phase::Counter => {
+            j = j.set("args", Json::obj().set("value", ev.value));
+        }
+    }
+    j
+}
+
+/// Render an event stream as a Chrome trace JSON document.
+pub fn trace_json(events: &[Event]) -> Json {
+    Json::obj()
+        .set("displayTimeUnit", "ms")
+        .set("traceEvents", Json::Arr(events.iter().map(event_json).collect()))
+}
+
+/// Write `events` to `path` as Chrome trace JSON.
+pub fn write(path: &Path, events: &[Event]) -> crate::Result<()> {
+    std::fs::write(path, trace_json(events).to_string())?;
+    Ok(())
+}
+
+/// Drain the recorder and write everything to `path`; returns how many
+/// events were dumped.  If any were lost to ring overflow, a final
+/// `trace.dropped_events` counter records the loss in-band.
+pub fn dump(path: &Path) -> crate::Result<usize> {
+    let mut events = trace::take_events();
+    let dropped = trace::dropped_total();
+    if dropped > 0 {
+        let ts = events.last().map_or(0, |e| e.ts_us);
+        events.push(Event {
+            cat: "trace",
+            name: "trace.dropped_events",
+            ph: Phase::Counter,
+            ts_us: ts,
+            dur_us: 0,
+            tid: 0,
+            id: 0,
+            value: dropped as f64,
+        });
+        trace::reset_dropped();
+    }
+    write(path, &events)?;
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(ph: Phase) -> Event {
+        Event {
+            cat: "serve",
+            name: "prefill",
+            ph,
+            ts_us: 120,
+            dur_us: 30,
+            tid: 2,
+            id: 7,
+            value: 1.5,
+        }
+    }
+
+    #[test]
+    fn complete_event_shape() {
+        let j = event_json(&ev(Phase::Complete));
+        assert_eq!(j.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(j.get("ts").unwrap().as_f64(), Some(120.0));
+        assert_eq!(j.get("dur").unwrap().as_f64(), Some(30.0));
+        assert_eq!(j.get("pid").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("tid").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("args").unwrap().get("id").unwrap().as_usize(), Some(7));
+    }
+
+    #[test]
+    fn counter_and_mark_shapes() {
+        let c = event_json(&ev(Phase::Counter));
+        assert_eq!(c.get("ph").unwrap().as_str(), Some("C"));
+        assert!((c.get("args").unwrap().get("value").unwrap().as_f64().unwrap() - 1.5) < 1e-12);
+        assert!(c.get("dur").is_none());
+        let m = event_json(&ev(Phase::Mark));
+        assert_eq!(m.get("ph").unwrap().as_str(), Some("i"));
+        assert_eq!(m.get("s").unwrap().as_str(), Some("t"));
+    }
+
+    #[test]
+    fn document_round_trips_and_is_loadable_shape() {
+        let events = [ev(Phase::Complete), ev(Phase::Counter), ev(Phase::Mark)];
+        let doc = trace_json(&events);
+        let text = doc.to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        let arr = back.req("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        for e in arr {
+            // every event carries the fields trace viewers key on
+            assert!(e.get("name").unwrap().as_str().is_some());
+            assert!(e.get("ph").unwrap().as_str().is_some());
+            assert!(e.get("ts").unwrap().as_f64().is_some());
+        }
+        assert_eq!(back.req("displayTimeUnit").unwrap().as_str(), Some("ms"));
+    }
+
+    #[test]
+    fn dump_writes_file_and_flags_drops() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(true);
+        trace::clear();
+        trace::counter("test", "x", 1.0);
+        crate::obs::set_enabled(false);
+        let dir = std::env::temp_dir().join("invarexplore_obs_chrome_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        let n = dump(&path).unwrap();
+        assert!(n >= 1);
+        let j = crate::util::json::parse_file(&path).unwrap();
+        let arr = j.req("traceEvents").unwrap().as_arr().unwrap();
+        assert!(arr
+            .iter()
+            .any(|e| e.get("name").unwrap().as_str() == Some("x")));
+    }
+}

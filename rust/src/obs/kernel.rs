@@ -1,0 +1,254 @@
+//! Per-SIMD-tier kernel counters for the packed serving kernels: bytes
+//! streamed, GEMM rows, wall time per dispatch tier → achieved GB/s.
+//!
+//! The instrumented kernels (`quant::packed`) never touch a clock type
+//! themselves — they take an opaque [`GemmTimer`] from here, so the
+//! `nondet-clock` lint keeps `quant/` clock-free by construction and every
+//! wall-clock read stays inside `obs/` with a `DETERMINISM:` note.
+//!
+//! Ultra-low-bit GEMV is a memory-bandwidth story (see the low-bit LLM
+//! systems survey), so the headline derived metric is *packed weight bytes
+//! streamed per second of kernel wall time*, split by dispatch tier: a
+//! tier whose GB/s does not beat the one below is not paying for itself.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+// DETERMINISM: kernel timing is observational only — elapsed nanoseconds
+// feed the GB/s counters and trace export, never any kernel result or
+// dispatch decision.
+use std::time::Instant;
+
+use crate::quant::simd;
+use crate::util::json::Json;
+
+/// One cell per [`simd::SimdLevel`] discriminant.
+pub const N_TIERS: usize = 3;
+
+/// Human label per tier index (matches `SimdLevel` discriminant order).
+pub fn tier_label(i: usize) -> &'static str {
+    ["scalar", "sse2", "avx2"][i.min(N_TIERS - 1)]
+}
+
+struct TierCell {
+    ns: AtomicU64,
+    bytes: AtomicU64,
+    calls: AtomicU64,
+    rows: AtomicU64,
+    dequant_bytes: AtomicU64,
+}
+
+impl TierCell {
+    const fn new() -> TierCell {
+        TierCell {
+            ns: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+            calls: AtomicU64::new(0),
+            rows: AtomicU64::new(0),
+            dequant_bytes: AtomicU64::new(0),
+        }
+    }
+}
+
+static TIERS: [TierCell; N_TIERS] = [TierCell::new(), TierCell::new(), TierCell::new()];
+
+/// Wall-clock guard for one fused GEMM/GEMV call.  Inert (no clock read)
+/// when tracing is disabled — the disabled cost at the call site is the
+/// single relaxed load inside [`super::enabled`].
+pub struct GemmTimer {
+    // DETERMINISM: start stamp + tier index; observational only (module
+    // clock note).
+    start: Option<(Instant, usize)>,
+}
+
+/// Begin timing a packed GEMM call at the current dispatch tier.
+#[inline]
+pub fn gemm_timer() -> GemmTimer {
+    if !super::enabled() {
+        return GemmTimer { start: None };
+    }
+    let tier = simd::level() as usize;
+    // DETERMINISM: start capture, observational only.
+    GemmTimer { start: Some((Instant::now(), tier)) }
+}
+
+impl GemmTimer {
+    /// Close the timed region, crediting `rows` output-row dot products and
+    /// `bytes` of packed weight traffic to the tier the call dispatched at.
+    #[inline]
+    pub fn finish(self, rows: usize, bytes: usize) {
+        let Some((t0, tier)) = self.start else { return };
+        let ns = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+        let c = &TIERS[tier.min(N_TIERS - 1)];
+        c.ns.fetch_add(ns, Ordering::Relaxed);
+        c.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        c.rows.fetch_add(rows as u64, Ordering::Relaxed);
+        c.calls.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Credit `bytes` of packed weights decoded by a standalone dequant entry
+/// point (outside a timed GEMM) to the current tier.
+#[inline]
+pub fn add_dequant_bytes(bytes: usize) {
+    if !super::enabled() {
+        return;
+    }
+    let tier = simd::level() as usize;
+    TIERS[tier.min(N_TIERS - 1)].dequant_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+}
+
+/// Point-in-time copy of one tier's counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TierSnap {
+    pub ns: u64,
+    pub bytes: u64,
+    pub calls: u64,
+    pub rows: u64,
+    pub dequant_bytes: u64,
+}
+
+impl TierSnap {
+    /// Achieved packed-weight bandwidth: bytes per nanosecond == GB/s.
+    pub fn gbps(&self) -> f64 {
+        if self.ns == 0 {
+            0.0
+        } else {
+            self.bytes as f64 / self.ns as f64
+        }
+    }
+}
+
+/// Point-in-time copy of all kernel counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct KernelSnapshot {
+    pub tiers: [TierSnap; N_TIERS],
+}
+
+impl KernelSnapshot {
+    pub fn total_calls(&self) -> u64 {
+        self.tiers.iter().map(|t| t.calls).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.tiers.iter().map(|t| t.bytes).sum()
+    }
+
+    /// `{tiers: {scalar: {...}, sse2: {...}, avx2: {...}}}` — only tiers
+    /// that recorded anything, so idle tiers don't pad dumps.
+    pub fn to_json(&self) -> Json {
+        let mut tiers = Json::obj();
+        for (i, t) in self.tiers.iter().enumerate() {
+            if t.calls == 0 && t.dequant_bytes == 0 {
+                continue;
+            }
+            tiers = tiers.set(
+                tier_label(i),
+                Json::obj()
+                    .set("gemm_calls", t.calls as usize)
+                    .set("gemm_rows", t.rows as usize)
+                    .set("gemm_bytes", t.bytes as usize)
+                    .set("gemm_ns", t.ns as usize)
+                    .set("gemm_gbps", t.gbps())
+                    .set("dequant_bytes", t.dequant_bytes as usize),
+            );
+        }
+        Json::obj().set("tiers", tiers)
+    }
+
+    /// Flat `(name, value)` pairs for the bench-JSON `counters` object and
+    /// the perf-history GB/s drift check — one `kernel_gemm_gbps_<tier>`
+    /// per active tier plus its byte/call volume (so a drift reader can
+    /// discount low-volume samples).
+    pub fn counters(&self) -> Vec<(String, f64)> {
+        let mut out = Vec::new();
+        for (i, t) in self.tiers.iter().enumerate() {
+            if t.calls == 0 {
+                continue;
+            }
+            let label = tier_label(i);
+            out.push((format!("kernel_gemm_gbps_{label}"), t.gbps()));
+            out.push((format!("kernel_gemm_bytes_{label}"), t.bytes as f64));
+            out.push((format!("kernel_gemm_calls_{label}"), t.calls as f64));
+        }
+        out
+    }
+}
+
+/// Read every tier's counters.
+pub fn snapshot() -> KernelSnapshot {
+    let mut s = KernelSnapshot::default();
+    for (i, c) in TIERS.iter().enumerate() {
+        s.tiers[i] = TierSnap {
+            ns: c.ns.load(Ordering::Relaxed),
+            bytes: c.bytes.load(Ordering::Relaxed),
+            calls: c.calls.load(Ordering::Relaxed),
+            rows: c.rows.load(Ordering::Relaxed),
+            dequant_bytes: c.dequant_bytes.load(Ordering::Relaxed),
+        };
+    }
+    s
+}
+
+/// Zero every counter (test/bench isolation; the counters are global).
+pub fn reset() {
+    for c in TIERS.iter() {
+        c.ns.store(0, Ordering::Relaxed);
+        c.bytes.store(0, Ordering::Relaxed);
+        c.calls.store(0, Ordering::Relaxed);
+        c.rows.store(0, Ordering::Relaxed);
+        c.dequant_bytes.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_timer_records_nothing() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(false);
+        reset();
+        let t = gemm_timer();
+        t.finish(100, 1 << 20);
+        add_dequant_bytes(1 << 20);
+        assert_eq!(snapshot(), KernelSnapshot::default());
+    }
+
+    #[test]
+    fn enabled_timer_accumulates_per_tier() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(true);
+        reset();
+        let tier = simd::level() as usize;
+        let t = gemm_timer();
+        std::hint::black_box(1 + 1);
+        t.finish(64, 4096);
+        add_dequant_bytes(512);
+        crate::obs::set_enabled(false);
+        let s = snapshot();
+        // ≥, not ==: other tests' instrumented kernels may run while the
+        // recorder is briefly on (the counters are global)
+        assert!(s.tiers[tier].calls >= 1);
+        assert!(s.tiers[tier].rows >= 64);
+        assert!(s.tiers[tier].bytes >= 4096);
+        assert!(s.tiers[tier].dequant_bytes >= 512);
+        assert!(s.tiers[tier].gbps() >= 0.0);
+        // JSON dump names the active tier and parses back
+        let j = s.to_json();
+        let tj = j.get("tiers").unwrap().get(tier_label(tier)).unwrap();
+        assert!(tj.get("gemm_calls").unwrap().as_usize().unwrap() >= 1);
+        assert!(crate::util::json::parse(&j.to_string()).is_ok());
+        // flat counters carry the gbps key the perf gate parses
+        let names: Vec<_> = s.counters().into_iter().map(|(n, _)| n).collect();
+        assert!(names.iter().any(|n| n == &format!("kernel_gemm_gbps_{}", tier_label(tier))));
+        reset();
+        assert_eq!(snapshot(), KernelSnapshot::default());
+    }
+
+    #[test]
+    fn gbps_is_bytes_per_ns() {
+        let t = TierSnap { ns: 2_000, bytes: 4_000, calls: 1, rows: 1, dequant_bytes: 0 };
+        assert!((t.gbps() - 2.0).abs() < 1e-12);
+        assert_eq!(TierSnap::default().gbps(), 0.0);
+    }
+}

@@ -1,0 +1,122 @@
+//! Zero-dependency tracing & telemetry: request-lifecycle spans, search and
+//! kernel counters, Chrome-trace + Prometheus export.
+//!
+//! The recorder is **compiled in but runtime-gated**: when tracing is
+//! disabled (the default) every instrumentation site costs a single relaxed
+//! atomic load, and when enabled it *observes but never perturbs* — no
+//! instrumentation site feeds back into scheduling, sampling, RNG streams or
+//! kernel results, so every output stays bit-identical to a tracing-off run
+//! (pinned by tests that re-run the serve determinism matrix and the search
+//! trajectory pins with tracing on).
+//!
+//! Layout:
+//! - [`trace`] — lock-light per-thread ring-buffer event recorder with
+//!   RAII span guards, instant marks and counter samples;
+//! - [`kernel`] — per-SIMD-tier GEMM/dequant byte+time counters
+//!   (achieved GB/s for the packed kernels);
+//! - [`search`] — per-move-family propose/accept counters and a windowed
+//!   acceptance rate for the discrete search drivers;
+//! - [`chrome`] — Chrome trace-event-format JSON export
+//!   (`chrome://tracing` / Perfetto loadable) via [`crate::util::json`];
+//! - [`prometheus`] — Prometheus text-exposition rendering of
+//!   [`crate::serve::ServeMetrics`] plus the kernel/search counters.
+//!
+//! Gating mirrors `quant::simd`'s dispatch: an explicit [`set_enabled`]
+//! call (tests, `--trace-out`) beats the `INVAREXPLORE_TRACE` env value.
+//! `INVAREXPLORE_TRACE` semantics: unset/empty/`0`/`off`/`false` disable;
+//! `1`/`on`/`true` enable; any other value enables *and* names the Chrome
+//! trace output path (see [`trace_out_path`]).
+
+pub mod chrome;
+pub mod kernel;
+pub mod prometheus;
+pub mod search;
+pub mod trace;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+const UNSET: u8 = u8::MAX;
+static ENABLED: AtomicU8 = AtomicU8::new(UNSET);
+
+/// Is the recorder on?  The hot-path gate: one relaxed atomic load once
+/// resolved (the `#[cold]` env read happens only on the very first call).
+#[inline]
+pub fn enabled() -> bool {
+    let v = ENABLED.load(Ordering::Relaxed);
+    if v != UNSET {
+        return v == 1;
+    }
+    init()
+}
+
+#[cold]
+fn init() -> bool {
+    let on = !matches!(
+        std::env::var("INVAREXPLORE_TRACE").as_deref(),
+        Err(_) | Ok("") | Ok("0") | Ok("off") | Ok("false")
+    );
+    // racing first calls may both resolve; harmless (same value), lock-free
+    ENABLED.store(on as u8, Ordering::Relaxed);
+    if on {
+        crate::info!("tracing enabled (INVAREXPLORE_TRACE)");
+    }
+    on
+}
+
+/// Force the recorder on or off — the in-process hook tests and the
+/// `--trace-out` CLI flag use instead of mutating the environment (see the
+/// getenv/setenv UB note in `util::pool`'s tests).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on as u8, Ordering::Relaxed);
+}
+
+/// Output path carried by `INVAREXPLORE_TRACE` when its value is neither a
+/// recognized on nor off token (so `INVAREXPLORE_TRACE=trace.json` both
+/// enables tracing and names the dump file).
+pub fn trace_out_path() -> Option<std::path::PathBuf> {
+    match std::env::var("INVAREXPLORE_TRACE") {
+        Ok(v) if !matches!(v.as_str(), "" | "0" | "1" | "off" | "on" | "false" | "true") => {
+            Some(v.into())
+        }
+        _ => None,
+    }
+}
+
+/// Serializes tests that flip the global recorder on, clear rings, or read
+/// the global kernel/search counters — so two tracing tests can't
+/// interleave their event streams.  (Tracing never changes behavior, so a
+/// race would not corrupt *results* — this keeps each test's drained event
+/// stream attributable to its own run.)
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_enabled_round_trips() {
+        let _g = test_guard();
+        let prev = enabled();
+        set_enabled(true);
+        assert!(enabled());
+        set_enabled(false);
+        assert!(!enabled());
+        set_enabled(prev);
+    }
+
+    #[test]
+    fn trace_out_path_ignores_boolean_tokens() {
+        // pure parse check on the helper's token set; the env itself is not
+        // mutated here (setenv in tests is UB under concurrent getenv)
+        for tok in ["", "0", "1", "off", "on", "false", "true"] {
+            assert!(
+                matches!(tok, "" | "0" | "1" | "off" | "on" | "false" | "true"),
+                "token {tok:?} must stay in sync with trace_out_path"
+            );
+        }
+    }
+}

@@ -1,0 +1,280 @@
+//! Prometheus text-exposition rendering (version 0.0.4 format) of
+//! [`ServeMetrics`] plus the kernel and search counters — the scrape
+//! surface for `invarexplore serve --prom-out` and the serve example.
+//!
+//! Latency histograms render as `summary` metrics (the log₂-bucket
+//! quantiles are already the resolution the dashboards use); plain counts
+//! render as `counter`s and point-in-time values as `gauge`s.  All
+//! durations are exported in **seconds** per Prometheus convention.
+
+use std::fmt::Write as _;
+
+use super::kernel::{tier_label, KernelSnapshot};
+use super::search::{MoveFamily, SearchSnapshot};
+use crate::serve::{Histogram, ServeMetrics};
+
+fn summary(out: &mut String, name: &str, help: &str, h: &Histogram) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} summary");
+    for (q, label) in [(0.5, "0.5"), (0.95, "0.95"), (0.99, "0.99")] {
+        let _ = writeln!(
+            out,
+            "{name}{{quantile=\"{label}\"}} {}",
+            h.quantile(q).as_secs_f64()
+        );
+    }
+    let _ = writeln!(out, "{name}_sum {}", h.sum().as_secs_f64());
+    let _ = writeln!(out, "{name}_count {}", h.count());
+}
+
+fn counter(out: &mut String, name: &str, help: &str, labels: &[(&str, &str, f64)]) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} counter");
+    for (key, val, v) in labels {
+        if key.is_empty() {
+            let _ = writeln!(out, "{name} {v}");
+        } else {
+            let _ = writeln!(out, "{name}{{{key}=\"{val}\"}} {v}");
+        }
+    }
+}
+
+fn gauge(out: &mut String, name: &str, help: &str, labels: &[(&str, &str, f64)]) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    for (key, val, v) in labels {
+        if key.is_empty() {
+            let _ = writeln!(out, "{name} {v}");
+        } else {
+            let _ = writeln!(out, "{name}{{{key}=\"{val}\"}} {v}");
+        }
+    }
+}
+
+/// Render the serving metrics alone.
+pub fn render_serve(m: &ServeMetrics) -> String {
+    let mut out = String::new();
+    summary(&mut out, "invarexplore_ttft_seconds", "Submit to first token", &m.ttft);
+    summary(
+        &mut out,
+        "invarexplore_inter_token_seconds",
+        "Gap between consecutive tokens",
+        &m.inter_token,
+    );
+    summary(
+        &mut out,
+        "invarexplore_queue_wait_seconds",
+        "Submit to admission",
+        &m.queue_wait,
+    );
+    summary(
+        &mut out,
+        "invarexplore_prefill_seconds",
+        "Admission to first token",
+        &m.prefill,
+    );
+    summary(
+        &mut out,
+        "invarexplore_decode_seconds",
+        "First token to finish",
+        &m.decode,
+    );
+    gauge(
+        &mut out,
+        "invarexplore_queue_depth",
+        "Admission-round queue depth",
+        &[("stat", "max", m.queue_depth_max() as f64), ("stat", "mean", m.queue_depth_mean())],
+    );
+    counter(
+        &mut out,
+        "invarexplore_prefix_cache_total",
+        "Prefix cache activity",
+        &[
+            ("event", "lookups", m.prefix_lookups as f64),
+            ("event", "hits", m.prefix_hits as f64),
+            ("event", "hit_tokens", m.prefix_hit_tokens as f64),
+            ("event", "evictions", m.prefix_evictions as f64),
+        ],
+    );
+    gauge(
+        &mut out,
+        "invarexplore_kv_bytes_peak",
+        "Peak KV residency (live vs eager-f32 baseline)",
+        &[
+            ("kind", "live", m.kv_live_bytes_peak as f64),
+            ("kind", "eager", m.kv_eager_bytes_peak as f64),
+        ],
+    );
+    counter(
+        &mut out,
+        "invarexplore_finished_total",
+        "Requests finished by reason",
+        &[
+            ("reason", "length", m.finished_length as f64),
+            ("reason", "stop", m.finished_stop as f64),
+            ("reason", "cancelled", m.cancelled as f64),
+            ("reason", "rejected", m.rejected as f64),
+        ],
+    );
+    counter(
+        &mut out,
+        "invarexplore_spec_tokens_total",
+        "Speculative decoding token flow",
+        &[
+            ("kind", "draft", m.spec_draft_tokens as f64),
+            ("kind", "committed", m.spec_committed_tokens as f64),
+        ],
+    );
+    counter(
+        &mut out,
+        "invarexplore_spec_verify_steps_total",
+        "Chunked verify steps",
+        &[("", "", m.spec_accept_len.count() as f64)],
+    );
+    out
+}
+
+/// Render the kernel counters.
+pub fn render_kernel(k: &KernelSnapshot) -> String {
+    let mut out = String::new();
+    let mut secs = Vec::new();
+    let mut bytes = Vec::new();
+    let mut gbps = Vec::new();
+    let mut rows = Vec::new();
+    for (i, t) in k.tiers.iter().enumerate() {
+        if t.calls == 0 && t.dequant_bytes == 0 {
+            continue;
+        }
+        let label = tier_label(i);
+        secs.push(("tier", label, t.ns as f64 * 1e-9));
+        bytes.push(("tier", label, t.bytes as f64));
+        gbps.push(("tier", label, t.gbps()));
+        rows.push(("tier", label, t.rows as f64));
+    }
+    if !secs.is_empty() {
+        counter(&mut out, "invarexplore_kernel_gemm_seconds_total", "Packed GEMM wall time", &secs);
+        counter(
+            &mut out,
+            "invarexplore_kernel_gemm_bytes_total",
+            "Packed weight bytes streamed by GEMM",
+            &bytes,
+        );
+        counter(&mut out, "invarexplore_kernel_gemm_rows_total", "GEMM output rows", &rows);
+        gauge(
+            &mut out,
+            "invarexplore_kernel_gemm_gbps",
+            "Achieved packed-weight bandwidth",
+            &gbps,
+        );
+    }
+    out
+}
+
+/// Render the search counters.
+pub fn render_search(s: &SearchSnapshot) -> String {
+    let mut out = String::new();
+    if s.proposed.iter().all(|&p| p == 0) {
+        return out;
+    }
+    counter(
+        &mut out,
+        "invarexplore_search_proposed_total",
+        "Search moves proposed by family",
+        &[
+            ("family", "transform", s.proposed_of(MoveFamily::Transform) as f64),
+            ("family", "bitswap", s.proposed_of(MoveFamily::BitSwap) as f64),
+        ],
+    );
+    counter(
+        &mut out,
+        "invarexplore_search_accepted_total",
+        "Search moves accepted by family",
+        &[
+            ("family", "transform", s.accepted_of(MoveFamily::Transform) as f64),
+            ("family", "bitswap", s.accepted_of(MoveFamily::BitSwap) as f64),
+        ],
+    );
+    out
+}
+
+/// Full scrape page: serve metrics plus whatever global kernel/search
+/// counters have accumulated.
+pub fn render(m: &ServeMetrics) -> String {
+    let mut out = render_serve(m);
+    out.push_str(&render_kernel(&super::kernel::snapshot()));
+    out.push_str(&render_search(&super::search::snapshot()));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn assert_exposition_format(text: &str) {
+        for line in text.lines() {
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (_name, value) = line.rsplit_once(' ').expect("metric line has a value");
+            assert!(value.parse::<f64>().is_ok(), "unparseable value in {line:?}");
+        }
+    }
+
+    #[test]
+    fn serve_rendering_is_well_formed() {
+        let mut m = ServeMetrics::new();
+        m.ttft.record(Duration::from_millis(3));
+        m.inter_token.record(Duration::from_micros(700));
+        m.queue_wait.record(Duration::from_micros(40));
+        m.prefill.record(Duration::from_millis(2));
+        m.decode.record(Duration::from_millis(9));
+        m.record_queue_depth(4);
+        m.prefix_lookups = 4;
+        m.prefix_hits = 1;
+        m.finished_length = 2;
+        let text = render_serve(&m);
+        assert_exposition_format(&text);
+        assert!(text.contains("invarexplore_ttft_seconds{quantile=\"0.5\"}"));
+        assert!(text.contains("invarexplore_ttft_seconds_count 1"));
+        assert!(text.contains("invarexplore_queue_wait_seconds_count 1"));
+        assert!(text.contains("invarexplore_prefill_seconds_count 1"));
+        assert!(text.contains("invarexplore_decode_seconds_count 1"));
+        assert!(text.contains("invarexplore_finished_total{reason=\"length\"} 2"));
+        assert!(text.contains("# TYPE invarexplore_ttft_seconds summary"));
+        // seconds, not microseconds: 3ms TTFT stays < 1
+        let sum_line = text
+            .lines()
+            .find(|l| l.starts_with("invarexplore_ttft_seconds_sum"))
+            .unwrap();
+        let v: f64 = sum_line.rsplit_once(' ').unwrap().1.parse().unwrap();
+        assert!(v > 0.0 && v < 1.0, "{sum_line}");
+    }
+
+    #[test]
+    fn kernel_and_search_sections_render_when_active() {
+        let mut k = KernelSnapshot::default();
+        k.tiers[2] = super::super::kernel::TierSnap {
+            ns: 1_000_000,
+            bytes: 8_000_000,
+            calls: 3,
+            rows: 96,
+            dequant_bytes: 0,
+        };
+        let text = render_kernel(&k);
+        assert_exposition_format(&text);
+        assert!(text.contains("invarexplore_kernel_gemm_gbps{tier=\"avx2\"} 8"));
+        assert!(text.contains("invarexplore_kernel_gemm_rows_total{tier=\"avx2\"} 96"));
+        // idle snapshot renders nothing
+        assert!(render_kernel(&KernelSnapshot::default()).is_empty());
+
+        let mut s = SearchSnapshot::default();
+        s.proposed = [10, 4];
+        s.accepted = [3, 1];
+        let text = render_search(&s);
+        assert_exposition_format(&text);
+        assert!(text.contains("invarexplore_search_proposed_total{family=\"transform\"} 10"));
+        assert!(text.contains("invarexplore_search_accepted_total{family=\"bitswap\"} 1"));
+        assert!(render_search(&SearchSnapshot::default()).is_empty());
+    }
+}

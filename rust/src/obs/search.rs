@@ -1,0 +1,233 @@
+//! Telemetry for the discrete search drivers: per-move-family
+//! propose/accept counters and a short windowed acceptance rate.
+//!
+//! The InvarExplore search alternates two move families — invariance
+//! `Transform`s (permute/sign/rotate) and mixed-precision `BitSwap`s — and
+//! which family is actually *paying* is the first question every tuning
+//! session asks (PTQ1.61 makes the same point for sub-2-bit search).  The
+//! drivers in `search::hillclimb` / `search::scheduler` report each
+//! proposal here after the accept decision is made, so recording can never
+//! influence it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// Which kind of move a proposal drew (mirrors `search::hillclimb::Move`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MoveFamily {
+    /// An invariance transform (permutation / sign flip / rotation).
+    Transform,
+    /// A bit-width swap between two layers at fixed budget.
+    BitSwap,
+}
+
+impl MoveFamily {
+    pub fn label(self) -> &'static str {
+        match self {
+            MoveFamily::Transform => "transform",
+            MoveFamily::BitSwap => "bitswap",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            MoveFamily::Transform => 0,
+            MoveFamily::BitSwap => 1,
+        }
+    }
+}
+
+const N_FAMILIES: usize = 2;
+
+/// Sliding accept/reject window (last [`ACCEPT_WINDOW`] decisions) backing
+/// the `search.accept_rate_w64` counter samples.
+pub const ACCEPT_WINDOW: u32 = 64;
+
+struct Window {
+    bits: u64,
+    len: u32,
+}
+
+/// The counter state itself — instantiable so tests can exercise the exact
+/// arithmetic on a private instance while production code shares one
+/// gated global.
+struct Counters {
+    proposed: [AtomicU64; N_FAMILIES],
+    accepted: [AtomicU64; N_FAMILIES],
+    window: Mutex<Window>,
+}
+
+impl Counters {
+    const fn new() -> Counters {
+        Counters {
+            proposed: [AtomicU64::new(0), AtomicU64::new(0)],
+            accepted: [AtomicU64::new(0), AtomicU64::new(0)],
+            window: Mutex::new(Window { bits: 0, len: 0 }),
+        }
+    }
+
+    /// Record one decision; returns the windowed acceptance rate after it.
+    fn record(&self, family: MoveFamily, accepted: bool) -> f64 {
+        let i = family.idx();
+        self.proposed[i].fetch_add(1, Ordering::Relaxed);
+        if accepted {
+            self.accepted[i].fetch_add(1, Ordering::Relaxed);
+        }
+        let mut w = self.window.lock().unwrap_or_else(|e| e.into_inner());
+        w.bits = (w.bits << 1) | accepted as u64;
+        w.len = (w.len + 1).min(ACCEPT_WINDOW);
+        let mask = if w.len >= 64 { u64::MAX } else { (1u64 << w.len) - 1 };
+        (w.bits & mask).count_ones() as f64 / w.len as f64
+    }
+
+    fn snapshot(&self) -> SearchSnapshot {
+        let mut s = SearchSnapshot::default();
+        for i in 0..N_FAMILIES {
+            s.proposed[i] = self.proposed[i].load(Ordering::Relaxed);
+            s.accepted[i] = self.accepted[i].load(Ordering::Relaxed);
+        }
+        s
+    }
+
+    fn reset(&self) {
+        for i in 0..N_FAMILIES {
+            self.proposed[i].store(0, Ordering::Relaxed);
+            self.accepted[i].store(0, Ordering::Relaxed);
+        }
+        let mut w = self.window.lock().unwrap_or_else(|e| e.into_inner());
+        w.bits = 0;
+        w.len = 0;
+    }
+}
+
+static GLOBAL: Counters = Counters::new();
+
+/// Record one search proposal's outcome.  Gated: free (one relaxed load)
+/// when tracing is off; emits an acceptance-rate counter sample when on.
+pub fn record_move(family: MoveFamily, accepted: bool) {
+    if !super::enabled() {
+        return;
+    }
+    let rate = GLOBAL.record(family, accepted);
+    super::trace::counter("search", "accept_rate_w64", rate);
+}
+
+/// Point-in-time copy of the per-family counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SearchSnapshot {
+    /// Indexed like [`MoveFamily::idx`]: `[transform, bitswap]`.
+    pub proposed: [u64; N_FAMILIES],
+    pub accepted: [u64; N_FAMILIES],
+}
+
+impl SearchSnapshot {
+    pub fn proposed_of(&self, f: MoveFamily) -> u64 {
+        self.proposed[f.idx()]
+    }
+
+    pub fn accepted_of(&self, f: MoveFamily) -> u64 {
+        self.accepted[f.idx()]
+    }
+
+    /// Lifetime acceptance rate for one family (0 when nothing proposed).
+    pub fn accept_rate(&self, f: MoveFamily) -> f64 {
+        let p = self.proposed[f.idx()];
+        if p == 0 {
+            0.0
+        } else {
+            self.accepted[f.idx()] as f64 / p as f64
+        }
+    }
+
+    /// `{transform: {proposed, accepted, accept_rate}, bitswap: {...}}`.
+    pub fn to_json(&self) -> Json {
+        let fam = |f: MoveFamily| {
+            Json::obj()
+                .set("proposed", self.proposed_of(f) as usize)
+                .set("accepted", self.accepted_of(f) as usize)
+                .set("accept_rate", self.accept_rate(f))
+        };
+        Json::obj()
+            .set("transform", fam(MoveFamily::Transform))
+            .set("bitswap", fam(MoveFamily::BitSwap))
+    }
+}
+
+/// Read the global per-family counters.
+pub fn snapshot() -> SearchSnapshot {
+    GLOBAL.snapshot()
+}
+
+/// Zero the global counters and acceptance window (test/run isolation).
+pub fn reset() {
+    GLOBAL.reset()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_records_nothing_globally() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(false);
+        reset();
+        record_move(MoveFamily::Transform, true);
+        assert_eq!(snapshot(), SearchSnapshot::default());
+    }
+
+    #[test]
+    fn per_family_counts_and_rates() {
+        // a private instance: exact counts without racing other tests on
+        // the gated global
+        let c = Counters::new();
+        let r1 = c.record(MoveFamily::Transform, true);
+        let r2 = c.record(MoveFamily::Transform, false);
+        let r3 = c.record(MoveFamily::BitSwap, true);
+        let s = c.snapshot();
+        assert_eq!(s.proposed_of(MoveFamily::Transform), 2);
+        assert_eq!(s.accepted_of(MoveFamily::Transform), 1);
+        assert!((s.accept_rate(MoveFamily::Transform) - 0.5).abs() < 1e-12);
+        assert_eq!(s.proposed_of(MoveFamily::BitSwap), 1);
+        assert!((s.accept_rate(MoveFamily::BitSwap) - 1.0).abs() < 1e-12);
+        // windowed rate after each decision: 1/1, 1/2, 2/3
+        assert!((r1 - 1.0).abs() < 1e-12);
+        assert!((r2 - 0.5).abs() < 1e-12);
+        assert!((r3 - 2.0 / 3.0).abs() < 1e-12);
+        let j = s.to_json();
+        assert_eq!(j.get("transform").unwrap().get("proposed").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("bitswap").unwrap().get("accepted").unwrap().as_usize(), Some(1));
+        assert!(crate::util::json::parse(&j.to_string()).is_ok());
+        c.reset();
+        assert_eq!(c.snapshot(), SearchSnapshot::default());
+    }
+
+    #[test]
+    fn window_saturates_at_capacity() {
+        let c = Counters::new();
+        for _ in 0..(ACCEPT_WINDOW + 16) {
+            c.record(MoveFamily::Transform, false);
+        }
+        let rate = c.record(MoveFamily::Transform, true);
+        // exactly one accept in a full window of 64
+        assert!((rate - 1.0 / ACCEPT_WINDOW as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn enabled_global_samples_rate_counter() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(true);
+        super::super::trace::clear();
+        reset();
+        record_move(MoveFamily::BitSwap, true);
+        crate::obs::set_enabled(false);
+        let s = snapshot();
+        assert!(s.proposed_of(MoveFamily::BitSwap) >= 1);
+        assert!(super::super::trace::take_events()
+            .iter()
+            .any(|e| e.name == "accept_rate_w64"));
+        reset();
+    }
+}

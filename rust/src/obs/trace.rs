@@ -1,0 +1,348 @@
+//! Lock-light per-thread ring-buffer event recorder.
+//!
+//! Each thread appends into its **own** bounded ring behind a mutex that
+//! only that thread touches on the hot path (a global drain briefly locks
+//! each ring), so recording is uncontended: one relaxed gate load when
+//! tracing is off, one uncontended lock + array store when it is on.  Rings
+//! are bounded ([`RING_CAP`] events per thread) and drop **oldest** on
+//! overflow, keeping the tail of a run — the interesting part — while
+//! counting what was lost ([`dropped_total`]).
+//!
+//! Timestamps are microseconds since a process-wide trace epoch (first
+//! event wins), matching the Chrome trace-event `ts` unit.  All clock reads
+//! live in this module (and `obs::kernel`) so instrumented kernels under
+//! `quant/` and `model/` never touch a clock type themselves.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, LazyLock, Mutex, MutexGuard};
+// DETERMINISM: the trace clock is observational only — timestamps are
+// recorded into event buffers and exported, never read back into any
+// scheduling, sampling or numeric decision, so wall-clock nondeterminism
+// cannot leak into results.
+use std::time::Instant;
+
+/// Events retained per thread before drop-oldest kicks in.
+pub const RING_CAP: usize = 1 << 14;
+
+/// Chrome trace-event phase of an [`Event`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// A closed span (`ph: "X"`): `ts_us` + `dur_us`.
+    Complete,
+    /// A point-in-time mark (`ph: "i"`).
+    Mark,
+    /// A sampled counter value (`ph: "C"`).
+    Counter,
+}
+
+impl Phase {
+    /// The Chrome trace-event `ph` code.
+    pub fn ph(self) -> &'static str {
+        match self {
+            Phase::Complete => "X",
+            Phase::Mark => "i",
+            Phase::Counter => "C",
+        }
+    }
+}
+
+/// One recorded trace event.  `&'static str` names keep the record path
+/// allocation-free; `id` carries the request/slot the event belongs to
+/// (0 when not applicable) and `value` the sample for counter events.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub cat: &'static str,
+    pub name: &'static str,
+    pub ph: Phase,
+    /// Microseconds since the trace epoch.
+    pub ts_us: u64,
+    /// Span duration in microseconds (0 for marks/counters).
+    pub dur_us: u64,
+    /// Stable per-thread index (registration order, not OS thread id).
+    pub tid: u64,
+    pub id: u64,
+    pub value: f64,
+}
+
+struct Ring {
+    tid: u64,
+    buf: Vec<Event>,
+    /// Overwrite cursor once `buf` is full (points at the oldest event).
+    next: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn push(&mut self, ev: Event) {
+        if self.buf.len() < RING_CAP {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.next] = ev;
+            self.next = (self.next + 1) % RING_CAP;
+            self.dropped += 1;
+        }
+    }
+
+    /// Take all events oldest-first, leaving the ring empty.
+    fn drain(&mut self) -> Vec<Event> {
+        let mut out = std::mem::take(&mut self.buf);
+        if out.len() == RING_CAP && self.next > 0 {
+            out.rotate_left(self.next);
+        }
+        self.next = 0;
+        out
+    }
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+static REGISTRY: Mutex<Vec<Arc<Mutex<Ring>>>> = Mutex::new(Vec::new());
+static NEXT_TID: AtomicU64 = AtomicU64::new(0);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static LOCAL: Arc<Mutex<Ring>> = {
+        let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        let ring = Arc::new(Mutex::new(Ring { tid, buf: Vec::new(), next: 0, dropped: 0 }));
+        lock(&REGISTRY).push(Arc::clone(&ring));
+        ring
+    };
+}
+
+// DETERMINISM: process-wide trace epoch; see the module-level clock note —
+// only event timestamps derive from it.
+static EPOCH: LazyLock<Instant> = LazyLock::new(
+    // DETERMINISM: epoch capture, observational only.
+    Instant::now,
+);
+
+/// Microseconds since the trace epoch (saturating at 0 for pre-epoch
+/// instants, which can only happen for timestamps captured before tracing
+/// was first enabled).
+// DETERMINISM: converts an already-captured instant; observational only.
+pub(crate) fn rel_us(t: Instant) -> u64 {
+    t.saturating_duration_since(*EPOCH).as_micros().min(u64::MAX as u128) as u64
+}
+
+fn push(mut ev: Event) {
+    LOCAL.with(|r| {
+        let mut g = lock(r);
+        ev.tid = g.tid;
+        g.push(ev);
+    });
+}
+
+/// RAII span: records a [`Phase::Complete`] event from construction to
+/// drop.  Construct via [`span`]; when tracing is disabled at construction
+/// the guard is inert (no clock read, nothing recorded on drop).
+pub struct SpanGuard {
+    cat: &'static str,
+    name: &'static str,
+    id: u64,
+    // DETERMINISM: span start stamp, observational only (module clock note).
+    start: Option<Instant>,
+}
+
+/// Open a span; the returned guard records it when dropped.
+#[inline]
+pub fn span(cat: &'static str, name: &'static str, id: u64) -> SpanGuard {
+    if !super::enabled() {
+        return SpanGuard { cat, name, id, start: None };
+    }
+    let _ = *EPOCH; // pin the epoch at or before every recorded stamp
+    // DETERMINISM: span start capture, observational only.
+    SpanGuard { cat, name, id, start: Some(Instant::now()) }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            // DETERMINISM: span end capture, observational only.
+            let end = Instant::now();
+            push(Event {
+                cat: self.cat,
+                name: self.name,
+                ph: Phase::Complete,
+                ts_us: rel_us(t0),
+                dur_us: end.saturating_duration_since(t0).as_micros().min(u64::MAX as u128)
+                    as u64,
+                tid: 0,
+                id: self.id,
+                value: 0.0,
+            });
+        }
+    }
+}
+
+/// Record a closed span from externally-captured endpoints.  The scheduler
+/// uses this to stamp per-request lifecycle phases whose boundaries it
+/// already tracks (submit/admit/first-token/finish), so span-derived
+/// durations agree with `ServeMetrics` to the microsecond.
+// DETERMINISM: endpoint instants were captured by the caller; conversion
+// here is observational only (module clock note).
+pub fn complete(cat: &'static str, name: &'static str, id: u64, start: Instant, end: Instant) {
+    if !super::enabled() {
+        return;
+    }
+    let _ = *EPOCH;
+    push(Event {
+        cat,
+        name,
+        ph: Phase::Complete,
+        ts_us: rel_us(start),
+        dur_us: end.saturating_duration_since(start).as_micros().min(u64::MAX as u128) as u64,
+        tid: 0,
+        id,
+        value: 0.0,
+    });
+}
+
+/// Record a point-in-time mark at "now".
+pub fn mark(cat: &'static str, name: &'static str, id: u64) {
+    if !super::enabled() {
+        return;
+    }
+    let _ = *EPOCH;
+    // DETERMINISM: mark stamp, observational only.
+    let ts = rel_us(Instant::now());
+    push(Event { cat, name, ph: Phase::Mark, ts_us: ts, dur_us: 0, tid: 0, id, value: 0.0 });
+}
+
+/// Record a counter sample at "now".
+pub fn counter(cat: &'static str, name: &'static str, value: f64) {
+    if !super::enabled() {
+        return;
+    }
+    let _ = *EPOCH;
+    // DETERMINISM: counter stamp, observational only.
+    let ts = rel_us(Instant::now());
+    push(Event { cat, name, ph: Phase::Counter, ts_us: ts, dur_us: 0, tid: 0, id: 0, value });
+}
+
+/// Drain every thread's ring, returning all events sorted by
+/// `(ts_us, tid)` (stable within a thread).  Dropped-event counts are
+/// folded into [`dropped_total`].
+pub fn take_events() -> Vec<Event> {
+    let rings: Vec<_> = lock(&REGISTRY).iter().map(Arc::clone).collect();
+    let mut out = Vec::new();
+    for r in rings {
+        let mut g = lock(&r);
+        DROPPED.fetch_add(g.dropped, Ordering::Relaxed);
+        g.dropped = 0;
+        out.extend(g.drain());
+    }
+    out.sort_by_key(|e| (e.ts_us, e.tid));
+    out
+}
+
+/// Events lost to ring overflow since the last [`reset_dropped`] (including
+/// rings already drained).
+pub fn dropped_total() -> u64 {
+    let pending: u64 = lock(&REGISTRY).iter().map(|r| lock(r).dropped).sum();
+    DROPPED.load(Ordering::Relaxed) + pending
+}
+
+/// Zero the dropped-event counter (rings keep their contents).
+pub fn reset_dropped() {
+    DROPPED.store(0, Ordering::Relaxed);
+    for r in lock(&REGISTRY).iter() {
+        lock(r).dropped = 0;
+    }
+}
+
+/// Discard all buffered events and dropped counts (test isolation).
+pub fn clear() {
+    for r in lock(&REGISTRY).iter() {
+        let mut g = lock(r);
+        g.drain();
+        g.dropped = 0;
+    }
+    DROPPED.store(0, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(false);
+        clear();
+        {
+            let _s = span("test", "noop", 1);
+            counter("test", "c", 1.0);
+            mark("test", "m", 1);
+        }
+        // filter: concurrently-running (non-obs) tests share the global
+        // rings, so only our own category proves anything
+        assert!(take_events().iter().all(|e| e.cat != "test"));
+    }
+
+    #[test]
+    fn span_guard_records_complete_event() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(true);
+        clear();
+        {
+            let _s = span("test", "work", 42);
+            std::hint::black_box(1 + 1);
+        }
+        counter("test", "gauge", 2.5);
+        mark("test", "tick", 7);
+        crate::obs::set_enabled(false);
+        let evs: Vec<_> = take_events().into_iter().filter(|e| e.cat == "test").collect();
+        let sp = evs.iter().find(|e| e.name == "work").expect("span recorded");
+        assert_eq!(sp.ph, Phase::Complete);
+        assert_eq!(sp.id, 42);
+        let c = evs.iter().find(|e| e.name == "gauge").expect("counter recorded");
+        assert_eq!(c.ph, Phase::Counter);
+        assert!((c.value - 2.5).abs() < 1e-12);
+        assert!(evs.iter().any(|e| e.name == "tick" && e.ph == Phase::Mark));
+        // drained: a second take holds none of our events
+        assert!(take_events().iter().all(|e| e.cat != "test"));
+    }
+
+    #[test]
+    fn events_come_out_time_sorted() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(true);
+        clear();
+        for i in 0..32 {
+            counter("test", "seq", i as f64);
+        }
+        crate::obs::set_enabled(false);
+        let all = take_events();
+        assert!(all.windows(2).all(|w| w[0].ts_us <= w[1].ts_us));
+        // same-thread order is preserved for equal timestamps
+        let vals: Vec<_> =
+            all.iter().filter(|e| e.name == "seq").map(|e| e.value as i64).collect();
+        assert_eq!(vals, (0..32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let mut r = Ring { tid: 0, buf: Vec::new(), next: 0, dropped: 0 };
+        let ev = |i: u64| Event {
+            cat: "t",
+            name: "e",
+            ph: Phase::Counter,
+            ts_us: i,
+            dur_us: 0,
+            tid: 0,
+            id: 0,
+            value: 0.0,
+        };
+        for i in 0..(RING_CAP as u64 + 10) {
+            r.push(ev(i));
+        }
+        assert_eq!(r.dropped, 10);
+        let out = r.drain();
+        assert_eq!(out.len(), RING_CAP);
+        // oldest-first, starting right after the 10 dropped events
+        assert_eq!(out[0].ts_us, 10);
+        assert_eq!(out.last().unwrap().ts_us, RING_CAP as u64 + 9);
+    }
+}

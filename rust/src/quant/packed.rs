@@ -435,6 +435,10 @@ impl PackedTensor {
     /// codes per word and stay scalar at every tier (not serving widths).
     pub fn dequant_row_into(&self, r: usize, out: &mut [f32]) {
         assert_eq!(out.len(), self.cols, "dequant_row_into: bad buffer");
+        // bytes of f32 produced by unpack+dequant, wherever it runs
+        // (standalone or inside the fused GEMM tiles); gated to one relaxed
+        // load when tracing is off
+        crate::obs::kernel::add_dequant_bytes(out.len() * 4);
         let bits = self.scheme.bits;
         let per_word = 32 / bits;
         let mask = (1u32 << bits) - 1;
@@ -498,6 +502,20 @@ impl PackedTensor {
 
     /// [`PackedTensor::linear`] into a preallocated output.
     pub fn linear_into(&self, x: &Tensor, bias: &[f32], out: &mut Tensor) {
+        // one relaxed atomic load when tracing is off (`obs::kernel`);
+        // per-tier time/bytes/rows when on — the GB/s counters in bench
+        // JSON and the Prometheus page come from exactly this accounting
+        let t = crate::obs::kernel::gemm_timer();
+        self.linear_into_raw(x, bias, out);
+        t.finish(x.rows, self.nbytes());
+    }
+
+    /// The uninstrumented kernel body of [`PackedTensor::linear_into`].
+    /// Exposed (hidden) so `kernel_microbench --smoke` can measure the
+    /// fused GEMV path with the counter gate compiled out of the loop and
+    /// assert the tracing-disabled overhead stays under 1%.
+    #[doc(hidden)]
+    pub fn linear_into_raw(&self, x: &Tensor, bias: &[f32], out: &mut Tensor) {
         assert_eq!(x.cols, self.cols, "packed linear: in-dim mismatch");
         assert_eq!(bias.len(), self.rows, "packed linear: bias mismatch");
         assert_eq!(out.shape(), (x.rows, self.rows), "packed linear: bad out");

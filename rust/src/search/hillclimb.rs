@@ -27,6 +27,8 @@
 
 use super::alloc::BitSwap;
 use super::state::{SearchState, StepRecord};
+use crate::obs::search::MoveFamily;
+use crate::obs::trace;
 use crate::runtime::Loss;
 use crate::transform::{LayerTransform, TransformKinds};
 
@@ -101,6 +103,14 @@ impl Move {
         match self {
             Move::Transform(_) => None,
             Move::BitSwap(s) => Some(s),
+        }
+    }
+
+    /// Telemetry family of this move (`obs::search` counters).
+    pub fn family(&self) -> MoveFamily {
+        match self {
+            Move::Transform(_) => MoveFamily::Transform,
+            Move::BitSwap(_) => MoveFamily::BitSwap,
         }
     }
 }
@@ -214,12 +224,19 @@ pub fn ensure_init(
 }
 
 /// Push one telemetry record, logging every `cfg.log_every` steps.
+///
+/// Also the single funnel for the `obs` search telemetry: per-family
+/// propose/accept counters and the per-step CE/loss trace — shared by the
+/// sequential and batched drivers, so both emit identical streams for
+/// identical step sequences.
 pub(super) fn record_step(
     state: &mut SearchState,
     cfg: &SearchConfig,
     layer: usize,
+    family: MoveFamily,
     accepted: bool,
 ) {
+    crate::obs::search::record_move(family, accepted);
     let rec = StepRecord {
         step: state.step,
         layer,
@@ -230,6 +247,9 @@ pub(super) fn record_step(
         accept_rate: state.accept_rate(),
         elapsed_s: state.started.elapsed().as_secs_f64(),
     };
+    trace::counter("search", "ce", rec.ce);
+    trace::counter("search", "loss_total", rec.loss_total);
+    trace::counter("search", "accept_rate", rec.accept_rate);
     if cfg.log_every > 0 && state.step % cfg.log_every == 0 {
         crate::info!(
             "step {:5}  loss {:.4}  ce {:.4}  mse {:.3e}  acc {:.2}",
@@ -302,6 +322,7 @@ pub fn run_steps(
         state.step += 1;
         let req = propose_one(state, cfg, n_layers);
         let layer = req.layer;
+        let family = req.mv.family();
         let mut drafts = obj.draft(std::slice::from_ref(&req))?;
         let loss = obj.eval_drafts(&drafts)?[0];
         let accepted = loss.total(state.alpha) < state.best.total(state.alpha);
@@ -312,7 +333,7 @@ pub fn run_steps(
             state.best = exact;
             state.accepts += 1;
         }
-        record_step(state, cfg, layer, accepted);
+        record_step(state, cfg, layer, family, accepted);
     }
     Ok(())
 }
@@ -376,6 +397,43 @@ mod tests {
         };
         assert_eq!(run(5), run(5));
         assert_ne!(run(5), run(6));
+    }
+
+    #[test]
+    fn tracing_on_leaves_search_trajectory_bit_identical() {
+        // Telemetry recording happens strictly after each accept decision,
+        // so the full step-by-step trajectory (losses to the bit, accepted
+        // flags, RNG-driven layer choices) is invariant to the recorder.
+        let run = || {
+            let mut obj = SynthObjective::new(2, 8);
+            let mut state = SearchState::new(2, 8, 9);
+            run_steps(&mut obj, &mut state, &cfg(), 120).unwrap();
+            let traj: Vec<_> = state
+                .telemetry
+                .iter()
+                .map(|r| (r.step, r.layer, r.loss_total.to_bits(), r.ce.to_bits(), r.accepted))
+                .collect();
+            (traj, state.accepts)
+        };
+        let reference = run();
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(true);
+        crate::obs::trace::clear();
+        crate::obs::search::reset();
+        let traced = run();
+        let snap = crate::obs::search::snapshot();
+        crate::obs::set_enabled(false);
+        let events = crate::obs::trace::take_events();
+        crate::obs::search::reset();
+        assert_eq!(reference, traced, "tracing perturbed the search trajectory");
+        // the family counters saw every proposal (>=: the global is shared
+        // with any instrumented test running concurrently)
+        assert!(snap.proposed_of(MoveFamily::Transform) >= 120);
+        assert!(snap.accepted_of(MoveFamily::Transform) >= traced.1 as u64);
+        // and the per-step CE trajectory was sampled into the trace
+        let ce_samples =
+            events.iter().filter(|e| e.cat == "search" && e.name == "ce").count();
+        assert!(ce_samples >= 120, "expected >=120 ce samples, got {ce_samples}");
     }
 
     /// Objective that counts `init` calls and reports a non-finite initial

@@ -75,12 +75,13 @@ pub fn run_rounds(
             order.swap_remove(i);
             losses.swap_remove(i);
             let layer = draft.layer;
+            let family = draft.mv.family();
             commit_to_state(state, &draft);
             let exact = obj.commit(draft)?;
             state.best = exact;
             state.accepts += 1;
             state.step += 1;
-            record_step(state, cfg, layer, true);
+            record_step(state, cfg, layer, family, true);
             if pool.is_empty() {
                 break;
             }
@@ -88,12 +89,12 @@ pub fn run_rounds(
         }
 
         // rejected candidates, recorded in draft order
-        let mut rejects: Vec<(usize, usize)> =
-            order.iter().zip(&pool).map(|(&o, d)| (o, d.layer)).collect();
-        rejects.sort_by_key(|&(o, _)| o);
-        for (_, layer) in rejects {
+        let mut rejects: Vec<(usize, usize, _)> =
+            order.iter().zip(&pool).map(|(&o, d)| (o, d.layer, d.mv.family())).collect();
+        rejects.sort_by_key(|&(o, _, _)| o);
+        for (_, layer, family) in rejects {
             state.step += 1;
-            record_step(state, cfg, layer, false);
+            record_step(state, cfg, layer, family, false);
         }
     }
     Ok(())

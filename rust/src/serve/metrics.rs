@@ -36,10 +36,21 @@ impl Histogram {
         Histogram { buckets: [0; N_BUCKETS], count: 0, sum_us: 0, max_us: 0 }
     }
 
+    /// Number of log₂ buckets (exported for exporters/tests that walk the
+    /// bucket array via [`Histogram::bucket`]).
+    pub const N_BUCKETS: usize = N_BUCKETS;
+
+    /// The documented bucket for a `us`-microsecond sample: `⌊log₂ us⌋`,
+    /// with 0 µs clamped into bucket 0 and the top bucket catching
+    /// everything ≥ 2³⁰ µs.  This is the *only* bucketing rule — `record`
+    /// uses it verbatim, so exporters can reconstruct bucket membership.
+    pub fn bucket_index(us: u64) -> usize {
+        (us.max(1).ilog2() as usize).min(N_BUCKETS - 1)
+    }
+
     pub fn record(&mut self, d: Duration) {
         let us = d.as_micros().min(u64::MAX as u128) as u64;
-        let i = (us.max(1).ilog2() as usize).min(N_BUCKETS - 1);
-        self.buckets[i] += 1;
+        self.buckets[Self::bucket_index(us)] += 1;
         self.count += 1;
         self.sum_us = self.sum_us.saturating_add(us);
         self.max_us = self.max_us.max(us);
@@ -47,6 +58,16 @@ impl Histogram {
 
     pub fn count(&self) -> u64 {
         self.count
+    }
+
+    /// Samples recorded in bucket `i` (see [`Histogram::bucket_index`]).
+    pub fn bucket(&self, i: usize) -> u64 {
+        self.buckets[i.min(N_BUCKETS - 1)]
+    }
+
+    /// Total recorded time (saturating at `u64::MAX` microseconds).
+    pub fn sum(&self) -> Duration {
+        Duration::from_micros(self.sum_us)
     }
 
     pub fn mean(&self) -> Duration {
@@ -121,7 +142,9 @@ impl CountHistogram {
     pub fn record(&mut self, n: usize) {
         self.buckets[n.min(COUNT_BUCKETS - 1)] += 1;
         self.count += 1;
-        self.sum += n as u64;
+        // saturating: a pathological token flood degrades the mean rather
+        // than wrapping it (the Prometheus/JSON exporters read this sum)
+        self.sum = self.sum.saturating_add(n as u64);
     }
 
     pub fn count(&self) -> u64 {
@@ -134,6 +157,11 @@ impl CountHistogram {
         } else {
             self.sum as f64 / self.count as f64
         }
+    }
+
+    /// Total of all recorded samples (saturating at `u64::MAX`).
+    pub fn sum(&self) -> u64 {
+        self.sum
     }
 
     /// Samples recorded at exactly `n` (clamped into the last bucket).
@@ -161,6 +189,13 @@ pub struct ServeMetrics {
     pub ttft: Histogram,
     /// Gap between consecutive tokens of one sequence, per decode step.
     pub inter_token: Histogram,
+    /// Submit → admission into the running batch, per request.
+    pub queue_wait: Histogram,
+    /// Admission → first sampled token, per request
+    /// (`ttft ≈ queue_wait + prefill` for any single request).
+    pub prefill: Histogram,
+    /// First sampled token → last sampled token, per request.
+    pub decode: Histogram,
     queue_depth_sum: u64,
     queue_depth_max: usize,
     queue_samples: u64,
@@ -258,6 +293,13 @@ impl ServeMetrics {
         Json::obj()
             .set("ttft", self.ttft.to_json())
             .set("inter_token", self.inter_token.to_json())
+            .set(
+                "request_timing",
+                Json::obj()
+                    .set("queue_wait", self.queue_wait.to_json())
+                    .set("prefill", self.prefill.to_json())
+                    .set("decode", self.decode.to_json()),
+            )
             .set(
                 "queue",
                 Json::obj()
@@ -408,6 +450,95 @@ mod tests {
         assert_eq!(spec.get("draft_tokens").unwrap().as_usize(), Some(10));
         let accepted = spec.get("accepted_len").unwrap();
         assert_eq!(accepted.get("count").unwrap().as_usize(), Some(3));
+        assert!(crate::util::json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn histogram_quantile_at_count_zero_and_one() {
+        let h = Histogram::new();
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), Duration::ZERO);
+        }
+        let mut h = Histogram::new();
+        h.record(Duration::from_micros(300));
+        // single sample: every quantile is that sample (bucket upper bound
+        // clamped to the true max)
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), Duration::from_micros(300), "q={q}");
+        }
+    }
+
+    #[test]
+    fn bucket_boundaries_land_in_documented_bucket() {
+        // an exact power of two 2^i µs opens bucket i; 2^i - 1 closes i-1
+        for i in [0usize, 1, 5, 20, 30] {
+            let us = 1u64 << i;
+            assert_eq!(Histogram::bucket_index(us), i, "2^{i} µs");
+            if i > 1 {
+                assert_eq!(Histogram::bucket_index(us - 1), i - 1, "2^{i}-1 µs");
+            }
+            let mut h = Histogram::new();
+            h.record(Duration::from_micros(us));
+            assert_eq!(h.bucket(i), 1);
+            assert_eq!(h.count(), 1);
+        }
+        // 0 µs clamps into the first bucket, the overflow tail into the last
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(u64::MAX), Histogram::N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_sum_saturates_at_u64_max() {
+        let mut h = Histogram::new();
+        h.record(Duration::from_micros(u64::MAX));
+        h.record(Duration::from_micros(u64::MAX));
+        // saturated, not wrapped (a wrap would also panic in debug builds)
+        assert_eq!(h.sum(), Duration::from_micros(u64::MAX));
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.bucket(Histogram::N_BUCKETS - 1), 2);
+        assert!(h.quantile(1.0) <= Duration::from_micros(u64::MAX));
+    }
+
+    #[test]
+    fn count_histogram_saturates_sum_and_clamps_bucket() {
+        let mut h = CountHistogram::new();
+        h.record(usize::MAX);
+        h.record(usize::MAX);
+        assert_eq!(h.sum(), u64::MAX, "sum must saturate, not wrap");
+        assert_eq!(h.at(COUNT_BUCKETS - 1), 2);
+        assert_eq!(h.count(), 2);
+        assert!(h.mean() > 0.0);
+        assert!(crate::util::json::parse(&h.to_json().to_string()).is_ok());
+    }
+
+    #[test]
+    fn metrics_json_shape_snapshot() {
+        // exporter-drift tripwire: the exact top-level key set and the
+        // per-histogram key set are load-bearing for perf tooling and the
+        // Prometheus renderer — extending is fine, but must be deliberate
+        let j = ServeMetrics::new().to_json();
+        let keys: Vec<&str> = j.entries().unwrap().iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(
+            keys,
+            [
+                "ttft",
+                "inter_token",
+                "request_timing",
+                "queue",
+                "prefix_cache",
+                "kv",
+                "speculative",
+                "finished"
+            ]
+        );
+        let rt = j.get("request_timing").unwrap();
+        let rt_keys: Vec<&str> = rt.entries().unwrap().iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(rt_keys, ["queue_wait", "prefill", "decode"]);
+        for section in ["queue_wait", "prefill", "decode"] {
+            let h = rt.get(section).unwrap();
+            let hk: Vec<&str> = h.entries().unwrap().iter().map(|(k, _)| k.as_str()).collect();
+            assert_eq!(hk, ["count", "mean_us", "p50_us", "p95_us", "p99_us", "max_us"], "{section}");
+        }
         assert!(crate::util::json::parse(&j.to_string()).is_ok());
     }
 

@@ -120,14 +120,53 @@ impl Request {
     }
 }
 
+/// Where one request's wall time went, attached to its [`Completion`].
+/// Always populated (the clock reads are a handful of nanoseconds per
+/// request — far below scheduler noise), independent of whether the span
+/// recorder (`crate::obs`) is on.
+///
+/// Invariant: `ttft_us == queue_us + prefill_us` up to 1 µs truncation,
+/// and the same boundary instants feed the request-lifecycle spans, so a
+/// Chrome trace of the run shows the identical breakdown.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RequestTiming {
+    /// Submit → admission into the running batch.
+    pub queue_us: u64,
+    /// Admission → first sampled token.
+    pub prefill_us: u64,
+    /// First sampled token → last sampled token.
+    pub decode_us: u64,
+    /// Submit → first sampled token (the TTFT the metrics histogram sees).
+    pub ttft_us: u64,
+    /// Decode rounds this request participated in.
+    pub decode_rounds: u32,
+}
+
 /// A finished request.  Every submitted request produces exactly one
 /// completion — including rejected and cancelled ones (`finish` says why).
-#[derive(Debug, Clone, PartialEq)]
+///
+/// Equality deliberately **ignores** [`Completion::timing`]: the
+/// determinism pins compare completions across runs, and wall-clock
+/// timings are the one field that legitimately differs between
+/// bit-identical runs.
+#[derive(Debug, Clone)]
 pub struct Completion {
     pub id: usize,
     pub prompt: Vec<i32>,
     pub generated: Vec<i32>,
     pub finish: FinishReason,
+    /// Per-request queue/prefill/decode/TTFT breakdown (zeros for requests
+    /// rejected before admission).
+    pub timing: RequestTiming,
+}
+
+impl PartialEq for Completion {
+    fn eq(&self, other: &Completion) -> bool {
+        self.id == other.id
+            && self.prompt == other.prompt
+            && self.generated == other.generated
+            && self.finish == other.finish
+    }
 }
 
 /// Scheduler knobs.

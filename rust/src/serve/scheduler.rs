@@ -34,7 +34,8 @@ use crate::serve::metrics::ServeMetrics;
 use crate::serve::prefix::PrefixCache;
 use crate::serve::spec::{self, SpecRound};
 use crate::serve::stream::{FinishReason, StopCondition};
-use crate::serve::{Completion, Request, ServeOpts, ServeStats};
+use crate::obs::trace;
+use crate::serve::{Completion, Request, RequestTiming, ServeOpts, ServeStats};
 use crate::util::pool;
 use crate::util::rng::Pcg64;
 
@@ -170,7 +171,15 @@ struct Slot {
     /// Set when a stop condition fired; retired at the round boundary.
     finish: Option<FinishReason>,
     submitted_at: Instant,
+    /// When this slot entered the running batch (queue-wait boundary; also
+    /// the start of the request's prefill span).
+    admitted_at: Instant,
     last_token_at: Instant,
+    /// Stamped at the first sampled token — the TTFT boundary, the end of
+    /// the prefill span and the start of the decode span.
+    first_token_at: Option<Instant>,
+    /// Decode rounds this slot participated in (plain or speculative).
+    decode_rounds: u32,
     /// Measured inside the (parallel) sampling closure, drained into the
     /// metrics histograms on the scheduler thread.
     ttft: Option<Duration>,
@@ -187,6 +196,7 @@ impl Slot {
         let now = Instant::now();
         if idx == 0 {
             self.ttft = Some(now.duration_since(self.submitted_at));
+            self.first_token_at = Some(now);
         } else {
             self.itl_pending = Some(now.duration_since(self.last_token_at));
         }
@@ -198,6 +208,45 @@ impl Slot {
             self.finish = Some(FinishReason::Stop);
         }
     }
+
+    /// Close out this slot's lifecycle accounting: record the queue/prefill/
+    /// decode histograms, emit the request's spans (when tracing is on —
+    /// spans reuse the same boundary instants, so the Chrome trace and the
+    /// [`RequestTiming`] agree up to 1 µs truncation), and return the
+    /// per-request breakdown for its [`Completion`].
+    fn retire(&self, metrics: &mut ServeMetrics) -> RequestTiming {
+        let queue_wait = self.admitted_at.duration_since(self.submitted_at);
+        metrics.queue_wait.record(queue_wait);
+        let mut timing = RequestTiming {
+            queue_us: us(queue_wait),
+            decode_rounds: self.decode_rounds,
+            ..RequestTiming::default()
+        };
+        if let Some(ft) = self.first_token_at {
+            let prefill = ft.duration_since(self.admitted_at);
+            let decode = self.last_token_at.duration_since(ft);
+            metrics.prefill.record(prefill);
+            metrics.decode.record(decode);
+            timing.prefill_us = us(prefill);
+            timing.decode_us = us(decode);
+            timing.ttft_us = us(ft.duration_since(self.submitted_at));
+        }
+        if crate::obs::enabled() {
+            let id = self.req.id as u64;
+            trace::complete("serve", "queue", id, self.submitted_at, self.admitted_at);
+            if let Some(ft) = self.first_token_at {
+                trace::complete("serve", "prefill", id, self.admitted_at, ft);
+                trace::complete("serve", "decode", id, ft, self.last_token_at);
+            }
+            trace::mark("serve", "finish", id);
+        }
+        timing
+    }
+}
+
+/// Whole microseconds of a duration, saturating at `u64::MAX`.
+fn us(d: Duration) -> u64 {
+    d.as_micros().min(u64::MAX as u128) as u64
 }
 
 /// Continuous-batching scheduler over any [`DecoderParams`] source.
@@ -347,6 +396,7 @@ impl<'a, P: DecoderParams + ?Sized> Scheduler<'a, P> {
                     sequences: std::mem::take(&mut req.stop_seqs),
                 };
                 let rng = Pcg64::with_stream(self.opts.seed, req.id as u64);
+                trace::mark("serve", "admit", req.id as u64);
                 let now = Instant::now();
                 admitted.push(Slot {
                     req,
@@ -365,7 +415,10 @@ impl<'a, P: DecoderParams + ?Sized> Scheduler<'a, P> {
                     spec_round: None,
                     finish: None,
                     submitted_at: q.submitted_at,
+                    admitted_at: now,
                     last_token_at: now,
+                    first_token_at: None,
+                    decode_rounds: 0,
                     ttft: None,
                     itl_pending: None,
                 });
@@ -375,6 +428,7 @@ impl<'a, P: DecoderParams + ?Sized> Scheduler<'a, P> {
             let admitted_any = !admitted.is_empty();
             if admitted_any {
                 let t0 = Instant::now();
+                let _prefill_span = trace::span("serve", "prefill_batch", round);
                 if let Some(pc) = prefix.as_mut() {
                     // 1. look up each prompt against the trie (sequential,
                     //    cheap — forks share pages, no forward pass)
@@ -524,11 +578,13 @@ impl<'a, P: DecoderParams + ?Sized> Scheduler<'a, P> {
                 // consumed with it — the set never grows unboundedly and a
                 // later request reusing the id is unaffected
                 self.cancel.clear_id(s.req.id);
+                let timing = s.retire(&mut self.metrics);
                 done.push(Completion {
                     id: s.req.id,
                     prompt: std::mem::take(&mut s.req.prompt),
                     generated: std::mem::take(&mut s.generated),
                     finish: reason,
+                    timing,
                 });
             }
             if active.is_empty() {
@@ -541,16 +597,20 @@ impl<'a, P: DecoderParams + ?Sized> Scheduler<'a, P> {
             let t0 = Instant::now();
             let threads = pool::num_threads().min(active.len());
             let (spec_k, draft) = (self.opts.spec, self.draft);
-            pool::parallel_chunks_mut(&mut active, 1, threads, |_i, slot| {
-                let s = &mut slot[0];
-                match draft {
-                    Some(d) if spec_k > 0 => advance_speculative(params, d, s, spec_k),
-                    _ => {
-                        let logits = native::decode_step(params, &mut s.cache, s.last);
-                        s.push_token(&logits);
+            {
+                let _round_span = trace::span("serve", "decode_round", round);
+                pool::parallel_chunks_mut(&mut active, 1, threads, |_i, slot| {
+                    let s = &mut slot[0];
+                    s.decode_rounds += 1;
+                    match draft {
+                        Some(d) if spec_k > 0 => advance_speculative(params, d, s, spec_k),
+                        _ => {
+                            let logits = native::decode_step(params, &mut s.cache, s.last);
+                            s.push_token(&logits);
+                        }
                     }
-                }
-            });
+                });
+            }
             stats.decode_time += t0.elapsed();
             stats.decode_steps += 1;
             let mut round_tokens = 0usize;
@@ -648,6 +708,7 @@ fn advance_speculative<P: DecoderParams + ?Sized>(
     let drafts = spec::propose(draft, dc, &gap, k);
 
     // 2. the target verifies pending token + drafts in one chunked forward
+    let _verify_span = trace::span("serve", "verify", s.req.id as u64);
     let mut chunk = vec![s.last];
     chunk.extend(&drafts);
     let logits = native::forward_chunk(params, &mut s.cache, &chunk);
@@ -711,6 +772,7 @@ fn finish_unstarted(
         sink.on_finish(&reason);
     }
     done.push(Completion {
+        timing: RequestTiming::default(),
         id: req.id,
         prompt: std::mem::take(&mut req.prompt),
         generated: Vec::new(),
@@ -1412,5 +1474,116 @@ mod tests {
         );
         // the eager baseline stays an f32 full-context figure for every dtype
         assert_eq!(base.kv_eager_bytes_peak, int8.kv_eager_bytes_peak);
+    }
+
+    // -- tentpole: request-lifecycle tracing --------------------------------
+
+    #[test]
+    fn tracing_on_is_bit_identical() {
+        // The span recorder must be a pure observer: with tracing forced on,
+        // completions (greedy and stochastic, plain and speculative, with
+        // the prefix cache in the mix) stay bit-identical to the
+        // tracing-off reference the batch/policy pin already established.
+        let w = test_weights();
+        let draft = Weights::random(OptConfig::test_config(), 77);
+        let reference = run_mixed(&w, None, 0, 1, AdmissionPolicy::Fcfs, false).0;
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(true);
+        crate::obs::trace::clear();
+        let traced = run_mixed(&w, None, 0, 4, AdmissionPolicy::Deadline, true).0;
+        let traced_spec =
+            run_mixed(&w, Some(&draft), 2, 4, AdmissionPolicy::ShortestPrompt, true).0;
+        crate::obs::set_enabled(false);
+        crate::obs::trace::clear();
+        assert_eq!(reference, traced, "tracing perturbed plain completions");
+        assert_eq!(reference, traced_spec, "tracing perturbed speculative completions");
+    }
+
+    #[test]
+    fn chrome_trace_covers_request_lifecycle_and_matches_ttft() {
+        use crate::obs::trace::Phase;
+        use crate::serve::Histogram;
+        let w = test_weights();
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(true);
+        crate::obs::trace::clear();
+        // pin the trace epoch before any request is submitted, so even
+        // submit-time stamps convert exactly (no pre-epoch saturation)
+        crate::obs::trace::mark("test", "epoch_pin", 0);
+        // ids far from every other test's, so events recorded by tests
+        // running concurrently while the recorder is on can't alias ours
+        let base = 9_100usize;
+        let mut s = Scheduler::new(&w, ServeOpts { max_batch: 2, ..Default::default() });
+        for i in 0..4 {
+            s.submit(Request::new(base + i, vec![1, 2, 3, i as i32], 3, Sampler::Greedy));
+        }
+        let (done, _) = s.run();
+        crate::obs::set_enabled(false);
+        let events = crate::obs::trace::take_events();
+        assert_eq!(done.len(), 4);
+
+        // the dumped Chrome trace parses and holds at least our events
+        let dir = std::env::temp_dir().join("invarexplore_scheduler_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        crate::obs::chrome::write(&path, &events).unwrap();
+        let doc = crate::util::json::parse_file(&path).unwrap();
+        assert_eq!(doc.req("traceEvents").unwrap().as_arr().unwrap().len(), events.len());
+
+        let ours = |name: &str, id: usize| {
+            events
+                .iter()
+                .find(|e| e.cat == "serve" && e.name == name && e.id == id as u64)
+                .copied()
+                .unwrap_or_else(|| panic!("missing {name} event for request {id}"))
+        };
+        for c in &done {
+            assert_eq!(c.finish, FinishReason::Length);
+            let admit = ours("admit", c.id);
+            let queue = ours("queue", c.id);
+            let prefill = ours("prefill", c.id);
+            let decode = ours("decode", c.id);
+            let finish = ours("finish", c.id);
+            assert_eq!(admit.ph, Phase::Mark);
+            assert_eq!(queue.ph, Phase::Complete);
+            assert_eq!(finish.ph, Phase::Mark);
+            // span tree: queue ends where prefill starts, prefill ends where
+            // decode starts, decode ends before the finish mark (each
+            // boundary shared up to 1 µs truncation)
+            let queue_end = queue.ts_us + queue.dur_us;
+            assert!(queue_end.abs_diff(prefill.ts_us) <= 1, "queue/prefill boundary");
+            let prefill_end = prefill.ts_us + prefill.dur_us;
+            assert!(prefill_end.abs_diff(decode.ts_us) <= 1, "prefill/decode boundary");
+            assert!(decode.ts_us + decode.dur_us <= finish.ts_us + 1, "decode before finish");
+            assert!(admit.ts_us <= queue_end + 1, "admit mark sits at the queue boundary");
+            // TTFT derived from the spans matches the per-request timing
+            // (which is the exact duration the metrics histogram recorded)
+            let span_ttft = prefill_end - queue.ts_us;
+            assert!(
+                span_ttft.abs_diff(c.timing.ttft_us) <= 2,
+                "span TTFT {span_ttft} vs timing {}",
+                c.timing.ttft_us
+            );
+            assert!(
+                c.timing.ttft_us.abs_diff(c.timing.queue_us + c.timing.prefill_us) <= 1,
+                "ttft != queue + prefill"
+            );
+            assert!(c.timing.decode_rounds >= 1);
+            assert!(c.timing.decode_us >= 1 || c.timing.ttft_us > 0);
+        }
+        // the TTFT histogram saw exactly these four requests, in exactly the
+        // buckets the per-request timings fall into
+        let m = s.metrics();
+        assert_eq!(m.ttft.count(), 4);
+        assert_eq!(m.queue_wait.count(), 4);
+        assert_eq!(m.prefill.count(), 4);
+        assert_eq!(m.decode.count(), 4);
+        let mut expect = vec![0u64; Histogram::N_BUCKETS];
+        for c in &done {
+            expect[Histogram::bucket_index(c.timing.ttft_us)] += 1;
+        }
+        for (i, &n) in expect.iter().enumerate() {
+            assert_eq!(m.ttft.bucket(i), n, "ttft bucket {i}");
+        }
     }
 }

@@ -65,13 +65,27 @@ pub fn measure<F: FnMut()>(mut f: F, budget: Duration, max_iters: usize) -> Stat
 pub struct BenchSuite {
     name: String,
     rows: Vec<(String, Stats)>,
+    /// Wall-clock placement of each row relative to the trace epoch
+    /// (`ts_us`, `dur_us`) — turned into Chrome-trace span events by
+    /// [`BenchSuite::write_json`] so a trace viewer shows where suite time
+    /// went.
+    row_spans: Vec<(u64, u64)>,
+    /// Derived scalar results (achieved GB/s, overhead fractions, …)
+    /// attached to the JSON trajectory under `"counters"` — the
+    /// perf-history drift check reads these as higher-is-better series.
+    counters: Vec<(String, f64)>,
 }
 
 impl BenchSuite {
     pub fn new(name: &str) -> Self {
+        // pin the obs trace epoch now, so every row span (and any recorder
+        // event emitted during the run) shares one zero point
+        let _ = crate::obs::trace::rel_us(Instant::now());
         BenchSuite {
             name: name.to_string(),
             rows: Vec::new(),
+            row_spans: Vec::new(),
+            counters: Vec::new(),
         }
     }
 
@@ -82,7 +96,10 @@ impl BenchSuite {
                 .and_then(|v| v.parse().ok())
                 .unwrap_or(1500),
         );
+        let t0 = Instant::now();
         let stats = measure(f, budget, 1000);
+        self.row_spans
+            .push((crate::obs::trace::rel_us(t0), t0.elapsed().as_micros() as u64));
         println!(
             "  {label:<42} {:>12?} mean  {:>12?} p50  ({} iters)",
             stats.mean, stats.p50, stats.iters
@@ -113,6 +130,12 @@ impl BenchSuite {
     /// row, so one-shot workload timings land in the JSON trajectory next
     /// to the loop-measured rows.
     pub fn record(&mut self, label: &str, stats: Stats) {
+        // externally measured: the best span placement available is "it
+        // ended about now and lasted mean * iters"
+        let now = Instant::now();
+        let total = stats.mean.saturating_mul(stats.iters.max(1) as u32);
+        let ts = crate::obs::trace::rel_us(now).saturating_sub(total.as_micros() as u64);
+        self.row_spans.push((ts, total.as_micros() as u64));
         println!(
             "  {label:<42} {:>12?} mean  ({} iters, recorded)",
             stats.mean, stats.iters
@@ -120,11 +143,28 @@ impl BenchSuite {
         self.rows.push((label.to_string(), stats));
     }
 
+    /// Attach a derived scalar result (e.g. achieved GB/s per SIMD tier,
+    /// or an overhead fraction) to the suite.  Lands under `"counters"` in
+    /// `BENCH_<suite>.json` and as a Chrome counter event in
+    /// `TRACE_<suite>.json`; re-setting a name overwrites its value.
+    pub fn set_counter(&mut self, name: &str, value: f64) {
+        if let Some(c) = self.counters.iter_mut().find(|(n, _)| n == name) {
+            c.1 = value;
+        } else {
+            self.counters.push((name.to_string(), value));
+        }
+    }
+
+    /// Counters attached so far (name, value).
+    pub fn counters(&self) -> &[(String, f64)] {
+        &self.counters
+    }
+
     /// Serialize the suite as JSON — the machine-readable perf trajectory
     /// CI archives per run (`BENCH_<suite>.json` artifacts), replacing the
     /// log-scrape-only text report.
     pub fn to_json(&self) -> Json {
-        Json::obj().set("suite", self.name.as_str()).set(
+        let mut j = Json::obj().set("suite", self.name.as_str()).set(
             "rows",
             Json::Arr(
                 self.rows
@@ -140,13 +180,63 @@ impl BenchSuite {
                     })
                     .collect(),
             ),
-        )
+        );
+        if !self.counters.is_empty() {
+            let mut c = Json::obj();
+            for (name, v) in &self.counters {
+                c = c.set(name.as_str(), *v);
+            }
+            j = j.set("counters", c);
+        }
+        j
     }
 
-    /// Write `BENCH_<suite>.json` into `dir`, returning the path.
+    /// Chrome trace-event document for the suite: one span per bench row
+    /// (wall-clock placement against the shared trace epoch), one counter
+    /// event per attached counter, plus everything the span recorder
+    /// captured during the run (drained here; empty when tracing was off).
+    pub fn to_trace_json(&self) -> Json {
+        let mut events: Vec<Json> = Vec::new();
+        for ((label, _), &(ts, dur)) in self.rows.iter().zip(&self.row_spans) {
+            events.push(
+                Json::obj()
+                    .set("name", label.as_str())
+                    .set("cat", "bench")
+                    .set("ph", "X")
+                    .set("pid", 1usize)
+                    .set("tid", 0usize)
+                    .set("ts", ts as f64)
+                    .set("dur", dur as f64),
+            );
+        }
+        let t_end = self.row_spans.last().map_or(0, |&(ts, dur)| ts + dur);
+        for (name, v) in &self.counters {
+            events.push(
+                Json::obj()
+                    .set("name", name.as_str())
+                    .set("cat", "bench")
+                    .set("ph", "C")
+                    .set("pid", 1usize)
+                    .set("tid", 0usize)
+                    .set("ts", t_end as f64)
+                    .set("args", Json::obj().set("value", *v)),
+            );
+        }
+        for ev in crate::obs::trace::take_events() {
+            events.push(crate::obs::chrome::event_json(&ev));
+        }
+        Json::obj().set("displayTimeUnit", "ms").set("traceEvents", Json::Arr(events))
+    }
+
+    /// Write `BENCH_<suite>.json` into `dir` — and its Chrome-trace twin
+    /// `TRACE_<suite>.json` next to it, so every bench smoke ships a
+    /// loadable trace artifact without per-binary plumbing.  Returns the
+    /// BENCH path.
     pub fn write_json(&self, dir: &Path) -> crate::Result<PathBuf> {
         let path = dir.join(format!("BENCH_{}.json", self.name));
         std::fs::write(&path, self.to_json().to_string())?;
+        let trace_path = dir.join(format!("TRACE_{}.json", self.name));
+        std::fs::write(&trace_path, self.to_trace_json().to_string())?;
         Ok(path)
     }
 }
@@ -208,10 +298,15 @@ mod tests {
 
     #[test]
     fn json_trajectory_written_and_parseable() {
+        // write_json's trace twin drains the global span recorder — hold
+        // the obs guard so concurrently-running obs tests don't lose events
+        let _g = crate::obs::test_guard();
         let mut suite = BenchSuite::new("unit_test_suite");
         suite.bench("tiny_op", || {
             std::hint::black_box(3 * 3);
         });
+        suite.set_counter("kernel_gemm_gbps_scalar", 12.5);
+        suite.set_counter("kernel_gemm_gbps_scalar", 13.0); // overwrite wins
         let dir = std::env::temp_dir().join("invarexplore_bench_json_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = suite.write_json(&dir).unwrap();
@@ -223,5 +318,29 @@ mod tests {
         assert_eq!(rows[0].req("label").unwrap().as_str(), Some("tiny_op"));
         assert!(rows[0].req("iters").unwrap().as_usize().unwrap() >= 1);
         assert!(rows[0].req("mean_s").unwrap().as_f64().is_some());
+        let c = j.req("counters").unwrap();
+        assert_eq!(c.get("kernel_gemm_gbps_scalar").unwrap().as_f64(), Some(13.0));
+
+        // the Chrome-trace twin is written next to it and is a loadable
+        // trace: one span per row, one counter event per counter
+        let trace = dir.join("TRACE_unit_test_suite.json");
+        let t = crate::util::json::parse_file(&trace).unwrap();
+        assert_eq!(t.req("displayTimeUnit").unwrap().as_str(), Some("ms"));
+        let evs = t.req("traceEvents").unwrap().as_arr().unwrap();
+        let row_span = evs
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some("tiny_op"))
+            .expect("bench row span");
+        assert_eq!(row_span.get("ph").unwrap().as_str(), Some("X"));
+        assert!(row_span.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+        let counter_ev = evs
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some("kernel_gemm_gbps_scalar"))
+            .expect("counter event");
+        assert_eq!(counter_ev.get("ph").unwrap().as_str(), Some("C"));
+        assert_eq!(
+            counter_ev.get("args").unwrap().get("value").unwrap().as_f64(),
+            Some(13.0)
+        );
     }
 }

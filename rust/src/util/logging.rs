@@ -5,7 +5,7 @@
 //! defaulting to `info`.  Messages go to stderr so CLI table output on
 //! stdout stays machine-readable.
 
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 use std::sync::LazyLock;
 use std::time::Instant;
 
@@ -20,15 +20,44 @@ pub enum Level {
 
 static LEVEL: AtomicU8 = AtomicU8::new(2);
 static START: LazyLock<Instant> = LazyLock::new(Instant::now);
+static WARNED_BAD_LEVEL: AtomicBool = AtomicBool::new(false);
 
-/// Initialise from the environment; safe to call multiple times.
+/// The accepted `INVAREXPLORE_LOG` values, in severity order.
+pub const LEVEL_NAMES: [&str; 5] = ["error", "warn", "info", "debug", "trace"];
+
+/// Parse one `INVAREXPLORE_LOG` value.  Every accepted name is matched
+/// explicitly — including `info` — so an unrecognized value is
+/// distinguishable from the default instead of silently falling through.
+pub fn parse_level(s: &str) -> Option<Level> {
+    match s {
+        "error" => Some(Level::Error),
+        "warn" => Some(Level::Warn),
+        "info" => Some(Level::Info),
+        "debug" => Some(Level::Debug),
+        "trace" => Some(Level::Trace),
+        _ => None,
+    }
+}
+
+/// Initialise from the environment; safe to call multiple times.  An
+/// unrecognized `INVAREXPLORE_LOG` value keeps the `info` default and warns
+/// once, naming the bad value and the accepted set.
 pub fn init() {
-    let lvl = match std::env::var("INVAREXPLORE_LOG").as_deref() {
-        Ok("error") => Level::Error,
-        Ok("warn") => Level::Warn,
-        Ok("debug") => Level::Debug,
-        Ok("trace") => Level::Trace,
-        _ => Level::Info,
+    let lvl = match std::env::var("INVAREXPLORE_LOG") {
+        Ok(v) => match parse_level(&v) {
+            Some(l) => l,
+            None => {
+                if !WARNED_BAD_LEVEL.swap(true, Ordering::Relaxed) {
+                    eprintln!(
+                        "[logging] unrecognized INVAREXPLORE_LOG value {v:?}; \
+                         accepted: {}; defaulting to \"info\"",
+                        LEVEL_NAMES.join("|")
+                    );
+                }
+                Level::Info
+            }
+        },
+        Err(_) => Level::Info,
     };
     set_level(lvl);
     LazyLock::force(&START);
@@ -80,5 +109,23 @@ mod tests {
         assert!(enabled(Level::Warn));
         assert!(!enabled(Level::Info));
         set_level(Level::Info); // restore default for other tests
+    }
+
+    #[test]
+    fn parse_level_accepts_exactly_the_documented_set() {
+        // pure-fn coverage — no env mutation (setenv in tests is UB under
+        // concurrent getenv)
+        assert_eq!(parse_level("error"), Some(Level::Error));
+        assert_eq!(parse_level("warn"), Some(Level::Warn));
+        assert_eq!(parse_level("info"), Some(Level::Info), "info is matched explicitly");
+        assert_eq!(parse_level("debug"), Some(Level::Debug));
+        assert_eq!(parse_level("trace"), Some(Level::Trace));
+        for bad in ["", "INFO", "verbose", "warning", "2", "Info "] {
+            assert_eq!(parse_level(bad), None, "{bad:?} must not parse");
+        }
+        // the advertised name list round-trips through the parser
+        for name in LEVEL_NAMES {
+            assert!(parse_level(name).is_some(), "{name} advertised but unparseable");
+        }
     }
 }

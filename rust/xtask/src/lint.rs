@@ -18,9 +18,12 @@
 //! 4. `nondet-*` — nondeterminism hazards in bit-identity code:
 //!    `std::collections::HashMap`/`HashSet` imports (iteration order) in
 //!    `quant/`, `model/`, `serve/`; wall clocks (`Instant`/`SystemTime`)
-//!    in `quant/`, `model/`; ambient RNG (`thread_rng`, `from_entropy`,
-//!    `RandomState`, `getrandom`) anywhere in those three. Each needs a
-//!    `DETERMINISM:` note arguing why determinism is preserved.
+//!    in `quant/`, `model/`, `obs/`; ambient RNG (`thread_rng`,
+//!    `from_entropy`, `RandomState`, `getrandom`) anywhere in those.
+//!    Each needs a `DETERMINISM:` note arguing why determinism is
+//!    preserved. `obs/` is in the clock scope because it is the one
+//!    module compute code calls from bit-identity paths: every clock
+//!    read there must argue it can only affect telemetry, never values.
 //!
 //! Every escape hatch is a per-site annotation with mandatory
 //! justification text — there is no file-level or blanket exemption.
@@ -65,6 +68,7 @@ pub struct Scope {
     pub quant: bool,
     pub model: bool,
     pub serve: bool,
+    pub obs: bool,
 }
 
 pub fn scope_of(rel: &str) -> Scope {
@@ -74,6 +78,7 @@ pub fn scope_of(rel: &str) -> Scope {
             "quant" => s.quant = true,
             "model" => s.model = true,
             "serve" => s.serve = true,
+            "obs" => s.obs = true,
             _ => {}
         }
     }
@@ -168,7 +173,7 @@ pub fn lint_source(rel: &str, src: &str) -> Vec<Violation> {
                 push(idx, "nondet-rng", line);
             }
         }
-        if (scope.quant || scope.model)
+        if (scope.quant || scope.model || scope.obs)
             && CLOCK_TOKENS.iter().any(|t| has_token(code, t))
             && !annotated(&lines, idx, DETERMINISM_TAGS)
         {
@@ -307,6 +312,18 @@ mod tests {
         assert_eq!(lint_source("src/model/x.rs", src).len(), 1);
         // serve/ telemetry legitimately uses wall clocks.
         assert!(lint_source("src/serve/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn clocks_in_obs_need_determinism_note() {
+        // obs/ is called from bit-identity paths, so every clock read
+        // there carries the same justification burden as quant/model.
+        let src = "use std::time::Instant;\n";
+        let v = lint_source("src/obs/x.rs", src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "nondet-clock");
+        let ok = "// DETERMINISM: timestamp feeds telemetry only, never values\nuse std::time::Instant;\n";
+        assert!(lint_source("src/obs/x.rs", ok).is_empty());
     }
 
     #[test]
