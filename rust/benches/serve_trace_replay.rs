@@ -1,0 +1,333 @@
+//! Trace-replay load benchmark for the multi-replica router and the
+//! tensor-parallel sharded model.
+//!
+//! A synthetic but production-shaped trace drives everything:
+//!
+//! * **Zipf prompt lengths and prefix popularity** — a handful of shared
+//!   system prompts with Zipf-distributed popularity (a few prompts
+//!   dominate, as in real serving), plus Zipf-tailed per-request suffixes;
+//! * **MMPP arrivals** — a two-state Markov-modulated Poisson process
+//!   (calm / burst) decides how many requests arrive in each replay wave,
+//!   so queue depth swings the way bursty traffic swings it.
+//!
+//! The trace is replayed against replica counts {1, 2, 4}, reporting
+//! goodput (generated tokens / s), shed rate, and per-replica TTFT and
+//! inter-token-latency p50/p95/p99.  A saturated segment replays the same
+//! burst against a small admission watermark to exercise load shedding.
+//!
+//! Invariants asserted (always — this is what CI `--smoke` pins):
+//!
+//! 1. non-shed completions are **bit-identical** across replica counts,
+//!    prefix cache on/off, and shard counts {1, 2, 4} of the packed model;
+//! 2. the overload segment sheds (`shed > 0`), every shed request finishes
+//!    as `Rejected`, and nothing panics or hangs;
+//! 3. admission-capacity goodput with 4 replicas is **strictly above**
+//!    single-replica goodput on the same overloaded trace (count-based:
+//!    per-replica watermarks admit ~4x the requests, independent of
+//!    machine speed).
+//!
+//! Runs entirely on a synthetic random model — no artifacts needed.
+//! `--smoke` (or env `SERVE_TRACE_REPLAY_SMOKE=1`) shrinks the trace and
+//! exits after the assertions — wired into CI.
+
+use std::time::Instant;
+
+use invarexplore::model::{OptConfig, Weights};
+use invarexplore::quant::{BitAllocation, QuantScheme};
+use invarexplore::serve::{
+    Completion, FinishReason, PackedModel, Request, Router, RouterOpts, Scheduler, ServeOpts,
+    ShardedModel,
+};
+use invarexplore::util::bench::{BenchSuite, Stats};
+use invarexplore::util::rng::Pcg64;
+use invarexplore::util::sampling::Sampler;
+
+fn bench_config(smoke: bool) -> OptConfig {
+    if smoke {
+        OptConfig::test_config()
+    } else {
+        OptConfig {
+            name: "trace-replay".into(),
+            vocab: 512,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 8,
+            d_ffn: 512,
+            max_seq: 128,
+        }
+    }
+}
+
+/// Zipf(s)-distributed rank in `1..=n` via inverse-CDF over the exact
+/// (small-n) normalization.
+fn zipf(rng: &mut Pcg64, n: usize, s: f64) -> usize {
+    let norm: f64 = (1..=n).map(|k| (k as f64).powf(-s)).sum();
+    let mut u = rng.uniform() * norm;
+    for k in 1..=n {
+        u -= (k as f64).powf(-s);
+        if u <= 0.0 {
+            return k;
+        }
+    }
+    n
+}
+
+/// Knuth Poisson sampler (λ small enough for the product method).
+fn poisson(rng: &mut Pcg64, lambda: f64) -> usize {
+    let l = (-lambda).exp();
+    let mut k = 0usize;
+    let mut p = 1.0;
+    loop {
+        p *= rng.uniform();
+        if p <= l {
+            return k;
+        }
+        k += 1;
+    }
+}
+
+/// One request spec: `(id, prompt, max_new)`.
+type Spec = (usize, Vec<i32>, usize);
+
+/// The replay trace: requests grouped into arrival waves.
+struct Trace {
+    waves: Vec<Vec<Spec>>,
+    total: usize,
+}
+
+/// Build the trace: `n_waves` MMPP arrival waves over `families` shared
+/// system prompts with Zipf popularity and Zipf-tailed suffix lengths.
+fn build_trace(cfg: &OptConfig, n_waves: usize, families: usize, seed: u64) -> Trace {
+    let mut rng = Pcg64::new(seed);
+    let shared_len = cfg.max_seq / 4;
+    let prefixes: Vec<Vec<i32>> = (0..families)
+        .map(|_| (0..shared_len).map(|_| rng.below(cfg.vocab) as i32).collect())
+        .collect();
+    // two-state MMPP: calm vs burst arrival intensity, sticky transitions
+    let (lambda_calm, lambda_burst) = (2.0, 6.0);
+    let mut burst = false;
+    let mut id = 0usize;
+    let max_suffix = cfg.max_seq / 4;
+    let mut waves = Vec::with_capacity(n_waves);
+    for _ in 0..n_waves {
+        if rng.uniform() < if burst { 0.4 } else { 0.25 } {
+            burst = !burst;
+        }
+        let lambda = if burst { lambda_burst } else { lambda_calm };
+        let arrivals = 1 + poisson(&mut rng, lambda);
+        let mut wave = Vec::with_capacity(arrivals);
+        for _ in 0..arrivals {
+            // popular system prompts dominate (Zipf rank -> family index)
+            let fam = zipf(&mut rng, families, 1.2) - 1;
+            let mut prompt = prefixes[fam].clone();
+            let suffix = zipf(&mut rng, max_suffix, 1.1);
+            prompt.extend((0..suffix).map(|_| rng.below(cfg.vocab) as i32));
+            let max_new = 1 + zipf(&mut rng, (cfg.max_seq / 8).max(2), 1.1);
+            wave.push((id, prompt, max_new));
+            id += 1;
+        }
+        waves.push(wave);
+    }
+    Trace { waves, total: id }
+}
+
+fn request_of(spec: &Spec) -> Request {
+    let sampler = if spec.0 % 2 == 0 {
+        Sampler::Greedy
+    } else {
+        Sampler::TopK { k: 4, temperature: 0.9 }
+    };
+    Request::new(spec.0, spec.1.clone(), spec.2, sampler)
+}
+
+/// Replay the whole trace through a router, one `run` per arrival wave.
+fn replay(
+    router: &mut Router<'_, PackedModel>,
+    trace: &Trace,
+) -> (Vec<Completion>, invarexplore::serve::RouterStats) {
+    let mut done = Vec::with_capacity(trace.total);
+    let mut stats = Default::default();
+    for wave in &trace.waves {
+        for spec in wave {
+            router.submit(request_of(spec));
+        }
+        let (d, s) = router.run();
+        done.extend(d);
+        stats = s;
+    }
+    done.sort_by_key(|c| c.id);
+    (done, stats)
+}
+
+fn is_shed(c: &Completion) -> bool {
+    matches!(c.finish, FinishReason::Rejected(_))
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("SERVE_TRACE_REPLAY_SMOKE").as_deref() == Ok("1");
+    let cfg = bench_config(smoke);
+    let w = Weights::random(cfg.clone(), 1);
+    let pm = PackedModel::from_allocation(w, &BitAllocation::uniform(QuantScheme::new(2, 32)))
+        .expect("packed model builds");
+    let (n_waves, families) = if smoke { (4, 3) } else { (16, 5) };
+    let trace = build_trace(&cfg, n_waves, families, 42);
+    println!(
+        "== serve_trace_replay: {} (d={}, L={}, {} requests over {} MMPP waves, \
+         {} system prompts{}) ==",
+        cfg.name,
+        cfg.d_model,
+        cfg.n_layers,
+        trace.total,
+        trace.waves.len(),
+        families,
+        if smoke { ", SMOKE" } else { "" }
+    );
+    let mut suite = BenchSuite::new("serve_trace_replay");
+
+    // ---- replay across replica counts: goodput + latency quantiles --------
+    let serve = ServeOpts { max_batch: 4, prefix_cache: true, ..Default::default() };
+    let mut reference: Option<Vec<Completion>> = None;
+    for replicas in [1usize, 2, 4] {
+        let opts = RouterOpts { replicas, affinity_tokens: cfg.max_seq / 4, ..Default::default() };
+        let mut router = Router::new(&pm, opts, serve);
+        let t0 = Instant::now();
+        let (done, stats) = replay(&mut router, &trace);
+        let wall = t0.elapsed();
+        assert_eq!(done.len(), trace.total);
+        assert_eq!(stats.shed, 0, "unbounded watermark must not shed");
+        let tokens: usize = done.iter().map(|c| c.generated.len()).sum();
+        let goodput = tokens as f64 / wall.as_secs_f64().max(1e-9);
+        suite.record(
+            &format!("replay wall time, {replicas} replica(s)"),
+            Stats::one_shot(wall),
+        );
+        suite.set_counter(&format!("goodput_tok_per_s_r{replicas}"), goodput);
+        println!(
+            "replicas={replicas}: {} tokens in {wall:.1?} ({goodput:.1} tok/s), \
+             routing affinity/balanced {}/{}",
+            tokens, stats.affinity_routed, stats.balanced,
+        );
+        let agg = router.aggregate_metrics();
+        for r in 0..replicas {
+            let m = router.replica_metrics(r);
+            println!(
+                "  replica {r}: ttft p50 {:?} p95 {:?} p99 {:?} | itl p50 {:?} p95 {:?} p99 {:?} \
+                 ({} finished)",
+                m.ttft.quantile(0.5),
+                m.ttft.quantile(0.95),
+                m.ttft.quantile(0.99),
+                m.inter_token.quantile(0.5),
+                m.inter_token.quantile(0.95),
+                m.inter_token.quantile(0.99),
+                m.finished_length + m.finished_stop,
+            );
+        }
+        suite.set_counter(
+            &format!("ttft_p95_us_r{replicas}"),
+            agg.ttft.quantile(0.95).as_micros() as f64,
+        );
+        suite.set_counter(
+            &format!("itl_p95_us_r{replicas}"),
+            agg.inter_token.quantile(0.95).as_micros() as f64,
+        );
+        // bit-identity: the same trace yields the same completions
+        // regardless of how many replicas served it
+        match &reference {
+            None => reference = Some(done),
+            Some(want) => assert_eq!(
+                &done, want,
+                "completions diverged between 1 and {replicas} replicas"
+            ),
+        }
+    }
+    let reference = reference.take().unwrap_or_default();
+
+    // prefix cache off must not change completions either
+    {
+        let plain = ServeOpts { prefix_cache: false, ..serve };
+        let mut router = Router::new(&pm, RouterOpts::default(), plain);
+        let (done, _) = replay(&mut router, &trace);
+        assert_eq!(done, reference, "completions diverged with prefix cache off");
+    }
+
+    // ---- sharded model: shards x {1,2,4} bit-identical to unsharded -------
+    for shards in [1usize, 2, 4] {
+        let sm = ShardedModel::new(&pm, shards);
+        let mut sched = Scheduler::new(&sm, serve);
+        let t0 = Instant::now();
+        let mut done = Vec::with_capacity(trace.total);
+        for wave in &trace.waves {
+            for spec in wave {
+                sched.submit(request_of(spec));
+            }
+            let (d, _) = sched.run();
+            done.extend(d);
+        }
+        let wall = t0.elapsed();
+        done.sort_by_key(|c| c.id);
+        assert_eq!(
+            done, reference,
+            "sharded ({shards}) completions diverged from single-replica reference"
+        );
+        suite.record(&format!("replay wall time, {shards} shard(s)"), Stats::one_shot(wall));
+        println!("shards={shards}: bit-identical to unsharded reference ({wall:.1?})");
+    }
+
+    // ---- overload segment: watermark-bound admission, shedding, goodput ---
+    // One giant wave (every request at once) against a small per-replica
+    // watermark: 1 replica admits ~watermark requests, 4 replicas ~4x.
+    // Goodput is counted in completed (non-shed) requests, so the 4-replica
+    // win is a property of admission capacity, not machine speed.
+    let watermark = (trace.total / 6).max(2);
+    let mut served_by: Vec<(usize, usize, usize)> = Vec::new();
+    for replicas in [1usize, 4] {
+        let opts = RouterOpts {
+            replicas,
+            shed_watermark: watermark,
+            affinity_tokens: cfg.max_seq / 4,
+            ..Default::default()
+        };
+        let mut router = Router::new(&pm, opts, serve);
+        for wave in &trace.waves {
+            for spec in wave {
+                router.submit(request_of(spec));
+            }
+        }
+        let (done, stats) = router.run();
+        assert_eq!(done.len(), trace.total, "every request completes, shed included");
+        let shed = done.iter().filter(|c| is_shed(c)).count();
+        let served = trace.total - shed;
+        assert_eq!(shed, stats.shed, "router stats agree with Rejected completions");
+        assert!(stats.shed > 0, "overload segment must shed (watermark {watermark})");
+        for c in done.iter().filter(|c| is_shed(c)) {
+            assert!(c.generated.is_empty(), "shed request {} generated tokens", c.id);
+        }
+        // non-shed completions still bit-identical to the unbounded run
+        for c in done.iter().filter(|c| !is_shed(c)) {
+            assert_eq!(c, &reference[c.id], "overload run diverged on served request {}", c.id);
+        }
+        println!(
+            "overload replicas={replicas}: served {served}/{} ({} shed, rate {:.2})",
+            trace.total,
+            stats.shed,
+            stats.shed_rate(),
+        );
+        suite.set_counter(&format!("overload_served_r{replicas}"), served as f64);
+        suite.set_counter(&format!("overload_shed_rate_r{replicas}"), stats.shed_rate());
+        served_by.push((replicas, served, shed));
+    }
+    let (_, served_1, _) = served_by[0];
+    let (_, served_4, _) = served_by[1];
+    assert!(
+        served_4 > served_1,
+        "4-replica goodput ({served_4} served) must strictly beat 1 replica ({served_1})"
+    );
+    println!(
+        "ok: completions replica/shard/prefix-invariant; overload sheds cleanly; \
+         4-replica admission goodput {served_4} > single-replica {served_1}"
+    );
+
+    let out = suite.write_json(std::path::Path::new(".")).expect("write BENCH json");
+    println!("perf trajectory written to {}", out.display());
+}

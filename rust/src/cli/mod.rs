@@ -28,7 +28,10 @@ common options: --model, --method, --scheme (e.g. 2x64), --steps, --seed,
 --alloc (mixed-precision allocation, e.g. 2x64,ffn_up=3x64,l0.q.w=4x128),
 --alloc-prob (probability a proposal is a budget-preserving bit swap),
 --spec (self-speculative draft length for `serve`; env SERVE_SPEC),
---kv-dtype (KV-cache storage f32|int8|int4 for `serve`; env SERVE_KV_DTYPE)
+--kv-dtype (KV-cache storage f32|int8|int4 for `serve`; env SERVE_KV_DTYPE),
+--replicas / --shards / --shed-watermark (multi-replica routing and
+tensor-parallel sharding for `serve`; envs SERVE_REPLICAS, SERVE_SHARDS,
+SERVE_SHED_WATERMARK — see README \"Sharded serving\")
 run `invarexplore <command> --help` for details.
 ";
 
@@ -60,6 +63,9 @@ fn common_spec() -> Vec<ArgSpec> {
         ArgSpec { name: "requests", help: "serve: synthetic requests to submit", default: Some("8"), is_flag: false },
         ArgSpec { name: "max-new", help: "serve: tokens to generate per request", default: Some("24"), is_flag: false },
         ArgSpec { name: "max-batch", help: "serve: concurrent decode slots", default: Some("4"), is_flag: false },
+        ArgSpec { name: "replicas", help: "serve: scheduler replicas behind the prefix-affinity router (default: $SERVE_REPLICAS or 1)", default: None, is_flag: false },
+        ArgSpec { name: "shards", help: "serve: tensor-parallel row shards of the packed model, bit-identical at any count (default: $SERVE_SHARDS or 1)", default: None, is_flag: false },
+        ArgSpec { name: "shed-watermark", help: "serve: per-replica queued-request watermark past which no-deadline requests are shed; 0 = never shed (default: $SERVE_SHED_WATERMARK or 0)", default: None, is_flag: false },
         ArgSpec { name: "trace-out", help: "write a Chrome trace (chrome://tracing JSON) of this run to PATH and print Prometheus metrics (default: $INVAREXPLORE_TRACE=PATH)", default: None, is_flag: false },
         ArgSpec { name: "help", help: "show options", default: None, is_flag: true },
     ]
@@ -410,12 +416,16 @@ fn default_draft_allocation(
 }
 
 /// `invarexplore serve`: quantize + pack the model under `--alloc`, then
-/// drive the continuous-batching scheduler on synthetic shared-prefix wiki
-/// traffic — with self-speculative decoding (`--spec k` / `SERVE_SPEC`)
-/// drafting on an aggressive low-bit re-quantization of the same base
-/// weights (`--draft-alloc`, defaulting to the cheapest manifest preset).
+/// drive the serving stack on synthetic shared-prefix wiki traffic — the
+/// prefix-affinity [`crate::serve::Router`] over `--replicas` schedulers
+/// (with `--shed-watermark` load shedding), each computing on the packed
+/// weights directly or on `--shards` tensor-parallel row shards
+/// ([`crate::serve::ShardedModel`], bit-identical at any shard count) —
+/// with self-speculative decoding (`--spec k` / `SERVE_SPEC`) drafting on
+/// an aggressive low-bit re-quantization of the same base weights
+/// (`--draft-alloc`, defaulting to the cheapest manifest preset).
 fn cmd_serve(a: &Args) -> crate::Result<i32> {
-    use crate::serve::{AdmissionPolicy, Request, Scheduler, ServeOpts};
+    use crate::serve::{AdmissionPolicy, Request, Router, RouterOpts, ServeOpts, ShardedModel};
     use crate::util::sampling::Sampler;
 
     let session = Session::load_default()?;
@@ -468,6 +478,26 @@ fn cmd_serve(a: &Args) -> crate::Result<i32> {
     };
     let n_requests = a.parse_or("requests", 8usize)?.max(1);
     let max_new = a.parse_or("max-new", 24usize)?;
+    let replicas = match a.get("replicas") {
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("bad --replicas {v:?} (want a count)"))?,
+        None => crate::util::cli::env_override("SERVE_REPLICAS", 1usize),
+    }
+    .max(1);
+    let shards = match a.get("shards") {
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("bad --shards {v:?} (want a count)"))?,
+        None => crate::util::cli::env_override("SERVE_SHARDS", 1usize),
+    }
+    .max(1);
+    let shed_watermark = match a.get("shed-watermark") {
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("bad --shed-watermark {v:?} (want a queue depth)"))?,
+        None => crate::util::cli::env_override("SERVE_SHED_WATERMARK", 0usize),
+    };
 
     let draft_alloc = match a
         .get("draft-alloc")
@@ -508,9 +538,22 @@ fn cmd_serve(a: &Args) -> crate::Result<i32> {
     if kv_dtype != crate::model::native::KvDtype::F32 {
         println!("kv cache stored as {} (documented-tolerance mode)", kv_dtype.label());
     }
-    let mut scheduler = Scheduler::new(&pm, serve_opts);
+    let sharded = (shards > 1).then(|| ShardedModel::new(&pm, shards));
+    let params: &dyn crate::model::native::DecoderParams = match &sharded {
+        Some(sm) => {
+            println!(
+                "tensor-parallel: {} row shards, {:?} packed bytes per shard (bit-identical)",
+                sm.n_shards(),
+                sm.packed_bytes_per_shard()
+            );
+            sm
+        }
+        None => &pm,
+    };
+    let router_opts = RouterOpts { replicas, shed_watermark, ..Default::default() };
+    let mut router = Router::new(params, router_opts, serve_opts);
     if let Some(d) = &draft {
-        scheduler = scheduler.with_draft(d);
+        router = router.with_draft(d);
     }
 
     // synthetic shared-prefix wiki traffic (two prompt families, so the
@@ -534,19 +577,38 @@ fn cmd_serve(a: &Args) -> crate::Result<i32> {
             .chain(&wiki.tokens[tail_at..tail_at + (prompt_len - shared_len)])
             .map(|&t| t as i32)
             .collect();
-        scheduler.submit(Request::new(i, prompt, max_new, sampler));
+        router.submit(Request::new(i, prompt, max_new, sampler));
     }
 
-    let (completions, stats) = scheduler.run();
-    println!("{}", stats.summary());
+    let (completions, rstats) = router.run();
+    if replicas > 1 || shed_watermark > 0 {
+        println!(
+            "router: {} submitted — {} affinity, {} balanced, {} spilled, {} shed (rate {:.2})",
+            rstats.submitted,
+            rstats.affinity_routed,
+            rstats.balanced,
+            rstats.spilled,
+            rstats.shed,
+            rstats.shed_rate()
+        );
+    }
+    for (i, s) in rstats.per_replica.iter().enumerate() {
+        if rstats.per_replica.len() > 1 {
+            println!("replica {i}: {}", s.summary());
+        } else {
+            println!("{}", s.summary());
+        }
+    }
     for c in completions.iter().take(2) {
         let head = &c.generated[..c.generated.len().min(8)];
         println!("sample {} ({}): -> {head:?}", c.id, c.finish.label());
     }
-    println!("metrics: {}", scheduler.metrics().to_json().to_string());
+    let metrics = router.aggregate_metrics();
+    println!("metrics: {}", metrics.to_json().to_string());
     if let Some(path) = &trace {
         trace_finish(path)?;
-        print!("{}", crate::obs::prometheus::render(scheduler.metrics()));
+        // render() appends the kernel/search/router counter sections
+        print!("{}", crate::obs::prometheus::render(&metrics));
     }
     Ok(0)
 }

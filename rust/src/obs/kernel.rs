@@ -99,10 +99,15 @@ pub fn add_dequant_bytes(bytes: usize) {
 /// Point-in-time copy of one tier's counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct TierSnap {
+    /// Nanoseconds spent inside timed GEMM calls.
     pub ns: u64,
+    /// Packed weight bytes streamed by timed GEMM calls.
     pub bytes: u64,
+    /// Number of timed GEMM calls.
     pub calls: u64,
+    /// Output rows produced across all calls.
     pub rows: u64,
+    /// Packed bytes decoded by standalone dequant entry points.
     pub dequant_bytes: u64,
 }
 
@@ -120,14 +125,17 @@ impl TierSnap {
 /// Point-in-time copy of all kernel counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct KernelSnapshot {
+    /// Per-SIMD-tier counters, indexed by `SimdLevel as usize`.
     pub tiers: [TierSnap; N_TIERS],
 }
 
 impl KernelSnapshot {
+    /// Timed GEMM calls summed over every tier.
     pub fn total_calls(&self) -> u64 {
         self.tiers.iter().map(|t| t.calls).sum()
     }
 
+    /// Packed weight bytes streamed, summed over every tier.
     pub fn total_bytes(&self) -> u64 {
         self.tiers.iter().map(|t| t.bytes).sum()
     }

@@ -16,6 +16,8 @@
 //!   (achieved GB/s for the packed kernels);
 //! - [`search`] — per-move-family propose/accept counters and a windowed
 //!   acceptance rate for the discrete search drivers;
+//! - [`router`] — routing-decision counters (affinity / balanced /
+//!   spillover / shed) for the multi-replica serving front-end;
 //! - [`chrome`] — Chrome trace-event-format JSON export
 //!   (`chrome://tracing` / Perfetto loadable) via [`crate::util::json`];
 //! - [`prometheus`] — Prometheus text-exposition rendering of
@@ -27,10 +29,17 @@
 //! `1`/`on`/`true` enable; any other value enables *and* names the Chrome
 //! trace output path (see [`trace_out_path`]).
 
+/// Chrome `chrome://tracing` / Perfetto JSON export of recorded spans.
 pub mod chrome;
+/// Per-SIMD-tier packed-GEMM counters (calls, bytes, bandwidth).
 pub mod kernel;
+/// Prometheus text-format rendering of every counter family.
 pub mod prometheus;
+/// Router counters: routed / shed / spilled requests per replica.
+pub mod router;
+/// Search telemetry: per-move-family proposal and acceptance counts.
 pub mod search;
+/// The span recorder itself: events, spans, and the global ring buffer.
 pub mod trace;
 
 use std::sync::atomic::{AtomicU8, Ordering};

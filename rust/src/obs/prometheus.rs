@@ -10,6 +10,7 @@
 use std::fmt::Write as _;
 
 use super::kernel::{tier_label, KernelSnapshot};
+use super::router::{RouteOutcome, RouterSnapshot};
 use super::search::{MoveFamily, SearchSnapshot};
 use crate::serve::{Histogram, ServeMetrics};
 
@@ -197,12 +198,43 @@ pub fn render_search(s: &SearchSnapshot) -> String {
     out
 }
 
-/// Full scrape page: serve metrics plus whatever global kernel/search
+/// Render the router routing-decision counters.
+pub fn render_router(r: &RouterSnapshot) -> String {
+    let mut out = String::new();
+    if r.total() == 0 {
+        return out;
+    }
+    counter(
+        &mut out,
+        "invarexplore_router_routed_total",
+        "Router placement decisions by outcome",
+        &[
+            ("outcome", RouteOutcome::Affinity.label(), r.routed_of(RouteOutcome::Affinity) as f64),
+            ("outcome", RouteOutcome::Balanced.label(), r.routed_of(RouteOutcome::Balanced) as f64),
+            (
+                "outcome",
+                RouteOutcome::Spillover.label(),
+                r.routed_of(RouteOutcome::Spillover) as f64,
+            ),
+            ("outcome", RouteOutcome::Shed.label(), r.routed_of(RouteOutcome::Shed) as f64),
+        ],
+    );
+    gauge(
+        &mut out,
+        "invarexplore_router_shed_rate",
+        "Fraction of routing decisions shed",
+        &[("", "", r.shed_rate())],
+    );
+    out
+}
+
+/// Full scrape page: serve metrics plus whatever global kernel/search/router
 /// counters have accumulated.
 pub fn render(m: &ServeMetrics) -> String {
     let mut out = render_serve(m);
     out.push_str(&render_kernel(&super::kernel::snapshot()));
     out.push_str(&render_search(&super::search::snapshot()));
+    out.push_str(&render_router(&super::router::snapshot()));
     out
 }
 
@@ -276,5 +308,16 @@ mod tests {
         assert!(text.contains("invarexplore_search_proposed_total{family=\"transform\"} 10"));
         assert!(text.contains("invarexplore_search_accepted_total{family=\"bitswap\"} 1"));
         assert!(render_search(&SearchSnapshot::default()).is_empty());
+    }
+
+    #[test]
+    fn router_section_renders_when_active() {
+        let r = RouterSnapshot { routed: [6, 2, 1, 1] };
+        let text = render_router(&r);
+        assert_exposition_format(&text);
+        assert!(text.contains("invarexplore_router_routed_total{outcome=\"affinity\"} 6"));
+        assert!(text.contains("invarexplore_router_routed_total{outcome=\"shed\"} 1"));
+        assert!(text.contains("invarexplore_router_shed_rate 0.1"));
+        assert!(render_router(&RouterSnapshot::default()).is_empty());
     }
 }

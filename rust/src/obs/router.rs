@@ -1,0 +1,212 @@
+//! Telemetry for the serving front-end router: routing-decision counters
+//! (affinity hit / queue-depth rebalance / deadline spillover / shed) and
+//! a queue-pressure counter stream for the Chrome trace.
+//!
+//! `serve::router::Router` reports every routing decision here *after*
+//! making it, so recording can never influence placement.  Like every
+//! `obs` module this is gated on [`crate::obs::enabled`] — one relaxed
+//! atomic load when tracing is off.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// How the router placed (or refused) one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteOutcome {
+    /// Landed on its consistent-hash (prefix-affinity) replica.
+    Affinity,
+    /// Diverted to the least-loaded replica: the affinity target was at
+    /// the admission watermark.
+    Balanced,
+    /// All replicas were saturated, but the request carried a deadline and
+    /// spilled onto the least-loaded replica (EDF under saturation).
+    Spillover,
+    /// All replicas were saturated and the request carried no deadline —
+    /// shed with `FinishReason::Rejected`.
+    Shed,
+}
+
+impl RouteOutcome {
+    /// Short stable label (metrics / JSON field values).
+    pub fn label(self) -> &'static str {
+        match self {
+            RouteOutcome::Affinity => "affinity",
+            RouteOutcome::Balanced => "balanced",
+            RouteOutcome::Spillover => "spillover",
+            RouteOutcome::Shed => "shed",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            RouteOutcome::Affinity => 0,
+            RouteOutcome::Balanced => 1,
+            RouteOutcome::Spillover => 2,
+            RouteOutcome::Shed => 3,
+        }
+    }
+}
+
+const N_OUTCOMES: usize = 4;
+
+/// The counter state itself — instantiable so tests can exercise the exact
+/// arithmetic on a private instance while production code shares one
+/// gated global.
+struct Counters {
+    routed: [AtomicU64; N_OUTCOMES],
+}
+
+impl Counters {
+    const fn new() -> Counters {
+        Counters {
+            routed: [
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+            ],
+        }
+    }
+
+    fn record(&self, outcome: RouteOutcome) {
+        self.routed[outcome.idx()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> RouterSnapshot {
+        let mut s = RouterSnapshot::default();
+        for (dst, src) in s.routed.iter_mut().zip(&self.routed) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        s
+    }
+
+    fn reset(&self) {
+        for c in &self.routed {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+static GLOBAL: Counters = Counters::new();
+
+/// Record one routing decision.  Gated: free (one relaxed load) when
+/// tracing is off; emits a `router.shed_total` counter sample when on and
+/// the decision was a shed (the saturation signal dashboards watch).
+pub fn record_route(outcome: RouteOutcome) {
+    if !super::enabled() {
+        return;
+    }
+    GLOBAL.record(outcome);
+    if outcome == RouteOutcome::Shed {
+        let shed = GLOBAL.snapshot().routed_of(RouteOutcome::Shed);
+        super::trace::counter("router", "shed_total", shed as f64);
+    }
+}
+
+/// Point-in-time copy of the routing-decision counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RouterSnapshot {
+    /// Indexed like `RouteOutcome`: `[affinity, balanced, spillover, shed]`.
+    pub routed: [u64; N_OUTCOMES],
+}
+
+impl RouterSnapshot {
+    /// Requests that took `outcome`.
+    pub fn routed_of(&self, outcome: RouteOutcome) -> u64 {
+        self.routed[outcome.idx()]
+    }
+
+    /// All routing decisions recorded (including sheds).
+    pub fn total(&self) -> u64 {
+        self.routed.iter().sum()
+    }
+
+    /// Fraction of decisions that were sheds (0 when nothing was routed).
+    pub fn shed_rate(&self) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            0.0
+        } else {
+            self.routed_of(RouteOutcome::Shed) as f64 / t as f64
+        }
+    }
+
+    /// `{affinity, balanced, spillover, shed, shed_rate}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("affinity", self.routed_of(RouteOutcome::Affinity) as usize)
+            .set("balanced", self.routed_of(RouteOutcome::Balanced) as usize)
+            .set("spillover", self.routed_of(RouteOutcome::Spillover) as usize)
+            .set("shed", self.routed_of(RouteOutcome::Shed) as usize)
+            .set("shed_rate", self.shed_rate())
+    }
+}
+
+/// Read the global routing counters.
+pub fn snapshot() -> RouterSnapshot {
+    GLOBAL.snapshot()
+}
+
+/// Zero the global routing counters (test/run isolation).
+pub fn reset() {
+    GLOBAL.reset()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_records_nothing_globally() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(false);
+        reset();
+        record_route(RouteOutcome::Affinity);
+        record_route(RouteOutcome::Shed);
+        assert_eq!(snapshot(), RouterSnapshot::default());
+    }
+
+    #[test]
+    fn per_outcome_counts_and_shed_rate() {
+        // a private instance: exact counts without racing other tests on
+        // the gated global
+        let c = Counters::new();
+        c.record(RouteOutcome::Affinity);
+        c.record(RouteOutcome::Affinity);
+        c.record(RouteOutcome::Balanced);
+        c.record(RouteOutcome::Shed);
+        let s = c.snapshot();
+        assert_eq!(s.routed_of(RouteOutcome::Affinity), 2);
+        assert_eq!(s.routed_of(RouteOutcome::Balanced), 1);
+        assert_eq!(s.routed_of(RouteOutcome::Spillover), 0);
+        assert_eq!(s.routed_of(RouteOutcome::Shed), 1);
+        assert_eq!(s.total(), 4);
+        assert!((s.shed_rate() - 0.25).abs() < 1e-12);
+        let j = s.to_json();
+        assert_eq!(j.get("affinity").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("shed").unwrap().as_usize(), Some(1));
+        assert!(crate::util::json::parse(&j.to_string()).is_ok());
+        c.reset();
+        assert_eq!(c.snapshot(), RouterSnapshot::default());
+    }
+
+    #[test]
+    fn empty_snapshot_has_zero_shed_rate() {
+        assert_eq!(RouterSnapshot::default().shed_rate(), 0.0);
+        assert_eq!(RouterSnapshot::default().total(), 0);
+    }
+
+    #[test]
+    fn enabled_global_samples_shed_counter() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(true);
+        super::super::trace::clear();
+        reset();
+        record_route(RouteOutcome::Shed);
+        crate::obs::set_enabled(false);
+        assert!(snapshot().routed_of(RouteOutcome::Shed) >= 1);
+        assert!(super::super::trace::take_events().iter().any(|e| e.name == "shed_total"));
+        reset();
+    }
+}

@@ -24,6 +24,7 @@ pub enum MoveFamily {
 }
 
 impl MoveFamily {
+    /// Short stable label (metric names / JSON field values).
     pub fn label(self) -> &'static str {
         match self {
             MoveFamily::Transform => "transform",
@@ -117,16 +118,19 @@ pub fn record_move(family: MoveFamily, accepted: bool) {
 /// Point-in-time copy of the per-family counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct SearchSnapshot {
-    /// Indexed like [`MoveFamily::idx`]: `[transform, bitswap]`.
+    /// Proposals drawn per family: `[transform, bitswap]`.
     pub proposed: [u64; N_FAMILIES],
+    /// Proposals accepted per family, same order as `proposed`.
     pub accepted: [u64; N_FAMILIES],
 }
 
 impl SearchSnapshot {
+    /// Proposals drawn for one family.
     pub fn proposed_of(&self, f: MoveFamily) -> u64 {
         self.proposed[f.idx()]
     }
 
+    /// Proposals accepted for one family.
     pub fn accepted_of(&self, f: MoveFamily) -> u64 {
         self.accepted[f.idx()]
     }

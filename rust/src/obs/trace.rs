@@ -51,8 +51,11 @@ impl Phase {
 /// (0 when not applicable) and `value` the sample for counter events.
 #[derive(Debug, Clone, Copy)]
 pub struct Event {
+    /// Category (subsystem) label, e.g. `"serve"` or `"kernel"`.
     pub cat: &'static str,
+    /// Event name within the category.
     pub name: &'static str,
+    /// Chrome trace phase this event renders as.
     pub ph: Phase,
     /// Microseconds since the trace epoch.
     pub ts_us: u64,
@@ -60,7 +63,9 @@ pub struct Event {
     pub dur_us: u64,
     /// Stable per-thread index (registration order, not OS thread id).
     pub tid: u64,
+    /// Request/slot the event belongs to (0 when not applicable).
     pub id: u64,
+    /// Sample value for counter events (0.0 otherwise).
     pub value: f64,
 }
 

@@ -20,9 +20,13 @@ use crate::tensor::Tensor;
 /// [`super::packed`]'s job) + per-group scale/zero.
 #[derive(Debug, Clone)]
 pub struct GroupQuant {
+    /// Bits + group size the matrix was quantized under.
     pub scheme: QuantScheme,
+    /// Rows of the source matrix.
     pub rows: usize,
+    /// Columns of the source matrix (`cols % scheme.group == 0`).
     pub cols: usize,
+    /// `[rows * cols]` integer codes in `[0, qmax]`, one byte per weight.
     pub codes: Vec<u8>,
     /// `[rows * cols/group]` FP scales.
     pub scales: Vec<f32>,

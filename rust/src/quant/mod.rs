@@ -3,10 +3,15 @@
 //! documented in `python/compile/kernels/ref.py`), plus packed int storage
 //! with bits/param accounting for the Table-3 memory columns.
 
+/// Weight-clipping search minimizing groupwise quantization MSE.
 pub mod clip;
+/// The groupwise codec: quantize / dequantize / fake-quant.
 pub mod group;
+/// Bit-packed deployment form and its fused dequant-GEMM kernels.
 pub mod packed;
+/// Scheme descriptors: [`QuantScheme`] and [`BitAllocation`].
 pub mod scheme;
+/// Runtime SIMD dispatch (scalar / SSE2 / AVX2), bit-identical tiers.
 pub mod simd;
 
 pub use group::{dequantize, fake_quant, fake_quant_into, quant_mse, quantize, GroupQuant};

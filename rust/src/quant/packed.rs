@@ -26,11 +26,16 @@ const ROW_TILE: usize = 64;
 /// A weight matrix in deployment form.
 #[derive(Debug, Clone)]
 pub struct PackedTensor {
+    /// Quantization scheme (bit width + group size) of every code.
     pub scheme: QuantScheme,
+    /// Output rows of the weight matrix.
     pub rows: usize,
+    /// Input columns of the weight matrix.
     pub cols: usize,
     /// Packed codes, `words_per_row` u32 per row.
     pub words: Vec<u32>,
+    /// u32 words holding each row's codes (rows are padded to word
+    /// boundaries so they stay independently addressable).
     pub words_per_row: usize,
     /// f16 bit patterns of per-group scales.
     pub scales_f16: Vec<u16>,
@@ -595,6 +600,38 @@ impl PackedTensor {
         }
     }
 
+    /// Row-range view `[r0, r0 + n)` as a standalone [`PackedTensor`] —
+    /// the tensor-parallel building block of [`crate::serve::shard`]: each
+    /// shard owns the packed slice of the output rows it computes, so a
+    /// sharded linear is N disjoint column ranges of the whole output.
+    ///
+    /// Codes and scales are row-addressable and slice directly; zero-points
+    /// are packed contiguously across all `(row, group)` indices, so the
+    /// slice's zeros are re-packed from scratch (values preserved exactly —
+    /// packing is lossless).  When the slice covers whole `ROW_TILE`
+    /// blocks (`r0 % 64 == 0`, and `n % 64 == 0` unless the slice runs to
+    /// the last row) the sliced [`PackedTensor::linear`] is
+    /// **bit-identical** to the matching column range of the whole tensor's
+    /// `linear`: tile boundaries and the 4-wide/`dot`-tail column split
+    /// land on the same rows either way (pinned by
+    /// `slice_rows_linear_matches_whole`).
+    pub fn slice_rows(&self, r0: usize, n: usize) -> PackedTensor {
+        assert!(r0 + n <= self.rows, "slice_rows: {r0}+{n} exceeds {} rows", self.rows);
+        let n_groups = self.cols / self.scheme.group;
+        let bits = self.scheme.bits;
+        let zeros = (r0 * n_groups..(r0 + n) * n_groups)
+            .map(|i| unpack_value(&self.zero_words, bits, i));
+        PackedTensor {
+            scheme: self.scheme,
+            rows: n,
+            cols: self.cols,
+            words: self.words[r0 * self.words_per_row..(r0 + n) * self.words_per_row].to_vec(),
+            words_per_row: self.words_per_row,
+            scales_f16: self.scales_f16[r0 * n_groups..(r0 + n) * n_groups].to_vec(),
+            zero_words: pack_values(zeros, bits.max(1)),
+        }
+    }
+
     /// Total storage in bytes (codes + scales + zeros).
     pub fn nbytes(&self) -> usize {
         self.words.len() * 4 + self.scales_f16.len() * 2 + self.zero_words.len() * 4
@@ -949,6 +986,80 @@ mod tests {
         // memory saving vs f32 ≥ 85% (paper's claim vs FP16 is 85% at 2.125)
         let savings = 1.0 - packed.nbytes() as f64 / (64.0 * 1024.0 * 2.0); // vs f16
         assert!(savings > 0.8, "savings {savings}");
+    }
+
+    #[test]
+    fn slice_rows_preserves_codes_scales_and_zeros() {
+        // the slice must reproduce codes, scales, and zero-points of its
+        // row range exactly — including the zero-point re-pack across the
+        // non-word-aligned widths (bits 3 packs 10 zeros/word)
+        propcheck::check("slice_rows fidelity", 32, |rng| {
+            let bits = rng.below(4) + 1;
+            let scheme = QuantScheme::new(bits, 32);
+            let rows = rng.below(120) + 2;
+            let cols = 32 * (rng.below(3) + 1);
+            let shift = *rng.choice(&[-2.0f32, 0.0, 2.0]);
+            let w = Tensor::from_vec(
+                rows,
+                cols,
+                (0..rows * cols).map(|_| rng.normal() as f32 + shift).collect(),
+            );
+            let packed = PackedTensor::pack(&quantize(&w, scheme));
+            let r0 = rng.below(rows - 1);
+            let n = rng.below(rows - r0) + 1;
+            let sliced = packed.slice_rows(r0, n);
+            for r in 0..n {
+                for c in 0..cols {
+                    if sliced.code(r, c) != packed.code(r0 + r, c) {
+                        return Err(format!("code mismatch at ({r},{c}), r0={r0}"));
+                    }
+                }
+                for (g, s, z) in sliced.row_groups(r) {
+                    let (sw, zw) = packed.group_params(r0 + r, g);
+                    if s.to_bits() != sw.to_bits() || z != zw {
+                        return Err(format!("group params mismatch row {r} group {g}"));
+                    }
+                }
+            }
+            propcheck::ensure(
+                sliced.unpack().data
+                    == packed.unpack().data[r0 * cols..(r0 + n) * cols].to_vec(),
+                format!("unpack mismatch r0={r0} n={n}"),
+            )
+        });
+    }
+
+    #[test]
+    fn slice_rows_linear_matches_whole() {
+        // the tensor-parallel pin: tile-aligned row slices computed
+        // independently and concatenated must equal the whole-tensor fused
+        // linear BIT-FOR-BIT (this is what makes sharded serving exact).
+        // 150 rows = two full 64-row tiles + a 22-row tail, split 64/86.
+        let mut rng = Pcg64::new(21);
+        let (rows, cols, m) = (150usize, 96usize, 3usize);
+        let w = Tensor::from_vec(
+            rows,
+            cols,
+            (0..rows * cols).map(|_| rng.normal() as f32).collect(),
+        );
+        let packed = PackedTensor::pack(&quantize(&w, QuantScheme::new(2, 32)));
+        let x = Tensor::from_vec(m, cols, (0..m * cols).map(|_| rng.normal() as f32).collect());
+        let bias: Vec<f32> = (0..rows).map(|_| rng.normal() as f32).collect();
+        let whole = packed.linear(&x, &bias);
+        for &(r0, n) in &[(0usize, 64usize), (64, 86), (0, 128), (128, 22), (0, 150)] {
+            let part = packed.slice_rows(r0, n).linear(&x, &bias[r0..r0 + n]);
+            for i in 0..m {
+                for j in 0..n {
+                    let a = part.data[i * n + j];
+                    let b = whole.data[i * rows + r0 + j];
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "slice ({r0},{n}) row {i} col {j}: {a} vs {b}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

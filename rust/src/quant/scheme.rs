@@ -8,11 +8,16 @@ use crate::model::OptConfig;
 /// Bits + group size for asymmetric unsigned integer group quantization.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct QuantScheme {
+    /// Integer width in bits (1..=8).
     pub bits: usize,
+    /// Channels sharing one scale/zero pair.
     pub group: usize,
 }
 
 impl QuantScheme {
+    /// A `bits`-bit scheme with `group`-channel scale groups; panics on
+    /// bits outside 1..=8 or a zero group (CLI input goes through
+    /// [`QuantScheme::parse`], which returns errors instead).
     pub fn new(bits: usize, group: usize) -> QuantScheme {
         assert!((1..=8).contains(&bits), "bits must be 1..=8");
         assert!(group > 0, "group must be positive");
@@ -37,6 +42,18 @@ impl QuantScheme {
     /// parser's `split_once` left the tail inside the group field, which a
     /// strict integer parse now surfaces as an explicit trailing-garbage
     /// error instead of an opaque `ParseIntError`).
+    ///
+    /// ```
+    /// use invarexplore::quant::QuantScheme;
+    ///
+    /// let s = QuantScheme::parse("2x64")?;
+    /// assert_eq!((s.bits, s.group), (2, 64));
+    /// assert_eq!(QuantScheme::parse("3b128")?, QuantScheme::new(3, 128));
+    ///
+    /// assert!(QuantScheme::parse("2x64x32").is_err()); // trailing garbage
+    /// assert!(QuantScheme::parse("9x64").is_err()); // bits outside 1..=8
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     pub fn parse(s: &str) -> crate::Result<QuantScheme> {
         let (b, g) = s
             .split_once(['x', 'b'])
@@ -59,6 +76,8 @@ impl QuantScheme {
         Ok(QuantScheme { bits, group })
     }
 
+    /// Canonical `"<bits>x<group>"` form, re-parseable by
+    /// [`QuantScheme::parse`].
     pub fn label(&self) -> String {
         format!("{}x{}", self.bits, self.group)
     }
@@ -106,6 +125,7 @@ fn normalize_selector(sel: &str) -> crate::Result<String> {
 /// under that budget.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BitAllocation {
+    /// Scheme for every tensor without an override.
     pub default: QuantScheme,
     /// Normalized `(selector, scheme)` overrides in precedence-irrelevant
     /// storage order (duplicates are rejected at parse time).
@@ -121,6 +141,21 @@ impl BitAllocation {
     /// Parse `"<default>[,<selector>=<scheme>]*"`, e.g.
     /// `"2x64,ffn_up=3x64,l0.q.w=4x128"`.  A bare scheme (`"2x64"`) parses
     /// as a uniform allocation.
+    ///
+    /// ```
+    /// use invarexplore::quant::{BitAllocation, QuantScheme};
+    ///
+    /// let a = BitAllocation::parse("2x64,ffn_up=3x64,l0.q.w=4x128")?;
+    /// assert_eq!(a.default, QuantScheme::new(2, 64));
+    /// // aliases normalize to base tensor names
+    /// assert!(a.overrides.iter().any(|(sel, sch)| sel == "up.w" && *sch == QuantScheme::new(3, 64)));
+    ///
+    /// assert_eq!(BitAllocation::parse("2x64")?, BitAllocation::uniform(QuantScheme::new(2, 64)));
+    ///
+    /// assert!(BitAllocation::parse("2x64,bogus=3x64").is_err()); // unknown tensor
+    /// assert!(BitAllocation::parse("2x64,ffn_up=3x64,ffn_up=1x64").is_err()); // duplicate
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     pub fn parse(s: &str) -> crate::Result<BitAllocation> {
         let mut parts = s.split(',');
         let head = parts.next().unwrap_or("");

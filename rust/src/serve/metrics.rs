@@ -32,8 +32,21 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// Empty histogram.
     pub fn new() -> Histogram {
         Histogram { buckets: [0; N_BUCKETS], count: 0, sum_us: 0, max_us: 0 }
+    }
+
+    /// Fold `other`'s samples into this histogram (bucket-wise addition —
+    /// exact, since both sides share the fixed bucket rule).  Used by the
+    /// router to aggregate per-replica telemetry into a fleet view.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us = self.sum_us.saturating_add(other.sum_us);
+        self.max_us = self.max_us.max(other.max_us);
     }
 
     /// Number of log₂ buckets (exported for exporters/tests that walk the
@@ -48,6 +61,7 @@ impl Histogram {
         (us.max(1).ilog2() as usize).min(N_BUCKETS - 1)
     }
 
+    /// Record one latency sample.
     pub fn record(&mut self, d: Duration) {
         let us = d.as_micros().min(u64::MAX as u128) as u64;
         self.buckets[Self::bucket_index(us)] += 1;
@@ -56,6 +70,7 @@ impl Histogram {
         self.max_us = self.max_us.max(us);
     }
 
+    /// Samples recorded so far.
     pub fn count(&self) -> u64 {
         self.count
     }
@@ -70,6 +85,7 @@ impl Histogram {
         Duration::from_micros(self.sum_us)
     }
 
+    /// Mean recorded latency (zero when empty).
     pub fn mean(&self) -> Duration {
         if self.count == 0 {
             Duration::ZERO
@@ -78,6 +94,7 @@ impl Histogram {
         }
     }
 
+    /// Largest recorded sample.
     pub fn max(&self) -> Duration {
         Duration::from_micros(self.max_us)
     }
@@ -135,10 +152,21 @@ impl Default for CountHistogram {
 }
 
 impl CountHistogram {
+    /// Empty histogram.
     pub fn new() -> CountHistogram {
         CountHistogram { buckets: [0; COUNT_BUCKETS], count: 0, sum: 0 }
     }
 
+    /// Fold `other`'s samples into this histogram (bucket-wise addition).
+    pub fn merge(&mut self, other: &CountHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+
+    /// Record one count sample.
     pub fn record(&mut self, n: usize) {
         self.buckets[n.min(COUNT_BUCKETS - 1)] += 1;
         self.count += 1;
@@ -147,10 +175,12 @@ impl CountHistogram {
         self.sum = self.sum.saturating_add(n as u64);
     }
 
+    /// Samples recorded so far.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Mean of all recorded samples (zero when empty).
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -199,11 +229,13 @@ pub struct ServeMetrics {
     queue_depth_sum: u64,
     queue_depth_max: usize,
     queue_samples: u64,
-    /// Prefix-cache counters (mirrors `serve::prefix::PrefixStats`).
+    /// Prefix-cache lookups (mirrors `serve::prefix::PrefixStats`).
     pub prefix_lookups: u64,
+    /// Lookups that reused at least one cached token.
     pub prefix_hits: u64,
     /// Prompt tokens whose prefill was skipped thanks to prefix reuse.
     pub prefix_hit_tokens: u64,
+    /// Cache entries evicted to stay inside the page-byte budget.
     pub prefix_evictions: u64,
     /// Peak unique live KV bytes (active sequences + prefix cache, shared
     /// pages counted once).
@@ -215,10 +247,13 @@ pub struct ServeMetrics {
     pub kv_eager_bytes_peak: usize,
     /// Storage precision the run's KV caches used (labels the `kv` dump).
     pub kv_dtype: KvDtype,
-    /// Finish-reason counters.
+    /// Requests that finished by generating `max_new` tokens.
     pub finished_length: u64,
+    /// Requests that finished on a stop token / stop sequence.
     pub finished_stop: u64,
+    /// Requests cancelled while queued or in flight.
     pub cancelled: u64,
+    /// Requests rejected at admission (malformed, or shed by the router).
     pub rejected: u64,
     /// Speculative decoding: accepted draft tokens per verify step (the
     /// accepted-length histogram; one sample per chunked verify).
@@ -231,8 +266,39 @@ pub struct ServeMetrics {
 }
 
 impl ServeMetrics {
+    /// Empty metrics (all histograms and counters at zero).
     pub fn new() -> ServeMetrics {
         ServeMetrics::default()
+    }
+
+    /// Fold `other` into this metric set — histograms merge bucket-wise,
+    /// counters add, peaks take the max, and `kv_dtype` keeps `self`'s
+    /// value (router replicas share one [`crate::serve::ServeOpts`], so
+    /// the dtypes agree by construction).  This is how
+    /// `serve::router::Router::aggregate_metrics` builds the fleet-level
+    /// dashboard view from per-replica telemetry.
+    pub fn merge(&mut self, other: &ServeMetrics) {
+        self.ttft.merge(&other.ttft);
+        self.inter_token.merge(&other.inter_token);
+        self.queue_wait.merge(&other.queue_wait);
+        self.prefill.merge(&other.prefill);
+        self.decode.merge(&other.decode);
+        self.queue_depth_sum += other.queue_depth_sum;
+        self.queue_depth_max = self.queue_depth_max.max(other.queue_depth_max);
+        self.queue_samples += other.queue_samples;
+        self.prefix_lookups += other.prefix_lookups;
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_hit_tokens += other.prefix_hit_tokens;
+        self.prefix_evictions += other.prefix_evictions;
+        self.kv_live_bytes_peak = self.kv_live_bytes_peak.max(other.kv_live_bytes_peak);
+        self.kv_eager_bytes_peak = self.kv_eager_bytes_peak.max(other.kv_eager_bytes_peak);
+        self.finished_length += other.finished_length;
+        self.finished_stop += other.finished_stop;
+        self.cancelled += other.cancelled;
+        self.rejected += other.rejected;
+        self.spec_accept_len.merge(&other.spec_accept_len);
+        self.spec_committed_tokens += other.spec_committed_tokens;
+        self.spec_draft_tokens += other.spec_draft_tokens;
     }
 
     /// Sample the queue depth at an admission round.
@@ -242,10 +308,12 @@ impl ServeMetrics {
         self.queue_samples += 1;
     }
 
+    /// Deepest queue sampled at any admission round.
     pub fn queue_depth_max(&self) -> usize {
         self.queue_depth_max
     }
 
+    /// Mean sampled queue depth (zero when nothing was sampled).
     pub fn queue_depth_mean(&self) -> f64 {
         if self.queue_samples == 0 {
             0.0
@@ -540,6 +608,49 @@ mod tests {
             assert_eq!(hk, ["count", "mean_us", "p50_us", "p95_us", "p99_us", "max_us"], "{section}");
         }
         assert!(crate::util::json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn merge_equals_recording_into_one() {
+        // merging per-replica metrics must equal having recorded every
+        // sample into a single set — bucket-exact, not approximate
+        let samples_a = [3u64, 70, 800];
+        let samples_b = [5u64, 5, 90_000];
+        let mut a = ServeMetrics::new();
+        let mut b = ServeMetrics::new();
+        let mut whole = ServeMetrics::new();
+        for &us in &samples_a {
+            a.ttft.record(Duration::from_micros(us));
+            whole.ttft.record(Duration::from_micros(us));
+        }
+        for &us in &samples_b {
+            b.ttft.record(Duration::from_micros(us));
+            whole.ttft.record(Duration::from_micros(us));
+        }
+        a.record_queue_depth(3);
+        whole.record_queue_depth(3);
+        b.record_queue_depth(9);
+        whole.record_queue_depth(9);
+        a.finished_length = 2;
+        b.finished_length = 1;
+        whole.finished_length = 3;
+        b.rejected = 4;
+        whole.rejected = 4;
+        a.spec_accept_len.record(2);
+        whole.spec_accept_len.record(2);
+        a.merge(&b);
+        assert_eq!(a.ttft.count(), whole.ttft.count());
+        for i in 0..Histogram::N_BUCKETS {
+            assert_eq!(a.ttft.bucket(i), whole.ttft.bucket(i), "bucket {i}");
+        }
+        assert_eq!(a.ttft.quantile(0.95), whole.ttft.quantile(0.95));
+        assert_eq!(a.ttft.sum(), whole.ttft.sum());
+        assert_eq!(a.ttft.max(), whole.ttft.max());
+        assert_eq!(a.queue_depth_max(), whole.queue_depth_max());
+        assert!((a.queue_depth_mean() - whole.queue_depth_mean()).abs() < 1e-12);
+        assert_eq!(a.finished_length, whole.finished_length);
+        assert_eq!(a.rejected, whole.rejected);
+        assert_eq!(a.spec_accept_len.count(), whole.spec_accept_len.count());
     }
 
     #[test]

@@ -17,6 +17,15 @@
 //!   histograms (p50/p95/p99), queue depth, prefix-cache hit rate and live
 //!   KV bytes, speculative accepted-length histogram, dumped through
 //!   `util::json`.
+//! * [`router`] — a multi-replica front-end: [`Router`] fans requests out
+//!   over N independent schedulers with consistent-hash prefix affinity,
+//!   queue-depth balancing, deadline-aware spillover under saturation, and
+//!   explicit load shedding ([`FinishReason::Rejected`]) past a
+//!   configurable admission watermark.
+//! * [`shard`] — tensor-parallel packed inference: [`ShardedModel`] splits
+//!   every packed linear across row-range shards
+//!   (`PackedTensor::slice_rows`) and concatenates the per-shard partial
+//!   outputs — bit-identical to the unsharded model for any shard count.
 //! * [`spec`] — self-speculative decoding: an ultra-low-bit draft model
 //!   ([`PackedModel::draft`]) proposes `ServeOpts::spec` tokens per round
 //!   and the target verifies them in one chunked forward
@@ -36,20 +45,32 @@
 //!
 //! [`DecoderParams`]: crate::model::native::DecoderParams
 
+/// TTFT / inter-token-latency histograms, queue depth, KV residency.
 pub mod metrics;
+/// The bit-packed deployment model ([`PackedModel`]) and its draft twin.
 pub mod model;
+/// Radix-trie prefix cache over copy-on-write KV pages.
 pub mod prefix;
+/// Multi-replica request router: affinity, balancing, spillover, shedding.
+pub mod router;
+/// Continuous-batching engine: admission, rounds, cancellation.
 pub mod scheduler;
+/// Tensor-parallel row sharding of the packed linears.
+pub mod shard;
+/// Speculative decoding: draft proposals + chunked verification.
 pub mod spec;
+/// Streaming sinks, stop conditions, and finish reasons.
 pub mod stream;
 
 pub use metrics::{CountHistogram, Histogram, ServeMetrics};
 pub use model::PackedModel;
 pub use prefix::{PrefixCache, PrefixStats};
+pub use router::{Router, RouterOpts, RouterStats};
 /// The serving engine is also exported under PR-2's `Server` name, so
 /// existing call sites keep working.
 pub use scheduler::Scheduler as Server;
 pub use scheduler::{AdmissionPolicy, CancelHandle, Scheduler};
+pub use shard::{shard_ranges, ShardedModel};
 pub use spec::SpecRound;
 pub use stream::{ChannelSink, FinishReason, FnSink, StopCondition, StreamEvent, TokenSink};
 
@@ -59,10 +80,14 @@ use crate::util::sampling::Sampler;
 
 /// One generation request.
 pub struct Request {
+    /// Caller-chosen identifier; also selects the request's RNG stream, so
+    /// completions depend on `(id, prompt, sampler)` and nothing else.
     pub id: usize,
+    /// Prompt tokens (validated against the model's vocab at admission).
     pub prompt: Vec<i32>,
     /// Tokens to generate; clamped to the remaining context on admission.
     pub max_new: usize,
+    /// Sampling strategy for this request.
     pub sampler: Sampler,
     /// Tokens that terminate generation ([`FinishReason::Stop`]).
     pub stop: Vec<i32>,
@@ -80,6 +105,8 @@ pub struct Request {
 }
 
 impl Request {
+    /// A request with no stop conditions, default priority, no deadline and
+    /// no sink (add those with the `with_*` builders).
     pub fn new(id: usize, prompt: Vec<i32>, max_new: usize, sampler: Sampler) -> Request {
         Request {
             id,
@@ -94,26 +121,31 @@ impl Request {
         }
     }
 
+    /// Set the stop tokens ([`Request::stop`]).
     pub fn with_stop(mut self, stop: Vec<i32>) -> Request {
         self.stop = stop;
         self
     }
 
+    /// Set the stop sequences ([`Request::stop_seqs`]).
     pub fn with_stop_seqs(mut self, seqs: Vec<Vec<i32>>) -> Request {
         self.stop_seqs = seqs;
         self
     }
 
+    /// Set the admission priority ([`Request::priority`]).
     pub fn with_priority(mut self, priority: i32) -> Request {
         self.priority = priority;
         self
     }
 
+    /// Set the soft deadline ([`Request::deadline_ms`]).
     pub fn with_deadline_ms(mut self, ms: u64) -> Request {
         self.deadline_ms = Some(ms);
         self
     }
 
+    /// Attach a streaming sink ([`Request::sink`]).
     pub fn with_sink(mut self, sink: Box<dyn TokenSink>) -> Request {
         self.sink = Some(sink);
         self
@@ -151,9 +183,13 @@ pub struct RequestTiming {
 /// bit-identical runs.
 #[derive(Debug, Clone)]
 pub struct Completion {
+    /// The id of the request that produced this completion.
     pub id: usize,
+    /// The request's prompt tokens, returned unchanged.
     pub prompt: Vec<i32>,
+    /// Every sampled token in order (empty for rejected requests).
     pub generated: Vec<i32>,
+    /// Why generation ended.
     pub finish: FinishReason,
     /// Per-request queue/prefill/decode/TTFT breakdown (zeros for requests
     /// rejected before admission).
@@ -212,6 +248,7 @@ impl Default for ServeOpts {
 /// Latency/throughput accounting for one [`Scheduler::run`].
 #[derive(Debug, Clone, Default)]
 pub struct ServeStats {
+    /// Requests that produced a completion during this run.
     pub requests: usize,
     /// Requests rejected at admission (malformed — see
     /// [`FinishReason::Rejected`]).
@@ -237,7 +274,9 @@ pub struct ServeStats {
     /// Chunked verify forwards executed (one per slot per speculative
     /// round that had draft budget).
     pub verify_chunks: usize,
+    /// Wall time spent in prefill forwards.
     pub prefill_time: Duration,
+    /// Wall time spent in decode rounds.
     pub decode_time: Duration,
 }
 
@@ -273,6 +312,7 @@ impl ServeStats {
         }
     }
 
+    /// One-line human-readable account of the run.
     pub fn summary(&self) -> String {
         let spec = if self.verify_chunks > 0 {
             format!(

@@ -67,8 +67,21 @@ impl PackedModel {
         Ok(PackedModel::new(fp, packed))
     }
 
+    /// Model architecture (shapes, vocab, context length).
     pub fn config(&self) -> &OptConfig {
         &self.fp.config
+    }
+
+    /// The FP (non-quantized) weight set backing this model: embeddings,
+    /// positions, LayerNorms, biases — plus the dense fallback of any
+    /// linear that was not packed.
+    pub fn weights(&self) -> &Weights {
+        &self.fp
+    }
+
+    /// The packed form of one linear (`None` when it serves dense).
+    pub fn packed_of(&self, name: &str) -> Option<&PackedTensor> {
+        self.packed.get(name)
     }
 
     /// Materialize a **draft model** for self-speculative decoding: the

@@ -31,11 +31,15 @@ use crate::model::native::KvCache;
 /// is mirrored from here).
 #[derive(Debug, Clone, Default)]
 pub struct PrefixStats {
+    /// Prefix lookups performed on admission.
     pub lookups: u64,
+    /// Lookups that matched a non-empty cached prefix.
     pub hits: u64,
     /// Prompt tokens served from cache instead of prefill.
     pub hit_tokens: u64,
+    /// Prompts inserted (or extended) into the trie after serving.
     pub insertions: u64,
+    /// Leaves evicted to stay under the unique-byte budget.
     pub evictions: u64,
 }
 
@@ -65,6 +69,7 @@ impl PrefixCache {
         PrefixCache { roots: Vec::new(), max_bytes, clock: 0, stats: PrefixStats::default() }
     }
 
+    /// Trie-internal counters (see [`PrefixStats`]).
     pub fn stats(&self) -> &PrefixStats {
         &self.stats
     }
@@ -77,6 +82,7 @@ impl PrefixCache {
         count(&self.roots)
     }
 
+    /// True when no prefix is cached.
     pub fn is_empty(&self) -> bool {
         self.roots.is_empty()
     }

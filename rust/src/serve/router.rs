@@ -1,0 +1,507 @@
+//! Multi-replica serving front-end: a [`Router`] over N independent
+//! [`Scheduler`] replicas with prefix-affinity placement, queue-depth
+//! balancing, deadline-aware spillover and explicit load shedding.
+//!
+//! Placement runs a strict four-step cascade per request:
+//!
+//! 1. **Affinity** — a consistent-hash ring (FNV-1a over the first
+//!    [`RouterOpts::affinity_tokens`] prompt tokens, [`RouterOpts::virtual_nodes`]
+//!    virtual nodes per replica) picks a home replica, so requests sharing a
+//!    system-prompt prefix land on the same replica and hit its prefix cache.
+//! 2. **Balance** — if the home replica's queue is at the admission
+//!    watermark, the request diverts to the least-loaded replica instead.
+//! 3. **Spillover** — if *every* replica is at the watermark but the request
+//!    carries a deadline, it is admitted anyway on the least-loaded replica
+//!    (pair with [`AdmissionPolicy::Deadline`] for earliest-deadline-first
+//!    ordering under saturation).
+//! 4. **Shed** — otherwise the request is refused immediately with
+//!    [`FinishReason::Rejected`]: its sink is notified, a completion is
+//!    synthesized, and no replica ever sees it.
+//!
+//! **Bit-identity across replica counts.** Each request samples from its own
+//! RNG stream (`Pcg64::with_stream(seed, id)`) and decodes independently of
+//! its batch-mates, so *which* replica serves a request cannot change its
+//! tokens: completions are bit-identical across `replicas` ∈ {1, 2, 4} and
+//! prefix-cache on/off for every non-shed request (pinned by
+//! `completions_bit_identical_across_replica_counts`).
+//!
+//! [`AdmissionPolicy::Deadline`]: crate::serve::AdmissionPolicy::Deadline
+
+use crate::model::native::DecoderParams;
+use crate::obs::router::{record_route, RouteOutcome};
+use crate::serve::{
+    Completion, FinishReason, Request, RequestTiming, Scheduler, ServeMetrics, ServeOpts,
+    ServeStats,
+};
+
+/// Router knobs (per-replica engine knobs live in [`ServeOpts`]).
+#[derive(Debug, Clone, Copy)]
+pub struct RouterOpts {
+    /// Scheduler replicas to fan out over (clamped to ≥ 1).
+    pub replicas: usize,
+    /// Per-replica queued-request watermark: a replica with this many
+    /// requests already queued is *saturated* and refuses non-deadline
+    /// work once every replica is saturated.  `0` = unbounded (never shed).
+    pub shed_watermark: usize,
+    /// Prompt tokens hashed for prefix-affinity placement.  Requests whose
+    /// prompts agree on this many leading tokens route to the same replica.
+    pub affinity_tokens: usize,
+    /// Virtual nodes per replica on the consistent-hash ring; more nodes
+    /// spread distinct prefixes more evenly at the cost of a larger ring.
+    pub virtual_nodes: usize,
+}
+
+impl Default for RouterOpts {
+    fn default() -> Self {
+        RouterOpts { replicas: 1, shed_watermark: 0, affinity_tokens: 16, virtual_nodes: 32 }
+    }
+}
+
+/// Routing outcome totals for one [`Router`] (cumulative since creation)
+/// plus the per-replica engine stats from the most recent [`Router::run`].
+#[derive(Debug, Clone, Default)]
+pub struct RouterStats {
+    /// Requests submitted to the router (all four outcomes).
+    pub submitted: usize,
+    /// Requests placed on their consistent-hash home replica.
+    pub affinity_routed: usize,
+    /// Requests diverted to the least-loaded replica because the home
+    /// replica was at the watermark.
+    pub balanced: usize,
+    /// Deadline-carrying requests admitted past the watermark with every
+    /// replica saturated.
+    pub spilled: usize,
+    /// Requests refused with [`FinishReason::Rejected`] before reaching any
+    /// replica.
+    pub shed: usize,
+    /// Engine stats per replica from the last `run` call, indexed by
+    /// replica.
+    pub per_replica: Vec<ServeStats>,
+}
+
+impl RouterStats {
+    /// Fraction of submitted requests shed (0 when nothing was submitted).
+    pub fn shed_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.submitted as f64
+        }
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    let mut h = FNV_OFFSET;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// A front-end distributing requests over N [`Scheduler`] replicas sharing
+/// one set of decoder parameters.  See the module docs for the placement
+/// cascade and the bit-identity guarantee.
+pub struct Router<'a, P: DecoderParams + ?Sized> {
+    replicas: Vec<Scheduler<'a, P>>,
+    opts: RouterOpts,
+    /// Consistent-hash ring: `(point, replica)` sorted by point.
+    ring: Vec<(u64, usize)>,
+    /// Completions synthesized for shed requests, drained by `run`.
+    shed_done: Vec<Completion>,
+    submitted: usize,
+    affinity_routed: usize,
+    balanced: usize,
+    spilled: usize,
+    shed: usize,
+}
+
+impl<'a, P: DecoderParams + ?Sized> Router<'a, P> {
+    /// Build a router with `opts.replicas` schedulers over `params`, every
+    /// replica configured with the same `serve` knobs (notably the same
+    /// `seed` — per-request RNG streams make placement seed-neutral).
+    pub fn new(params: &'a P, opts: RouterOpts, serve: ServeOpts) -> Router<'a, P> {
+        let n = opts.replicas.max(1);
+        let replicas = (0..n).map(|_| Scheduler::new(params, serve)).collect();
+        let mut ring: Vec<(u64, usize)> = (0..n)
+            .flat_map(|r| {
+                (0..opts.virtual_nodes.max(1)).map(move |v| {
+                    let point = fnv1a(
+                        (r as u64).to_le_bytes().into_iter().chain((v as u64).to_le_bytes()),
+                    );
+                    (point, r)
+                })
+            })
+            .collect();
+        // tie-break on replica index so the ring is deterministic even if
+        // two virtual nodes hash to the same point
+        ring.sort_unstable();
+        Router {
+            replicas,
+            opts,
+            ring,
+            shed_done: Vec::new(),
+            submitted: 0,
+            affinity_routed: 0,
+            balanced: 0,
+            spilled: 0,
+            shed: 0,
+        }
+    }
+
+    /// Attach a draft model to every replica for speculative decoding
+    /// (effective once `ServeOpts::spec > 0`).
+    pub fn with_draft(mut self, draft: &'a dyn DecoderParams) -> Router<'a, P> {
+        self.replicas = self.replicas.into_iter().map(|s| s.with_draft(draft)).collect();
+        self
+    }
+
+    /// Number of scheduler replicas.
+    pub fn replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Queued requests summed over all replicas.
+    pub fn pending(&self) -> usize {
+        self.replicas.iter().map(|r| r.pending()).sum()
+    }
+
+    /// The consistent-hash home replica for `prompt`.
+    fn affinity_replica(&self, prompt: &[i32]) -> usize {
+        let key = fnv1a(
+            prompt
+                .iter()
+                .take(self.opts.affinity_tokens)
+                .flat_map(|t| t.to_le_bytes()),
+        );
+        let i = self.ring.partition_point(|&(p, _)| p < key);
+        self.ring[i % self.ring.len()].1
+    }
+
+    /// The replica with the shortest queue (lowest index on ties, so
+    /// placement is deterministic).
+    fn least_loaded(&self) -> usize {
+        let mut best = 0;
+        for (i, r) in self.replicas.iter().enumerate().skip(1) {
+            if r.pending() < self.replicas[best].pending() {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Route one request through the placement cascade.  Shed requests are
+    /// finished immediately (sink notified, completion synthesized) and
+    /// surface in the next [`Router::run`] result with
+    /// [`FinishReason::Rejected`].
+    pub fn submit(&mut self, mut req: Request) {
+        self.submitted += 1;
+        let cap =
+            if self.opts.shed_watermark == 0 { usize::MAX } else { self.opts.shed_watermark };
+        let home = self.affinity_replica(&req.prompt);
+        if self.replicas[home].pending() < cap {
+            self.affinity_routed += 1;
+            record_route(RouteOutcome::Affinity);
+            self.replicas[home].submit(req);
+            return;
+        }
+        let target = self.least_loaded();
+        if self.replicas[target].pending() < cap {
+            self.balanced += 1;
+            record_route(RouteOutcome::Balanced);
+            self.replicas[target].submit(req);
+            return;
+        }
+        if req.deadline_ms.is_some() {
+            self.spilled += 1;
+            record_route(RouteOutcome::Spillover);
+            self.replicas[target].submit(req);
+            return;
+        }
+        self.shed += 1;
+        record_route(RouteOutcome::Shed);
+        let reason = FinishReason::Rejected(format!(
+            "shed: all {} replicas at watermark {}",
+            self.replicas.len(),
+            self.opts.shed_watermark
+        ));
+        if let Some(sink) = req.sink.as_mut() {
+            sink.on_finish(&reason);
+        }
+        self.shed_done.push(Completion {
+            id: req.id,
+            prompt: std::mem::take(&mut req.prompt),
+            generated: Vec::new(),
+            finish: reason,
+            timing: RequestTiming::default(),
+        });
+    }
+
+    /// Drain every replica — each on its own OS thread — and return the
+    /// merged completions (replica results plus shed completions, sorted by
+    /// request id) with the routing stats.  Callable repeatedly: each call
+    /// serves the requests submitted since the previous one.
+    pub fn run(&mut self) -> (Vec<Completion>, RouterStats) {
+        let results: Vec<(Vec<Completion>, ServeStats)> = std::thread::scope(|scope| {
+            let handles: Vec<_> =
+                self.replicas.iter_mut().map(|r| scope.spawn(|| r.run())).collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(std::panic::resume_unwind))
+                .collect()
+        });
+        let mut done: Vec<Completion> = std::mem::take(&mut self.shed_done);
+        let mut per_replica = Vec::with_capacity(results.len());
+        for (completions, stats) in results {
+            done.extend(completions);
+            per_replica.push(stats);
+        }
+        done.sort_by_key(|c| c.id);
+        let stats = RouterStats {
+            submitted: self.submitted,
+            affinity_routed: self.affinity_routed,
+            balanced: self.balanced,
+            spilled: self.spilled,
+            shed: self.shed,
+            per_replica,
+        };
+        (done, stats)
+    }
+
+    /// Engine metrics merged across all replicas (histograms bucket-exact —
+    /// see `ServeMetrics::merge`).
+    pub fn aggregate_metrics(&self) -> ServeMetrics {
+        let mut m = ServeMetrics::new();
+        for r in &self.replicas {
+            m.merge(r.metrics());
+        }
+        m
+    }
+
+    /// Per-replica engine metrics, indexed by replica.
+    pub fn replica_metrics(&self, replica: usize) -> &ServeMetrics {
+        self.replicas[replica].metrics()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{OptConfig, Weights};
+    use crate::serve::stream::TokenSink;
+    use crate::util::propcheck;
+    use crate::util::rng::Pcg64;
+    use crate::util::sampling::Sampler;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    fn test_weights() -> Weights {
+        Weights::random(OptConfig::test_config(), 3)
+    }
+
+    /// Sink counting `on_finish` calls (shared across requests).
+    struct CountFinish(Arc<AtomicUsize>);
+
+    impl TokenSink for CountFinish {
+        fn on_token(&mut self, _token: i32, _index: usize) {}
+        fn on_finish(&mut self, _reason: &FinishReason) {
+            self.0.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    /// A workload with shared prefixes: `families` distinct system prompts,
+    /// `n` requests cycling over them with varied tails and samplers.
+    fn requests(n: usize, families: usize, vocab: usize, rng_seed: u64) -> Vec<Request> {
+        let mut rng = Pcg64::new(rng_seed);
+        let prefixes: Vec<Vec<i32>> = (0..families)
+            .map(|_| (0..6).map(|_| rng.below(vocab) as i32).collect())
+            .collect();
+        (0..n)
+            .map(|i| {
+                let mut prompt = prefixes[i % families].clone();
+                prompt.extend((0..1 + i % 3).map(|_| rng.below(vocab) as i32));
+                Request::new(
+                    i,
+                    prompt,
+                    2 + i % 4,
+                    if i % 2 == 0 {
+                        Sampler::Greedy
+                    } else {
+                        Sampler::TopK { k: 4, temperature: 0.9 }
+                    },
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn completions_bit_identical_across_replica_counts() {
+        let w = test_weights();
+        let serve = ServeOpts { max_batch: 2, ..Default::default() };
+        let reference: Vec<Completion> = {
+            let mut router = Router::new(&w, RouterOpts::default(), serve);
+            for r in requests(10, 3, w.config.vocab, 11) {
+                router.submit(r);
+            }
+            router.run().0
+        };
+        assert_eq!(reference.len(), 10);
+        for replicas in [1usize, 2, 4] {
+            for prefix_cache in [false, true] {
+                let opts = RouterOpts { replicas, ..Default::default() };
+                let mut router = Router::new(&w, opts, ServeOpts { prefix_cache, ..serve });
+                for r in requests(10, 3, w.config.vocab, 11) {
+                    router.submit(r);
+                }
+                let (done, stats) = router.run();
+                assert_eq!(stats.shed, 0, "unbounded router must not shed");
+                assert_eq!(
+                    done, reference,
+                    "completions diverged at replicas={replicas} prefix={prefix_cache}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn affinity_groups_shared_prefixes_on_one_replica() {
+        let w = test_weights();
+        // affinity_tokens = 6 covers exactly the shared prefix, so the
+        // varied tails don't perturb the hash
+        let opts = RouterOpts { replicas: 4, affinity_tokens: 6, ..Default::default() };
+        let mut router = Router::new(&w, opts, ServeOpts::default());
+        let reqs = requests(8, 1, w.config.vocab, 7);
+        for r in reqs {
+            router.submit(r);
+        }
+        let loaded: Vec<usize> =
+            (0..4).map(|i| router.replicas[i].pending()).filter(|&p| p > 0).collect();
+        assert_eq!(loaded, vec![8], "one replica owns the whole prefix family");
+        let (done, stats) = router.run();
+        assert_eq!(done.len(), 8);
+        assert_eq!(stats.affinity_routed, 8);
+        assert_eq!(stats.balanced + stats.spilled + stats.shed, 0);
+    }
+
+    #[test]
+    fn watermark_balances_then_sheds_and_always_completes() {
+        let w = test_weights();
+        let opts = RouterOpts {
+            replicas: 2,
+            shed_watermark: 3,
+            affinity_tokens: 6,
+            ..Default::default()
+        };
+        let mut router = Router::new(&w, opts, ServeOpts::default());
+        let finishes = Arc::new(AtomicUsize::new(0));
+        let n = 10;
+        for mut r in requests(n, 1, w.config.vocab, 13) {
+            r.sink = Some(Box::new(CountFinish(Arc::clone(&finishes))));
+            router.submit(r);
+        }
+        let (done, stats) = router.run();
+        // 2 replicas × watermark 3 admit 6; the rest shed
+        assert_eq!(stats.shed, n - 6);
+        assert!(stats.balanced > 0, "overflow past the home replica must balance first");
+        assert_eq!(done.len(), n, "every request yields a completion, shed included");
+        assert_eq!(finishes.load(Ordering::SeqCst), n, "every sink sees Finish, shed included");
+        for c in &done {
+            match &c.finish {
+                FinishReason::Rejected(msg) => {
+                    assert!(msg.contains("shed"), "{msg}");
+                    assert!(c.generated.is_empty());
+                }
+                _ => assert!(!c.generated.is_empty()),
+            }
+        }
+        // non-shed completions are bit-identical to an unbounded single replica
+        let mut single = Router::new(&w, RouterOpts::default(), ServeOpts::default());
+        for r in requests(n, 1, w.config.vocab, 13) {
+            single.submit(r);
+        }
+        let (reference, _) = single.run();
+        for c in done.iter().filter(|c| !matches!(c.finish, FinishReason::Rejected(_))) {
+            assert_eq!(c, &reference[c.id], "non-shed request {} diverged", c.id);
+        }
+    }
+
+    #[test]
+    fn deadline_requests_spill_past_the_watermark() {
+        let w = test_weights();
+        let opts = RouterOpts {
+            replicas: 2,
+            shed_watermark: 1,
+            affinity_tokens: 6,
+            ..Default::default()
+        };
+        let mut router = Router::new(&w, opts, ServeOpts::default());
+        for (i, mut r) in requests(5, 1, w.config.vocab, 17).into_iter().enumerate() {
+            if i >= 3 {
+                r = r.with_deadline_ms(50 + i as u64);
+            }
+            router.submit(r);
+        }
+        let (done, stats) = router.run();
+        assert_eq!(stats.spilled, 2, "deadline-carrying requests are admitted, not shed");
+        assert_eq!(stats.shed, 1, "the saturated no-deadline request sheds");
+        assert_eq!(done.len(), 5);
+        let served = done.iter().filter(|c| !matches!(c.finish, FinishReason::Rejected(_)));
+        assert_eq!(served.count(), 4);
+    }
+
+    #[test]
+    fn run_is_repeatable_and_stats_accumulate() {
+        let w = test_weights();
+        let mut router =
+            Router::new(&w, RouterOpts { replicas: 2, ..Default::default() }, ServeOpts::default());
+        let reqs = requests(6, 2, w.config.vocab, 19);
+        let mut all = Vec::new();
+        for wave in reqs.chunks(3) {
+            for r in wave {
+                router.submit(Request::new(r.id, r.prompt.clone(), r.max_new, r.sampler));
+            }
+            let (done, _) = router.run();
+            assert_eq!(done.len(), 3);
+            all.extend(done);
+        }
+        let (_, stats) = router.run();
+        assert_eq!(stats.submitted, 6, "routing counters are cumulative");
+        assert_eq!(all.len(), 6);
+        let m = router.aggregate_metrics();
+        assert_eq!(m.finished_length as usize + m.finished_stop as usize, 6);
+    }
+
+    #[test]
+    fn aggregate_metrics_match_per_replica_sums() {
+        let w = test_weights();
+        let mut router =
+            Router::new(&w, RouterOpts { replicas: 4, ..Default::default() }, ServeOpts::default());
+        for r in requests(12, 4, w.config.vocab, 23) {
+            router.submit(r);
+        }
+        let (done, _) = router.run();
+        assert_eq!(done.len(), 12);
+        let agg = router.aggregate_metrics();
+        let ttft_total: u64 = (0..4).map(|i| router.replica_metrics(i).ttft.count()).sum();
+        assert_eq!(agg.ttft.count(), ttft_total);
+        assert_eq!(agg.ttft.count(), 12);
+    }
+
+    #[test]
+    fn ring_lookup_is_total_and_stable() {
+        let w = test_weights();
+        let router =
+            Router::new(&w, RouterOpts { replicas: 3, ..Default::default() }, ServeOpts::default());
+        propcheck::check("affinity ring lookup", 64, |rng| {
+            let prompt: Vec<i32> =
+                (0..1 + rng.below(24)).map(|_| rng.below(1 << 20) as i32).collect();
+            let a = router.affinity_replica(&prompt);
+            let b = router.affinity_replica(&prompt);
+            propcheck::ensure(a == b, "lookup must be deterministic")?;
+            propcheck::ensure(a < 3, "replica index in range")
+        });
+    }
+}

@@ -116,10 +116,13 @@ impl CancelHandle {
         self.ids.lock().unwrap_or_else(|e| e.into_inner())
     }
 
+    /// Cancel request `id`: queued requests retire without starting,
+    /// in-flight ones stop at the next round boundary.
     pub fn cancel(&self, id: usize) {
         self.ids().insert(id);
     }
 
+    /// True when `id` has been cancelled and not yet retired.
     pub fn is_cancelled(&self, id: usize) -> bool {
         self.ids().contains(&id)
     }
@@ -265,6 +268,9 @@ pub struct Scheduler<'a, P: DecoderParams + ?Sized> {
 }
 
 impl<'a, P: DecoderParams + ?Sized> Scheduler<'a, P> {
+    /// Scheduler over `params` (dense weights, a
+    /// [`crate::serve::PackedModel`], or a [`crate::serve::ShardedModel`] —
+    /// anything implementing [`DecoderParams`]).
     pub fn new(params: &'a P, opts: ServeOpts) -> Scheduler<'a, P> {
         assert!(opts.max_batch >= 1, "max_batch must be >= 1");
         let mut metrics = ServeMetrics::new();
@@ -297,6 +303,8 @@ impl<'a, P: DecoderParams + ?Sized> Scheduler<'a, P> {
         self
     }
 
+    /// Enqueue a request; it is admitted by the [`AdmissionPolicy`] when a
+    /// decode slot frees up during [`Scheduler::run`].
     pub fn submit(&mut self, req: Request) {
         let arrival = self.arrivals;
         self.arrivals += 1;
@@ -305,6 +313,7 @@ impl<'a, P: DecoderParams + ?Sized> Scheduler<'a, P> {
         self.queue.push(Queued { req, arrival, submitted_at, deadline_at });
     }
 
+    /// Requests submitted but not yet run.
     pub fn pending(&self) -> usize {
         self.queue.len()
     }

@@ -1,0 +1,367 @@
+//! Tensor-parallel sharded serving: every worker owns a **row slice** of
+//! every layer's weights and computes the matching slice of each linear's
+//! output.
+//!
+//! The row-tiled fused packed kernels (`quant::packed`) partition cleanly
+//! by output rows, so sharding a linear means slicing its
+//! [`PackedTensor`] into per-shard row ranges ([`PackedTensor::slice_rows`])
+//! and letting each shard run the *same* fused unpack→dequant→GEMM over its
+//! slice.  The per-layer "reduction" is pure concatenation — each shard's
+//! partial output is a disjoint column range of the full output, no
+//! floating-point summation ever crosses shards — which is what makes the
+//! sharded forward **bit-identical** to the single-shard path for every
+//! shard count (pinned for shards ∈ {1, 2, 4} by
+//! `sharded_forward_bit_identical_across_shard_counts`).
+//!
+//! Shard boundaries land on whole 64-row kernel tiles ([`shard_ranges`]),
+//! so each shard's tile decomposition and 4-wide/`dot`-tail column split
+//! are exactly the sub-ranges the whole-matrix kernel would compute —
+//! the bit-identity is structural, not incidental.
+//!
+//! Non-linear parameters (embeddings, positions, LayerNorms, biases) are
+//! small next to the packed linears and are replicated on every shard, as
+//! in standard Megatron-style tensor parallelism.
+
+// DETERMINISM: HashMap holds the per-shard weight slices for keyed lookup
+// by parameter name only; the forward pass asks for specific names, so
+// iteration order never influences compute or output.
+use std::collections::HashMap;
+
+use crate::model::native::DecoderParams;
+use crate::model::{OptConfig, Weights};
+use crate::quant::PackedTensor;
+use crate::serve::PackedModel;
+use crate::tensor::{ops, Tensor};
+use crate::util::pool;
+
+/// Kernel output-row tile — shard boundaries must land on multiples of
+/// this so each shard's tile decomposition matches the whole-matrix
+/// kernel's (see `quant::packed`'s `ROW_TILE`, same value by contract).
+const SHARD_TILE: usize = 64;
+
+/// Partition `rows` output rows into `n_shards` contiguous ranges
+/// `(r0, len)`, balanced to within one 64-row kernel tile.
+///
+/// Every boundary is tile-aligned, so a sharded linear over these ranges
+/// is bit-identical to the whole-matrix kernel (see
+/// [`PackedTensor::slice_rows`]).  Ranges cover `0..rows` exactly, in
+/// order, without overlap; when there are fewer tiles than shards the
+/// trailing ranges are empty.
+pub fn shard_ranges(rows: usize, n_shards: usize) -> Vec<(usize, usize)> {
+    assert!(n_shards >= 1, "shard_ranges: need at least one shard");
+    let tiles = rows.div_ceil(SHARD_TILE);
+    let mut out = Vec::with_capacity(n_shards);
+    let mut t0 = 0usize;
+    for s in 0..n_shards {
+        let t1 = tiles * (s + 1) / n_shards;
+        let r0 = (t0 * SHARD_TILE).min(rows);
+        let r1 = (t1 * SHARD_TILE).min(rows);
+        out.push((r0, r1 - r0));
+        t0 = t1;
+    }
+    out
+}
+
+/// One linear's weights, split into per-shard row slices.
+enum ShardedLinear {
+    /// Packed slices, one per non-empty shard range: `(r0, slice)`.
+    Packed(Vec<(usize, PackedTensor)>),
+    /// Dense fallback slices for linears the model serves unquantized.
+    Dense(Vec<(usize, Tensor)>),
+}
+
+/// A [`PackedModel`] split row-wise across `n_shards` tensor-parallel
+/// workers.
+///
+/// Implements [`DecoderParams`], so the continuous-batching scheduler and
+/// the router serve it exactly like a single-shard model; every linear
+/// fans out across the shard slices (in parallel on the thread pool) and
+/// concatenates the disjoint partial outputs.  Completions are
+/// bit-identical to serving the unsharded [`PackedModel`] — sharding is a
+/// pure scale-out knob.
+pub struct ShardedModel {
+    fp: Weights,
+    n_shards: usize,
+    linears: HashMap<String, ShardedLinear>,
+}
+
+impl ShardedModel {
+    /// Split `pm` into `n_shards` row-parallel workers.  Packed linears are
+    /// sliced with [`PackedTensor::slice_rows`]; dense-fallback linears are
+    /// sliced row-wise on the FP weights; everything else is replicated.
+    pub fn new(pm: &PackedModel, n_shards: usize) -> ShardedModel {
+        assert!(n_shards >= 1, "ShardedModel: need at least one shard");
+        let fp = pm.weights().clone();
+        let mut linears = HashMap::new();
+        for name in fp.quant_names() {
+            let lin = match pm.packed_of(&name) {
+                Some(p) => ShardedLinear::Packed(
+                    shard_ranges(p.rows, n_shards)
+                        .into_iter()
+                        .filter(|&(_, n)| n > 0)
+                        .map(|(r0, n)| (r0, p.slice_rows(r0, n)))
+                        .collect(),
+                ),
+                None => {
+                    let w = fp.get(&name);
+                    ShardedLinear::Dense(
+                        shard_ranges(w.rows, n_shards)
+                            .into_iter()
+                            .filter(|&(_, n)| n > 0)
+                            .map(|(r0, n)| {
+                                let data = w.data[r0 * w.cols..(r0 + n) * w.cols].to_vec();
+                                (r0, Tensor::from_vec(n, w.cols, data))
+                            })
+                            .collect(),
+                    )
+                }
+            };
+            linears.insert(name, lin);
+        }
+        ShardedModel { fp, n_shards, linears }
+    }
+
+    /// Number of tensor-parallel workers this model is split across.
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Bytes of packed weight slices owned by each shard — the per-worker
+    /// residency a deployment would place on each device.  Index `s` is
+    /// shard `s`; dense-fallback and replicated FP weights are excluded.
+    pub fn packed_bytes_per_shard(&self) -> Vec<usize> {
+        let mut bytes = vec![0usize; self.n_shards];
+        // per-shard totals: recover each slice's shard index from its row
+        // offset (ranges are in shard order and slices store r0)
+        for lin in self.linears.values() {
+            if let ShardedLinear::Packed(slices) = lin {
+                let rows: usize = slices.iter().map(|(_, p)| p.rows).sum();
+                let ranges = shard_ranges(rows, self.n_shards);
+                for (r0, p) in slices {
+                    if let Some(s) = ranges.iter().position(|&(q0, n)| q0 == *r0 && n > 0) {
+                        bytes[s] += p.nbytes();
+                    }
+                }
+            }
+        }
+        bytes
+    }
+
+    /// Fan one linear out across the shard slices and concatenate the
+    /// disjoint column ranges of the output.  Shards compute in parallel
+    /// on the thread pool (ordered results), each through the exact kernel
+    /// the unsharded path runs over its row range — bit-identity per slice
+    /// is pinned by `slice_rows_linear_matches_whole` in `quant::packed`.
+    fn sharded_linear(&self, wname: &str, bias: &[f32], x: &Tensor) -> Tensor {
+        // PANIC-OK: construction covers every quantizable linear name, and
+        // DecoderParams::linear is only called with those — a miss is a
+        // programming error caught by every forward in the test suite.
+        let lin = self.linears.get(wname).expect("sharded linear exists");
+        let rows_total = bias.len();
+        let mut out = Tensor::zeros(x.rows, rows_total);
+        let partials: Vec<(usize, Tensor)> = match lin {
+            ShardedLinear::Packed(slices) => {
+                let threads = pool::num_threads().min(slices.len());
+                pool::parallel_map(slices.len(), threads, |s| {
+                    let (r0, p) = &slices[s];
+                    (*r0, p.linear(x, &bias[*r0..*r0 + p.rows]))
+                })
+            }
+            ShardedLinear::Dense(slices) => {
+                let threads = pool::num_threads().min(slices.len());
+                pool::parallel_map(slices.len(), threads, |s| {
+                    let (r0, w) = &slices[s];
+                    (*r0, ops::linear(x, w, &bias[*r0..*r0 + w.rows]))
+                })
+            }
+        };
+        for (r0, part) in &partials {
+            let n = part.cols;
+            for i in 0..x.rows {
+                out.data[i * rows_total + r0..i * rows_total + r0 + n]
+                    .copy_from_slice(&part.data[i * n..(i + 1) * n]);
+            }
+        }
+        out
+    }
+}
+
+impl DecoderParams for ShardedModel {
+    fn config(&self) -> &OptConfig {
+        &self.fp.config
+    }
+
+    fn dense(&self, name: &str) -> &Tensor {
+        self.fp.get(name)
+    }
+
+    fn linear(&self, l: usize, base: &str, x: &Tensor) -> Tensor {
+        let bias = &self.fp.layer(l, &format!("{base}.b")).data;
+        self.sharded_linear(&format!("l{l}.{base}.w"), bias, x)
+    }
+
+    fn linear_batch(&self, l: usize, base: &str, x: &Tensor) -> Tensor {
+        // the packed slice kernel is already the cache-blocked multi-row
+        // GEMM (`PackedTensor::linear_batch` == `linear`), so batching
+        // routes through the same sharded fan-out
+        self.linear(l, base, x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::native::{self, KvCache};
+    use crate::quant::{self, BitAllocation, QuantScheme};
+    use crate::serve::{Request, Scheduler, ServeOpts};
+    use crate::util::propcheck;
+    use crate::util::rng::Pcg64;
+    use crate::util::sampling::Sampler;
+
+    fn packed_model(seed: u64) -> PackedModel {
+        let w = Weights::random(OptConfig::test_config(), seed);
+        let alloc = BitAllocation::uniform(QuantScheme::new(2, 32));
+        PackedModel::from_allocation(w, &alloc).unwrap()
+    }
+
+    #[test]
+    fn shard_ranges_cover_rows_exactly_and_tile_aligned() {
+        propcheck::check("shard_ranges partition", 64, |rng| {
+            let rows = rng.below(600) + 1;
+            let n_shards = *rng.choice(&[1usize, 2, 3, 4, 8]);
+            let ranges = shard_ranges(rows, n_shards);
+            if ranges.len() != n_shards {
+                return Err(format!("{} ranges for {n_shards} shards", ranges.len()));
+            }
+            let mut next = 0usize;
+            for &(r0, n) in &ranges {
+                if r0 != next {
+                    return Err(format!("gap/overlap at {r0}, expected {next}"));
+                }
+                if r0 % SHARD_TILE != 0 {
+                    return Err(format!("unaligned shard start {r0}"));
+                }
+                if n % SHARD_TILE != 0 && r0 + n != rows {
+                    return Err(format!("interior shard ({r0},{n}) not tile-aligned"));
+                }
+                next = r0 + n;
+            }
+            propcheck::ensure(next == rows, format!("covered {next} of {rows} rows"))
+        });
+    }
+
+    #[test]
+    fn sharded_forward_bit_identical_across_shard_counts() {
+        // the tentpole pin: prefill AND decode logits from the sharded
+        // model equal the unsharded PackedModel bit-for-bit, for every
+        // pinned shard count
+        let pm = packed_model(9);
+        let mut rng = Pcg64::new(1);
+        let toks: Vec<i32> = (0..12).map(|_| rng.below(pm.config().vocab) as i32).collect();
+        let mut c0 = KvCache::new(pm.config());
+        let base_prefill = native::prefill(&pm, &mut c0, &toks);
+        for shards in [1usize, 2, 4] {
+            let sm = ShardedModel::new(&pm, shards);
+            assert_eq!(sm.n_shards(), shards);
+            let mut c1 = KvCache::new(sm.config());
+            let l1 = native::prefill(&sm, &mut c1, &toks);
+            assert_eq!(base_prefill, l1, "prefill diverged at {shards} shards");
+            let mut c0d = c0.clone();
+            for t in [3i32, 7, 11, 40] {
+                let d0 = native::decode_step(&pm, &mut c0d, t);
+                let d1 = native::decode_step(&sm, &mut c1, t);
+                assert_eq!(d0, d1, "decode diverged at {shards} shards (token {t})");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_mixed_precision_forward_matches_unsharded() {
+        // heterogeneous schemes slice per-tensor (each slice carries its
+        // own bits/group header), and a deliberately unpacked linear
+        // exercises the dense row-slice fallback
+        let w = Weights::random(OptConfig::test_config(), 17);
+        let scheme = QuantScheme::new(2, 32);
+        let packed: Vec<(String, PackedTensor)> = w
+            .quant_names()
+            .iter()
+            .filter(|n| n.as_str() != "l0.up.w") // dense fallback
+            .map(|n| {
+                let s = if n.contains("down") { QuantScheme::new(4, 32) } else { scheme };
+                (n.clone(), PackedTensor::pack(&quant::quantize(w.get(n), s)))
+            })
+            .collect();
+        let pm = PackedModel::new(w, packed);
+        let mut rng = Pcg64::new(5);
+        let toks: Vec<i32> = (0..10).map(|_| rng.below(pm.config().vocab) as i32).collect();
+        let mut c0 = KvCache::new(pm.config());
+        let l0 = native::prefill(&pm, &mut c0, &toks);
+        for shards in [2usize, 4] {
+            let sm = ShardedModel::new(&pm, shards);
+            let mut c1 = KvCache::new(sm.config());
+            assert_eq!(l0, native::prefill(&sm, &mut c1, &toks), "{shards} shards");
+        }
+    }
+
+    #[test]
+    fn sharded_scheduler_completions_bit_identical() {
+        // end to end: the continuous-batching scheduler over the sharded
+        // model reproduces the single-shard completions exactly
+        let pm = packed_model(9);
+        let vocab = pm.config().vocab;
+        let run = |params: &dyn DecoderParams| {
+            let mut s = Scheduler::new(
+                params,
+                ServeOpts { max_batch: 2, seed: 3, ..Default::default() },
+            );
+            let mut rng = Pcg64::new(8);
+            for i in 0..4 {
+                s.submit(Request::new(
+                    i,
+                    (0..5 + i % 2).map(|_| rng.below(vocab) as i32).collect(),
+                    4,
+                    Sampler::TopK { k: 4, temperature: 0.7 },
+                ));
+            }
+            s.run().0
+        };
+        let reference = run(&pm);
+        for shards in [1usize, 2, 4] {
+            let sm = ShardedModel::new(&pm, shards);
+            assert_eq!(reference, run(&sm), "completions diverged at {shards} shards");
+        }
+    }
+
+    #[test]
+    fn more_shards_than_tiles_still_exact() {
+        // test_config linears are 32-64 rows — one tile — so at 4 shards
+        // three ranges are empty; the fan-out must skip them gracefully
+        let pm = packed_model(11);
+        let sm = ShardedModel::new(&pm, 4);
+        let mut rng = Pcg64::new(2);
+        let toks: Vec<i32> = (0..6).map(|_| rng.below(pm.config().vocab) as i32).collect();
+        let mut c0 = KvCache::new(pm.config());
+        let mut c1 = KvCache::new(sm.config());
+        assert_eq!(
+            native::prefill(&pm, &mut c0, &toks),
+            native::prefill(&sm, &mut c1, &toks)
+        );
+    }
+
+    #[test]
+    fn per_shard_bytes_account_the_packed_slices() {
+        let pm = packed_model(9);
+        let sm = ShardedModel::new(&pm, 2);
+        let per = sm.packed_bytes_per_shard();
+        assert_eq!(per.len(), 2);
+        assert!(per[0] > 0, "shard 0 must own packed rows");
+        // slicing re-packs zeros per slice, so the sum can exceed the
+        // unsharded total only by per-slice padding slack
+        let total: usize = per.iter().sum();
+        assert!(
+            total >= pm.packed_bytes() / 2,
+            "per-shard accounting lost weight bytes: {total} vs {}",
+            pm.packed_bytes()
+        );
+    }
+}

@@ -45,7 +45,14 @@ pub trait TokenSink: Send {
 /// Event delivered by [`ChannelSink`].
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum StreamEvent {
-    Token { index: usize, token: i32 },
+    /// One sampled token at 0-based generated `index`.
+    Token {
+        /// Position within the generated tokens.
+        index: usize,
+        /// The sampled token id.
+        token: i32,
+    },
+    /// The request left the scheduler; sent exactly once, last.
     Finish(FinishReason),
 }
 
@@ -56,6 +63,7 @@ pub struct ChannelSink {
 }
 
 impl ChannelSink {
+    /// The sink plus the receiver its events arrive on.
     pub fn new() -> (ChannelSink, mpsc::Receiver<StreamEvent>) {
         let (tx, rx) = mpsc::channel();
         (ChannelSink { tx }, rx)
@@ -93,10 +101,12 @@ pub struct StopCondition {
 }
 
 impl StopCondition {
+    /// No stop tokens or sequences: generation runs to `max_new`.
     pub fn none() -> StopCondition {
         StopCondition::default()
     }
 
+    /// True when no stop token or sequence is set.
     pub fn is_empty(&self) -> bool {
         self.tokens.is_empty() && self.sequences.is_empty()
     }

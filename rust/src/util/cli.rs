@@ -9,11 +9,14 @@ use std::collections::BTreeMap;
 /// unset or fails to parse.  The crate-wide pattern for tuning knobs
 /// (`INVAREXPLORE_THREADS`, `INVAREXPLORE_SIGMA_R`, …).
 pub fn env_parse<T: std::str::FromStr>(name: &str) -> Option<T> {
+    // ENV-DOC: generic accessor — each caller names its knob and is
+    // checked against the README table at its own call site
     std::env::var(name).ok().and_then(|v| v.parse().ok())
 }
 
 /// Env override with a fallback default.
 pub fn env_override<T: std::str::FromStr>(name: &str, default: T) -> T {
+    // ENV-DOC: generic accessor — callers name the knob
     env_parse(name).unwrap_or(default)
 }
 

@@ -1,0 +1,295 @@
+//! `cargo xtask envdoc` — the operator-surface documentation lint.
+//!
+//! Every environment variable the crate reads (`std::env::var`, the
+//! `util::cli::env_parse` / `env_override` wrappers) must appear,
+//! backticked, in the repo README's env-knob table. The check is
+//! lexical, like the other xtask lints:
+//!
+//! * env-read call sites are located on the lexer's *code* channel (so
+//!   the tokens never match inside strings or comments), but the
+//!   variable name is extracted from the *raw* source line — the lexer
+//!   blanks string-literal contents;
+//! * `#[cfg(test)]` regions are exempt (tests may invent scratch
+//!   variables);
+//! * a site that cannot name a literal variable — the generic wrappers
+//!   themselves, or a read through a runtime-computed name — must carry
+//!   a per-site `// ENV-DOC: <why>` justification.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use crate::lexer::{annotated, split_lines, test_regions};
+use crate::lint::{rust_files, Violation};
+
+/// Tags that exempt a single env-read site from the README requirement.
+pub const ENV_DOC_TAGS: &[&str] = &["ENV-DOC:"];
+
+/// Tokens that read the process environment. A match must be followed
+/// by a call — `(` or a turbofish `::<` — so `use ...::env_override;`
+/// imports are not sites.
+const READ_TOKENS: &[&str] = &["env::var", "env::var_os", "env_parse", "env_override"];
+
+/// Repo README holding the authoritative env-knob table (one level above
+/// the cargo workspace).
+pub fn readme_path() -> PathBuf {
+    match crate::workspace_root().parent() {
+        Some(repo) => repo.join("README.md"),
+        None => PathBuf::from("README.md"),
+    }
+}
+
+/// Roots scanned by default: the crate sources and the bench drivers.
+/// xtask itself reads no tuning knobs, so it is not in scope.
+pub fn default_roots() -> Vec<PathBuf> {
+    let ws = crate::workspace_root();
+    vec![ws.join("src"), ws.join("benches")]
+}
+
+/// Collect the documented variable names: every backticked span in the
+/// README whose leading token looks like an env-var name
+/// (`ALL_CAPS_WITH_UNDERSCORES`, optionally followed by `=value` or a
+/// space inside the same span).
+pub fn documented_vars(readme: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for (i, span) in readme.split('`').enumerate() {
+        if i % 2 == 1 {
+            if let Some(name) = env_name_prefix(span) {
+                out.insert(name.to_string());
+            }
+        }
+    }
+    out
+}
+
+/// The leading `[A-Z][A-Z0-9_]*` run of `span`, accepted as an env-var
+/// name when it contains an underscore and the span continues (if at
+/// all) with `=` or a space — so `INVAREXPLORE_SIMD=scalar` documents
+/// `INVAREXPLORE_SIMD` while `BENCH_<suite>.json` documents nothing.
+fn env_name_prefix(span: &str) -> Option<&str> {
+    let end = span
+        .bytes()
+        .position(|b| !(b.is_ascii_uppercase() || b.is_ascii_digit() || b == b'_'))
+        .unwrap_or(span.len());
+    let name = &span[..end];
+    let sound = name.len() >= 3
+        && name.contains('_')
+        && name.as_bytes()[0].is_ascii_uppercase()
+        && matches!(span.as_bytes().get(end), None | Some(b'=') | Some(b' '));
+    sound.then_some(name)
+}
+
+/// First env-read call token on the code channel.
+fn read_site(code: &str) -> Option<&'static str> {
+    let mut best: Option<(usize, &'static str)> = None;
+    for t in READ_TOKENS {
+        if let Some(k) = find_call(code, t) {
+            let better = match best {
+                None => true,
+                Some((bk, _)) => k < bk,
+            };
+            if better {
+                best = Some((k, t));
+            }
+        }
+    }
+    best.map(|(_, t)| t)
+}
+
+/// First occurrence of `tok` in `code` that is identifier-bounded on both
+/// sides (so `remove_var` / `my_env_parse` never match) and followed by a
+/// call: `(` directly or through a turbofish `::<`.
+fn find_call(code: &str, tok: &str) -> Option<usize> {
+    let cb = code.as_bytes();
+    let mut start = 0usize;
+    while let Some(off) = code[start..].find(tok) {
+        let k = start + off;
+        let end = k + tok.len();
+        let before_ok = k == 0 || {
+            let b = cb[k - 1];
+            !(b.is_ascii_alphanumeric() || b == b'_')
+        };
+        let rest = &code[end..];
+        let is_call = rest.starts_with('(') || rest.starts_with("::<");
+        if before_ok && is_call {
+            return Some(k);
+        }
+        start = k + 1;
+    }
+    None
+}
+
+/// The literal variable name passed to `token` on the raw source line:
+/// the contents of the first `"..."` after the call token, accepted only
+/// when it is shaped like an env-var name. `None` means the site reads
+/// through a runtime-computed name.
+fn literal_name<'a>(raw: &'a str, token: &str) -> Option<&'a str> {
+    let from = raw.find(token)? + token.len();
+    let rest = raw.get(from..)?;
+    let open = rest.find('"')?;
+    let body = &rest[open + 1..];
+    let name = &body[..body.find('"')?];
+    let sound = !name.is_empty()
+        && name.as_bytes()[0].is_ascii_uppercase()
+        && name
+            .bytes()
+            .all(|b| b.is_ascii_uppercase() || b.is_ascii_digit() || b == b'_');
+    sound.then_some(name)
+}
+
+/// Check one file's source against the documented-name set. `rel` is the
+/// diagnostic path.
+pub fn check_source(rel: &str, src: &str, documented: &BTreeSet<String>) -> Vec<Violation> {
+    let lines = split_lines(src);
+    let tests = test_regions(&lines);
+    let raw: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        if tests[idx] {
+            continue;
+        }
+        let Some(token) = read_site(&line.code) else {
+            continue;
+        };
+        if annotated(&lines, idx, ENV_DOC_TAGS) {
+            continue;
+        }
+        match raw.get(idx).and_then(|r| literal_name(r, token)) {
+            Some(name) if documented.contains(name) => {}
+            Some(name) => out.push(Violation {
+                file: rel.to_string(),
+                line: idx + 1,
+                rule: "undocumented-env-knob",
+                snippet: name.to_string(),
+            }),
+            None => out.push(Violation {
+                file: rel.to_string(),
+                line: idx + 1,
+                rule: "unnamed-env-read",
+                snippet: line.code.trim().chars().take(60).collect(),
+            }),
+        }
+    }
+    out
+}
+
+/// Check every `.rs` file under each root. Diagnostic paths are reported
+/// relative to `base` (typically the `rust/` workspace dir).
+pub fn check_tree(
+    base: &Path,
+    roots: &[PathBuf],
+    documented: &BTreeSet<String>,
+) -> std::io::Result<Vec<Violation>> {
+    let mut all = Vec::new();
+    for root in roots {
+        for path in rust_files(root)? {
+            let rel = path.strip_prefix(base).unwrap_or(&path);
+            let rel = rel.to_string_lossy().replace('\\', "/");
+            let src = std::fs::read_to_string(&path)?;
+            all.extend(check_source(&rel, &src, documented));
+        }
+    }
+    Ok(all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn docs(names: &[&str]) -> BTreeSet<String> {
+        names.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn table_rows_and_value_spans_document_names() {
+        let readme = "| `--batch K` / `INVAREXPLORE_BATCH` | per round | `1` |\n\
+                      Override with `INVAREXPLORE_SIMD=scalar|sse2|avx2`.\n\
+                      `SERVE_SPEC=k` turns on speculation; `KV_PAGE = 16`.\n";
+        let d = documented_vars(readme);
+        assert!(d.contains("INVAREXPLORE_BATCH"));
+        assert!(d.contains("INVAREXPLORE_SIMD"));
+        assert!(d.contains("SERVE_SPEC"));
+        assert!(d.contains("KV_PAGE"));
+    }
+
+    #[test]
+    fn artifact_names_and_prose_do_not_document() {
+        let readme = "uploads `BENCH_<suite>.json`; see `TokenSink` and `CI`.\n";
+        assert!(documented_vars(readme).is_empty());
+    }
+
+    #[test]
+    fn documented_read_is_clean() {
+        let src = "fn f() -> bool {\n    std::env::var(\"SERVE_SMOKE\").is_ok()\n}\n";
+        assert!(check_source("src/x.rs", src, &docs(&["SERVE_SMOKE"])).is_empty());
+    }
+
+    #[test]
+    fn undocumented_read_flagged_with_name_and_line() {
+        let src = "fn f() -> bool {\n    std::env::var(\"SERVE_SMOKE\").is_ok()\n}\n";
+        let v = check_source("src/x.rs", src, &docs(&[]));
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "undocumented-env-knob");
+        assert_eq!(v[0].line, 2);
+        assert_eq!(v[0].snippet, "SERVE_SMOKE");
+    }
+
+    #[test]
+    fn wrapper_calls_are_in_scope() {
+        let src = "fn f() -> usize {\n    env_override(\"SERVE_KNOB\", 1usize)\n}\n";
+        let v = check_source("src/x.rs", src, &docs(&[]));
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].snippet, "SERVE_KNOB");
+    }
+
+    #[test]
+    fn dynamic_name_needs_env_doc_tag() {
+        let bad = "pub fn get(name: &str) -> Option<String> {\n    std::env::var(name).ok()\n}\n";
+        let v = check_source("src/x.rs", bad, &docs(&[]));
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "unnamed-env-read");
+        let ok = "pub fn get(name: &str) -> Option<String> {\n    \
+                  // ENV-DOC: generic accessor; callers name the knob\n    \
+                  std::env::var(name).ok()\n}\n";
+        assert!(check_source("src/x.rs", ok, &docs(&[])).is_empty());
+    }
+
+    #[test]
+    fn empty_env_doc_justification_rejected() {
+        let src = "fn f() {\n    // ENV-DOC:\n    let _ = std::env::var(\"SERVE_X\");\n}\n";
+        assert_eq!(check_source("src/x.rs", src, &docs(&[])).len(), 1);
+    }
+
+    #[test]
+    fn test_regions_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f() { let _ = std::env::var(\"SCRATCH_VAR\"); }\n}\n";
+        assert!(check_source("src/x.rs", src, &docs(&[])).is_empty());
+    }
+
+    #[test]
+    fn token_inside_string_not_a_site() {
+        let src = "fn f() { let s = \"std::env::var(FOO_BAR)\"; }\n";
+        assert!(check_source("src/x.rs", src, &docs(&[])).is_empty());
+    }
+
+    #[test]
+    fn turbofish_call_is_a_site() {
+        let src = "fn f() -> Option<usize> {\n    \
+                   crate::util::cli::env_parse::<usize>(\"SERVE_TURBO\")\n}\n";
+        let v = check_source("src/x.rs", src, &docs(&[]));
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].snippet, "SERVE_TURBO");
+        assert!(check_source("src/x.rs", src, &docs(&["SERVE_TURBO"])).is_empty());
+    }
+
+    #[test]
+    fn use_import_is_not_a_site() {
+        let src = "use crate::util::cli::env_override;\n";
+        assert!(check_source("src/x.rs", src, &docs(&[])).is_empty());
+    }
+
+    #[test]
+    fn remove_and_set_var_not_sites() {
+        let src = "fn f() { std::env::remove_var(\"A_B\"); std::env::set_var(\"A_B\", \"1\"); }\n";
+        assert!(check_source("src/x.rs", src, &docs(&[])).is_empty());
+    }
+}

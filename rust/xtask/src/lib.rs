@@ -5,8 +5,10 @@
 //! section for the rule catalogue and annotation grammar.
 
 pub mod audit;
+pub mod envdoc;
 pub mod lexer;
 pub mod lint;
+pub mod mdlint;
 
 use std::path::PathBuf;
 

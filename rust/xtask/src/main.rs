@@ -11,6 +11,12 @@ usage: cargo xtask <command>
 commands:
   lint [--root DIR]...        run the invariant lints (default roots:
                               src, benches, xla-stub/src, xtask/src)
+  envdoc [--root DIR]...      fail on env-var reads not documented in the
+                              README env-knob table (default roots: src,
+                              benches)
+  mdlint                      markdown hygiene: dead relative links and
+                              untagged code fences in README.md,
+                              CONTRIBUTING.md and docs/*.md
   audit                       print the unsafe/panic/cast audit as JSON
   audit --write               regenerate rust/AUDIT.json static counters
   audit --check-baseline      fail if the surface regressed vs rust/AUDIT.json
@@ -20,6 +26,8 @@ fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
         Some("lint") => cmd_lint(&args[1..]),
+        Some("envdoc") => cmd_envdoc(&args[1..]),
+        Some("mdlint") => cmd_mdlint(&args[1..]),
         Some("audit") => cmd_audit(&args[1..]),
         _ => {
             eprint!("{USAGE}");
@@ -65,6 +73,85 @@ fn cmd_lint(args: &[String]) -> ExitCode {
         ExitCode::SUCCESS
     } else {
         println!("xtask lint: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn cmd_envdoc(args: &[String]) -> ExitCode {
+    let base = workspace_root();
+    let mut roots: Vec<PathBuf> = Vec::new();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => match it.next() {
+                Some(dir) => roots.push(PathBuf::from(dir)),
+                None => {
+                    eprintln!("--root needs a directory argument");
+                    return ExitCode::from(2);
+                }
+            },
+            other => {
+                eprintln!("unknown envdoc argument: {other}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    if roots.is_empty() {
+        roots = xtask::envdoc::default_roots();
+    }
+    let readme_path = xtask::envdoc::readme_path();
+    let readme = match std::fs::read_to_string(&readme_path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("envdoc: cannot read {}: {e}", readme_path.display());
+            return ExitCode::from(2);
+        }
+    };
+    let documented = xtask::envdoc::documented_vars(&readme);
+    let violations = match xtask::envdoc::check_tree(&base, &roots, &documented) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("envdoc: io error: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    for v in &violations {
+        println!("{v}");
+    }
+    if violations.is_empty() {
+        println!("xtask envdoc: every env knob documented ({} known)", documented.len());
+        ExitCode::SUCCESS
+    } else {
+        println!(
+            "xtask envdoc: {} undocumented env read(s) — add the variable to the \
+             README env-knob table or justify the site with // ENV-DOC: <why>",
+            violations.len()
+        );
+        ExitCode::FAILURE
+    }
+}
+
+fn cmd_mdlint(args: &[String]) -> ExitCode {
+    if !args.is_empty() {
+        eprintln!("mdlint takes no arguments");
+        return ExitCode::from(2);
+    }
+    let docs = xtask::mdlint::default_docs();
+    let violations = match xtask::mdlint::check_docs(&docs) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("mdlint: io error: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    for v in &violations {
+        println!("{v}");
+    }
+    if violations.is_empty() {
+        println!("xtask mdlint: {} document(s) clean", docs.len());
+        ExitCode::SUCCESS
+    } else {
+        println!("xtask mdlint: {} violation(s)", violations.len());
         ExitCode::FAILURE
     }
 }

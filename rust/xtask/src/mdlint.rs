@@ -1,0 +1,170 @@
+//! `cargo xtask mdlint` — hygiene for the operator-facing markdown.
+//!
+//! Two rules over `README.md`, `CONTRIBUTING.md` and everything under
+//! `docs/`:
+//!
+//! * `untagged-code-fence` — every *opening* ``` fence must name a
+//!   language (` ```sh `, ` ```text `, …) so renderers highlight and
+//!   tooling can extract runnable blocks;
+//! * `dead-relative-link` — every relative `[text](path)` target must
+//!   exist on disk, resolved against the document's own directory
+//!   (fragments are stripped; `http(s)://`, `mailto:` and `#anchor`
+//!   links are out of scope).
+//!
+//! Link targets inside fenced code blocks are ignored.
+
+use std::path::{Path, PathBuf};
+
+use crate::lint::Violation;
+
+/// The documents checked by default: repo README, CONTRIBUTING, and
+/// every `.md` under `docs/`, sorted for deterministic output.
+pub fn default_docs() -> Vec<PathBuf> {
+    let repo = repo_root();
+    let mut docs = vec![repo.join("README.md"), repo.join("CONTRIBUTING.md")];
+    if let Ok(rd) = std::fs::read_dir(repo.join("docs")) {
+        let mut extra: Vec<PathBuf> = rd
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("md"))
+            .collect();
+        extra.sort();
+        docs.extend(extra);
+    }
+    docs
+}
+
+/// Repo root: one level above the cargo workspace.
+pub fn repo_root() -> PathBuf {
+    match crate::workspace_root().parent() {
+        Some(repo) => repo.to_path_buf(),
+        None => PathBuf::from("."),
+    }
+}
+
+/// Check one markdown document. `rel` is the diagnostic path; `dir` is
+/// the directory relative links resolve against.
+pub fn check_markdown(rel: &str, text: &str, dir: &Path) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let mut in_fence = false;
+    for (idx, line) in text.lines().enumerate() {
+        let t = line.trim_start();
+        if t.starts_with("```") {
+            if !in_fence && t.trim_start_matches('`').trim().is_empty() {
+                out.push(violation(rel, idx, "untagged-code-fence", t));
+            }
+            in_fence = !in_fence;
+            continue;
+        }
+        if in_fence {
+            continue;
+        }
+        for target in link_targets(line) {
+            if !is_relative(target) {
+                continue;
+            }
+            // strip the fragment: `docs/X.md#section` checks `docs/X.md`
+            let path = target.split(['#', '?']).next().unwrap_or("");
+            if !path.is_empty() && !dir.join(path).exists() {
+                out.push(violation(rel, idx, "dead-relative-link", target));
+            }
+        }
+    }
+    out
+}
+
+/// Check every document in `docs`; diagnostic paths are repo-relative.
+pub fn check_docs(docs: &[PathBuf]) -> std::io::Result<Vec<Violation>> {
+    let repo = repo_root();
+    let mut all = Vec::new();
+    for doc in docs {
+        let rel = doc.strip_prefix(&repo).unwrap_or(doc);
+        let rel = rel.to_string_lossy().replace('\\', "/");
+        let text = std::fs::read_to_string(doc)?;
+        let dir = doc.parent().unwrap_or(Path::new("."));
+        all.extend(check_markdown(&rel, &text, dir));
+    }
+    Ok(all)
+}
+
+fn violation(rel: &str, idx: usize, rule: &'static str, snippet: &str) -> Violation {
+    let mut s: String = snippet.trim().chars().take(60).collect();
+    if snippet.trim().chars().count() > 60 {
+        s.push_str("...");
+    }
+    Violation { file: rel.to_string(), line: idx + 1, rule, snippet: s }
+}
+
+/// Every `](target)` on the line, in order.
+fn link_targets(line: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    while let Some(off) = line[start..].find("](") {
+        let open = start + off + 2;
+        match line[open..].find(')') {
+            Some(close) => {
+                out.push(line[open..open + close].trim());
+                start = open + close + 1;
+            }
+            None => break,
+        }
+    }
+    out
+}
+
+fn is_relative(target: &str) -> bool {
+    !(target.is_empty()
+        || target.starts_with('#')
+        || target.starts_with("http://")
+        || target.starts_with("https://")
+        || target.starts_with("mailto:"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn untagged_opening_fence_flagged_closing_not() {
+        let md = "intro\n```\ncode\n```\n\n```sh\nls\n```\n";
+        let v = check_markdown("X.md", md, Path::new("."));
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "untagged-code-fence");
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn dead_relative_link_flagged_with_target() {
+        let md = "see [the plan](no/such/file.md) for details\n";
+        let v = check_markdown("X.md", md, &repo_root());
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "dead-relative-link");
+        assert_eq!(v[0].snippet, "no/such/file.md");
+    }
+
+    #[test]
+    fn live_relative_link_and_fragment_clean() {
+        let md = "[crate](rust/src/lib.rs) and [same](rust/src/lib.rs#L1)\n";
+        assert!(check_markdown("X.md", md, &repo_root()).is_empty());
+    }
+
+    #[test]
+    fn absolute_and_anchor_links_out_of_scope() {
+        let md = "[a](https://example.com/x.md) [b](#section) [c](mailto:x@y.z)\n";
+        assert!(check_markdown("X.md", md, Path::new("/nonexistent")).is_empty());
+    }
+
+    #[test]
+    fn links_inside_fences_ignored() {
+        let md = "```text\n[not a link](missing.md)\n```\n";
+        assert!(check_markdown("X.md", md, Path::new("/nonexistent")).is_empty());
+    }
+
+    #[test]
+    fn two_links_on_one_line_both_checked() {
+        let md = "[a](gone1.md) then [b](gone2.md)\n";
+        let v = check_markdown("X.md", md, Path::new("/nonexistent"));
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[1].snippet, "gone2.md");
+    }
+}

@@ -1,0 +1,81 @@
+//! Integration tests for `cargo xtask envdoc` and `cargo xtask mdlint`.
+//!
+//! The envdoc fixture lives in its own `tests/fixtures/envdoc` tree (not
+//! `fixtures/bad`, whose total violation count is pinned) and is the same
+//! tree CI's negative check runs the binary against.
+
+use std::path::PathBuf;
+
+use xtask::envdoc;
+use xtask::mdlint;
+
+fn real_documented() -> std::collections::BTreeSet<String> {
+    let readme = std::fs::read_to_string(envdoc::readme_path()).expect("README readable");
+    envdoc::documented_vars(&readme)
+}
+
+#[test]
+fn readme_table_documents_the_core_knobs() {
+    let d = real_documented();
+    for name in [
+        "INVAREXPLORE_THREADS",
+        "INVAREXPLORE_TRACE",
+        "INVAREXPLORE_SIMD",
+        "SERVE_REPLICAS",
+        "SERVE_SHARDS",
+        "SERVE_SHED_WATERMARK",
+        "PERF_DIFF_THRESHOLD",
+    ] {
+        assert!(d.contains(name), "README env-knob table is missing `{name}`");
+    }
+}
+
+#[test]
+fn real_tree_envdoc_clean() {
+    // The acceptance bar: every env read in src/ and benches/ names a
+    // documented knob (or carries a per-site ENV-DOC justification).
+    let base = xtask::workspace_root();
+    let v = envdoc::check_tree(&base, &envdoc::default_roots(), &real_documented())
+        .expect("workspace readable");
+    assert!(v.is_empty(), "undocumented env reads: {v:#?}");
+}
+
+#[test]
+fn seeded_envdoc_fixture_fails_with_file_line() {
+    let base = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/envdoc");
+    let v = envdoc::check_tree(&base, &[base.join("src")], &real_documented())
+        .expect("fixture readable");
+    assert_eq!(v.len(), 2, "expected exactly the seeded violations: {v:#?}");
+    assert!(v
+        .iter()
+        .any(|x| x.file == "src/bad_env.rs"
+            && x.line == 6
+            && x.rule == "undocumented-env-knob"
+            && x.snippet == "FIXTURE_UNDOCUMENTED_KNOB"));
+    assert!(v
+        .iter()
+        .any(|x| x.file == "src/bad_env.rs" && x.line == 10 && x.rule == "unnamed-env-read"));
+}
+
+#[test]
+fn shipped_markdown_is_clean() {
+    let docs = mdlint::default_docs();
+    assert!(docs.len() >= 3, "expected README, CONTRIBUTING and docs/: {docs:#?}");
+    let v = mdlint::check_docs(&docs).expect("docs readable");
+    assert!(v.is_empty(), "markdown hygiene violations: {v:#?}");
+}
+
+#[test]
+fn architecture_doc_is_linked_and_checked() {
+    let docs = mdlint::default_docs();
+    assert!(
+        docs.iter().any(|d| d.ends_with("docs/ARCHITECTURE.md")),
+        "docs/ARCHITECTURE.md must be in the default mdlint set: {docs:#?}"
+    );
+    let readme =
+        std::fs::read_to_string(mdlint::repo_root().join("README.md")).expect("README readable");
+    assert!(
+        readme.contains("docs/ARCHITECTURE.md"),
+        "README must link the architecture overview"
+    );
+}

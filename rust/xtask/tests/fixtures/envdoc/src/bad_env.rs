@@ -1,0 +1,11 @@
+//! Seeded envdoc violations: knobs the README never documents.
+//! Lives outside `fixtures/bad` so the pinned lint-violation count
+//! there stays untouched — this tree is only scanned by `envdoc`.
+
+pub fn undocumented_knob() -> bool {
+    std::env::var("FIXTURE_UNDOCUMENTED_KNOB").is_ok()
+}
+
+pub fn unnamed_read(name: &str) -> Option<String> {
+    std::env::var(name).ok()
+}
