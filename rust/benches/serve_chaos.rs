@@ -1,0 +1,340 @@
+//! Chaos benchmark: the PR-9 trace-replay workload under deterministic
+//! fault injection ([`invarexplore::serve::fault`]), pinning the serving
+//! stack's fault-tolerance contract.
+//!
+//! Segments (each replays the same seeded MMPP/Zipf trace):
+//!
+//! 1. **Replica kill** — 4 replicas, the one that owns the most popular
+//!    prompt family is killed at round 2 of its scheduler run.  Asserts:
+//!    every request yields **exactly one** completion (zero lost, zero
+//!    duplicated), count-based goodput stays above 0.6× the no-fault run,
+//!    and every request the faults never touched is **bit-identical** to
+//!    the no-fault reference.
+//! 2. **Transient dispatch errors** — `transient=0.1` over 2 replicas;
+//!    same invariants, plus every `Failed` completion must be
+//!    fault-touched (no silent collateral damage).
+//! 3. **Stall + round budget** — request 0's decode stalls 150 ms against
+//!    a 40 ms per-round budget: it must finish `Failed` (mentioning the
+//!    budget) while every other request matches the reference.
+//! 4. **Optional extra plan** — `SERVE_CHAOS_EXTRA=<spec>` replays the
+//!    trace under an operator-supplied plan and checks the generic
+//!    invariants; the weekly verify workflow drives a higher-fault matrix
+//!    through this hook.
+//!
+//! Runs entirely on a synthetic random model — no artifacts needed.
+//! `--smoke` (or env `SERVE_CHAOS_SMOKE=1`) shrinks the trace and exits
+//! after the assertions — wired into CI.
+
+use std::collections::BTreeSet;
+use std::time::Instant;
+
+use invarexplore::model::{OptConfig, Weights};
+use invarexplore::quant::{BitAllocation, QuantScheme};
+use invarexplore::serve::{
+    Completion, FaultPlan, FinishReason, PackedModel, Request, Router, RouterOpts, RouterStats,
+    ServeOpts,
+};
+use invarexplore::util::bench::{BenchSuite, Stats};
+use invarexplore::util::rng::Pcg64;
+use invarexplore::util::sampling::Sampler;
+
+fn bench_config(smoke: bool) -> OptConfig {
+    if smoke {
+        OptConfig::test_config()
+    } else {
+        OptConfig {
+            name: "chaos".into(),
+            vocab: 512,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 8,
+            d_ffn: 512,
+            max_seq: 128,
+        }
+    }
+}
+
+/// Zipf(s)-distributed rank in `1..=n` via inverse-CDF over the exact
+/// (small-n) normalization.
+fn zipf(rng: &mut Pcg64, n: usize, s: f64) -> usize {
+    let norm: f64 = (1..=n).map(|k| (k as f64).powf(-s)).sum();
+    let mut u = rng.uniform() * norm;
+    for k in 1..=n {
+        u -= (k as f64).powf(-s);
+        if u <= 0.0 {
+            return k;
+        }
+    }
+    n
+}
+
+/// Knuth Poisson sampler (λ small enough for the product method).
+fn poisson(rng: &mut Pcg64, lambda: f64) -> usize {
+    let l = (-lambda).exp();
+    let mut k = 0usize;
+    let mut p = 1.0;
+    loop {
+        p *= rng.uniform();
+        if p <= l {
+            return k;
+        }
+        k += 1;
+    }
+}
+
+/// One request spec: `(id, prompt, max_new)`.
+type Spec = (usize, Vec<i32>, usize);
+
+/// The replay trace: requests grouped into arrival waves.
+struct Trace {
+    waves: Vec<Vec<Spec>>,
+    total: usize,
+}
+
+/// Build the trace: `n_waves` MMPP arrival waves over `families` shared
+/// system prompts with Zipf popularity and Zipf-tailed suffix lengths
+/// (same generator shape as `serve_trace_replay`; benches are separate
+/// crate roots, so the helper is duplicated rather than shared).
+fn build_trace(cfg: &OptConfig, n_waves: usize, families: usize, seed: u64) -> Trace {
+    let mut rng = Pcg64::new(seed);
+    let shared_len = cfg.max_seq / 4;
+    let prefixes: Vec<Vec<i32>> = (0..families)
+        .map(|_| (0..shared_len).map(|_| rng.below(cfg.vocab) as i32).collect())
+        .collect();
+    let (lambda_calm, lambda_burst) = (2.0, 6.0);
+    let mut burst = false;
+    let mut id = 0usize;
+    let max_suffix = cfg.max_seq / 4;
+    let mut waves = Vec::with_capacity(n_waves);
+    for _ in 0..n_waves {
+        if rng.uniform() < if burst { 0.4 } else { 0.25 } {
+            burst = !burst;
+        }
+        let lambda = if burst { lambda_burst } else { lambda_calm };
+        let arrivals = 1 + poisson(&mut rng, lambda);
+        let mut wave = Vec::with_capacity(arrivals);
+        for _ in 0..arrivals {
+            let fam = zipf(&mut rng, families, 1.2) - 1;
+            let mut prompt = prefixes[fam].clone();
+            let suffix = zipf(&mut rng, max_suffix, 1.1);
+            prompt.extend((0..suffix).map(|_| rng.below(cfg.vocab) as i32));
+            let max_new = 1 + zipf(&mut rng, (cfg.max_seq / 8).max(2), 1.1);
+            wave.push((id, prompt, max_new));
+            id += 1;
+        }
+        waves.push(wave);
+    }
+    Trace { waves, total: id }
+}
+
+fn request_of(spec: &Spec) -> Request {
+    let sampler = if spec.0 % 2 == 0 {
+        Sampler::Greedy
+    } else {
+        Sampler::TopK { k: 4, temperature: 0.9 }
+    };
+    Request::new(spec.0, spec.1.clone(), spec.2, sampler)
+}
+
+/// Replay the whole trace through a router, one `run` per arrival wave.
+fn replay(router: &mut Router<'_, PackedModel>, trace: &Trace) -> (Vec<Completion>, RouterStats) {
+    let mut done = Vec::with_capacity(trace.total);
+    let mut stats = RouterStats::default();
+    for wave in &trace.waves {
+        for spec in wave {
+            router.submit(request_of(spec));
+        }
+        let (d, s) = router.run();
+        done.extend(d);
+        stats = s;
+    }
+    done.sort_by_key(|c| c.id);
+    (done, stats)
+}
+
+fn served_ok(c: &Completion) -> bool {
+    matches!(c.finish, FinishReason::Length | FinishReason::Stop)
+}
+
+/// The chaos contract every fault segment must satisfy:
+/// exactly one completion per submitted request, every `Failed` completion
+/// fault-touched, and every untouched request bit-identical to the
+/// no-fault reference.  Returns the count served successfully.
+fn assert_chaos_invariants(
+    tag: &str,
+    done: &[Completion],
+    stats: &RouterStats,
+    reference: &[Completion],
+) -> usize {
+    assert_eq!(
+        done.len(),
+        reference.len(),
+        "{tag}: {} completions for {} requests (lost or duplicated work)",
+        done.len(),
+        reference.len()
+    );
+    for (i, c) in done.iter().enumerate() {
+        // sorted by id with one entry per id 0..n pins exactly-once
+        assert_eq!(c.id, i, "{tag}: request {i} missing or duplicated");
+    }
+    let touched: BTreeSet<usize> = stats.fault_touched.iter().copied().collect();
+    for c in done {
+        if matches!(c.finish, FinishReason::Failed(_)) {
+            assert!(
+                touched.contains(&c.id),
+                "{tag}: request {} failed without ever being fault-touched",
+                c.id
+            );
+        }
+        if !touched.contains(&c.id) {
+            assert_eq!(
+                c, &reference[c.id],
+                "{tag}: untouched request {} diverged from the no-fault reference",
+                c.id
+            );
+        }
+    }
+    done.iter().filter(|c| served_ok(c)).count()
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("SERVE_CHAOS_SMOKE").as_deref() == Ok("1");
+    let cfg = bench_config(smoke);
+    let w = Weights::random(cfg.clone(), 1);
+    let pm = PackedModel::from_allocation(w, &BitAllocation::uniform(QuantScheme::new(2, 32)))
+        .expect("packed model builds");
+    let (n_waves, families) = if smoke { (4, 3) } else { (12, 4) };
+    let trace = build_trace(&cfg, n_waves, families, 4242);
+    println!(
+        "== serve_chaos: {} ({} requests over {} MMPP waves, {} system prompts{}) ==",
+        cfg.name,
+        trace.total,
+        trace.waves.len(),
+        families,
+        if smoke { ", SMOKE" } else { "" }
+    );
+    let mut suite = BenchSuite::new("serve_chaos");
+    let serve = ServeOpts { max_batch: 4, prefix_cache: true, ..Default::default() };
+    let router_opts = |replicas: usize| RouterOpts {
+        replicas,
+        affinity_tokens: cfg.max_seq / 4,
+        retry_backoff_ms: 0,
+        ..Default::default()
+    };
+
+    // ---- no-fault reference (4 replicas) ----------------------------------
+    let (reference, ref_served) = {
+        let mut router = Router::new(&pm, router_opts(4), serve);
+        let t0 = Instant::now();
+        let (done, stats) = replay(&mut router, &trace);
+        let wall = t0.elapsed();
+        assert_eq!(done.len(), trace.total);
+        assert_eq!(stats.replica_deaths, 0);
+        let served = done.iter().filter(|c| served_ok(c)).count();
+        assert_eq!(served, trace.total, "no-fault run must serve everything");
+        suite.record("no-fault replay wall time", Stats::one_shot(wall));
+        println!("no-fault reference: {served}/{} served in {wall:.1?}", trace.total);
+        (done, served)
+    };
+
+    // ---- segment 1: kill 1 of 4 replicas mid-run --------------------------
+    {
+        // the victim is the home of the trace's first (most popular family)
+        // prompt, so it is guaranteed to hold work when the kill fires
+        let victim =
+            Router::new(&pm, router_opts(4), serve).affinity_replica(&trace.waves[0][0].1);
+        let plan = FaultPlan::parse(&format!("seed=11,kill={victim}@2")).expect("valid plan");
+        let mut router = Router::new(&pm, router_opts(4), serve).with_fault_plan(plan);
+        let t0 = Instant::now();
+        let (done, stats) = replay(&mut router, &trace);
+        let wall = t0.elapsed();
+        assert_eq!(stats.replica_deaths, 1, "replica {victim} must die exactly once");
+        assert!(stats.redispatched > 0, "the dead replica's work must redispatch");
+        let served = assert_chaos_invariants("kill", &done, &stats, &reference);
+        // goodput is counted in successfully served requests, so the bound
+        // is a property of recovery, not machine speed
+        assert!(
+            served as f64 >= 0.6 * ref_served as f64,
+            "kill goodput collapsed: {served}/{ref_served} served"
+        );
+        suite.record("kill replay wall time", Stats::one_shot(wall));
+        suite.set_counter("kill_served", served as f64);
+        suite.set_counter("kill_redispatched", stats.redispatched as f64);
+        suite.set_counter("kill_failed", stats.failed_requests as f64);
+        println!(
+            "kill replica {victim}@2: {served}/{} served, {} redispatched, {} failed \
+             ({wall:.1?})",
+            trace.total, stats.redispatched, stats.failed_requests
+        );
+    }
+
+    // ---- segment 2: transient dispatch errors -----------------------------
+    {
+        let plan = FaultPlan::parse("seed=12,transient=0.1").expect("valid plan");
+        let mut router = Router::new(&pm, router_opts(2), serve).with_fault_plan(plan);
+        let (done, stats) = replay(&mut router, &trace);
+        let served = assert_chaos_invariants("transient", &done, &stats, &reference);
+        assert!(
+            served as f64 >= 0.6 * ref_served as f64,
+            "transient goodput collapsed: {served}/{ref_served} served"
+        );
+        suite.set_counter("transient_served", served as f64);
+        suite.set_counter("transient_retries", stats.redispatched as f64);
+        println!(
+            "transient p=0.1: {served}/{} served, {} retries, {} failed",
+            trace.total, stats.redispatched, stats.failed_requests
+        );
+    }
+
+    // ---- segment 3: stall + per-round wall-clock budget -------------------
+    {
+        // request 0's decode sleeps 150 ms at its round 1 against a 40 ms
+        // budget (stalls match by request id, so this fires exactly once;
+        // margins wide on both sides for noisy CI boxes)
+        let plan = FaultPlan::parse("seed=13,stall=0@1x150").expect("valid plan");
+        let budget = ServeOpts { round_budget_ms: Some(40), ..serve };
+        let mut router = Router::new(&pm, router_opts(1), budget).with_fault_plan(plan);
+        let (done, _stats) = replay(&mut router, &trace);
+        assert_eq!(done.len(), trace.total);
+        match &done[0].finish {
+            FinishReason::Failed(msg) => {
+                assert!(msg.contains("round budget"), "unexpected failure: {msg}")
+            }
+            other => panic!("stalled request 0 must fail the round budget, got {other:?}"),
+        }
+        for c in done.iter().skip(1) {
+            assert_eq!(c, &reference[c.id], "stall leaked into request {}", c.id);
+        }
+        // round-budget failures are scheduler-level (cumulative in the
+        // replica metrics), not router retry exhaustion
+        let engine_failed = router.replica_metrics(0).failed;
+        assert_eq!(engine_failed, 1, "exactly the stalled request blows the budget");
+        suite.set_counter("stall_failed", engine_failed as f64);
+        println!("stall 150ms vs 40ms budget: request 0 failed cleanly, rest bit-identical");
+    }
+
+    // ---- segment 4: operator-supplied extra plan (verify matrix hook) -----
+    if let Ok(spec) = std::env::var("SERVE_CHAOS_EXTRA") {
+        if !spec.trim().is_empty() {
+            let plan = FaultPlan::parse(&spec).expect("SERVE_CHAOS_EXTRA parses");
+            let mut router = Router::new(&pm, router_opts(4), serve).with_fault_plan(plan);
+            let (done, stats) = replay(&mut router, &trace);
+            let served = assert_chaos_invariants("extra", &done, &stats, &reference);
+            println!(
+                "extra plan {spec:?}: {served}/{} served, {} deaths, {} redispatched, \
+                 {} failed — invariants hold",
+                trace.total, stats.replica_deaths, stats.redispatched, stats.failed_requests
+            );
+            suite.set_counter("extra_served", served as f64);
+            suite.set_counter("extra_replica_deaths", stats.replica_deaths as f64);
+        }
+    }
+
+    println!(
+        "ok: zero lost/duplicated completions under kills, transients and stalls; \
+         untouched requests bit-identical to the no-fault reference"
+    );
+    let out = suite.write_json(std::path::Path::new(".")).expect("write BENCH json");
+    println!("chaos trajectory written to {}", out.display());
+}

@@ -31,7 +31,10 @@ common options: --model, --method, --scheme (e.g. 2x64), --steps, --seed,
 --kv-dtype (KV-cache storage f32|int8|int4 for `serve`; env SERVE_KV_DTYPE),
 --replicas / --shards / --shed-watermark (multi-replica routing and
 tensor-parallel sharding for `serve`; envs SERVE_REPLICAS, SERVE_SHARDS,
-SERVE_SHED_WATERMARK — see README \"Sharded serving\")
+SERVE_SHED_WATERMARK — see README \"Sharded serving\"),
+--fault-plan / --round-budget-ms / --drain (fault injection, per-round
+wall-clock budget and graceful drain for `serve`; envs SERVE_FAULT_PLAN,
+SERVE_ROUND_BUDGET_MS — see README \"Fault tolerance\")
 run `invarexplore <command> --help` for details.
 ";
 
@@ -66,6 +69,9 @@ fn common_spec() -> Vec<ArgSpec> {
         ArgSpec { name: "replicas", help: "serve: scheduler replicas behind the prefix-affinity router (default: $SERVE_REPLICAS or 1)", default: None, is_flag: false },
         ArgSpec { name: "shards", help: "serve: tensor-parallel row shards of the packed model, bit-identical at any count (default: $SERVE_SHARDS or 1)", default: None, is_flag: false },
         ArgSpec { name: "shed-watermark", help: "serve: per-replica queued-request watermark past which no-deadline requests are shed; 0 = never shed (default: $SERVE_SHED_WATERMARK or 0)", default: None, is_flag: false },
+        ArgSpec { name: "fault-plan", help: "serve: deterministic fault-injection spec, e.g. seed=42,kill=1@3,transient=0.05,stall=7@2x40 (default: $SERVE_FAULT_PLAN or none)", default: None, is_flag: false },
+        ArgSpec { name: "round-budget-ms", help: "serve: per-round wall-clock budget in ms; a slot whose decode round blows it finishes Failed; 0 = unbounded (default: $SERVE_ROUND_BUDGET_MS or 0)", default: None, is_flag: false },
+        ArgSpec { name: "drain", help: "serve: graceful drain — stop admission after submitting the synthetic traffic, finish in-flight work and print the drain summary", default: None, is_flag: true },
         ArgSpec { name: "trace-out", help: "write a Chrome trace (chrome://tracing JSON) of this run to PATH and print Prometheus metrics (default: $INVAREXPLORE_TRACE=PATH)", default: None, is_flag: false },
         ArgSpec { name: "help", help: "show options", default: None, is_flag: true },
     ]
@@ -498,6 +504,17 @@ fn cmd_serve(a: &Args) -> crate::Result<i32> {
             .map_err(|_| anyhow::anyhow!("bad --shed-watermark {v:?} (want a queue depth)"))?,
         None => crate::util::cli::env_override("SERVE_SHED_WATERMARK", 0usize),
     };
+    let fault_plan = match a.get("fault-plan") {
+        Some(v) => Some(crate::serve::FaultPlan::parse(v)?),
+        None => crate::serve::FaultPlan::from_env()?,
+    }
+    .filter(|p| !p.is_empty());
+    let round_budget_ms = match a.get("round-budget-ms") {
+        Some(v) => v
+            .parse::<u64>()
+            .map_err(|_| anyhow::anyhow!("bad --round-budget-ms {v:?} (want milliseconds)"))?,
+        None => crate::util::cli::env_override("SERVE_ROUND_BUDGET_MS", 0u64),
+    };
 
     let draft_alloc = match a
         .get("draft-alloc")
@@ -533,6 +550,7 @@ fn cmd_serve(a: &Args) -> crate::Result<i32> {
         prefix_cache: true,
         spec,
         kv_dtype,
+        round_budget_ms: (round_budget_ms > 0).then_some(round_budget_ms),
         ..Default::default()
     };
     if kv_dtype != crate::model::native::KvDtype::F32 {
@@ -554,6 +572,10 @@ fn cmd_serve(a: &Args) -> crate::Result<i32> {
     let mut router = Router::new(params, router_opts, serve_opts);
     if let Some(d) = &draft {
         router = router.with_draft(d);
+    }
+    if let Some(plan) = fault_plan {
+        println!("fault injection armed: {plan:?}");
+        router = router.with_fault_plan(plan);
     }
 
     // synthetic shared-prefix wiki traffic (two prompt families, so the
@@ -580,7 +602,22 @@ fn cmd_serve(a: &Args) -> crate::Result<i32> {
         router.submit(Request::new(i, prompt, max_new, sampler));
     }
 
-    let (completions, rstats) = router.run();
+    let (completions, rstats) = if a.flag("drain") {
+        let d = router.shutdown();
+        println!("drain: {}", d.summary());
+        (d.completions, d.stats)
+    } else {
+        router.run()
+    };
+    if rstats.replica_deaths > 0 {
+        println!(
+            "supervision: {} replica death(s), {} redispatched, {} failed, {} live replica(s)",
+            rstats.replica_deaths,
+            rstats.redispatched,
+            rstats.failed_requests,
+            router.live_replicas()
+        );
+    }
     if replicas > 1 || shed_watermark > 0 {
         println!(
             "router: {} submitted — {} affinity, {} balanced, {} spilled, {} shed (rate {:.2})",

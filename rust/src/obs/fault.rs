@@ -1,0 +1,220 @@
+//! Fault-handling telemetry: injected-fault and recovery counters for the
+//! serving stack's supervision layer.
+//!
+//! `serve::router`'s supervision (and `serve::fault`'s injectors) report
+//! every event here *after* acting on it, so recording can never influence
+//! recovery decisions.  Like every `obs` module this is gated on
+//! [`crate::obs::enabled`] — one relaxed atomic load when tracing is off.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// One fault-handling event in the serving stack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// A replica thread died (panicked) during a router run.
+    ReplicaDeath,
+    /// An orphaned (or transiently-refused) request was resubmitted to a
+    /// surviving replica.
+    Redispatch,
+    /// An injected transient fault refused one dispatch attempt.
+    TransientInjected,
+    /// An injected stall delayed one slot's decode round.
+    StallInjected,
+    /// A request exhausted its retry budget and finished `Failed`.
+    RequestFailed,
+    /// A queued request's deadline expired and it finished `TimedOut`.
+    RequestTimedOut,
+}
+
+impl FaultEvent {
+    /// Short stable label (metrics / JSON field values).
+    pub fn label(self) -> &'static str {
+        match self {
+            FaultEvent::ReplicaDeath => "replica_death",
+            FaultEvent::Redispatch => "redispatch",
+            FaultEvent::TransientInjected => "transient_injected",
+            FaultEvent::StallInjected => "stall_injected",
+            FaultEvent::RequestFailed => "request_failed",
+            FaultEvent::RequestTimedOut => "request_timed_out",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            FaultEvent::ReplicaDeath => 0,
+            FaultEvent::Redispatch => 1,
+            FaultEvent::TransientInjected => 2,
+            FaultEvent::StallInjected => 3,
+            FaultEvent::RequestFailed => 4,
+            FaultEvent::RequestTimedOut => 5,
+        }
+    }
+}
+
+/// Every [`FaultEvent`], in `idx` order (snapshot/JSON/Prometheus order).
+pub const FAULT_EVENTS: [FaultEvent; 6] = [
+    FaultEvent::ReplicaDeath,
+    FaultEvent::Redispatch,
+    FaultEvent::TransientInjected,
+    FaultEvent::StallInjected,
+    FaultEvent::RequestFailed,
+    FaultEvent::RequestTimedOut,
+];
+
+const N_EVENTS: usize = FAULT_EVENTS.len();
+
+/// The counter state itself — instantiable so tests can exercise the exact
+/// arithmetic on a private instance while production code shares one gated
+/// global.
+struct Counters {
+    events: [AtomicU64; N_EVENTS],
+}
+
+impl Counters {
+    const fn new() -> Counters {
+        Counters {
+            events: [
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+            ],
+        }
+    }
+
+    fn record(&self, event: FaultEvent) {
+        self.events[event.idx()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> FaultSnapshot {
+        let mut s = FaultSnapshot::default();
+        for (dst, src) in s.events.iter_mut().zip(&self.events) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        s
+    }
+
+    fn reset(&self) {
+        for c in &self.events {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+static GLOBAL: Counters = Counters::new();
+
+/// Record one fault-handling event.  Gated: free (one relaxed load) when
+/// tracing is off; emits a `fault.replica_deaths` counter sample when on
+/// and a replica died (the signal dashboards page on).
+pub fn record_fault(event: FaultEvent) {
+    if !super::enabled() {
+        return;
+    }
+    GLOBAL.record(event);
+    if event == FaultEvent::ReplicaDeath {
+        let deaths = GLOBAL.snapshot().count_of(FaultEvent::ReplicaDeath);
+        super::trace::counter("fault", "replica_deaths", deaths as f64);
+    }
+}
+
+/// Point-in-time copy of the fault-handling counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultSnapshot {
+    /// Indexed like [`FaultEvent::label`]s in [`FAULT_EVENTS`] order.
+    pub events: [u64; N_EVENTS],
+}
+
+impl FaultSnapshot {
+    /// Occurrences of `event`.
+    pub fn count_of(&self, event: FaultEvent) -> u64 {
+        self.events[event.idx()]
+    }
+
+    /// All fault events recorded.
+    pub fn total(&self) -> u64 {
+        self.events.iter().sum()
+    }
+
+    /// One key per [`FaultEvent`] label.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        for e in FAULT_EVENTS {
+            j = j.set(e.label(), self.count_of(e) as usize);
+        }
+        j
+    }
+}
+
+/// Read the global fault counters.
+pub fn snapshot() -> FaultSnapshot {
+    GLOBAL.snapshot()
+}
+
+/// Zero the global fault counters (test/run isolation).
+pub fn reset() {
+    GLOBAL.reset()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_records_nothing_globally() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(false);
+        reset();
+        record_fault(FaultEvent::ReplicaDeath);
+        record_fault(FaultEvent::Redispatch);
+        assert_eq!(snapshot(), FaultSnapshot::default());
+    }
+
+    #[test]
+    fn per_event_counts_and_json() {
+        // a private instance: exact counts without racing other tests on
+        // the gated global
+        let c = Counters::new();
+        c.record(FaultEvent::ReplicaDeath);
+        c.record(FaultEvent::Redispatch);
+        c.record(FaultEvent::Redispatch);
+        c.record(FaultEvent::RequestTimedOut);
+        let s = c.snapshot();
+        assert_eq!(s.count_of(FaultEvent::ReplicaDeath), 1);
+        assert_eq!(s.count_of(FaultEvent::Redispatch), 2);
+        assert_eq!(s.count_of(FaultEvent::StallInjected), 0);
+        assert_eq!(s.total(), 4);
+        let j = s.to_json();
+        assert_eq!(j.get("redispatch").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("request_timed_out").unwrap().as_usize(), Some(1));
+        assert!(crate::util::json::parse(&j.to_string()).is_ok());
+        c.reset();
+        assert_eq!(c.snapshot(), FaultSnapshot::default());
+    }
+
+    #[test]
+    fn labels_are_unique_and_stable() {
+        let labels: Vec<&str> = FAULT_EVENTS.iter().map(|e| e.label()).collect();
+        let mut dedup = labels.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), labels.len(), "duplicate fault labels");
+        assert_eq!(labels[0], "replica_death");
+    }
+
+    #[test]
+    fn enabled_global_samples_death_counter() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(true);
+        super::super::trace::clear();
+        reset();
+        record_fault(FaultEvent::ReplicaDeath);
+        crate::obs::set_enabled(false);
+        assert!(snapshot().count_of(FaultEvent::ReplicaDeath) >= 1);
+        assert!(super::super::trace::take_events().iter().any(|e| e.name == "replica_deaths"));
+        reset();
+    }
+}

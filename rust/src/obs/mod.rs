@@ -18,6 +18,8 @@
 //!   acceptance rate for the discrete search drivers;
 //! - [`router`] — routing-decision counters (affinity / balanced /
 //!   spillover / shed) for the multi-replica serving front-end;
+//! - [`fault`] — supervision counters (replica deaths, redispatches,
+//!   injected faults) for the fault-tolerance layer;
 //! - [`chrome`] — Chrome trace-event-format JSON export
 //!   (`chrome://tracing` / Perfetto loadable) via [`crate::util::json`];
 //! - [`prometheus`] — Prometheus text-exposition rendering of
@@ -31,6 +33,8 @@
 
 /// Chrome `chrome://tracing` / Perfetto JSON export of recorded spans.
 pub mod chrome;
+/// Fault-handling counters: replica deaths, redispatches, injected faults.
+pub mod fault;
 /// Per-SIMD-tier packed-GEMM counters (calls, bytes, bandwidth).
 pub mod kernel;
 /// Prometheus text-format rendering of every counter family.

@@ -9,6 +9,7 @@
 
 use std::fmt::Write as _;
 
+use super::fault::{FaultSnapshot, FAULT_EVENTS};
 use super::kernel::{tier_label, KernelSnapshot};
 use super::router::{RouteOutcome, RouterSnapshot};
 use super::search::{MoveFamily, SearchSnapshot};
@@ -115,6 +116,8 @@ pub fn render_serve(m: &ServeMetrics) -> String {
             ("reason", "stop", m.finished_stop as f64),
             ("reason", "cancelled", m.cancelled as f64),
             ("reason", "rejected", m.rejected as f64),
+            ("reason", "timed_out", m.timed_out as f64),
+            ("reason", "failed", m.failed as f64),
         ],
     );
     counter(
@@ -228,13 +231,31 @@ pub fn render_router(r: &RouterSnapshot) -> String {
     out
 }
 
-/// Full scrape page: serve metrics plus whatever global kernel/search/router
-/// counters have accumulated.
+/// Render the supervision / fault-injection counters.
+pub fn render_faults(f: &FaultSnapshot) -> String {
+    let mut out = String::new();
+    if f.total() == 0 {
+        return out;
+    }
+    let labels: Vec<(&str, &str, f64)> =
+        FAULT_EVENTS.iter().map(|&e| ("event", e.label(), f.count_of(e) as f64)).collect();
+    counter(
+        &mut out,
+        "invarexplore_faults_total",
+        "Supervision events by kind (deaths, redispatches, injected faults)",
+        &labels,
+    );
+    out
+}
+
+/// Full scrape page: serve metrics plus whatever global
+/// kernel/search/router/fault counters have accumulated.
 pub fn render(m: &ServeMetrics) -> String {
     let mut out = render_serve(m);
     out.push_str(&render_kernel(&super::kernel::snapshot()));
     out.push_str(&render_search(&super::search::snapshot()));
     out.push_str(&render_router(&super::router::snapshot()));
+    out.push_str(&render_faults(&super::fault::snapshot()));
     out
 }
 
@@ -308,6 +329,29 @@ mod tests {
         assert!(text.contains("invarexplore_search_proposed_total{family=\"transform\"} 10"));
         assert!(text.contains("invarexplore_search_accepted_total{family=\"bitswap\"} 1"));
         assert!(render_search(&SearchSnapshot::default()).is_empty());
+    }
+
+    #[test]
+    fn fault_section_renders_when_active() {
+        let mut f = FaultSnapshot::default();
+        f.events[0] = 1; // replica_death
+        f.events[1] = 3; // redispatch
+        let text = render_faults(&f);
+        assert_exposition_format(&text);
+        assert!(text.contains("invarexplore_faults_total{event=\"replica_death\"} 1"));
+        assert!(text.contains("invarexplore_faults_total{event=\"redispatch\"} 3"));
+        assert!(text.contains("invarexplore_faults_total{event=\"request_failed\"} 0"));
+        assert!(render_faults(&FaultSnapshot::default()).is_empty());
+    }
+
+    #[test]
+    fn finished_total_includes_fault_reasons() {
+        let mut m = ServeMetrics::new();
+        m.timed_out = 2;
+        m.failed = 1;
+        let text = render_serve(&m);
+        assert!(text.contains("invarexplore_finished_total{reason=\"timed_out\"} 2"));
+        assert!(text.contains("invarexplore_finished_total{reason=\"failed\"} 1"));
     }
 
     #[test]

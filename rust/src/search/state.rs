@@ -101,12 +101,21 @@ impl SearchState {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
-        std::fs::write(path, self.to_json().to_string())?;
+        // temp + fsync + rename: a crash mid-save leaves the previous
+        // checkpoint intact instead of a torn file that kills the resume
+        crate::util::atomic_write(path, self.to_json().to_string().as_bytes())?;
         Ok(())
     }
 
     pub fn load(path: &Path, seed: u64) -> crate::Result<SearchState> {
-        let j = crate::util::json::parse_file(path)?;
+        let j = crate::util::json::parse_file(path).map_err(|e| {
+            anyhow::anyhow!(
+                "checkpoint {} is unreadable or torn (crash mid-save from a version \
+                 without atomic writes?): {e}; delete it or pass a fresh --state path \
+                 to restart the search from step 0",
+                path.display()
+            )
+        })?;
         let transforms: Vec<LayerTransform> = j
             .req("transforms")?
             .as_arr()
@@ -223,6 +232,27 @@ mod tests {
         let back = SearchState::load(&p, 0).unwrap();
         assert_eq!(back.alloc_accepts, 3);
         assert_eq!(back.alloc, st.alloc);
+    }
+
+    #[test]
+    fn torn_checkpoint_load_errors_descriptively_instead_of_panicking() {
+        let mut st = SearchState::new(2, 4, 0);
+        st.step = 9;
+        let dir = std::env::temp_dir().join("invarexplore_state_torn");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("torn.json");
+        st.save(&p).unwrap();
+        // simulate a crash mid-write from a non-atomic writer: truncate the
+        // checkpoint halfway through
+        let full = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &full[..full.len() / 2]).unwrap();
+        let err = SearchState::load(&p, 0).err().expect("torn checkpoint must not load");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("torn"), "{msg}");
+        assert!(msg.contains("--state"), "resume hint missing: {msg}");
+        // a fresh save over the torn file repairs it (rename is atomic)
+        st.save(&p).unwrap();
+        assert_eq!(SearchState::load(&p, 0).unwrap().step, 9);
     }
 
     #[test]

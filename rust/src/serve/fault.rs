@@ -1,0 +1,276 @@
+//! Deterministic, seeded fault injection for chaos-testing the serving
+//! stack: replica kills at a chosen round, transient per-request dispatch
+//! errors, and injected kernel stalls.
+//!
+//! A [`FaultPlan`] is pure data parsed from a compact spec string
+//! (`SERVE_FAULT_PLAN` / `--fault-plan`), and every injection decision is a
+//! pure function of `(plan.seed, request id, attempt)` or a literal
+//! `(replica, round)` match — no ambient RNG, no clocks — so a chaos run
+//! replays **bit-for-bit**: the same plan over the same traffic kills the
+//! same replica at the same round and fails the same dispatch attempts,
+//! every time.  With no plan attached the serving hot paths pay one
+//! `Option` check and nothing else.
+//!
+//! Spec grammar (comma-separated `key=value` pairs, keys repeatable):
+//!
+//! ```text
+//! seed=42                    injection-decision seed (default 0)
+//! kill=1@3                   replica 1 panics at the top of its round 3
+//! transient=0.05             each dispatch attempt fails with p = 0.05
+//! stall=7@2x40               request 7's decode at round 2 sleeps 40 ms
+//! ```
+//!
+//! Rounds are counted per [`crate::serve::Scheduler::run`] call (the
+//! trace-replay benches call `run` once per arrival wave, so `kill=1@3`
+//! means "round 3 of the wave being served when the plan first matches").
+//! The panic raised by a kill is *the injected fault itself*; the router's
+//! supervision layer (`catch_unwind` + redispatch) is the component under
+//! test.
+
+use crate::obs::fault::{record_fault, FaultEvent};
+
+/// A parsed, seeded fault-injection plan.  See the module docs for the
+/// spec grammar and the determinism contract.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for the per-attempt transient-failure decisions.
+    pub seed: u64,
+    /// `(replica, round)` pairs: the replica panics at the top of that
+    /// scheduler round.
+    pub kills: Vec<(usize, u64)>,
+    /// Probability in `[0, 1]` that any single dispatch attempt of a
+    /// request fails transiently (decided by hashing `(seed, id, attempt)`,
+    /// so retries of the same request draw fresh, reproducible outcomes).
+    pub transient: f64,
+    /// `(request id, round, millis)` triples: that request's decode step
+    /// sleeps `millis` at that round — a stalled kernel for the per-round
+    /// wall-clock budget to catch.
+    pub stalls: Vec<(usize, u64, u64)>,
+}
+
+impl FaultPlan {
+    /// Parse a spec string (see the module docs for the grammar).
+    pub fn parse(spec: &str) -> crate::Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("fault plan: {part:?} is not key=value"))?;
+            match key.trim() {
+                "seed" => {
+                    plan.seed = value
+                        .trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("fault plan: bad seed {value:?}"))?;
+                }
+                "kill" => {
+                    let (r, at) = value.split_once('@').ok_or_else(|| {
+                        anyhow::anyhow!("fault plan: kill wants replica@round, got {value:?}")
+                    })?;
+                    plan.kills.push((
+                        parse_num(r, "kill replica")? as usize,
+                        parse_num(at, "kill round")?,
+                    ));
+                }
+                "transient" => {
+                    let p: f64 = value.trim().parse().map_err(|_| {
+                        anyhow::anyhow!("fault plan: bad transient rate {value:?}")
+                    })?;
+                    if !(0.0..=1.0).contains(&p) {
+                        anyhow::bail!("fault plan: transient rate {p} outside [0, 1]");
+                    }
+                    plan.transient = p;
+                }
+                "stall" => {
+                    let (id, rest) = value.split_once('@').ok_or_else(|| {
+                        anyhow::anyhow!("fault plan: stall wants id@roundxms, got {value:?}")
+                    })?;
+                    let (at, ms) = rest.split_once('x').ok_or_else(|| {
+                        anyhow::anyhow!("fault plan: stall wants id@roundxms, got {value:?}")
+                    })?;
+                    plan.stalls.push((
+                        parse_num(id, "stall request id")? as usize,
+                        parse_num(at, "stall round")?,
+                        parse_num(ms, "stall millis")?,
+                    ));
+                }
+                other => anyhow::bail!(
+                    "fault plan: unknown key {other:?} (seed|kill|transient|stall)"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// The plan named by `SERVE_FAULT_PLAN`, if set (empty/unset = no
+    /// plan).  A malformed value is an error, not a silent no-op — a chaos
+    /// run that quietly injected nothing would report fake resilience.
+    pub fn from_env() -> crate::Result<Option<FaultPlan>> {
+        match std::env::var("SERVE_FAULT_PLAN") {
+            Ok(v) if !v.trim().is_empty() => Ok(Some(FaultPlan::parse(&v)?)),
+            _ => Ok(None),
+        }
+    }
+
+    /// Does dispatch attempt `attempt` of request `id` fail transiently?
+    /// Pure function of `(seed, id, attempt)` — reproducible bit-for-bit.
+    pub fn transient_fails(&self, id: usize, attempt: usize) -> bool {
+        if self.transient <= 0.0 {
+            return false;
+        }
+        let h = splitmix64(self.seed ^ splitmix64((id as u64) << 24 ^ attempt as u64));
+        ((h >> 11) as f64 / (1u64 << 53) as f64) < self.transient
+    }
+
+    /// The injection hooks for one replica's scheduler.
+    pub fn injector_for(&self, replica: usize) -> FaultInjector {
+        FaultInjector { plan: self.clone(), replica }
+    }
+
+    /// True when the plan injects nothing (the default).
+    pub fn is_empty(&self) -> bool {
+        self.kills.is_empty() && self.stalls.is_empty() && self.transient <= 0.0
+    }
+}
+
+fn parse_num(s: &str, what: &str) -> crate::Result<u64> {
+    s.trim().parse().map_err(|_| anyhow::anyhow!("fault plan: bad {what} {s:?}"))
+}
+
+/// SplitMix64 — the finalizer behind the transient-failure decisions; good
+/// avalanche from sequential inputs, no state.
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// One replica's view of a [`FaultPlan`]: the hooks the scheduler calls at
+/// the top of every round and inside every decode step.  Plain data
+/// (`Sync`), so the decode hook is callable from the parallel decode
+/// closure.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    replica: usize,
+}
+
+impl FaultInjector {
+    /// Called at the top of each scheduler round.
+    ///
+    /// # Panics
+    /// Panics when the plan kills this replica at `round` — the panic *is*
+    /// the injected fault; the router's supervision catches it.
+    pub fn tick_round(&self, round: u64) {
+        if self.plan.kills.iter().any(|&(r, at)| r == self.replica && at == round) {
+            // PANIC-OK: this panic is the injected replica-death fault
+            // itself — it only fires when an operator explicitly configured
+            // a kill in SERVE_FAULT_PLAN/--fault-plan, and the router's
+            // catch_unwind supervision layer is the component under test.
+            panic!("fault injection: replica {} killed at round {round}", self.replica);
+        }
+    }
+
+    /// Called from the decode closure for the slot serving request `id`:
+    /// sleeps when the plan stalls that request at this round (simulating a
+    /// wedged kernel for the per-round budget to convert into a `Failed`
+    /// completion).
+    pub fn maybe_stall(&self, id: usize, round: u64) {
+        for &(rid, at, ms) in &self.plan.stalls {
+            if rid == id && at == round {
+                record_fault(FaultEvent::StallInjected);
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec_roundtrips() {
+        let p = FaultPlan::parse("seed=42, kill=1@3, transient=0.25, stall=7@2x40, kill=0@9")
+            .expect("valid spec");
+        assert_eq!(p.seed, 42);
+        assert_eq!(p.kills, vec![(1, 3), (0, 9)]);
+        assert_eq!(p.stalls, vec![(7, 2, 40)]);
+        assert!((p.transient - 0.25).abs() < 1e-12);
+        assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn parse_empty_spec_is_empty_plan() {
+        let p = FaultPlan::parse("").expect("empty spec");
+        assert_eq!(p, FaultPlan::default());
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "kill",
+            "kill=3",
+            "kill=a@b",
+            "transient=2.0",
+            "transient=-0.1",
+            "transient=x",
+            "stall=7@2",
+            "stall=7",
+            "seed=",
+            "warp=9",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "spec {bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn transient_decisions_are_deterministic_and_rate_shaped() {
+        let p = FaultPlan { seed: 7, transient: 0.3, ..Default::default() };
+        let q = FaultPlan { seed: 7, transient: 0.3, ..Default::default() };
+        let mut fails = 0;
+        for id in 0..2000 {
+            let a = p.transient_fails(id, 0);
+            assert_eq!(a, q.transient_fails(id, 0), "same seed must agree at id {id}");
+            fails += a as usize;
+        }
+        // 2000 draws at p=0.3: far from both 0 and 2000 with margin
+        assert!((400..=800).contains(&fails), "observed {fails}/2000 at p=0.3");
+        // a retry is a fresh draw, not a replay of attempt 0
+        assert!(
+            (0..2000).any(|id| p.transient_fails(id, 0) != p.transient_fails(id, 1)),
+            "attempts must draw independently"
+        );
+    }
+
+    #[test]
+    fn transient_rate_extremes() {
+        let never = FaultPlan::default();
+        let always = FaultPlan { transient: 1.0, ..Default::default() };
+        for id in 0..64 {
+            assert!(!never.transient_fails(id, 0));
+            assert!(always.transient_fails(id, 0));
+        }
+    }
+
+    #[test]
+    fn injector_kill_panics_only_on_its_replica_and_round() {
+        let plan = FaultPlan::parse("kill=1@3").expect("valid spec");
+        plan.injector_for(0).tick_round(3); // other replica: no panic
+        plan.injector_for(1).tick_round(2); // other round: no panic
+        let hit = std::panic::catch_unwind(|| plan.injector_for(1).tick_round(3));
+        let payload = hit.err().expect("kill must panic");
+        let msg = crate::util::pool::panic_message(payload.as_ref());
+        assert!(msg.contains("replica 1 killed at round 3"), "{msg:?}");
+    }
+
+    #[test]
+    fn stall_is_noop_without_a_match() {
+        let plan = FaultPlan::parse("stall=7@2x1").expect("valid spec");
+        let inj = plan.injector_for(0);
+        inj.maybe_stall(6, 2); // other id
+        inj.maybe_stall(7, 1); // other round
+    }
+}

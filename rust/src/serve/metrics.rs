@@ -255,6 +255,12 @@ pub struct ServeMetrics {
     pub cancelled: u64,
     /// Requests rejected at admission (malformed, or shed by the router).
     pub rejected: u64,
+    /// Requests whose deadline expired while queued (finished `TimedOut`
+    /// before any KV allocation).
+    pub timed_out: u64,
+    /// Requests abandoned after an unrecoverable failure (replica death
+    /// with retries exhausted, or a blown per-round budget).
+    pub failed: u64,
     /// Speculative decoding: accepted draft tokens per verify step (the
     /// accepted-length histogram; one sample per chunked verify).
     pub spec_accept_len: CountHistogram,
@@ -296,6 +302,8 @@ impl ServeMetrics {
         self.finished_stop += other.finished_stop;
         self.cancelled += other.cancelled;
         self.rejected += other.rejected;
+        self.timed_out += other.timed_out;
+        self.failed += other.failed;
         self.spec_accept_len.merge(&other.spec_accept_len);
         self.spec_committed_tokens += other.spec_committed_tokens;
         self.spec_draft_tokens += other.spec_draft_tokens;
@@ -406,7 +414,9 @@ impl ServeMetrics {
                     .set("length", self.finished_length as usize)
                     .set("stop", self.finished_stop as usize)
                     .set("cancelled", self.cancelled as usize)
-                    .set("rejected", self.rejected as usize),
+                    .set("rejected", self.rejected as usize)
+                    .set("timed_out", self.timed_out as usize)
+                    .set("failed", self.failed as usize),
             )
     }
 }

@@ -21,7 +21,14 @@
 //!   over N independent schedulers with consistent-hash prefix affinity,
 //!   queue-depth balancing, deadline-aware spillover under saturation, and
 //!   explicit load shedding ([`FinishReason::Rejected`]) past a
-//!   configurable admission watermark.
+//!   configurable admission watermark.  Replica threads run under
+//!   supervision: a panicking replica is caught, its queued and in-flight
+//!   requests redispatch to survivors with bounded retries, and
+//!   [`Router::shutdown`] drains gracefully.
+//! * [`fault`] — deterministic seeded fault injection ([`FaultPlan`]:
+//!   replica kills at round R, transient per-request dispatch errors,
+//!   injected kernel stalls) so chaos runs replay bit-for-bit; free when
+//!   no plan is attached.
 //! * [`shard`] — tensor-parallel packed inference: [`ShardedModel`] splits
 //!   every packed linear across row-range shards
 //!   (`PackedTensor::slice_rows`) and concatenates the per-shard partial
@@ -45,6 +52,9 @@
 //!
 //! [`DecoderParams`]: crate::model::native::DecoderParams
 
+/// Deterministic seeded fault injection (replica kills, transient errors,
+/// stalls) for reproducible chaos runs.
+pub mod fault;
 /// TTFT / inter-token-latency histograms, queue depth, KV residency.
 pub mod metrics;
 /// The bit-packed deployment model ([`PackedModel`]) and its draft twin.
@@ -62,10 +72,11 @@ pub mod spec;
 /// Streaming sinks, stop conditions, and finish reasons.
 pub mod stream;
 
+pub use fault::{FaultInjector, FaultPlan};
 pub use metrics::{CountHistogram, Histogram, ServeMetrics};
 pub use model::PackedModel;
 pub use prefix::{PrefixCache, PrefixStats};
-pub use router::{Router, RouterOpts, RouterStats};
+pub use router::{DrainSummary, Router, RouterOpts, RouterStats};
 /// The serving engine is also exported under PR-2's `Server` name, so
 /// existing call sites keep working.
 pub use scheduler::Scheduler as Server;
@@ -229,6 +240,12 @@ pub struct ServeOpts {
     /// [`crate::model::native::KvDtype`] for ~3.6×/~6.4× lower live-KV
     /// residency (reported per dtype by [`ServeMetrics`]).
     pub kv_dtype: crate::model::native::KvDtype,
+    /// Per-round wall-clock budget in milliseconds (`None` = unbounded,
+    /// the default).  A slot whose decode step exceeds the budget finishes
+    /// [`FinishReason::Failed`] at the next round boundary instead of
+    /// holding the rest of the batch hostage — the escape hatch for a
+    /// stalled kernel.
+    pub round_budget_ms: Option<u64>,
 }
 
 impl Default for ServeOpts {
@@ -241,6 +258,7 @@ impl Default for ServeOpts {
             prefix_cache_bytes: 32 << 20,
             spec: 0,
             kv_dtype: crate::model::native::KvDtype::F32,
+            round_budget_ms: None,
         }
     }
 }
@@ -255,6 +273,12 @@ pub struct ServeStats {
     pub rejected: usize,
     /// Requests cancelled (queued or mid-flight).
     pub cancelled: usize,
+    /// Requests whose deadline expired while queued ([`FinishReason::TimedOut`]
+    /// at admission, before any KV allocation).
+    pub timed_out: usize,
+    /// Requests abandoned with [`FinishReason::Failed`] (blown per-round
+    /// budget; the router adds its own for exhausted retries).
+    pub failed: usize,
     /// Prompt tokens actually processed during prefill (prefix-cache hits
     /// excluded).
     pub prefill_tokens: usize,
@@ -281,6 +305,27 @@ pub struct ServeStats {
 }
 
 impl ServeStats {
+    /// Accumulate another run's stats into this one (field-wise sums).
+    /// The router uses this to fold multiple supervision passes over one
+    /// replica — a redispatch re-run plus the original — into one account.
+    pub fn merge(&mut self, other: &ServeStats) {
+        self.requests += other.requests;
+        self.rejected += other.rejected;
+        self.cancelled += other.cancelled;
+        self.timed_out += other.timed_out;
+        self.failed += other.failed;
+        self.prefill_tokens += other.prefill_tokens;
+        self.prefix_hit_tokens += other.prefix_hit_tokens;
+        self.generated_tokens += other.generated_tokens;
+        self.decoded_tokens += other.decoded_tokens;
+        self.decode_steps += other.decode_steps;
+        self.draft_tokens += other.draft_tokens;
+        self.spec_matched += other.spec_matched;
+        self.verify_chunks += other.verify_chunks;
+        self.prefill_time += other.prefill_time;
+        self.decode_time += other.decode_time;
+    }
+
     /// Fraction of proposed draft tokens the target accepted.
     pub fn spec_accept_rate(&self) -> f64 {
         if self.draft_tokens == 0 {
@@ -328,12 +373,15 @@ impl ServeStats {
             String::new()
         };
         format!(
-            "served {} requests ({} rejected, {} cancelled): {} prompt tokens \
+            "served {} requests ({} rejected, {} cancelled, {} timed out, \
+             {} failed): {} prompt tokens \
              prefilled (+{} reused from prefix cache) in {:.1?}; \
              {} tokens generated over {} decode rounds in {:.1?} ({:.1} tok/s decode){spec}",
             self.requests,
             self.rejected,
             self.cancelled,
+            self.timed_out,
+            self.failed,
             self.prefill_tokens,
             self.prefix_hit_tokens,
             self.prefill_time,

@@ -25,14 +25,39 @@
 //! prefix-cache on/off for every non-shed request (pinned by
 //! `completions_bit_identical_across_replica_counts`).
 //!
+//! **Supervision and fault tolerance.** [`Router::run`] executes every
+//! replica under `catch_unwind`.  When a replica thread dies the router
+//! marks it dead (it never receives work again), recovers its still-queued
+//! requests — sinks intact — straight from the scheduler's queue, rebuilds
+//! its in-flight requests from retained [`RetrySpec`]s (sink lost with the
+//! thread), and redispatches everything to surviving replicas with bounded
+//! retries and exponential backoff ([`RouterOpts::max_retries`] /
+//! [`RouterOpts::retry_backoff_ms`]).  Completion is **at-most-once by
+//! request id**: a dead replica's unreported completions died with its
+//! thread, so a redispatched request completes exactly once, and every
+//! submitted request yields exactly one [`Completion`] — the unrecoverable
+//! tail finishes [`FinishReason::Failed`].  Redispatched requests stay
+//! bit-identical to a fault-free run (per-request RNG streams are
+//! placement-neutral).  [`Router::shutdown`] drains gracefully: admission
+//! stops, queued and in-flight work finishes under the same supervision,
+//! and a [`DrainSummary`] reports the account.
+//!
 //! [`AdmissionPolicy::Deadline`]: crate::serve::AdmissionPolicy::Deadline
 
+// DETERMINISM: BTreeMap/BTreeSet (deliberately not Hash*) back the
+// supervision bookkeeping, so orphan recovery and redispatch iterate in
+// request-id order and chaos runs replay bit-for-bit.
+use std::collections::{BTreeMap, BTreeSet};
+
 use crate::model::native::DecoderParams;
+use crate::obs::fault::{record_fault, FaultEvent};
 use crate::obs::router::{record_route, RouteOutcome};
+use crate::serve::fault::FaultPlan;
 use crate::serve::{
     Completion, FinishReason, Request, RequestTiming, Scheduler, ServeMetrics, ServeOpts,
     ServeStats,
 };
+use crate::util::sampling::Sampler;
 
 /// Router knobs (per-replica engine knobs live in [`ServeOpts`]).
 #[derive(Debug, Clone, Copy)]
@@ -49,11 +74,25 @@ pub struct RouterOpts {
     /// Virtual nodes per replica on the consistent-hash ring; more nodes
     /// spread distinct prefixes more evenly at the cost of a larger ring.
     pub virtual_nodes: usize,
+    /// Redispatch attempts per request after a replica death or injected
+    /// transient fault, before the request finishes
+    /// [`FinishReason::Failed`].
+    pub max_retries: usize,
+    /// Base of the exponential redispatch backoff in milliseconds (doubles
+    /// per attempt, capped at 16× the base; `0` disables the sleep).
+    pub retry_backoff_ms: u64,
 }
 
 impl Default for RouterOpts {
     fn default() -> Self {
-        RouterOpts { replicas: 1, shed_watermark: 0, affinity_tokens: 16, virtual_nodes: 32 }
+        RouterOpts {
+            replicas: 1,
+            shed_watermark: 0,
+            affinity_tokens: 16,
+            virtual_nodes: 32,
+            max_retries: 2,
+            retry_backoff_ms: 1,
+        }
     }
 }
 
@@ -74,8 +113,21 @@ pub struct RouterStats {
     /// Requests refused with [`FinishReason::Rejected`] before reaching any
     /// replica.
     pub shed: usize,
+    /// Replica threads that died (panicked) over the router's lifetime.
+    pub replica_deaths: usize,
+    /// Redispatch attempts performed (orphaned or transiently-refused
+    /// requests resubmitted to surviving replicas).
+    pub redispatched: usize,
+    /// Requests that exhausted their retry budget (or found no live
+    /// replica) and finished [`FinishReason::Failed`].
+    pub failed_requests: usize,
+    /// Ids of every request a fault ever touched (orphaned by a replica
+    /// death or refused by an injected transient error), sorted.  Requests
+    /// *not* listed here were served on a fault-free path and are
+    /// guaranteed bit-identical to a no-fault run.
+    pub fault_touched: Vec<usize>,
     /// Engine stats per replica from the last `run` call, indexed by
-    /// replica.
+    /// replica (supervision re-runs of one replica are folded in).
     pub per_replica: Vec<ServeStats>,
 }
 
@@ -102,21 +154,125 @@ fn fnv1a(bytes: impl IntoIterator<Item = u8>) -> u64 {
     h
 }
 
+/// What the router retains per placed request so it can rebuild and
+/// redispatch the request if the owning replica dies mid-run.  The
+/// streaming sink cannot be retained — it moves into the replica with the
+/// request and is lost with the thread — so a redispatched *in-flight*
+/// request re-runs sink-less (still-*queued* requests are recovered from
+/// the dead scheduler with their sinks intact); its completion tokens are
+/// unaffected either way (per-request RNG streams).  A rebuilt deadline
+/// restarts from the redispatch instant.
+struct RetrySpec {
+    prompt: Vec<i32>,
+    max_new: usize,
+    sampler: Sampler,
+    stop: Vec<i32>,
+    stop_seqs: Vec<Vec<i32>>,
+    priority: i32,
+    deadline_ms: Option<u64>,
+    /// Replica currently holding the request.
+    replica: usize,
+    /// Dispatch attempts already consumed beyond the first.
+    attempts: usize,
+}
+
+impl RetrySpec {
+    fn retain(req: &Request, replica: usize, attempts: usize) -> RetrySpec {
+        RetrySpec {
+            prompt: req.prompt.clone(),
+            max_new: req.max_new,
+            sampler: req.sampler,
+            stop: req.stop.clone(),
+            stop_seqs: req.stop_seqs.clone(),
+            priority: req.priority,
+            deadline_ms: req.deadline_ms,
+            replica,
+            attempts,
+        }
+    }
+
+    fn rebuild(&mut self, id: usize) -> Request {
+        let mut r =
+            Request::new(id, std::mem::take(&mut self.prompt), self.max_new, self.sampler)
+                .with_stop(std::mem::take(&mut self.stop))
+                .with_stop_seqs(std::mem::take(&mut self.stop_seqs))
+                .with_priority(self.priority);
+        if let Some(ms) = self.deadline_ms {
+            r = r.with_deadline_ms(ms);
+        }
+        r
+    }
+}
+
+/// The account [`Router::shutdown`] returns after a graceful drain.
+#[derive(Debug)]
+pub struct DrainSummary {
+    /// Requests still queued across replicas when the drain began.
+    pub pending_at_shutdown: usize,
+    /// Requests that finished [`FinishReason::Failed`] during the drain.
+    pub failed: usize,
+    /// Requests that finished [`FinishReason::TimedOut`] during the drain.
+    pub timed_out: usize,
+    /// Replica threads that died over the router's whole lifetime.
+    pub replica_deaths: usize,
+    /// Replicas still live after the drain.
+    pub live_replicas: usize,
+    /// Every completion the drain run produced (shed/refused included).
+    pub completions: Vec<Completion>,
+    /// The router stats as of the drain run (cumulative counters plus the
+    /// drain's per-replica engine stats).
+    pub stats: RouterStats,
+}
+
+impl DrainSummary {
+    /// One-line human-readable account (what `--drain` prints).
+    pub fn summary(&self) -> String {
+        format!(
+            "drained {} pending requests into {} completions ({} failed, {} timed out); \
+             {} replica death(s), {}/{} replica(s) live",
+            self.pending_at_shutdown,
+            self.completions.len(),
+            self.failed,
+            self.timed_out,
+            self.replica_deaths,
+            self.live_replicas,
+            self.live_replicas + self.replica_deaths,
+        )
+    }
+}
+
 /// A front-end distributing requests over N [`Scheduler`] replicas sharing
 /// one set of decoder parameters.  See the module docs for the placement
-/// cascade and the bit-identity guarantee.
+/// cascade, the bit-identity guarantee and the supervision contract.
 pub struct Router<'a, P: DecoderParams + ?Sized> {
     replicas: Vec<Scheduler<'a, P>>,
     opts: RouterOpts,
     /// Consistent-hash ring: `(point, replica)` sorted by point.
     ring: Vec<(u64, usize)>,
-    /// Completions synthesized for shed requests, drained by `run`.
+    /// Completions synthesized for shed/refused/failed requests, drained by
+    /// `run`.
     shed_done: Vec<Completion>,
+    /// Dead mask: `dead[i]` is set when replica `i`'s thread panicked; a
+    /// dead replica never receives work again.
+    dead: Vec<bool>,
+    /// Retained rebuild specs for every request currently placed on a
+    /// replica, keyed by request id (the supervision ledger).
+    inflight: BTreeMap<usize, RetrySpec>,
+    /// Deterministic fault plan under test, if any (chaos harness only).
+    fault: Option<FaultPlan>,
+    /// Set by [`Router::shutdown`]: admission refuses new work.
+    draining: bool,
+    /// Ids of requests a fault ever touched (orphaned or transiently
+    /// refused); everything else is bit-identical to a no-fault run.
+    fault_touched: BTreeSet<usize>,
     submitted: usize,
     affinity_routed: usize,
     balanced: usize,
     spilled: usize,
     shed: usize,
+    replica_deaths: usize,
+    redispatched: usize,
+    failed_requests: usize,
 }
 
 impl<'a, P: DecoderParams + ?Sized> Router<'a, P> {
@@ -144,12 +300,32 @@ impl<'a, P: DecoderParams + ?Sized> Router<'a, P> {
             opts,
             ring,
             shed_done: Vec::new(),
+            dead: vec![false; n],
+            inflight: BTreeMap::new(),
+            fault: None,
+            draining: false,
+            fault_touched: BTreeSet::new(),
             submitted: 0,
             affinity_routed: 0,
             balanced: 0,
             spilled: 0,
             shed: 0,
+            replica_deaths: 0,
+            redispatched: 0,
+            failed_requests: 0,
         }
+    }
+
+    /// Attach a deterministic fault plan (see [`crate::serve::fault`]):
+    /// every replica gets its injector (scripted kills and stalls) and the
+    /// router applies the plan's transient dispatch errors at submit time.
+    /// Chaos-testing only — a router without a plan pays nothing.
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> Router<'a, P> {
+        for (i, r) in self.replicas.iter_mut().enumerate() {
+            r.set_fault(plan.injector_for(i));
+        }
+        self.fault = Some(plan);
+        self
     }
 
     /// Attach a draft model to every replica for speculative decoding
@@ -159,9 +335,14 @@ impl<'a, P: DecoderParams + ?Sized> Router<'a, P> {
         self
     }
 
-    /// Number of scheduler replicas.
+    /// Number of scheduler replicas (dead ones included).
     pub fn replicas(&self) -> usize {
         self.replicas.len()
+    }
+
+    /// Replicas whose threads have not died.
+    pub fn live_replicas(&self) -> usize {
+        self.dead.iter().filter(|d| !**d).count()
     }
 
     /// Queued requests summed over all replicas.
@@ -169,8 +350,10 @@ impl<'a, P: DecoderParams + ?Sized> Router<'a, P> {
         self.replicas.iter().map(|r| r.pending()).sum()
     }
 
-    /// The consistent-hash home replica for `prompt`.
-    fn affinity_replica(&self, prompt: &[i32]) -> usize {
+    /// The consistent-hash home replica for `prompt` — where the placement
+    /// cascade tries first.  Public so operators (and the chaos bench) can
+    /// ask "which replica would serve this?" without submitting.
+    pub fn affinity_replica(&self, prompt: &[i32]) -> usize {
         let key = fnv1a(
             prompt
                 .iter()
@@ -181,53 +364,24 @@ impl<'a, P: DecoderParams + ?Sized> Router<'a, P> {
         self.ring[i % self.ring.len()].1
     }
 
-    /// The replica with the shortest queue (lowest index on ties, so
-    /// placement is deterministic).
-    fn least_loaded(&self) -> usize {
-        let mut best = 0;
-        for (i, r) in self.replicas.iter().enumerate().skip(1) {
-            if r.pending() < self.replicas[best].pending() {
-                best = i;
+    /// The live replica with the shortest queue (lowest index on ties, so
+    /// placement is deterministic); `None` when every replica is dead.
+    fn least_loaded_live(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, r) in self.replicas.iter().enumerate() {
+            if self.dead[i] {
+                continue;
+            }
+            if best.is_none_or(|b| r.pending() < self.replicas[b].pending()) {
+                best = Some(i);
             }
         }
         best
     }
 
-    /// Route one request through the placement cascade.  Shed requests are
-    /// finished immediately (sink notified, completion synthesized) and
-    /// surface in the next [`Router::run`] result with
-    /// [`FinishReason::Rejected`].
-    pub fn submit(&mut self, mut req: Request) {
-        self.submitted += 1;
-        let cap =
-            if self.opts.shed_watermark == 0 { usize::MAX } else { self.opts.shed_watermark };
-        let home = self.affinity_replica(&req.prompt);
-        if self.replicas[home].pending() < cap {
-            self.affinity_routed += 1;
-            record_route(RouteOutcome::Affinity);
-            self.replicas[home].submit(req);
-            return;
-        }
-        let target = self.least_loaded();
-        if self.replicas[target].pending() < cap {
-            self.balanced += 1;
-            record_route(RouteOutcome::Balanced);
-            self.replicas[target].submit(req);
-            return;
-        }
-        if req.deadline_ms.is_some() {
-            self.spilled += 1;
-            record_route(RouteOutcome::Spillover);
-            self.replicas[target].submit(req);
-            return;
-        }
-        self.shed += 1;
-        record_route(RouteOutcome::Shed);
-        let reason = FinishReason::Rejected(format!(
-            "shed: all {} replicas at watermark {}",
-            self.replicas.len(),
-            self.opts.shed_watermark
-        ));
+    /// Finish `req` immediately with `reason`: notify the sink and park a
+    /// synthesized completion for the next `run` to surface.
+    fn finish_now(&mut self, mut req: Request, reason: FinishReason) {
         if let Some(sink) = req.sink.as_mut() {
             sink.on_finish(&reason);
         }
@@ -240,25 +394,252 @@ impl<'a, P: DecoderParams + ?Sized> Router<'a, P> {
         });
     }
 
-    /// Drain every replica — each on its own OS thread — and return the
-    /// merged completions (replica results plus shed completions, sorted by
-    /// request id) with the routing stats.  Callable repeatedly: each call
-    /// serves the requests submitted since the previous one.
-    pub fn run(&mut self) -> (Vec<Completion>, RouterStats) {
-        let results: Vec<(Vec<Completion>, ServeStats)> = std::thread::scope(|scope| {
-            let handles: Vec<_> =
-                self.replicas.iter_mut().map(|r| scope.spawn(|| r.run())).collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().unwrap_or_else(std::panic::resume_unwind))
-                .collect()
-        });
-        let mut done: Vec<Completion> = std::mem::take(&mut self.shed_done);
-        let mut per_replica = Vec::with_capacity(results.len());
-        for (completions, stats) in results {
-            done.extend(completions);
-            per_replica.push(stats);
+    /// Exponential backoff before redispatch `attempt` (1-based):
+    /// `retry_backoff_ms << (attempt - 1)`, capped at 16× the base; a base
+    /// of 0 disables the sleep entirely.
+    fn backoff(&self, attempt: usize) {
+        if self.opts.retry_backoff_ms == 0 {
+            return;
         }
+        let factor = 1u64 << attempt.saturating_sub(1).min(4);
+        std::thread::sleep(std::time::Duration::from_millis(
+            self.opts.retry_backoff_ms.saturating_mul(factor),
+        ));
+    }
+
+    /// Route one request through the placement cascade.  Shed requests are
+    /// finished immediately (sink notified, completion synthesized) and
+    /// surface in the next [`Router::run`] result with
+    /// [`FinishReason::Rejected`].  When a fault plan injects transient
+    /// dispatch errors, each error consumes one retry (with backoff); a
+    /// request whose budget the injector exhausts finishes
+    /// [`FinishReason::Failed`].  A draining router refuses everything.
+    pub fn submit(&mut self, mut req: Request) {
+        self.submitted += 1;
+        if self.draining {
+            self.shed += 1;
+            record_route(RouteOutcome::Shed);
+            let reason = FinishReason::Rejected(format!(
+                "request {}: router is draining, admission stopped",
+                req.id
+            ));
+            self.finish_now(req, reason);
+            return;
+        }
+        let mut attempts = 0usize;
+        if let Some(plan) = self.fault.clone() {
+            while plan.transient_fails(req.id, attempts) {
+                record_fault(FaultEvent::TransientInjected);
+                self.fault_touched.insert(req.id);
+                if attempts >= self.opts.max_retries {
+                    let reason = FinishReason::Failed(format!(
+                        "request {}: injected transient fault persisted through {attempts} \
+                         retries",
+                        req.id
+                    ));
+                    self.failed_requests += 1;
+                    record_fault(FaultEvent::RequestFailed);
+                    self.finish_now(req, reason);
+                    return;
+                }
+                attempts += 1;
+                self.backoff(attempts);
+                self.redispatched += 1;
+                record_fault(FaultEvent::Redispatch);
+            }
+        }
+        self.place(req, attempts, false);
+    }
+
+    /// Place a request on a replica (the module-doc cascade), skipping dead
+    /// replicas.  `redispatch` placements bypass the shed watermark —
+    /// shedding already-admitted work would break the exactly-one-completion
+    /// contract — and don't touch the routing counters.
+    fn place(&mut self, req: Request, attempts: usize, redispatch: bool) {
+        let cap =
+            if self.opts.shed_watermark == 0 { usize::MAX } else { self.opts.shed_watermark };
+        let home = self.affinity_replica(&req.prompt);
+        let choice: Option<(usize, Option<RouteOutcome>)> = if redispatch {
+            self.least_loaded_live().map(|t| (t, None))
+        } else if !self.dead[home] && self.replicas[home].pending() < cap {
+            Some((home, Some(RouteOutcome::Affinity)))
+        } else {
+            match self.least_loaded_live() {
+                Some(t) if self.replicas[t].pending() < cap => {
+                    Some((t, Some(RouteOutcome::Balanced)))
+                }
+                Some(t) if req.deadline_ms.is_some() => Some((t, Some(RouteOutcome::Spillover))),
+                _ => None,
+            }
+        };
+        match choice {
+            Some((target, outcome)) => {
+                match outcome {
+                    Some(RouteOutcome::Affinity) => self.affinity_routed += 1,
+                    Some(RouteOutcome::Balanced) => self.balanced += 1,
+                    Some(RouteOutcome::Spillover) => self.spilled += 1,
+                    _ => {}
+                }
+                if let Some(o) = outcome {
+                    record_route(o);
+                }
+                self.inflight.insert(req.id, RetrySpec::retain(&req, target, attempts));
+                self.replicas[target].submit(req);
+            }
+            None if self.live_replicas() == 0 => {
+                // every replica is dead: nothing can ever serve this
+                let reason = FinishReason::Failed(format!(
+                    "request {}: all {} replicas are dead",
+                    req.id,
+                    self.replicas.len()
+                ));
+                self.fault_touched.insert(req.id);
+                self.failed_requests += 1;
+                record_fault(FaultEvent::RequestFailed);
+                self.finish_now(req, reason);
+            }
+            None => {
+                self.shed += 1;
+                record_route(RouteOutcome::Shed);
+                let reason = FinishReason::Rejected(format!(
+                    "shed: all {} replicas at watermark {}",
+                    self.live_replicas(),
+                    self.opts.shed_watermark
+                ));
+                self.finish_now(req, reason);
+            }
+        }
+    }
+
+    /// Drain every live replica — each on its own OS thread — and return
+    /// the merged completions (replica results plus synthesized shed /
+    /// refused / failed completions, sorted by request id) with the routing
+    /// stats.  Callable repeatedly: each call serves the requests submitted
+    /// since the previous one.
+    ///
+    /// Replicas run under `catch_unwind`: a replica that panics is marked
+    /// dead, its still-queued requests are recovered with their sinks
+    /// intact, its in-flight requests are rebuilt from retained specs, and
+    /// all of them redispatch to surviving replicas (bounded by
+    /// [`RouterOpts::max_retries`], backing off exponentially between
+    /// passes).  Requests whose budget runs out — or that outlive the last
+    /// replica — finish [`FinishReason::Failed`].  Every placed request
+    /// surfaces exactly once: a dead replica's unreported completions died
+    /// with its thread, so a redispatch can never duplicate one.
+    pub fn run(&mut self) -> (Vec<Completion>, RouterStats) {
+        let n = self.replicas.len();
+        let mut done: Vec<Completion> = Vec::new();
+        let mut per_replica: Vec<ServeStats> = vec![ServeStats::default(); n];
+        let mut pass = 0usize;
+        loop {
+            done.append(&mut self.shed_done);
+            let dead_mask = self.dead.clone();
+            type ReplicaOutcome = std::thread::Result<(Vec<Completion>, ServeStats)>;
+            let results: Vec<(usize, ReplicaOutcome)> = std::thread::scope(|scope| {
+                let handles: Vec<_> = self
+                    .replicas
+                    .iter_mut()
+                    .enumerate()
+                    .filter(|(i, _)| !dead_mask[*i])
+                    .map(|(i, r)| {
+                        let h = scope.spawn(move || {
+                            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| r.run()))
+                        });
+                        (i, h)
+                    })
+                    .collect();
+                // the outer join error (a panic that escaped catch_unwind,
+                // e.g. in a panic payload's Drop) folds into the same path
+                handles.into_iter().map(|(i, h)| (i, h.join().unwrap_or_else(Err))).collect()
+            });
+            for (i, res) in results {
+                match res {
+                    Ok((completions, stats)) => {
+                        for c in &completions {
+                            self.inflight.remove(&c.id);
+                        }
+                        per_replica[i].merge(&stats);
+                        done.extend(completions);
+                    }
+                    Err(payload) => {
+                        self.dead[i] = true;
+                        self.replica_deaths += 1;
+                        record_fault(FaultEvent::ReplicaDeath);
+                        let msg = crate::util::pool::panic_message(payload.as_ref());
+                        crate::warn_!(
+                            "replica {i} died ({msg}); redispatching its requests"
+                        );
+                    }
+                }
+            }
+            // orphans: the supervision ledger still holds specs owned by a
+            // replica that is now dead
+            let orphan_ids: Vec<usize> = self
+                .inflight
+                .iter()
+                .filter(|(_, s)| self.dead[s.replica])
+                .map(|(&id, _)| id)
+                .collect();
+            if orphan_ids.is_empty() {
+                break;
+            }
+            // recover still-queued requests (sinks intact) from the dead
+            // schedulers; anything not recovered was in flight and gets
+            // rebuilt sink-less from its retained spec
+            let mut recovered: BTreeMap<usize, Request> = BTreeMap::new();
+            for i in 0..n {
+                if self.dead[i] {
+                    for r in self.replicas[i].take_queue() {
+                        recovered.insert(r.id, r);
+                    }
+                }
+            }
+            pass += 1;
+            self.backoff(pass);
+            let live_left = self.live_replicas();
+            for id in orphan_ids {
+                let Some(mut spec) = self.inflight.remove(&id) else { continue };
+                self.fault_touched.insert(id);
+                let give_up: Option<String> = if live_left == 0 {
+                    Some(format!("request {id}: all replicas died, nothing left to serve it"))
+                } else if spec.attempts >= self.opts.max_retries {
+                    Some(format!(
+                        "request {id}: replica died and all {} redispatch attempts are spent",
+                        spec.attempts
+                    ))
+                } else {
+                    None
+                };
+                match give_up {
+                    Some(why) => {
+                        let reason = FinishReason::Failed(why);
+                        let mut prompt = std::mem::take(&mut spec.prompt);
+                        if let Some(mut r) = recovered.remove(&id) {
+                            if let Some(sink) = r.sink.as_mut() {
+                                sink.on_finish(&reason);
+                            }
+                            prompt = std::mem::take(&mut r.prompt);
+                        }
+                        self.failed_requests += 1;
+                        record_fault(FaultEvent::RequestFailed);
+                        done.push(Completion {
+                            id,
+                            prompt,
+                            generated: Vec::new(),
+                            finish: reason,
+                            timing: RequestTiming::default(),
+                        });
+                    }
+                    None => {
+                        let req = recovered.remove(&id).unwrap_or_else(|| spec.rebuild(id));
+                        self.redispatched += 1;
+                        record_fault(FaultEvent::Redispatch);
+                        self.place(req, spec.attempts + 1, true);
+                    }
+                }
+            }
+        }
+        done.append(&mut self.shed_done);
         done.sort_by_key(|c| c.id);
         let stats = RouterStats {
             submitted: self.submitted,
@@ -266,9 +647,37 @@ impl<'a, P: DecoderParams + ?Sized> Router<'a, P> {
             balanced: self.balanced,
             spilled: self.spilled,
             shed: self.shed,
+            replica_deaths: self.replica_deaths,
+            redispatched: self.redispatched,
+            failed_requests: self.failed_requests,
+            fault_touched: self.fault_touched.iter().copied().collect(),
             per_replica,
         };
         (done, stats)
+    }
+
+    /// Graceful drain: stop admission (every later [`Router::submit`] is
+    /// refused with [`FinishReason::Rejected`]), finish all queued work —
+    /// replica supervision and redispatch stay active throughout — and
+    /// report the account.  Further `run` calls remain legal and serve
+    /// nothing new.
+    pub fn shutdown(&mut self) -> DrainSummary {
+        self.draining = true;
+        let pending_at_shutdown = self.pending();
+        let (completions, stats) = self.run();
+        let failed =
+            completions.iter().filter(|c| matches!(c.finish, FinishReason::Failed(_))).count();
+        let timed_out =
+            completions.iter().filter(|c| c.finish == FinishReason::TimedOut).count();
+        DrainSummary {
+            pending_at_shutdown,
+            failed,
+            timed_out,
+            replica_deaths: stats.replica_deaths,
+            live_replicas: self.live_replicas(),
+            completions,
+            stats,
+        }
     }
 
     /// Engine metrics merged across all replicas (histograms bucket-exact —
@@ -488,6 +897,179 @@ mod tests {
         let ttft_total: u64 = (0..4).map(|i| router.replica_metrics(i).ttft.count()).sum();
         assert_eq!(agg.ttft.count(), ttft_total);
         assert_eq!(agg.ttft.count(), 12);
+    }
+
+    #[test]
+    fn replica_death_redispatches_and_loses_nothing() {
+        let w = test_weights();
+        let serve = ServeOpts { max_batch: 2, ..Default::default() };
+        let opts = RouterOpts { replicas: 4, retry_backoff_ms: 0, ..Default::default() };
+        let reference: Vec<Completion> = {
+            let mut router = Router::new(&w, opts, serve);
+            for r in requests(12, 3, w.config.vocab, 29) {
+                router.submit(r);
+            }
+            router.run().0
+        };
+        assert_eq!(reference.len(), 12);
+        // kill the replica that owns request 0's prefix family, so the
+        // victim is guaranteed to hold work when it dies at round 2
+        let probe = requests(12, 3, w.config.vocab, 29);
+        let victim = Router::new(&w, opts, serve).affinity_replica(&probe[0].prompt);
+        let plan = FaultPlan::parse(&format!("seed=7,kill={victim}@2")).unwrap();
+        let mut router = Router::new(&w, opts, serve).with_fault_plan(plan);
+        for r in probe {
+            router.submit(r);
+        }
+        let (done, stats) = router.run();
+        assert_eq!(stats.replica_deaths, 1, "the victim must die at round 2");
+        assert!(stats.redispatched > 0, "the victim's requests must redispatch");
+        assert_eq!(router.live_replicas(), 3);
+        let mut ids: Vec<usize> = done.iter().map(|c| c.id).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), 12, "every request completes exactly once");
+        let touched: BTreeSet<usize> = stats.fault_touched.iter().copied().collect();
+        assert!(!touched.is_empty(), "the dead replica owned at least one request");
+        // redispatched requests re-run from scratch on their own RNG
+        // streams, so the whole result set — touched included — matches
+        // the no-fault reference bit for bit
+        assert_eq!(done, reference, "fault run diverged from the no-fault reference");
+    }
+
+    #[test]
+    fn injected_transient_faults_retry_then_fail_when_persistent() {
+        let w = test_weights();
+        let opts = RouterOpts { replicas: 2, retry_backoff_ms: 0, ..Default::default() };
+        // transient=1: every dispatch attempt is refused, so every request
+        // exhausts its retry budget and fails without reaching a replica
+        let plan = FaultPlan::parse("seed=3,transient=1").unwrap();
+        let mut router = Router::new(&w, opts, ServeOpts::default()).with_fault_plan(plan);
+        let finishes = Arc::new(AtomicUsize::new(0));
+        for mut r in requests(4, 2, w.config.vocab, 31) {
+            r.sink = Some(Box::new(CountFinish(Arc::clone(&finishes))));
+            router.submit(r);
+        }
+        let (done, stats) = router.run();
+        assert_eq!(done.len(), 4);
+        assert_eq!(stats.failed_requests, 4);
+        assert_eq!(stats.fault_touched.len(), 4);
+        assert_eq!(finishes.load(Ordering::SeqCst), 4, "failed requests still notify sinks");
+        for c in &done {
+            match &c.finish {
+                FinishReason::Failed(msg) => assert!(msg.contains("transient"), "{msg}"),
+                other => panic!("expected Failed, got {other:?}"),
+            }
+            assert!(c.generated.is_empty());
+        }
+        // a mild rate: everything completes, and whatever the injector
+        // touched either succeeded on retry or failed within budget
+        let plan = FaultPlan::parse("seed=3,transient=0.3").unwrap();
+        let mut router = Router::new(&w, opts, ServeOpts::default()).with_fault_plan(plan);
+        for r in requests(8, 2, w.config.vocab, 31) {
+            router.submit(r);
+        }
+        let (done, stats) = router.run();
+        assert_eq!(done.len(), 8);
+        assert!(stats.failed_requests <= stats.fault_touched.len());
+        for c in &done {
+            if !matches!(c.finish, FinishReason::Failed(_)) {
+                assert!(!c.generated.is_empty(), "request {} served no tokens", c.id);
+            }
+        }
+    }
+
+    #[test]
+    fn shutdown_drains_pending_work_and_refuses_new() {
+        let w = test_weights();
+        let mut router = Router::new(
+            &w,
+            RouterOpts { replicas: 2, ..Default::default() },
+            ServeOpts::default(),
+        );
+        for r in requests(6, 2, w.config.vocab, 37) {
+            router.submit(r);
+        }
+        let drain = router.shutdown();
+        assert_eq!(drain.pending_at_shutdown, 6);
+        assert_eq!(drain.completions.len(), 6, "a drain finishes everything in flight");
+        assert_eq!((drain.failed, drain.timed_out, drain.replica_deaths), (0, 0, 0));
+        assert_eq!(drain.live_replicas, 2);
+        for c in &drain.completions {
+            assert!(!c.generated.is_empty());
+        }
+        let s = drain.summary();
+        assert!(s.contains("drained 6 pending requests"), "{s}");
+        assert!(s.contains("2/2 replica(s) live"), "{s}");
+        // admission is closed now: late work is refused, never queued
+        router.submit(Request::new(100, vec![1, 2, 3], 2, Sampler::Greedy));
+        assert_eq!(router.pending(), 0);
+        let (done, _) = router.run();
+        assert_eq!(done.len(), 1);
+        match &done[0].finish {
+            FinishReason::Rejected(msg) => assert!(msg.contains("draining"), "{msg}"),
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn chaos_random_fault_plans_preserve_serving_invariants() {
+        // the chaos property: under ANY seeded fault plan, (a) every
+        // submitted request yields exactly one completion, (b) requests the
+        // faults never touched are bit-identical to a no-fault run, and
+        // (c) every Failed completion was fault-touched
+        let w = test_weights();
+        propcheck::check("chaos fault plans", 6, |rng| {
+            let n = 6 + rng.below(6);
+            let replicas = 2 + rng.below(3);
+            let families = 1 + rng.below(3);
+            let traffic_seed = rng.next_u64() | 1;
+            let opts =
+                RouterOpts { replicas, retry_backoff_ms: 0, ..RouterOpts::default() };
+            let serve = ServeOpts { max_batch: 2, ..ServeOpts::default() };
+            let reference: Vec<Completion> = {
+                let mut router = Router::new(&w, opts, serve);
+                for r in requests(n, families, w.config.vocab, traffic_seed) {
+                    router.submit(r);
+                }
+                router.run().0
+            };
+            let spec = format!(
+                "seed={},kill={}@{},transient=0.{}",
+                rng.next_u64() & 0xffff,
+                rng.below(replicas),
+                1 + rng.below(3),
+                rng.below(3),
+            );
+            let plan = FaultPlan::parse(&spec)
+                .map_err(|e| format!("plan {spec:?} failed to parse: {e}"))?;
+            let mut router = Router::new(&w, opts, serve).with_fault_plan(plan);
+            for r in requests(n, families, w.config.vocab, traffic_seed) {
+                router.submit(r);
+            }
+            let (done, stats) = router.run();
+            propcheck::ensure(
+                done.len() == n,
+                format!("plan {spec:?}: {} completions for {n} requests", done.len()),
+            )?;
+            let mut ids: Vec<usize> = done.iter().map(|c| c.id).collect();
+            ids.dedup();
+            propcheck::ensure(ids.len() == n, format!("plan {spec:?}: duplicate completions"))?;
+            let touched: BTreeSet<usize> = stats.fault_touched.iter().copied().collect();
+            for c in &done {
+                if matches!(c.finish, FinishReason::Failed(_)) {
+                    propcheck::ensure(
+                        touched.contains(&c.id),
+                        format!("plan {spec:?}: request {} failed untouched", c.id),
+                    )?;
+                } else if !touched.contains(&c.id) {
+                    propcheck::ensure(
+                        c == &reference[c.id],
+                        format!("plan {spec:?}: untouched request {} diverged", c.id),
+                    )?;
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

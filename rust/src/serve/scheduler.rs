@@ -30,6 +30,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::model::native::{self, DecoderParams, KvCache};
+use crate::serve::fault::FaultInjector;
 use crate::serve::metrics::ServeMetrics;
 use crate::serve::prefix::PrefixCache;
 use crate::serve::spec::{self, SpecRound};
@@ -183,6 +184,10 @@ struct Slot {
     first_token_at: Option<Instant>,
     /// Decode rounds this slot participated in (plain or speculative).
     decode_rounds: u32,
+    /// Wall-clock of this slot's most recent decode step, measured inside
+    /// the parallel closure and compared against
+    /// [`ServeOpts::round_budget_ms`] at the round boundary.
+    round_elapsed: Duration,
     /// Measured inside the (parallel) sampling closure, drained into the
     /// metrics histograms on the scheduler thread.
     ttft: Option<Duration>,
@@ -265,6 +270,10 @@ pub struct Scheduler<'a, P: DecoderParams + ?Sized> {
     /// Draft model for self-speculative decoding ([`Scheduler::with_draft`];
     /// active when `opts.spec > 0`).
     draft: Option<&'a dyn DecoderParams>,
+    /// Injection hooks for deterministic chaos runs
+    /// ([`Scheduler::set_fault`]; `None` — the default — costs one
+    /// `Option` check per round).
+    fault: Option<FaultInjector>,
 }
 
 impl<'a, P: DecoderParams + ?Sized> Scheduler<'a, P> {
@@ -285,6 +294,7 @@ impl<'a, P: DecoderParams + ?Sized> Scheduler<'a, P> {
             prefix: opts.prefix_cache.then(|| PrefixCache::new(opts.prefix_cache_bytes)),
             metrics,
             draft: None,
+            fault: None,
         }
     }
 
@@ -301,6 +311,25 @@ impl<'a, P: DecoderParams + ?Sized> Scheduler<'a, P> {
         assert_eq!(t.max_seq, d.max_seq, "draft/target context-length mismatch");
         self.draft = Some(draft);
         self
+    }
+
+    /// Attach deterministic fault-injection hooks
+    /// ([`crate::serve::FaultPlan::injector_for`]) — the scheduler will
+    /// honor the plan's replica kills and decode stalls during `run`.
+    /// Chaos-testing only; without this call the fault path is a single
+    /// `Option` check per round.
+    pub fn set_fault(&mut self, injector: FaultInjector) {
+        self.fault = Some(injector);
+    }
+
+    /// Drain the not-yet-admitted queue in arrival order, sinks intact.
+    /// Router supervision uses this to recover the queued (never-started)
+    /// requests of a replica whose run thread died; in-flight requests are
+    /// lost with the thread and rebuilt from retained specs instead.
+    pub(crate) fn take_queue(&mut self) -> Vec<Request> {
+        let mut q = std::mem::take(&mut self.queue);
+        q.sort_by_key(|x| x.arrival);
+        q.into_iter().map(|x| x.req).collect()
     }
 
     /// Enqueue a request; it is admitted by the [`AdmissionPolicy`] when a
@@ -353,6 +382,11 @@ impl<'a, P: DecoderParams + ?Sized> Scheduler<'a, P> {
 
         while !self.queue.is_empty() || !active.is_empty() {
             round += 1;
+            if let Some(fi) = &self.fault {
+                // may panic by design: an injected replica kill — the
+                // router's supervision layer catches and redispatches
+                fi.tick_round(round);
+            }
             self.metrics.record_queue_depth(self.queue.len());
             let cancelled = self.cancel.snapshot();
 
@@ -368,6 +402,12 @@ impl<'a, P: DecoderParams + ?Sized> Scheduler<'a, P> {
                 req.max_new = req.max_new.min(max_seq.saturating_sub(req.prompt.len()));
                 let verdict = if cancelled.contains(&req.id) {
                     Some(FinishReason::Cancelled)
+                } else if q.deadline_at.is_some_and(|d| Instant::now() >= d) {
+                    // the deadline expired while the request sat in the
+                    // queue: finish it here, before the slot construction
+                    // below allocates any KV pages — decoding tokens nobody
+                    // is waiting for would only starve live requests
+                    Some(FinishReason::TimedOut)
                 } else if req.prompt.is_empty() {
                     Some(FinishReason::Rejected(format!("request {}: empty prompt", req.id)))
                 } else if req.prompt.len() >= max_seq {
@@ -428,6 +468,7 @@ impl<'a, P: DecoderParams + ?Sized> Scheduler<'a, P> {
                     last_token_at: now,
                     first_token_at: None,
                     decode_rounds: 0,
+                    round_elapsed: Duration::ZERO,
                     ttft: None,
                     itl_pending: None,
                 });
@@ -578,6 +619,14 @@ impl<'a, P: DecoderParams + ?Sized> Scheduler<'a, P> {
                         self.metrics.cancelled += 1;
                         stats.cancelled += 1;
                     }
+                    FinishReason::TimedOut => {
+                        self.metrics.timed_out += 1;
+                        stats.timed_out += 1;
+                    }
+                    FinishReason::Failed(_) => {
+                        self.metrics.failed += 1;
+                        stats.failed += 1;
+                    }
                     FinishReason::Rejected(_) => {}
                 }
                 if let Some(sink) = s.req.sink.as_mut() {
@@ -606,10 +655,17 @@ impl<'a, P: DecoderParams + ?Sized> Scheduler<'a, P> {
             let t0 = Instant::now();
             let threads = pool::num_threads().min(active.len());
             let (spec_k, draft) = (self.opts.spec, self.draft);
+            let fault = self.fault.clone();
             {
                 let _round_span = trace::span("serve", "decode_round", round);
                 pool::parallel_chunks_mut(&mut active, 1, threads, |_i, slot| {
                     let s = &mut slot[0];
+                    let t_slot = Instant::now();
+                    if let Some(fi) = &fault {
+                        // an injected stall lands inside the measured
+                        // window, exactly like a genuinely wedged kernel
+                        fi.maybe_stall(s.req.id, round);
+                    }
                     s.decode_rounds += 1;
                     match draft {
                         Some(d) if spec_k > 0 => advance_speculative(params, d, s, spec_k),
@@ -618,10 +674,28 @@ impl<'a, P: DecoderParams + ?Sized> Scheduler<'a, P> {
                             s.push_token(&logits);
                         }
                     }
+                    s.round_elapsed = t_slot.elapsed();
                 });
             }
             stats.decode_time += t0.elapsed();
             stats.decode_steps += 1;
+            if let Some(budget_ms) = self.opts.round_budget_ms {
+                // a slot that blew the wall-clock budget retires Failed at
+                // the next round boundary instead of wedging the batch;
+                // a stop-condition finish from this same round wins — the
+                // request's output is already complete
+                let budget = Duration::from_millis(budget_ms);
+                for s in &mut active {
+                    if s.finish.is_none() && s.round_elapsed > budget {
+                        s.finish = Some(FinishReason::Failed(format!(
+                            "request {}: decode round {round} took {} ms, over the \
+                             {budget_ms} ms round budget",
+                            s.req.id,
+                            s.round_elapsed.as_millis()
+                        )));
+                    }
+                }
+            }
             let mut round_tokens = 0usize;
             for s in &mut active {
                 match s.spec_round.take() {
@@ -773,6 +847,15 @@ fn finish_unstarted(
         FinishReason::Rejected(_) => {
             metrics.rejected += 1;
             stats.rejected += 1;
+        }
+        FinishReason::TimedOut => {
+            metrics.timed_out += 1;
+            stats.timed_out += 1;
+            crate::obs::fault::record_fault(crate::obs::fault::FaultEvent::RequestTimedOut);
+        }
+        FinishReason::Failed(_) => {
+            metrics.failed += 1;
+            stats.failed += 1;
         }
         FinishReason::Length => metrics.finished_length += 1,
         FinishReason::Stop => metrics.finished_stop += 1,
@@ -1142,6 +1225,89 @@ mod tests {
         assert_eq!(AdmissionPolicy::parse("SPF").unwrap(), AdmissionPolicy::ShortestPrompt);
         assert_eq!(AdmissionPolicy::parse("deadline").unwrap(), AdmissionPolicy::Deadline);
         assert!(AdmissionPolicy::parse("lifo").is_err());
+    }
+
+    // -- fault tolerance: deadline expiry and round budgets -----------------
+
+    #[test]
+    fn expired_deadline_times_out_before_any_kv_allocation() {
+        let w = test_weights();
+        let mut s = Scheduler::new(&w, ServeOpts::default());
+        let (sink, rx) = ChannelSink::new();
+        // deadline 0 ms: expired by the time admission first looks at it
+        s.submit(
+            Request::new(0, vec![1, 2, 3], 4, Sampler::Greedy)
+                .with_deadline_ms(0)
+                .with_sink(Box::new(sink)),
+        );
+        let (done, stats) = s.run();
+        assert_eq!(done[0].finish, FinishReason::TimedOut);
+        assert!(done[0].generated.is_empty());
+        assert_eq!(stats.timed_out, 1);
+        assert_eq!(stats.prefill_tokens, 0, "timed out before prefill ever ran");
+        assert_eq!(stats.decode_steps, 0);
+        let m = s.metrics();
+        assert_eq!(m.timed_out, 1);
+        assert_eq!(m.kv_live_bytes_peak, 0, "no KV pages were allocated for it");
+        let events: Vec<StreamEvent> = rx.try_iter().collect();
+        assert_eq!(events, vec![StreamEvent::Finish(FinishReason::TimedOut)]);
+
+        // a live request sharing the queue is untouched by the expiry
+        let reference = {
+            let mut solo = Scheduler::new(&w, ServeOpts::default());
+            solo.submit(Request::new(1, vec![4, 5], 3, Sampler::Greedy));
+            solo.run().0.remove(0)
+        };
+        let mut s = Scheduler::new(&w, ServeOpts::default());
+        s.submit(Request::new(0, vec![1, 2, 3], 4, Sampler::Greedy).with_deadline_ms(0));
+        s.submit(Request::new(1, vec![4, 5], 3, Sampler::Greedy));
+        let (done, stats) = s.run();
+        assert_eq!(stats.timed_out, 1);
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[1], reference, "the live neighbor must decode unperturbed");
+    }
+
+    #[test]
+    fn round_budget_converts_a_stalled_slot_to_failed() {
+        let w = test_weights();
+        let reference = {
+            let mut s = Scheduler::new(&w, ServeOpts::default());
+            s.submit(Request::new(1, vec![2, 3, 4], 3, Sampler::Greedy));
+            s.run().0.remove(0)
+        };
+        // request 0's decode sleeps 120 ms at round 1; a 30 ms budget
+        // converts the blown round into a Failed finish at the boundary
+        // (margins are wide on both sides so a noisy CI box can't flip
+        // either slot's verdict)
+        let plan = crate::serve::fault::FaultPlan::parse("stall=0@1x120").unwrap();
+        let mut s = Scheduler::new(
+            &w,
+            ServeOpts { round_budget_ms: Some(30), ..Default::default() },
+        );
+        s.set_fault(plan.injector_for(0));
+        s.submit(Request::new(0, vec![1, 2, 3], 4, Sampler::Greedy));
+        s.submit(Request::new(1, vec![2, 3, 4], 3, Sampler::Greedy));
+        let (done, stats) = s.run();
+        assert_eq!(done.len(), 2);
+        match &done[0].finish {
+            FinishReason::Failed(msg) => {
+                assert!(msg.contains("round budget"), "{msg}");
+            }
+            other => panic!("expected Failed for the stalled slot, got {other:?}"),
+        }
+        assert_eq!(stats.failed, 1);
+        assert_eq!(s.metrics().failed, 1);
+        assert_eq!(done[1], reference, "the unstalled neighbor must decode unperturbed");
+
+        // without a budget the same stall only slows the round down
+        let plan = crate::serve::fault::FaultPlan::parse("stall=0@1x1").unwrap();
+        let mut s = Scheduler::new(&w, ServeOpts::default());
+        s.set_fault(plan.injector_for(0));
+        s.submit(Request::new(0, vec![1, 2, 3], 4, Sampler::Greedy));
+        let (done, stats) = s.run();
+        assert_eq!(done[0].finish, FinishReason::Length);
+        assert_eq!(done[0].generated.len(), 4);
+        assert_eq!(stats.failed, 0);
     }
 
     // -- determinism pins (acceptance) --------------------------------------

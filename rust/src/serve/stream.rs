@@ -17,6 +17,14 @@ pub enum FinishReason {
     /// Rejected at admission; the payload says why.  A malformed request
     /// produces this completion instead of aborting the whole batch.
     Rejected(String),
+    /// The request's `deadline_ms` expired while it waited in the queue;
+    /// it finished before any prefill or KV allocation happened.
+    TimedOut,
+    /// Abandoned after an unrecoverable serving failure — replica death
+    /// with redispatch retries exhausted, an injected transient fault that
+    /// never cleared, or a decode round that blew the per-round wall-clock
+    /// budget.  The payload says which.
+    Failed(String),
 }
 
 impl FinishReason {
@@ -27,6 +35,8 @@ impl FinishReason {
             FinishReason::Stop => "stop",
             FinishReason::Cancelled => "cancelled",
             FinishReason::Rejected(_) => "rejected",
+            FinishReason::TimedOut => "timed_out",
+            FinishReason::Failed(_) => "failed",
         }
     }
 }
@@ -191,5 +201,7 @@ mod tests {
     fn finish_reason_labels() {
         assert_eq!(FinishReason::Length.label(), "length");
         assert_eq!(FinishReason::Rejected("x".into()).label(), "rejected");
+        assert_eq!(FinishReason::TimedOut.label(), "timed_out");
+        assert_eq!(FinishReason::Failed("replica died".into()).label(), "failed");
     }
 }

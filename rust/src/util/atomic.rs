@@ -1,0 +1,116 @@
+//! Crash-safe file writes: temp file in the target directory + `fsync` +
+//! atomic rename.
+//!
+//! A plain `std::fs::write` that loses the race with a crash (or a `kill -9`
+//! mid-run) leaves a truncated file behind — fatal for search checkpoints,
+//! whose whole point is resuming an hours-long hill-climb, and quietly
+//! corrupting for bench trajectories and the audit baseline.  Routing those
+//! writers through [`atomic_write`] guarantees readers observe either the
+//! old complete file or the new complete file, never a torn prefix:
+//!
+//! 1. the bytes land in a uniquely-named temp file *in the same directory*
+//!    (rename is only atomic within a filesystem),
+//! 2. the temp file is `fsync`ed so the data is durable before it becomes
+//!    visible under the real name,
+//! 3. `rename` swaps it in — POSIX guarantees the destination name always
+//!    refers to one complete file or the other,
+//! 4. best-effort `fsync` of the directory makes the rename itself durable.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+// Distinguishes concurrent atomic_write calls from the same process to the
+// same destination (e.g. two bench suites flushing into one directory).
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Write `bytes` to `path` crash-safely: a reader (or a post-crash restart)
+/// sees either the previous contents or the new contents in full, never a
+/// truncated intermediate.  The temp file is removed on any failure.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    let dir: PathBuf = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+        _ => PathBuf::from("."),
+    };
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "out".to_string());
+    let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    let tmp = dir.join(format!(".{name}.tmp.{}.{seq}", std::process::id()));
+
+    let mut file = File::create(&tmp)?;
+    let written = file.write_all(bytes).and_then(|()| file.sync_all());
+    drop(file);
+    if let Err(e) = written {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    // Durability of the *name* change; failure here cannot tear the file
+    // (the data is already synced and renamed), so it is non-fatal.
+    if let Ok(d) = File::open(&dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("invarexplore_atomic_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).expect("create scratch dir");
+        d
+    }
+
+    #[test]
+    fn write_then_read_roundtrips() {
+        let dir = scratch_dir("roundtrip");
+        let path = dir.join("out.json");
+        atomic_write(&path, b"{\"k\":1}").expect("atomic write");
+        assert_eq!(std::fs::read(&path).expect("read back"), b"{\"k\":1}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn overwrite_replaces_previous_contents() {
+        let dir = scratch_dir("overwrite");
+        let path = dir.join("state.json");
+        atomic_write(&path, b"old contents, longer than the new ones").expect("first write");
+        atomic_write(&path, b"new").expect("second write");
+        assert_eq!(std::fs::read(&path).expect("read back"), b"new");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn no_temp_files_left_behind() {
+        let dir = scratch_dir("cleanup");
+        let path = dir.join("bench.json");
+        for i in 0..4u32 {
+            atomic_write(&path, format!("run {i}").as_bytes()).expect("write");
+        }
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .expect("list dir")
+            .map(|e| e.expect("entry").file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["bench.json".to_string()], "stray temp files: {names:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_directory_is_an_error_not_a_panic() {
+        let path = std::env::temp_dir()
+            .join(format!("invarexplore_atomic_missing_{}", std::process::id()))
+            .join("nested")
+            .join("out.json");
+        assert!(atomic_write(&path, b"x").is_err());
+    }
+}

@@ -234,9 +234,11 @@ impl BenchSuite {
     /// BENCH path.
     pub fn write_json(&self, dir: &Path) -> crate::Result<PathBuf> {
         let path = dir.join(format!("BENCH_{}.json", self.name));
-        std::fs::write(&path, self.to_json().to_string())?;
+        // atomic (temp + fsync + rename): a bench killed mid-write can't
+        // leave a torn artifact for the CI expected-file check to trip on
+        crate::util::atomic_write(&path, self.to_json().to_string().as_bytes())?;
         let trace_path = dir.join(format!("TRACE_{}.json", self.name));
-        std::fs::write(&trace_path, self.to_trace_json().to_string())?;
+        crate::util::atomic_write(&trace_path, self.to_trace_json().to_string().as_bytes())?;
         Ok(path)
     }
 }

@@ -2,6 +2,7 @@
 //! (the vendored crate set only contains the `xla` closure — no serde, no
 //! clap, no rand, no criterion, no rayon).
 
+pub mod atomic;
 pub mod bench;
 pub mod cli;
 pub mod csv;
@@ -12,3 +13,5 @@ pub mod pool;
 pub mod propcheck;
 pub mod rng;
 pub mod sampling;
+
+pub use atomic::atomic_write;

@@ -15,10 +15,30 @@ pub fn num_threads() -> usize {
         .clamp(1, 16)
 }
 
+/// Extract a human-readable message from a panic payload.  `panic!` with a
+/// format string produces `String` payloads and bare string literals
+/// produce `&str`; anything else gets a stable placeholder.  Shared with
+/// the serving router's replica supervision, so chaos-test failures name
+/// the actual worker error instead of a generic "worker panicked".
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Apply `f` to every index `0..n` in parallel, collecting results in order.
 ///
 /// Work is distributed by atomic counter (dynamic scheduling), so uneven
 /// item costs (e.g. GPTQ on differently-shaped layers) balance well.
+///
+/// A panicking worker is caught, remaining work is abandoned (the claim
+/// counter is exhausted so idle workers stop early), and the panic is
+/// rethrown on the caller's thread with the original payload message
+/// attached — attributable, not a bare "worker panicked".
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -35,12 +55,14 @@ where
     }
 
     let next = AtomicUsize::new(0);
+    let failed: std::sync::Mutex<Option<String>> = std::sync::Mutex::new(None);
     let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
     let slot_ptr = SendPtr(slots.as_mut_ptr());
 
     std::thread::scope(|scope| {
         for _ in 0..threads {
             let next = &next;
+            let failed = &failed;
             let f = &f;
             let slot_ptr = slot_ptr;
             scope.spawn(move || loop {
@@ -48,16 +70,31 @@ where
                 if i >= n {
                     break;
                 }
-                let out = f(i);
-                // SAFETY: each index i is claimed exactly once, so each slot
-                // is written by exactly one thread; the scope outlives use.
-                unsafe {
-                    *slot_ptr.get().add(i) = Some(out);
+                match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))) {
+                    // SAFETY: each index i is claimed exactly once, so each
+                    // slot is written by exactly one thread; the scope
+                    // outlives use.
+                    Ok(out) => unsafe {
+                        *slot_ptr.get().add(i) = Some(out);
+                    },
+                    Err(payload) => {
+                        let mut first = failed.lock().unwrap_or_else(|e| e.into_inner());
+                        if first.is_none() {
+                            *first = Some(panic_message(payload.as_ref()));
+                        }
+                        // abandon unclaimed work: no point computing slots
+                        // the caller will never see
+                        next.store(n, Ordering::Relaxed);
+                        break;
+                    }
                 }
             });
         }
     });
 
+    if let Some(msg) = failed.into_inner().unwrap_or_else(|e| e.into_inner()) {
+        panic!("pool worker panicked: {msg}");
+    }
     slots.into_iter().map(|s| s.expect("slot filled")).collect()
 }
 
@@ -117,11 +154,13 @@ where
     use std::sync::atomic::{AtomicUsize, Ordering};
     let n_chunks = data.len().div_ceil(chunk);
     let next = AtomicUsize::new(0);
+    let failed: std::sync::Mutex<Option<String>> = std::sync::Mutex::new(None);
     let base = SendPtr(data.as_mut_ptr());
     let len = data.len();
     std::thread::scope(|scope| {
         for _ in 0..threads.min(n_chunks) {
             let next = &next;
+            let failed = &failed;
             let f = &f;
             let base = base;
             scope.spawn(move || loop {
@@ -140,10 +179,22 @@ where
                 let slice = unsafe {
                     std::slice::from_raw_parts_mut(base.get().add(start), end - start)
                 };
-                f(ci, slice);
+                if let Err(payload) =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(ci, slice)))
+                {
+                    let mut first = failed.lock().unwrap_or_else(|e| e.into_inner());
+                    if first.is_none() {
+                        *first = Some(panic_message(payload.as_ref()));
+                    }
+                    next.store(n_chunks, Ordering::Relaxed);
+                    break;
+                }
             });
         }
     });
+    if let Some(msg) = failed.into_inner().unwrap_or_else(|e| e.into_inner()) {
+        panic!("pool worker panicked: {msg}");
+    }
 }
 
 #[cfg(test)]
@@ -244,16 +295,45 @@ mod tests {
     #[test]
     fn map_worker_panic_propagates() {
         // a panicking worker must unwind out of parallel_map (scope joins all
-        // threads first), not dead-lock or silently drop slots
+        // threads first), not dead-lock or silently drop slots — and the
+        // rethrown payload must carry the worker's own message so chaos-test
+        // failures are attributable
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             parallel_map(32, 4, |i| {
                 if i == 17 {
-                    panic!("worker bug");
+                    panic!("worker bug at item {i}");
                 }
                 i
             })
         }));
-        assert!(result.is_err(), "worker panic was swallowed");
+        let payload = result.err().expect("worker panic was swallowed");
+        let msg = panic_message(payload.as_ref());
+        assert!(
+            msg.contains("worker bug at item 17"),
+            "rethrown panic lost the worker message: {msg:?}"
+        );
+    }
+
+    #[test]
+    fn chunks_mut_worker_panic_carries_message() {
+        let mut data = vec![0u8; 512];
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            parallel_chunks_mut(&mut data, 16, 4, |ci, _c| {
+                if ci == 9 {
+                    panic!("chunk {ci} exploded");
+                }
+            })
+        }));
+        let payload = result.err().expect("chunk worker panic was swallowed");
+        let msg = panic_message(payload.as_ref());
+        assert!(msg.contains("chunk 9 exploded"), "message lost: {msg:?}");
+    }
+
+    #[test]
+    fn panic_message_handles_all_payload_shapes() {
+        assert_eq!(panic_message(&"literal"), "literal");
+        assert_eq!(panic_message(&String::from("formatted")), "formatted");
+        assert_eq!(panic_message(&42usize), "non-string panic payload");
     }
 
     // NOTE: no set_var-based test for INVAREXPLORE_THREADS here — other

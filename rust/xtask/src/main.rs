@@ -156,6 +156,27 @@ fn cmd_mdlint(args: &[String]) -> ExitCode {
     }
 }
 
+/// Minimal temp + fsync + rename write so a killed `audit --write` can't
+/// leave a torn AUDIT.json (mirrors the main crate's `util::atomic_write`,
+/// which xtask deliberately doesn't depend on).
+fn atomic_write(path: &std::path::Path, bytes: &[u8]) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut tmp = path.to_path_buf();
+    let name = match path.file_name().and_then(|n| n.to_str()) {
+        Some(n) => n,
+        None => "audit",
+    };
+    tmp.set_file_name(format!(".{name}.tmp.{}", std::process::id()));
+    let mut f = std::fs::File::create(&tmp)?;
+    if let Err(e) = f.write_all(bytes).and_then(|()| f.sync_all()) {
+        drop(f);
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    drop(f);
+    std::fs::rename(&tmp, path)
+}
+
 fn cmd_audit(args: &[String]) -> ExitCode {
     let base = workspace_root();
     let roots = default_roots();
@@ -174,7 +195,7 @@ fn cmd_audit(args: &[String]) -> ExitCode {
             ExitCode::SUCCESS
         }
         Some("--write") => {
-            if let Err(e) = std::fs::write(&baseline_path, &json) {
+            if let Err(e) = atomic_write(&baseline_path, json.as_bytes()) {
                 eprintln!("audit: cannot write {}: {e}", baseline_path.display());
                 return ExitCode::from(2);
             }
